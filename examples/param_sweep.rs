@@ -1,0 +1,50 @@
+//! Parameter sweep helper: (K, L) recall/candidate trade-off on both an
+//! adversarial random-query workload and the PureSVD tiny dataset.
+//! Used to pick `AlshParams::default()`; kept as a tuning tool.
+use alsh::baselines::LinearScan;
+use alsh::config::DatasetConfig;
+use alsh::data::generate_dataset;
+use alsh::index::{AlshIndex, AlshParams};
+use alsh::util::Rng;
+
+fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>]) {
+    let scan = LinearScan::new(items);
+    println!("== {name} ({} items) ==", items.len());
+    for (k, l) in [(4usize, 32usize), (6, 32), (6, 48), (8, 32), (8, 48), (10, 48)] {
+        let params = AlshParams { k_per_table: k, n_tables: l, ..Default::default() };
+        let idx = AlshIndex::build(items, params, 7);
+        let mut hits = 0;
+        let mut cands = 0;
+        for q in queries {
+            cands += idx.candidates(q).len();
+            let top = idx.query(q, 10);
+            if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
+                hits += 1;
+            }
+        }
+        println!(
+            "K={k:2} L={l:2}: top1-in-top10 recall {hits}/{}, candidates {:.1}%",
+            queries.len(),
+            100.0 * cands as f64 / queries.len() as f64 / items.len() as f64
+        );
+    }
+}
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(42);
+    let n = 20_000;
+    let dim = 64;
+    let items: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32().powi(2);
+            (0..dim).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+    let queries: Vec<Vec<f32>> =
+        (0..100).map(|_| (0..dim).map(|_| rng.normal_f32()).collect()).collect();
+    sweep("random gaussian (adversarial)", &items, &queries);
+
+    let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    let qs: Vec<Vec<f32>> = data.users[..100.min(data.users.len())].to_vec();
+    sweep("puresvd tiny (realistic)", &data.items, &qs);
+}

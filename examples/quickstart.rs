@@ -1,0 +1,123 @@
+//! Quickstart: build an ALSH index over vectors with a wide norm spread and
+//! compare against the exact linear scan.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the pure-Rust request path.
+
+use alsh::baselines::LinearScan;
+use alsh::index::{AlshIndex, AlshParams};
+use alsh::transform::dot;
+use alsh::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let n_items = 20_000;
+    let dim = 64;
+    let mut rng = Rng::seed_from_u64(42);
+
+    // Item vectors whose norms vary by 10x — the regime where maximum
+    // inner product differs from nearest neighbor, and the reason plain
+    // LSH fails (paper §1, Theorem 1).
+    println!("generating {n_items} items (dim {dim}) with a 10x norm spread…");
+    let items: Vec<Vec<f32>> = (0..n_items)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let target = 0.2 + 1.8 * rng.f32();
+            let norm = alsh::transform::l2_norm(&v).max(1e-9);
+            v.iter_mut().for_each(|x| *x *= target / norm);
+            v
+        })
+        .collect();
+
+    // Build: Eq. 11 scaling + P-transform (Eq. 12) + L2LSH tables.
+    // m, U, r are the paper's recommended values (§3.5); the meta-hash
+    // width is raised to K=12 because anchored queries sit in the
+    // high-similarity regime (see examples/param_sweep.rs).
+    let params = AlshParams { k_per_table: 12, ..AlshParams::default() };
+    let t0 = Instant::now();
+    let index = AlshIndex::build(&items, params, 7);
+    println!(
+        "built ALSH index (L={} tables × K={} codes) in {:?}",
+        params.n_tables,
+        params.k_per_table,
+        t0.elapsed()
+    );
+
+    let scan = LinearScan::new(&items);
+    let n_queries = 200;
+    // Realistic queries: correlated with some item (a user vector aligns
+    // with its preferred items), plus exploration noise.
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|_| {
+            // Users gravitate to popular (large-norm) items: anchor on the
+            // largest of a few draws, like the paper's S0 ≈ 0.8-0.9U regime.
+            let mut anchor = rng.below(n_items);
+            for _ in 0..16 {
+                let c = rng.below(n_items);
+                if alsh::transform::l2_norm(&items[c])
+                    > alsh::transform::l2_norm(&items[anchor])
+                {
+                    anchor = c;
+                }
+            }
+            items[anchor].iter().map(|v| v + 0.15 * rng.normal_f32()).collect()
+        })
+        .collect();
+
+    // Timing: ALSH query loop alone vs the exact scan.
+    let t_alsh = Instant::now();
+    for q in &queries {
+        std::hint::black_box(index.query(q, 10));
+    }
+    let alsh_time = t_alsh.elapsed();
+
+    let t_scan = Instant::now();
+    for q in &queries {
+        std::hint::black_box(scan.query(q, 10));
+    }
+    let scan_time = t_scan.elapsed();
+
+    // Accuracy: how often is the exact MIPS winner in our top-10?
+    let mut hits = 0;
+    let mut candidates = 0usize;
+    for q in &queries {
+        candidates += index.candidates(q).len();
+        let exact = scan.query(q, 1)[0].id;
+        if index.query(q, 10).iter().any(|h| h.id == exact) {
+            hits += 1;
+        }
+    }
+
+    println!("\n== results over {n_queries} queries ==");
+    println!("top-1-in-top-10 recall : {hits}/{n_queries}");
+    println!(
+        "avg candidates probed  : {:.0} of {n_items} ({:.1}%)",
+        candidates as f64 / n_queries as f64,
+        100.0 * candidates as f64 / n_queries as f64 / n_items as f64
+    );
+    println!(
+        "ALSH   query time      : {alsh_time:?}  ({:.0}µs/query)",
+        alsh_time.as_micros() as f64 / n_queries as f64
+    );
+    println!(
+        "scan   query time      : {scan_time:?}  ({:.0}µs/query, {:.1}x slower)",
+        scan_time.as_micros() as f64 / n_queries as f64,
+        scan_time.as_secs_f64() / alsh_time.as_secs_f64()
+    );
+
+    // Show one concrete query.
+    let q = &queries[0];
+    let top = index.query(q, 3);
+    println!("\nsample query → top-3 items:");
+    for h in &top {
+        println!(
+            "  item {:>6}  inner product {:+.4}  (exact dot {:+.4})",
+            h.id,
+            h.score,
+            dot(q, &items[h.id as usize])
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Serving benchmark: the full coordinator stack under concurrent load.
+//!
+//! Boots the tiny dataset, the PJRT batcher (AOT artifact request path) and
+//! the JSON-lines TCP server on an ephemeral port, then drives it with
+//! concurrent client threads and reports latency percentiles, throughput
+//! and dynamic-batch occupancy.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_benchmark
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use alsh::config::DatasetConfig;
+use alsh::coordinator::{serve_on, BatcherConfig, MipsEngine, PjrtBatcher};
+use alsh::data::generate_dataset;
+use alsh::index::AlshParams;
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ds = DatasetConfig::tiny();
+    let data = generate_dataset(&ds)?;
+    let params = AlshParams { n_tables: 32, k_per_table: 6, ..AlshParams::default() };
+    let engine = Arc::new(MipsEngine::new(&data.items, params, 1));
+
+    let batcher = match PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "artifacts",
+        BatcherConfig { max_wait: Duration::from_micros(500), ..Default::default() },
+    ) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("artifacts unavailable ({e:#}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let handle = batcher.handle();
+    {
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, handle, engine);
+        });
+    }
+    println!("server on {addr}; warming up…");
+    // Warm-up: compile the executable through one query.
+    request(addr, &data.users[0], 10)?;
+
+    let n_clients = 8;
+    let queries_per_client = 150;
+    let dim = data.latent_dim;
+    println!("driving {n_clients} concurrent clients × {queries_per_client} queries…");
+    let t0 = Instant::now();
+    let mut latencies: Vec<u64> = Vec::new();
+    let threads: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
+                let mut rng = Rng::seed_from_u64(c as u64 + 500);
+                let stream = TcpStream::connect(addr)?;
+                let mut writer = stream.try_clone()?;
+                let mut reader = BufReader::new(stream);
+                let mut lats = Vec::with_capacity(queries_per_client);
+                for _ in 0..queries_per_client {
+                    let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.3).collect();
+                    let req = format!(
+                        "{{\"vector\":{},\"top_k\":10}}\n",
+                        alsh::util::json::num_arr(
+                            &q.iter().map(|v| *v as f64).collect::<Vec<_>>()
+                        )
+                        .to_string()
+                    );
+                    let t = Instant::now();
+                    writer.write_all(req.as_bytes())?;
+                    let mut line = String::new();
+                    reader.read_line(&mut line)?;
+                    lats.push(t.elapsed().as_micros() as u64);
+                    let resp = Json::parse(&line).map_err(|e| anyhow::anyhow!(e))?;
+                    anyhow::ensure!(
+                        resp.get("ok").and_then(Json::as_bool) == Some(true),
+                        "bad response: {line}"
+                    );
+                }
+                Ok(lats)
+            })
+        })
+        .collect();
+    for t in threads {
+        latencies.extend(t.join().unwrap()?);
+    }
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
+    let total = latencies.len();
+
+    let snap = engine.metrics().snapshot();
+    println!("\n== serving results ==");
+    println!("total queries        : {total}");
+    println!("wall time            : {wall:?}");
+    println!("throughput           : {:.0} q/s", total as f64 / wall.as_secs_f64());
+    println!(
+        "client latency       : p50 {}µs  p90 {}µs  p99 {}µs",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99)
+    );
+    println!("mean batch occupancy : {:.2}", snap.mean_batch_size());
+    println!("server-side p50/p99  : {}µs / {}µs", snap.p50_latency_us, snap.p99_latency_us);
+    println!("errors               : {}", snap.errors);
+    batcher.shutdown();
+    std::process::exit(0); // the acceptor thread is still parked in accept()
+}
+
+fn request(addr: std::net::SocketAddr, vector: &[f32], top_k: usize) -> anyhow::Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let req = format!(
+        "{{\"vector\":{},\"top_k\":{top_k}}}\n",
+        alsh::util::json::num_arr(&vector.iter().map(|v| *v as f64).collect::<Vec<_>>())
+            .to_string()
+    );
+    writer.write_all(req.as_bytes())?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let resp = Json::parse(&line).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(resp.get("ok").and_then(Json::as_bool) == Some(true), "bad: {line}");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+use alsh::config::DatasetConfig;
+use alsh::data::synthetic::generate;
+use alsh::linalg::{randomized_svd};
+use alsh::util::Rng;
+use std::time::Instant;
+fn main() {
+    let ds = DatasetConfig::movielens_like();
+    let t = Instant::now();
+    let synth = generate(&ds.synthetic, ds.seed);
+    println!("generate: {:?} nnz={}", t.elapsed(), synth.ratings.nnz());
+    let t = Instant::now();
+    let csr = synth.ratings.to_csr();
+    println!("to_csr: {:?}", t.elapsed());
+    let mut rng = Rng::seed_from_u64(1);
+    let t = Instant::now();
+    let svd = randomized_svd(&csr, 150, 10, 2, &mut rng);
+    println!("randomized_svd: {:?} (sigma0 {:.2})", t.elapsed(), svd.s[0]);
+}

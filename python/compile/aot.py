@@ -1,0 +1,172 @@
+"""AOT compile path: lower the Layer-2 functions to HLO *text* artifacts.
+
+Run once via ``make artifacts``. Emits, for each canonical shape config:
+
+    artifacts/<name>.hlo.txt       — HLO text, loadable by the xla crate's
+                                     HloModuleProto::from_text_file
+    artifacts/manifest.json        — shape registry consumed by
+                                     rust/src/runtime/registry.rs
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. Lowered with return_tuple=True; the Rust side unwraps
+with to_tuple1(). See /opt/xla-example/gen_hlo.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Canonical artifact shapes. The Rust batcher pads query batches to BATCH and
+# candidate sets to RERANK_M; D covers the dataset configs used by the paper
+# experiments (f=150 Movielens, f=300 Netflix) plus a small dim for examples.
+BATCH = 64
+K_HASHES = 512
+RERANK_M = 1024
+DIMS = (8, 50, 150, 300)
+M_TERMS = 3  # paper's recommended m
+SIGN_M = 2  # Sign-ALSH extension's recommended m (follow-up paper)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries():
+    """(name, fn, example_args, meta) for every artifact we ship."""
+    entries = []
+    for d in DIMS:
+        dp = d + M_TERMS
+        entries.append(
+            (
+                f"alsh_data_d{d}_m{M_TERMS}_k{K_HASHES}",
+                functools.partial(model.alsh_data_codes, m=M_TERMS),
+                (f32(BATCH, d), f32(dp, K_HASHES), f32(K_HASHES)),
+                {
+                    "function": "alsh_data",
+                    "dim": d,
+                    "m": M_TERMS,
+                    "k": K_HASHES,
+                    "batch": BATCH,
+                },
+            )
+        )
+        entries.append(
+            (
+                f"alsh_query_d{d}_m{M_TERMS}_k{K_HASHES}",
+                functools.partial(model.alsh_query_codes, m=M_TERMS),
+                (f32(BATCH, d), f32(dp, K_HASHES), f32(K_HASHES)),
+                {
+                    "function": "alsh_query",
+                    "dim": d,
+                    "m": M_TERMS,
+                    "k": K_HASHES,
+                    "batch": BATCH,
+                },
+            )
+        )
+        entries.append(
+            (
+                f"l2lsh_d{d}_k{K_HASHES}",
+                model.l2lsh_codes,
+                (f32(BATCH, d), f32(d, K_HASHES), f32(K_HASHES)),
+                {
+                    "function": "l2lsh",
+                    "dim": d,
+                    "m": 0,
+                    "k": K_HASHES,
+                    "batch": BATCH,
+                },
+            )
+        )
+        dps = d + SIGN_M
+        entries.append(
+            (
+                f"sign_alsh_data_d{d}_m{SIGN_M}_k{K_HASHES}",
+                functools.partial(model.sign_alsh_data_codes, m=SIGN_M),
+                (f32(BATCH, d), f32(dps, K_HASHES)),
+                {
+                    "function": "sign_alsh_data",
+                    "dim": d,
+                    "m": SIGN_M,
+                    "k": K_HASHES,
+                    "batch": BATCH,
+                },
+            )
+        )
+        entries.append(
+            (
+                f"sign_alsh_query_d{d}_m{SIGN_M}_k{K_HASHES}",
+                functools.partial(model.sign_alsh_query_codes, m=SIGN_M),
+                (f32(BATCH, d), f32(dps, K_HASHES)),
+                {
+                    "function": "sign_alsh_query",
+                    "dim": d,
+                    "m": SIGN_M,
+                    "k": K_HASHES,
+                    "batch": BATCH,
+                },
+            )
+        )
+        entries.append(
+            (
+                f"rerank_d{d}_m{RERANK_M}",
+                model.rerank,
+                (f32(BATCH, d), f32(d, RERANK_M)),
+                {
+                    "function": "rerank",
+                    "dim": d,
+                    "m": 0,
+                    "k": RERANK_M,
+                    "batch": BATCH,
+                },
+            )
+        )
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"batch": BATCH, "artifacts": []}
+    for name, fn, example_args, meta in build_entries():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["name"] = name
+        meta["file"] = f"{name}.hlo.txt"
+        meta["arg_shapes"] = [list(a.shape) for a in example_args]
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

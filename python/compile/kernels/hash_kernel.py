@@ -1,0 +1,100 @@
+"""Layer-1 Pallas kernel: batched L2LSH hash-code generation.
+
+The compute hot spot of ALSH is computing K hash codes for a batch of
+(already transformed) vectors:
+
+    H[i, j] = floor( (A[:, j] . X[i, :] + b[j]) / r )
+
+The caller pre-scales ``A' = A / r`` and ``b' = b / r`` (r is a scalar), so
+the kernel itself computes ``floor(X @ A' + b')`` and emits int32 codes.
+This keeps r out of the compiled artifact: the Rust coordinator owns all of
+(A, b, r) and can serve any r with the same executable.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"): the matmul tiles
+target the MXU; the ``+b, floor, cast`` epilogue is fused into the same
+kernel on the VPU so the f32 activations never round-trip to HBM. The
+reduction dimension D' (= D + m, a few hundred) stays resident in VMEM.
+
+Pallas is run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO which runs anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes. bm x bk accumulator (32*128*4B = 16 KiB) plus an
+# X-tile (32 x D') and A-tile (D' x 128) comfortably fit VMEM for D' <= 2048.
+DEFAULT_BM = 32
+DEFAULT_BK = 128
+
+
+def _hash_block_kernel(x_ref, a_ref, b_ref, o_ref):
+    """One (bm, bk) output tile: floor(X_tile @ A_tile + b_tile) -> int32."""
+    acc = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = jnp.floor(acc).astype(jnp.int32)
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def hash_codes(
+    x: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute int32 L2LSH codes ``floor(x @ a + b)`` with a Pallas kernel.
+
+    Args:
+      x: [B, D'] batch of vectors (f32). Caller applies P/Q transform first.
+      a: [D', K] pre-scaled projection matrix (A / r).
+      b: [K] pre-scaled offsets (b / r).
+      bm, bk: output tile sizes (batch x hash).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      [B, K] int32 hash codes.
+
+    Shapes are padded up to tile multiples internally and sliced back, so any
+    B >= 1, K >= 1, D' >= 1 is accepted.
+    """
+    if x.ndim != 2 or a.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} a{a.shape} b{b.shape}")
+    if x.shape[1] != a.shape[0] or a.shape[1] != b.shape[0]:
+        raise ValueError(f"shape mismatch: x{x.shape} a{a.shape} b{b.shape}")
+    n, k = x.shape[0], a.shape[1]
+    x = _pad_to(x.astype(jnp.float32), 0, bm)
+    a = _pad_to(a.astype(jnp.float32), 1, bk)
+    b = _pad_to(b.astype(jnp.float32), 0, bk)
+    d = x.shape[1]
+    grid = (x.shape[0] // bm, a.shape[1] // bk)
+    out = pl.pallas_call(
+        _hash_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], a.shape[1]), jnp.int32),
+        interpret=interpret,
+    )(x, a, b)
+    return out[:n, :k]

@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal at build time: pytest (and hypothesis)
+check every kernel against these definitions, and the Rust side carries an
+equivalent mirror (rust/src/lsh) that is cross-checked against the PJRT
+artifacts in integration tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hash_codes_ref(x, a, b):
+    """floor(x @ a + b) as int32 — the L2LSH code (Eq. 8, r pre-scaled)."""
+    return jnp.floor(x.astype(jnp.float32) @ a.astype(jnp.float32) + b).astype(
+        jnp.int32
+    )
+
+
+def rerank_scores_ref(q, c_t):
+    """Exact inner products q @ c_t."""
+    return q.astype(jnp.float32) @ c_t.astype(jnp.float32)
+
+
+def p_transform_ref(x, m):
+    """Preprocessing transform P(x) = [x; ||x||^2; ||x||^4; ...; ||x||^(2^m)].
+
+    Eq. (12). The caller is responsible for having scaled x so that
+    ||x||_2 <= U < 1 (Eq. 11).
+    """
+    cols = [x]
+    n = jnp.sum(x * x, axis=-1, keepdims=True)  # ||x||^2
+    for _ in range(m):
+        cols.append(n)
+        n = n * n  # ||x||^4, ||x||^8, ... by iterative squaring
+    return jnp.concatenate(cols, axis=-1)
+
+
+def q_transform_ref(q, m):
+    """Query transform Q(q) = [q/||q||; 1/2; ...; 1/2] (Eq. 13).
+
+    The unit-normalization is WLOG per Section 3.3 (argmax is invariant to
+    ||q||); we fold it into the transform so callers can pass raw queries.
+    """
+    norm = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+    qn = q / jnp.maximum(norm, 1e-12)
+    half = jnp.full(q.shape[:-1] + (m,), 0.5, dtype=q.dtype)
+    return jnp.concatenate([qn, half], axis=-1)
+
+
+def alsh_data_codes_ref(x, a, b, m):
+    """End-to-end data-side ALSH codes: hash(P(x))."""
+    return hash_codes_ref(p_transform_ref(x, m), a, b)
+
+
+def alsh_query_codes_ref(q, a, b, m):
+    """End-to-end query-side ALSH codes: hash(Q(q))."""
+    return hash_codes_ref(q_transform_ref(q, m), a, b)
+
+
+def sign_codes_ref(x, a):
+    """(x @ a >= 0) as int32 — the SimHash / SRP code."""
+    return (x.astype(jnp.float32) @ a.astype(jnp.float32) >= 0).astype(jnp.int32)
+
+
+def p_transform_sign_ref(x, m):
+    """Sign-ALSH preprocessing transform (Shrivastava & Li 2015):
+
+    P(x) = [x; 1/2 - ||x||^2; 1/2 - ||x||^4; ...; 1/2 - ||x||^(2^m)].
+    """
+    cols = [x]
+    n = jnp.sum(x * x, axis=-1, keepdims=True)
+    for _ in range(m):
+        cols.append(0.5 - n)
+        n = n * n
+    return jnp.concatenate(cols, axis=-1)
+
+
+def q_transform_sign_ref(q, m):
+    """Sign-ALSH query transform: Q(q) = [q/||q||; 0; ...; 0]."""
+    norm = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+    qn = q / jnp.maximum(norm, 1e-12)
+    zeros = jnp.zeros(q.shape[:-1] + (m,), dtype=q.dtype)
+    return jnp.concatenate([qn, zeros], axis=-1)

@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: exact inner-product re-ranking of candidates.
+
+After the ALSH tables return a candidate union, the engine re-ranks the
+candidates by their exact inner product with the query:
+
+    S[i, j] = Q[i, :] . C[:, j]
+
+``C`` is the candidate matrix already laid out transposed ([D, M]) so the
+kernel is a plain MXU-shaped matmul. The same kernel also powers the
+brute-force gold-standard scorer used by the evaluation harness.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 32
+DEFAULT_BN = 128
+
+
+def _rerank_block_kernel(q_ref, c_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        q_ref[...], c_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def rerank_scores(
+    q: jax.Array,
+    c_t: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Exact inner products ``q @ c_t`` via a tiled Pallas matmul.
+
+    Args:
+      q:   [B, D] query batch (f32).
+      c_t: [D, M] candidate matrix, transposed.
+
+    Returns:
+      [B, M] f32 scores.
+    """
+    if q.ndim != 2 or c_t.ndim != 2 or q.shape[1] != c_t.shape[0]:
+        raise ValueError(f"shape mismatch: q{q.shape} c_t{c_t.shape}")
+    n, m = q.shape[0], c_t.shape[1]
+    q = _pad_to(q.astype(jnp.float32), 0, bm)
+    c_t = _pad_to(c_t.astype(jnp.float32), 1, bn)
+    d = q.shape[1]
+    grid = (q.shape[0] // bm, c_t.shape[1] // bn)
+    out = pl.pallas_call(
+        _rerank_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q.shape[0], c_t.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(q, c_t)
+    return out[:n, :m]

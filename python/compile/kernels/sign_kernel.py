@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: sign-random-projection (SimHash) codes.
+
+The Sign-ALSH extension (paper §5 "future work", realized in Shrivastava &
+Li 2015) replaces the quantized L2 hash with `h(x) = sign(aᵀx)`, whose
+collision probability is `1 - θ(x,y)/π`. The kernel computes the batched
+projection and emits 0/1 int32 codes:
+
+    H[i, j] = 1 if A[:, j] . X[i, :] >= 0 else 0
+
+Same MXU-tiled matmul as hash_kernel with a sign epilogue fused on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 32
+DEFAULT_BK = 128
+
+
+def _sign_block_kernel(x_ref, a_ref, o_ref):
+    acc = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (acc >= 0).astype(jnp.int32)
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def sign_codes(
+    x: jax.Array,
+    a: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sign-random-projection codes ``(x @ a >= 0)`` as int32 {0, 1}.
+
+    x: [B, D'] batch; a: [D', K] projection matrix. Padding note: padded
+    (zero) rows produce code 1 for every hash (0 >= 0); callers slice
+    the output back to the true batch, so this never leaks.
+    """
+    if x.ndim != 2 or a.ndim != 2 or x.shape[1] != a.shape[0]:
+        raise ValueError(f"shape mismatch: x{x.shape} a{a.shape}")
+    n, k = x.shape[0], a.shape[1]
+    x = _pad_to(x.astype(jnp.float32), 0, bm)
+    a = _pad_to(a.astype(jnp.float32), 1, bk)
+    d = x.shape[1]
+    grid = (x.shape[0] // bm, a.shape[1] // bk)
+    out = pl.pallas_call(
+        _sign_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], a.shape[1]), jnp.int32),
+        interpret=interpret,
+    )(x, a)
+    return out[:n, :k]

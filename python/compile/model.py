@@ -1,0 +1,116 @@
+"""Layer-2: the ALSH pipeline as JAX computations calling the L1 kernels.
+
+Four build-time functions get AOT-lowered to HLO text (see aot.py) and
+executed from the Rust coordinator via PJRT:
+
+  * ``alsh_data_codes(x, a, b)``  — P-transform (Eq. 12) + L2LSH hash.
+  * ``alsh_query_codes(q, a, b)`` — Q-transform (Eq. 13) + L2LSH hash.
+  * ``l2lsh_codes(x, a, b)``      — plain L2LSH (the paper's baseline).
+  * ``rerank(q, c_t)``            — exact inner products for re-ranking.
+
+All randomness (projection matrix ``a``, offsets ``b``) and all data-
+dependent scaling (the U/max-norm shrink of Eq. 11, the 1/r pre-scale) are
+inputs supplied by Rust at runtime: the artifacts bake in nothing but shapes
+and the structural parameter m.
+
+The P/Q transforms are implemented here (not in the kernel) so XLA fuses
+the norm computation + concat into the projection matmul; the Pallas kernel
+only sees the transformed [B, D+m] batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.hash_kernel import hash_codes
+from compile.kernels.rerank_kernel import rerank_scores
+from compile.kernels.sign_kernel import sign_codes
+
+
+def p_transform(x: jax.Array, m: int) -> jax.Array:
+    """P(x) = [x; ||x||^2; ||x||^4; ...; ||x||^(2^m)]  (Eq. 12).
+
+    Norm powers are built by iterative squaring: ||x||^(2^(i+1)) =
+    (||x||^(2^i))^2 — one multiply per extra component, no pow() calls.
+    """
+    cols = [x]
+    n = jnp.sum(x * x, axis=-1, keepdims=True)
+    for _ in range(m):
+        cols.append(n)
+        n = n * n
+    return jnp.concatenate(cols, axis=-1)
+
+
+def q_transform(q: jax.Array, m: int) -> jax.Array:
+    """Q(q) = [q/||q||; 1/2; ...; 1/2]  (Eq. 13), with WLOG normalization."""
+    norm = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+    qn = q / jnp.maximum(norm, 1e-12)
+    half = jnp.full(q.shape[:-1] + (m,), 0.5, dtype=q.dtype)
+    return jnp.concatenate([qn, half], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def alsh_data_codes(x: jax.Array, a: jax.Array, b: jax.Array, *, m: int = 3):
+    """Data-side ALSH codes: hash_codes(P(x), a, b).
+
+    x: [B, D] pre-scaled item vectors (||x|| <= U enforced by caller).
+    a: [D + m, K] projection matrix, pre-divided by r.
+    b: [K] offsets, pre-divided by r.
+    returns [B, K] int32.
+    """
+    return hash_codes(p_transform(x, m), a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def alsh_query_codes(q: jax.Array, a: jax.Array, b: jax.Array, *, m: int = 3):
+    """Query-side ALSH codes: hash_codes(Q(q), a, b)."""
+    return hash_codes(q_transform(q, m), a, b)
+
+
+@jax.jit
+def l2lsh_codes(x: jax.Array, a: jax.Array, b: jax.Array):
+    """Plain (symmetric) L2LSH codes — the paper's baseline hash function."""
+    return hash_codes(x, a, b)
+
+
+@jax.jit
+def rerank(q: jax.Array, c_t: jax.Array):
+    """Exact inner products q @ c_t for candidate re-ranking."""
+    return rerank_scores(q, c_t)
+
+
+def p_transform_sign(x: jax.Array, m: int) -> jax.Array:
+    """Sign-ALSH data transform: [x; 1/2 - ||x||^2; ...; 1/2 - ||x||^(2^m)].
+
+    With ||x|| <= U < 1 this makes sign(aᵀP(x)) vs sign(aᵀQ(q)) collisions
+    monotone in qᵀx (Shrivastava & Li 2015, "Improved ALSH for MIPS").
+    """
+    cols = [x]
+    n = jnp.sum(x * x, axis=-1, keepdims=True)
+    for _ in range(m):
+        cols.append(0.5 - n)
+        n = n * n
+    return jnp.concatenate(cols, axis=-1)
+
+
+def q_transform_sign(q: jax.Array, m: int) -> jax.Array:
+    """Sign-ALSH query transform: [q/||q||; 0; ...; 0]."""
+    norm = jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True))
+    qn = q / jnp.maximum(norm, 1e-12)
+    zeros = jnp.zeros(q.shape[:-1] + (m,), dtype=q.dtype)
+    return jnp.concatenate([qn, zeros], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def sign_alsh_data_codes(x: jax.Array, a: jax.Array, *, m: int = 2):
+    """Data-side Sign-ALSH codes: sign_codes(P_sign(x), a)."""
+    return sign_codes(p_transform_sign(x, m), a)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def sign_alsh_query_codes(q: jax.Array, a: jax.Array, *, m: int = 2):
+    """Query-side Sign-ALSH codes: sign_codes(Q_sign(q), a)."""
+    return sign_codes(q_transform_sign(q, m), a)

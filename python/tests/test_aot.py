@@ -1,0 +1,64 @@
+"""AOT pipeline tests: every artifact lowers to parseable HLO text with the
+expected parameter shapes, and the manifest is consistent."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.build_entries()
+
+
+def test_entry_inventory(entries):
+    names = [e[0] for e in entries]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    # 6 functions x len(DIMS) configs
+    assert len(names) == 6 * len(aot.DIMS)
+    for d in aot.DIMS:
+        assert f"alsh_data_d{d}_m{aot.M_TERMS}_k{aot.K_HASHES}" in names
+        assert f"alsh_query_d{d}_m{aot.M_TERMS}_k{aot.K_HASHES}" in names
+        assert f"l2lsh_d{d}_k{aot.K_HASHES}" in names
+        assert f"sign_alsh_data_d{d}_m{aot.SIGN_M}_k{aot.K_HASHES}" in names
+        assert f"sign_alsh_query_d{d}_m{aot.SIGN_M}_k{aot.K_HASHES}" in names
+        assert f"rerank_d{d}_m{aot.RERANK_M}" in names
+
+
+def test_smallest_artifact_lowers_to_hlo_text(entries):
+    import jax
+
+    # Only lower the d=8 configs in tests (the big ones are exercised by
+    # `make artifacts`); keep the test suite fast.
+    small = [e for e in entries if e[3]["dim"] == min(aot.DIMS)]
+    assert len(small) == 6
+    for name, fn, args, meta in small:
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert "HloModule" in text
+        # f32 / s32 params must appear with the right leading batch dim
+        assert f"f32[{aot.BATCH}," in text
+        if meta["function"] != "rerank":
+            assert "s32" in text, f"{name}: expected int32 output"
+
+
+def test_manifest_written(tmp_path, monkeypatch, entries):
+    # Run main() against a temp dir but with a single small dim to stay fast.
+    monkeypatch.setattr(aot, "DIMS", (8,))
+    monkeypatch.setattr(
+        "sys.argv", ["aot.py", "--out-dir", str(tmp_path)]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["batch"] == aot.BATCH
+    assert len(manifest["artifacts"]) == 6
+    for art in manifest["artifacts"]:
+        p = tmp_path / art["file"]
+        assert p.exists() and p.stat().st_size > 0
+        text = p.read_text()
+        assert text.lstrip().startswith("HloModule")
+        assert art["name"] == art["file"].replace(".hlo.txt", "")
+        assert all(isinstance(s, list) for s in art["arg_shapes"])

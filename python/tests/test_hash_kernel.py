@@ -1,0 +1,105 @@
+"""Pallas hash kernel vs pure-jnp oracle: the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hash_kernel import hash_codes
+from compile.kernels.ref import hash_codes_ref
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _check(n, d, k, seed=0, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(ks[0], n, d, scale=scale)
+    a = _rand(ks[1], d, k)
+    b = jax.random.uniform(ks[2], (k,), dtype=jnp.float32)
+    got = hash_codes(x, a, b)
+    want = hash_codes_ref(x, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+
+
+def test_exact_tile_shapes():
+    _check(32, 64, 128)
+
+
+def test_multi_tile_grid():
+    _check(64, 16, 512)
+
+
+def test_unaligned_batch():
+    _check(7, 10, 64)
+
+
+def test_unaligned_hashes():
+    _check(16, 10, 33)
+
+
+def test_unaligned_everything():
+    _check(5, 3, 7)
+
+
+def test_single_row_single_hash():
+    _check(1, 1, 1)
+
+
+def test_large_scale_values():
+    # Large magnitudes exercise floor() far from zero.
+    _check(16, 8, 16, scale=100.0)
+
+
+def test_negative_codes_present():
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = _rand(ks[0], 16, 8, scale=10.0)
+    a = _rand(ks[1], 8, 32)
+    b = jnp.zeros((32,), dtype=jnp.float32)
+    got = np.asarray(hash_codes(x, a, b))
+    assert (got < 0).any(), "expected some negative hash codes"
+
+
+def test_custom_block_sizes():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = _rand(ks[0], 48, 12)
+    a = _rand(ks[1], 12, 80)
+    b = jax.random.uniform(ks[2], (80,), dtype=jnp.float32)
+    got = hash_codes(x, a, b, bm=16, bk=32)
+    want = hash_codes_ref(x, a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    a = jnp.zeros((6, 7))  # mismatched reduction dim
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        hash_codes(x, a, b)
+    with pytest.raises(ValueError):
+        hash_codes(x[0], a, b)  # bad rank
+
+
+def test_zero_input_gives_floor_of_b():
+    x = jnp.zeros((4, 6), dtype=jnp.float32)
+    a = jnp.ones((6, 9), dtype=jnp.float32)
+    b = jnp.array([0.0, 0.5, 0.99, 1.0, 1.5, -0.5, -1.0, 2.7, -2.7], jnp.float32)
+    got = np.asarray(hash_codes(x, a, b))
+    want = np.floor(np.asarray(b)).astype(np.int32)
+    for row in got:
+        np.testing.assert_array_equal(row, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 70),
+    d=st.integers(1, 40),
+    k=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_hypothesis_shape_sweep(n, d, k, seed, scale):
+    _check(n, d, k, seed=seed, scale=scale)

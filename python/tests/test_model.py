@@ -1,0 +1,146 @@
+"""Layer-2 model tests: transforms, the Eq. 17 identity, end-to-end codes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _unit_rows(key, n, d):
+    q = jax.random.normal(key, (n, d), dtype=jnp.float32)
+    return q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+
+
+def _bounded_rows(key, n, d, u=0.83):
+    x = jax.random.normal(key, (n, d), dtype=jnp.float32)
+    norms = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    # random norms in (0, u]
+    target = u * jax.random.uniform(
+        jax.random.fold_in(key, 1), (n, 1), minval=0.05, maxval=1.0
+    )
+    return x / norms * target
+
+
+def test_p_transform_shape_and_tail():
+    x = _bounded_rows(jax.random.PRNGKey(0), 5, 10)
+    m = 3
+    px = np.asarray(model.p_transform(x, m))
+    assert px.shape == (5, 13)
+    n2 = np.sum(np.asarray(x) ** 2, axis=-1)
+    np.testing.assert_allclose(px[:, 10], n2, rtol=1e-5)
+    np.testing.assert_allclose(px[:, 11], n2**2, rtol=1e-5)
+    np.testing.assert_allclose(px[:, 12], n2**4, rtol=1e-4)
+
+
+def test_q_transform_normalizes_and_pads_halves():
+    q = 3.7 * _unit_rows(jax.random.PRNGKey(1), 4, 8)
+    m = 4
+    qq = np.asarray(model.q_transform(q, m))
+    assert qq.shape == (4, 12)
+    np.testing.assert_allclose(np.linalg.norm(qq[:, :8], axis=-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(qq[:, 8:], 0.5)
+
+
+def test_q_transform_zero_query_is_safe():
+    q = jnp.zeros((2, 6), dtype=jnp.float32)
+    qq = np.asarray(model.q_transform(q, 3))
+    assert np.all(np.isfinite(qq))
+
+
+def test_eq17_key_identity():
+    """||Q(q) - P(x)||^2 == (1 + m/4) - 2 q^T x + ||x||^(2^(m+1))  (Eq. 17)."""
+    key = jax.random.PRNGKey(2)
+    m = 3
+    q = _unit_rows(key, 1, 12)
+    x = _bounded_rows(jax.random.fold_in(key, 7), 1, 12, u=0.83)
+    pq = np.asarray(model.q_transform(q, m))[0].astype(np.float64)
+    px = np.asarray(model.p_transform(x, m))[0].astype(np.float64)
+    lhs = np.sum((pq - px) ** 2)
+    nx = np.linalg.norm(np.asarray(x)[0].astype(np.float64))
+    qx = float(np.asarray(q)[0].astype(np.float64) @ np.asarray(x)[0].astype(np.float64))
+    rhs = (1 + m / 4) - 2 * qx + nx ** (2 ** (m + 1))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 5),
+    d=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+    u=st.sampled_from([0.5, 0.75, 0.83, 0.95]),
+)
+def test_eq17_identity_hypothesis(m, d, seed, u):
+    key = jax.random.PRNGKey(seed)
+    q = _unit_rows(key, 1, d)
+    x = _bounded_rows(jax.random.fold_in(key, 13), 1, d, u=u)
+    pq = np.asarray(model.q_transform(q, m))[0].astype(np.float64)
+    px = np.asarray(model.p_transform(x, m))[0].astype(np.float64)
+    lhs = np.sum((pq - px) ** 2)
+    nx = np.linalg.norm(np.asarray(x)[0].astype(np.float64))
+    qx = float(
+        np.asarray(q)[0].astype(np.float64) @ np.asarray(x)[0].astype(np.float64)
+    )
+    rhs = (1 + m / 4) - 2 * qx + nx ** (2 ** (m + 1))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-6)
+
+
+def test_distance_rank_correlates_with_inner_product():
+    """The reduction's point: argmax q.x == argmin ||Q(q)-P(x)|| for small eps."""
+    key = jax.random.PRNGKey(5)
+    m = 3
+    q = _unit_rows(key, 1, 16)
+    x = _bounded_rows(jax.random.fold_in(key, 3), 200, 16, u=0.83)
+    ips = np.asarray(x @ q[0])
+    pq = np.asarray(model.q_transform(q, m))[0]
+    px = np.asarray(model.p_transform(x, m))
+    d2 = np.sum((px - pq) ** 2, axis=-1)
+    assert np.argmax(ips) == np.argmin(d2)
+
+
+def test_alsh_data_codes_match_ref():
+    key = jax.random.PRNGKey(6)
+    m, d, k = 3, 20, 64
+    x = _bounded_rows(key, 33, d)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d + m, k), jnp.float32)
+    b = jax.random.uniform(jax.random.fold_in(key, 2), (k,), jnp.float32)
+    got = np.asarray(model.alsh_data_codes(x, a, b, m=m))
+    want = np.asarray(ref.alsh_data_codes_ref(x, a, b, m))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_alsh_query_codes_match_ref():
+    key = jax.random.PRNGKey(7)
+    m, d, k = 3, 20, 64
+    q = 2.5 * _unit_rows(key, 17, d)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d + m, k), jnp.float32)
+    b = jax.random.uniform(jax.random.fold_in(key, 2), (k,), jnp.float32)
+    got = np.asarray(model.alsh_query_codes(q, a, b, m=m))
+    want = np.asarray(ref.alsh_query_codes_ref(q, a, b, m))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_l2lsh_codes_match_ref():
+    key = jax.random.PRNGKey(8)
+    d, k = 20, 96
+    x = jax.random.normal(key, (21, d), jnp.float32)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d, k), jnp.float32)
+    b = jax.random.uniform(jax.random.fold_in(key, 2), (k,), jnp.float32)
+    got = np.asarray(model.l2lsh_codes(x, a, b))
+    want = np.asarray(ref.hash_codes_ref(x, a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_asymmetry_is_real():
+    """hash(P(x)) != hash(Q(x)) in general — the asymmetry that fixes MIPS."""
+    key = jax.random.PRNGKey(9)
+    m, d, k = 3, 16, 128
+    x = _bounded_rows(key, 8, d)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d + m, k), jnp.float32)
+    b = jax.random.uniform(jax.random.fold_in(key, 2), (k,), jnp.float32)
+    data = np.asarray(model.alsh_data_codes(x, a, b, m=m))
+    query = np.asarray(model.alsh_query_codes(x, a, b, m=m))
+    assert (data != query).any()

@@ -1,0 +1,63 @@
+"""Pallas rerank kernel vs pure-jnp matmul oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.rerank_kernel import rerank_scores
+from compile.kernels.ref import rerank_scores_ref
+
+
+def _check(n, d, m, seed=0, rtol=1e-5, atol=1e-5, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(ks[0], (n, d), dtype=dtype)
+    c_t = jax.random.normal(ks[1], (d, m), dtype=dtype)
+    got = rerank_scores(q, c_t)
+    want = rerank_scores_ref(q, c_t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+    assert got.dtype == jnp.float32
+
+
+def test_exact_tiles():
+    _check(32, 64, 128)
+
+
+def test_multi_tile():
+    _check(64, 32, 512)
+
+
+def test_unaligned():
+    _check(13, 7, 101)
+
+
+def test_single():
+    _check(1, 1, 1)
+
+
+def test_bf16_inputs_accumulate_f32():
+    # bf16 inputs should still produce f32 output within bf16 tolerance.
+    _check(16, 32, 64, dtype=jnp.bfloat16, rtol=3e-2, atol=3e-2)
+
+
+def test_rejects_mismatch():
+    with pytest.raises(ValueError):
+        rerank_scores(jnp.zeros((4, 5)), jnp.zeros((6, 7)))
+
+
+def test_identity_candidates():
+    q = jax.random.normal(jax.random.PRNGKey(1), (8, 16), dtype=jnp.float32)
+    got = np.asarray(rerank_scores(q, jnp.eye(16, dtype=jnp.float32)))
+    np.testing.assert_allclose(got, np.asarray(q), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 70),
+    d=st.integers(1, 48),
+    m=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(n, d, m, seed):
+    _check(n, d, m, seed=seed)

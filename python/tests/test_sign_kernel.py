@@ -1,0 +1,114 @@
+"""Sign (SRP) Pallas kernel + Sign-ALSH model vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.sign_kernel import sign_codes
+from compile.kernels import ref
+
+
+def _check(n, d, k, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (n, d), dtype=jnp.float32)
+    a = jax.random.normal(ks[1], (d, k), dtype=jnp.float32)
+    got = np.asarray(sign_codes(x, a))
+    want = np.asarray(ref.sign_codes_ref(x, a))
+    np.testing.assert_array_equal(got, want)
+    assert set(np.unique(got)).issubset({0, 1})
+
+
+def test_exact_tiles():
+    _check(32, 16, 128)
+
+
+def test_unaligned():
+    _check(9, 5, 33)
+
+
+def test_single():
+    _check(1, 1, 1)
+
+
+def test_rejects_mismatch():
+    with pytest.raises(ValueError):
+        sign_codes(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+def test_collision_prob_matches_angle():
+    # SimHash property: P(collision) = 1 - theta/pi.
+    key = jax.random.PRNGKey(1)
+    d, k = 16, 8192
+    x = jax.random.normal(key, (1, d), dtype=jnp.float32)
+    y = x + 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (1, d), jnp.float32)
+    a = jax.random.normal(jax.random.fold_in(key, 2), (d, k), jnp.float32)
+    cx = np.asarray(sign_codes(x, a))[0]
+    cy = np.asarray(sign_codes(y, a))[0]
+    frac = (cx == cy).mean()
+    cos = float(
+        (x @ y.T)[0, 0]
+        / (jnp.linalg.norm(x) * jnp.linalg.norm(y))
+    )
+    theta = np.arccos(np.clip(cos, -1, 1))
+    assert abs(frac - (1 - theta / np.pi)) < 0.02
+
+
+def test_sign_transforms_shapes():
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, 10), jnp.float32)
+    px = np.asarray(model.p_transform_sign(x, 2))
+    qx = np.asarray(model.q_transform_sign(x, 2))
+    assert px.shape == (4, 12) and qx.shape == (4, 12)
+    n2 = np.sum(np.asarray(x) ** 2, axis=-1)
+    np.testing.assert_allclose(px[:, 10], 0.5 - n2, rtol=1e-5)
+    np.testing.assert_allclose(px[:, 11], 0.5 - n2**2, rtol=1e-5)
+    np.testing.assert_allclose(qx[:, 10:], 0.0)
+
+
+def test_sign_alsh_codes_match_ref():
+    key = jax.random.PRNGKey(3)
+    m, d, k = 2, 12, 64
+    x = 0.6 * jax.random.normal(key, (7, d), jnp.float32)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d + m, k), jnp.float32)
+    got_d = np.asarray(model.sign_alsh_data_codes(x, a, m=m))
+    want_d = np.asarray(
+        ref.sign_codes_ref(ref.p_transform_sign_ref(x, m), a)
+    )
+    np.testing.assert_array_equal(got_d, want_d)
+    got_q = np.asarray(model.sign_alsh_query_codes(x, a, m=m))
+    want_q = np.asarray(
+        ref.sign_codes_ref(ref.q_transform_sign_ref(x, m), a)
+    )
+    np.testing.assert_array_equal(got_q, want_q)
+
+
+def test_sign_alsh_collisions_increase_with_inner_product():
+    # The Sign-ALSH property: collision fraction is monotone-ish in q.x.
+    key = jax.random.PRNGKey(4)
+    m, d, k = 2, 16, 4096
+    q = jax.random.normal(key, (1, d), jnp.float32)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d + m, k), jnp.float32)
+    qc = np.asarray(model.sign_alsh_query_codes(q, a, m=m))[0]
+    qn = np.asarray(q)[0] / np.linalg.norm(np.asarray(q)[0])
+    fracs = []
+    ips = []
+    for scale in [0.1, 0.4, 0.7]:
+        # x aligned with q at increasing norm => increasing q.x
+        x = jnp.asarray(scale * qn)[None, :]
+        xc = np.asarray(model.sign_alsh_data_codes(x, a, m=m))[0]
+        fracs.append((qc == xc).mean())
+        ips.append(scale)
+    assert fracs[0] < fracs[1] < fracs[2], f"{fracs}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    d=st.integers(1, 32),
+    k=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(n, d, k, seed):
+    _check(n, d, k, seed=seed)

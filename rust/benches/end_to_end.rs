@@ -1,0 +1,55 @@
+//! End-to-end benchmarks over the §4 evaluation engine: collision-count
+//! ranking (Eq. 21, the figures' inner loop), gold-standard scans, and the
+//! full per-user Figure-5 measurement.
+
+use alsh::config::DatasetConfig;
+use alsh::data::generate_dataset;
+use alsh::eval::gold_top_t;
+use alsh::index::{CollisionRanker, Scheme};
+use alsh::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    // Tiny dataset so the bench binary stays fast; the figure harness runs
+    // the full-size datasets.
+    let ds = DatasetConfig::tiny();
+    let data = generate_dataset(&ds).expect("dataset");
+    let items = &data.items;
+    let users = &data.users;
+    println!(
+        "dataset {}: {} items dim {}",
+        data.name,
+        items.len(),
+        data.latent_dim
+    );
+
+    bench.run("collision_ranker_build K=512 (alsh)", items.len() as f64, || {
+        CollisionRanker::build(items, Scheme::Alsh { m: 3 }, 512, 2.5, 0.83, 9).n_items()
+    });
+
+    let alsh = CollisionRanker::build(items, Scheme::Alsh { m: 3 }, 512, 2.5, 0.83, 9);
+    let l2 = CollisionRanker::build(items, Scheme::L2Lsh, 512, 2.5, 0.83, 9);
+
+    let mut ui = 0;
+    bench.run("alsh matches+rank K=512 (per user)", items.len() as f64, || {
+        ui = (ui + 1) % users.len();
+        alsh.rank(&users[ui], 512).len()
+    });
+    bench.run("l2lsh matches+rank K=512 (per user)", items.len() as f64, || {
+        ui = (ui + 1) % users.len();
+        l2.rank(&users[ui], 512).len()
+    });
+    bench.run("matches only K=64 (per user)", items.len() as f64, || {
+        ui = (ui + 1) % users.len();
+        let qc = alsh.query_codes(&users[ui]);
+        alsh.matches(&qc, 64).len()
+    });
+
+    bench.run("gold_top_10 exact scan (per user)", items.len() as f64, || {
+        ui = (ui + 1) % users.len();
+        gold_top_t(items, &users[ui], 10).len()
+    });
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_end_to_end.csv", bench.summary_csv()).ok();
+}

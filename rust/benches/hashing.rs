@@ -1,0 +1,71 @@
+//! Hash-code generation benchmarks: the pure-Rust mirror vs the compiled
+//! PJRT artifact, and the P/Q transform costs.
+//!
+//! Paper-relevance: hashing is the only per-query compute that scales with
+//! K; Eq. 21 evaluation and table probing both sit on top of it.
+
+use alsh::lsh::L2LshFamily;
+use alsh::runtime::Runtime;
+use alsh::transform::{p_transform, q_transform};
+use alsh::util::bench::Bench;
+use alsh::util::Rng;
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Rng::seed_from_u64(42);
+
+    // -- pure-Rust hashing ---------------------------------------------------
+    for (dim, k) in [(150usize, 64usize), (150, 512), (300, 512)] {
+        let fam = L2LshFamily::sample(dim + 3, k, 2.5, &mut rng);
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.3).collect();
+        let px = p_transform(&x, 3);
+        let mut out = Vec::with_capacity(k);
+        bench.run(&format!("rust_hash d={dim} K={k}"), k as f64, || {
+            out.clear();
+            fam.hash_into(&px, &mut out);
+            out.len()
+        });
+    }
+
+    // -- transforms ----------------------------------------------------------
+    let x: Vec<f32> = (0..300).map(|_| rng.normal_f32() * 0.3).collect();
+    bench.run("p_transform d=300 m=3", 1.0, || p_transform(&x, 3));
+    bench.run("q_transform d=300 m=3", 1.0, || q_transform(&x, 3));
+
+    // -- PJRT artifact path ---------------------------------------------------
+    match Runtime::load("artifacts") {
+        Ok(mut rt) => {
+            for dim in [50usize, 150, 300] {
+                let meta = match rt.find("alsh_query", dim) {
+                    Ok(m) => m,
+                    Err(_) => continue,
+                };
+                let fam = L2LshFamily::sample(dim + meta.m, meta.k, 2.5, &mut rng);
+                let a = fam.a_matrix_dk();
+                let b = fam.b_vector().to_vec();
+                let rows: Vec<Vec<f32>> = (0..meta.batch)
+                    .map(|_| (0..dim).map(|_| rng.normal_f32() * 0.3).collect())
+                    .collect();
+                // Warm-compile before timing.
+                rt.run_hash(&meta, &rows, &a, &b).expect("hash");
+                let items = (meta.batch * meta.k) as f64;
+                bench.run(
+                    &format!("pjrt_hash d={dim} K={} batch={}", meta.k, meta.batch),
+                    items,
+                    || rt.run_hash(&meta, &rows, &a, &b).unwrap().len(),
+                );
+                // Single-row (unbatched) cost for the batching-win comparison.
+                let one = vec![rows[0].clone()];
+                bench.run(
+                    &format!("pjrt_hash d={dim} K={} batch=1(padded)", meta.k),
+                    meta.k as f64,
+                    || rt.run_hash(&meta, &one, &a, &b).unwrap().len(),
+                );
+            }
+        }
+        Err(e) => println!("[pjrt benches skipped: {e:#}]"),
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_hashing.csv", bench.summary_csv()).ok();
+}

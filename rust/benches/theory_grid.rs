@@ -1,0 +1,33 @@
+//! Theory benchmarks: collision-probability evaluation and the ρ\* grid
+//! search that regenerates Figures 1–3.
+
+use alsh::theory::{collision_probability, optimize_rho, GridSpec};
+use alsh::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+
+    let mut d = 0.0;
+    bench.run("collision_probability F_r(d)", 1.0, || {
+        d = if d > 3.0 { 0.01 } else { d + 0.001 };
+        collision_probability(2.5, d)
+    });
+
+    let coarse = GridSpec::coarse();
+    bench.run("optimize_rho coarse grid (1 c-point)", 1.0, || {
+        optimize_rho(0.9, 0.5, &coarse).map(|o| o.rho)
+    });
+
+    let fine = GridSpec::default();
+    bench.run("optimize_rho default grid (1 c-point)", 1.0, || {
+        optimize_rho(0.9, 0.5, &fine).map(|o| o.rho)
+    });
+
+    // Full Figure-1 regeneration (5 S0 curves x 19 c values).
+    bench.run("fig1 full regeneration", (5 * 19) as f64, || {
+        alsh::figures::fig1_rho_star(&coarse).len()
+    });
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_theory_grid.csv", bench.summary_csv()).ok();
+}

@@ -1,0 +1,139 @@
+//! Symmetric L2LSH bucketed index — the §4.2 baseline, same (K, L) table
+//! machinery as the ALSH index but hashing raw vectors with h^{L2} on both
+//! the data and the query side.
+
+use crate::util::Rng;
+
+use crate::index::{HashTable, ScoredItem};
+use crate::lsh::L2LshFamily;
+use crate::transform::dot;
+
+/// Bucketed symmetric L2LSH index.
+pub struct L2LshIndex {
+    families: Vec<L2LshFamily>,
+    tables: Vec<HashTable>,
+    items_flat: Vec<f32>,
+    dim: usize,
+    n_items: usize,
+}
+
+impl L2LshIndex {
+    /// Build with `n_tables` tables of `k_per_table` codes each, width `r`.
+    pub fn build(
+        items: &[Vec<f32>],
+        k_per_table: usize,
+        n_tables: usize,
+        r: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(!items.is_empty());
+        let dim = items[0].len();
+        assert!(items.iter().all(|v| v.len() == dim));
+        let mut rng = Rng::seed_from_u64(seed);
+        let families: Vec<L2LshFamily> = (0..n_tables)
+            .map(|_| L2LshFamily::sample(dim, k_per_table, r, &mut rng))
+            .collect();
+        let mut tables = vec![HashTable::new(); n_tables];
+        let mut codes = Vec::with_capacity(k_per_table);
+        for (id, item) in items.iter().enumerate() {
+            for (family, table) in families.iter().zip(tables.iter_mut()) {
+                codes.clear();
+                family.hash_into(item, &mut codes);
+                table.insert(&codes, id as u32);
+            }
+        }
+        let mut items_flat = Vec::with_capacity(items.len() * dim);
+        for it in items {
+            items_flat.extend_from_slice(it);
+        }
+        Self { families, tables, items_flat, dim, n_items: items.len() }
+    }
+
+    fn item(&self, id: u32) -> &[f32] {
+        let i = id as usize;
+        &self.items_flat[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Candidate union across tables (deduplicated).
+    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+        assert_eq!(query.len(), self.dim);
+        let mut seen = vec![false; self.n_items];
+        let mut out = Vec::new();
+        let mut codes = Vec::new();
+        for (family, table) in self.families.iter().zip(&self.tables) {
+            codes.clear();
+            family.hash_into(query, &mut codes);
+            for &id in table.get(&codes) {
+                if !seen[id as usize] {
+                    seen[id as usize] = true;
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Retrieve + exact-rerank top-k (same protocol as `AlshIndex::query`).
+    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
+        let mut scored: Vec<ScoredItem> = self
+            .candidates(query)
+            .into_iter()
+            .map(|id| ScoredItem { id, score: dot(query, self.item(id)) })
+            .collect();
+        scored.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        scored.truncate(k);
+        scored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let scale = 0.2 + 2.0 * (i as f32 / n as f32);
+                (0..d).map(|_| (rng.f32() - 0.5) * scale).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn retrieves_and_ranks() {
+        let its = items(200, 8, 1);
+        let idx = L2LshIndex::build(&its, 4, 32, 2.5, 2);
+        let q = vec![0.3f32; 8];
+        let top = idx.query(&q, 5);
+        assert!(!top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn near_duplicate_of_query_is_found() {
+        // Symmetric LSH is good at *near neighbor*: plant a vector almost
+        // equal to the query and check it is retrieved.
+        let mut its = items(300, 8, 3);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin() * 0.5).collect();
+        let mut near = q.clone();
+        near[0] += 0.01;
+        its.push(near);
+        let idx = L2LshIndex::build(&its, 4, 48, 2.5, 4);
+        let cands = idx.candidates(&q);
+        assert!(cands.contains(&300), "planted near-duplicate not retrieved");
+    }
+
+    #[test]
+    fn candidates_deduplicated() {
+        let its = items(100, 6, 5);
+        let idx = L2LshIndex::build(&its, 3, 16, 2.5, 6);
+        let c = idx.candidates(&[0.1, 0.2, 0.3, 0.1, 0.0, -0.2]);
+        let mut s = c.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), c.len());
+    }
+}

@@ -1,0 +1,96 @@
+//! Brute-force MIPS: exact, O(N·D) per query. The accuracy ceiling and the
+//! latency baseline every sublinear method is judged against.
+
+use crate::index::ScoredItem;
+use crate::transform::dot;
+
+/// Exact scan over a flat row-major item matrix.
+pub struct LinearScan {
+    items_flat: Vec<f32>,
+    dim: usize,
+    n_items: usize,
+}
+
+impl LinearScan {
+    pub fn new(items: &[Vec<f32>]) -> Self {
+        assert!(!items.is_empty());
+        let dim = items[0].len();
+        assert!(items.iter().all(|v| v.len() == dim));
+        let mut items_flat = Vec::with_capacity(items.len() * dim);
+        for it in items {
+            items_flat.extend_from_slice(it);
+        }
+        Self { items_flat, dim, n_items: items.len() }
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    pub fn item(&self, id: u32) -> &[f32] {
+        let i = id as usize;
+        &self.items_flat[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Exact top-k by inner product.
+    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
+        assert_eq!(query.len(), self.dim);
+        let k = k.min(self.n_items);
+        let mut top: Vec<ScoredItem> = Vec::with_capacity(k + 1);
+        for id in 0..self.n_items as u32 {
+            let score = dot(query, self.item(id));
+            if top.len() < k {
+                top.push(ScoredItem { id, score });
+                top.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            } else if score > top[k - 1].score {
+                top[k - 1] = ScoredItem { id, score };
+                let mut j = k - 1;
+                while j > 0 && top[j].score > top[j - 1].score {
+                    top.swap(j, j - 1);
+                    j -= 1;
+                }
+            }
+        }
+        top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exactness_vs_naive_sort() {
+        let mut rng = Rng::seed_from_u64(1);
+        let items: Vec<Vec<f32>> = (0..300)
+            .map(|_| (0..12).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let scan = LinearScan::new(&items);
+        let q: Vec<f32> = (0..12).map(|_| rng.f32() - 0.5).collect();
+        let got = scan.query(&q, 7);
+        let mut all: Vec<ScoredItem> = (0..300u32)
+            .map(|id| ScoredItem { id, score: dot(&q, &items[id as usize]) })
+            .collect();
+        all.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        assert_eq!(got.len(), 7);
+        for (g, w) in got.iter().zip(&all[..7]) {
+            assert_eq!(g.id, w.id);
+        }
+    }
+
+    #[test]
+    fn k_caps_at_corpus_size() {
+        let items = vec![vec![1.0f32], vec![2.0]];
+        let scan = LinearScan::new(&items);
+        assert_eq!(scan.query(&[1.0], 99).len(), 2);
+    }
+
+    #[test]
+    fn descending_order() {
+        let items = vec![vec![1.0f32], vec![3.0], vec![2.0]];
+        let scan = LinearScan::new(&items);
+        let got = scan.query(&[1.0], 3);
+        assert_eq!(got.iter().map(|s| s.id).collect::<Vec<_>>(), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Comparators: exact linear scan (ground truth + timing baseline) and the
+//! symmetric L2LSH index of §4.2.
+
+pub mod l2lsh_index;
+pub mod linear_scan;
+
+pub use l2lsh_index::L2LshIndex;
+pub use linear_scan::LinearScan;

@@ -1,0 +1,110 @@
+//! Experiment and dataset configuration (serde-backed, CLI-overridable).
+
+use crate::data::SyntheticConfig;
+
+/// A named dataset recipe: synthetic ratings + PureSVD latent dimension,
+/// mirroring the paper's two evaluation datasets (§4.1).
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    pub name: String,
+    pub synthetic: SyntheticConfig,
+    /// PureSVD latent dimension f (paper: 150 for Movielens, 300 for
+    /// Netflix).
+    pub latent_dim: usize,
+    pub seed: u64,
+}
+
+impl DatasetConfig {
+    pub fn movielens_like() -> Self {
+        Self {
+            name: "movielens-synth".into(),
+            synthetic: SyntheticConfig::movielens_like(),
+            latent_dim: 150,
+            seed: 20140213,
+        }
+    }
+
+    pub fn netflix_like() -> Self {
+        Self {
+            name: "netflix-synth".into(),
+            synthetic: SyntheticConfig::netflix_like(),
+            latent_dim: 300,
+            seed: 20141208,
+        }
+    }
+
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny-synth".into(),
+            synthetic: SyntheticConfig::tiny(),
+            latent_dim: 50,
+            seed: 7,
+        }
+    }
+
+    pub fn by_name(name: &str) -> crate::Result<Self> {
+        match name {
+            "movielens" | "movielens-synth" => Ok(Self::movielens_like()),
+            "netflix" | "netflix-synth" => Ok(Self::netflix_like()),
+            "tiny" | "tiny-synth" => Ok(Self::tiny()),
+            other => anyhow::bail!("unknown dataset {other:?} (movielens|netflix|tiny)"),
+        }
+    }
+}
+
+/// Parameters of the Figures 5–7 precision–recall experiments (§4.3).
+#[derive(Clone, Debug)]
+pub struct PrExperimentConfig {
+    /// Number of random users to average over (paper: 2000).
+    pub n_users: usize,
+    /// Hash-count sweep K (paper: 64, 128, 256, 512).
+    pub k_values: Vec<usize>,
+    /// Gold top-T sweep (paper: 1, 5, 10).
+    pub t_values: Vec<usize>,
+    /// L2LSH baseline r sweep (paper: 1..5 step 0.5).
+    pub l2lsh_r_values: Vec<f32>,
+    /// ALSH operating point (paper: m=3, U=0.83, r=2.5).
+    pub alsh_m: usize,
+    pub alsh_u: f32,
+    pub alsh_r: f32,
+    pub seed: u64,
+}
+
+impl Default for PrExperimentConfig {
+    fn default() -> Self {
+        Self {
+            // Paper averages over 2000 users; 200 is the single-core
+            // default — pass --users 2000 for the full protocol.
+            n_users: 200,
+            k_values: vec![64, 128, 256, 512],
+            t_values: vec![1, 5, 10],
+            l2lsh_r_values: vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.0],
+            alsh_m: 3,
+            alsh_u: 0.83,
+            alsh_r: 2.5,
+            seed: 2014,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(DatasetConfig::by_name("movielens").unwrap().latent_dim, 150);
+        assert_eq!(DatasetConfig::by_name("netflix").unwrap().latent_dim, 300);
+        assert!(DatasetConfig::by_name("imagenet").is_err());
+    }
+
+    #[test]
+    fn default_experiment_matches_paper_grid() {
+        let c = PrExperimentConfig::default();
+        assert_eq!(c.k_values, vec![64, 128, 256, 512]);
+        assert_eq!(c.t_values, vec![1, 5, 10]);
+        assert_eq!(c.l2lsh_r_values.len(), 9);
+        assert_eq!((c.alsh_m, c.alsh_u, c.alsh_r), (3, 0.83, 2.5));
+    }
+
+}

@@ -1,0 +1,250 @@
+//! Dynamic batcher over the PJRT hash artifact.
+//!
+//! PJRT executables are shape-monomorphic (fixed batch) and their handles
+//! are not `Send`, so the design is:
+//!
+//! * a dedicated **worker thread** owns the `Runtime` and the compiled
+//!   `alsh_query` executable;
+//! * a **batcher thread** collects incoming queries until the batch fills
+//!   (`max_batch`) or a deadline passes (`max_wait`), ships one padded
+//!   batch to the worker, and fans results back out per query (bucket
+//!   probe + exact rerank on the shared `MipsEngine`).
+//!
+//! Channels are std mpsc; per-request responses travel over one-shot
+//! channels (an mpsc used once).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::index::ScoredItem;
+use crate::runtime::Runtime;
+
+use super::engine::MipsEngine;
+use super::metrics::Metrics;
+
+/// Dynamic-batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max queries per dispatched batch (clamped to the artifact batch).
+    pub max_batch: usize,
+    /// Max time the first query in a batch waits for company.
+    pub max_wait: Duration,
+    /// Depth of the ingress queue (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(2), queue_depth: 1024 }
+    }
+}
+
+struct HashJob {
+    rows: Vec<Vec<f32>>,
+    resp: Sender<crate::Result<Vec<Vec<i32>>>>,
+}
+
+struct QueryRequest {
+    vector: Vec<f32>,
+    top_k: usize,
+    resp: Sender<Result<Vec<ScoredItem>, String>>,
+}
+
+enum Msg {
+    Query(QueryRequest),
+    /// Explicit stop: `recv()` blocks forever if any handle clone is
+    /// still alive, so shutdown is signalled in-band.
+    Shutdown,
+}
+
+/// Cheap-to-clone client handle.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: SyncSender<Msg>,
+}
+
+impl BatcherHandle {
+    /// Submit one MIPS query; blocks until its batch is served.
+    pub fn query(&self, vector: Vec<f32>, top_k: usize) -> crate::Result<Vec<ScoredItem>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Query(QueryRequest { vector, top_k, resp }))
+            .map_err(|_| anyhow::anyhow!("batcher is gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// The running batcher: handle + join handles for shutdown.
+pub struct PjrtBatcher {
+    handle: Option<BatcherHandle>,
+    batcher_thread: Option<std::thread::JoinHandle<()>>,
+    worker_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtBatcher {
+    /// Spawn the worker thread + batcher thread.
+    ///
+    /// `artifacts_dir` must contain an `alsh_query` artifact matching the
+    /// engine's item dimension and `m`; the engine's `L*K` hashes must fit
+    /// in the artifact's K columns.
+    pub fn spawn(
+        engine: Arc<MipsEngine>,
+        artifacts_dir: impl Into<std::path::PathBuf>,
+        cfg: BatcherConfig,
+    ) -> crate::Result<Self> {
+        let dir = artifacts_dir.into();
+        let dim = engine.index().dim();
+        let m = engine.index().params().m;
+
+        // Validate the artifact on the caller thread for a fast error.
+        let probe = Runtime::load(&dir)?;
+        let meta = probe.find("alsh_query", dim)?;
+        anyhow::ensure!(
+            meta.m == m,
+            "artifact m={} but index m={m}; re-run make artifacts",
+            meta.m
+        );
+        drop(probe);
+        let params = *engine.index().params();
+        let lk = params.n_tables * params.k_per_table;
+        anyhow::ensure!(
+            lk <= meta.k,
+            "index uses {lk} hashes > artifact capacity {}",
+            meta.k
+        );
+        let (a_dk, b) = engine.concat_family_inputs(meta.k);
+
+        // Worker thread: owns the (non-Send) PJRT runtime.
+        let (job_tx, job_rx) = mpsc::channel::<HashJob>();
+        let meta_worker = meta.clone();
+        let worker_dir = dir.clone();
+        let worker_thread = std::thread::Builder::new()
+            .name("pjrt-worker".into())
+            .spawn(move || {
+                let mut runtime = match Runtime::load(&worker_dir) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        crate::log_error!("pjrt worker failed to start: {e:#}");
+                        while let Ok(job) = job_rx.recv() {
+                            let _ =
+                                job.resp.send(Err(anyhow::anyhow!("runtime load failed")));
+                        }
+                        return;
+                    }
+                };
+                while let Ok(job) = job_rx.recv() {
+                    let res = runtime.run_hash(&meta_worker, &job.rows, &a_dk, &b);
+                    let _ = job.resp.send(res);
+                }
+            })
+            .expect("spawn pjrt worker");
+
+        // Batcher thread: dynamic batching + fan-out.
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+        let max_batch = cfg.max_batch.min(meta.batch).max(1);
+        let metrics = engine.metrics();
+        let batcher_thread = std::thread::Builder::new()
+            .name("alsh-batcher".into())
+            .spawn(move || {
+                Self::batch_loop(engine, metrics, rx, job_tx, max_batch, cfg.max_wait, lk)
+            })
+            .expect("spawn batcher");
+
+        Ok(Self {
+            handle: Some(BatcherHandle { tx }),
+            batcher_thread: Some(batcher_thread),
+            worker_thread: Some(worker_thread),
+        })
+    }
+
+    fn batch_loop(
+        engine: Arc<MipsEngine>,
+        metrics: Arc<Metrics>,
+        rx: Receiver<Msg>,
+        job_tx: Sender<HashJob>,
+        max_batch: usize,
+        max_wait: Duration,
+        lk: usize,
+    ) {
+        'outer: while let Ok(first) = rx.recv() {
+            let Msg::Query(first) = first else { break };
+            let mut reqs = vec![first];
+            let deadline = Instant::now() + max_wait;
+            let mut stop_after = false;
+            while reqs.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Query(r)) => reqs.push(r),
+                    Ok(Msg::Shutdown) => {
+                        stop_after = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            metrics.record_batch(reqs.len());
+            let rows: Vec<Vec<f32>> = reqs.iter().map(|r| r.vector.clone()).collect();
+            let (resp, hash_rx) = mpsc::channel();
+            if job_tx.send(HashJob { rows, resp }).is_err() {
+                metrics.record_error();
+                for req in reqs {
+                    let _ = req.resp.send(Err("pjrt worker is gone".into()));
+                }
+                continue;
+            }
+            match hash_rx.recv() {
+                Ok(Ok(code_rows)) => {
+                    for (req, codes) in reqs.into_iter().zip(code_rows) {
+                        let out =
+                            engine.query_with_codes(&req.vector, &codes[..lk], req.top_k);
+                        let _ = req.resp.send(Ok(out));
+                    }
+                }
+                Ok(Err(e)) => {
+                    metrics.record_error();
+                    let msg = format!("hash failed: {e:#}");
+                    for req in reqs {
+                        let _ = req.resp.send(Err(msg.clone()));
+                    }
+                }
+                Err(_) => {
+                    metrics.record_error();
+                    for req in reqs {
+                        let _ = req.resp.send(Err("pjrt worker dropped the job".into()));
+                    }
+                }
+            }
+            if stop_after {
+                break 'outer;
+            }
+        }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone().expect("batcher already shut down")
+    }
+
+    /// Graceful shutdown: stop the batch loop (even if client handles are
+    /// still alive), then join both threads. In-flight queries finish;
+    /// later `query()` calls fail with "batcher is gone".
+    pub fn shutdown(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.tx.send(Msg::Shutdown);
+        }
+        if let Some(t) = self.batcher_thread.take() {
+            let _ = t.join();
+        }
+        // The batcher thread owned the only job_tx; its exit disconnects
+        // the worker's queue.
+        if let Some(t) = self.worker_thread.take() {
+            let _ = t.join();
+        }
+    }
+}

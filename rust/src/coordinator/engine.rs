@@ -1,0 +1,165 @@
+//! The per-shard query engine: ALSH index + exact rerank + metrics.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::index::{AlshIndex, AlshParams, ScoredItem};
+
+use super::metrics::Metrics;
+
+/// A self-contained MIPS engine over one item collection.
+///
+/// The pure-Rust request path (`query`) is used per-shard by the router;
+/// the PJRT-accelerated path hashes whole batches through the AOT
+/// artifact (see `batcher`) and re-enters here via `query_with_codes`.
+pub struct MipsEngine {
+    index: AlshIndex,
+    metrics: Arc<Metrics>,
+}
+
+impl MipsEngine {
+    pub fn new(items: &[Vec<f32>], params: AlshParams, seed: u64) -> Self {
+        Self {
+            index: AlshIndex::build(items, params, seed),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn from_index(index: AlshIndex) -> Self {
+        Self { index, metrics: Arc::new(Metrics::new()) }
+    }
+
+    pub fn index(&self) -> &AlshIndex {
+        &self.index
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Pure-Rust query path: Q-transform + hash + probe + exact rerank.
+    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+        let t0 = Instant::now();
+        let cands = self.index.candidates(query);
+        let n_cands = cands.len();
+        let out = self.index.rerank(query, &cands, top_k);
+        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+        out
+    }
+
+    /// PJRT path re-entry: the batcher already ran the `alsh_query`
+    /// artifact and hands us this query's `[L*K]` code row.
+    pub fn query_with_codes(&self, query: &[f32], codes: &[i32], top_k: usize) -> Vec<ScoredItem> {
+        let t0 = Instant::now();
+        let cands = self.index.candidates_from_codes(codes);
+        let n_cands = cands.len();
+        let out = self.index.rerank(query, &cands, top_k);
+        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+        out
+    }
+
+    /// The flat `(a, b)` artifact inputs spanning all L tables: columns
+    /// `t*K..(t+1)*K` of `a` are table t's family, zero-padded up to
+    /// `k_total` columns (the artifact's fixed K).
+    pub fn concat_family_inputs(&self, k_total: usize) -> (Vec<f32>, Vec<f32>) {
+        let p = self.index.params();
+        let dp = self.index.dim() + p.m;
+        let l = p.n_tables;
+        let k = p.k_per_table;
+        assert!(
+            l * k <= k_total,
+            "index needs {} hashes > artifact capacity {k_total}",
+            l * k
+        );
+        let mut a = vec![0.0f32; dp * k_total];
+        let mut b = vec![0.0f32; k_total];
+        for (t, fam) in self.index.families().iter().enumerate() {
+            let fam_a = fam.a_matrix_dk(); // [dp, k]
+            for d in 0..dp {
+                for j in 0..k {
+                    a[d * k_total + t * k + j] = fam_a[d * k + j];
+                }
+            }
+            b[t * k..(t + 1) * k].copy_from_slice(fam.b_vector());
+        }
+        (a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::q_transform;
+    use crate::util::Rng;
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let s = 0.2 + 2.0 * (i as f32 / n as f32);
+                (0..d).map(|_| (rng.f32() - 0.5) * s).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn query_records_metrics() {
+        let eng = MipsEngine::new(&items(200, 8, 1), AlshParams::default(), 2);
+        let _ = eng.query(&vec![0.5; 8], 5);
+        let _ = eng.query(&vec![-0.25; 8], 5);
+        let s = eng.metrics().snapshot();
+        assert_eq!(s.queries, 2);
+    }
+
+    #[test]
+    fn codes_path_equals_inline_path() {
+        let eng = MipsEngine::new(&items(300, 8, 3), AlshParams::default(), 4);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.61).cos()).collect();
+        // Reproduce the batcher's code layout with the pure-Rust family.
+        let qx = q_transform(&q, eng.index().params().m);
+        let mut codes = Vec::new();
+        for fam in eng.index().families() {
+            fam.hash_into(&qx, &mut codes);
+        }
+        let a = eng.query(&q, 10);
+        let b = eng.query_with_codes(&q, &codes, 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concat_inputs_reproduce_per_family_codes() {
+        // Hashing with the concatenated (a, b) must give, per column
+        // block, the same codes as each family separately.
+        let eng = MipsEngine::new(&items(50, 6, 5), AlshParams::default(), 6);
+        let p = *eng.index().params();
+        let dp = 6 + p.m;
+        let k_total = 512;
+        let (a, b) = eng.concat_family_inputs(k_total);
+        let q: Vec<f32> = (0..6).map(|i| 0.1 * i as f32).collect();
+        let qx = q_transform(&q, p.m);
+        // Manual matmul: code_j = floor(sum_d qx[d] * a[d, j] + b[j])
+        for (t, fam) in eng.index().families().iter().enumerate() {
+            let want = fam.hash(&qx);
+            for j in 0..p.k_per_table {
+                let col = t * p.k_per_table + j;
+                let mut acc = 0.0f32;
+                for d in 0..dp {
+                    acc += qx[d] * a[d * k_total + col];
+                }
+                let code = (acc + b[col]).floor() as i32;
+                assert_eq!(code, want[j], "table {t} hash {j}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn concat_overflow_panics() {
+        let eng = MipsEngine::new(
+            &items(10, 4, 7),
+            AlshParams { n_tables: 100, k_per_table: 8, ..Default::default() },
+            8,
+        );
+        let _ = eng.concat_family_inputs(512);
+    }
+}

@@ -1,0 +1,149 @@
+//! Serving metrics: counters + a log-bucketed latency histogram, all
+//! lock-free atomics so the hot path never blocks on observability.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 latency buckets: bucket i covers [2^i, 2^(i+1)) µs.
+const N_BUCKETS: usize = 24;
+
+/// Process-wide serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queries: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    pub candidates: AtomicU64,
+    pub errors: AtomicU64,
+    latency_us: [AtomicU64; N_BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served query with its end-to-end latency and candidate
+    /// count.
+    pub fn record_query(&self, latency_us: u64, n_candidates: usize) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.candidates.fetch_add(n_candidates as u64, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(N_BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dispatched batch of `n` queries.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let queries = self.queries.load(Ordering::Relaxed);
+        let hist: Vec<u64> =
+            self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        MetricsSnapshot {
+            queries,
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            candidates: self.candidates.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency_us: if queries > 0 {
+                self.latency_sum_us.load(Ordering::Relaxed) as f64 / queries as f64
+            } else {
+                0.0
+            },
+            p50_latency_us: percentile(&hist, 0.50),
+            p99_latency_us: percentile(&hist, 0.99),
+        }
+    }
+}
+
+fn percentile(hist: &[u64], p: f64) -> u64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64) * p).ceil() as u64;
+    let mut seen = 0;
+    for (i, &c) in hist.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return 1u64 << i; // lower bound of the bucket
+        }
+    }
+    1u64 << (hist.len() - 1)
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub batched_queries: u64,
+    pub candidates: u64,
+    pub errors: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean batch occupancy (dynamic-batching effectiveness).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_queries as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_mean() {
+        let m = Metrics::new();
+        m.record_query(100, 5);
+        m.record_query(300, 15);
+        let s = m.snapshot();
+        assert_eq!(s.queries, 2);
+        assert_eq!(s.candidates, 20);
+        assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for i in 0..1000u64 {
+            m.record_query(i + 1, 0);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_latency_us <= s.p99_latency_us);
+        assert!(s.p50_latency_us >= 256, "p50 {}", s.p50_latency_us);
+        assert!(s.p99_latency_us >= 512, "p99 {}", s.p99_latency_us);
+    }
+
+    #[test]
+    fn batch_occupancy() {
+        let m = Metrics::new();
+        m.record_batch(10);
+        m.record_batch(20);
+        assert!((m.snapshot().mean_batch_size() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.p50_latency_us, 0);
+        assert_eq!(s.mean_latency_us, 0.0);
+    }
+}

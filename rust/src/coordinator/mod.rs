@@ -1,0 +1,29 @@
+//! Layer-3 coordinator: the MIPS serving system.
+//!
+//! Shape (vLLM-router-like, scaled to this paper):
+//!
+//! ```text
+//!  TCP/JSON clients ──► server ──► dynamic batcher ──► PJRT worker thread
+//!                                        │                (hash artifact)
+//!                                        ▼
+//!                              per-query bucket probes ──► exact rerank
+//!                                        │
+//!  sharded corpora:  router ──► shard engines ──► scatter/gather merge
+//! ```
+//!
+//! Python never appears here: hashing runs through the AOT artifacts via
+//! PJRT on a dedicated worker thread (PJRT handles are not `Send`), and
+//! table probing + reranking are pure Rust. Concurrency is std threads +
+//! channels (the offline build has no async runtime; see Cargo.toml).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, BatcherHandle, PjrtBatcher};
+pub use engine::MipsEngine;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::ShardedRouter;
+pub use server::{serve, serve_on, ServeConfig};

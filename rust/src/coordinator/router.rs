@@ -1,0 +1,140 @@
+//! Sharded scatter/gather router — §3.7 ("Parallelization") of the paper:
+//! each node keeps its own hash tables over an item shard; a query fans
+//! out, each shard answers locally, and the final top-k is a cheap merge.
+
+use crate::index::{AlshParams, ScoredItem};
+
+use super::engine::MipsEngine;
+
+/// A collection of shard engines with global-id translation.
+pub struct ShardedRouter {
+    shards: Vec<MipsEngine>,
+    /// Global id of shard s's local item 0.
+    offsets: Vec<u32>,
+    dim: usize,
+}
+
+impl ShardedRouter {
+    /// Split `items` into `n_shards` contiguous shards and build one
+    /// engine per shard (distinct hash seeds per shard, as each "node"
+    /// maintains its own hash functions).
+    pub fn build(items: &[Vec<f32>], n_shards: usize, params: AlshParams, seed: u64) -> Self {
+        assert!(n_shards >= 1 && !items.is_empty());
+        let dim = items[0].len();
+        let per = items.len().div_ceil(n_shards);
+        let mut shards = Vec::new();
+        let mut offsets = Vec::new();
+        for (s, chunk) in items.chunks(per).enumerate() {
+            offsets.push((s * per) as u32);
+            shards.push(MipsEngine::new(chunk, params, seed.wrapping_add(s as u64)));
+        }
+        Self { shards, offsets, dim }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, s: usize) -> &MipsEngine {
+        &self.shards[s]
+    }
+
+    /// Scatter the query to all shards, gather local top-k lists, merge to
+    /// the global top-k. The merge communicates only `k` scored ids per
+    /// shard — the "one single number per node" economics of §3.7.
+    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+        assert_eq!(query.len(), self.dim);
+        let mut merged: Vec<ScoredItem> = Vec::with_capacity(top_k * self.shards.len());
+        for (engine, &off) in self.shards.iter().zip(&self.offsets) {
+            for hit in engine.query(query, top_k) {
+                merged.push(ScoredItem { id: hit.id + off, score: hit.score });
+            }
+        }
+        merged.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        merged.truncate(top_k);
+        merged
+    }
+
+    /// Total queries served across shards.
+    pub fn total_queries(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics().snapshot().queries).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::dot;
+    use crate::util::Rng;
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let s = 0.2 + 2.0 * (i as f32 / n as f32);
+                (0..d).map(|_| (rng.f32() - 0.5) * s).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn global_ids_score_correctly() {
+        let its = items(400, 8, 1);
+        let router = ShardedRouter::build(&its, 4, AlshParams::default(), 2);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32).sin()).collect();
+        for hit in router.query(&q, 10) {
+            let want = dot(&q, &its[hit.id as usize]);
+            assert!((hit.score - want).abs() < 1e-6, "global id mis-translated");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_single_shard_quality() {
+        // With generous tables both configurations find the exact top-1
+        // almost always; sharding must not lose it (it only adds tables).
+        let its = items(600, 12, 3);
+        let params = AlshParams { n_tables: 48, k_per_table: 4, ..Default::default() };
+        let sharded = ShardedRouter::build(&its, 3, params, 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let mut hits = 0;
+        for _ in 0..30 {
+            let q: Vec<f32> = (0..12).map(|_| rng.f32() - 0.5).collect();
+            let want = (0..its.len())
+                .max_by(|&a, &b| dot(&its[a], &q).partial_cmp(&dot(&its[b], &q)).unwrap())
+                .unwrap() as u32;
+            if sharded.query(&q, 10).iter().any(|h| h.id == want) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 27, "sharded top-1 recall {hits}/30");
+    }
+
+    #[test]
+    fn merge_is_globally_sorted() {
+        let its = items(300, 6, 6);
+        let router = ShardedRouter::build(&its, 5, AlshParams::default(), 7);
+        let out = router.query(&vec![0.4; 6], 15);
+        for w in out.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn single_shard_degenerates_gracefully() {
+        let its = items(100, 4, 8);
+        let router = ShardedRouter::build(&its, 1, AlshParams::default(), 9);
+        assert_eq!(router.n_shards(), 1);
+        assert!(!router.query(&vec![0.1; 4], 5).is_empty());
+    }
+
+    #[test]
+    fn uneven_shard_sizes() {
+        let its = items(101, 4, 10);
+        let router = ShardedRouter::build(&its, 4, AlshParams::default(), 11);
+        // 101 items over 4 shards: 26+26+26+23
+        assert_eq!(router.n_shards(), 4);
+        let out = router.query(&vec![0.2; 4], 101);
+        // Every returned id must be in range.
+        assert!(out.iter().all(|h| (h.id as usize) < 101));
+    }
+}

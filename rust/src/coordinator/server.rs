@@ -1,0 +1,147 @@
+//! JSON-lines TCP front end (std::net + a thread per connection).
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"vector": [0.1, ...], "top_k": 10}
+//! ← {"ok": true, "items": [5, 2], "scores": [1.9, 1.2], "latency_us": 830}
+//! → {"cmd": "metrics"}
+//! ← {"ok": true, "metrics": {...}}
+//! → {"cmd": "ping"}
+//! ← {"ok": true}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::{num_arr, obj, Json};
+
+use super::batcher::BatcherHandle;
+use super::engine::MipsEngine;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7878".into() }
+    }
+}
+
+fn err_response(msg: impl Into<String>) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+/// Handle one JSON-lines request string. Pure function over the request
+/// text — directly unit/integration testable without sockets.
+pub fn handle_request(line: &str, handle: &BatcherHandle, engine: &Arc<MipsEngine>) -> Json {
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => return err_response(format!("bad request: {e}")),
+    };
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("ping") => obj(vec![("ok", Json::Bool(true))]),
+        Some("metrics") => {
+            let s = engine.metrics().snapshot();
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "metrics",
+                    obj(vec![
+                        ("queries", Json::Num(s.queries as f64)),
+                        ("batches", Json::Num(s.batches as f64)),
+                        ("batched_queries", Json::Num(s.batched_queries as f64)),
+                        ("candidates", Json::Num(s.candidates as f64)),
+                        ("errors", Json::Num(s.errors as f64)),
+                        ("mean_latency_us", Json::Num(s.mean_latency_us)),
+                        ("p50_latency_us", Json::Num(s.p50_latency_us as f64)),
+                        ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
+                        ("mean_batch_size", Json::Num(s.mean_batch_size())),
+                    ]),
+                ),
+            ])
+        }
+        Some(other) => err_response(format!("unknown cmd {other:?}")),
+        None => {
+            let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
+                return err_response("missing or malformed vector");
+            };
+            if vector.len() != engine.index().dim() {
+                return err_response(format!(
+                    "vector dim {} != index dim {}",
+                    vector.len(),
+                    engine.index().dim()
+                ));
+            }
+            let top_k = req.get("top_k").and_then(Json::as_usize).unwrap_or(10);
+            let t0 = Instant::now();
+            match handle.query(vector, top_k) {
+                Ok(hits) => {
+                    let ids: Vec<f64> = hits.iter().map(|h| h.id as f64).collect();
+                    let scores: Vec<f64> = hits.iter().map(|h| h.score as f64).collect();
+                    obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("items", num_arr(&ids)),
+                        ("scores", num_arr(&scores)),
+                        (
+                            "latency_us",
+                            Json::Num(t0.elapsed().as_micros() as f64),
+                        ),
+                    ])
+                }
+                Err(e) => err_response(format!("{e:#}")),
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handle: BatcherHandle,
+    engine: Arc<MipsEngine>,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_request(&line, &handle, &engine);
+        let mut out = resp.to_string();
+        out.push('\n');
+        writer.write_all(out.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Bind `cfg.addr` and serve forever (thread per connection).
+pub fn serve(cfg: ServeConfig, handle: BatcherHandle, engine: Arc<MipsEngine>) -> crate::Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    crate::log_info!("serving MIPS on {}", cfg.addr);
+    serve_on(listener, handle, engine)
+}
+
+/// Accept loop over an existing listener (testable entry point).
+pub fn serve_on(
+    listener: TcpListener,
+    handle: BatcherHandle,
+    engine: Arc<MipsEngine>,
+) -> crate::Result<()> {
+    loop {
+        let (stream, peer) = listener.accept()?;
+        crate::log_debug!("connection from {peer}");
+        let h = handle.clone();
+        let e = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            if let Err(err) = handle_conn(stream, h, e) {
+                crate::log_warn!("connection error: {err}");
+            }
+        });
+    }
+}

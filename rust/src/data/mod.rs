@@ -1,0 +1,41 @@
+//! Data pipeline: ratings matrices, synthetic generators, and the PureSVD
+//! latent-factor pipeline (§4.1 of the paper).
+//!
+//! The paper evaluates on Netflix (480k users × 17k items, 100M ratings)
+//! and Movielens-10M (70k users × 10k items). Those raw datasets are not
+//! redistributable; per DESIGN.md §5 we substitute seeded synthetic
+//! ratings with the same *structure* (low-rank preference signal +
+//! power-law item popularity + noise) and run the identical PureSVD
+//! pipeline on top, so the item vectors we index have the wide norm
+//! spread that makes MIPS ≠ NNS.
+
+pub mod puresvd;
+pub mod ratings;
+pub mod synthetic;
+
+pub use puresvd::{pure_svd, LatentFactors};
+pub use ratings::RatingsMatrix;
+pub use synthetic::{SyntheticConfig, SyntheticRatings};
+
+/// A fully prepared MIPS evaluation dataset: PureSVD user (query) and item
+/// vectors.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub users: Vec<Vec<f32>>,
+    pub items: Vec<Vec<f32>>,
+    pub latent_dim: usize,
+}
+
+/// Run the full §4.1 pipeline for a dataset config: synthetic ratings →
+/// PureSVD → user/item characteristic vectors.
+pub fn generate_dataset(cfg: &crate::config::DatasetConfig) -> crate::Result<Dataset> {
+    let synth = synthetic::generate(&cfg.synthetic, cfg.seed);
+    let lf = pure_svd(&synth.ratings, cfg.latent_dim, cfg.seed ^ 0x53_56_44);
+    Ok(Dataset {
+        name: cfg.name.clone(),
+        users: lf.users,
+        items: lf.items,
+        latent_dim: lf.f,
+    })
+}

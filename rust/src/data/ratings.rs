@@ -1,0 +1,151 @@
+//! Sparse user–item ratings matrix.
+
+use crate::linalg::Csr;
+
+/// A sparse ratings matrix: `(user, item, rating)` triplets with dims.
+#[derive(Clone, Debug)]
+pub struct RatingsMatrix {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub triplets: Vec<(u32, u32, f32)>,
+}
+
+impl RatingsMatrix {
+    pub fn new(n_users: usize, n_items: usize) -> Self {
+        Self { n_users, n_items, triplets: Vec::new() }
+    }
+
+    pub fn push(&mut self, user: usize, item: usize, rating: f32) {
+        debug_assert!(user < self.n_users && item < self.n_items);
+        self.triplets.push((user as u32, item as u32, rating));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.triplets.len()
+    }
+
+    /// Density of the matrix (nnz / (users*items)).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_users as f64 * self.n_items as f64)
+    }
+
+    /// Convert to CSR for the SVD pipeline.
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_triplets(
+            self.n_users,
+            self.n_items,
+            self.triplets.iter().map(|&(u, i, r)| (u as usize, i as usize, r as f64)),
+        )
+    }
+
+    /// Per-item rating counts (popularity profile).
+    pub fn item_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_items];
+        for &(_, i, _) in &self.triplets {
+            counts[i as usize] += 1;
+        }
+        counts
+    }
+
+    /// Mean rating.
+    pub fn mean_rating(&self) -> f64 {
+        if self.triplets.is_empty() {
+            return 0.0;
+        }
+        self.triplets.iter().map(|&(_, _, r)| r as f64).sum::<f64>() / self.nnz() as f64
+    }
+
+    /// Parse MovieLens-style `userId::movieId::rating::timestamp` (or
+    /// comma/tab separated) lines into a ratings matrix, remapping ids
+    /// densely. Supports plugging in the *real* datasets when available.
+    pub fn parse_movielens(text: &str) -> anyhow::Result<Self> {
+        use std::collections::HashMap;
+        let mut user_map: HashMap<&str, usize> = HashMap::new();
+        let mut item_map: HashMap<&str, usize> = HashMap::new();
+        let mut triplets = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with("userId") {
+                continue;
+            }
+            let fields: Vec<&str> = if line.contains("::") {
+                line.split("::").collect()
+            } else if line.contains(',') {
+                line.split(',').collect()
+            } else {
+                line.split_whitespace().collect()
+            };
+            if fields.len() < 3 {
+                anyhow::bail!("line {}: expected >=3 fields, got {line:?}", lineno + 1);
+            }
+            let nu = user_map.len();
+            let u = *user_map.entry(fields[0]).or_insert(nu);
+            let ni = item_map.len();
+            let i = *item_map.entry(fields[1]).or_insert(ni);
+            let r: f32 = fields[2]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad rating: {e}", lineno + 1))?;
+            triplets.push((u as u32, i as u32, r));
+        }
+        Ok(Self { n_users: user_map.len(), n_items: item_map.len(), triplets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accounting() {
+        let mut r = RatingsMatrix::new(3, 4);
+        r.push(0, 1, 5.0);
+        r.push(1, 1, 3.0);
+        r.push(2, 3, 1.0);
+        assert_eq!(r.nnz(), 3);
+        assert_eq!(r.item_counts(), vec![0, 2, 0, 1]);
+        assert!((r.mean_rating() - 3.0).abs() < 1e-9);
+        assert!((r.density() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let mut r = RatingsMatrix::new(2, 2);
+        r.push(0, 0, 4.0);
+        r.push(1, 1, 2.0);
+        let csr = r.to_csr();
+        let d = csr.to_dense();
+        assert_eq!(d[(0, 0)], 4.0);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn parse_movielens_double_colon() {
+        let text = "1::10::5::978300760\n2::10::3::978302109\n1::20::4::978301968\n";
+        let r = RatingsMatrix::parse_movielens(text).unwrap();
+        assert_eq!(r.n_users, 2);
+        assert_eq!(r.n_items, 2);
+        assert_eq!(r.nnz(), 3);
+    }
+
+    #[test]
+    fn parse_movielens_csv_with_header() {
+        let text = "userId,movieId,rating,timestamp\n1,10,4.5,123\n3,11,2.0,124\n";
+        let r = RatingsMatrix::parse_movielens(text).unwrap();
+        assert_eq!(r.n_users, 2);
+        assert_eq!(r.n_items, 2);
+        assert_eq!(r.triplets[0].2, 4.5);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(RatingsMatrix::parse_movielens("1::2\n").is_err());
+        assert!(RatingsMatrix::parse_movielens("a,b,notanumber\n").is_err());
+    }
+
+    #[test]
+    fn empty_matrix_mean_is_zero() {
+        let r = RatingsMatrix::new(5, 5);
+        assert_eq!(r.mean_rating(), 0.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Seeded synthetic ratings generators standing in for Netflix/Movielens.
+//!
+//! What ALSH's experiments actually require from the data (per §1, §4 of
+//! the paper) is that the PureSVD item vectors have *widely varying norms*
+//! correlated with item popularity — that is exactly why MIPS ordering
+//! differs from L2/cosine ordering and why L2LSH underperforms. The
+//! generator below produces that structure:
+//!
+//! 1. Ground-truth user/item latent factors of rank `true_rank`, with item
+//!    factor magnitudes drawn from a Zipf-like power law (popular items
+//!    have larger factors *and* receive more ratings — as in real CF data).
+//! 2. Observed ratings `r = clip(round(mu + b_u + b_i + u·v + noise))` on a
+//!    1..5 scale.
+//! 3. Sampling: each user rates a popularity-biased random subset.
+
+use crate::util::Rng;
+
+use super::ratings::RatingsMatrix;
+
+/// Configuration of the synthetic ratings generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    pub n_users: usize,
+    pub n_items: usize,
+    /// Rank of the ground-truth preference matrix.
+    pub true_rank: usize,
+    /// Average number of ratings per user.
+    pub ratings_per_user: usize,
+    /// Zipf exponent for item popularity (1.0 ≈ real CF skew).
+    pub popularity_exponent: f64,
+    /// Std-dev of observation noise on the 1–5 rating scale.
+    pub noise: f64,
+    /// Global mean rating.
+    pub mu: f64,
+}
+
+impl SyntheticConfig {
+    /// Movielens-10M-like shape, users subsampled to fit the testbed
+    /// (DESIGN.md §5): 10k items (full), f=150 downstream latent dim.
+    pub fn movielens_like() -> Self {
+        Self {
+            n_users: 4000,
+            n_items: 10_000,
+            true_rank: 40,
+            ratings_per_user: 100,
+            popularity_exponent: 1.0,
+            noise: 0.6,
+            mu: 3.5,
+        }
+    }
+
+    /// Netflix-like shape, users subsampled: 17k items (full), f=300.
+    pub fn netflix_like() -> Self {
+        Self {
+            n_users: 5000,
+            n_items: 17_000,
+            true_rank: 60,
+            ratings_per_user: 120,
+            popularity_exponent: 1.1,
+            noise: 0.7,
+            mu: 3.6,
+        }
+    }
+
+    /// A tiny config for unit tests and the quickstart example.
+    pub fn tiny() -> Self {
+        Self {
+            n_users: 200,
+            n_items: 500,
+            true_rank: 8,
+            ratings_per_user: 30,
+            popularity_exponent: 1.0,
+            noise: 0.5,
+            mu: 3.5,
+        }
+    }
+}
+
+/// Generated ratings plus the ground truth used to create them.
+pub struct SyntheticRatings {
+    pub ratings: RatingsMatrix,
+    pub config: SyntheticConfig,
+    /// Ground-truth item popularity weights (for diagnostics/tests).
+    pub popularity: Vec<f64>,
+}
+
+/// Alias sampler over a discrete distribution (Walker's method) — used to
+/// draw popularity-biased items in O(1) per sample.
+struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let sum: f64 = weights.iter().sum();
+        assert!(sum > 0.0);
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / sum).collect();
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        // NOTE: do not pop both sides in one tuple pattern — if one side is
+        // empty the other side's popped element would be silently dropped.
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = large.pop().unwrap();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        for i in large {
+            prob[i] = 1.0;
+        }
+        for i in small {
+            prob[i] = 1.0;
+        }
+        Self { prob, alias }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+/// Generate a synthetic ratings matrix per `config`, fully determined by
+/// `seed`.
+pub fn generate(config: &SyntheticConfig, seed: u64) -> SyntheticRatings {
+    let mut rng = Rng::seed_from_u64(seed);
+    let f = config.true_rank;
+    // Item popularity: Zipf over a random permutation of ranks.
+    let mut ranks: Vec<usize> = (0..config.n_items).collect();
+    // Fisher-Yates with the seeded rng so popularity is not id-ordered.
+    rng.shuffle(&mut ranks);
+    let popularity: Vec<f64> = (0..config.n_items)
+        .map(|i| 1.0 / ((ranks[i] + 1) as f64).powf(config.popularity_exponent))
+        .collect();
+
+    // Latent factors. Item factor magnitude grows with popularity:
+    // v_i = n(0,1)^f * (0.4 + 1.6 * pop_scale_i), giving a wide norm spread.
+    let max_pop = popularity.iter().cloned().fold(f64::MIN, f64::max);
+    let item_factors: Vec<Vec<f64>> = (0..config.n_items)
+        .map(|i| {
+            let scale = 0.4 + 1.6 * (popularity[i] / max_pop).powf(0.35);
+            (0..f)
+                .map(|_| rng.normal_f64() * scale / (f as f64).sqrt())
+                .collect()
+        })
+        .collect();
+    let user_factors: Vec<Vec<f64>> = (0..config.n_users)
+        .map(|_| {
+            (0..f)
+                .map(|_| rng.normal_f64() / (f as f64).sqrt())
+                .collect()
+        })
+        .collect();
+    let user_bias: Vec<f64> =
+        (0..config.n_users).map(|_| rng.normal_f64() * 0.3).collect();
+    let item_bias: Vec<f64> = (0..config.n_items)
+        .map(|i| 0.4 * (popularity[i] / max_pop).ln().max(-2.0) * 0.3
+            + rng.normal_f64() * 0.2)
+        .collect();
+
+    let alias = AliasTable::new(&popularity);
+    let mut ratings = RatingsMatrix::new(config.n_users, config.n_items);
+    let mut seen: Vec<u64> = Vec::new();
+    for u in 0..config.n_users {
+        seen.clear();
+        // Per-user count varies ±50% around the mean.
+        let k =
+            ((config.ratings_per_user as f64) * (0.5 + rng.f64())).round() as usize;
+        let mut tries = 0;
+        while seen.len() < k.min(config.n_items) && tries < 20 * k {
+            tries += 1;
+            let i = alias.sample(&mut rng);
+            let key = i as u64;
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            let pref: f64 = user_factors[u]
+                .iter()
+                .zip(&item_factors[i])
+                .map(|(a, b)| a * b)
+                .sum::<f64>()
+                * 4.0; // spread the signal over the rating scale
+            let noise: f64 = rng.normal_f64() * config.noise;
+            let raw = config.mu + user_bias[u] + item_bias[i] + pref + noise;
+            let r = (raw * 2.0).round() / 2.0; // half-star increments
+            ratings.push(u, i, r.clamp(1.0, 5.0) as f32);
+        }
+    }
+    SyntheticRatings { ratings, config: config.clone(), popularity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SyntheticConfig::tiny();
+        let a = generate(&cfg, 7);
+        let b = generate(&cfg, 7);
+        assert_eq!(a.ratings.triplets, b.ratings.triplets);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = SyntheticConfig::tiny();
+        let a = generate(&cfg, 1);
+        let b = generate(&cfg, 2);
+        assert_ne!(a.ratings.triplets, b.ratings.triplets);
+    }
+
+    #[test]
+    fn ratings_on_scale() {
+        let r = generate(&SyntheticConfig::tiny(), 3);
+        for &(_, _, v) in &r.ratings.triplets {
+            assert!((1.0..=5.0).contains(&v), "rating {v} off scale");
+            // half-star increments
+            let doubled = v * 2.0;
+            assert!((doubled - doubled.round()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let r = generate(&SyntheticConfig::tiny(), 4);
+        let counts = r.ratings.item_counts();
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = sorted.iter().sum();
+        let top10pct: usize = sorted[..sorted.len() / 10].iter().sum();
+        // Power-law: top 10% of items get a large share of ratings.
+        assert!(
+            top10pct as f64 > 0.3 * total as f64,
+            "top-10% share = {}",
+            top10pct as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn no_duplicate_user_item_pairs() {
+        let r = generate(&SyntheticConfig::tiny(), 5);
+        let mut pairs: Vec<(u32, u32)> =
+            r.ratings.triplets.iter().map(|&(u, i, _)| (u, i)).collect();
+        let n = pairs.len();
+        pairs.sort_unstable();
+        pairs.dedup();
+        assert_eq!(pairs.len(), n);
+    }
+
+    #[test]
+    fn approx_expected_volume() {
+        let cfg = SyntheticConfig::tiny();
+        let r = generate(&cfg, 6);
+        let expect = cfg.n_users * cfg.ratings_per_user;
+        assert!(r.ratings.nnz() > expect / 2);
+        assert!(r.ratings.nnz() < expect * 2);
+    }
+
+    #[test]
+    fn alias_table_unbiased() {
+        let weights = vec![1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&weights);
+        let mut rng = Rng::seed_from_u64(0);
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let want = weights[i] / 10.0;
+            let got = c as f64 / n as f64;
+            assert!((got - want).abs() < 0.01, "bucket {i}: {got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Exact top-T inner products: the gold standard of §4.3.
+
+use crate::transform::dot;
+
+/// The ids of the `t` items with the largest inner product with `query`,
+/// in descending score order (full scan; this defines ground truth).
+pub fn gold_top_t(items: &[Vec<f32>], query: &[f32], t: usize) -> Vec<u32> {
+    let t = t.min(items.len());
+    if t == 0 {
+        return Vec::new();
+    }
+    // Max-heap by (-score) via a small sorted buffer: t is tiny (<= 10).
+    let mut top: Vec<(f32, u32)> = Vec::with_capacity(t + 1);
+    for (i, item) in items.iter().enumerate() {
+        let s = dot(item, query);
+        if top.len() < t {
+            top.push((s, i as u32));
+            top.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        } else if s > top[t - 1].0 {
+            top[t - 1] = (s, i as u32);
+            let mut j = t - 1;
+            while j > 0 && top[j].0 > top[j - 1].0 {
+                top.swap(j, j - 1);
+                j -= 1;
+            }
+        }
+    }
+    top.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn finds_known_max() {
+        let items = vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![2.0, 2.0]];
+        let got = gold_top_t(&items, &[1.0, 1.0], 2);
+        assert_eq!(got, vec![2, 0]); // ties broken by first-seen (id 0 before 1)
+    }
+
+    #[test]
+    fn matches_full_sort() {
+        let mut rng = Rng::seed_from_u64(1);
+        let items: Vec<Vec<f32>> = (0..200)
+            .map(|_| (0..8).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let q: Vec<f32> = (0..8).map(|_| rng.f32() - 0.5).collect();
+        let got = gold_top_t(&items, &q, 10);
+        let mut all: Vec<(f32, u32)> = items
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (dot(v, &q), i as u32))
+            .collect();
+        all.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let want: Vec<u32> = all[..10].iter().map(|&(_, i)| i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn t_larger_than_corpus() {
+        let items = vec![vec![1.0f32], vec![2.0]];
+        let got = gold_top_t(&items, &[1.0], 10);
+        assert_eq!(got, vec![1, 0]);
+    }
+
+    #[test]
+    fn t_zero() {
+        let items = vec![vec![1.0f32]];
+        assert!(gold_top_t(&items, &[1.0], 0).is_empty());
+    }
+}

@@ -1,0 +1,117 @@
+//! Ranking-quality metrics beyond precision–recall: NDCG@k and Spearman
+//! rank correlation — used by the end-to-end example and ablation benches
+//! to summarize retrieval quality in one scalar.
+
+/// NDCG@k of a ranked id list against graded relevances.
+///
+/// `relevance(id)` returns the gain of an item (e.g. its exact inner
+/// product clamped at 0); the ideal ordering is by descending relevance.
+pub fn ndcg_at_k(ranked: &[u32], k: usize, relevance: impl Fn(u32) -> f64) -> f64 {
+    let k = k.min(ranked.len());
+    if k == 0 {
+        return 0.0;
+    }
+    let dcg: f64 = ranked[..k]
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| relevance(id) / ((i + 2) as f64).log2())
+        .sum();
+    // Ideal DCG: top-k relevances over the *ranked universe*.
+    let mut rels: Vec<f64> = ranked.iter().map(|&id| relevance(id)).collect();
+    rels.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let idcg: f64 =
+        rels[..k].iter().enumerate().map(|(i, r)| r / ((i + 2) as f64).log2()).sum();
+    if idcg <= 0.0 {
+        0.0
+    } else {
+        dcg / idcg
+    }
+}
+
+/// Spearman rank correlation between two total orders over the same ids
+/// (each a permutation of 0..n).
+pub fn spearman(rank_a: &[u32], rank_b: &[u32]) -> f64 {
+    assert_eq!(rank_a.len(), rank_b.len());
+    let n = rank_a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut pos_a = vec![0usize; n];
+    let mut pos_b = vec![0usize; n];
+    for (i, &id) in rank_a.iter().enumerate() {
+        pos_a[id as usize] = i;
+    }
+    for (i, &id) in rank_b.iter().enumerate() {
+        pos_b[id as usize] = i;
+    }
+    let d2: f64 = (0..n)
+        .map(|id| {
+            let d = pos_a[id] as f64 - pos_b[id] as f64;
+            d * d
+        })
+        .sum();
+    1.0 - 6.0 * d2 / (n as f64 * (n as f64 * n as f64 - 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_ndcg_is_one() {
+        let rels = [5.0, 4.0, 3.0, 2.0, 1.0];
+        let ranked: Vec<u32> = (0..5).collect();
+        let v = ndcg_at_k(&ranked, 5, |id| rels[id as usize]);
+        assert!((v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reversed_ranking_ndcg_below_one() {
+        let rels = [5.0, 4.0, 3.0, 2.0, 1.0];
+        let ranked: Vec<u32> = (0..5).rev().collect();
+        let v = ndcg_at_k(&ranked, 5, |id| rels[id as usize]);
+        assert!(v < 0.8, "reversed NDCG {v}");
+        assert!(v > 0.0);
+    }
+
+    #[test]
+    fn ndcg_k_truncates() {
+        let rels = [0.0, 10.0];
+        // relevant item at position 2, k=1 → dcg 0.
+        let v = ndcg_at_k(&[0, 1], 1, |id| rels[id as usize]);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn ndcg_zero_relevance_is_zero() {
+        assert_eq!(ndcg_at_k(&[0, 1, 2], 3, |_| 0.0), 0.0);
+    }
+
+    #[test]
+    fn spearman_identity_and_reverse() {
+        let a: Vec<u32> = (0..100).collect();
+        let b: Vec<u32> = (0..100).rev().collect();
+        assert!((spearman(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((spearman(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_random_near_zero() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(1);
+        let a: Vec<u32> = (0..1000).collect();
+        let mut b = a.clone();
+        rng.shuffle(&mut b);
+        let s = spearman(&a, &b);
+        assert!(s.abs() < 0.1, "random spearman {s}");
+    }
+
+    #[test]
+    fn spearman_small_perturbation_high() {
+        let a: Vec<u32> = (0..50).collect();
+        let mut b = a.clone();
+        b.swap(0, 1);
+        b.swap(10, 11);
+        assert!(spearman(&a, &b) > 0.99);
+    }
+}

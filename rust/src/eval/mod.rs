@@ -1,0 +1,11 @@
+//! Evaluation harness: gold-standard top-T, precision–recall curves
+//! (Eq. 22), and averaging across users — the measurement machinery of
+//! Figures 5–7.
+
+pub mod gold;
+pub mod metrics;
+pub mod pr;
+
+pub use gold::gold_top_t;
+pub use metrics::{ndcg_at_k, spearman};
+pub use pr::{average_curves, pr_curve, PrCurve};

@@ -1,0 +1,105 @@
+//! Precision–recall curves per §4.3 / Eq. 22.
+//!
+//! Walking down the ranked list, at rank k having seen `rel` of the T gold
+//! items: precision = rel / k, recall = rel / T. We record the curve at
+//! each of the T recall levels (i.e. at the rank where the j-th gold item
+//! is found), which makes curves from different users directly averageable
+//! point-by-point — the paper averages over 2000 random users.
+
+/// A precision–recall curve sampled at the T recall levels 1/T .. T/T.
+#[derive(Clone, Debug)]
+pub struct PrCurve {
+    /// recall\[j\] = (j+1)/T.
+    pub recall: Vec<f64>,
+    /// precision\[j\] = precision at the rank where recall first reaches
+    /// (j+1)/T.
+    pub precision: Vec<f64>,
+}
+
+/// Compute the PR curve of `ranked` against the `gold` set (order of gold
+/// irrelevant). `ranked` must contain every gold id somewhere.
+pub fn pr_curve(ranked: &[u32], gold: &[u32]) -> PrCurve {
+    let t = gold.len();
+    let mut recall = Vec::with_capacity(t);
+    let mut precision = Vec::with_capacity(t);
+    let mut rel = 0usize;
+    for (k0, id) in ranked.iter().enumerate() {
+        if gold.contains(id) {
+            rel += 1;
+            recall.push(rel as f64 / t as f64);
+            precision.push(rel as f64 / (k0 + 1) as f64);
+            if rel == t {
+                break;
+            }
+        }
+    }
+    assert_eq!(rel, t, "ranked list does not contain all gold items");
+    PrCurve { recall, precision }
+}
+
+/// Point-wise average of equal-length PR curves (across users).
+pub fn average_curves(curves: &[PrCurve]) -> PrCurve {
+    assert!(!curves.is_empty());
+    let t = curves[0].recall.len();
+    assert!(curves.iter().all(|c| c.recall.len() == t));
+    let n = curves.len() as f64;
+    let recall = curves[0].recall.clone();
+    let precision = (0..t)
+        .map(|j| curves.iter().map(|c| c.precision[j]).sum::<f64>() / n)
+        .collect();
+    PrCurve { recall, precision }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_has_precision_one() {
+        let c = pr_curve(&[3, 1, 4, 0, 2], &[3, 1, 4]);
+        assert_eq!(c.recall, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+        assert_eq!(c.precision, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn worst_ranking_precision_decays() {
+        // gold items at the very end of a 10-item list
+        let ranked: Vec<u32> = (0..10).collect();
+        let c = pr_curve(&ranked, &[8, 9]);
+        assert!((c.precision[0] - 1.0 / 9.0).abs() < 1e-12);
+        assert!((c.precision[1] - 2.0 / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interleaved() {
+        let c = pr_curve(&[7, 0, 8, 1, 9], &[0, 1]);
+        assert!((c.precision[0] - 0.5).abs() < 1e-12); // found at rank 2
+        assert!((c.precision[1] - 0.5).abs() < 1e-12); // 2 of 4
+    }
+
+    #[test]
+    #[should_panic]
+    fn missing_gold_panics() {
+        let _ = pr_curve(&[1, 2, 3], &[9]);
+    }
+
+    #[test]
+    fn averaging() {
+        let a = PrCurve { recall: vec![0.5, 1.0], precision: vec![1.0, 0.5] };
+        let b = PrCurve { recall: vec![0.5, 1.0], precision: vec![0.0, 0.5] };
+        let avg = average_curves(&[a, b]);
+        assert_eq!(avg.precision, vec![0.5, 0.5]);
+        assert_eq!(avg.recall, vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn precision_monotone_relationship() {
+        // Precision at recall level j is rel/k for increasing k: it can
+        // go up or down, but is always in (0, 1].
+        let ranked: Vec<u32> = (0..100).collect();
+        let c = pr_curve(&ranked, &[0, 50, 99]);
+        for p in &c.precision {
+            assert!(*p > 0.0 && *p <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Regeneration harness for every figure in the paper's evaluation.
+//!
+//! | Figure | Content | Entry point |
+//! |--------|---------|-------------|
+//! | 1 | optimal ρ\* vs c per S0           | `fig1_rho_star`      |
+//! | 2 | optimal m, U, r vs c              | `fig2_optimal_params`|
+//! | 3 | ρ at (m=3, U=0.83, r=2.5) vs ρ\*  | `fig3_recommended`   |
+//! | 4 | collision probability F_r(d)      | `fig4_collision`     |
+//! | 5 | Movielens precision–recall        | `run_pr_figure`      |
+//! | 6 | Netflix precision–recall          | `run_pr_figure`      |
+//! | 7 | ALSH sensitivity to r             | `fig7_r_sensitivity` |
+//! | 8 (ext) | L2-ALSH vs Sign-ALSH ablation | `fig8_sign_ablation` |
+//!
+//! Each function returns CSV-ready rows; the `repro figure N` CLI prints
+//! them and writes `results/figN_*.csv`.
+
+pub mod pr_figs;
+pub mod theory_figs;
+
+pub use pr_figs::{fig7_r_sensitivity, fig8_sign_ablation, run_pr_figure, PrPoint};
+pub use theory_figs::{fig1_rho_star, fig2_optimal_params, fig3_recommended, fig4_collision};
+
+/// Write CSV text (header + rows) to `results/<name>.csv`, creating the
+/// directory if needed. Returns the path written.
+pub fn write_csv(out_dir: &std::path::Path, name: &str, csv: &str) -> crate::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(format!("{name}.csv"));
+    std::fs::write(&path, csv)?;
+    Ok(path)
+}

@@ -1,0 +1,272 @@
+//! Figures 5–7: precision–recall of collision-count ranking on the
+//! (synthetic) Movielens / Netflix PureSVD factors.
+//!
+//! Protocol (§4.3): for each of `n_users` random users, compute the gold
+//! top-T items by exact inner product; hash user + items with K functions;
+//! rank all items by `Matches_j` (Eq. 21); compute precision at each of
+//! the T recall levels; average across users.
+
+use crate::config::{DatasetConfig, PrExperimentConfig};
+use crate::util::Rng;
+use crate::data::{generate_dataset, Dataset};
+use crate::eval::{average_curves, gold_top_t, pr_curve, PrCurve};
+use crate::index::collision::rank_by_counts;
+use crate::index::{CollisionRanker, Scheme};
+
+/// One averaged PR point series (one curve in a paper panel).
+#[derive(Clone, Debug)]
+pub struct PrPoint {
+    pub dataset: String,
+    /// "alsh" or "l2lsh".
+    pub method: String,
+    /// Hash width r used by the scheme.
+    pub r: f32,
+    /// Number of hash functions K.
+    pub k: usize,
+    /// Gold list size T.
+    pub t: usize,
+    pub curve: PrCurve,
+}
+
+impl PrPoint {
+    /// CSV rows `dataset,method,r,k,t,recall,precision` for this curve.
+    pub fn csv_rows(&self) -> String {
+        let mut s = String::new();
+        for (rec, prec) in self.curve.recall.iter().zip(&self.curve.precision) {
+            s.push_str(&format!(
+                "{},{},{},{},{},{rec:.4},{prec:.6}\n",
+                self.dataset, self.method, self.r, self.k, self.t
+            ));
+        }
+        s
+    }
+}
+
+pub const PR_CSV_HEADER: &str = "dataset,method,r,k,t,recall,precision\n";
+
+/// The schemes evaluated in Figures 5–6: ALSH at the recommended operating
+/// point, L2LSH at every r in the sweep.
+fn fig56_schemes(cfg: &PrExperimentConfig) -> Vec<(String, Scheme, f32)> {
+    let mut out = vec![(
+        "alsh".to_string(),
+        Scheme::Alsh { m: cfg.alsh_m },
+        cfg.alsh_r,
+    )];
+    for &r in &cfg.l2lsh_r_values {
+        out.push(("l2lsh".to_string(), Scheme::L2Lsh, r));
+    }
+    out
+}
+
+/// Run the full Figure-5/6 experiment for `ds` (Figure 5 = movielens,
+/// Figure 6 = netflix). Returns one `PrPoint` per (method, r, K, T).
+pub fn run_pr_figure(ds: &DatasetConfig, cfg: &PrExperimentConfig) -> crate::Result<Vec<PrPoint>> {
+    let data = generate_dataset(ds)?;
+    run_pr_on_dataset(&data, ds.name.clone(), cfg, &fig56_schemes(cfg))
+}
+
+/// Figure 7: ALSH only, sweeping r over the same grid, at K = max(K).
+pub fn fig7_r_sensitivity(
+    ds: &DatasetConfig,
+    cfg: &PrExperimentConfig,
+) -> crate::Result<Vec<PrPoint>> {
+    let data = generate_dataset(ds)?;
+    let schemes: Vec<(String, Scheme, f32)> = cfg
+        .l2lsh_r_values
+        .iter()
+        .map(|&r| ("alsh".to_string(), Scheme::Alsh { m: cfg.alsh_m }, r))
+        .collect();
+    let k_max = cfg.k_values.iter().copied().max().unwrap_or(512);
+    let sub = PrExperimentConfig { k_values: vec![k_max], ..cfg.clone() };
+    run_pr_on_dataset(&data, ds.name.clone(), &sub, &schemes)
+}
+
+/// Figure 8 (extension, §5 future work): L2-ALSH vs Sign-ALSH ablation on
+/// the same protocol. Sign-ALSH uses (m=2, U=0.75) per the follow-up
+/// paper's recommendation; r is meaningless for sign hashing.
+pub fn fig8_sign_ablation(
+    ds: &DatasetConfig,
+    cfg: &PrExperimentConfig,
+) -> crate::Result<Vec<PrPoint>> {
+    let data = generate_dataset(ds)?;
+    let schemes = vec![
+        ("alsh".to_string(), Scheme::Alsh { m: cfg.alsh_m }, cfg.alsh_r),
+        ("sign_alsh".to_string(), Scheme::SignAlsh { m: 2 }, 0.0),
+    ];
+    let sub = PrExperimentConfig { alsh_u: cfg.alsh_u, ..cfg.clone() };
+    // Sign-ALSH prefers U=0.75; run it with its own U by a second pass.
+    let mut out = run_pr_on_dataset(
+        &data,
+        ds.name.clone(),
+        &sub,
+        &schemes[..1],
+    )?;
+    let sign_cfg = PrExperimentConfig { alsh_u: 0.75, ..cfg.clone() };
+    out.extend(run_pr_on_dataset(&data, ds.name.clone(), &sign_cfg, &schemes[1..])?);
+    Ok(out)
+}
+
+/// Shared engine for Figures 5–7 over a prepared dataset.
+pub fn run_pr_on_dataset(
+    data: &Dataset,
+    dataset_name: String,
+    cfg: &PrExperimentConfig,
+    schemes: &[(String, Scheme, f32)],
+) -> crate::Result<Vec<PrPoint>> {
+    let items = &data.items;
+    let users = &data.users;
+    anyhow::ensure!(!items.is_empty() && !users.is_empty());
+    let k_max = cfg.k_values.iter().copied().max().unwrap_or(512);
+    let t_max = cfg.t_values.iter().copied().max().unwrap_or(10);
+
+    // Sample the evaluation users once, shared across schemes.
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut user_ids: Vec<usize> = (0..users.len()).collect();
+    rng.shuffle(&mut user_ids);
+    user_ids.truncate(cfg.n_users.min(users.len()));
+
+    // Gold top-T per user (T = t_max prefix covers all smaller T).
+    let gold: Vec<Vec<u32>> = user_ids
+        .iter()
+        .map(|&u| gold_top_t(items, &users[u], t_max))
+        .collect();
+
+    // Bulk item hashing goes through the compiled L1 artifact when
+    // available (EXPERIMENTS.md §Perf); scalar fallback otherwise.
+    let mut runtime = crate::runtime::Runtime::load("artifacts").ok();
+    let mut out = Vec::new();
+    for (method, scheme, r) in schemes {
+        let ranker = match runtime.as_mut() {
+            Some(rt) => CollisionRanker::build_pjrt(
+                items, *scheme, k_max, *r, cfg.alsh_u, cfg.seed ^ 0x5157, rt,
+            ),
+            None => {
+                CollisionRanker::build(items, *scheme, k_max, *r, cfg.alsh_u, cfg.seed ^ 0x5157)
+            }
+        };
+        // curves[ki][ti] accumulates per-user curves.
+        let mut curves: Vec<Vec<Vec<PrCurve>>> =
+            vec![vec![Vec::new(); cfg.t_values.len()]; cfg.k_values.len()];
+        // K-values must be ascending for the incremental sweep; sort a
+        // copy and remember the permutation back to cfg order.
+        let mut k_sorted: Vec<(usize, usize)> =
+            cfg.k_values.iter().copied().enumerate().collect();
+        k_sorted.sort_unstable_by_key(|&(_, k)| k);
+        let ks: Vec<usize> = k_sorted.iter().map(|&(_, k)| k).collect();
+        for (ui, &u) in user_ids.iter().enumerate() {
+            let qc = ranker.query_codes(&users[u]);
+            let swept = ranker.matches_at_ks(&qc, &ks);
+            for (si, &(ki, k)) in k_sorted.iter().enumerate() {
+                let ids = rank_by_counts(&swept[si], k.min(ranker.k()));
+                for (ti, &t) in cfg.t_values.iter().enumerate() {
+                    curves[ki][ti].push(pr_curve(&ids, &gold[ui][..t.min(gold[ui].len())]));
+                }
+            }
+        }
+        for (ki, &k) in cfg.k_values.iter().enumerate() {
+            for (ti, &t) in cfg.t_values.iter().enumerate() {
+                out.push(PrPoint {
+                    dataset: dataset_name.clone(),
+                    method: method.clone(),
+                    r: *r,
+                    k,
+                    t,
+                    curve: average_curves(&curves[ki][ti]),
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Area under the (stepwise) PR curve — a scalar summary used by tests and
+/// EXPERIMENTS.md to compare methods without eyeballing curves.
+pub fn auc(curve: &PrCurve) -> f64 {
+    // Rectangle rule over the recall increments (uniform 1/T steps).
+    let t = curve.recall.len() as f64;
+    curve.precision.iter().sum::<f64>() / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetConfig;
+
+    fn tiny_cfg() -> PrExperimentConfig {
+        PrExperimentConfig {
+            n_users: 30,
+            k_values: vec![32, 128],
+            t_values: vec![1, 5],
+            l2lsh_r_values: vec![2.5],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pr_figure_runs_and_alsh_beats_l2lsh() {
+        let ds = DatasetConfig::tiny();
+        let cfg = tiny_cfg();
+        let points = run_pr_figure(&ds, &cfg).unwrap();
+        // 2 methods x 2 K x 2 T
+        assert_eq!(points.len(), 8);
+        // Headline shape at the largest K, T=5: ALSH AUC > L2LSH AUC.
+        let get = |method: &str| {
+            auc(&points
+                .iter()
+                .find(|p| p.method == method && p.k == 128 && p.t == 5)
+                .unwrap()
+                .curve)
+        };
+        let (a, l) = (get("alsh"), get("l2lsh"));
+        assert!(a > l, "ALSH auc {a} not > L2LSH auc {l}");
+    }
+
+    #[test]
+    fn more_hashes_help_alsh() {
+        let ds = DatasetConfig::tiny();
+        let cfg = tiny_cfg();
+        let points = run_pr_figure(&ds, &cfg).unwrap();
+        let get = |k: usize| {
+            auc(&points
+                .iter()
+                .find(|p| p.method == "alsh" && p.k == k && p.t == 5)
+                .unwrap()
+                .curve)
+        };
+        assert!(get(128) > get(32), "K=128 not better than K=32");
+    }
+
+    #[test]
+    fn csv_rows_well_formed() {
+        let ds = DatasetConfig::tiny();
+        let cfg = PrExperimentConfig {
+            n_users: 5,
+            k_values: vec![16],
+            t_values: vec![3],
+            l2lsh_r_values: vec![],
+            ..Default::default()
+        };
+        let points = run_pr_figure(&ds, &cfg).unwrap();
+        assert_eq!(points.len(), 1);
+        let rows = points[0].csv_rows();
+        assert_eq!(rows.lines().count(), 3); // T=3 recall levels
+        for line in rows.lines() {
+            assert_eq!(line.split(',').count(), 7);
+        }
+    }
+
+    #[test]
+    fn fig7_sweeps_r_for_alsh_only() {
+        let ds = DatasetConfig::tiny();
+        let cfg = PrExperimentConfig {
+            n_users: 10,
+            k_values: vec![64],
+            t_values: vec![5],
+            l2lsh_r_values: vec![1.0, 2.5, 5.0],
+            ..Default::default()
+        };
+        let points = fig7_r_sensitivity(&ds, &cfg).unwrap();
+        assert_eq!(points.len(), 3);
+        assert!(points.iter().all(|p| p.method == "alsh" && p.k == 64));
+    }
+}

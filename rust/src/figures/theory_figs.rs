@@ -1,0 +1,154 @@
+//! Figures 1–4: pure theory, regenerated from the closed forms.
+
+use crate::theory::{collision_probability, optimize_rho, rho_alsh, GridSpec};
+
+/// The S0 fractions the paper plots (S0 = frac · U).
+pub const S0_FRACS: [f64; 5] = [0.9, 0.8, 0.7, 0.6, 0.5];
+
+/// The c grid for Figures 1–3.
+pub fn c_grid() -> Vec<f64> {
+    (1..20).map(|i| i as f64 * 0.05).collect()
+}
+
+/// Figure 1: optimal ρ\* for each (S0 fraction, c). CSV columns:
+/// `s0_frac,c,rho_star`.
+pub fn fig1_rho_star(grid: &GridSpec) -> String {
+    let mut csv = String::from("s0_frac,c,rho_star\n");
+    for &frac in &S0_FRACS {
+        for &c in &c_grid() {
+            if let Some(opt) = optimize_rho(frac, c, grid) {
+                csv.push_str(&format!("{frac},{c:.2},{:.6}\n", opt.rho));
+            }
+        }
+    }
+    csv
+}
+
+/// Figure 2: the argmin parameters behind Figure 1. CSV columns:
+/// `s0_frac,c,m,u,r`.
+pub fn fig2_optimal_params(grid: &GridSpec) -> String {
+    let mut csv = String::from("s0_frac,c,m,u,r\n");
+    for &frac in &S0_FRACS {
+        for &c in &c_grid() {
+            if let Some(opt) = optimize_rho(frac, c, grid) {
+                csv.push_str(&format!(
+                    "{frac},{c:.2},{},{:.3},{:.2}\n",
+                    opt.m, opt.u, opt.r
+                ));
+            }
+        }
+    }
+    csv
+}
+
+/// Figure 3: ρ at the recommended operating point (m=3, U=0.83, r=2.5)
+/// next to ρ\*. CSV columns: `s0_frac,c,rho_star,rho_recommended`.
+pub fn fig3_recommended(grid: &GridSpec) -> String {
+    let mut csv = String::from("s0_frac,c,rho_star,rho_recommended\n");
+    for &frac in &S0_FRACS {
+        for &c in &c_grid() {
+            let star = optimize_rho(frac, c, grid);
+            let fixed = rho_alsh(frac * 0.83, c, 0.83, 3, 2.5);
+            if let (Some(star), Some(fixed)) = (star, fixed) {
+                csv.push_str(&format!(
+                    "{frac},{c:.2},{:.6},{fixed:.6}\n",
+                    star.rho
+                ));
+            }
+        }
+    }
+    csv
+}
+
+/// Figure 4: the collision probability curve F_r(d). CSV columns:
+/// `r,d,p`. Plots the paper's r=1.5 curve plus the recommended r=2.5.
+pub fn fig4_collision() -> String {
+    let mut csv = String::from("r,d,p\n");
+    for r in [1.5f64, 2.5] {
+        let mut d = 0.05;
+        while d <= 3.0 + 1e-9 {
+            csv.push_str(&format!("{r},{d:.2},{:.6}\n", collision_probability(r, d)));
+            d += 0.05;
+        }
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(csv: &str) -> Vec<Vec<f64>> {
+        csv.lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|v| v.parse().unwrap()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn fig1_shape_matches_paper() {
+        let rows = parse(&fig1_rho_star(&GridSpec::coarse()));
+        assert!(!rows.is_empty());
+        // All ρ* ∈ (0, 1): the sublinearity claim.
+        for r in &rows {
+            assert!(r[2] > 0.0 && r[2] < 1.0, "rho* {} out of range", r[2]);
+        }
+        // ρ* is increasing in c at fixed S0 (harder approximation).
+        for &frac in &S0_FRACS {
+            let mut prev = 0.0;
+            for r in rows.iter().filter(|r| r[0] == frac) {
+                assert!(r[2] >= prev - 1e-9, "rho* not increasing in c");
+                prev = r[2];
+            }
+        }
+        // Higher S0 (easier instance) gives smaller ρ* at fixed c = 0.5.
+        let rho_at = |frac: f64| {
+            rows.iter()
+                .find(|r| r[0] == frac && (r[1] - 0.5).abs() < 1e-9)
+                .map(|r| r[2])
+                .unwrap()
+        };
+        assert!(rho_at(0.9) < rho_at(0.5), "rho*(0.9U) !< rho*(0.5U)");
+    }
+
+    #[test]
+    fn fig2_params_in_paper_ranges() {
+        // §3.5: over the high-S0 curves the optimum sits at m ∈ {2,3,4},
+        // U ∈ [0.8, 0.85], r ∈ [1.5, 3]. Check the mid-c region of the
+        // S0 = 0.9U curve on the default grid.
+        let rows = parse(&fig2_optimal_params(&GridSpec::default()));
+        let mid: Vec<&Vec<f64>> = rows
+            .iter()
+            .filter(|r| r[0] == 0.9 && r[1] >= 0.3 && r[1] <= 0.7)
+            .collect();
+        assert!(!mid.is_empty());
+        for r in mid {
+            assert!((2.0..=4.0).contains(&r[2]), "m = {} at c={}", r[2], r[1]);
+            assert!((0.75..=0.92).contains(&r[3]), "U = {} at c={}", r[3], r[1]);
+            assert!((1.0..=3.5).contains(&r[4]), "r = {} at c={}", r[4], r[1]);
+        }
+    }
+
+    #[test]
+    fn fig3_recommended_close_to_star() {
+        let rows = parse(&fig3_recommended(&GridSpec::default()));
+        for r in rows.iter().filter(|r| r[0] >= 0.8 && r[1] <= 0.8) {
+            assert!(r[3] >= r[2] - 1e-9, "fixed below optimal?");
+            assert!(
+                r[3] - r[2] < 0.15,
+                "recommended params far from optimal at s0={} c={}: {} vs {}",
+                r[0], r[1], r[3], r[2]
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_monotone() {
+        let rows = parse(&fig4_collision());
+        let mut prev = f64::MAX;
+        for r in rows.iter().filter(|r| r[0] == 1.5) {
+            assert!(r[2] <= prev + 1e-12);
+            prev = r[2];
+        }
+    }
+}

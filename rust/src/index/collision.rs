@@ -1,0 +1,477 @@
+//! Collision-count ranking (Eq. 21) — the paper's evaluation protocol.
+//!
+//! For K independent hash functions, every item j is scored by
+//! `Matches_j = Σ_t 1(h_t(query) = h_t(item_j))` and items are ranked by
+//! that count. Figures 5–7 are precision–recall curves of this ranking
+//! against the exact top-T inner products.
+
+use crate::util::Rng;
+
+use crate::lsh::{L2LshFamily, SrpFamily};
+use crate::transform::{
+    p_transform, p_transform_sign, q_transform, q_transform_sign, UScale,
+};
+
+/// Which hashing scheme the ranker evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Proposed L2-ALSH: hash(P(x)) for data, hash(Q(q)) for queries.
+    Alsh { m: usize },
+    /// Baseline symmetric L2LSH on the raw vectors (§4.2).
+    L2Lsh,
+    /// Sign-ALSH extension (§5 future work; Shrivastava & Li 2015):
+    /// SimHash over the sign transforms.
+    SignAlsh { m: usize },
+}
+
+/// Either hash family behind a ranker.
+enum Family {
+    L2(L2LshFamily),
+    Srp(SrpFamily),
+}
+
+impl Family {
+    fn hash_into(&self, x: &[f32], out: &mut Vec<i32>) {
+        match self {
+            Family::L2(f) => f.hash_into(x, out),
+            Family::Srp(f) => f.hash_into(x, out),
+        }
+    }
+
+    fn hash(&self, x: &[f32]) -> Vec<i32> {
+        match self {
+            Family::L2(f) => f.hash(x),
+            Family::Srp(f) => f.hash(x),
+        }
+    }
+}
+
+/// Descending-count ranking via counting sort; ties broken by ascending
+/// id (iteration order is already ascending).
+pub fn rank_by_counts(matches: &[u32], k_max: usize) -> Vec<u32> {
+    let mut hist = vec![0u32; k_max + 2];
+    for &c in matches {
+        debug_assert!((c as usize) <= k_max);
+        hist[c as usize] += 1;
+    }
+    // Offsets for descending counts: position of count c is after all
+    // counts > c.
+    let mut offsets = vec![0u32; k_max + 1];
+    let mut acc = 0u32;
+    for c in (0..=k_max).rev() {
+        offsets[c] = acc;
+        acc += hist[c];
+    }
+    let mut out = vec![0u32; matches.len()];
+    for (id, &c) in matches.iter().enumerate() {
+        let slot = &mut offsets[c as usize];
+        out[*slot as usize] = id as u32;
+        *slot += 1;
+    }
+    out
+}
+
+/// Precomputed item hash codes + the family, ready to rank queries.
+pub struct CollisionRanker {
+    scheme: Scheme,
+    family: Family,
+    scale: Option<UScale>,
+    /// [n_items * k] codes, row per item.
+    item_codes: Vec<i32>,
+    k: usize,
+    n_items: usize,
+}
+
+impl CollisionRanker {
+    /// Hash all `items` with `k` functions of width `r` under `scheme`.
+    ///
+    /// For ALSH the items are first shrunk so max norm = `u` (Eq. 11) and
+    /// P-transformed; for L2LSH they are hashed raw (the baseline of §4.2).
+    pub fn build(
+        items: &[Vec<f32>],
+        scheme: Scheme,
+        k: usize,
+        r: f32,
+        u: f32,
+        seed: u64,
+    ) -> Self {
+        Self::build_impl(items, scheme, k, r, u, seed, None)
+    }
+
+    /// Like [`CollisionRanker::build`] but bulk-hashes the items through
+    /// the compiled PJRT artifact (the L1 Pallas matmul) when one matches
+    /// the scheme/dim/K — ~2x faster than the scalar path on the figure
+    /// datasets. Falls back to the scalar path if no artifact fits.
+    pub fn build_pjrt(
+        items: &[Vec<f32>],
+        scheme: Scheme,
+        k: usize,
+        r: f32,
+        u: f32,
+        seed: u64,
+        rt: &mut crate::runtime::Runtime,
+    ) -> Self {
+        Self::build_impl(items, scheme, k, r, u, seed, Some(rt))
+    }
+
+    fn build_impl(
+        items: &[Vec<f32>],
+        scheme: Scheme,
+        k: usize,
+        r: f32,
+        u: f32,
+        seed: u64,
+        rt: Option<&mut crate::runtime::Runtime>,
+    ) -> Self {
+        assert!(!items.is_empty());
+        let dim = items[0].len();
+        let mut rng = Rng::seed_from_u64(seed);
+        let (family, scale) = match scheme {
+            Scheme::Alsh { m } => (
+                Family::L2(L2LshFamily::sample(dim + m, k, r, &mut rng)),
+                Some(UScale::fit(items.iter().map(|v| v.as_slice()), u)),
+            ),
+            Scheme::L2Lsh => (Family::L2(L2LshFamily::sample(dim, k, r, &mut rng)), None),
+            Scheme::SignAlsh { m } => (
+                Family::Srp(SrpFamily::sample(dim + m, k, &mut rng)),
+                Some(UScale::fit(items.iter().map(|v| v.as_slice()), u)),
+            ),
+        };
+        let item_codes = rt
+            .and_then(|rt| {
+                Self::pjrt_item_codes(items, scheme, k, &family, scale.as_ref(), rt)
+            })
+            .unwrap_or_else(|| {
+                let mut item_codes = Vec::with_capacity(items.len() * k);
+                for item in items {
+                    match scheme {
+                        Scheme::Alsh { m } => {
+                            let px =
+                                p_transform(&scale.as_ref().unwrap().apply(item), m);
+                            family.hash_into(&px, &mut item_codes);
+                        }
+                        Scheme::L2Lsh => family.hash_into(item, &mut item_codes),
+                        Scheme::SignAlsh { m } => {
+                            let px = p_transform_sign(
+                                &scale.as_ref().unwrap().apply(item),
+                                m,
+                            );
+                            family.hash_into(&px, &mut item_codes);
+                        }
+                    }
+                }
+                item_codes
+            });
+        assert_eq!(item_codes.len(), items.len() * k);
+        Self { scheme, family, scale, item_codes, k, n_items: items.len() }
+    }
+
+    /// Bulk item hashing through the AOT artifact. Returns None when no
+    /// artifact matches (caller falls back to the scalar mirror).
+    fn pjrt_item_codes(
+        items: &[Vec<f32>],
+        scheme: Scheme,
+        k: usize,
+        family: &Family,
+        scale: Option<&UScale>,
+        rt: &mut crate::runtime::Runtime,
+    ) -> Option<Vec<i32>> {
+        let dim = items[0].len();
+        let (function, a_dk, b, m, scaled): (&str, Vec<f32>, Vec<f32>, usize, bool) =
+            match (scheme, family) {
+                (Scheme::Alsh { m }, Family::L2(f)) => {
+                    ("alsh_data", f.a_matrix_dk(), f.b_vector().to_vec(), m, true)
+                }
+                (Scheme::L2Lsh, Family::L2(f)) => {
+                    ("l2lsh", f.a_matrix_dk(), f.b_vector().to_vec(), 0, false)
+                }
+                (Scheme::SignAlsh { m }, Family::Srp(f)) => {
+                    ("sign_alsh_data", f.a_matrix_dk(), Vec::new(), m, true)
+                }
+                _ => return None,
+            };
+        let meta = rt.find(function, dim).ok()?;
+        if meta.m != m || k > meta.k {
+            return None;
+        }
+        // Pad the projection matrix from [dp, k] to the artifact's
+        // [dp, meta.k] column count (extra columns produce unused codes).
+        let dp = dim + m;
+        let mut a_pad = vec![0.0f32; dp * meta.k];
+        for d in 0..dp {
+            a_pad[d * meta.k..d * meta.k + k]
+                .copy_from_slice(&a_dk[d * k..(d + 1) * k]);
+        }
+        let rows: Vec<Vec<f32>> = if scaled {
+            items.iter().map(|v| scale.unwrap().apply(v)).collect()
+        } else {
+            items.to_vec()
+        };
+        let code_rows = if function == "sign_alsh_data" {
+            rt.run_sign_hash(&meta, &rows, &a_pad).ok()?
+        } else {
+            let mut b_pad = vec![0.0f32; meta.k];
+            b_pad[..k].copy_from_slice(&b);
+            rt.run_hash(&meta, &rows, &a_pad, &b_pad).ok()?
+        };
+        let mut out = Vec::with_capacity(items.len() * k);
+        for row in code_rows {
+            out.extend_from_slice(&row[..k]);
+        }
+        Some(out)
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    /// Query-side hash codes under the scheme (Q-transform for ALSH).
+    pub fn query_codes(&self, query: &[f32]) -> Vec<i32> {
+        match self.scheme {
+            Scheme::Alsh { m } => self.family.hash(&q_transform(query, m)),
+            Scheme::L2Lsh => self.family.hash(query),
+            Scheme::SignAlsh { m } => self.family.hash(&q_transform_sign(query, m)),
+        }
+    }
+
+    /// `Matches_j` for every item, using the first `k_prefix` hash
+    /// functions (so one build at K=512 serves the K ∈ {64,128,256,512}
+    /// sweep of Figures 5–6).
+    pub fn matches(&self, query_codes: &[i32], k_prefix: usize) -> Vec<u32> {
+        let k_prefix = k_prefix.min(self.k);
+        assert!(query_codes.len() >= k_prefix);
+        let mut out = vec![0u32; self.n_items];
+        let qc = &query_codes[..k_prefix];
+        for (j, cnt) in out.iter_mut().enumerate() {
+            let row = &self.item_codes[j * self.k..j * self.k + k_prefix];
+            let mut c = 0u32;
+            for (a, b) in row.iter().zip(qc) {
+                c += (a == b) as u32;
+            }
+            *cnt = c;
+        }
+        out
+    }
+
+    /// `Matches_j` for every item at *each* K in `ks` (ascending),
+    /// computed incrementally in one pass over the code matrix: the codes
+    /// in segment [ks[i-1], ks[i]) are only compared once. This is the
+    /// inner loop of the Figures 5-6 K-sweep (see EXPERIMENTS.md §Perf).
+    pub fn matches_at_ks(&self, query_codes: &[i32], ks: &[usize]) -> Vec<Vec<u32>> {
+        assert!(!ks.is_empty());
+        assert!(ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
+        let k_max = (*ks.last().unwrap()).min(self.k);
+        assert!(query_codes.len() >= k_max);
+        let mut out: Vec<Vec<u32>> = Vec::with_capacity(ks.len());
+        let mut acc = vec![0u32; self.n_items];
+        let mut prev = 0usize;
+        for &k in ks {
+            let k = k.min(self.k);
+            let qc = &query_codes[prev..k];
+            for (j, a) in acc.iter_mut().enumerate() {
+                let row = &self.item_codes[j * self.k + prev..j * self.k + k];
+                let mut c = 0u32;
+                for (x, y) in row.iter().zip(qc) {
+                    c += (x == y) as u32;
+                }
+                *a += c;
+            }
+            out.push(acc.clone());
+            prev = k;
+        }
+        out
+    }
+
+    /// Item ids sorted by descending match count (ties broken by
+    /// ascending id for determinism) — the ranked list Figures 5–7 are
+    /// computed over. Counting sort over the [0, K] count range: O(n + K)
+    /// instead of O(n log n) (EXPERIMENTS.md §Perf).
+    pub fn rank(&self, query: &[f32], k_prefix: usize) -> Vec<u32> {
+        let qc = self.query_codes(query);
+        let m = self.matches(&qc, k_prefix);
+        rank_by_counts(&m, k_prefix.min(self.k))
+    }
+
+    /// Direct access to one item's code row (PJRT cross-check tests).
+    pub fn item_code_row(&self, j: usize) -> &[i32] {
+        &self.item_codes[j * self.k..(j + 1) * self.k]
+    }
+
+    pub fn scale(&self) -> Option<&UScale> {
+        self.scale.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::dot;
+
+    fn items_with_norm_spread(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let scale = 0.1 + 3.0 * (i as f32 / n as f32).powi(2);
+                (0..d).map(|_| (rng.f32() - 0.5) * scale).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_bounded_by_k() {
+        let items = items_with_norm_spread(50, 8, 1);
+        let ranker =
+            CollisionRanker::build(&items, Scheme::Alsh { m: 3 }, 32, 2.5, 0.83, 2);
+        let q = vec![0.4f32; 8];
+        let qc = ranker.query_codes(&q);
+        for c in ranker.matches(&qc, 32) {
+            assert!(c <= 32);
+        }
+    }
+
+    #[test]
+    fn prefix_matches_consistent() {
+        // matches at k_prefix must equal counting over the first k_prefix
+        // codes by hand.
+        let items = items_with_norm_spread(30, 6, 3);
+        let ranker =
+            CollisionRanker::build(&items, Scheme::Alsh { m: 2 }, 16, 2.5, 0.83, 4);
+        let q = vec![0.2f32, -0.1, 0.5, 0.9, -0.3, 0.0];
+        let qc = ranker.query_codes(&q);
+        let m8 = ranker.matches(&qc, 8);
+        for j in 0..30 {
+            let row = ranker.item_code_row(j);
+            let want = row[..8].iter().zip(&qc[..8]).filter(|(a, b)| a == b).count();
+            assert_eq!(m8[j], want as u32);
+        }
+    }
+
+    #[test]
+    fn rank_is_a_permutation() {
+        let items = items_with_norm_spread(40, 5, 5);
+        let ranker = CollisionRanker::build(&items, Scheme::L2Lsh, 16, 2.0, 0.83, 6);
+        let ranked = ranker.rank(&[0.1, 0.2, 0.3, 0.4, 0.5], 16);
+        let mut s = ranked.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..40).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn alsh_ranks_high_ip_items_above_random_on_average() {
+        // With many hashes the top-ranked item should have much higher
+        // inner product than the corpus median.
+        let items = items_with_norm_spread(400, 16, 7);
+        let ranker =
+            CollisionRanker::build(&items, Scheme::Alsh { m: 3 }, 256, 2.5, 0.83, 8);
+        let mut rng = Rng::seed_from_u64(9);
+        let mut top_beats_median = 0;
+        let trials = 20;
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+            let ranked = ranker.rank(&q, 256);
+            let ips: Vec<f32> = items.iter().map(|v| dot(v, &q)).collect();
+            let mut sorted_ips = ips.clone();
+            sorted_ips.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sorted_ips[200];
+            if ips[ranked[0] as usize] > median {
+                top_beats_median += 1;
+            }
+        }
+        assert!(top_beats_median >= 18, "{top_beats_median}/{trials}");
+    }
+
+    #[test]
+    fn alsh_beats_l2lsh_on_norm_spread_data() {
+        // The headline claim, in miniature: on data with a wide norm
+        // spread, ALSH top-10 retrieval beats symmetric L2LSH.
+        let items = items_with_norm_spread(500, 16, 10);
+        let alsh =
+            CollisionRanker::build(&items, Scheme::Alsh { m: 3 }, 256, 2.5, 0.83, 11);
+        let l2 = CollisionRanker::build(&items, Scheme::L2Lsh, 256, 2.5, 0.83, 11);
+        let mut rng = Rng::seed_from_u64(12);
+        let (mut alsh_hits, mut l2_hits) = (0usize, 0usize);
+        for _ in 0..30 {
+            let q: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+            let mut ips: Vec<(usize, f32)> =
+                items.iter().enumerate().map(|(i, v)| (i, dot(v, &q))).collect();
+            ips.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let gold: Vec<u32> = ips[..10].iter().map(|&(i, _)| i as u32).collect();
+            let in_gold = |ranked: &[u32]| {
+                ranked[..50].iter().filter(|id| gold.contains(id)).count()
+            };
+            alsh_hits += in_gold(&alsh.rank(&q, 256));
+            l2_hits += in_gold(&l2.rank(&q, 256));
+        }
+        assert!(
+            alsh_hits > l2_hits,
+            "ALSH {alsh_hits} vs L2LSH {l2_hits} gold-in-top-50 hits"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let items = items_with_norm_spread(20, 4, 13);
+        let a = CollisionRanker::build(&items, Scheme::Alsh { m: 3 }, 8, 2.5, 0.83, 14);
+        let b = CollisionRanker::build(&items, Scheme::Alsh { m: 3 }, 8, 2.5, 0.83, 14);
+        let q = vec![0.5f32; 4];
+        assert_eq!(a.rank(&q, 8), b.rank(&q, 8));
+    }
+
+    #[test]
+    fn sign_alsh_codes_are_bits_and_ranker_works() {
+        let items = items_with_norm_spread(60, 8, 20);
+        let ranker =
+            CollisionRanker::build(&items, Scheme::SignAlsh { m: 2 }, 64, 2.5, 0.75, 21);
+        let q = vec![0.4f32; 8];
+        let qc = ranker.query_codes(&q);
+        assert!(qc.iter().all(|&c| c == 0 || c == 1));
+        let ranked = ranker.rank(&q, 64);
+        let mut s = ranked.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..60).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn sign_alsh_also_beats_l2lsh_on_norm_spread_data() {
+        let items = items_with_norm_spread(500, 16, 22);
+        let sign =
+            CollisionRanker::build(&items, Scheme::SignAlsh { m: 2 }, 256, 2.5, 0.75, 23);
+        let l2 = CollisionRanker::build(&items, Scheme::L2Lsh, 256, 2.5, 0.75, 23);
+        let mut rng = Rng::seed_from_u64(24);
+        let (mut sign_hits, mut l2_hits) = (0usize, 0usize);
+        for _ in 0..30 {
+            let q: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+            let mut ips: Vec<(usize, f32)> =
+                items.iter().enumerate().map(|(i, v)| (i, dot(v, &q))).collect();
+            ips.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let gold: Vec<u32> = ips[..10].iter().map(|&(i, _)| i as u32).collect();
+            let in_gold = |ranked: &[u32]| {
+                ranked[..50].iter().filter(|id| gold.contains(id)).count()
+            };
+            sign_hits += in_gold(&sign.rank(&q, 256));
+            l2_hits += in_gold(&l2.rank(&q, 256));
+        }
+        assert!(
+            sign_hits > l2_hits,
+            "Sign-ALSH {sign_hits} vs L2LSH {l2_hits} gold-in-top-50 hits"
+        );
+    }
+
+    #[test]
+    fn matches_at_ks_equals_individual_matches() {
+        let items = items_with_norm_spread(40, 6, 30);
+        let ranker =
+            CollisionRanker::build(&items, Scheme::Alsh { m: 3 }, 64, 2.5, 0.83, 31);
+        let q = vec![0.3f32; 6];
+        let qc = ranker.query_codes(&q);
+        let ks = [8usize, 16, 64];
+        let swept = ranker.matches_at_ks(&qc, &ks);
+        for (i, &k) in ks.iter().enumerate() {
+            assert_eq!(swept[i], ranker.matches(&qc, k), "K={k}");
+        }
+    }
+}

@@ -1,0 +1,413 @@
+//! The bucketed (K, L) ALSH index: sublinear MIPS serving (Theorem 2).
+
+use crate::util::Rng;
+
+use super::hash_table::HashTable;
+use crate::lsh::L2LshFamily;
+use crate::transform::{dot, p_transform, q_transform, UScale};
+
+/// Parameters of a bucketed ALSH index.
+#[derive(Clone, Copy, Debug)]
+pub struct AlshParams {
+    /// Number of norm-power components appended by P/Q (paper recommends 3).
+    pub m: usize,
+    /// Norm shrink target U (paper recommends 0.83).
+    pub u: f32,
+    /// Quantization width r of the L2LSH family (paper recommends 2.5).
+    pub r: f32,
+    /// Codes concatenated per table (meta-hash width K).
+    pub k_per_table: usize,
+    /// Number of hash tables L.
+    pub n_tables: usize,
+}
+
+impl Default for AlshParams {
+    fn default() -> Self {
+        // m, U, r from §3.5. The default (K, L) is recall-oriented
+        // (top1-in-top10 ≈ 0.85-0.95 across workloads); raise K /
+        // lower L to trade recall for fewer probed candidates — see
+        // `examples/param_sweep.rs` for the measured trade-off curve.
+        Self { m: 3, u: 0.83, r: 2.5, k_per_table: 6, n_tables: 32 }
+    }
+}
+
+/// A retrieved item with its exact inner-product score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScoredItem {
+    pub id: u32,
+    pub score: f32,
+}
+
+/// Bucketed ALSH index over a fixed item collection.
+pub struct AlshIndex {
+    params: AlshParams,
+    scale: UScale,
+    /// One K-wide hash family per table, over dimension D + m.
+    families: Vec<L2LshFamily>,
+    tables: Vec<HashTable>,
+    /// Original (unscaled) item vectors, row-major — used for exact rerank.
+    items_flat: Vec<f32>,
+    dim: usize,
+    n_items: usize,
+    /// Visit stamps for allocation-free candidate dedup across tables
+    /// (Mutex so the index is Sync; uncontended in the single-batcher path).
+    stamps: std::sync::Mutex<(Vec<u32>, u32)>,
+}
+
+impl AlshIndex {
+    /// Build the index over `items` (each of equal dimension).
+    ///
+    /// Applies Eq. 11 scaling (max norm -> U), the P transform (Eq. 12),
+    /// and inserts every item into all L tables.
+    pub fn build(items: &[Vec<f32>], params: AlshParams, seed: u64) -> Self {
+        assert!(!items.is_empty(), "empty item collection");
+        let dim = items[0].len();
+        assert!(items.iter().all(|v| v.len() == dim), "ragged item dims");
+        let scale = UScale::fit(items.iter().map(|v| v.as_slice()), params.u);
+        let mut rng = Rng::seed_from_u64(seed);
+        let families: Vec<L2LshFamily> = (0..params.n_tables)
+            .map(|_| L2LshFamily::sample(dim + params.m, params.k_per_table, params.r, &mut rng))
+            .collect();
+        let mut tables = vec![HashTable::new(); params.n_tables];
+        let mut codes = Vec::with_capacity(params.k_per_table);
+        for (id, item) in items.iter().enumerate() {
+            let px = p_transform(&scale.apply(item), params.m);
+            for (family, table) in families.iter().zip(tables.iter_mut()) {
+                codes.clear();
+                family.hash_into(&px, &mut codes);
+                table.insert(&codes, id as u32);
+            }
+        }
+        let mut items_flat = Vec::with_capacity(items.len() * dim);
+        for item in items {
+            items_flat.extend_from_slice(item);
+        }
+        Self {
+            params,
+            scale,
+            families,
+            tables,
+            items_flat,
+            dim,
+            n_items: items.len(),
+            stamps: std::sync::Mutex::new((vec![0u32; items.len()], 0)),
+        }
+    }
+
+    pub fn params(&self) -> &AlshParams {
+        &self.params
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn scale(&self) -> &UScale {
+        &self.scale
+    }
+
+    /// The hash families (for the PJRT-accelerated build path).
+    pub fn families(&self) -> &[L2LshFamily] {
+        &self.families
+    }
+
+    /// The hash tables (persistence / diagnostics).
+    pub fn tables(&self) -> &[HashTable] {
+        &self.tables
+    }
+
+    /// Reassemble an index from persisted parts (see `index::persist`).
+    pub(crate) fn from_parts(
+        params: AlshParams,
+        scale: UScale,
+        families: Vec<L2LshFamily>,
+        tables: Vec<HashTable>,
+        items_flat: Vec<f32>,
+        dim: usize,
+        n_items: usize,
+    ) -> Self {
+        assert_eq!(families.len(), params.n_tables);
+        assert_eq!(tables.len(), params.n_tables);
+        assert_eq!(items_flat.len(), dim * n_items);
+        Self {
+            params,
+            scale,
+            families,
+            tables,
+            items_flat,
+            dim,
+            n_items,
+            stamps: std::sync::Mutex::new((vec![0u32; n_items], 0)),
+        }
+    }
+
+    /// Run `f` with a fresh dedup epoch over the visit-stamp array
+    /// (shared by the plain and multi-probe candidate paths).
+    pub(crate) fn with_stamps(&self, f: impl FnOnce(&mut Vec<u32>, u32)) {
+        let mut guard = self.stamps.lock().unwrap();
+        let (stamps, epoch) = &mut *guard;
+        *epoch = epoch.wrapping_add(1);
+        if *epoch == 0 {
+            stamps.fill(0);
+            *epoch = 1;
+        }
+        let e = *epoch;
+        f(stamps, e);
+    }
+
+    /// Item vector by id.
+    pub fn item(&self, id: u32) -> &[f32] {
+        let i = id as usize;
+        &self.items_flat[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Raw candidate ids for `query` — the union of the probed buckets
+    /// across all L tables, deduplicated, before re-ranking.
+    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        let qx = q_transform(query, self.params.m);
+        self.candidates_transformed(&qx)
+    }
+
+    /// Candidate retrieval when the caller already computed Q(query)
+    /// codes-side input (used by the PJRT batcher, which hashes the whole
+    /// batch in one executable call).
+    pub fn candidates_transformed(&self, qx: &[f32]) -> Vec<u32> {
+        let mut codes = Vec::with_capacity(self.params.k_per_table);
+        let mut out = Vec::new();
+        let mut guard = self.stamps.lock().unwrap();
+        let (stamps, epoch) = &mut *guard;
+        *epoch = epoch.wrapping_add(1);
+        if *epoch == 0 {
+            stamps.fill(0);
+            *epoch = 1;
+        }
+        let epoch = *epoch;
+        for (family, table) in self.families.iter().zip(&self.tables) {
+            codes.clear();
+            family.hash_into(qx, &mut codes);
+            for &id in table.get(&codes) {
+                let s = &mut stamps[id as usize];
+                if *s != epoch {
+                    *s = epoch;
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Candidate retrieval from externally computed per-table codes
+    /// (the PJRT path: codes arrive as one `[L * K]` row per query).
+    pub fn candidates_from_codes(&self, codes_flat: &[i32]) -> Vec<u32> {
+        let k = self.params.k_per_table;
+        assert_eq!(codes_flat.len(), k * self.params.n_tables);
+        let mut out = Vec::new();
+        let mut guard = self.stamps.lock().unwrap();
+        let (stamps, epoch) = &mut *guard;
+        *epoch = epoch.wrapping_add(1);
+        if *epoch == 0 {
+            stamps.fill(0);
+            *epoch = 1;
+        }
+        let epoch = *epoch;
+        for (t, table) in self.tables.iter().enumerate() {
+            for &id in table.get(&codes_flat[t * k..(t + 1) * k]) {
+                let s = &mut stamps[id as usize];
+                if *s != epoch {
+                    *s = epoch;
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact-rerank `candidates` by inner product with `query`; top `k`.
+    pub fn rerank(&self, query: &[f32], candidates: &[u32], k: usize) -> Vec<ScoredItem> {
+        let mut scored: Vec<ScoredItem> = candidates
+            .iter()
+            .map(|&id| ScoredItem { id, score: dot(query, self.item(id)) })
+            .collect();
+        let k = k.min(scored.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        scored.select_nth_unstable_by(k - 1, |a, b| {
+            b.score.partial_cmp(&a.score).unwrap()
+        });
+        scored.truncate(k);
+        scored.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        scored
+    }
+
+    /// Full query: retrieve candidates, exact-rerank, return top `k`.
+    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
+        let cands = self.candidates(query);
+        self.rerank(query, &cands, k)
+    }
+
+    /// Aggregate table statistics: (total buckets, total postings, max bucket).
+    pub fn table_stats(&self) -> (usize, usize, usize) {
+        let b = self.tables.iter().map(|t| t.n_buckets()).sum();
+        let p = self.tables.iter().map(|t| t.n_postings()).sum();
+        let m = self.tables.iter().map(|t| t.max_bucket()).max().unwrap_or(0);
+        (b, p, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Items with wildly varying norms — the regime where MIPS != NNS.
+    fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let scale = 0.2 + 2.0 * (i as f32 / n as f32);
+                (0..d).map(|_| (rng.f32() - 0.5) * scale).collect()
+            })
+            .collect()
+    }
+
+    fn exact_top1(items: &[Vec<f32>], q: &[f32]) -> u32 {
+        (0..items.len())
+            .max_by(|&a, &b| dot(&items[a], q).partial_cmp(&dot(&items[b], q)).unwrap())
+            .unwrap() as u32
+    }
+
+    #[test]
+    fn build_populates_all_tables() {
+        let items = norm_spread_items(100, 8, 1);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 2);
+        let (_b, postings, _m) = idx.table_stats();
+        assert_eq!(postings, 100 * idx.params().n_tables);
+    }
+
+    #[test]
+    fn query_returns_sorted_scores() {
+        let items = norm_spread_items(300, 12, 3);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let q: Vec<f32> = (0..12).map(|_| rng.f32() - 0.5).collect();
+        let top = idx.query(&q, 10);
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn scores_are_exact_inner_products() {
+        let items = norm_spread_items(200, 10, 6);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 7);
+        let q: Vec<f32> = (0..10).map(|i| (i as f32 * 0.7).sin()).collect();
+        for s in idx.query(&q, 5) {
+            let want = dot(&q, &items[s.id as usize]);
+            assert!((s.score - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn finds_the_mips_winner_with_enough_tables() {
+        // Generous L so the probability of missing the top item is tiny.
+        let items = norm_spread_items(500, 16, 8);
+        let params = AlshParams { n_tables: 64, k_per_table: 4, ..Default::default() };
+        let idx = AlshIndex::build(&items, params, 9);
+        let mut rng = Rng::seed_from_u64(10);
+        let mut hits = 0;
+        let trials = 50;
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+            let want = exact_top1(&items, &q);
+            let got = idx.query(&q, 10);
+            if got.iter().any(|s| s.id == want) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 45, "top-1 recall {hits}/{trials}");
+    }
+
+    #[test]
+    fn candidates_sublinear_fraction() {
+        // Probing should touch far fewer items than the corpus.
+        let items = norm_spread_items(2000, 16, 11);
+        let params = AlshParams { n_tables: 16, k_per_table: 8, ..Default::default() };
+        let idx = AlshIndex::build(&items, params, 12);
+        let mut rng = Rng::seed_from_u64(13);
+        let mut total = 0usize;
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+            total += idx.candidates(&q).len();
+        }
+        let avg = total as f64 / 20.0;
+        assert!(avg < 1000.0, "avg candidates {avg} not sublinear-ish");
+        assert!(avg > 0.0);
+    }
+
+    #[test]
+    fn candidates_deduplicated() {
+        let items = norm_spread_items(100, 8, 14);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 15);
+        let q: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let c = idx.candidates(&q);
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), c.len(), "duplicate candidates returned");
+    }
+
+    #[test]
+    fn candidates_from_codes_matches_inline_hashing() {
+        let items = norm_spread_items(150, 8, 16);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 17);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32).cos()).collect();
+        let qx = q_transform(&q, idx.params().m);
+        let mut flat = Vec::new();
+        for fam in idx.families() {
+            fam.hash_into(&qx, &mut flat);
+        }
+        let mut a = idx.candidates(&q);
+        let mut b = idx.candidates_from_codes(&flat);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rerank_k_larger_than_candidates() {
+        let items = norm_spread_items(50, 6, 18);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 19);
+        let q = vec![0.5f32; 6];
+        let out = idx.rerank(&q, &[1, 2, 3], 10);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let items = norm_spread_items(10, 4, 20);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 21);
+        let _ = idx.query(&[1.0, 2.0], 1);
+    }
+
+    #[test]
+    fn epoch_wraparound_is_safe() {
+        let items = norm_spread_items(50, 4, 22);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 23);
+        // Force the epoch counter close to wrap.
+        idx.stamps.lock().unwrap().1 = u32::MAX - 2;
+        let q = vec![0.3f32; 4];
+        for _ in 0..6 {
+            let c = idx.candidates(&q);
+            let mut s = c.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), c.len());
+        }
+    }
+}

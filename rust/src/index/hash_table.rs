@@ -1,0 +1,121 @@
+//! One LSH hash table: buckets keyed by a meta-hash of K integer codes.
+
+use std::collections::HashMap;
+
+/// Mix K i32 codes into one u64 bucket key (splitmix64-style avalanche,
+/// applied per code). Distinct code vectors collide with probability
+/// ~2^-64 — negligible next to the LSH collision rates we are measuring.
+#[inline]
+pub fn bucket_key(codes: &[i32]) -> u64 {
+    let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+    for &c in codes {
+        let mut z = h ^ (c as u32 as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h = z ^ (z >> 31);
+    }
+    h
+}
+
+/// A single hash table mapping bucket keys to item-id postings lists.
+#[derive(Clone, Debug, Default)]
+pub struct HashTable {
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+impl HashTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert item `id` into the bucket for `codes`.
+    pub fn insert(&mut self, codes: &[i32], id: u32) {
+        self.buckets.entry(bucket_key(codes)).or_default().push(id);
+    }
+
+    /// The postings list for `codes` (empty slice if the bucket is empty).
+    pub fn get(&self, codes: &[i32]) -> &[u32] {
+        self.buckets
+            .get(&bucket_key(codes))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Number of non-empty buckets.
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Total number of postings (= number of inserted items).
+    pub fn n_postings(&self) -> usize {
+        self.buckets.values().map(|v| v.len()).sum()
+    }
+
+    /// Size of the largest bucket (skew diagnostic for metrics).
+    pub fn max_bucket(&self) -> usize {
+        self.buckets.values().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    /// Iterate raw (key, postings) pairs — used by index persistence.
+    pub fn buckets(&self) -> impl Iterator<Item = (&u64, &Vec<u32>)> {
+        self.buckets.iter()
+    }
+
+    /// Insert a pre-keyed postings list — used by index persistence.
+    pub fn insert_raw(&mut self, key: u64, ids: Vec<u32>) {
+        self.buckets.entry(key).or_default().extend(ids);
+    }
+
+    /// Probe by raw key (multi-probe querying).
+    pub fn get_by_key(&self, key: u64) -> &[u32] {
+        self.buckets.get(&key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_then_get() {
+        let mut t = HashTable::new();
+        t.insert(&[1, 2, 3], 42);
+        t.insert(&[1, 2, 3], 43);
+        t.insert(&[9, 9, 9], 44);
+        assert_eq!(t.get(&[1, 2, 3]), &[42, 43]);
+        assert_eq!(t.get(&[9, 9, 9]), &[44]);
+        assert!(t.get(&[0, 0, 0]).is_empty());
+        assert_eq!(t.n_buckets(), 2);
+        assert_eq!(t.n_postings(), 3);
+        assert_eq!(t.max_bucket(), 2);
+    }
+
+    #[test]
+    fn key_sensitive_to_order_and_value() {
+        assert_ne!(bucket_key(&[1, 2]), bucket_key(&[2, 1]));
+        assert_ne!(bucket_key(&[1, 2]), bucket_key(&[1, 3]));
+        assert_ne!(bucket_key(&[0]), bucket_key(&[0, 0]));
+        // negative codes map distinctly
+        assert_ne!(bucket_key(&[-1]), bucket_key(&[1]));
+        assert_ne!(bucket_key(&[-1]), bucket_key(&[i32::MAX]));
+    }
+
+    #[test]
+    fn key_deterministic() {
+        assert_eq!(bucket_key(&[5, -7, 123]), bucket_key(&[5, -7, 123]));
+    }
+
+    #[test]
+    fn keys_well_distributed() {
+        // Sequential code vectors should scatter across the u64 space:
+        // check low-bit uniformity via bucket counts.
+        let mut counts = [0usize; 16];
+        for i in 0..16_000i32 {
+            let k = bucket_key(&[i, i / 3, -i]);
+            counts[(k & 0xF) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "skewed low bits: {counts:?}");
+        }
+    }
+}

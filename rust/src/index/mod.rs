@@ -1,0 +1,21 @@
+//! The ALSH index — the paper's contribution as a serving data structure.
+//!
+//! Two retrieval modes, both from the paper:
+//!
+//! * **Bucketed (K, L)** (§2.2 + Theorem 2): L hash tables, each keyed by a
+//!   meta-hash of K codes; a query probes one bucket per table and re-ranks
+//!   the candidate union by exact inner product. This is the sublinear
+//!   serving path.
+//! * **Collision-count ranking** (Eq. 21, used by the paper's evaluation):
+//!   rank every item by the number of hash agreements with the query over
+//!   K independent functions. This is what Figures 5–7 measure.
+
+pub mod collision;
+pub mod core;
+pub mod hash_table;
+pub mod multiprobe;
+pub mod persist;
+
+pub use collision::{CollisionRanker, Scheme};
+pub use core::{AlshIndex, AlshParams, ScoredItem};
+pub use hash_table::HashTable;

@@ -1,0 +1,279 @@
+//! Index persistence: save/load the built ALSH index to a compact binary
+//! file, so a service restart skips the (re)build.
+//!
+//! Format (little-endian, length-prefixed):
+//!
+//! ```text
+//! magic "ALSH" | version u32 | params (m, u, r, K, L) | scale (u, factor,
+//! max_norm) | dim u64 | n_items u64 | items_flat f32[n*dim]
+//! | L × family { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
+//! | L × table { n_buckets u64, n × { key u64, len u64, ids u32[len] } }
+//! ```
+//!
+//! No external serialization crates exist in this environment (DESIGN.md
+//! §5b), so the codec is hand-rolled with explicit versioning and
+//! corruption checks.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::core::{AlshIndex, AlshParams};
+
+const MAGIC: &[u8; 4] = b"ALSH";
+const VERSION: u32 = 1;
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, v: u32) -> std::io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn u64(&mut self, v: u64) -> std::io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn f32(&mut self, v: f32) -> std::io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn f32s(&mut self, vs: &[f32]) -> std::io::Result<()> {
+        for v in vs {
+            self.f32(*v)?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn len(&mut self, cap: u64, what: &str) -> anyhow::Result<usize> {
+        let v = self.u64()?;
+        anyhow::ensure!(v <= cap, "corrupt index file: {what} = {v} exceeds sanity cap {cap}");
+        Ok(v as usize)
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+    fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0f32; n];
+        let mut bytes = vec![0u8; n * 4];
+        self.r.read_exact(&mut bytes)?;
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+}
+
+impl AlshIndex {
+    /// Serialize the index to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let file = std::fs::File::create(path.as_ref())?;
+        let mut w = Writer { w: BufWriter::new(file) };
+        w.w.write_all(MAGIC)?;
+        w.u32(VERSION)?;
+        let p = self.params();
+        w.u64(p.m as u64)?;
+        w.f32(p.u)?;
+        w.f32(p.r)?;
+        w.u64(p.k_per_table as u64)?;
+        w.u64(p.n_tables as u64)?;
+        let s = self.scale();
+        w.f32(s.u)?;
+        w.f32(s.factor)?;
+        w.f32(s.max_norm)?;
+        w.u64(self.dim() as u64)?;
+        w.u64(self.n_items() as u64)?;
+        for id in 0..self.n_items() as u32 {
+            w.f32s(self.item(id))?;
+        }
+        for fam in self.families() {
+            w.u64(fam.dim() as u64)?;
+            w.u64(fam.k() as u64)?;
+            w.f32(fam.r())?;
+            w.f32s(&fam.a_scaled_raw())?;
+            w.f32s(fam.b_vector())?;
+        }
+        for t in self.tables() {
+            w.u64(t.n_buckets() as u64)?;
+            for (key, ids) in t.buckets() {
+                w.u64(*key)?;
+                w.u64(ids.len() as u64)?;
+                for id in ids {
+                    w.w.write_all(&id.to_le_bytes())?;
+                }
+            }
+        }
+        w.w.flush()?;
+        Ok(())
+    }
+
+    /// Load an index previously written by [`AlshIndex::save`].
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let file = std::fs::File::open(path.as_ref())?;
+        let mut r = Reader { r: BufReader::new(file) };
+        let mut magic = [0u8; 4];
+        r.r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
+        let version = r.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported index version {version}");
+        const CAP: u64 = 1 << 40; // sanity cap on any length field
+        let params = AlshParams {
+            m: r.len(64, "m")?,
+            u: r.f32()?,
+            r: r.f32()?,
+            k_per_table: r.len(1 << 20, "k_per_table")?,
+            n_tables: r.len(1 << 20, "n_tables")?,
+        };
+        let scale = crate::transform::UScale {
+            u: r.f32()?,
+            factor: r.f32()?,
+            max_norm: r.f32()?,
+        };
+        let dim = r.len(1 << 24, "dim")?;
+        let n_items = r.len(CAP, "n_items")?;
+        let items_flat = r.f32s(n_items * dim)?;
+        let mut families = Vec::with_capacity(params.n_tables);
+        for _ in 0..params.n_tables {
+            let fdim = r.len(1 << 24, "family dim")?;
+            let fk = r.len(1 << 20, "family k")?;
+            anyhow::ensure!(
+                fdim == dim + params.m && fk == params.k_per_table,
+                "corrupt index file: family shape mismatch"
+            );
+            let fr = r.f32()?;
+            let a = r.f32s(fk * fdim)?;
+            let b = r.f32s(fk)?;
+            families.push(crate::lsh::L2LshFamily::from_raw(fdim, fk, fr, a, b));
+        }
+        let mut tables = Vec::with_capacity(params.n_tables);
+        for _ in 0..params.n_tables {
+            let n_buckets = r.len(CAP, "n_buckets")?;
+            let mut table = super::hash_table::HashTable::new();
+            for _ in 0..n_buckets {
+                let key = r.u64()?;
+                let len = r.len(n_items as u64, "bucket len")?;
+                let mut ids = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let mut b = [0u8; 4];
+                    r.r.read_exact(&mut b)?;
+                    let id = u32::from_le_bytes(b);
+                    anyhow::ensure!(
+                        (id as usize) < n_items,
+                        "corrupt index file: id {id} out of range"
+                    );
+                    ids.push(id);
+                }
+                table.insert_raw(key, ids);
+            }
+            tables.push(table);
+        }
+        // Reject trailing garbage.
+        let mut extra = [0u8; 1];
+        anyhow::ensure!(
+            r.r.read(&mut extra)? == 0,
+            "corrupt index file: trailing bytes"
+        );
+        Ok(AlshIndex::from_parts(params, scale, families, tables, items_flat, dim, n_items))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32() * 0.5).collect())
+            .collect()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alsh-persist-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_queries() {
+        let its = items(300, 12, 1);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 2);
+        let path = tmp("roundtrip.alsh");
+        idx.save(&path).unwrap();
+        let loaded = AlshIndex::load(&path).unwrap();
+        assert_eq!(loaded.n_items(), idx.n_items());
+        assert_eq!(loaded.dim(), idx.dim());
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+            assert_eq!(idx.query(&q, 10), loaded.query(&q, 10));
+            let mut a = idx.candidates(&q);
+            let mut b = loaded.candidates(&q);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad_magic.alsh");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("not an ALSH index"));
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let its = items(50, 6, 4);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 5);
+        let path = tmp("trunc.alsh");
+        idx.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(AlshIndex::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let its = items(20, 4, 6);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 7);
+        let path = tmp("trail.alsh");
+        idx.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("trailing"));
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let its = items(20, 4, 8);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 9);
+        let path = tmp("version.alsh");
+        idx.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99; // version field
+        std::fs::write(&path, &bytes).unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("version"));
+    }
+}

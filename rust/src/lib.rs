@@ -1,0 +1,50 @@
+//! # alsh — Asymmetric LSH for sublinear-time Maximum Inner Product Search
+//!
+//! A production-grade reproduction of Shrivastava & Li, *"Asymmetric LSH
+//! (ALSH) for Sublinear Time Maximum Inner Product Search (MIPS)"*
+//! (NIPS 2014), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build-time)** — the hash-code and rerank matmul
+//!   kernels (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **Layer 2 (JAX, build-time)** — the ALSH pipeline: asymmetric
+//!   transforms P/Q (Eq. 12–13) fused with the L2LSH projection
+//!   (`python/compile/model.py`).
+//! * **Layer 3 (this crate)** — the serving system: hash-table index,
+//!   dynamic batcher over PJRT executables, query router, the theory
+//!   (ρ\*) optimizer, the PureSVD data pipeline, and the full evaluation
+//!   harness that regenerates every figure in the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! compute once; the Rust binary loads `artifacts/*.hlo.txt` via PJRT.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use alsh::index::{AlshIndex, AlshParams};
+//!
+//! // 1000 item vectors of dim 32 with varying norms.
+//! let items: Vec<Vec<f32>> = (0..1000)
+//!     .map(|i| (0..32).map(|j| ((i * 31 + j) % 17) as f32 / 17.0).collect())
+//!     .collect();
+//! let index = AlshIndex::build(&items, AlshParams::default(), 42);
+//! let query: Vec<f32> = (0..32).map(|j| (j as f32).sin()).collect();
+//! let top = index.query(&query, 10);
+//! println!("best item = {} (ip = {})", top[0].id, top[0].score);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod figures;
+pub mod index;
+pub mod linalg;
+pub mod lsh;
+pub mod runtime;
+pub mod theory;
+pub mod transform;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,150 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! The randomized SVD reduces the problem to the eigendecomposition of the
+//! small `k x k` Gram matrix `B Bᵀ`; Jacobi is simple, numerically robust,
+//! and plenty fast at k <= a few hundred.
+
+use super::dense::Mat;
+
+/// Eigendecomposition of a symmetric matrix: `a = V diag(w) Vᵀ`.
+///
+/// Returns `(w, v)` with eigenvalues `w` sorted descending and eigenvectors
+/// as *columns* of `v`.
+pub fn symmetric_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "symmetric_eigen needs a square matrix");
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply the rotation on rows/cols p and q.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract + sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| w[j].partial_cmp(&w[i]).unwrap());
+    let w_sorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let v_sorted = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
+    (w_sorted, v_sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.f64() * 2.0 - 1.0;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { (3 - i) as f64 } else { 0.0 });
+        let (w, _v) = symmetric_eigen(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (w, v) = symmetric_eigen(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        // eigenvector for 3 is (1,1)/sqrt(2) up to sign
+        let ratio = v[(0, 0)] / v[(1, 0)];
+        assert!((ratio - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let a = rand_symmetric(12, 7);
+        let (w, v) = symmetric_eigen(&a);
+        // A ?= V diag(w) Vᵀ
+        let mut vd = v.clone();
+        for i in 0..12 {
+            for j in 0..12 {
+                vd[(i, j)] = v[(i, j)] * w[j];
+            }
+        }
+        let recon = vd.matmul(&v.transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-9, "diff {}", recon.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = rand_symmetric(15, 8);
+        let (_w, v) = symmetric_eigen(&a);
+        let vtv = v.t_matmul(&v);
+        assert!(vtv.max_abs_diff(&Mat::eye(15)) < 1e-9);
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let a = rand_symmetric(10, 9);
+        let (w, _) = symmetric_eigen(&a);
+        for i in 1..w.len() {
+            assert!(w[i - 1] >= w[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_equals_eigen_sum() {
+        let a = rand_symmetric(9, 10);
+        let (w, _) = symmetric_eigen(&a);
+        let trace: f64 = (0..9).map(|i| a[(i, i)]).sum();
+        assert!((trace - w.iter().sum::<f64>()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense + sparse linear algebra substrate.
+//!
+//! The paper's evaluation pipeline (§4.1, "PureSVD" of Cremonesi et al.)
+//! needs a truncated SVD of a large sparse user–item ratings matrix. No
+//! external linear-algebra crates are used: this module implements dense
+//! matrices, Householder QR, a Jacobi symmetric eigensolver, CSR sparse
+//! matrices, and randomized truncated SVD (Halko–Martinsson–Tropp) on top
+//! of them.
+
+pub mod dense;
+pub mod eigen;
+pub mod qr;
+pub mod sparse;
+pub mod svd;
+
+pub use dense::Mat;
+pub use sparse::Csr;
+pub use svd::{randomized_svd, LinOp, Svd};

@@ -1,0 +1,193 @@
+//! CSR sparse matrix — the ratings-matrix substrate for PureSVD.
+
+use super::dense::Mat;
+
+/// Compressed sparse row matrix of `f64`.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointer array, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, length nnz.
+    indices: Vec<u32>,
+    /// Values, length nnz.
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets. Duplicate entries are summed.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Self {
+        let mut per_row: Vec<Vec<(u32, f64)>> = vec![Vec::new(); rows];
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            per_row[r].push((c as u32, v));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in &mut per_row {
+            row.sort_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let c = row[i].0;
+                let mut v = row[i].1;
+                let mut j = i + 1;
+                while j < row.len() && row[j].0 == c {
+                    v += row[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                values.push(v);
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Entries of row `i` as (col, value) pairs.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// Dense product `self * x` for a dense matrix `x` (cols x k).
+    pub fn matmul_dense(&self, x: &Mat) -> Mat {
+        assert_eq!(self.cols, x.rows(), "spmm shape mismatch");
+        let k = x.cols();
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            let orow = out.row_mut(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let c = self.indices[idx] as usize;
+                let v = self.values[idx];
+                let xrow = x.row(c);
+                for j in 0..k {
+                    orow[j] += v * xrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense product `selfᵀ * x` (x is rows x k) without materializing the
+    /// transpose.
+    pub fn t_matmul_dense(&self, x: &Mat) -> Mat {
+        assert_eq!(self.rows, x.rows(), "spmmᵀ shape mismatch");
+        let k = x.cols();
+        let mut out = Mat::zeros(self.cols, k);
+        for i in 0..self.rows {
+            let xrow = x.row(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let c = self.indices[idx] as usize;
+                let v = self.values[idx];
+                let orow = out.row_mut(c);
+                for j in 0..k {
+                    orow[j] += v * xrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Densify (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (c, v) in self.row_iter(i) {
+                m[(i, c)] = v;
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm of the stored entries.
+    pub fn fro_norm(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_triplets(
+            3,
+            4,
+            vec![(0, 1, 2.0), (0, 3, -1.0), (1, 0, 4.0), (2, 2, 0.5), (2, 2, 0.5)],
+        )
+    }
+
+    #[test]
+    fn from_triplets_sums_duplicates() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        let d = m.to_dense();
+        assert_eq!(d[(2, 2)], 1.0);
+        assert_eq!(d[(0, 1)], 2.0);
+        assert_eq!(d[(0, 3)], -1.0);
+        assert_eq!(d[(1, 0)], 4.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let m = sample();
+        let x = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64 - 3.0);
+        let got = m.matmul_dense(&x);
+        let want = m.to_dense().matmul(&x);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn spmm_t_matches_dense() {
+        let m = sample();
+        let x = Mat::from_fn(3, 2, |i, j| (i + j) as f64 * 0.7);
+        let got = m.t_matmul_dense(&x);
+        let want = m.to_dense().transpose().matmul(&x);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let m = Csr::from_triplets(5, 3, vec![(4, 2, 1.0)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row_iter(0).count(), 0);
+        assert_eq!(m.row_iter(4).count(), 1);
+    }
+
+    #[test]
+    fn fro_norm_matches_dense() {
+        let m = sample();
+        assert!((m.fro_norm() - m.to_dense().fro_norm()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_triplet_panics() {
+        let _ = Csr::from_triplets(2, 2, vec![(2, 0, 1.0)]);
+    }
+}

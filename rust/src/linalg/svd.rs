@@ -1,0 +1,236 @@
+//! Randomized truncated SVD (Halko–Martinsson–Tropp).
+//!
+//! Computes the top-k singular triplets of any linear operator via a
+//! Gaussian range-finder with power iterations:
+//!
+//! ```text
+//! Y = (A Aᵀ)^q A Ω,   Q = thin_qr(Y),   B = Qᵀ A   (k' x n)
+//! B Bᵀ = V̂ diag(σ²) V̂ᵀ  →  U = Q V̂,  V = Bᵀ V̂ diag(1/σ)
+//! ```
+//!
+//! This is the engine behind the PureSVD latent-factor pipeline (§4.1 of
+//! the paper): `R ≈ W Σ Vᵀ`, users = rows of `WΣ`, items = rows of `V`.
+
+use crate::util::Rng;
+
+use super::dense::Mat;
+use super::eigen::symmetric_eigen;
+use super::qr::thin_qr_q;
+use super::sparse::Csr;
+
+/// Abstract linear operator: enough surface for the randomized range finder.
+pub trait LinOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// `self * x` where `x` is `cols x k`.
+    fn apply(&self, x: &Mat) -> Mat;
+    /// `selfᵀ * x` where `x` is `rows x k`.
+    fn apply_t(&self, x: &Mat) -> Mat;
+}
+
+impl LinOp for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+    fn apply(&self, x: &Mat) -> Mat {
+        self.matmul(x)
+    }
+    fn apply_t(&self, x: &Mat) -> Mat {
+        self.t_matmul(x)
+    }
+}
+
+impl LinOp for Csr {
+    fn rows(&self) -> usize {
+        Csr::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Csr::cols(self)
+    }
+    fn apply(&self, x: &Mat) -> Mat {
+        self.matmul_dense(x)
+    }
+    fn apply_t(&self, x: &Mat) -> Mat {
+        self.t_matmul_dense(x)
+    }
+}
+
+/// Truncated SVD result: `A ≈ U diag(s) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// `rows x k` left singular vectors (columns orthonormal).
+    pub u: Mat,
+    /// Top-k singular values, descending.
+    pub s: Vec<f64>,
+    /// `cols x k` right singular vectors (columns orthonormal).
+    pub v: Mat,
+}
+
+/// Randomized truncated SVD of `a` with target rank `k`.
+///
+/// `oversample` extra probe vectors (default choice: 10) and `n_iter`
+/// power iterations (2 is plenty for ratings matrices) control accuracy.
+pub fn randomized_svd(
+    a: &impl LinOp,
+    k: usize,
+    oversample: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    let k = k.min(m).min(n);
+    let l = (k + oversample).min(m).min(n);
+    // Gaussian probe.
+    let omega = Mat::from_fn(n, l, |_, _| rng.normal_f64());
+    let mut y = a.apply(&omega); // m x l
+    // Power iterations with re-orthonormalization for stability.
+    for _ in 0..n_iter {
+        let q = thin_qr_q(&y);
+        let z = a.apply_t(&q); // n x l
+        let qz = thin_qr_q(&z);
+        y = a.apply(&qz); // m x l
+    }
+    let q = thin_qr_q(&y); // m x l, orthonormal
+    // B = Qᵀ A  is  l x n; we form Bᵀ = Aᵀ Q  (n x l) with one operator call.
+    let bt = a.apply_t(&q); // n x l
+    // B Bᵀ = (Bᵀ)ᵀ Bᵀ  is  l x l.
+    let gram = bt.t_matmul(&bt);
+    let (w, vhat) = symmetric_eigen(&gram); // gram = vhat diag(w) vhatᵀ
+    // Keep top-k non-negative eigenvalues.
+    let mut s = Vec::with_capacity(k);
+    for i in 0..k {
+        s.push(w[i].max(0.0).sqrt());
+    }
+    // U = Q * vhat[:, :k]
+    let vhat_k = Mat::from_fn(l, k, |i, j| vhat[(i, j)]);
+    let u = q.matmul(&vhat_k); // m x k
+    // V = Bᵀ vhat diag(1/σ)
+    let mut v = bt.matmul(&vhat_k); // n x k
+    for i in 0..n {
+        let row = v.row_mut(i);
+        for j in 0..k {
+            if s[j] > 1e-12 {
+                row[j] /= s[j];
+            } else {
+                row[j] = 0.0;
+            }
+        }
+    }
+    Svd { u, s, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a dense matrix with known singular values via U diag(s) Vᵀ.
+    fn known_svd_matrix(m: usize, n: usize, s: &[f64], seed: u64) -> Mat {
+        let mut rng = Rng::seed_from_u64(seed);
+        let a = Mat::from_fn(m, s.len(), |_, _| rng.normal_f64());
+        let b = Mat::from_fn(n, s.len(), |_, _| rng.normal_f64());
+        let u = thin_qr_q(&a);
+        let v = thin_qr_q(&b);
+        // u diag(s) vᵀ
+        let mut ud = u.clone();
+        for i in 0..m {
+            for j in 0..s.len() {
+                ud[(i, j)] = u[(i, j)] * s[j];
+            }
+        }
+        ud.matmul(&v.transpose())
+    }
+
+    #[test]
+    fn recovers_singular_values_exact_rank() {
+        let s_true = [10.0, 5.0, 2.0, 1.0];
+        let a = known_svd_matrix(30, 20, &s_true, 1);
+        let mut rng = Rng::seed_from_u64(2);
+        let svd = randomized_svd(&a, 4, 8, 3, &mut rng);
+        for (got, want) in svd.s.iter().zip(s_true.iter()) {
+            assert!((got - want).abs() < 1e-8, "σ {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_small() {
+        let s_true = [8.0, 4.0, 2.0];
+        let a = known_svd_matrix(25, 18, &s_true, 3);
+        let mut rng = Rng::seed_from_u64(4);
+        let svd = randomized_svd(&a, 3, 6, 3, &mut rng);
+        // U diag(s) Vᵀ ≈ A
+        let mut ud = svd.u.clone();
+        for i in 0..25 {
+            for j in 0..3 {
+                ud[(i, j)] = svd.u[(i, j)] * svd.s[j];
+            }
+        }
+        let recon = ud.matmul(&svd.v.transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-7, "err {}", recon.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let s_true = [6.0, 3.0, 1.5, 0.7];
+        let a = known_svd_matrix(40, 22, &s_true, 5);
+        let mut rng = Rng::seed_from_u64(6);
+        let svd = randomized_svd(&a, 4, 6, 3, &mut rng);
+        let utu = svd.u.t_matmul(&svd.u);
+        let vtv = svd.v.t_matmul(&svd.v);
+        assert!(utu.max_abs_diff(&Mat::eye(4)) < 1e-8);
+        assert!(vtv.max_abs_diff(&Mat::eye(4)) < 1e-8);
+    }
+
+    #[test]
+    fn works_on_sparse_input() {
+        // Rank-2 sparse-ish matrix.
+        let mut trips = Vec::new();
+        for i in 0..30usize {
+            for j in 0..15usize {
+                if (i + j) % 3 == 0 {
+                    let v = (i as f64 * 0.3) * (j as f64 * 0.2 + 1.0)
+                        + (i as f64).cos() * (j as f64).sin();
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        let sp = Csr::from_triplets(30, 15, trips);
+        let dense = sp.to_dense();
+        let mut rng1 = Rng::seed_from_u64(7);
+        let mut rng2 = Rng::seed_from_u64(7);
+        let s1 = randomized_svd(&sp, 5, 5, 3, &mut rng1);
+        let s2 = randomized_svd(&dense, 5, 5, 3, &mut rng2);
+        for (a, b) in s1.s.iter().zip(s2.s.iter()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn truncation_captures_dominant_energy() {
+        // Rank-6 matrix, ask for top-2: σ̂ should match the top two σ.
+        let s_true = [20.0, 10.0, 1.0, 0.5, 0.2, 0.1];
+        let a = known_svd_matrix(35, 30, &s_true, 8);
+        let mut rng = Rng::seed_from_u64(9);
+        let svd = randomized_svd(&a, 2, 10, 4, &mut rng);
+        assert!((svd.s[0] - 20.0).abs() < 0.05);
+        assert!((svd.s[1] - 10.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn k_larger_than_rank_is_clamped_gracefully() {
+        let s_true = [5.0, 2.0];
+        let a = known_svd_matrix(10, 8, &s_true, 10);
+        let mut rng = Rng::seed_from_u64(11);
+        let svd = randomized_svd(&a, 6, 4, 3, &mut rng);
+        assert!((svd.s[0] - 5.0).abs() < 1e-7);
+        assert!((svd.s[1] - 2.0).abs() < 1e-7);
+        // Trailing singular values are ~0.
+        for v in &svd.s[2..] {
+            assert!(*v < 1e-6);
+        }
+        assert!(svd.u.as_slice().iter().all(|x| x.is_finite()));
+        assert!(svd.v.as_slice().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,14 @@
+//! The L2LSH hash family (Datar et al. 2004) — Eq. 8 of the paper.
+//!
+//! `h_{a,b}(x) = floor((aᵀx + b) / r)` with `a ~ N(0, I)` and
+//! `b ~ Uniform[0, r)`.
+//!
+//! This pure-Rust implementation mirrors, bit-for-bit up to f32 rounding,
+//! the Pallas kernel shipped in `artifacts/` (which computes
+//! `floor(x @ (A/r) + b/r)`); integration tests cross-check the two.
+
+pub mod family;
+pub mod srp;
+
+pub use family::L2LshFamily;
+pub use srp::SrpFamily;

@@ -1,0 +1,134 @@
+//! Sign-random-projection (SimHash) hash family — the engine of the
+//! Sign-ALSH extension (paper §5 future work; Shrivastava & Li 2015).
+//!
+//! `h(x) = 1[aᵀx >= 0]` with `a ~ N(0, I)`; collision probability between
+//! two vectors is `1 − θ/π` where θ is the angle between them.
+
+use crate::util::Rng;
+
+/// A family of `k` independent sign-random-projection functions.
+#[derive(Clone, Debug)]
+pub struct SrpFamily {
+    dim: usize,
+    k: usize,
+    /// `[k * dim]`, one projection direction per hash function.
+    a: Vec<f32>,
+}
+
+impl SrpFamily {
+    /// Sample a fresh family: `a ~ N(0,1)^dim` per function.
+    pub fn sample(dim: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(dim > 0 && k > 0);
+        let a = (0..k * dim).map(|_| rng.normal_f32()).collect();
+        Self { dim, k, a }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Projection matrix in artifact layout `[dim][k]` (the `a` input of
+    /// the `sign_alsh_*` artifacts).
+    pub fn a_matrix_dk(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim * self.k];
+        for kk in 0..self.k {
+            for d in 0..self.dim {
+                out[d * self.k + kk] = self.a[kk * self.dim + d];
+            }
+        }
+        out
+    }
+
+    /// Code of `x` under function `k_idx` (0 or 1).
+    #[inline]
+    pub fn hash_one(&self, x: &[f32], k_idx: usize) -> i32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let row = &self.a[k_idx * self.dim..(k_idx + 1) * self.dim];
+        (super::family::dot_simple(row, x) >= 0.0) as i32
+    }
+
+    /// All `k` codes of `x`, appended to `out`.
+    pub fn hash_into(&self, x: &[f32], out: &mut Vec<i32>) {
+        for k_idx in 0..self.k {
+            out.push(self.hash_one(x, k_idx));
+        }
+    }
+
+    pub fn hash(&self, x: &[f32]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.k);
+        self.hash_into(x, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_bits() {
+        let mut rng = Rng::seed_from_u64(1);
+        let f = SrpFamily::sample(8, 64, &mut rng);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32).sin()).collect();
+        assert!(f.hash(&x).iter().all(|&c| c == 0 || c == 1));
+    }
+
+    #[test]
+    fn scale_invariant() {
+        // sign(aᵀ(cx)) == sign(aᵀx) for c > 0.
+        let mut rng = Rng::seed_from_u64(2);
+        let f = SrpFamily::sample(12, 128, &mut rng);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).cos()).collect();
+        let x3: Vec<f32> = x.iter().map(|v| v * 3.0).collect();
+        assert_eq!(f.hash(&x), f.hash(&x3));
+    }
+
+    #[test]
+    fn antipodal_points_flip_all_codes() {
+        let mut rng = Rng::seed_from_u64(3);
+        let f = SrpFamily::sample(6, 256, &mut rng);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let hx = f.hash(&x);
+        let hn = f.hash(&neg);
+        // aᵀx is continuous, so aᵀx == 0 has measure zero: all flip.
+        let flipped = hx.iter().zip(&hn).filter(|(a, b)| a != b).count();
+        assert_eq!(flipped, 256);
+    }
+
+    #[test]
+    fn collision_rate_matches_angle() {
+        // P(h(x)=h(y)) = 1 - θ/π.
+        let mut rng = Rng::seed_from_u64(4);
+        let dim = 16;
+        let f = SrpFamily::sample(dim, 16384, &mut rng);
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> = x.iter().map(|v| v + 0.7 * rng.normal_f32() * 0.3).collect();
+        let dot: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let cos = dot
+            / (crate::transform::l2_norm(&x) * crate::transform::l2_norm(&y));
+        let theta = cos.clamp(-1.0, 1.0).acos() as f64;
+        let hx = f.hash(&x);
+        let hy = f.hash(&y);
+        let frac =
+            hx.iter().zip(&hy).filter(|(a, b)| a == b).count() as f64 / hx.len() as f64;
+        let want = 1.0 - theta / std::f64::consts::PI;
+        assert!((frac - want).abs() < 0.015, "frac {frac} vs 1-θ/π {want}");
+    }
+
+    #[test]
+    fn layout_roundtrip() {
+        let mut rng = Rng::seed_from_u64(5);
+        let f = SrpFamily::sample(5, 7, &mut rng);
+        let a_dk = f.a_matrix_dk();
+        for kk in 0..7 {
+            for d in 0..5 {
+                assert_eq!(a_dk[d * 7 + kk], f.a[kk * 5 + d]);
+            }
+        }
+    }
+}

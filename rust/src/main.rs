@@ -1,0 +1,246 @@
+//! `repro` — the ALSH-MIPS leader binary.
+//!
+//! ```text
+//! repro figure <1..8> [--dataset D] [--users N] [--out-dir results]
+//! repro serve  [--dataset tiny] [--addr 127.0.0.1:7878] [--artifacts artifacts]
+//!              [--max-batch 64] [--max-wait-us 2000] [--tables 32] [--codes-per-table 6]
+//! repro query  [--dataset tiny] [--top-k 10] [--n-queries 5]
+//! repro info   [--artifacts artifacts] [--dataset tiny]
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use alsh::config::{DatasetConfig, PrExperimentConfig};
+use alsh::coordinator::{serve, BatcherConfig, MipsEngine, PjrtBatcher, ServeConfig};
+use alsh::data::generate_dataset;
+use alsh::figures;
+use alsh::index::AlshParams;
+use alsh::theory::GridSpec;
+use alsh::util::cli::Args;
+use alsh::{log_error, log_info};
+
+const USAGE: &str = "\
+repro — ALSH for sublinear-time MIPS (NIPS 2014) reproduction
+
+USAGE:
+  repro figure <1..8> [--dataset movielens|netflix|tiny] [--users N]
+                      [--out-dir results] [--coarse]
+  repro serve  [--dataset tiny] [--addr 127.0.0.1:7878] [--artifacts artifacts]
+               [--max-batch 64] [--max-wait-us 2000] [--tables 32]
+               [--codes-per-table 6]
+  repro query  [--dataset tiny] [--top-k 10] [--n-queries 5]
+  repro validate [--dim 24] [--m 3] [--u 0.83] [--r 2.5] [--hashes 20000]
+  repro info   [--artifacts artifacts] [--dataset tiny]
+
+Figures: 1 rho* vs c | 2 optimal (m,U,r) | 3 recommended params |
+         4 collision prob | 5 Movielens PR | 6 Netflix PR | 7 r-sweep |
+         8 L2-ALSH vs Sign-ALSH ablation (extension)
+";
+
+fn main() {
+    alsh::util::log::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.positional.first().map(|s| s.as_str()) {
+        Some("figure") => run_figure(&args),
+        Some("serve") => run_serve(&args),
+        Some("query") => run_query(&args),
+        Some("validate") => run_validate(&args),
+        Some("info") => run_info(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        log_error!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &Args) -> anyhow::Result<PrExperimentConfig> {
+    let mut cfg = PrExperimentConfig::default();
+    if let Some(u) = args.get_parse::<usize>("users").map_err(anyhow::Error::msg)? {
+        cfg.n_users = u;
+    }
+    Ok(cfg)
+}
+
+fn run_figure(args: &Args) -> anyhow::Result<()> {
+    let n: u32 = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("figure number required (1-7)"))?
+        .parse()?;
+    let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
+    let pr_cfg = parse_flags(args)?;
+    let grid = if args.has("coarse") { GridSpec::coarse() } else { GridSpec::default() };
+    let (name, csv) = match n {
+        1 => ("fig1_rho_star".to_string(), figures::fig1_rho_star(&grid)),
+        2 => ("fig2_optimal_params".to_string(), figures::fig2_optimal_params(&grid)),
+        3 => ("fig3_recommended".to_string(), figures::fig3_recommended(&grid)),
+        4 => ("fig4_collision".to_string(), figures::fig4_collision()),
+        5 | 6 => {
+            let ds = match args.get("dataset") {
+                Some(d) => DatasetConfig::by_name(d)?,
+                None if n == 5 => DatasetConfig::movielens_like(),
+                None => DatasetConfig::netflix_like(),
+            };
+            log_info!("figure {n}: dataset={} users={}", ds.name, pr_cfg.n_users);
+            let points = figures::run_pr_figure(&ds, &pr_cfg)?;
+            let mut csv = figures::pr_figs::PR_CSV_HEADER.to_string();
+            for p in &points {
+                csv.push_str(&p.csv_rows());
+            }
+            (format!("fig{n}_{}", ds.name), csv)
+        }
+        7 => {
+            let ds = match args.get("dataset") {
+                Some(d) => DatasetConfig::by_name(d)?,
+                None => DatasetConfig::movielens_like(),
+            };
+            log_info!("figure 7: dataset={} users={}", ds.name, pr_cfg.n_users);
+            let points = figures::fig7_r_sensitivity(&ds, &pr_cfg)?;
+            let mut csv = figures::pr_figs::PR_CSV_HEADER.to_string();
+            for p in &points {
+                csv.push_str(&p.csv_rows());
+            }
+            (format!("fig7_{}", ds.name), csv)
+        }
+        8 => {
+            let ds = match args.get("dataset") {
+                Some(d) => DatasetConfig::by_name(d)?,
+                None => DatasetConfig::movielens_like(),
+            };
+            log_info!(
+                "figure 8 (extension): L2-ALSH vs Sign-ALSH, dataset={} users={}",
+                ds.name,
+                pr_cfg.n_users
+            );
+            let points = figures::fig8_sign_ablation(&ds, &pr_cfg)?;
+            let mut csv = figures::pr_figs::PR_CSV_HEADER.to_string();
+            for p in &points {
+                csv.push_str(&p.csv_rows());
+            }
+            (format!("fig8_{}", ds.name), csv)
+        }
+        other => anyhow::bail!("unknown figure {other} (1-8)"),
+    };
+    print!("{csv}");
+    let path = figures::write_csv(&out_dir, &name, &csv)?;
+    log_info!("wrote {}", path.display());
+    Ok(())
+}
+
+fn run_serve(args: &Args) -> anyhow::Result<()> {
+    let ds = DatasetConfig::by_name(args.get_or("dataset", "tiny"))?;
+    let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let max_batch = args.get_parse_or("max-batch", 64usize).map_err(anyhow::Error::msg)?;
+    let max_wait_us =
+        args.get_parse_or("max-wait-us", 2000u64).map_err(anyhow::Error::msg)?;
+    let tables = args.get_parse_or("tables", 32usize).map_err(anyhow::Error::msg)?;
+    let codes = args.get_parse_or("codes-per-table", 6usize).map_err(anyhow::Error::msg)?;
+
+    log_info!("building dataset {} (PureSVD f={})", ds.name, ds.latent_dim);
+    let data = generate_dataset(&ds)?;
+    let params =
+        AlshParams { n_tables: tables, k_per_table: codes, ..AlshParams::default() };
+    log_info!(
+        "indexing {} items dim={} (L={} K={})",
+        data.items.len(),
+        data.latent_dim,
+        params.n_tables,
+        params.k_per_table
+    );
+    let engine = Arc::new(MipsEngine::new(&data.items, params, ds.seed ^ 0xA15));
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        artifacts,
+        BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(max_wait_us),
+            ..Default::default()
+        },
+    )?;
+    serve(ServeConfig { addr }, batcher.handle(), engine)
+}
+
+fn run_query(args: &Args) -> anyhow::Result<()> {
+    let ds = DatasetConfig::by_name(args.get_or("dataset", "tiny"))?;
+    let top_k = args.get_parse_or("top-k", 10usize).map_err(anyhow::Error::msg)?;
+    let n_queries =
+        args.get_parse_or("n-queries", 5usize).map_err(anyhow::Error::msg)?;
+    let data = generate_dataset(&ds)?;
+    let engine = MipsEngine::new(&data.items, AlshParams::default(), ds.seed ^ 0xA15);
+    for (i, user) in data.users.iter().take(n_queries).enumerate() {
+        let hits = engine.query(user, top_k);
+        let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+        println!(
+            "user {i}: top-{top_k} items {ids:?} (best ip {:.4})",
+            hits.first().map(|h| h.score).unwrap_or(f32::NAN)
+        );
+    }
+    let snap = engine.metrics().snapshot();
+    println!(
+        "served {} queries, mean latency {:.0}µs, mean candidates {:.1}",
+        snap.queries,
+        snap.mean_latency_us,
+        snap.candidates as f64 / snap.queries.max(1) as f64
+    );
+    Ok(())
+}
+
+/// Print the Theorem-3 empirical-vs-theory collision table.
+fn run_validate(args: &Args) -> anyhow::Result<()> {
+    let dim = args.get_parse_or("dim", 24usize).map_err(anyhow::Error::msg)?;
+    let m = args.get_parse_or("m", 3usize).map_err(anyhow::Error::msg)?;
+    let u = args.get_parse_or("u", 0.83f32).map_err(anyhow::Error::msg)?;
+    let r = args.get_parse_or("r", 2.5f32).map_err(anyhow::Error::msg)?;
+    let hashes = args.get_parse_or("hashes", 20_000usize).map_err(anyhow::Error::msg)?;
+    let rows = alsh::theory::validate_theorem3(dim, m, u, r, hashes, 42);
+    print!("{}", alsh::theory::validation_csv(&rows));
+    Ok(())
+}
+
+fn run_info(args: &Args) -> anyhow::Result<()> {
+    let artifacts = Path::new(args.get_or("artifacts", "artifacts"));
+    match alsh::runtime::Runtime::load(artifacts) {
+        Ok(rt) => {
+            println!("artifacts ({}):", artifacts.display());
+            for a in &rt.manifest().artifacts {
+                println!(
+                    "  {:<28} fn={:<10} d={} m={} k={} batch={}",
+                    a.name, a.function, a.dim, a.m, a.k, a.batch
+                );
+            }
+        }
+        Err(e) => println!("artifacts not available: {e:#}"),
+    }
+    let ds = DatasetConfig::by_name(args.get_or("dataset", "tiny"))?;
+    let data = generate_dataset(&ds)?;
+    let norms: Vec<f32> = data.items.iter().map(|v| alsh::transform::l2_norm(v)).collect();
+    let (mut mn, mut mx, mut sum) = (f32::MAX, 0.0f32, 0.0f64);
+    for &n in &norms {
+        mn = mn.min(n);
+        mx = mx.max(n);
+        sum += n as f64;
+    }
+    println!(
+        "dataset {}: {} users, {} items, f={}, item-norm min/mean/max = {:.3}/{:.3}/{:.3}",
+        data.name,
+        data.users.len(),
+        data.items.len(),
+        data.latent_dim,
+        mn,
+        sum / norms.len() as f64,
+        mx
+    );
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them on
+//! the request path. This is the only place the `xla` crate is touched.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids cleanly.
+
+pub mod registry;
+
+pub use registry::{ArtifactMeta, Manifest, Runtime};

@@ -1,0 +1,357 @@
+//! Artifact registry: manifest.json → lazily compiled PJRT executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+/// Metadata of one AOT artifact, as written by `python/compile/aot.py`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// One of `alsh_data`, `alsh_query`, `l2lsh`, `rerank`.
+    pub function: String,
+    /// Raw (untransformed) input dimension D.
+    pub dim: usize,
+    /// Number of P/Q norm components baked into the graph (0 for l2lsh /
+    /// rerank).
+    pub m: usize,
+    /// Hash count K (or candidate count M for rerank).
+    pub k: usize,
+    /// Fixed batch size of the executable.
+    pub batch: usize,
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// The manifest shipped alongside the artifacts.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse the manifest.json emitted by `python/compile/aot.py`.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let batch = v
+            .get("batch")
+            .and_then(Json::as_usize)
+            .context("manifest missing batch")?;
+        let mut artifacts = Vec::new();
+        for (i, a) in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+            .iter()
+            .enumerate()
+        {
+            let field = |k: &str| {
+                a.get(k)
+                    .with_context(|| format!("artifact {i}: missing {k}"))
+            };
+            let str_field = |k: &str| -> anyhow::Result<String> {
+                Ok(field(k)?.as_str().context("not a string")?.to_string())
+            };
+            let num_field = |k: &str| -> anyhow::Result<usize> {
+                field(k)?.as_usize().context("not a non-negative int")
+            };
+            let arg_shapes = field("arg_shapes")?
+                .as_arr()
+                .context("arg_shapes not an array")?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .context("shape not an array")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim not an int"))
+                        .collect::<anyhow::Result<Vec<usize>>>()
+                })
+                .collect::<anyhow::Result<Vec<Vec<usize>>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: str_field("name")?,
+                file: str_field("file")?,
+                function: str_field("function")?,
+                dim: num_field("dim")?,
+                m: num_field("m")?,
+                k: num_field("k")?,
+                batch: num_field("batch")?,
+                arg_shapes,
+            });
+        }
+        Ok(Self { batch, artifacts })
+    }
+}
+
+/// A loaded PJRT CPU client plus the compiled-executable cache.
+///
+/// Not `Send`: PJRT handles live on the thread that created them. The
+/// coordinator wraps a `Runtime` in a dedicated worker thread
+/// (`coordinator::batcher`); synchronous callers (figures, examples,
+/// benches) use it directly.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` (usually `artifacts/`) and create the
+    /// PJRT CPU client. Executables compile lazily on first use.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text).context("bad manifest.json")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Find the artifact for `function` at raw dimension `dim`.
+    pub fn find(&self, function: &str, dim: usize) -> crate::Result<ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.function == function && a.dim == dim)
+            .cloned()
+            .with_context(|| {
+                let have: Vec<String> = self
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .map(|a| format!("{}@d{}", a.function, a.dim))
+                    .collect();
+                format!("no artifact for {function}@d{dim}; have: {have:?}")
+            })
+    }
+
+    /// Compile (or fetch from cache) the executable for `meta`.
+    fn executable(&mut self, meta: &ArtifactMeta) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&meta.name) {
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", meta.name))?;
+            self.cache.insert(meta.name.clone(), exe);
+        }
+        Ok(&self.cache[&meta.name])
+    }
+
+    /// Eagerly compile every artifact (server warm-up).
+    pub fn warm_up(&mut self) -> crate::Result<usize> {
+        let metas = self.manifest.artifacts.clone();
+        for meta in &metas {
+            self.executable(meta)?;
+        }
+        Ok(metas.len())
+    }
+
+    /// Execute an artifact on literals and return the (tuple-unwrapped)
+    /// result literal.
+    pub fn run(&mut self, meta: &ArtifactMeta, args: &[xla::Literal]) -> crate::Result<xla::Literal> {
+        let exe = self.executable(meta)?;
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", meta.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e:?}", meta.name))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        lit.to_tuple1().map_err(|e| anyhow::anyhow!("tuple unwrap {}: {e:?}", meta.name))
+    }
+
+    /// Hash a batch of raw vectors through a hash artifact
+    /// (`alsh_data` / `alsh_query` / `l2lsh`).
+    ///
+    /// * `rows` — the raw query/item vectors, each of length `meta.dim`
+    ///   (the P/Q transform lives *inside* the artifact).
+    /// * `a_dk` — projection matrix `[dp, k]` row-major, pre-scaled by 1/r
+    ///   (`L2LshFamily::a_matrix_dk` layout), `dp = dim + meta.m`.
+    /// * `b` — offsets `[k]`, pre-scaled by 1/r.
+    ///
+    /// Handles padding to the fixed batch and loops over chunks; returns
+    /// one `Vec<i32>` of length `k` per input row.
+    pub fn run_hash(
+        &mut self,
+        meta: &ArtifactMeta,
+        rows: &[Vec<f32>],
+        a_dk: &[f32],
+        b: &[f32],
+    ) -> crate::Result<Vec<Vec<i32>>> {
+        let d = meta.dim;
+        let dp = d + meta.m;
+        let k = meta.k;
+        let batch = meta.batch;
+        anyhow::ensure!(a_dk.len() == dp * k, "a_dk len {} != {}", a_dk.len(), dp * k);
+        anyhow::ensure!(b.len() == k, "b len {} != {k}", b.len());
+        let a_lit = xla::Literal::vec1(a_dk)
+            .reshape(&[dp as i64, k as i64])
+            .map_err(|e| anyhow::anyhow!("reshape a: {e:?}"))?;
+        let b_lit = xla::Literal::vec1(b);
+        let mut out = Vec::with_capacity(rows.len());
+        let mut xbuf = vec![0.0f32; batch * d];
+        for chunk in rows.chunks(batch) {
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            for (i, row) in chunk.iter().enumerate() {
+                anyhow::ensure!(row.len() == d, "row dim {} != {d}", row.len());
+                xbuf[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+            let x_lit = xla::Literal::vec1(&xbuf)
+                .reshape(&[batch as i64, d as i64])
+                .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+            let res = self.run(meta, &[x_lit, a_lit.clone(), b_lit.clone()])?;
+            let codes: Vec<i32> =
+                res.to_vec().map_err(|e| anyhow::anyhow!("codes to_vec: {e:?}"))?;
+            anyhow::ensure!(codes.len() == batch * k, "bad output size {}", codes.len());
+            for i in 0..chunk.len() {
+                out.push(codes[i * k..(i + 1) * k].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Hash a batch through a *sign* artifact (`sign_alsh_data` /
+    /// `sign_alsh_query`): same contract as [`Runtime::run_hash`] but the
+    /// artifact takes no offset vector (sign hashing has no b).
+    pub fn run_sign_hash(
+        &mut self,
+        meta: &ArtifactMeta,
+        rows: &[Vec<f32>],
+        a_dk: &[f32],
+    ) -> crate::Result<Vec<Vec<i32>>> {
+        let d = meta.dim;
+        let dp = d + meta.m;
+        let k = meta.k;
+        let batch = meta.batch;
+        anyhow::ensure!(a_dk.len() == dp * k, "a_dk len {} != {}", a_dk.len(), dp * k);
+        let a_lit = xla::Literal::vec1(a_dk)
+            .reshape(&[dp as i64, k as i64])
+            .map_err(|e| anyhow::anyhow!("reshape a: {e:?}"))?;
+        let mut out = Vec::with_capacity(rows.len());
+        let mut xbuf = vec![0.0f32; batch * d];
+        for chunk in rows.chunks(batch) {
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            for (i, row) in chunk.iter().enumerate() {
+                anyhow::ensure!(row.len() == d, "row dim {} != {d}", row.len());
+                xbuf[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+            let x_lit = xla::Literal::vec1(&xbuf)
+                .reshape(&[batch as i64, d as i64])
+                .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+            let res = self.run(meta, &[x_lit, a_lit.clone()])?;
+            let codes: Vec<i32> =
+                res.to_vec().map_err(|e| anyhow::anyhow!("codes to_vec: {e:?}"))?;
+            anyhow::ensure!(codes.len() == batch * k, "bad output size {}", codes.len());
+            for i in 0..chunk.len() {
+                out.push(codes[i * k..(i + 1) * k].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Exact inner products of query rows against a candidate matrix via
+    /// the rerank artifact. `cands` are candidate vectors (each `meta.dim`
+    /// long); returns `scores[q][c]`.
+    pub fn run_rerank(
+        &mut self,
+        meta: &ArtifactMeta,
+        queries: &[Vec<f32>],
+        cands: &[&[f32]],
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        let d = meta.dim;
+        let m_cap = meta.k; // candidate capacity of the artifact
+        let batch = meta.batch;
+        anyhow::ensure!(cands.len() <= m_cap, "too many candidates: {} > {m_cap}", cands.len());
+        // Candidate matrix, transposed to [d, m_cap], zero-padded.
+        let mut ct = vec![0.0f32; d * m_cap];
+        for (j, c) in cands.iter().enumerate() {
+            anyhow::ensure!(c.len() == d, "cand dim {} != {d}", c.len());
+            for (i, v) in c.iter().enumerate() {
+                ct[i * m_cap + j] = *v;
+            }
+        }
+        let ct_lit = xla::Literal::vec1(&ct)
+            .reshape(&[d as i64, m_cap as i64])
+            .map_err(|e| anyhow::anyhow!("reshape ct: {e:?}"))?;
+        let mut out = Vec::with_capacity(queries.len());
+        let mut qbuf = vec![0.0f32; batch * d];
+        for chunk in queries.chunks(batch) {
+            qbuf.iter_mut().for_each(|v| *v = 0.0);
+            for (i, row) in chunk.iter().enumerate() {
+                anyhow::ensure!(row.len() == d, "query dim {} != {d}", row.len());
+                qbuf[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+            let q_lit = xla::Literal::vec1(&qbuf)
+                .reshape(&[batch as i64, d as i64])
+                .map_err(|e| anyhow::anyhow!("reshape q: {e:?}"))?;
+            let res = self.run(meta, &[q_lit, ct_lit.clone()])?;
+            let scores: Vec<f32> =
+                res.to_vec().map_err(|e| anyhow::anyhow!("scores to_vec: {e:?}"))?;
+            for i in 0..chunk.len() {
+                out.push(scores[i * m_cap..i * m_cap + cands.len()].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_aot_format() {
+        let text = r#"{
+          "batch": 64,
+          "artifacts": [
+            {
+              "function": "alsh_data", "dim": 8, "m": 3, "k": 512,
+              "batch": 64, "name": "alsh_data_d8_m3_k512",
+              "file": "alsh_data_d8_m3_k512.hlo.txt",
+              "arg_shapes": [[64, 8], [11, 512], [512]]
+            }
+          ]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.name, "alsh_data_d8_m3_k512");
+        assert_eq!((a.dim, a.m, a.k, a.batch), (8, 3, 512, 64));
+        assert_eq!(a.arg_shapes[1], vec![11, 512]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"batch": 64, "artifacts": [{}]}"#).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_is_helpful() {
+        let msg = match Runtime::load("/definitely/not/here") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("load should fail"),
+        };
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+}

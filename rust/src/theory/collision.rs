@@ -1,0 +1,102 @@
+//! L2LSH collision probability F_r(d)  (Eq. 9–10, Datar et al. 2004).
+
+use super::normal::normal_cdf;
+
+/// Collision probability of two points at L2 distance `d` under the
+/// quantized random-projection hash `h(x) = floor((aᵀx + b) / r)`:
+///
+/// ```text
+/// F_r(d) = 1 - 2Φ(-r/d) - (2 / (sqrt(2π) (r/d))) (1 - e^{-(r/d)²/2})
+/// ```
+///
+/// Monotonically decreasing in `d`. At `d -> 0` it tends to 1; at
+/// `d -> ∞` it tends to 0.
+pub fn collision_probability(r: f64, d: f64) -> f64 {
+    assert!(r > 0.0, "r must be positive");
+    if d <= 0.0 {
+        return 1.0;
+    }
+    let t = r / d;
+    let p = 1.0 - 2.0 * normal_cdf(-t)
+        - 2.0 / ((2.0 * std::f64::consts::PI).sqrt() * t) * (1.0 - (-(t * t) / 2.0).exp());
+    p.clamp(0.0, 1.0)
+}
+
+/// Monte-Carlo estimate of the collision probability (validation only):
+/// draws `n` (a, b) pairs and counts collisions of two 1-D points at
+/// distance `d`. Used by tests to validate the closed form.
+pub fn collision_probability_mc(r: f64, d: f64, n: usize, rng: &mut crate::util::Rng) -> f64 {
+    let mut hits = 0usize;
+    for _ in 0..n {
+        let a: f64 = rng.normal_f64();
+        let b: f64 = rng.f64() * r;
+        // Points 0 and d on a line; projections 0*a and d*a.
+        let h1 = ((b) / r).floor();
+        let h2 = ((a * d + b) / r).floor();
+        if h1 == h2 {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn limits() {
+        assert!((collision_probability(2.5, 1e-9) - 1.0).abs() < 1e-6);
+        assert!(collision_probability(2.5, 1e9) < 1e-6);
+        assert_eq!(collision_probability(2.5, 0.0), 1.0);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_d() {
+        for r in [0.5, 1.0, 2.5, 5.0] {
+            let mut prev = 1.0;
+            let mut d = 0.01;
+            while d < 10.0 {
+                let p = collision_probability(r, d);
+                assert!(p <= prev + 1e-9, "F_{r}({d}) not decreasing");
+                assert!((0.0..=1.0).contains(&p));
+                prev = p;
+                d += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_increasing_in_r() {
+        // Wider buckets collide more.
+        let mut prev = 0.0;
+        for i in 1..100 {
+            let r = i as f64 * 0.1;
+            let p = collision_probability(r, 1.0);
+            assert!(p >= prev - 1e-9);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn matches_monte_carlo() {
+        let mut rng = Rng::seed_from_u64(12);
+        for (r, d) in [(2.5, 1.0), (1.0, 1.0), (2.0, 3.0), (4.0, 0.5)] {
+            let closed = collision_probability(r, d);
+            let mc = collision_probability_mc(r, d, 200_000, &mut rng);
+            assert!(
+                (closed - mc).abs() < 5e-3,
+                "F_{r}({d}): closed {closed} vs mc {mc}"
+            );
+        }
+    }
+
+    #[test]
+    fn depends_only_on_ratio() {
+        // F_r(d) is a function of r/d only.
+        let a = collision_probability(2.5, 1.0);
+        let b = collision_probability(5.0, 2.0);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's theory, executable: collision probabilities, ρ exponents,
+//! and the grid-search optimizer behind Figures 1–4.
+
+pub mod collision;
+pub mod normal;
+pub mod rho;
+pub mod validate;
+
+pub use collision::collision_probability;
+pub use normal::{erf, normal_cdf};
+pub use rho::{optimize_rho, rho_alsh, GridSpec, RhoOpt};
+pub use validate::{validate_theorem3, validation_csv, ValidationRow};

@@ -1,0 +1,96 @@
+//! Standard-normal special functions (no external math crates).
+
+/// Error function, Abramowitz & Stegun 7.1.26 (max abs error ~1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    const P: f64 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF Φ(x).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal PDF φ(x).
+pub fn normal_pdf(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values from tables.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (3.0, 0.9999779095),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x}) = {} != {want}", erf(x));
+        }
+    }
+
+    #[test]
+    fn erf_is_odd() {
+        for x in [0.1, 0.7, 1.3, 2.5] {
+            assert!((erf(-x) + erf(x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cdf_known_values() {
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.8413447461),
+            (-1.0, 0.1586552539),
+            (1.959964, 0.975),
+            (-2.575829, 0.005),
+        ];
+        for (x, want) in cases {
+            assert!(
+                (normal_cdf(x) - want).abs() < 1e-6,
+                "Φ({x}) = {} != {want}",
+                normal_cdf(x)
+            );
+        }
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let mut prev = 0.0;
+        let mut x = -6.0;
+        while x <= 6.0 {
+            let p = normal_cdf(x);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p + 1e-9 >= prev, "CDF not monotone at {x}");
+            prev = p;
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let mut sum = 0.0;
+        let h = 0.001;
+        let mut x = -8.0;
+        while x <= 8.0 {
+            sum += normal_pdf(x) * h;
+            x += h;
+        }
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,172 @@
+//! The query-time exponent ρ for ALSH-for-MIPS and its grid-search
+//! optimizer ρ\* (Eq. 19–20) — the math behind Figures 1–3.
+
+use super::collision::collision_probability;
+
+/// p1 for a c-approximate MIPS instance: collision probability at the
+/// *good* side (qᵀx >= S0), including the transform error term U^(2^(m+1)).
+pub fn p1_alsh(s0: f64, u: f64, m: u32, r: f64) -> f64 {
+    let err = u.powi(2i32.pow(m + 1));
+    let d2 = 1.0 + m as f64 / 4.0 - 2.0 * s0 + err;
+    collision_probability(r, d2.max(0.0).sqrt())
+}
+
+/// p2: collision probability at the *bad* side (qᵀx <= c·S0).
+pub fn p2_alsh(s0: f64, c: f64, m: u32, r: f64) -> f64 {
+    let d2 = 1.0 + m as f64 / 4.0 - 2.0 * c * s0;
+    collision_probability(r, d2.max(0.0).sqrt())
+}
+
+/// ρ = log p1 / log p2  (Eq. 19). Returns `None` when the parameters are
+/// infeasible (p1 <= p2, i.e. no sublinear guarantee).
+pub fn rho_alsh(s0: f64, c: f64, u: f64, m: u32, r: f64) -> Option<f64> {
+    // Feasibility (Sec 3.4): U^(2^(m+1)) / (2 S0) < 1 - c.
+    let err = u.powi(2i32.pow(m + 1));
+    if err / (2.0 * s0) >= 1.0 - c {
+        return None;
+    }
+    let p1 = p1_alsh(s0, u, m, r);
+    let p2 = p2_alsh(s0, c, m, r);
+    if !(p1 > p2 && p1 < 1.0 && p2 > 0.0) {
+        return None;
+    }
+    let rho = p1.ln() / p2.ln();
+    (rho.is_finite() && rho > 0.0).then_some(rho)
+}
+
+/// Search grid for the ρ\* optimization (Eq. 20).
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    /// Candidate m values (paper: small integers).
+    pub ms: Vec<u32>,
+    /// U grid over (0, 1).
+    pub us: Vec<f64>,
+    /// r grid over (0, ∞).
+    pub rs: Vec<f64>,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        Self {
+            ms: (1..=6).collect(),
+            us: (1..100).map(|i| i as f64 * 0.01).collect(),
+            rs: (1..=50).map(|i| i as f64 * 0.1).collect(),
+        }
+    }
+}
+
+impl GridSpec {
+    /// A coarser grid for tests and quick sweeps.
+    pub fn coarse() -> Self {
+        Self {
+            ms: (1..=5).collect(),
+            us: (1..20).map(|i| i as f64 * 0.05).collect(),
+            rs: (1..=20).map(|i| i as f64 * 0.25).collect(),
+        }
+    }
+}
+
+/// Result of the ρ\* grid search.
+#[derive(Clone, Copy, Debug)]
+pub struct RhoOpt {
+    pub rho: f64,
+    pub m: u32,
+    pub u: f64,
+    pub r: f64,
+}
+
+/// ρ\* = min over (U, m, r) of ρ, for threshold `S0 = s0_frac · U` and
+/// approximation ratio `c` (Eq. 20; Figure 1–2). `S0` scales with `U`
+/// because the transform first shrinks all data so max norm = U, and the
+/// achievable inner product is at most U.
+pub fn optimize_rho(s0_frac: f64, c: f64, grid: &GridSpec) -> Option<RhoOpt> {
+    let mut best: Option<RhoOpt> = None;
+    for &m in &grid.ms {
+        for &u in &grid.us {
+            let s0 = s0_frac * u;
+            if s0 <= 0.0 {
+                continue;
+            }
+            for &r in &grid.rs {
+                if let Some(rho) = rho_alsh(s0, c, u, m, r) {
+                    if best.map_or(true, |b| rho < b.rho) {
+                        best = Some(RhoOpt { rho, m, u, r });
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p1_exceeds_p2_for_reasonable_params() {
+        // Paper's recommended operating point.
+        let (s0, c, u, m, r) = (0.9 * 0.83, 0.5, 0.83, 3, 2.5);
+        assert!(p1_alsh(s0, u, m, r) > p2_alsh(s0, c, m, r));
+    }
+
+    #[test]
+    fn rho_is_sublinear_at_recommended_params() {
+        let rho = rho_alsh(0.9 * 0.83, 0.5, 0.83, 3, 2.5).expect("feasible");
+        assert!(rho > 0.0 && rho < 1.0, "rho = {rho}");
+    }
+
+    #[test]
+    fn rho_decreases_as_c_decreases() {
+        // Easier approximation (smaller c) => smaller exponent.
+        let grid = GridSpec::coarse();
+        let r_09 = optimize_rho(0.9, 0.9, &grid).unwrap().rho;
+        let r_05 = optimize_rho(0.9, 0.5, &grid).unwrap().rho;
+        let r_02 = optimize_rho(0.9, 0.2, &grid).unwrap().rho;
+        assert!(r_02 < r_05 && r_05 < r_09, "{r_02} {r_05} {r_09}");
+    }
+
+    #[test]
+    fn rho_star_below_one_everywhere_feasible() {
+        let grid = GridSpec::coarse();
+        for s0_frac in [0.5, 0.7, 0.9] {
+            for c10 in 1..10 {
+                let c = c10 as f64 * 0.1;
+                if let Some(opt) = optimize_rho(s0_frac, c, &grid) {
+                    assert!(opt.rho < 1.0, "rho*({s0_frac},{c}) = {}", opt.rho);
+                    assert!(opt.rho > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_when_error_dominates() {
+        // Big U, tiny m, c close to 1: the error term kills the gap.
+        assert!(rho_alsh(0.9 * 0.99, 0.999, 0.99, 1, 2.5).is_none());
+    }
+
+    #[test]
+    fn optimal_params_in_paper_range() {
+        // Fig 2: for high S0 (0.8–0.9 U) and mid c, optimum is m∈{2,3,4},
+        // U∈[0.7,0.9], r∈[1.5,3].
+        let grid = GridSpec::default();
+        let opt = optimize_rho(0.9, 0.5, &grid).unwrap();
+        assert!((2..=4).contains(&opt.m), "m = {}", opt.m);
+        assert!((0.7..=0.92).contains(&opt.u), "U = {}", opt.u);
+        assert!((1.0..=3.5).contains(&opt.r), "r = {}", opt.r);
+    }
+
+    #[test]
+    fn recommended_params_near_optimal() {
+        // Fig 3: ρ(m=3, U=0.83, r=2.5) tracks ρ* closely.
+        let grid = GridSpec::default();
+        for c10 in 2..=8 {
+            let c = c10 as f64 * 0.1;
+            let star = optimize_rho(0.9, c, &grid).unwrap().rho;
+            let fixed = rho_alsh(0.9 * 0.83, c, 0.83, 3, 2.5).unwrap();
+            assert!(fixed >= star - 1e-9);
+            assert!(fixed - star < 0.12, "c={c}: fixed {fixed} vs star {star}");
+        }
+    }
+}

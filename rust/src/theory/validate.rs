@@ -1,0 +1,174 @@
+//! Empirical validation of Theorem 3: the measured collision probability
+//! of `h(Q(q)) = h(P(x))` must obey the paper's bounds
+//!
+//! * `qᵀx >= S0`   ⇒  P[collision] >= F_r(√(1 + m/4 − 2·S0 + U^(2^(m+1))))
+//! * `qᵀx <= c·S0` ⇒  P[collision] <= F_r(√(1 + m/4 − 2·c·S0))
+//!
+//! and, pointwise, equal `F_r(‖Q(q) − P(x)‖)` exactly (Eq. 9 applied to
+//! the transformed pair). The `repro validate` CLI prints this table; the
+//! tests assert it.
+
+use crate::lsh::L2LshFamily;
+use crate::theory::collision_probability;
+use crate::transform::{l2_norm, p_transform, q_transform};
+use crate::util::Rng;
+
+/// One row of the validation table.
+#[derive(Clone, Debug)]
+pub struct ValidationRow {
+    /// Inner product of the (unit q, bounded x) pair.
+    pub ip: f64,
+    /// Transformed distance ‖Q(q) − P(x)‖.
+    pub dist: f64,
+    /// Empirical collision fraction over `n_hashes` functions.
+    pub empirical: f64,
+    /// Closed-form F_r(dist).
+    pub theoretical: f64,
+}
+
+/// Build pairs (q, x) with controlled inner products and measure the
+/// asymmetric collision rate against `F_r`.
+pub fn validate_theorem3(
+    dim: usize,
+    m: usize,
+    u: f32,
+    r: f32,
+    n_hashes: usize,
+    seed: u64,
+) -> Vec<ValidationRow> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let fam = L2LshFamily::sample(dim + m, n_hashes, r, &mut rng);
+    // Unit query.
+    let mut q: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+    let qn = l2_norm(&q);
+    q.iter_mut().for_each(|v| *v /= qn);
+    let hq = fam.hash(&q_transform(&q, m));
+
+    let mut rows = Vec::new();
+    // x = alpha * u * q + beta * orthogonal noise, with ‖x‖ = u exactly:
+    // sweeping alpha sweeps the inner product qᵀx = alpha * u.
+    for step in 0..=10 {
+        let alpha = -1.0 + 0.2 * step as f32;
+        let mut noise: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        // Orthogonalize the noise against q.
+        let proj: f32 = noise.iter().zip(&q).map(|(n, qv)| n * qv).sum();
+        noise.iter_mut().zip(&q).for_each(|(n, qv)| *n -= proj * qv);
+        let nn = l2_norm(&noise).max(1e-9);
+        let beta = (1.0 - alpha * alpha).max(0.0).sqrt();
+        let x: Vec<f32> = q
+            .iter()
+            .zip(&noise)
+            .map(|(qv, nv)| u * (alpha * qv + beta * nv / nn))
+            .collect();
+        let ip: f32 = q.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let pq = q_transform(&q, m);
+        let px = p_transform(&x, m);
+        let dist: f64 = pq
+            .iter()
+            .zip(&px)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let hx = fam.hash(&px);
+        let collisions = hq.iter().zip(&hx).filter(|(a, b)| a == b).count();
+        rows.push(ValidationRow {
+            ip: ip as f64,
+            dist,
+            empirical: collisions as f64 / n_hashes as f64,
+            theoretical: collision_probability(r as f64, dist),
+        });
+    }
+    rows
+}
+
+/// CSV rendering for the CLI (`ip,dist,empirical,theoretical`).
+pub fn validation_csv(rows: &[ValidationRow]) -> String {
+    let mut out = String::from("ip,transformed_dist,empirical_collision,F_r\n");
+    for row in rows {
+        out.push_str(&format!(
+            "{:.4},{:.4},{:.4},{:.4}\n",
+            row.ip, row.dist, row.empirical, row.theoretical
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<ValidationRow> {
+        validate_theorem3(24, 3, 0.83, 2.5, 20_000, 42)
+    }
+
+    #[test]
+    fn empirical_matches_closed_form_pointwise() {
+        // Eq. 9 on the transformed pair: empirical ≈ F_r(dist) everywhere.
+        for row in rows() {
+            assert!(
+                (row.empirical - row.theoretical).abs() < 0.015,
+                "ip {:.2}: empirical {:.4} vs F_r {:.4}",
+                row.ip,
+                row.empirical,
+                row.theoretical
+            );
+        }
+    }
+
+    #[test]
+    fn collision_monotone_in_inner_product() {
+        // The whole point: bigger qᵀx ⇒ more collisions.
+        let rows = rows();
+        for w in rows.windows(2) {
+            assert!(
+                w[1].empirical >= w[0].empirical - 0.02,
+                "collision not increasing: ip {:.2}→{:.2} gave {:.4}→{:.4}",
+                w[0].ip,
+                w[1].ip,
+                w[0].empirical,
+                w[1].empirical
+            );
+        }
+    }
+
+    #[test]
+    fn theorem3_bounds_hold() {
+        // p1 bound at S0 = 0.8U, p2 bound at c = 0.5.
+        let (m, u, r) = (3usize, 0.83f64, 2.5f64);
+        let s0 = 0.8 * u;
+        let c = 0.5;
+        let p1_bound =
+            collision_probability(r, (1.0 + m as f64 / 4.0 - 2.0 * s0 + u.powi(16)).sqrt());
+        let p2_bound =
+            collision_probability(r, (1.0 + m as f64 / 4.0 - 2.0 * c * s0).sqrt());
+        for row in rows() {
+            if row.ip >= s0 {
+                assert!(
+                    row.empirical >= p1_bound - 0.02,
+                    "p1 bound violated at ip {:.2}: {:.4} < {:.4}",
+                    row.ip,
+                    row.empirical,
+                    p1_bound
+                );
+            }
+            if row.ip <= c * s0 {
+                assert!(
+                    row.empirical <= p2_bound + 0.02,
+                    "p2 bound violated at ip {:.2}: {:.4} > {:.4}",
+                    row.ip,
+                    row.empirical,
+                    p2_bound
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csv_well_formed() {
+        let csv = validation_csv(&rows());
+        assert_eq!(csv.lines().count(), 12); // header + 11 alpha steps
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), 4);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! The asymmetric transformations at the heart of ALSH (Eq. 11–13).
+//!
+//! * `P(x) = [x; ‖x‖²; ‖x‖⁴; …; ‖x‖^(2^m)]` — applied to data vectors once
+//!   at index-build time, *after* all vectors are shrunk so `max ‖x‖ = U`.
+//! * `Q(q) = [q/‖q‖; ½; …; ½]` — applied to the query (unit-normalizing is
+//!   WLOG: the argmax over inner products is invariant to ‖q‖).
+//!
+//! These mirror `python/compile/model.py`; integration tests cross-check
+//! them against the compiled HLO artifacts.
+
+/// Euclidean norm of a vector.
+#[inline]
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Inner product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// The data-side scaling of Eq. 11: a factor `s` such that after `x <- s·x`
+/// every vector satisfies `‖x‖ <= U < 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct UScale {
+    pub u: f32,
+    pub factor: f32,
+    pub max_norm: f32,
+}
+
+impl UScale {
+    /// Compute the scaling from a dataset: `factor = U / max‖x‖`.
+    pub fn fit<'a>(items: impl IntoIterator<Item = &'a [f32]>, u: f32) -> Self {
+        assert!(u > 0.0 && u < 1.0, "U must be in (0,1), got {u}");
+        let mut max_norm = 0.0f32;
+        for x in items {
+            max_norm = max_norm.max(l2_norm(x));
+        }
+        let factor = if max_norm > 0.0 { u / max_norm } else { 1.0 };
+        Self { u, factor, max_norm }
+    }
+
+    /// Apply the scaling to one vector.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        x.iter().map(|v| v * self.factor).collect()
+    }
+}
+
+/// Preprocessing transform `P` (Eq. 12). `x` must already be scaled so that
+/// `‖x‖ <= U < 1`. Appends `m` norm powers built by iterative squaring.
+pub fn p_transform(x: &[f32], m: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len() + m);
+    out.extend_from_slice(x);
+    let mut n = x.iter().map(|v| v * v).sum::<f32>(); // ‖x‖²
+    for _ in 0..m {
+        out.push(n);
+        n *= n; // ‖x‖⁴, ‖x‖⁸, …
+    }
+    out
+}
+
+/// Query transform `Q` (Eq. 13), with the WLOG unit-normalization folded in.
+pub fn q_transform(q: &[f32], m: usize) -> Vec<f32> {
+    let norm = l2_norm(q).max(1e-12);
+    let mut out = Vec::with_capacity(q.len() + m);
+    out.extend(q.iter().map(|v| v / norm));
+    out.extend(std::iter::repeat(0.5).take(m));
+    out
+}
+
+/// Sign-ALSH data transform (paper §5 future work; Shrivastava & Li 2015):
+/// `P(x) = [x; ½ − ‖x‖²; ½ − ‖x‖⁴; …; ½ − ‖x‖^(2^m)]`, for `‖x‖ <= U < 1`.
+pub fn p_transform_sign(x: &[f32], m: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len() + m);
+    out.extend_from_slice(x);
+    let mut n = x.iter().map(|v| v * v).sum::<f32>();
+    for _ in 0..m {
+        out.push(0.5 - n);
+        n *= n;
+    }
+    out
+}
+
+/// Sign-ALSH query transform: `Q(q) = [q/‖q‖; 0; …; 0]`.
+pub fn q_transform_sign(q: &[f32], m: usize) -> Vec<f32> {
+    let norm = l2_norm(q).max(1e-12);
+    let mut out = Vec::with_capacity(q.len() + m);
+    out.extend(q.iter().map(|v| v / norm));
+    out.extend(std::iter::repeat(0.0).take(m));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn p_transform_appends_norm_powers() {
+        let x = [0.3f32, 0.4]; // ‖x‖² = 0.25
+        let px = p_transform(&x, 3);
+        assert_eq!(px.len(), 5);
+        assert!((px[2] - 0.25).abs() < 1e-7);
+        assert!((px[3] - 0.0625).abs() < 1e-7);
+        assert!((px[4] - 0.00390625).abs() < 1e-7);
+    }
+
+    #[test]
+    fn q_transform_unit_norm_and_halves() {
+        let q = [3.0f32, 4.0];
+        let qq = q_transform(&q, 4);
+        assert_eq!(qq.len(), 6);
+        assert!((qq[0] - 0.6).abs() < 1e-6);
+        assert!((qq[1] - 0.8).abs() < 1e-6);
+        assert!(qq[2..].iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn q_transform_zero_vector_safe() {
+        let qq = q_transform(&[0.0, 0.0], 3);
+        assert!(qq.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn uscale_caps_norms() {
+        let items: Vec<Vec<f32>> =
+            (1..=10).map(|i| vec![i as f32, 0.0, -(i as f32)]).collect();
+        let scale = UScale::fit(items.iter().map(|v| v.as_slice()), 0.83);
+        let mut max = 0.0f32;
+        for it in &items {
+            max = max.max(l2_norm(&scale.apply(it)));
+        }
+        assert!((max - 0.83).abs() < 1e-5);
+    }
+
+    #[test]
+    fn uscale_preserves_argmax() {
+        // Scaling all items by the same factor must not change the MIPS winner.
+        let items: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, -1.0, 0.5],
+            vec![0.1, 5.0, -2.0],
+        ];
+        let q = [0.3f32, 0.9, -0.1];
+        let scale = UScale::fit(items.iter().map(|v| v.as_slice()), 0.5);
+        let raw_best = (0..3)
+            .max_by(|&a, &b| dot(&items[a], &q).partial_cmp(&dot(&items[b], &q)).unwrap())
+            .unwrap();
+        let scaled_best = (0..3)
+            .max_by(|&a, &b| {
+                dot(&scale.apply(&items[a]), &q)
+                    .partial_cmp(&dot(&scale.apply(&items[b]), &q))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(raw_best, scaled_best);
+    }
+
+    /// Eq. 17: ‖Q(q) − P(x)‖² = (1 + m/4) − 2 qᵀx + ‖x‖^(2^(m+1)),
+    /// for unit q and ‖x‖ <= U < 1 — the identity the whole paper rests
+    /// on, checked in f64 against the f32 transforms over seeded random
+    /// instances.
+    #[test]
+    fn eq17_identity_property() {
+        check(200, |rng| {
+            let m = 1 + rng.below(5);
+            let d = 2 + rng.below(22);
+            let target_norm = 0.05 + 0.90 * rng.f64();
+            let mut q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let qn = l2_norm(&q).max(1e-6);
+            q.iter_mut().for_each(|v| *v /= qn);
+            let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let xn = l2_norm(&x).max(1e-6);
+            x.iter_mut().for_each(|v| *v = *v / xn * target_norm as f32);
+
+            let pq = q_transform(&q, m);
+            let px = p_transform(&x, m);
+            let lhs: f64 = pq
+                .iter()
+                .zip(&px)
+                .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                .sum();
+            let qx: f64 = q.iter().zip(&x).map(|(a, b)| *a as f64 * *b as f64).sum();
+            let nx2: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            let rhs = 1.0 + m as f64 / 4.0 - 2.0 * qx + nx2.powi(1 << m);
+            assert!((lhs - rhs).abs() < 1e-3, "lhs {lhs} rhs {rhs} (m={m} d={d})");
+        });
+    }
+
+    /// Scaling + P/Q never produce non-finite values.
+    #[test]
+    fn transforms_always_finite_property() {
+        check(200, |rng| {
+            let d = 1 + rng.below(49);
+            let m = rng.below(8);
+            let x: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 2e3).collect();
+            let scale = UScale::fit([x.as_slice()], 0.83);
+            let px = p_transform(&scale.apply(&x), m);
+            let qx = q_transform(&x, m);
+            assert!(px.iter().all(|v| v.is_finite()));
+            assert!(qx.iter().all(|v| v.is_finite()));
+        });
+    }
+
+    #[test]
+    fn sign_transforms_shapes_and_tails() {
+        let x = [0.3f32, 0.4]; // ‖x‖² = 0.25
+        let px = p_transform_sign(&x, 2);
+        assert_eq!(px.len(), 4);
+        assert!((px[2] - 0.25).abs() < 1e-7); // ½ − 0.25
+        assert!((px[3] - 0.4375).abs() < 1e-7); // ½ − 0.0625
+        let q = [3.0f32, 4.0];
+        let qq = q_transform_sign(&q, 3);
+        assert_eq!(qq.len(), 5);
+        assert!((qq[0] - 0.6).abs() < 1e-6);
+        assert!(qq[2..].iter().all(|&v| v == 0.0));
+    }
+
+    /// The transformed inner product is preserved exactly: Q(q)·P(x) = qᵀx
+    /// (the appended zeros kill the norm terms), which is why SRP on the
+    /// transformed pair ranks by inner product.
+    #[test]
+    fn sign_transform_inner_product_preserved() {
+        check(100, |rng| {
+            let d = 2 + rng.below(20);
+            let m = 1 + rng.below(4);
+            let mut q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let qn = l2_norm(&q).max(1e-6);
+            q.iter_mut().for_each(|v| *v /= qn);
+            let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let xn = l2_norm(&x).max(1e-6);
+            let target = 0.1 + 0.7 * rng.f32();
+            x.iter_mut().for_each(|v| *v = *v / xn * target);
+            let pq = q_transform_sign(&q, m);
+            let px = p_transform_sign(&x, m);
+            let qp = dot(&pq, &px);
+            let qx = dot(&q, &x);
+            assert!((qp - qx).abs() < 1e-5, "{qp} vs {qx}");
+        });
+    }
+}

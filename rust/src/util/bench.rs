@@ -1,0 +1,170 @@
+//! Micro-benchmark harness (in-tree criterion stand-in).
+//!
+//! Warm-up, adaptive iteration targeting a wall-clock budget, and robust
+//! statistics (median, mean, p10/p90) over per-iteration timings. Used by
+//! the `rust/benches/*` binaries (harness = false).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Throughput hint (items per op), used for ops/s reporting.
+    pub items_per_iter: f64,
+}
+
+impl Stats {
+    /// ns per single item (mean / items_per_iter).
+    pub fn ns_per_item(&self) -> f64 {
+        self.mean.as_nanos() as f64 / self.items_per_iter
+    }
+
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bench {
+    budget: Duration,
+    warmup: Duration,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Keep default budgets small: the suite runs on one core. Override
+        // with ALSH_BENCH_BUDGET_MS for higher-fidelity runs.
+        let ms = std::env::var("ALSH_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(700u64);
+        Self {
+            budget: Duration::from_millis(ms),
+            warmup: Duration::from_millis(ms / 5),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one logical operation over `items` items.
+    pub fn run<T>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> T) -> &Stats {
+        // Warm-up.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup || warm_iters < 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Measured phase: per-iteration timings.
+        let mut times: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget || times.len() < 5 {
+            let it0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(it0.elapsed());
+            if times.len() >= 1_000_000 {
+                break;
+            }
+        }
+        times.sort_unstable();
+        let n = times.len();
+        let mean = times.iter().sum::<Duration>() / n as u32;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: times[n / 2],
+            p10: times[n / 10],
+            p90: times[(n * 9) / 10],
+            items_per_iter: items,
+        };
+        println!(
+            "{:<44} {:>10.3?} /op  median {:>10.3?}  p90 {:>10.3?}  ({} iters{})",
+            stats.name,
+            stats.mean,
+            stats.median,
+            stats.p90,
+            stats.iters,
+            if items > 1.0 {
+                format!(", {:.2} Mitems/s", stats.items_per_sec() / 1e6)
+            } else {
+                String::new()
+            }
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Emit a machine-readable summary line (consumed by EXPERIMENTS.md
+    /// tooling).
+    pub fn summary_csv(&self) -> String {
+        let mut s = String::from("name,iters,mean_ns,median_ns,p90_ns,items_per_sec\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "{},{},{},{},{},{:.1}\n",
+                r.name,
+                r.iters,
+                r.mean.as_nanos(),
+                r.median.as_nanos(),
+                r.p90.as_nanos(),
+                r.items_per_sec()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("ALSH_BENCH_BUDGET_MS", "30");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", 100.0, || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        std::env::set_var("ALSH_BENCH_BUDGET_MS", "30");
+        let mut b = Bench::new();
+        let s = b.run("sleepless", 1.0, || std::hint::black_box(3 + 4));
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        std::env::set_var("ALSH_BENCH_BUDGET_MS", "30");
+        let mut b = Bench::new();
+        b.run("a", 1.0, || 1);
+        b.run("b", 1.0, || 2);
+        let csv = b.summary_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

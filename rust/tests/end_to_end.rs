@@ -1,0 +1,111 @@
+//! Whole-pipeline integration tests (no artifacts needed): synthetic
+//! ratings → PureSVD → index/rankers → evaluation, plus the sharded
+//! router, mirroring the paper's evaluation protocol end to end.
+
+use alsh::baselines::LinearScan;
+use alsh::config::{DatasetConfig, PrExperimentConfig};
+use alsh::coordinator::ShardedRouter;
+use alsh::data::generate_dataset;
+use alsh::eval::gold_top_t;
+use alsh::figures::pr_figs::{auc, run_pr_on_dataset};
+use alsh::index::{AlshIndex, AlshParams, Scheme};
+
+#[test]
+fn pipeline_produces_meaningful_factors() {
+    let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    assert_eq!(data.users.len(), 200);
+    assert_eq!(data.items.len(), 500);
+    assert_eq!(data.latent_dim, 50);
+    // Norm spread is the crux of the paper's setting.
+    let norms: Vec<f32> = data.items.iter().map(|v| alsh::transform::l2_norm(v)).collect();
+    let max = norms.iter().cloned().fold(0.0f32, f32::max);
+    let min = norms.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(max / min.max(1e-9) > 2.0, "norm spread {min}..{max}");
+}
+
+#[test]
+fn figure5_shape_holds_on_tiny_data() {
+    // The paper's headline: ALSH dominates L2LSH for top-T inner products,
+    // and the gap grows with K. Checked via curve AUC on the tiny dataset.
+    let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    let cfg = PrExperimentConfig {
+        n_users: 40,
+        k_values: vec![64, 256],
+        t_values: vec![5],
+        l2lsh_r_values: vec![1.5, 2.5, 4.0],
+        ..Default::default()
+    };
+    let schemes: Vec<(String, Scheme, f32)> = {
+        let mut v = vec![("alsh".to_string(), Scheme::Alsh { m: 3 }, 2.5f32)];
+        for &r in &cfg.l2lsh_r_values {
+            v.push(("l2lsh".to_string(), Scheme::L2Lsh, r));
+        }
+        v
+    };
+    let points = run_pr_on_dataset(&data, "tiny".into(), &cfg, &schemes).unwrap();
+    let alsh_256 = auc(&points
+        .iter()
+        .find(|p| p.method == "alsh" && p.k == 256)
+        .unwrap()
+        .curve);
+    // ALSH at K=256 must beat EVERY L2LSH r at K=256 (paper: "at all
+    // choices of r").
+    for p in points.iter().filter(|p| p.method == "l2lsh" && p.k == 256) {
+        let l2_auc = auc(&p.curve);
+        assert!(
+            alsh_256 > l2_auc,
+            "ALSH auc {alsh_256:.3} not > L2LSH(r={}) auc {l2_auc:.3}",
+            p.r
+        );
+    }
+    // More hashes help ALSH.
+    let alsh_64 = auc(&points
+        .iter()
+        .find(|p| p.method == "alsh" && p.k == 64)
+        .unwrap()
+        .curve);
+    assert!(alsh_256 > alsh_64, "K=256 ({alsh_256:.3}) !> K=64 ({alsh_64:.3})");
+}
+
+#[test]
+fn bucketed_index_recall_on_real_pipeline_output() {
+    let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    let params = AlshParams { n_tables: 64, k_per_table: 4, ..AlshParams::default() };
+    let index = AlshIndex::build(&data.items, params, 5);
+    let mut found = 0;
+    let users = 60;
+    for u in 0..users {
+        let gold = gold_top_t(&data.items, &data.users[u], 1)[0];
+        let hits = index.query(&data.users[u], 10);
+        if hits.iter().any(|h| h.id == gold) {
+            found += 1;
+        }
+    }
+    assert!(found >= users * 8 / 10, "top-1 recall {found}/{users}");
+}
+
+#[test]
+fn sharded_router_equals_exact_on_easy_queries() {
+    let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    let params = AlshParams { n_tables: 48, k_per_table: 4, ..AlshParams::default() };
+    let router = ShardedRouter::build(&data.items, 4, params, 6);
+    let scan = LinearScan::new(&data.items);
+    let mut agree = 0;
+    let n = 40;
+    for u in 0..n {
+        let got = router.query(&data.users[u], 5);
+        let want = scan.query(&data.users[u], 1)[0];
+        if got.iter().any(|h| h.id == want.id) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= n * 8 / 10, "router agreement {agree}/{n}");
+}
+
+#[test]
+fn deterministic_pipeline_given_seeds() {
+    let a = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    let b = generate_dataset(&DatasetConfig::tiny()).unwrap();
+    assert_eq!(a.items, b.items);
+    assert_eq!(a.users, b.users);
+}

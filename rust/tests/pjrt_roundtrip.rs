@@ -1,0 +1,247 @@
+//! Integration tests across the AOT boundary: the compiled HLO artifacts
+//! (JAX L2 + Pallas L1) must agree with the pure-Rust mirrors.
+//!
+//! These tests require `make artifacts`; they are skipped (with a notice)
+//! when the artifacts are missing so `cargo test` stays green pre-build.
+
+use alsh::lsh::{L2LshFamily, SrpFamily};
+use alsh::runtime::Runtime;
+use alsh::transform::{
+    dot, p_transform, p_transform_sign, q_transform, q_transform_sign, UScale,
+};
+use alsh::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e:#}");
+            None
+        }
+    }
+}
+
+/// Codes across the f32 floor boundary may differ by 1 between two
+/// correct implementations (different accumulation order); require
+/// near-total agreement and only off-by-one disagreements.
+fn assert_codes_close(a: &[i32], b: &[i32], what: &str) {
+    assert_eq!(a.len(), b.len());
+    let mut mismatch = 0usize;
+    for (x, y) in a.iter().zip(b) {
+        if x != y {
+            assert!((x - y).abs() <= 1, "{what}: code {x} vs {y} differ by >1");
+            mismatch += 1;
+        }
+    }
+    let frac = mismatch as f64 / a.len() as f64;
+    assert!(frac < 0.002, "{what}: {frac:.4} of codes mismatched ({mismatch})");
+}
+
+#[test]
+fn l2lsh_artifact_matches_rust_family() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let dim = 8;
+    let meta = rt.find("l2lsh", dim).expect("artifact");
+    let mut rng = Rng::seed_from_u64(11);
+    let fam = L2LshFamily::sample(dim, meta.k, 2.5, &mut rng);
+    let rows: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let got = rt
+        .run_hash(&meta, &rows, &fam.a_matrix_dk(), fam.b_vector())
+        .expect("run_hash");
+    for (row, codes) in rows.iter().zip(&got) {
+        let want = fam.hash(row);
+        assert_codes_close(codes, &want, "l2lsh d8");
+    }
+}
+
+#[test]
+fn alsh_query_artifact_applies_q_transform() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let dim = 8;
+    let meta = rt.find("alsh_query", dim).expect("artifact");
+    assert_eq!(meta.m, 3);
+    let mut rng = Rng::seed_from_u64(12);
+    let fam = L2LshFamily::sample(dim + meta.m, meta.k, 2.5, &mut rng);
+    // Raw queries with non-unit norms: artifact must normalize internally.
+    let rows: Vec<Vec<f32>> = (0..7)
+        .map(|_| (0..dim).map(|_| rng.normal_f32() * 3.0).collect())
+        .collect();
+    let got = rt
+        .run_hash(&meta, &rows, &fam.a_matrix_dk(), fam.b_vector())
+        .expect("run_hash");
+    for (row, codes) in rows.iter().zip(&got) {
+        let want = fam.hash(&q_transform(row, meta.m));
+        assert_codes_close(codes, &want, "alsh_query d8");
+    }
+}
+
+#[test]
+fn alsh_data_artifact_applies_p_transform() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let dim = 8;
+    let meta = rt.find("alsh_data", dim).expect("artifact");
+    let mut rng = Rng::seed_from_u64(13);
+    let fam = L2LshFamily::sample(dim + meta.m, meta.k, 2.5, &mut rng);
+    // Data rows must arrive pre-scaled (Eq. 11) — mirror what the index does.
+    let raw: Vec<Vec<f32>> = (0..9)
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let scale = UScale::fit(raw.iter().map(|v| v.as_slice()), 0.83);
+    let rows: Vec<Vec<f32>> = raw.iter().map(|v| scale.apply(v)).collect();
+    let got = rt
+        .run_hash(&meta, &rows, &fam.a_matrix_dk(), fam.b_vector())
+        .expect("run_hash");
+    for (row, codes) in rows.iter().zip(&got) {
+        let want = fam.hash(&p_transform(row, meta.m));
+        assert_codes_close(codes, &want, "alsh_data d8");
+    }
+}
+
+#[test]
+fn rerank_artifact_matches_exact_dot() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let dim = 8;
+    let meta = rt.find("rerank", dim).expect("artifact");
+    let mut rng = Rng::seed_from_u64(14);
+    let queries: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let cand_vecs: Vec<Vec<f32>> = (0..100)
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let cands: Vec<&[f32]> = cand_vecs.iter().map(|v| v.as_slice()).collect();
+    let scores = rt.run_rerank(&meta, &queries, &cands).expect("rerank");
+    assert_eq!(scores.len(), queries.len());
+    for (q, row) in queries.iter().zip(&scores) {
+        assert_eq!(row.len(), cands.len());
+        for (c, s) in cand_vecs.iter().zip(row) {
+            let want = dot(q, c);
+            assert!(
+                (s - want).abs() < 1e-4 * (1.0 + want.abs()),
+                "rerank {s} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hash_batching_pads_and_chunks_correctly() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let dim = 8;
+    let meta = rt.find("alsh_query", dim).expect("artifact");
+    let mut rng = Rng::seed_from_u64(15);
+    let fam = L2LshFamily::sample(dim + meta.m, meta.k, 2.5, &mut rng);
+    // More rows than one batch: forces the chunking path.
+    let rows: Vec<Vec<f32>> = (0..(meta.batch + 17))
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let got = rt
+        .run_hash(&meta, &rows, &fam.a_matrix_dk(), fam.b_vector())
+        .expect("run_hash");
+    assert_eq!(got.len(), rows.len());
+    // Batched result must equal one-at-a-time results.
+    for (i, row) in rows.iter().enumerate().step_by(13) {
+        let single =
+            rt.run_hash(&meta, &[row.clone()], &fam.a_matrix_dk(), fam.b_vector()).unwrap();
+        assert_eq!(got[i], single[0], "row {i} differs batched vs single");
+    }
+}
+
+#[test]
+fn manifest_covers_all_functions_and_dims() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    assert_eq!(m.batch, 64);
+    for d in [8usize, 50, 150, 300] {
+        for f in [
+            "alsh_data",
+            "alsh_query",
+            "l2lsh",
+            "sign_alsh_data",
+            "sign_alsh_query",
+            "rerank",
+        ] {
+            assert!(
+                m.artifacts.iter().any(|a| a.function == f && a.dim == d),
+                "missing {f}@d{d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sign_alsh_artifacts_match_rust_srp() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let dim = 8;
+    let meta_d = rt.find("sign_alsh_data", dim).expect("artifact");
+    let meta_q = rt.find("sign_alsh_query", dim).expect("artifact");
+    assert_eq!(meta_d.m, 2);
+    let mut rng = Rng::seed_from_u64(21);
+    let fam = SrpFamily::sample(dim + meta_d.m, meta_d.k, &mut rng);
+    let raw: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let scale = UScale::fit(raw.iter().map(|v| v.as_slice()), 0.75);
+    let rows: Vec<Vec<f32>> = raw.iter().map(|v| scale.apply(v)).collect();
+    let got = rt
+        .run_sign_hash(&meta_d, &rows, &fam.a_matrix_dk())
+        .expect("run_sign_hash");
+    let mut mismatches = 0usize;
+    let mut total = 0usize;
+    for (row, codes) in rows.iter().zip(&got) {
+        let want = fam.hash(&p_transform_sign(row, meta_d.m));
+        total += codes.len();
+        mismatches += codes.iter().zip(&want).filter(|(a, b)| a != b).count();
+    }
+    // Sign flips only occur when a projection is ~0; must be very rare.
+    assert!(
+        (mismatches as f64) < 0.002 * total as f64,
+        "sign_alsh_data: {mismatches}/{total} code mismatches"
+    );
+
+    let got_q = rt
+        .run_sign_hash(&meta_q, &raw, &fam.a_matrix_dk())
+        .expect("run_sign_hash");
+    let mut mismatches = 0usize;
+    for (row, codes) in raw.iter().zip(&got_q) {
+        let want = fam.hash(&q_transform_sign(row, meta_q.m));
+        mismatches += codes.iter().zip(&want).filter(|(a, b)| a != b).count();
+    }
+    assert!(
+        (mismatches as f64) < 0.002 * total as f64,
+        "sign_alsh_query: {mismatches} code mismatches"
+    );
+}
+
+#[test]
+fn collision_ranker_pjrt_build_matches_scalar_build() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    use alsh::index::{CollisionRanker, Scheme};
+    let mut rng = Rng::seed_from_u64(33);
+    let items: Vec<Vec<f32>> = (0..80)
+        .map(|_| (0..8).map(|_| rng.normal_f32()).collect())
+        .collect();
+    for scheme in [Scheme::Alsh { m: 3 }, Scheme::L2Lsh, Scheme::SignAlsh { m: 2 }] {
+        let scalar = CollisionRanker::build(&items, scheme, 96, 2.5, 0.83, 44);
+        let pjrt = CollisionRanker::build_pjrt(&items, scheme, 96, 2.5, 0.83, 44, &mut rt);
+        let mut mismatch = 0usize;
+        let mut total = 0usize;
+        for j in 0..items.len() {
+            let a = scalar.item_code_row(j);
+            let b = pjrt.item_code_row(j);
+            total += a.len();
+            for (x, y) in a.iter().zip(b) {
+                if x != y {
+                    assert!((x - y).abs() <= 1, "{scheme:?}: {x} vs {y}");
+                    mismatch += 1;
+                }
+            }
+        }
+        assert!(
+            (mismatch as f64) < 0.002 * total as f64,
+            "{scheme:?}: {mismatch}/{total} mismatches between scalar and pjrt build"
+        );
+    }
+}

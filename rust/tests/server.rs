@@ -1,0 +1,191 @@
+//! Serving-stack integration: batcher + TCP server + JSON protocol, driven
+//! through real sockets with the PJRT artifact on the hash path.
+//!
+//! Requires `make artifacts`; skipped with a notice otherwise.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use alsh::coordinator::{serve_on, BatcherConfig, MipsEngine, PjrtBatcher};
+use alsh::index::AlshParams;
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn roundtrip(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).expect("valid json response")
+    }
+}
+
+fn boot() -> Option<(std::net::SocketAddr, Arc<MipsEngine>, PjrtBatcher)> {
+    if !artifacts_present() {
+        eprintln!("SKIP server tests: run `make artifacts`");
+        return None;
+    }
+    // dim=8 matches the small artifact; L*K = 32*6 = 192 <= 512.
+    let items = norm_spread_items(400, 8, 1);
+    let params = AlshParams { n_tables: 32, k_per_table: 6, ..AlshParams::default() };
+    let engine = Arc::new(MipsEngine::new(&items, params, 2));
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "artifacts",
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+    )
+    .expect("batcher");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = batcher.handle();
+    let e2 = Arc::clone(&engine);
+    std::thread::spawn(move || {
+        let _ = serve_on(listener, handle, e2);
+    });
+    Some((addr, engine, batcher))
+}
+
+#[test]
+fn serves_queries_metrics_and_errors() {
+    let Some((addr, engine, _batcher)) = boot() else { return };
+    let mut c = Client::connect(addr);
+
+    // ping
+    let resp = c.roundtrip(r#"{"cmd": "ping"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+
+    // valid query: results must equal the engine's own answer.
+    let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).sin()).collect();
+    let q_json: Vec<f64> = q.iter().map(|v| *v as f64).collect();
+    let req = format!(
+        r#"{{"vector": {}, "top_k": 5}}"#,
+        alsh::util::json::num_arr(&q_json).to_string()
+    );
+    let resp = c.roundtrip(&req);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let ids: Vec<u32> = resp
+        .get("items")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(ids.len(), 5);
+    let direct = engine.query(&q, 5);
+    assert_eq!(ids, direct.iter().map(|h| h.id).collect::<Vec<_>>());
+    // Scores are exact inner products, descending.
+    let scores = resp.get("scores").and_then(Json::as_f32_vec).unwrap();
+    for w in scores.windows(2) {
+        assert!(w[0] >= w[1]);
+    }
+
+    // dim mismatch → structured error.
+    let resp = c.roundtrip(r#"{"vector": [1.0, 2.0], "top_k": 5}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("dim"));
+
+    // malformed json → error, connection stays usable.
+    let resp = c.roundtrip("{nope");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    let resp = c.roundtrip(r#"{"cmd": "ping"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+
+    // unknown cmd → error.
+    let resp = c.roundtrip(r#"{"cmd": "selfdestruct"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+    // metrics reflect the served traffic.
+    let resp = c.roundtrip(r#"{"cmd": "metrics"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let m = resp.get("metrics").unwrap();
+    assert!(m.get("queries").and_then(Json::as_usize).unwrap() >= 1);
+}
+
+#[test]
+fn concurrent_clients_are_batched() {
+    let Some((addr, engine, _batcher)) = boot() else { return };
+    let n_clients = 6;
+    let per_client = 30;
+    let threads: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(c as u64 + 100);
+                let mut client = Client::connect(addr);
+                for _ in 0..per_client {
+                    let q: Vec<f64> = (0..8).map(|_| rng.normal_f64() * 0.5).collect();
+                    let req = format!(
+                        r#"{{"vector": {}, "top_k": 3}}"#,
+                        alsh::util::json::num_arr(&q).to_string()
+                    );
+                    let resp = client.roundtrip(&req);
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let snap = engine.metrics().snapshot();
+    assert_eq!(snap.queries, (n_clients * per_client) as u64);
+    assert_eq!(snap.errors, 0);
+    // With 6 concurrent clients some batching must occur.
+    assert!(
+        snap.mean_batch_size() > 1.05,
+        "no dynamic batching observed: {:.2}",
+        snap.mean_batch_size()
+    );
+}
+
+#[test]
+fn pjrt_batched_results_match_pure_rust_path() {
+    let Some((_addr, engine, batcher)) = boot() else { return };
+    let handle = batcher.handle();
+    let mut rng = Rng::seed_from_u64(77);
+    for _ in 0..20 {
+        let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let via_pjrt = handle.query(q.clone(), 10).expect("pjrt path");
+        let via_rust = engine.query(&q, 10);
+        let a: Vec<u32> = via_pjrt.iter().map(|h| h.id).collect();
+        let b: Vec<u32> = via_rust.iter().map(|h| h.id).collect();
+        // Codes can differ by ±1 at f32 floor boundaries with ~0.1%
+        // probability per hash, which can perturb the candidate set;
+        // require the top result to agree and sets to overlap heavily.
+        if !via_pjrt.is_empty() && !via_rust.is_empty() {
+            assert_eq!(a[0], b[0], "top-1 disagrees: {a:?} vs {b:?}");
+        }
+        let overlap = a.iter().filter(|id| b.contains(id)).count();
+        assert!(
+            overlap * 10 >= a.len().min(b.len()) * 8,
+            "low overlap: {a:?} vs {b:?}"
+        );
+    }
+}
