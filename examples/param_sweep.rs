@@ -13,12 +13,16 @@ fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>]) {
     for (k, l) in [(4usize, 32usize), (6, 32), (6, 48), (8, 32), (8, 48), (10, 48)] {
         let params = AlshParams { k_per_table: k, n_tables: l, ..Default::default() };
         let idx = AlshIndex::build(items, params, 7);
+        let mut scratch = idx.scratch();
         let mut hits = 0;
         let mut cands = 0;
         for q in queries {
-            cands += idx.candidates(q).len();
-            let top = idx.query(q, 10);
-            if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
+            cands += idx.candidates_into(q, &mut scratch).len();
+            let hit = idx
+                .query_into(q, 10, &mut scratch)
+                .iter()
+                .any(|h| h.id == scan.query(q, 1)[0].id);
+            if hit {
                 hits += 1;
             }
         }

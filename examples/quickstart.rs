@@ -67,10 +67,12 @@ fn main() {
         })
         .collect();
 
-    // Timing: ALSH query loop alone vs the exact scan.
+    // Timing: ALSH query loop alone vs the exact scan. The loop owns one
+    // reusable QueryScratch, so steady-state queries allocate nothing.
+    let mut scratch = index.scratch();
     let t_alsh = Instant::now();
     for q in &queries {
-        std::hint::black_box(index.query(q, 10));
+        std::hint::black_box(index.query_into(q, 10, &mut scratch).len());
     }
     let alsh_time = t_alsh.elapsed();
 
@@ -84,9 +86,9 @@ fn main() {
     let mut hits = 0;
     let mut candidates = 0usize;
     for q in &queries {
-        candidates += index.candidates(q).len();
+        candidates += index.candidates_into(q, &mut scratch).len();
         let exact = scan.query(q, 1)[0].id;
-        if index.query(q, 10).iter().any(|h| h.id == exact) {
+        if index.query_into(q, 10, &mut scratch).iter().any(|h| h.id == exact) {
             hits += 1;
         }
     }

@@ -81,17 +81,20 @@ fn main() -> anyhow::Result<()> {
     let scan_elapsed = t.elapsed();
 
     // -- pure-Rust ALSH (two operating points) -------------------------------
+    // Each loop owns one QueryScratch: fused hash + CSR probe + rerank with
+    // zero steady-state allocations.
+    let mut scratch = engine.scratch();
     let t = Instant::now();
     let mut alsh_recall = 0usize;
     for (u, gold_u) in gold.iter().enumerate() {
-        let hits = engine.query(&data.users[u], top_k);
+        let hits = engine.query_into(&data.users[u], top_k, &mut scratch);
         alsh_recall += hits.iter().filter(|h| gold_u.contains(&h.id)).count();
     }
     let alsh_elapsed = t.elapsed();
     let t = Instant::now();
     let mut alsh_fast_recall = 0usize;
     for (u, gold_u) in gold.iter().enumerate() {
-        let hits = engine_fast.query(&data.users[u], top_k);
+        let hits = engine_fast.query_into(&data.users[u], top_k, &mut scratch);
         alsh_fast_recall += hits.iter().filter(|h| gold_u.contains(&h.id)).count();
     }
     let alsh_fast_elapsed = t.elapsed();
@@ -100,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     let t = Instant::now();
     let mut l2_recall = 0usize;
     for (u, gold_u) in gold.iter().enumerate() {
-        let hits = l2.query(&data.users[u], top_k);
+        let hits = l2.query_into(&data.users[u], top_k, &mut scratch);
         l2_recall += hits.iter().filter(|h| gold_u.contains(&h.id)).count();
     }
     let l2_elapsed = t.elapsed();
@@ -135,7 +138,7 @@ fn main() -> anyhow::Result<()> {
             / data.items.len() as f64
     );
 
-    // -- PJRT-batched path (the three-layer request path) ---------------------
+    // -- batched path (PJRT artifact, or the fused CPU fallback) --------------
     match PjrtBatcher::spawn(Arc::clone(&engine), "artifacts", BatcherConfig::default()) {
         Ok(batcher) => {
             let handle = batcher.handle();

@@ -1,20 +1,91 @@
-//! Hash-code generation benchmarks: the pure-Rust mirror vs the compiled
-//! PJRT artifact, and the P/Q transform costs.
+//! Hash-code generation benchmarks: the fused multi-table kernel vs the
+//! retained per-family reference path, the compiled PJRT artifact, and the
+//! P/Q transform costs.
 //!
 //! Paper-relevance: hashing is the only per-query compute that scales with
-//! K; Eq. 21 evaluation and table probing both sit on top of it.
+//! K·L; Eq. 21 evaluation and table probing both sit on top of it. The
+//! fused-vs-reference numbers land in `BENCH_query.json` ("hashing"
+//! section) so the perf trajectory is tracked across PRs.
 
-use alsh::lsh::L2LshFamily;
+use alsh::lsh::{FusedHasher, L2LshFamily};
 use alsh::runtime::Runtime;
 use alsh::transform::{p_transform, q_transform};
-use alsh::util::bench::Bench;
+use alsh::util::bench::{merge_bench_json, Bench};
+use alsh::util::json::Json;
 use alsh::util::Rng;
 
 fn main() {
     let mut bench = Bench::new();
     let mut rng = Rng::seed_from_u64(42);
 
-    // -- pure-Rust hashing ---------------------------------------------------
+    // -- fused vs per-family reference at the default serving shape ----------
+    // d=150, m=3, L=32 tables x K=6 codes => K·L=192 (the acceptance
+    // operating point).
+    let (dim, m, l, k) = (150usize, 3usize, 32usize, 6usize);
+    let families: Vec<L2LshFamily> = (0..l)
+        .map(|_| L2LshFamily::sample(dim + m, k, 2.5, &mut rng))
+        .collect();
+    let fused = FusedHasher::from_families(&families);
+    let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.3).collect();
+    let px = p_transform(&x, m);
+    let n_codes = (l * k) as f64;
+
+    let mut ref_out: Vec<i32> = Vec::with_capacity(l * k);
+    let ref_stats = bench
+        .run(&format!("reference per-family d={dim} KL={}", l * k), n_codes, || {
+            ref_out.clear();
+            for fam in &families {
+                fam.hash_into(&px, &mut ref_out);
+            }
+            ref_out.len()
+        })
+        .clone();
+    let mut fused_out = vec![0i32; fused.n_codes()];
+    let fused_stats = bench
+        .run(&format!("fused matvec      d={dim} KL={}", l * k), n_codes, || {
+            fused.hash_into(&px, &mut fused_out);
+            fused_out.len()
+        })
+        .clone();
+    // Sanity: the two paths must agree bit-for-bit.
+    assert_eq!(ref_out, fused_out, "fused/reference code divergence");
+    let speedup = ref_stats.ns_per_item() / fused_stats.ns_per_item();
+    println!(
+        "fused speedup at (d={dim}, K·L={}): {:.2}x ({:.2} -> {:.2} ns/code)",
+        l * k,
+        speedup,
+        ref_stats.ns_per_item(),
+        fused_stats.ns_per_item()
+    );
+
+    // Batch matrix-matrix variant (the batcher's fallback hash path).
+    let batch = 64usize;
+    let xs: Vec<f32> = (0..batch * (dim + m)).map(|_| rng.normal_f32() * 0.3).collect();
+    let mut batch_out = vec![0i32; batch * fused.n_codes()];
+    let batch_stats = bench
+        .run(
+            &format!("fused matmat      d={dim} KL={} B={batch}", l * k),
+            n_codes * batch as f64,
+            || {
+                fused.hash_batch_into(&xs, batch, &mut batch_out);
+                batch_out.len()
+            },
+        )
+        .clone();
+
+    merge_bench_json(
+        "hashing",
+        vec![
+            ("dim".into(), Json::Num(dim as f64)),
+            ("kl".into(), Json::Num((l * k) as f64)),
+            ("reference_ns_per_code".into(), Json::Num(ref_stats.ns_per_item())),
+            ("fused_ns_per_code".into(), Json::Num(fused_stats.ns_per_item())),
+            ("fused_batch_ns_per_code".into(), Json::Num(batch_stats.ns_per_item())),
+            ("fused_speedup".into(), Json::Num(speedup)),
+        ],
+    );
+
+    // -- reference path across shapes ----------------------------------------
     for (dim, k) in [(150usize, 64usize), (150, 512), (300, 512)] {
         let fam = L2LshFamily::sample(dim + 3, k, 2.5, &mut rng);
         let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.3).collect();

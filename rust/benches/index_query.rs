@@ -1,6 +1,11 @@
 //! Index benchmarks: build time, bucketed query latency vs the exact scan
 //! and the L2LSH baseline — the sublinearity claim (Theorem 4) measured.
 //!
+//! The ALSH query loop runs the allocation-free scratch path (fused hash
+//! + frozen CSR probe + blocked rerank); per-query p50/p99 latency and
+//! candidates/query land in `BENCH_query.json` ("query" section) so the
+//! perf trajectory is tracked across PRs.
+//!
 //! Workload regime: Theorem 4's guarantee is for c-approximate instances
 //! with a high similarity threshold (S0 ≈ 0.8-0.9 U). We therefore plant
 //! strong matches (queries are noisy copies of items), which is also the
@@ -10,7 +15,8 @@
 
 use alsh::baselines::{L2LshIndex, LinearScan};
 use alsh::index::{AlshIndex, AlshParams};
-use alsh::util::bench::Bench;
+use alsh::util::bench::{merge_bench_json, Bench};
+use alsh::util::json::Json;
 use alsh::util::Rng;
 
 /// Items with exact norms uniform in [0.2, 2.0] (10x spread — the shape of
@@ -59,6 +65,7 @@ fn main() {
     let mut bench = Bench::new();
     let mut rng = Rng::seed_from_u64(7);
     let dim = 64;
+    let mut json_entries: Vec<(String, Json)> = Vec::new();
 
     for n in [10_000usize, 40_000] {
         let items = norm_spread_items(n, dim, &mut rng);
@@ -73,14 +80,23 @@ fn main() {
         let l2 = L2LshIndex::build(&items, params.k_per_table, params.n_tables, 2.5, 4);
         let scan = LinearScan::new(&items);
         let queries = planted_queries(&items, 64, &mut rng);
+        let mut scratch = index.scratch();
         let mut qi = 0;
-        bench.run(&format!("alsh_query n={n} top10"), 1.0, || {
+        let alsh_stats = bench
+            .run(&format!("alsh_query n={n} top10 (scratch)"), 1.0, || {
+                qi = (qi + 1) % queries.len();
+                index.query_into(&queries[qi], 10, &mut scratch).len()
+            })
+            .clone();
+        // The allocating convenience path, for the overhead comparison.
+        bench.run(&format!("alsh_query n={n} top10 (alloc)"), 1.0, || {
             qi = (qi + 1) % queries.len();
             index.query(&queries[qi], 10).len()
         });
+        let mut l2_scratch = l2.scratch();
         bench.run(&format!("l2lsh_query n={n} top10"), 1.0, || {
             qi = (qi + 1) % queries.len();
-            l2.query(&queries[qi], 10).len()
+            l2.query_into(&queries[qi], 10, &mut l2_scratch).len()
         });
         bench.run(&format!("linear_scan n={n} top10"), n as f64, || {
             qi = (qi + 1) % queries.len();
@@ -91,20 +107,39 @@ fn main() {
         let mut cands = 0usize;
         let mut hits = 0usize;
         for q in &queries {
-            cands += index.candidates(q).len();
+            cands += index.candidates_into(q, &mut scratch).len();
             let want = scan.query(q, 1)[0].id;
-            if index.query(q, 10).iter().any(|h| h.id == want) {
+            if index.query_into(q, 10, &mut scratch).iter().any(|h| h.id == want) {
                 hits += 1;
             }
         }
+        let cands_per_query = cands as f64 / queries.len() as f64;
         println!(
             "[n={n}] top1-in-top10 recall {hits}/{} | avg candidates {:.0} ({:.2}% of corpus)",
             queries.len(),
-            cands as f64 / queries.len() as f64,
-            100.0 * cands as f64 / queries.len() as f64 / n as f64
+            cands_per_query,
+            100.0 * cands_per_query / n as f64
         );
+        json_entries.push((
+            format!("n{n}_p50_us"),
+            Json::Num(alsh_stats.median.as_nanos() as f64 / 1e3),
+        ));
+        json_entries.push((
+            format!("n{n}_p99_us"),
+            Json::Num(alsh_stats.p99.as_nanos() as f64 / 1e3),
+        ));
+        json_entries.push((
+            format!("n{n}_mean_us"),
+            Json::Num(alsh_stats.mean.as_nanos() as f64 / 1e3),
+        ));
+        json_entries.push((format!("n{n}_candidates_per_query"), Json::Num(cands_per_query)));
+        json_entries.push((
+            format!("n{n}_recall_top1_in_top10"),
+            Json::Num(hits as f64 / queries.len() as f64),
+        ));
     }
 
+    merge_bench_json("query", json_entries);
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_index_query.csv", bench.summary_csv()).ok();
 }

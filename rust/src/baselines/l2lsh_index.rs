@@ -1,17 +1,23 @@
 //! Symmetric L2LSH bucketed index — the §4.2 baseline, same (K, L) table
 //! machinery as the ALSH index but hashing raw vectors with h^{L2} on both
 //! the data and the query side.
+//!
+//! Shares the serving hot-path machinery with `AlshIndex`: fused
+//! multi-table hashing, frozen CSR tables, and the caller-owned
+//! [`QueryScratch`] — so baseline-vs-ALSH benchmark comparisons measure
+//! the transforms, not implementation differences.
 
 use crate::util::Rng;
 
-use crate::index::{HashTable, ScoredItem};
-use crate::lsh::L2LshFamily;
+use crate::index::scratch::with_thread_scratch;
+use crate::index::{FrozenTable, HashTable, QueryScratch, ScoredItem};
+use crate::lsh::{FusedHasher, L2LshFamily};
 use crate::transform::dot;
 
 /// Bucketed symmetric L2LSH index.
 pub struct L2LshIndex {
-    families: Vec<L2LshFamily>,
-    tables: Vec<HashTable>,
+    fused: FusedHasher,
+    tables: Vec<FrozenTable>,
     items_flat: Vec<f32>,
     dim: usize,
     n_items: usize,
@@ -33,20 +39,21 @@ impl L2LshIndex {
         let families: Vec<L2LshFamily> = (0..n_tables)
             .map(|_| L2LshFamily::sample(dim, k_per_table, r, &mut rng))
             .collect();
-        let mut tables = vec![HashTable::new(); n_tables];
-        let mut codes = Vec::with_capacity(k_per_table);
+        let fused = FusedHasher::from_families(&families);
+        let mut build_tables = vec![HashTable::new(); n_tables];
+        let mut codes = vec![0i32; fused.n_codes()];
         for (id, item) in items.iter().enumerate() {
-            for (family, table) in families.iter().zip(tables.iter_mut()) {
-                codes.clear();
-                family.hash_into(item, &mut codes);
-                table.insert(&codes, id as u32);
+            fused.hash_into(item, &mut codes);
+            for (t, table) in build_tables.iter_mut().enumerate() {
+                table.insert(&codes[t * k_per_table..(t + 1) * k_per_table], id as u32);
             }
         }
+        let tables: Vec<FrozenTable> = build_tables.iter().map(FrozenTable::freeze).collect();
         let mut items_flat = Vec::with_capacity(items.len() * dim);
         for it in items {
             items_flat.extend_from_slice(it);
         }
-        Self { families, tables, items_flat, dim, n_items: items.len() }
+        Self { fused, tables, items_flat, dim, n_items: items.len() }
     }
 
     fn item(&self, id: u32) -> &[f32] {
@@ -54,35 +61,53 @@ impl L2LshIndex {
         &self.items_flat[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Candidate union across tables (deduplicated).
-    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
-        assert_eq!(query.len(), self.dim);
-        let mut seen = vec![false; self.n_items];
-        let mut out = Vec::new();
-        let mut codes = Vec::new();
-        for (family, table) in self.families.iter().zip(&self.tables) {
-            codes.clear();
-            family.hash_into(query, &mut codes);
-            for &id in table.get(&codes) {
-                if !seen[id as usize] {
-                    seen[id as usize] = true;
-                    out.push(id);
-                }
-            }
-        }
-        out
+    /// A scratch pre-sized for this index.
+    pub fn scratch(&self) -> QueryScratch {
+        let mut s = QueryScratch::new();
+        s.reserve(self.n_items, self.fused.n_codes(), self.dim);
+        s
     }
 
-    /// Retrieve + exact-rerank top-k (same protocol as `AlshIndex::query`).
-    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
-        let mut scored: Vec<ScoredItem> = self
-            .candidates(query)
-            .into_iter()
-            .map(|id| ScoredItem { id, score: dot(query, self.item(id)) })
-            .collect();
+    /// Allocation-free candidate union across tables (deduplicated).
+    pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
+        assert_eq!(query.len(), self.dim);
+        s.hash_codes_external(&self.fused, query);
+        let k = self.fused.k();
+        let (mut sink, codes, _, _) = s.dedup(self.n_items);
+        for (t, table) in self.tables.iter().enumerate() {
+            sink.extend(table.get(&codes[t * k..(t + 1) * k]));
+        }
+        &s.cands
+    }
+
+    /// Allocation-free retrieve + exact-rerank top-k (same protocol as
+    /// `AlshIndex::query_into`).
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_into(query, s);
+        let QueryScratch { cands, scored, top, .. } = s;
+        scored.clear();
+        for &id in cands.iter() {
+            scored.push(ScoredItem { id, score: dot(query, self.item(id)) });
+        }
         scored.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-        scored.truncate(k);
-        scored
+        top.clear();
+        top.extend_from_slice(&scored[..k.min(scored.len())]);
+        top
+    }
+
+    /// Candidate union across tables (allocating convenience wrapper).
+    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_into(query, s).to_vec())
+    }
+
+    /// Retrieve + exact-rerank top-k (allocating convenience wrapper).
+    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
     }
 }
 
@@ -135,5 +160,20 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), c.len());
+    }
+
+    #[test]
+    fn scratch_path_equals_convenience_path() {
+        let its = items(250, 8, 7);
+        let idx = L2LshIndex::build(&its, 4, 24, 2.5, 8);
+        let mut s = idx.scratch();
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            let cands = idx.candidates_into(&q, &mut s).to_vec();
+            assert_eq!(cands, idx.candidates(&q));
+            let top = idx.query_into(&q, 5, &mut s).to_vec();
+            assert_eq!(top, idx.query(&q, 5));
+        }
     }
 }

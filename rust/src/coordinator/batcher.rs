@@ -1,14 +1,19 @@
-//! Dynamic batcher over the PJRT hash artifact.
+//! Dynamic batcher over the hash path: PJRT artifact when available,
+//! fused pure-Rust matrix–matrix hashing otherwise.
 //!
 //! PJRT executables are shape-monomorphic (fixed batch) and their handles
 //! are not `Send`, so the design is:
 //!
-//! * a dedicated **worker thread** owns the `Runtime` and the compiled
-//!   `alsh_query` executable;
+//! * a dedicated **worker thread** owns the hash backend — either the
+//!   `Runtime` with the compiled `alsh_query` executable, or (when no
+//!   artifacts are present / no XLA backend is built in) the engine's
+//!   [`crate::lsh::FusedHasher`], driven in batch matrix–matrix mode;
 //! * a **batcher thread** collects incoming queries until the batch fills
 //!   (`max_batch`) or a deadline passes (`max_wait`), ships one padded
-//!   batch to the worker, and fans results back out per query (bucket
-//!   probe + exact rerank on the shared `MipsEngine`).
+//!   batch to the worker, and fans results back out per query (CSR bucket
+//!   probe + exact rerank on the shared `MipsEngine`, through one reused
+//!   `QueryScratch` — the fan-out loop allocates only the response
+//!   vectors).
 //!
 //! Channels are std mpsc; per-request responses travel over one-shot
 //! channels (an mpsc used once).
@@ -17,8 +22,9 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::index::ScoredItem;
-use crate::runtime::Runtime;
+use crate::index::{AlshIndex, ScoredItem};
+use crate::runtime::{ArtifactMeta, Runtime};
+use crate::transform::q_transform_into;
 
 use super::engine::MipsEngine;
 use super::metrics::Metrics;
@@ -58,6 +64,14 @@ enum Msg {
     Shutdown,
 }
 
+/// Which hash implementation the worker thread drives.
+enum HashBackend {
+    /// Compiled `alsh_query` artifact through PJRT.
+    Pjrt { meta: ArtifactMeta, a_dk: Vec<f32>, b: Vec<f32> },
+    /// Fused pure-Rust batch hashing on the engine's stacked matrix.
+    Fused,
+}
+
 /// Cheap-to-clone client handle.
 #[derive(Clone)]
 pub struct BatcherHandle {
@@ -84,12 +98,43 @@ pub struct PjrtBatcher {
     worker_thread: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Batch-hash `rows` with the fused pure-Rust matrix–matrix kernel:
+/// Q-transform each row, then one blocked pass over the stacked `[L·K ×
+/// (D+m)]` matrix. The scratch buffers are owned by the worker loop.
+fn fused_hash_batch(
+    index: &AlshIndex,
+    rows: &[Vec<f32>],
+    qx: &mut Vec<f32>,
+    xs: &mut Vec<f32>,
+    codes: &mut Vec<i32>,
+) -> crate::Result<Vec<Vec<i32>>> {
+    let dim = index.dim();
+    let m = index.params().m;
+    let hasher = index.hasher();
+    let nc = hasher.n_codes();
+    xs.clear();
+    for row in rows {
+        anyhow::ensure!(row.len() == dim, "row dim {} != {dim}", row.len());
+        q_transform_into(row, m, qx);
+        xs.extend_from_slice(qx);
+    }
+    let need = rows.len() * nc;
+    if codes.len() < need {
+        codes.resize(need, 0);
+    }
+    hasher.hash_batch_into(xs, rows.len(), &mut codes[..need]);
+    Ok((0..rows.len()).map(|i| codes[i * nc..(i + 1) * nc].to_vec()).collect())
+}
+
 impl PjrtBatcher {
     /// Spawn the worker thread + batcher thread.
     ///
-    /// `artifacts_dir` must contain an `alsh_query` artifact matching the
-    /// engine's item dimension and `m`; the engine's `L*K` hashes must fit
-    /// in the artifact's K columns.
+    /// When `artifacts_dir` holds a matching `alsh_query` artifact, the
+    /// worker hashes through PJRT; the artifact must match the engine's
+    /// item dimension and `m`, and the engine's `L*K` hashes must fit in
+    /// its K columns (a mismatch is a hard error). When no runtime can be
+    /// loaded at all, the worker falls back to the engine's fused CPU
+    /// hasher and serving works without artifacts.
     pub fn spawn(
         engine: Arc<MipsEngine>,
         artifacts_dir: impl Into<std::path::PathBuf>,
@@ -98,53 +143,82 @@ impl PjrtBatcher {
         let dir = artifacts_dir.into();
         let dim = engine.index().dim();
         let m = engine.index().params().m;
-
-        // Validate the artifact on the caller thread for a fast error.
-        let probe = Runtime::load(&dir)?;
-        let meta = probe.find("alsh_query", dim)?;
-        anyhow::ensure!(
-            meta.m == m,
-            "artifact m={} but index m={m}; re-run make artifacts",
-            meta.m
-        );
-        drop(probe);
         let params = *engine.index().params();
         let lk = params.n_tables * params.k_per_table;
-        anyhow::ensure!(
-            lk <= meta.k,
-            "index uses {lk} hashes > artifact capacity {}",
-            meta.k
-        );
-        let (a_dk, b) = engine.concat_family_inputs(meta.k);
 
-        // Worker thread: owns the (non-Send) PJRT runtime.
+        // Probe the runtime on the caller thread for a fast error on real
+        // config mismatches; fall back to fused hashing when the runtime
+        // itself is unavailable.
+        let backend = match Runtime::load(&dir) {
+            Ok(probe) => {
+                let meta = probe.find("alsh_query", dim)?;
+                anyhow::ensure!(
+                    meta.m == m,
+                    "artifact m={} but index m={m}; re-run make artifacts",
+                    meta.m
+                );
+                drop(probe);
+                anyhow::ensure!(
+                    lk <= meta.k,
+                    "index uses {lk} hashes > artifact capacity {}",
+                    meta.k
+                );
+                let (a_dk, b) = engine.concat_family_inputs(meta.k);
+                HashBackend::Pjrt { meta, a_dk, b }
+            }
+            Err(e) => {
+                crate::log_info!(
+                    "PJRT runtime unavailable ({e:#}); batcher using fused CPU hashing"
+                );
+                HashBackend::Fused
+            }
+        };
+        let max_batch = match &backend {
+            HashBackend::Pjrt { meta, .. } => cfg.max_batch.min(meta.batch).max(1),
+            HashBackend::Fused => cfg.max_batch.max(1),
+        };
+
+        // Worker thread: owns the hash backend (PJRT handles are not Send,
+        // so the runtime is re-created on this thread).
         let (job_tx, job_rx) = mpsc::channel::<HashJob>();
-        let meta_worker = meta.clone();
         let worker_dir = dir.clone();
+        let worker_engine = Arc::clone(&engine);
         let worker_thread = std::thread::Builder::new()
-            .name("pjrt-worker".into())
-            .spawn(move || {
-                let mut runtime = match Runtime::load(&worker_dir) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        crate::log_error!("pjrt worker failed to start: {e:#}");
-                        while let Ok(job) = job_rx.recv() {
-                            let _ =
-                                job.resp.send(Err(anyhow::anyhow!("runtime load failed")));
+            .name("hash-worker".into())
+            .spawn(move || match backend {
+                HashBackend::Pjrt { meta, a_dk, b } => {
+                    let mut runtime = match Runtime::load(&worker_dir) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            crate::log_error!("pjrt worker failed to start: {e:#}");
+                            while let Ok(job) = job_rx.recv() {
+                                let _ =
+                                    job.resp.send(Err(anyhow::anyhow!("runtime load failed")));
+                            }
+                            return;
                         }
-                        return;
+                    };
+                    while let Ok(job) = job_rx.recv() {
+                        let res = runtime.run_hash(&meta, &job.rows, &a_dk, &b);
+                        let _ = job.resp.send(res);
                     }
-                };
-                while let Ok(job) = job_rx.recv() {
-                    let res = runtime.run_hash(&meta_worker, &job.rows, &a_dk, &b);
-                    let _ = job.resp.send(res);
+                }
+                HashBackend::Fused => {
+                    let index = worker_engine.index();
+                    let mut qx = Vec::new();
+                    let mut xs = Vec::new();
+                    let mut codes = Vec::new();
+                    while let Ok(job) = job_rx.recv() {
+                        let res =
+                            fused_hash_batch(index, &job.rows, &mut qx, &mut xs, &mut codes);
+                        let _ = job.resp.send(res);
+                    }
                 }
             })
-            .expect("spawn pjrt worker");
+            .expect("spawn hash worker");
 
         // Batcher thread: dynamic batching + fan-out.
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
-        let max_batch = cfg.max_batch.min(meta.batch).max(1);
         let metrics = engine.metrics();
         let batcher_thread = std::thread::Builder::new()
             .name("alsh-batcher".into())
@@ -169,6 +243,9 @@ impl PjrtBatcher {
         max_wait: Duration,
         lk: usize,
     ) {
+        // One scratch for the whole loop: probes + reranks are
+        // allocation-free at steady state.
+        let mut scratch = engine.index().scratch();
         'outer: while let Ok(first) = rx.recv() {
             let Msg::Query(first) = first else { break };
             let mut reqs = vec![first];
@@ -195,15 +272,21 @@ impl PjrtBatcher {
             if job_tx.send(HashJob { rows, resp }).is_err() {
                 metrics.record_error();
                 for req in reqs {
-                    let _ = req.resp.send(Err("pjrt worker is gone".into()));
+                    let _ = req.resp.send(Err("hash worker is gone".into()));
                 }
                 continue;
             }
             match hash_rx.recv() {
                 Ok(Ok(code_rows)) => {
                     for (req, codes) in reqs.into_iter().zip(code_rows) {
-                        let out =
-                            engine.query_with_codes(&req.vector, &codes[..lk], req.top_k);
+                        let out = engine
+                            .query_with_codes_into(
+                                &req.vector,
+                                &codes[..lk],
+                                req.top_k,
+                                &mut scratch,
+                            )
+                            .to_vec();
                         let _ = req.resp.send(Ok(out));
                     }
                 }
@@ -217,7 +300,7 @@ impl PjrtBatcher {
                 Err(_) => {
                     metrics.record_error();
                     for req in reqs {
-                        let _ = req.resp.send(Err("pjrt worker dropped the job".into()));
+                        let _ = req.resp.send(Err("hash worker dropped the job".into()));
                     }
                 }
             }
@@ -246,5 +329,94 @@ impl PjrtBatcher {
         if let Some(t) = self.worker_thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::AlshParams;
+    use crate::util::Rng;
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let s = 0.2 + 1.8 * rng.f32();
+                (0..d).map(|_| rng.normal_f32() * s).collect()
+            })
+            .collect()
+    }
+
+    /// Without artifacts the batcher must still serve, via the fused CPU
+    /// backend, and agree exactly with the direct engine path.
+    #[test]
+    fn fused_fallback_serves_and_matches_direct_path() {
+        let its = items(400, 12, 1);
+        let engine = Arc::new(MipsEngine::new(&its, AlshParams::default(), 2));
+        let batcher = PjrtBatcher::spawn(
+            Arc::clone(&engine),
+            "definitely-not-an-artifacts-dir",
+            BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+        )
+        .expect("fused fallback must spawn");
+        let handle = batcher.handle();
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+            let batched = handle.query(q.clone(), 10).expect("batched query");
+            assert_eq!(batched, engine.query(&q, 10));
+        }
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn fused_fallback_rejects_bad_dims() {
+        let its = items(100, 8, 4);
+        let engine = Arc::new(MipsEngine::new(&its, AlshParams::default(), 5));
+        let batcher = PjrtBatcher::spawn(
+            Arc::clone(&engine),
+            "definitely-not-an-artifacts-dir",
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        let handle = batcher.handle();
+        assert!(handle.query(vec![1.0, 2.0], 5).is_err(), "dim mismatch must error");
+        // The batcher survives the bad request.
+        let q = vec![0.1f32; 8];
+        assert!(handle.query(q, 5).is_ok());
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_batch_together() {
+        let its = items(300, 8, 6);
+        let engine = Arc::new(MipsEngine::new(&its, AlshParams::default(), 7));
+        let batcher = PjrtBatcher::spawn(
+            Arc::clone(&engine),
+            "definitely-not-an-artifacts-dir",
+            BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() },
+        )
+        .unwrap();
+        let handle = batcher.handle();
+        let threads: Vec<_> = (0..8)
+            .map(|c| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seed_from_u64(100 + c);
+                    for _ in 0..10 {
+                        let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+                        h.query(q, 5).expect("query");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.queries, 80);
+        assert!(snap.batches <= 80, "batches recorded");
+        batcher.shutdown();
     }
 }

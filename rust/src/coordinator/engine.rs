@@ -3,15 +3,17 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::index::{AlshIndex, AlshParams, ScoredItem};
+use crate::index::scratch::with_thread_scratch;
+use crate::index::{AlshIndex, AlshParams, QueryScratch, ScoredItem};
 
 use super::metrics::Metrics;
 
 /// A self-contained MIPS engine over one item collection.
 ///
-/// The pure-Rust request path (`query`) is used per-shard by the router;
+/// The allocation-free request path (`query_into` with a caller-owned
+/// [`QueryScratch`]) is used per-shard by the router and by the batcher;
 /// the PJRT-accelerated path hashes whole batches through the AOT
-/// artifact (see `batcher`) and re-enters here via `query_with_codes`.
+/// artifact (see `batcher`) and re-enters here via `query_with_codes_into`.
 pub struct MipsEngine {
     index: AlshIndex,
     metrics: Arc<Metrics>,
@@ -37,25 +39,55 @@ impl MipsEngine {
         Arc::clone(&self.metrics)
     }
 
-    /// Pure-Rust query path: Q-transform + hash + probe + exact rerank.
-    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+    /// A scratch pre-sized for this engine's index.
+    pub fn scratch(&self) -> QueryScratch {
+        self.index.scratch()
+    }
+
+    /// Allocation-free query path: Q-transform + fused hash + CSR probe +
+    /// exact rerank, all through the caller's scratch.
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
         let t0 = Instant::now();
-        let cands = self.index.candidates(query);
-        let n_cands = cands.len();
-        let out = self.index.rerank(query, &cands, top_k);
+        self.index.candidates_into(query, s);
+        let n_cands = s.candidates().len();
+        let out = self.index.rerank_into(query, top_k, s);
         self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
         out
     }
 
-    /// PJRT path re-entry: the batcher already ran the `alsh_query`
-    /// artifact and hands us this query's `[L*K]` code row.
-    pub fn query_with_codes(&self, query: &[f32], codes: &[i32], top_k: usize) -> Vec<ScoredItem> {
+    /// PJRT path re-entry: the batcher already hashed this query (via the
+    /// compiled artifact or the fused CPU fallback) and hands us its
+    /// `[L*K]` code row.
+    pub fn query_with_codes_into<'s>(
+        &self,
+        query: &[f32],
+        codes: &[i32],
+        top_k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
         let t0 = Instant::now();
-        let cands = self.index.candidates_from_codes(codes);
-        let n_cands = cands.len();
-        let out = self.index.rerank(query, &cands, top_k);
+        self.index.candidates_from_codes_into(codes, s);
+        let n_cands = s.candidates().len();
+        let out = self.index.rerank_into(query, top_k, s);
         self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
         out
+    }
+
+    /// Allocating convenience wrapper over [`MipsEngine::query_into`]
+    /// (thread-local scratch).
+    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_into(query, top_k, s).to_vec())
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`MipsEngine::query_with_codes_into`].
+    pub fn query_with_codes(&self, query: &[f32], codes: &[i32], top_k: usize) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_with_codes_into(query, codes, top_k, s).to_vec())
     }
 
     /// The flat `(a, b)` artifact inputs spanning all L tables: columns
@@ -109,6 +141,16 @@ mod tests {
         let _ = eng.query(&vec![-0.25; 8], 5);
         let s = eng.metrics().snapshot();
         assert_eq!(s.queries, 2);
+    }
+
+    #[test]
+    fn scratch_path_records_metrics_and_matches() {
+        let eng = MipsEngine::new(&items(200, 8, 9), AlshParams::default(), 10);
+        let mut scratch = eng.scratch();
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).sin()).collect();
+        let a = eng.query_into(&q, 5, &mut scratch).to_vec();
+        assert_eq!(a, eng.query(&q, 5));
+        assert_eq!(eng.metrics().snapshot().queries, 2);
     }
 
     #[test]

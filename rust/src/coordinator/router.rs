@@ -2,7 +2,8 @@
 //! each node keeps its own hash tables over an item shard; a query fans
 //! out, each shard answers locally, and the final top-k is a cheap merge.
 
-use crate::index::{AlshParams, ScoredItem};
+use crate::index::scratch::with_thread_scratch;
+use crate::index::{AlshParams, QueryScratch, ScoredItem};
 
 use super::engine::MipsEngine;
 
@@ -42,17 +43,32 @@ impl ShardedRouter {
     /// Scatter the query to all shards, gather local top-k lists, merge to
     /// the global top-k. The merge communicates only `k` scored ids per
     /// shard — the "one single number per node" economics of §3.7.
-    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+    ///
+    /// Allocation-free: one caller-owned scratch serves every shard (its
+    /// buffers grow to the largest shard once, then are reused).
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
         assert_eq!(query.len(), self.dim);
-        let mut merged: Vec<ScoredItem> = Vec::with_capacity(top_k * self.shards.len());
+        s.merged.clear();
         for (engine, &off) in self.shards.iter().zip(&self.offsets) {
-            for hit in engine.query(query, top_k) {
-                merged.push(ScoredItem { id: hit.id + off, score: hit.score });
+            let n = engine.query_into(query, top_k, s).len();
+            for i in 0..n {
+                let hit = s.top[i];
+                s.merged.push(ScoredItem { id: hit.id + off, score: hit.score });
             }
         }
-        merged.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-        merged.truncate(top_k);
-        merged
+        s.merged.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        s.merged.truncate(top_k);
+        &s.merged
+    }
+
+    /// Allocating convenience wrapper over [`ShardedRouter::query_into`].
+    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_into(query, top_k, s).to_vec())
     }
 
     /// Total queries served across shards.
@@ -107,6 +123,19 @@ mod tests {
             }
         }
         assert!(hits >= 27, "sharded top-1 recall {hits}/30");
+    }
+
+    #[test]
+    fn scratch_path_equals_convenience_path() {
+        let its = items(500, 10, 20);
+        let router = ShardedRouter::build(&its, 4, AlshParams::default(), 21);
+        let mut s = QueryScratch::new();
+        let mut rng = Rng::seed_from_u64(22);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            let via_scratch = router.query_into(&q, 7, &mut s).to_vec();
+            assert_eq!(via_scratch, router.query(&q, 7));
+        }
     }
 
     #[test]

@@ -1,10 +1,29 @@
 //! The bucketed (K, L) ALSH index: sublinear MIPS serving (Theorem 2).
+//!
+//! Hot-path architecture (this is the latency-critical serving code):
+//!
+//! * **Fused hashing** — all `L·K` codes per query come from one blocked
+//!   matrix–vector pass over the stacked projection matrix
+//!   ([`crate::lsh::FusedHasher`]), bit-identical to per-family hashing.
+//! * **Frozen CSR tables** — after build, each mutable `HashMap` table is
+//!   frozen into flat sorted-key/offsets/postings arrays
+//!   ([`super::frozen::FrozenTable`]); probes touch contiguous memory.
+//! * **Caller-owned scratch** — every transient buffer lives in a
+//!   [`QueryScratch`] handed in by the caller, so steady-state queries
+//!   allocate nothing and concurrent queries share no mutable state (no
+//!   locks anywhere on the query path).
+//!
+//! The allocating methods (`query`, `candidates`, …) are convenience
+//! wrappers over the `_into` variants using a thread-local scratch; hot
+//! loops should own a scratch and call `query_into` directly.
 
 use crate::util::Rng;
 
+use super::frozen::FrozenTable;
 use super::hash_table::HashTable;
-use crate::lsh::L2LshFamily;
-use crate::transform::{dot, p_transform, q_transform, UScale};
+use super::scratch::{with_thread_scratch, QueryScratch};
+use crate::lsh::{FusedHasher, L2LshFamily};
+use crate::transform::{dot, p_transform_into, q_transform_into, UScale};
 
 /// Parameters of a bucketed ALSH index.
 #[derive(Clone, Copy, Debug)]
@@ -39,26 +58,31 @@ pub struct ScoredItem {
 }
 
 /// Bucketed ALSH index over a fixed item collection.
+///
+/// Immutable once built (`Sync` without interior mutability): all query
+/// state lives in the caller's [`QueryScratch`].
 pub struct AlshIndex {
     params: AlshParams,
     scale: UScale,
-    /// One K-wide hash family per table, over dimension D + m.
+    /// One K-wide hash family per table, over dimension D + m (retained
+    /// for persistence, the PJRT artifact inputs, and reference paths).
     families: Vec<L2LshFamily>,
-    tables: Vec<HashTable>,
+    /// The same families stacked into one `[L·K × (D+m)]` matrix.
+    fused: FusedHasher,
+    /// Frozen CSR tables (build-side `HashMap` form is dropped after build).
+    tables: Vec<FrozenTable>,
     /// Original (unscaled) item vectors, row-major — used for exact rerank.
     items_flat: Vec<f32>,
     dim: usize,
     n_items: usize,
-    /// Visit stamps for allocation-free candidate dedup across tables
-    /// (Mutex so the index is Sync; uncontended in the single-batcher path).
-    stamps: std::sync::Mutex<(Vec<u32>, u32)>,
 }
 
 impl AlshIndex {
     /// Build the index over `items` (each of equal dimension).
     ///
     /// Applies Eq. 11 scaling (max norm -> U), the P transform (Eq. 12),
-    /// and inserts every item into all L tables.
+    /// hashes every item through the fused matrix, inserts into all L
+    /// build-side tables, then freezes them into CSR form.
     pub fn build(items: &[Vec<f32>], params: AlshParams, seed: u64) -> Self {
         assert!(!items.is_empty(), "empty item collection");
         let dim = items[0].len();
@@ -68,30 +92,28 @@ impl AlshIndex {
         let families: Vec<L2LshFamily> = (0..params.n_tables)
             .map(|_| L2LshFamily::sample(dim + params.m, params.k_per_table, params.r, &mut rng))
             .collect();
-        let mut tables = vec![HashTable::new(); params.n_tables];
-        let mut codes = Vec::with_capacity(params.k_per_table);
+        let fused = FusedHasher::from_families(&families);
+        let mut build_tables = vec![HashTable::new(); params.n_tables];
+        // Per-item buffers, reused across the whole pass (zero allocations
+        // in the loop body after the first item).
+        let mut scaled = Vec::with_capacity(dim);
+        let mut px = Vec::with_capacity(dim + params.m);
+        let mut codes = vec![0i32; fused.n_codes()];
         for (id, item) in items.iter().enumerate() {
-            let px = p_transform(&scale.apply(item), params.m);
-            for (family, table) in families.iter().zip(tables.iter_mut()) {
-                codes.clear();
-                family.hash_into(&px, &mut codes);
-                table.insert(&codes, id as u32);
+            scale.apply_into(item, &mut scaled);
+            p_transform_into(&scaled, params.m, &mut px);
+            fused.hash_into(&px, &mut codes);
+            for (t, table) in build_tables.iter_mut().enumerate() {
+                let ct = &codes[t * params.k_per_table..(t + 1) * params.k_per_table];
+                table.insert(ct, id as u32);
             }
         }
+        let tables: Vec<FrozenTable> = build_tables.iter().map(FrozenTable::freeze).collect();
         let mut items_flat = Vec::with_capacity(items.len() * dim);
         for item in items {
             items_flat.extend_from_slice(item);
         }
-        Self {
-            params,
-            scale,
-            families,
-            tables,
-            items_flat,
-            dim,
-            n_items: items.len(),
-            stamps: std::sync::Mutex::new((vec![0u32; items.len()], 0)),
-        }
+        Self { params, scale, families, fused, tables, items_flat, dim, n_items: items.len() }
     }
 
     pub fn params(&self) -> &AlshParams {
@@ -115,9 +137,22 @@ impl AlshIndex {
         &self.families
     }
 
-    /// The hash tables (persistence / diagnostics).
-    pub fn tables(&self) -> &[HashTable] {
+    /// The fused multi-table hasher (batcher fallback, benches).
+    pub fn hasher(&self) -> &FusedHasher {
+        &self.fused
+    }
+
+    /// The frozen CSR hash tables (persistence / diagnostics).
+    pub fn tables(&self) -> &[FrozenTable] {
         &self.tables
+    }
+
+    /// A scratch pre-sized for this index, so even the first query through
+    /// it performs no allocation.
+    pub fn scratch(&self) -> QueryScratch {
+        let mut s = QueryScratch::new();
+        s.reserve(self.n_items, self.fused.n_codes(), self.dim + self.params.m);
+        s
     }
 
     /// Reassemble an index from persisted parts (see `index::persist`).
@@ -125,7 +160,7 @@ impl AlshIndex {
         params: AlshParams,
         scale: UScale,
         families: Vec<L2LshFamily>,
-        tables: Vec<HashTable>,
+        tables: Vec<FrozenTable>,
         items_flat: Vec<f32>,
         dim: usize,
         n_items: usize,
@@ -133,30 +168,8 @@ impl AlshIndex {
         assert_eq!(families.len(), params.n_tables);
         assert_eq!(tables.len(), params.n_tables);
         assert_eq!(items_flat.len(), dim * n_items);
-        Self {
-            params,
-            scale,
-            families,
-            tables,
-            items_flat,
-            dim,
-            n_items,
-            stamps: std::sync::Mutex::new((vec![0u32; n_items], 0)),
-        }
-    }
-
-    /// Run `f` with a fresh dedup epoch over the visit-stamp array
-    /// (shared by the plain and multi-probe candidate paths).
-    pub(crate) fn with_stamps(&self, f: impl FnOnce(&mut Vec<u32>, u32)) {
-        let mut guard = self.stamps.lock().unwrap();
-        let (stamps, epoch) = &mut *guard;
-        *epoch = epoch.wrapping_add(1);
-        if *epoch == 0 {
-            stamps.fill(0);
-            *epoch = 1;
-        }
-        let e = *epoch;
-        f(stamps, e);
+        let fused = FusedHasher::from_families(&families);
+        Self { params, scale, families, fused, tables, items_flat, dim, n_items }
     }
 
     /// Item vector by id.
@@ -165,74 +178,145 @@ impl AlshIndex {
         &self.items_flat[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Raw candidate ids for `query` — the union of the probed buckets
-    /// across all L tables, deduplicated, before re-ranking.
-    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+    /// Probe all L tables with the codes in `s.codes`, deduplicating into
+    /// `s.cands`.
+    fn probe_scratch_codes(&self, s: &mut QueryScratch) {
+        let k = self.params.k_per_table;
+        let (mut sink, codes, _, _) = s.dedup(self.n_items);
+        for (t, table) in self.tables.iter().enumerate() {
+            sink.extend(table.get(&codes[t * k..(t + 1) * k]));
+        }
+    }
+
+    /// Allocation-free candidate retrieval: the union of the probed
+    /// buckets across all L tables, deduplicated, in first-seen order.
+    pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
-        let qx = q_transform(query, self.params.m);
-        self.candidates_transformed(&qx)
+        q_transform_into(query, self.params.m, &mut s.qx);
+        s.hash_codes(&self.fused);
+        self.probe_scratch_codes(s);
+        &s.cands
     }
 
     /// Candidate retrieval when the caller already computed Q(query)
-    /// codes-side input (used by the PJRT batcher, which hashes the whole
-    /// batch in one executable call).
-    pub fn candidates_transformed(&self, qx: &[f32]) -> Vec<u32> {
-        let mut codes = Vec::with_capacity(self.params.k_per_table);
-        let mut out = Vec::new();
-        let mut guard = self.stamps.lock().unwrap();
-        let (stamps, epoch) = &mut *guard;
-        *epoch = epoch.wrapping_add(1);
-        if *epoch == 0 {
-            stamps.fill(0);
-            *epoch = 1;
-        }
-        let epoch = *epoch;
-        for (family, table) in self.families.iter().zip(&self.tables) {
-            codes.clear();
-            family.hash_into(qx, &mut codes);
-            for &id in table.get(&codes) {
-                let s = &mut stamps[id as usize];
-                if *s != epoch {
-                    *s = epoch;
-                    out.push(id);
-                }
-            }
-        }
-        out
+    /// (used when a whole batch was transformed/hashed up front).
+    pub fn candidates_transformed_into<'s>(
+        &self,
+        qx: &[f32],
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        s.hash_codes_external(&self.fused, qx);
+        self.probe_scratch_codes(s);
+        &s.cands
     }
 
     /// Candidate retrieval from externally computed per-table codes
     /// (the PJRT path: codes arrive as one `[L * K]` row per query).
-    pub fn candidates_from_codes(&self, codes_flat: &[i32]) -> Vec<u32> {
+    pub fn candidates_from_codes_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
         let k = self.params.k_per_table;
         assert_eq!(codes_flat.len(), k * self.params.n_tables);
-        let mut out = Vec::new();
-        let mut guard = self.stamps.lock().unwrap();
-        let (stamps, epoch) = &mut *guard;
-        *epoch = epoch.wrapping_add(1);
-        if *epoch == 0 {
-            stamps.fill(0);
-            *epoch = 1;
-        }
-        let epoch = *epoch;
+        let (mut sink, _, _, _) = s.dedup(self.n_items);
         for (t, table) in self.tables.iter().enumerate() {
-            for &id in table.get(&codes_flat[t * k..(t + 1) * k]) {
-                let s = &mut stamps[id as usize];
-                if *s != epoch {
-                    *s = epoch;
-                    out.push(id);
-                }
-            }
+            sink.extend(table.get(&codes_flat[t * k..(t + 1) * k]));
         }
-        out
+        &s.cands
     }
 
-    /// Exact-rerank `candidates` by inner product with `query`; top `k`.
+    /// Blocked exact scoring of `cands` against `query` into `out`
+    /// (4 independent accumulation chains; per-item order identical to
+    /// [`dot`], so scores are bit-identical to the scalar path).
+    fn score_candidates(&self, query: &[f32], cands: &[u32], out: &mut Vec<ScoredItem>) {
+        let d = self.dim;
+        let mut i = 0;
+        while i + 4 <= cands.len() {
+            let r0 = self.item(cands[i]);
+            let r1 = self.item(cands[i + 1]);
+            let r2 = self.item(cands[i + 2]);
+            let r3 = self.item(cands[i + 3]);
+            let mut a0 = 0.0f32;
+            let mut a1 = 0.0f32;
+            let mut a2 = 0.0f32;
+            let mut a3 = 0.0f32;
+            for j in 0..d {
+                let qv = query[j];
+                a0 += qv * r0[j];
+                a1 += qv * r1[j];
+                a2 += qv * r2[j];
+                a3 += qv * r3[j];
+            }
+            out.push(ScoredItem { id: cands[i], score: a0 });
+            out.push(ScoredItem { id: cands[i + 1], score: a1 });
+            out.push(ScoredItem { id: cands[i + 2], score: a2 });
+            out.push(ScoredItem { id: cands[i + 3], score: a3 });
+            i += 4;
+        }
+        while i < cands.len() {
+            out.push(ScoredItem { id: cands[i], score: dot(query, self.item(cands[i])) });
+            i += 1;
+        }
+    }
+
+    /// Allocation-free exact rerank of `s.cands` (the batched blocked
+    /// rerank over `items_flat`); top `k` lands in `s.top`, sorted by
+    /// descending score.
+    pub fn rerank_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let QueryScratch { cands, scored, top, .. } = s;
+        scored.clear();
+        self.score_candidates(query, cands, scored);
+        top.clear();
+        let k = k.min(scored.len());
+        if k > 0 {
+            scored.select_nth_unstable_by(k - 1, |a, b| {
+                b.score.partial_cmp(&a.score).unwrap()
+            });
+            top.extend_from_slice(&scored[..k]);
+            top.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        }
+        top
+    }
+
+    /// Full allocation-free query: probe + exact rerank, results in
+    /// (and borrowed from) the caller's scratch.
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_into(query, s);
+        self.rerank_into(query, k, s)
+    }
+
+    // ---- allocating convenience wrappers (thread-local scratch) ----------
+
+    /// Raw candidate ids for `query` — see [`AlshIndex::candidates_into`].
+    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_into(query, s).to_vec())
+    }
+
+    /// See [`AlshIndex::candidates_transformed_into`].
+    pub fn candidates_transformed(&self, qx: &[f32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_transformed_into(qx, s).to_vec())
+    }
+
+    /// See [`AlshIndex::candidates_from_codes_into`].
+    pub fn candidates_from_codes(&self, codes_flat: &[i32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_from_codes_into(codes_flat, s).to_vec())
+    }
+
+    /// Exact-rerank an arbitrary candidate list by inner product; top `k`.
     pub fn rerank(&self, query: &[f32], candidates: &[u32], k: usize) -> Vec<ScoredItem> {
-        let mut scored: Vec<ScoredItem> = candidates
-            .iter()
-            .map(|&id| ScoredItem { id, score: dot(query, self.item(id)) })
-            .collect();
+        let mut scored: Vec<ScoredItem> = Vec::new();
+        self.score_candidates(query, candidates, &mut scored);
         let k = k.min(scored.len());
         if k == 0 {
             return Vec::new();
@@ -247,8 +331,7 @@ impl AlshIndex {
 
     /// Full query: retrieve candidates, exact-rerank, return top `k`.
     pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
-        let cands = self.candidates(query);
-        self.rerank(query, &cands, k)
+        with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
     }
 
     /// Aggregate table statistics: (total buckets, total postings, max bucket).
@@ -263,6 +346,7 @@ impl AlshIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transform::q_transform;
 
     /// Items with wildly varying norms — the regime where MIPS != NNS.
     fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -309,6 +393,38 @@ mod tests {
         for s in idx.query(&q, 5) {
             let want = dot(&q, &items[s.id as usize]);
             assert!((s.score - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scratch_path_equals_convenience_path() {
+        let items = norm_spread_items(400, 12, 30);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 31);
+        let mut s = idx.scratch();
+        let mut rng = Rng::seed_from_u64(32);
+        for _ in 0..25 {
+            let q: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+            let via_scratch = idx.query_into(&q, 10, &mut s).to_vec();
+            assert_eq!(via_scratch, idx.query(&q, 10));
+            let cands_scratch = idx.candidates_into(&q, &mut s).to_vec();
+            assert_eq!(cands_scratch, idx.candidates(&q));
+        }
+    }
+
+    #[test]
+    fn one_scratch_serves_multiple_indexes() {
+        // Scratch buffers only grow; a shared scratch across indexes of
+        // different sizes/shapes must stay correct (the router pattern).
+        let small = AlshIndex::build(&norm_spread_items(50, 6, 40), AlshParams::default(), 41);
+        let big_params = AlshParams { k_per_table: 9, n_tables: 12, ..Default::default() };
+        let big = AlshIndex::build(&norm_spread_items(500, 6, 42), big_params, 43);
+        let mut s = QueryScratch::new();
+        let q = vec![0.25f32; 6];
+        for _ in 0..3 {
+            let a = small.query_into(&q, 5, &mut s).to_vec();
+            assert_eq!(a, small.query(&q, 5));
+            let b = big.query_into(&q, 5, &mut s).to_vec();
+            assert_eq!(b, big.query(&q, 5));
         }
     }
 
@@ -388,6 +504,19 @@ mod tests {
     }
 
     #[test]
+    fn rerank_into_matches_rerank() {
+        let items = norm_spread_items(300, 10, 50);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 51);
+        let q: Vec<f32> = (0..10).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut s = idx.scratch();
+        let cands = idx.candidates_into(&q, &mut s).to_vec();
+        for k in [0usize, 1, 5, 1000] {
+            let via_scratch = idx.rerank_into(&q, k, &mut s).to_vec();
+            assert_eq!(via_scratch, idx.rerank(&q, &cands, k), "k={k}");
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn dim_mismatch_panics() {
         let items = norm_spread_items(10, 4, 20);
@@ -399,15 +528,14 @@ mod tests {
     fn epoch_wraparound_is_safe() {
         let items = norm_spread_items(50, 4, 22);
         let idx = AlshIndex::build(&items, AlshParams::default(), 23);
-        // Force the epoch counter close to wrap.
-        idx.stamps.lock().unwrap().1 = u32::MAX - 2;
+        let mut s = idx.scratch();
+        // Force the scratch epoch counter close to wrap.
+        s.set_epoch(u32::MAX - 2);
         let q = vec![0.3f32; 4];
+        let want = idx.candidates(&q);
         for _ in 0..6 {
-            let c = idx.candidates(&q);
-            let mut s = c.clone();
-            s.sort_unstable();
-            s.dedup();
-            assert_eq!(s.len(), c.len());
+            let c = idx.candidates_into(&q, &mut s).to_vec();
+            assert_eq!(c, want, "wraparound changed the candidate stream");
         }
     }
 }

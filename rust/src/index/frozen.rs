@@ -1,0 +1,239 @@
+//! Immutable CSR hash tables: the serve-side form of [`HashTable`].
+//!
+//! After the build pass, each mutable `HashMap<u64, Vec<u32>>` table is
+//! frozen into three flat arrays — sorted bucket keys, CSR offsets, and
+//! one contiguous postings array — so a probe is a bounded binary search
+//! into cache-friendly memory instead of a hash-map walk plus a pointer
+//! chase into a per-bucket `Vec`. A 256-entry top-byte radix over the
+//! (avalanched, uniform) keys first narrows the search to ~1/256 of the
+//! key array, leaving a handful of comparisons per probe.
+//!
+//! Freezing preserves each bucket's postings order (ascending item id, the
+//! build insertion order), so candidate streams are byte-identical to the
+//! mutable form — property-tested in `tests/fused_csr_equivalence.rs`.
+
+use super::hash_table::{bucket_key, HashTable};
+
+/// One frozen hash table in CSR layout.
+#[derive(Clone, Debug, Default)]
+pub struct FrozenTable {
+    /// Bucket keys, sorted ascending (unique by construction).
+    keys: Vec<u64>,
+    /// Top-byte radix: keys with high byte `b` live at
+    /// `keys[starts[b] as usize..starts[b + 1] as usize]`. Length 257.
+    starts: Vec<u32>,
+    /// CSR offsets into `postings`; length `keys.len() + 1`.
+    offsets: Vec<u32>,
+    /// All postings, concatenated in bucket order.
+    postings: Vec<u32>,
+}
+
+fn radix_starts(keys: &[u64]) -> Vec<u32> {
+    let mut starts = vec![0u32; 257];
+    for &k in keys {
+        starts[(k >> 56) as usize + 1] += 1;
+    }
+    for b in 0..256 {
+        starts[b + 1] += starts[b];
+    }
+    starts
+}
+
+impl FrozenTable {
+    /// Freeze a build-side table. Postings order within each bucket is
+    /// preserved exactly.
+    pub fn freeze(table: &HashTable) -> Self {
+        let mut entries: Vec<(u64, &Vec<u32>)> =
+            table.buckets().map(|(k, v)| (*k, v)).collect();
+        entries.sort_unstable_by_key(|e| e.0);
+        let n_postings: usize = entries.iter().map(|(_, v)| v.len()).sum();
+        assert!(n_postings <= u32::MAX as usize, "postings overflow u32 offsets");
+        let mut keys = Vec::with_capacity(entries.len());
+        let mut offsets = Vec::with_capacity(entries.len() + 1);
+        let mut postings = Vec::with_capacity(n_postings);
+        offsets.push(0u32);
+        for (key, ids) in entries {
+            keys.push(key);
+            postings.extend_from_slice(ids);
+            offsets.push(postings.len() as u32);
+        }
+        let starts = radix_starts(&keys);
+        Self { keys, starts, offsets, postings }
+    }
+
+    /// Reassemble from persisted parts, validating CSR invariants.
+    /// `max_id` bounds the stored item ids (exclusive).
+    pub fn from_parts(
+        keys: Vec<u64>,
+        offsets: Vec<u32>,
+        postings: Vec<u32>,
+        max_id: u32,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            offsets.len() == keys.len() + 1,
+            "corrupt table: {} offsets for {} keys",
+            offsets.len(),
+            keys.len()
+        );
+        anyhow::ensure!(
+            keys.windows(2).all(|w| w[0] < w[1]),
+            "corrupt table: keys not strictly ascending"
+        );
+        anyhow::ensure!(offsets.first() == Some(&0), "corrupt table: offsets[0] != 0");
+        anyhow::ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "corrupt table: offsets not monotonic"
+        );
+        anyhow::ensure!(
+            *offsets.last().unwrap() as usize == postings.len(),
+            "corrupt table: offsets end {} != {} postings",
+            offsets.last().unwrap(),
+            postings.len()
+        );
+        anyhow::ensure!(
+            postings.iter().all(|&id| id < max_id),
+            "corrupt table: posting id out of range"
+        );
+        let starts = radix_starts(&keys);
+        Ok(Self { keys, starts, offsets, postings })
+    }
+
+    /// The postings list for `codes` (empty slice for an empty bucket).
+    #[inline]
+    pub fn get(&self, codes: &[i32]) -> &[u32] {
+        self.get_by_key(bucket_key(codes))
+    }
+
+    /// Probe by raw bucket key.
+    #[inline]
+    pub fn get_by_key(&self, key: u64) -> &[u32] {
+        let b = (key >> 56) as usize;
+        let lo = self.starts[b] as usize;
+        let hi = self.starts[b + 1] as usize;
+        match self.keys[lo..hi].binary_search(&key) {
+            Ok(i) => {
+                let i = lo + i;
+                &self.postings[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+            }
+            Err(_) => &[],
+        }
+    }
+
+    /// Number of non-empty buckets.
+    pub fn n_buckets(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Total number of postings (= number of inserted items).
+    pub fn n_postings(&self) -> usize {
+        self.postings.len()
+    }
+
+    /// Size of the largest bucket (skew diagnostic for metrics).
+    pub fn max_bucket(&self) -> usize {
+        self.offsets
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sorted bucket keys (persistence).
+    pub fn keys(&self) -> &[u64] {
+        &self.keys
+    }
+
+    /// CSR offsets (persistence).
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Concatenated postings (persistence).
+    pub fn postings(&self) -> &[u32] {
+        &self.postings
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::Rng;
+
+    fn random_table(rng: &mut Rng, n_items: u32) -> HashTable {
+        let mut t = HashTable::new();
+        for id in 0..n_items {
+            let codes: Vec<i32> =
+                (0..3).map(|_| (rng.below(6) as i32) - 3).collect();
+            t.insert(&codes, id);
+        }
+        t
+    }
+
+    #[test]
+    fn freeze_preserves_every_bucket() {
+        check(40, |rng| {
+            let n = 1 + rng.below(300) as u32;
+            let table = random_table(rng, n);
+            let frozen = FrozenTable::freeze(&table);
+            assert_eq!(frozen.n_buckets(), table.n_buckets());
+            assert_eq!(frozen.n_postings(), table.n_postings());
+            assert_eq!(frozen.max_bucket(), table.max_bucket());
+            for (key, ids) in table.buckets() {
+                assert_eq!(frozen.get_by_key(*key), ids.as_slice(), "bucket {key:#x}");
+            }
+        });
+    }
+
+    #[test]
+    fn missing_keys_probe_empty() {
+        let mut rng = Rng::seed_from_u64(9);
+        let table = random_table(&mut rng, 100);
+        let frozen = FrozenTable::freeze(&table);
+        // Probe keys that are almost certainly absent.
+        for i in 0..1000u64 {
+            let key = i.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xDEAD_BEEF;
+            assert_eq!(frozen.get_by_key(key), table.get_by_key(key));
+        }
+    }
+
+    #[test]
+    fn parts_roundtrip() {
+        let mut rng = Rng::seed_from_u64(10);
+        let table = random_table(&mut rng, 200);
+        let frozen = FrozenTable::freeze(&table);
+        let rebuilt = FrozenTable::from_parts(
+            frozen.keys().to_vec(),
+            frozen.offsets().to_vec(),
+            frozen.postings().to_vec(),
+            200,
+        )
+        .unwrap();
+        for (key, ids) in table.buckets() {
+            assert_eq!(rebuilt.get_by_key(*key), ids.as_slice());
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_corruption() {
+        // Unsorted keys.
+        assert!(FrozenTable::from_parts(vec![5, 3], vec![0, 1, 2], vec![0, 1], 10).is_err());
+        // Offsets length mismatch.
+        assert!(FrozenTable::from_parts(vec![3], vec![0], vec![0], 10).is_err());
+        // Non-monotonic offsets.
+        assert!(FrozenTable::from_parts(vec![1, 2], vec![0, 2, 1], vec![0, 1], 10).is_err());
+        // Offsets end != postings length.
+        assert!(FrozenTable::from_parts(vec![1], vec![0, 3], vec![0, 1], 10).is_err());
+        // Posting id out of range.
+        assert!(FrozenTable::from_parts(vec![1], vec![0, 1], vec![10], 10).is_err());
+    }
+
+    #[test]
+    fn empty_table_freezes() {
+        let frozen = FrozenTable::freeze(&HashTable::new());
+        assert_eq!(frozen.n_buckets(), 0);
+        assert_eq!(frozen.n_postings(), 0);
+        assert_eq!(frozen.max_bucket(), 0);
+        assert!(frozen.get(&[1, 2, 3]).is_empty());
+    }
+}

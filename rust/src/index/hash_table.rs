@@ -1,4 +1,7 @@
-//! One LSH hash table: buckets keyed by a meta-hash of K integer codes.
+//! One *build-side* LSH hash table: buckets keyed by a meta-hash of K
+//! integer codes. Mutable `HashMap` form used only while inserting; after
+//! the build pass every table is frozen into the immutable CSR layout of
+//! [`super::frozen::FrozenTable`], which is what the query path probes.
 
 use std::collections::HashMap;
 
@@ -59,11 +62,6 @@ impl HashTable {
     /// Iterate raw (key, postings) pairs — used by index persistence.
     pub fn buckets(&self) -> impl Iterator<Item = (&u64, &Vec<u32>)> {
         self.buckets.iter()
-    }
-
-    /// Insert a pre-keyed postings list — used by index persistence.
-    pub fn insert_raw(&mut self, key: u64, ids: Vec<u32>) {
-        self.buckets.entry(key).or_default().extend(ids);
     }
 
     /// Probe by raw key (multi-probe querying).

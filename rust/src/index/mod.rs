@@ -12,10 +12,14 @@
 
 pub mod collision;
 pub mod core;
+pub mod frozen;
 pub mod hash_table;
 pub mod multiprobe;
 pub mod persist;
+pub mod scratch;
 
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
+pub use frozen::FrozenTable;
 pub use hash_table::HashTable;
+pub use scratch::QueryScratch;

@@ -8,65 +8,82 @@
 //! bucket below (perturb −1), near 1 means close to the bucket above
 //! (perturb +1). We rank single-coordinate perturbations by boundary
 //! distance and probe the best `n_probes − 1` extra buckets per table.
+//!
+//! The probe path shares the fused hasher (codes + fractional parts in one
+//! blocked pass), the frozen CSR tables, and the caller's [`QueryScratch`]
+//! with the plain path — multi-probe queries are also allocation-free at
+//! steady state.
 
 use super::core::{AlshIndex, ScoredItem};
+use super::scratch::{with_thread_scratch, QueryScratch};
 use crate::index::hash_table::bucket_key;
-use crate::transform::q_transform;
+use crate::transform::q_transform_into;
 
 impl AlshIndex {
-    /// Candidate union over `n_probes` buckets per table (1 = the plain
-    /// base probe; each extra probe flips the least-confident code by ±1).
-    pub fn candidates_multiprobe(&self, query: &[f32], n_probes: usize) -> Vec<u32> {
+    /// Allocation-free candidate union over `n_probes` buckets per table
+    /// (1 = the plain base probe; each extra probe flips the
+    /// least-confident code by ±1).
+    pub fn candidates_multiprobe_into<'s>(
+        &self,
+        query: &[f32],
+        n_probes: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
         assert_eq!(query.len(), self.dim(), "query dim mismatch");
         assert!(n_probes >= 1);
         let p = *self.params();
-        let qx = q_transform(query, p.m);
-        let mut out = Vec::new();
-        let mut codes = vec![0i32; p.k_per_table];
-        // (boundary distance, coordinate, delta)
-        let mut perturbs: Vec<(f32, usize, i32)> = Vec::with_capacity(2 * p.k_per_table);
-        self.with_stamps(|stamps, epoch| {
-            for (family, table) in self.families().iter().zip(self.tables()) {
-                perturbs.clear();
-                for k_idx in 0..p.k_per_table {
-                    let (c, frac) = family.hash_frac(&qx, k_idx);
-                    codes[k_idx] = c;
-                    // Distance to the boundary below is `frac`; above is
-                    // `1 - frac`.
-                    perturbs.push((frac, k_idx, -1));
-                    perturbs.push((1.0 - frac, k_idx, 1));
-                }
-                perturbs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                // Base probe.
-                for &id in table.get(&codes) {
-                    let s = &mut stamps[id as usize];
-                    if *s != epoch {
-                        *s = epoch;
-                        out.push(id);
-                    }
-                }
-                // Extra probes: flip one coordinate at a time.
-                for &(_, k_idx, delta) in perturbs.iter().take(n_probes - 1) {
-                    codes[k_idx] += delta;
-                    let key = bucket_key(&codes);
-                    codes[k_idx] -= delta;
-                    for &id in table.get_by_key(key) {
-                        let s = &mut stamps[id as usize];
-                        if *s != epoch {
-                            *s = epoch;
-                            out.push(id);
-                        }
-                    }
-                }
+        q_transform_into(query, p.m, &mut s.qx);
+        s.hash_codes_with_fracs(self.hasher());
+        let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items());
+        for (t, table) in self.tables().iter().enumerate() {
+            let base = t * p.k_per_table;
+            // (boundary distance, coordinate, delta): distance to the
+            // boundary below is `frac`; above is `1 - frac`.
+            perturbs.clear();
+            for k_idx in 0..p.k_per_table {
+                let frac = fracs[base + k_idx];
+                perturbs.push((frac, k_idx, -1));
+                perturbs.push((1.0 - frac, k_idx, 1));
             }
-        });
-        out
+            perturbs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let codes_t = &mut codes[base..base + p.k_per_table];
+            // Base probe.
+            sink.extend(table.get(codes_t));
+            // Extra probes: flip one coordinate at a time.
+            for &(_, k_idx, delta) in perturbs.iter().take(n_probes - 1) {
+                codes_t[k_idx] += delta;
+                let key = bucket_key(codes_t);
+                codes_t[k_idx] -= delta;
+                sink.extend(table.get_by_key(key));
+            }
+        }
+        &s.cands
+    }
+
+    /// Allocation-free multi-probe query: probe + exact rerank into the
+    /// caller's scratch.
+    pub fn query_multiprobe_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        n_probes: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_multiprobe_into(query, n_probes, s);
+        self.rerank_into(query, top_k, s)
+    }
+
+    /// Candidate union over `n_probes` buckets per table (allocating
+    /// convenience wrapper; see [`AlshIndex::candidates_multiprobe_into`]).
+    pub fn candidates_multiprobe(&self, query: &[f32], n_probes: usize) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_multiprobe_into(query, n_probes, s).to_vec())
     }
 
     /// Multi-probe query: probe + exact rerank.
     pub fn query_multiprobe(&self, query: &[f32], top_k: usize, n_probes: usize) -> Vec<ScoredItem> {
-        let cands = self.candidates_multiprobe(query, n_probes);
-        self.rerank(query, &cands, top_k)
+        with_thread_scratch(|s| {
+            self.query_multiprobe_into(query, top_k, n_probes, s).to_vec()
+        })
     }
 }
 
@@ -100,6 +117,24 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scratch_path_equals_convenience_path() {
+        let its = items(300, 10, 11);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 12);
+        let mut s = idx.scratch();
+        let mut rng = Rng::seed_from_u64(13);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            for probes in [1usize, 3, 6] {
+                let via_scratch =
+                    idx.candidates_multiprobe_into(&q, probes, &mut s).to_vec();
+                assert_eq!(via_scratch, idx.candidates_multiprobe(&q, probes));
+                let top = idx.query_multiprobe_into(&q, 5, probes, &mut s).to_vec();
+                assert_eq!(top, idx.query_multiprobe(&q, 5, probes));
+            }
+        }
     }
 
     #[test]

@@ -1,26 +1,35 @@
 //! Index persistence: save/load the built ALSH index to a compact binary
 //! file, so a service restart skips the (re)build.
 //!
+//! Since v2 the tables are serialized in their frozen CSR form (sorted
+//! keys + offsets + contiguous postings), so loading is a straight read
+//! into the serve-side layout — no HashMap rebuild, no per-bucket
+//! allocations. There is deliberately no v1 (HashMap bucket dump) read
+//! path: no shipping build ever produced a v1 file — the seed tree had no
+//! crate manifest, so `save` was never runnable before v2 existed.
+//!
 //! Format (little-endian, length-prefixed):
 //!
 //! ```text
 //! magic "ALSH" | version u32 | params (m, u, r, K, L) | scale (u, factor,
 //! max_norm) | dim u64 | n_items u64 | items_flat f32[n*dim]
 //! | L × family { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
-//! | L × table { n_buckets u64, n × { key u64, len u64, ids u32[len] } }
+//! | L × table { n_buckets u64, n_postings u64, keys u64[n_buckets],
+//!               offsets u32[n_buckets+1], postings u32[n_postings] }
 //! ```
 //!
 //! No external serialization crates exist in this environment (DESIGN.md
 //! §5b), so the codec is hand-rolled with explicit versioning and
-//! corruption checks.
+//! corruption checks (CSR invariants are revalidated on load).
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use super::core::{AlshIndex, AlshParams};
+use super::frozen::FrozenTable;
 
 const MAGIC: &[u8; 4] = b"ALSH";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 struct Writer<W: Write> {
     w: W,
@@ -39,6 +48,18 @@ impl<W: Write> Writer<W> {
     fn f32s(&mut self, vs: &[f32]) -> std::io::Result<()> {
         for v in vs {
             self.f32(*v)?;
+        }
+        Ok(())
+    }
+    fn u32s(&mut self, vs: &[u32]) -> std::io::Result<()> {
+        for v in vs {
+            self.u32(*v)?;
+        }
+        Ok(())
+    }
+    fn u64s(&mut self, vs: &[u64]) -> std::io::Result<()> {
+        for v in vs {
+            self.u64(*v)?;
         }
         Ok(())
     }
@@ -78,6 +99,24 @@ impl<R: Read> Reader<R> {
         }
         Ok(out)
     }
+    fn u32s(&mut self, n: usize) -> anyhow::Result<Vec<u32>> {
+        let mut out = vec![0u32; n];
+        let mut bytes = vec![0u8; n * 4];
+        self.r.read_exact(&mut bytes)?;
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+    fn u64s(&mut self, n: usize) -> anyhow::Result<Vec<u64>> {
+        let mut out = vec![0u64; n];
+        let mut bytes = vec![0u8; n * 8];
+        self.r.read_exact(&mut bytes)?;
+        for (i, chunk) in bytes.chunks_exact(8).enumerate() {
+            out[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
 }
 
 impl AlshIndex {
@@ -111,13 +150,10 @@ impl AlshIndex {
         }
         for t in self.tables() {
             w.u64(t.n_buckets() as u64)?;
-            for (key, ids) in t.buckets() {
-                w.u64(*key)?;
-                w.u64(ids.len() as u64)?;
-                for id in ids {
-                    w.w.write_all(&id.to_le_bytes())?;
-                }
-            }
+            w.u64(t.n_postings() as u64)?;
+            w.u64s(t.keys())?;
+            w.u32s(t.offsets())?;
+            w.u32s(t.postings())?;
         }
         w.w.flush()?;
         Ok(())
@@ -132,7 +168,6 @@ impl AlshIndex {
         anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
         let version = r.u32()?;
         anyhow::ensure!(version == VERSION, "unsupported index version {version}");
-        const CAP: u64 = 1 << 40; // sanity cap on any length field
         let params = AlshParams {
             m: r.len(64, "m")?,
             u: r.f32()?,
@@ -146,7 +181,8 @@ impl AlshIndex {
             max_norm: r.f32()?,
         };
         let dim = r.len(1 << 24, "dim")?;
-        let n_items = r.len(CAP, "n_items")?;
+        // Item ids are u32 throughout, so n_items is capped accordingly.
+        let n_items = r.len(u32::MAX as u64, "n_items")?;
         let items_flat = r.f32s(n_items * dim)?;
         let mut families = Vec::with_capacity(params.n_tables);
         for _ in 0..params.n_tables {
@@ -163,25 +199,13 @@ impl AlshIndex {
         }
         let mut tables = Vec::with_capacity(params.n_tables);
         for _ in 0..params.n_tables {
-            let n_buckets = r.len(CAP, "n_buckets")?;
-            let mut table = super::hash_table::HashTable::new();
-            for _ in 0..n_buckets {
-                let key = r.u64()?;
-                let len = r.len(n_items as u64, "bucket len")?;
-                let mut ids = Vec::with_capacity(len);
-                for _ in 0..len {
-                    let mut b = [0u8; 4];
-                    r.r.read_exact(&mut b)?;
-                    let id = u32::from_le_bytes(b);
-                    anyhow::ensure!(
-                        (id as usize) < n_items,
-                        "corrupt index file: id {id} out of range"
-                    );
-                    ids.push(id);
-                }
-                table.insert_raw(key, ids);
-            }
-            tables.push(table);
+            // Every bucket is non-empty, so buckets <= postings <= items.
+            let n_buckets = r.len(n_items as u64, "n_buckets")?;
+            let n_postings = r.len(n_items as u64, "n_postings")?;
+            let keys = r.u64s(n_buckets)?;
+            let offsets = r.u32s(n_buckets + 1)?;
+            let postings = r.u32s(n_postings)?;
+            tables.push(FrozenTable::from_parts(keys, offsets, postings, n_items as u32)?);
         }
         // Reject trailing garbage.
         let mut extra = [0u8; 1];
@@ -224,12 +248,24 @@ mod tests {
         for _ in 0..20 {
             let q: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
             assert_eq!(idx.query(&q, 10), loaded.query(&q, 10));
-            let mut a = idx.candidates(&q);
-            let mut b = loaded.candidates(&q);
-            a.sort_unstable();
-            b.sort_unstable();
-            assert_eq!(a, b);
+            // Candidate sets identical, including order (frozen CSR
+            // round-trips the exact probe stream).
+            assert_eq!(idx.candidates(&q), loaded.candidates(&q));
+            assert_eq!(
+                idx.candidates_multiprobe(&q, 4),
+                loaded.candidates_multiprobe(&q, 4)
+            );
         }
+    }
+
+    #[test]
+    fn roundtrip_preserves_table_stats() {
+        let its = items(200, 8, 10);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 11);
+        let path = tmp("stats.alsh");
+        idx.save(&path).unwrap();
+        let loaded = AlshIndex::load(&path).unwrap();
+        assert_eq!(idx.table_stats(), loaded.table_stats());
     }
 
     #[test]
@@ -275,5 +311,21 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = AlshIndex::load(&path).err().expect("should fail");
         assert!(format!("{err:#}").contains("version"));
+    }
+
+    #[test]
+    fn rejects_corrupted_table_section() {
+        let its = items(40, 4, 12);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 13);
+        let path = tmp("csr_corrupt.alsh");
+        idx.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Smash the last 4 bytes (inside the final table's postings) with
+        // an out-of-range id; the CSR validator must reject it.
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("corrupt"), "got: {err:#}");
     }
 }

@@ -1,0 +1,229 @@
+//! Reusable per-caller query scratch: the allocation-free query path.
+//!
+//! Every transient buffer a query needs — the Q-transformed vector, the
+//! fused code block, the candidate list, visit stamps for dedup, rerank
+//! storage — lives in one [`QueryScratch`] owned by the *caller* (engine
+//! loop, batcher thread, bench loop, example). Buffers only ever grow, so
+//! steady-state queries perform **zero heap allocations** (asserted by
+//! `tests/zero_alloc.rs` with a counting global allocator), and because
+//! each caller owns its scratch there is no shared mutable state: the old
+//! global stamp `Mutex` in `AlshIndex` is gone and concurrent queries
+//! never serialize.
+//!
+//! # Visit-stamp dedup
+//!
+//! Candidate dedup across the L probed buckets uses an epoch-stamped
+//! array: item `i` is fresh iff `stamps[i] != epoch`. Bumping the epoch
+//! invalidates all stamps in O(1); on u32 wraparound the array is cleared
+//! once. This logic exists exactly once, in [`QueryScratch::dedup`] — the
+//! plain, code-fed, and multi-probe candidate paths all borrow a
+//! [`DedupSink`] from it.
+
+use super::core::ScoredItem;
+use crate::lsh::FusedHasher;
+
+/// Caller-owned scratch for the allocation-free query path. Construct via
+/// [`QueryScratch::new`] (or the pre-sizing `AlshIndex::scratch` /
+/// `MipsEngine::scratch`) and hand `&mut` to each query call. One scratch
+/// serves any number of indexes/shards; buffers grow to the largest seen.
+#[derive(Clone, Debug, Default)]
+pub struct QueryScratch {
+    /// Q-transformed query, `D + m` long.
+    pub(crate) qx: Vec<f32>,
+    /// Fused code block, `L·K` long.
+    pub(crate) codes: Vec<i32>,
+    /// Pre-floor fractional parts (multi-probe), `L·K` long.
+    pub(crate) fracs: Vec<f32>,
+    /// Deduplicated candidate ids, in first-seen probe order.
+    pub(crate) cands: Vec<u32>,
+    /// Visit stamps per item id.
+    stamps: Vec<u32>,
+    /// Current dedup epoch.
+    epoch: u32,
+    /// Scored candidates (rerank working set).
+    pub(crate) scored: Vec<ScoredItem>,
+    /// Final top-k, sorted by descending score.
+    pub(crate) top: Vec<ScoredItem>,
+    /// Multi-probe perturbation heap: (boundary distance, coord, ±1).
+    pub(crate) perturbs: Vec<(f32, usize, i32)>,
+    /// Scatter/gather merge buffer (sharded router).
+    pub(crate) merged: Vec<ScoredItem>,
+}
+
+impl QueryScratch {
+    /// An empty scratch; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow the fixed-shape buffers up front so even the first query
+    /// allocates nothing (`n_codes` = L·K, `dp` = D + m).
+    pub fn reserve(&mut self, n_items: usize, n_codes: usize, dp: usize) {
+        if self.stamps.len() < n_items {
+            self.stamps.resize(n_items, 0);
+        }
+        if self.codes.len() < n_codes {
+            self.codes.resize(n_codes, 0);
+        }
+        if self.fracs.len() < n_codes {
+            self.fracs.resize(n_codes, 0.0);
+        }
+        self.qx.reserve(dp);
+        self.perturbs.reserve(2 * n_codes);
+    }
+
+    /// The candidate ids produced by the most recent probe call.
+    pub fn candidates(&self) -> &[u32] {
+        &self.cands
+    }
+
+    /// The top-k produced by the most recent query call.
+    pub fn top(&self) -> &[ScoredItem] {
+        &self.top
+    }
+
+    /// Start a fresh dedup epoch over `n_items` ids and return the sink
+    /// plus the remaining scratch fields (split-borrowed so probe loops
+    /// can use codes/fracs/perturbs alongside the sink). This is the one
+    /// implementation of the epoch/stamp logic.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn dedup(
+        &mut self,
+        n_items: usize,
+    ) -> (DedupSink<'_>, &mut Vec<i32>, &mut Vec<f32>, &mut Vec<(f32, usize, i32)>) {
+        if self.stamps.len() < n_items {
+            self.stamps.resize(n_items, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamps.fill(0);
+            self.epoch = 1;
+        }
+        self.cands.clear();
+        (
+            DedupSink { stamps: &mut self.stamps, epoch: self.epoch, out: &mut self.cands },
+            &mut self.codes,
+            &mut self.fracs,
+            &mut self.perturbs,
+        )
+    }
+
+    /// Grow `codes` (and optionally `fracs`) to `n_codes` entries,
+    /// returning nothing — the single place the code-buffer sizing rule
+    /// lives.
+    fn grow_codes(&mut self, n_codes: usize, with_fracs: bool) {
+        if self.codes.len() < n_codes {
+            self.codes.resize(n_codes, 0);
+        }
+        if with_fracs && self.fracs.len() < n_codes {
+            self.fracs.resize(n_codes, 0.0);
+        }
+    }
+
+    /// Hash the Q-transformed query already in `self.qx` into
+    /// `self.codes` with `fused`.
+    pub(crate) fn hash_codes(&mut self, fused: &FusedHasher) {
+        let nc = fused.n_codes();
+        self.grow_codes(nc, false);
+        fused.hash_into(&self.qx, &mut self.codes[..nc]);
+    }
+
+    /// Hash an externally supplied input vector into `self.codes`.
+    pub(crate) fn hash_codes_external(&mut self, fused: &FusedHasher, x: &[f32]) {
+        let nc = fused.n_codes();
+        self.grow_codes(nc, false);
+        fused.hash_into(x, &mut self.codes[..nc]);
+    }
+
+    /// Hash `self.qx` into `self.codes` + `self.fracs` (multi-probe).
+    pub(crate) fn hash_codes_with_fracs(&mut self, fused: &FusedHasher) {
+        let nc = fused.n_codes();
+        self.grow_codes(nc, true);
+        fused.hash_frac_into(&self.qx, &mut self.codes[..nc], &mut self.fracs[..nc]);
+    }
+
+    /// Force the epoch counter (wraparound tests).
+    #[cfg(test)]
+    pub(crate) fn set_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+    }
+}
+
+/// Run `f` with the calling thread's shared scratch — the allocating
+/// convenience wrappers (`AlshIndex::query` & co.) route through this so
+/// they stay lock-free and amortize their buffers per thread.
+pub(crate) fn with_thread_scratch<R>(f: impl FnOnce(&mut QueryScratch) -> R) -> R {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<QueryScratch> =
+            std::cell::RefCell::new(QueryScratch::new());
+    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Borrowed stamp array + epoch: pushes each id at most once per epoch.
+pub(crate) struct DedupSink<'a> {
+    stamps: &'a mut [u32],
+    epoch: u32,
+    out: &'a mut Vec<u32>,
+}
+
+impl DedupSink<'_> {
+    /// Offer a probed postings list; fresh ids are appended in order.
+    #[inline]
+    pub fn extend(&mut self, ids: &[u32]) {
+        for &id in ids {
+            let s = &mut self.stamps[id as usize];
+            if *s != self.epoch {
+                *s = self.epoch;
+                self.out.push(id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_within_and_across_lists() {
+        let mut s = QueryScratch::new();
+        let (mut sink, _, _, _) = s.dedup(10);
+        sink.extend(&[1, 2, 2, 3]);
+        sink.extend(&[3, 4, 1]);
+        assert_eq!(s.candidates(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn epochs_are_independent() {
+        let mut s = QueryScratch::new();
+        let (mut sink, _, _, _) = s.dedup(5);
+        sink.extend(&[0, 1]);
+        assert_eq!(s.candidates(), &[0, 1]);
+        // A new epoch forgets the previous one's visits.
+        let (mut sink, _, _, _) = s.dedup(5);
+        sink.extend(&[1, 4]);
+        assert_eq!(s.candidates(), &[1, 4]);
+    }
+
+    #[test]
+    fn wraparound_clears_stamps() {
+        let mut s = QueryScratch::new();
+        s.set_epoch(u32::MAX - 2);
+        for _ in 0..6 {
+            let (mut sink, _, _, _) = s.dedup(4);
+            sink.extend(&[2, 2, 3]);
+            assert_eq!(s.candidates(), &[2, 3]);
+        }
+    }
+
+    #[test]
+    fn grows_to_largest_index() {
+        let mut s = QueryScratch::new();
+        let (mut sink, _, _, _) = s.dedup(3);
+        sink.extend(&[2]);
+        let (mut sink, _, _, _) = s.dedup(100);
+        sink.extend(&[99]);
+        assert_eq!(s.candidates(), &[99]);
+    }
+}

@@ -80,6 +80,13 @@ impl L2LshFamily {
         self.a_scaled.clone()
     }
 
+    /// Borrow the raw `[k][dim]` pre-scaled projection rows (each hash
+    /// function's direction contiguous) — used by `lsh::fused` to stack
+    /// all families into one matrix without copying per call.
+    pub fn a_rows(&self) -> &[f32] {
+        &self.a_scaled
+    }
+
     /// Rebuild a family from persisted raw storage.
     pub fn from_raw(dim: usize, k: usize, r: f32, a_scaled: Vec<f32>, b_scaled: Vec<f32>) -> Self {
         assert_eq!(a_scaled.len(), k * dim);

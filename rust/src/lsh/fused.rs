@@ -1,0 +1,282 @@
+//! Fused multi-table hashing: all L families' codes in one blocked pass.
+//!
+//! # Layout
+//!
+//! A bucketed `(K, L)` index owns L independent [`L2LshFamily`]s over the
+//! same input dimension `D' = D + m`. The per-family path computes each of
+//! the `L·K` codes with its own `dot_simple` call — `L·K` *serial* f32
+//! accumulation chains, each bounded by floating-point add latency (f32
+//! addition is not associative, so the compiler cannot unroll a single
+//! chain).
+//!
+//! [`FusedHasher`] stacks every family's pre-scaled `[K × D']` projection
+//! rows into one contiguous `[L·K × D']` matrix (row `t·K + j` is hash
+//! function `j` of table `t`, matching the `[L·K]` flat code layout used by
+//! `AlshIndex::candidates_from_codes` and the PJRT artifacts) and computes
+//! a query's codes as one blocked matrix–vector product: blocks of
+//! [`LANES`] rows share each load of `x[d]` and run [`LANES`] *independent*
+//! accumulation chains that fill the FMA pipeline. A matrix–matrix variant
+//! ([`FusedHasher::hash_batch_into`]) additionally reuses each row block
+//! across every query in a batch (the coordinator batcher's fallback hash
+//! path).
+//!
+//! # Equivalence to per-family hashing
+//!
+//! The fused kernel is *bit-identical* to `L2LshFamily::hash_one`, not
+//! merely approximately equal: each row's accumulation visits dimensions
+//! in the same order with the same `acc + x[d] * a[d]` operations — the
+//! blocking only interleaves independent rows, never reassociates a single
+//! row's sum. So `floor(dot + b)` lands on exactly the same code even at
+//! f32 floor boundaries, and candidate sets are guaranteed identical
+//! (property-tested in `tests/fused_csr_equivalence.rs`).
+
+use super::family::dot_simple;
+use super::L2LshFamily;
+
+/// Rows processed per block: independent accumulator chains per load of x.
+const LANES: usize = 4;
+
+/// All L hash families of an index, stacked for single-pass hashing.
+#[derive(Clone, Debug)]
+pub struct FusedHasher {
+    /// Input dimension D' (= D + m for ALSH, raw D for symmetric L2LSH).
+    dim: usize,
+    /// Codes per table (meta-hash width K).
+    k: usize,
+    /// Number of tables L.
+    l: usize,
+    /// `[l*k * dim]` row-major; row `t*k + j` = family t's function j,
+    /// pre-scaled by 1/r.
+    rows: Vec<f32>,
+    /// `[l*k]` offsets, pre-scaled by 1/r.
+    offs: Vec<f32>,
+}
+
+impl FusedHasher {
+    /// Stack `families` (all with equal `dim`, `k`) into one fused matrix.
+    pub fn from_families(families: &[L2LshFamily]) -> Self {
+        assert!(!families.is_empty(), "no families to fuse");
+        let dim = families[0].dim();
+        let k = families[0].k();
+        assert!(
+            families.iter().all(|f| f.dim() == dim && f.k() == k),
+            "families disagree on (dim, k)"
+        );
+        let l = families.len();
+        let mut rows = Vec::with_capacity(l * k * dim);
+        let mut offs = Vec::with_capacity(l * k);
+        for fam in families {
+            rows.extend_from_slice(fam.a_rows());
+            offs.extend_from_slice(fam.b_vector());
+        }
+        Self { dim, k, l, rows, offs }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.l
+    }
+
+    /// Total codes per input (= L·K).
+    pub fn n_codes(&self) -> usize {
+        self.l * self.k
+    }
+
+    /// One block of `LANES` row dot products against `x`, each accumulated
+    /// in `dot_simple` order (bit-identical to the per-family path).
+    #[inline]
+    fn dot_block(rows: &[f32], dim: usize, x: &[f32]) -> [f32; LANES] {
+        debug_assert_eq!(rows.len(), LANES * dim);
+        debug_assert_eq!(x.len(), dim);
+        let (r0, rest) = rows.split_at(dim);
+        let (r1, rest) = rest.split_at(dim);
+        let (r2, r3) = rest.split_at(dim);
+        let mut a0 = 0.0f32;
+        let mut a1 = 0.0f32;
+        let mut a2 = 0.0f32;
+        let mut a3 = 0.0f32;
+        for d in 0..dim {
+            let xv = x[d];
+            a0 += r0[d] * xv;
+            a1 += r1[d] * xv;
+            a2 += r2[d] * xv;
+            a3 += r3[d] * xv;
+        }
+        [a0, a1, a2, a3]
+    }
+
+    /// All `L·K` codes of `x` into `out` (len `n_codes()`), one blocked
+    /// matrix–vector pass.
+    pub fn hash_into(&self, x: &[f32], out: &mut [i32]) {
+        let nc = self.n_codes();
+        assert_eq!(x.len(), self.dim, "input dim mismatch");
+        assert_eq!(out.len(), nc, "output len mismatch");
+        let dim = self.dim;
+        let mut r = 0;
+        while r + LANES <= nc {
+            let acc = Self::dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
+            for (j, a) in acc.iter().enumerate() {
+                out[r + j] = (a + self.offs[r + j]).floor() as i32;
+            }
+            r += LANES;
+        }
+        while r < nc {
+            let row = &self.rows[r * dim..(r + 1) * dim];
+            out[r] = (dot_simple(row, x) + self.offs[r]).floor() as i32;
+            r += 1;
+        }
+    }
+
+    /// Codes plus pre-floor fractional parts (multi-probe confidence):
+    /// `fracs[i] = t_i - floor(t_i)` exactly as `L2LshFamily::hash_frac`.
+    pub fn hash_frac_into(&self, x: &[f32], codes: &mut [i32], fracs: &mut [f32]) {
+        let nc = self.n_codes();
+        assert_eq!(x.len(), self.dim, "input dim mismatch");
+        assert_eq!(codes.len(), nc, "codes len mismatch");
+        assert_eq!(fracs.len(), nc, "fracs len mismatch");
+        let dim = self.dim;
+        let mut emit = |r: usize, dot: f32| {
+            let t = dot + self.offs[r];
+            let f = t.floor();
+            codes[r] = f as i32;
+            fracs[r] = t - f;
+        };
+        let mut r = 0;
+        while r + LANES <= nc {
+            let acc = Self::dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
+            for (j, a) in acc.iter().enumerate() {
+                emit(r + j, *a);
+            }
+            r += LANES;
+        }
+        while r < nc {
+            emit(r, dot_simple(&self.rows[r * dim..(r + 1) * dim], x));
+            r += 1;
+        }
+    }
+
+    /// Batch matrix–matrix variant: hash `n_rows` inputs (flattened
+    /// row-major in `xs`, each `dim` long) into `out[q * n_codes() + i]`.
+    ///
+    /// Blocks over hash rows in the outer loop so each `[LANES × D']` row
+    /// block stays hot in L1 across the whole batch — the coordinator
+    /// batcher's pure-Rust hash path.
+    pub fn hash_batch_into(&self, xs: &[f32], n_rows: usize, out: &mut [i32]) {
+        let nc = self.n_codes();
+        let dim = self.dim;
+        assert_eq!(xs.len(), n_rows * dim, "batch input size mismatch");
+        assert_eq!(out.len(), n_rows * nc, "batch output size mismatch");
+        let mut r = 0;
+        while r + LANES <= nc {
+            let rows = &self.rows[r * dim..(r + LANES) * dim];
+            for q in 0..n_rows {
+                let x = &xs[q * dim..(q + 1) * dim];
+                let acc = Self::dot_block(rows, dim, x);
+                for (j, a) in acc.iter().enumerate() {
+                    out[q * nc + r + j] = (a + self.offs[r + j]).floor() as i32;
+                }
+            }
+            r += LANES;
+        }
+        while r < nc {
+            let row = &self.rows[r * dim..(r + 1) * dim];
+            for q in 0..n_rows {
+                let x = &xs[q * dim..(q + 1) * dim];
+                out[q * nc + r] = (dot_simple(row, x) + self.offs[r]).floor() as i32;
+            }
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::Rng;
+
+    fn families(l: usize, dim: usize, k: usize, seed: u64) -> Vec<L2LshFamily> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..l).map(|_| L2LshFamily::sample(dim, k, 2.5, &mut rng)).collect()
+    }
+
+    #[test]
+    fn fused_matches_per_family_bitwise() {
+        check(60, |rng| {
+            let dim = 1 + rng.below(48);
+            let k = 1 + rng.below(9); // exercises the non-multiple-of-LANES tail
+            let l = 1 + rng.below(7);
+            let fams = families(l, dim, k, rng.next_u64());
+            let fused = FusedHasher::from_families(&fams);
+            let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let mut want = Vec::with_capacity(l * k);
+            for fam in &fams {
+                fam.hash_into(&x, &mut want);
+            }
+            let mut got = vec![0i32; fused.n_codes()];
+            fused.hash_into(&x, &mut got);
+            assert_eq!(got, want, "fused codes diverge (dim={dim} k={k} l={l})");
+        });
+    }
+
+    #[test]
+    fn frac_variant_matches_hash_frac() {
+        check(40, |rng| {
+            let dim = 1 + rng.below(24);
+            let k = 1 + rng.below(7);
+            let l = 1 + rng.below(5);
+            let fams = families(l, dim, k, rng.next_u64());
+            let fused = FusedHasher::from_families(&fams);
+            let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let mut codes = vec![0i32; fused.n_codes()];
+            let mut fracs = vec![0f32; fused.n_codes()];
+            fused.hash_frac_into(&x, &mut codes, &mut fracs);
+            for (t, fam) in fams.iter().enumerate() {
+                for j in 0..k {
+                    let (c, f) = fam.hash_frac(&x, j);
+                    assert_eq!(codes[t * k + j], c);
+                    assert_eq!(fracs[t * k + j], f);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        check(30, |rng| {
+            let dim = 1 + rng.below(20);
+            let k = 1 + rng.below(6);
+            let l = 1 + rng.below(5);
+            let n = 1 + rng.below(10);
+            let fams = families(l, dim, k, rng.next_u64());
+            let fused = FusedHasher::from_families(&fams);
+            let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+            let mut batch = vec![0i32; n * fused.n_codes()];
+            fused.hash_batch_into(&xs, n, &mut batch);
+            let mut one = vec![0i32; fused.n_codes()];
+            for q in 0..n {
+                fused.hash_into(&xs[q * dim..(q + 1) * dim], &mut one);
+                assert_eq!(
+                    &batch[q * fused.n_codes()..(q + 1) * fused.n_codes()],
+                    one.as_slice()
+                );
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let fams = families(2, 8, 4, 1);
+        let fused = FusedHasher::from_families(&fams);
+        let mut out = vec![0i32; fused.n_codes()];
+        fused.hash_into(&[0.0; 5], &mut out);
+    }
+}

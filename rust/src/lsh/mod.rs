@@ -8,7 +8,9 @@
 //! `floor(x @ (A/r) + b/r)`); integration tests cross-check the two.
 
 pub mod family;
+pub mod fused;
 pub mod srp;
 
 pub use family::L2LshFamily;
+pub use fused::FusedHasher;
 pub use srp::SrpFamily;

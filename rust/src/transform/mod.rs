@@ -44,7 +44,17 @@ impl UScale {
 
     /// Apply the scaling to one vector.
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
-        x.iter().map(|v| v * self.factor).collect()
+        let mut out = Vec::with_capacity(x.len());
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free [`UScale::apply`]: overwrite `out` with the scaled
+    /// vector, reusing its capacity (the index build loop calls this once
+    /// per item per pass).
+    pub fn apply_into(&self, x: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(x.iter().map(|v| v * self.factor));
     }
 }
 
@@ -52,22 +62,35 @@ impl UScale {
 /// `‖x‖ <= U < 1`. Appends `m` norm powers built by iterative squaring.
 pub fn p_transform(x: &[f32], m: usize) -> Vec<f32> {
     let mut out = Vec::with_capacity(x.len() + m);
+    p_transform_into(x, m, &mut out);
+    out
+}
+
+/// Allocation-free [`p_transform`]: overwrite `out`, reusing its capacity.
+pub fn p_transform_into(x: &[f32], m: usize, out: &mut Vec<f32>) {
+    out.clear();
     out.extend_from_slice(x);
     let mut n = x.iter().map(|v| v * v).sum::<f32>(); // ‖x‖²
     for _ in 0..m {
         out.push(n);
         n *= n; // ‖x‖⁴, ‖x‖⁸, …
     }
-    out
 }
 
 /// Query transform `Q` (Eq. 13), with the WLOG unit-normalization folded in.
 pub fn q_transform(q: &[f32], m: usize) -> Vec<f32> {
-    let norm = l2_norm(q).max(1e-12);
     let mut out = Vec::with_capacity(q.len() + m);
+    q_transform_into(q, m, &mut out);
+    out
+}
+
+/// Allocation-free [`q_transform`]: overwrite `out`, reusing its capacity
+/// (the query hot path calls this once per query into scratch storage).
+pub fn q_transform_into(q: &[f32], m: usize, out: &mut Vec<f32>) {
+    let norm = l2_norm(q).max(1e-12);
+    out.clear();
     out.extend(q.iter().map(|v| v / norm));
     out.extend(std::iter::repeat(0.5).take(m));
-    out
 }
 
 /// Sign-ALSH data transform (paper §5 future work; Shrivastava & Li 2015):
@@ -201,6 +224,31 @@ mod tests {
             let qx = q_transform(&x, m);
             assert!(px.iter().all(|v| v.is_finite()));
             assert!(qx.iter().all(|v| v.is_finite()));
+        });
+    }
+
+    /// The `_into` variants must be bit-identical to the allocating forms
+    /// and reuse the buffer they are given.
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        check(100, |rng| {
+            let d = 1 + rng.below(40);
+            let m = rng.below(6);
+            let x: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 3.0).collect();
+            let scale = UScale::fit([x.as_slice()], 0.83);
+            let mut scaled = Vec::new();
+            let mut px = Vec::new();
+            let mut qx = Vec::new();
+            // Run twice through the same buffers: the second pass must see
+            // cleared, refilled state (the build-loop reuse pattern).
+            for _ in 0..2 {
+                scale.apply_into(&x, &mut scaled);
+                assert_eq!(scaled, scale.apply(&x));
+                p_transform_into(&scaled, m, &mut px);
+                assert_eq!(px, p_transform(&scaled, m));
+                q_transform_into(&x, m, &mut qx);
+                assert_eq!(qx, q_transform(&x, m));
+            }
         });
     }
 

@@ -15,6 +15,7 @@ pub struct Stats {
     pub median: Duration,
     pub p10: Duration,
     pub p90: Duration,
+    pub p99: Duration,
     /// Throughput hint (items per op), used for ops/s reporting.
     pub items_per_iter: f64,
 }
@@ -88,6 +89,7 @@ impl Bench {
             median: times[n / 2],
             p10: times[n / 10],
             p90: times[(n * 9) / 10],
+            p99: times[((n * 99) / 100).min(n - 1)],
             items_per_iter: items,
         };
         println!(
@@ -114,19 +116,66 @@ impl Bench {
     /// Emit a machine-readable summary line (consumed by EXPERIMENTS.md
     /// tooling).
     pub fn summary_csv(&self) -> String {
-        let mut s = String::from("name,iters,mean_ns,median_ns,p90_ns,items_per_sec\n");
+        let mut s =
+            String::from("name,iters,mean_ns,median_ns,p90_ns,p99_ns,items_per_sec\n");
         for r in &self.results {
             s.push_str(&format!(
-                "{},{},{},{},{},{:.1}\n",
+                "{},{},{},{},{},{},{:.1}\n",
                 r.name,
                 r.iters,
                 r.mean.as_nanos(),
                 r.median.as_nanos(),
                 r.p90.as_nanos(),
+                r.p99.as_nanos(),
                 r.items_per_sec()
             ));
         }
         s
+    }
+}
+
+/// Where `BENCH_query.json` lives: the repository root when detectable
+/// (cargo runs bench binaries with cwd = the `rust/` package dir), else
+/// the current directory.
+pub fn bench_json_path() -> std::path::PathBuf {
+    for base in ["ROADMAP.md", "../ROADMAP.md"] {
+        let p = std::path::Path::new(base);
+        if p.exists() {
+            return p.with_file_name("BENCH_query.json");
+        }
+    }
+    std::path::PathBuf::from("BENCH_query.json")
+}
+
+/// Merge `entries` into the `section` object of `BENCH_query.json`,
+/// preserving other sections (the hashing and index-query bench binaries
+/// each own one section of the same file, so the perf trajectory is
+/// tracked across PRs in one machine-readable place).
+pub fn merge_bench_json(section: &str, entries: Vec<(String, crate::util::json::Json)>) {
+    use crate::util::json::Json;
+    let path = bench_json_path();
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or(Json::Obj(Default::default()));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(Default::default());
+    }
+    let Json::Obj(map) = &mut root else { unreachable!() };
+    let slot = map
+        .entry(section.to_string())
+        .or_insert_with(|| Json::Obj(Default::default()));
+    if !matches!(slot, Json::Obj(_)) {
+        *slot = Json::Obj(Default::default());
+    }
+    let Json::Obj(section_map) = slot else { unreachable!() };
+    for (k, v) in entries {
+        section_map.insert(k, v);
+    }
+    if let Err(e) = std::fs::write(&path, root.to_string()) {
+        eprintln!("[bench] could not write {}: {e}", path.display());
+    } else {
+        println!("[bench] updated {}", path.display());
     }
 }
 

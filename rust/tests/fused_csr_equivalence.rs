@@ -1,0 +1,194 @@
+//! Property tests: the production query path (fused multi-table hashing +
+//! frozen CSR tables + scratch dedup) must return **byte-identical**
+//! candidate streams to a naive mirror built from first principles — the
+//! per-code `L2LshFamily::hash_one` loop feeding mutable `HashMap` tables
+//! — across seeded random indexes, for the plain, code-fed, and
+//! multi-probe paths.
+//!
+//! This is the contract that makes the perf work safe: blocking the
+//! matrix-vector pass never reassociates a single row's sum, and freezing
+//! preserves bucket postings order, so not one candidate may differ.
+
+use alsh::index::hash_table::{bucket_key, HashTable};
+use alsh::index::{AlshIndex, AlshParams};
+use alsh::transform::{p_transform, q_transform};
+use alsh::util::check::check;
+use alsh::util::Rng;
+
+/// Rebuild the index's tables naively: per-family, per-code hashing into
+/// mutable HashMap tables (the seed implementation's build loop).
+fn naive_tables(idx: &AlshIndex, items: &[Vec<f32>]) -> Vec<HashTable> {
+    let p = *idx.params();
+    let mut tables = vec![HashTable::new(); p.n_tables];
+    for (id, item) in items.iter().enumerate() {
+        let px = p_transform(&idx.scale().apply(item), p.m);
+        for (family, table) in idx.families().iter().zip(tables.iter_mut()) {
+            let codes = family.hash(&px);
+            table.insert(&codes, id as u32);
+        }
+    }
+    tables
+}
+
+/// The seed implementation's candidate walk: per-family hashing, HashMap
+/// probes, boolean-array dedup in first-seen table order.
+fn naive_candidates(idx: &AlshIndex, tables: &[HashTable], q: &[f32]) -> Vec<u32> {
+    let p = *idx.params();
+    let qx = q_transform(q, p.m);
+    let mut seen = vec![false; idx.n_items()];
+    let mut out = Vec::new();
+    for (family, table) in idx.families().iter().zip(tables) {
+        let codes = family.hash(&qx);
+        for &id in table.get(&codes) {
+            if !seen[id as usize] {
+                seen[id as usize] = true;
+                out.push(id);
+            }
+        }
+    }
+    out
+}
+
+/// The seed implementation's multi-probe walk (Lv et al. perturbations
+/// with the same ordering and tie-breaking as the production path).
+fn naive_candidates_multiprobe(
+    idx: &AlshIndex,
+    tables: &[HashTable],
+    q: &[f32],
+    n_probes: usize,
+) -> Vec<u32> {
+    let p = *idx.params();
+    let qx = q_transform(q, p.m);
+    let mut seen = vec![false; idx.n_items()];
+    let mut out = Vec::new();
+    let mut codes = vec![0i32; p.k_per_table];
+    let mut perturbs: Vec<(f32, usize, i32)> = Vec::new();
+    for (family, table) in idx.families().iter().zip(tables) {
+        perturbs.clear();
+        for k_idx in 0..p.k_per_table {
+            let (c, frac) = family.hash_frac(&qx, k_idx);
+            codes[k_idx] = c;
+            perturbs.push((frac, k_idx, -1));
+            perturbs.push((1.0 - frac, k_idx, 1));
+        }
+        perturbs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &id in table.get(&codes) {
+            if !seen[id as usize] {
+                seen[id as usize] = true;
+                out.push(id);
+            }
+        }
+        for &(_, k_idx, delta) in perturbs.iter().take(n_probes - 1) {
+            codes[k_idx] += delta;
+            let key = bucket_key(&codes);
+            codes[k_idx] -= delta;
+            for &id in table.get_by_key(key) {
+                if !seen[id as usize] {
+                    seen[id as usize] = true;
+                    out.push(id);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn random_items(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let scale = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * scale).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn production_path_is_byte_identical_to_naive_mirror() {
+    check(25, |rng| {
+        let n = 20 + rng.below(180);
+        let d = 2 + rng.below(14);
+        let params = AlshParams {
+            m: 1 + rng.below(4),
+            k_per_table: 1 + rng.below(6),
+            n_tables: 1 + rng.below(8),
+            ..AlshParams::default()
+        };
+        let items = random_items(rng, n, d);
+        let idx = AlshIndex::build(&items, params, rng.next_u64());
+        let tables = naive_tables(&idx, &items);
+
+        // The frozen CSR tables hold exactly the naive postings.
+        for (frozen, naive) in idx.tables().iter().zip(&tables) {
+            assert_eq!(frozen.n_buckets(), naive.n_buckets());
+            assert_eq!(frozen.n_postings(), naive.n_postings());
+            for (key, ids) in naive.buckets() {
+                assert_eq!(frozen.get_by_key(*key), ids.as_slice());
+            }
+        }
+
+        let mut scratch = idx.scratch();
+        for _ in 0..4 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+            // Plain path: candidate stream byte-identical, including order.
+            let want = naive_candidates(&idx, &tables, &q);
+            assert_eq!(idx.candidates(&q), want, "plain candidates diverge");
+            assert_eq!(
+                idx.candidates_into(&q, &mut scratch),
+                want.as_slice(),
+                "scratch candidates diverge"
+            );
+
+            // Code-fed path (the batcher re-entry), fed per-family codes.
+            let qx = q_transform(&q, params.m);
+            let mut flat = Vec::new();
+            for fam in idx.families() {
+                fam.hash_into(&qx, &mut flat);
+            }
+            assert_eq!(
+                idx.candidates_from_codes_into(&flat, &mut scratch),
+                want.as_slice(),
+                "code-fed candidates diverge"
+            );
+
+            // Multi-probe path at several probe counts.
+            for probes in [1usize, 2, 4] {
+                let want_mp = naive_candidates_multiprobe(&idx, &tables, &q, probes);
+                assert_eq!(
+                    idx.candidates_multiprobe_into(&q, probes, &mut scratch),
+                    want_mp.as_slice(),
+                    "multiprobe candidates diverge at {probes} probes"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn frozen_tables_roundtrip_persistence_with_identical_candidates() {
+    check(8, |rng| {
+        let items = random_items(rng, 50 + rng.below(100), 3 + rng.below(8));
+        let d = items[0].len();
+        let params = AlshParams {
+            k_per_table: 1 + rng.below(5),
+            n_tables: 1 + rng.below(6),
+            ..AlshParams::default()
+        };
+        let idx = AlshIndex::build(&items, params, rng.next_u64());
+        let dir = std::env::temp_dir().join("alsh-fused-csr-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("eq-{}.alsh", rng.next_u64()));
+        idx.save(&path).unwrap();
+        let loaded = AlshIndex::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        for _ in 0..3 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            assert_eq!(idx.candidates(&q), loaded.candidates(&q));
+            assert_eq!(
+                idx.candidates_multiprobe(&q, 3),
+                loaded.candidates_multiprobe(&q, 3)
+            );
+            assert_eq!(idx.query(&q, 10), loaded.query(&q, 10));
+        }
+    });
+}

@@ -1,0 +1,85 @@
+//! Proof of the allocation-free query path: a counting global allocator
+//! (per-thread counters, so the harness's other threads cannot interfere)
+//! asserts that steady-state `query_into` / `candidates_multiprobe_into`
+//! calls through a warmed [`alsh::index::QueryScratch`] perform **zero**
+//! heap allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use alsh::index::{AlshIndex, AlshParams};
+use alsh::util::Rng;
+
+thread_local! {
+    // const-initialized Cell: no lazy init, no destructor, so the TLS
+    // access inside the allocator cannot itself allocate or recurse.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn steady_state_queries_allocate_nothing() {
+    let mut rng = Rng::seed_from_u64(1);
+    let items: Vec<Vec<f32>> = (0..2000)
+        .map(|_| {
+            let s = 0.2 + 1.8 * rng.f32();
+            (0..24).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+    let idx = AlshIndex::build(&items, AlshParams::default(), 2);
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..24).map(|_| rng.normal_f32()).collect())
+        .collect();
+
+    let mut scratch = idx.scratch();
+    // Warm-up: lets the variable-size buffers (candidates, rerank storage)
+    // grow to this workload's high-water mark.
+    let mut sink = 0usize;
+    for q in &queries {
+        sink += idx.query_into(q, 10, &mut scratch).len();
+        sink += idx.candidates_multiprobe_into(q, 4, &mut scratch).len();
+        sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+    }
+
+    // Measured phase: not a single allocation may happen.
+    let before = allocs_on_this_thread();
+    for _ in 0..3 {
+        for q in &queries {
+            sink += idx.query_into(q, 10, &mut scratch).len();
+            sink += idx.candidates_multiprobe_into(q, 4, &mut scratch).len();
+            sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+        }
+    }
+    let after = allocs_on_this_thread();
+    assert!(sink > 0, "queries must return results");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state scratch queries performed {} heap allocations",
+        after - before
+    );
+}

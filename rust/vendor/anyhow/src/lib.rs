@@ -1,0 +1,263 @@
+//! Hermetic stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository has no network access to
+//! crates.io, so the subset of `anyhow` the workspace actually uses is
+//! vendored here as a dependency-free implementation with the same API
+//! surface and semantics:
+//!
+//! * [`Error`]: an opaque error value holding a context chain. `{}` shows
+//!   the outermost message, `{:#}` the full `outer: inner: root` chain
+//!   (matching anyhow's alternate Display).
+//! * `?` conversion from any `std::error::Error + Send + Sync + 'static`
+//!   (the source chain is captured eagerly as strings).
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros, including inline format
+//!   captures in string literals.
+//!
+//! Swapping in the real `anyhow` is a one-line Cargo.toml change; nothing
+//! in the workspace relies on behavior beyond the subset above.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost context, `chain.last()` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer (what `.context(..)` attaches).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // anyhow's `{:#}`: "outer: cause: root".
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The anyhow trick: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent
+// (and gives `?` conversions from all std error types).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Attach context to errors, on both `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "file gone");
+    }
+
+    #[test]
+    fn context_layers_and_alternate_display() {
+        let e: Result<()> = Err(io_err()).context("reading manifest");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file gone");
+        assert_eq!(e.root_cause(), "file gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing field");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::io::Error> = Ok(3);
+        let got = ok
+            .with_context(|| -> &'static str { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(got, 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            ensure!(x != 6);
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(format!("{:#}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{:#}", f(5).unwrap_err()), "five is right out");
+        assert!(format!("{:#}", f(6).unwrap_err()).contains("x != 6"));
+        assert_eq!(format!("{:#}", f(3).unwrap_err()), "fell through with 3");
+        // Single-expression form takes any Display value.
+        let from_string = anyhow!(String::from("plain message"));
+        assert_eq!(format!("{from_string}"), "plain message");
+    }
+
+    #[test]
+    fn error_msg_as_fn_pointer() {
+        let r: std::result::Result<u32, String> = Err("boom".into());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(format!("{e}"), "boom");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by") && dbg.contains("root"));
+    }
+}
