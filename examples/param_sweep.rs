@@ -14,18 +14,18 @@ fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>]) {
         let params = AlshParams { k_per_table: k, n_tables: l, ..Default::default() };
         let idx = AlshIndex::build(items, params, 7);
         let mut scratch = idx.scratch();
+        // Whole evaluation batch through fused matrix–matrix hashing;
+        // candidate counts come from the same probe pass (no re-probing).
+        let mut tops: Vec<Vec<alsh::index::ScoredItem>> = Vec::new();
+        let mut counts: Vec<usize> = Vec::new();
+        idx.query_batch_counts_into(queries, 10, &mut scratch, &mut tops, &mut counts);
         let mut hits = 0;
-        let mut cands = 0;
-        for q in queries {
-            cands += idx.candidates_into(q, &mut scratch).len();
-            let hit = idx
-                .query_into(q, 10, &mut scratch)
-                .iter()
-                .any(|h| h.id == scan.query(q, 1)[0].id);
-            if hit {
+        for (q, top) in queries.iter().zip(&tops) {
+            if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
                 hits += 1;
             }
         }
+        let cands: usize = counts.iter().sum();
         println!(
             "K={k:2} L={l:2}: top1-in-top10 recall {hits}/{}, candidates {:.1}%",
             queries.len(),

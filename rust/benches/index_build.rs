@@ -1,0 +1,158 @@
+//! Index-build throughput benchmark: the parallel sharded streaming build
+//! (shard → block matrix–matrix hash → sorted postings runs → counting
+//! merge into frozen CSR) versus the legacy single-threaded path
+//! (per-item fused hash → mutable `HashMap` tables → freeze-style
+//! sort+concat), which is re-created here as the baseline.
+//!
+//! Emits `BENCH_build.json` ("index_build" section) with items/sec at
+//! 1, 4, and 8 worker threads plus the peak per-shard postings memory, so
+//! the build-throughput trajectory is tracked across PRs alongside the
+//! query-path numbers in `BENCH_query.json`.
+//!
+//! Knobs: `ALSH_BUILD_BENCH_N` (items, default 100_000),
+//! `ALSH_BUILD_BENCH_D` (dim, default 128), `ALSH_BUILD_BENCH_REPS`
+//! (reps per config, min-of, default 2).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use alsh::index::hash_table::bucket_key;
+use alsh::index::{AlshIndex, AlshParams, BuildOpts};
+use alsh::transform::p_transform_into;
+use alsh::util::bench::merge_bench_json_file;
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("ALSH_BUILD_BENCH_N", 100_000);
+    let d = env_usize("ALSH_BUILD_BENCH_D", 128);
+    let reps = env_usize("ALSH_BUILD_BENCH_REPS", 2).max(1);
+    let params = AlshParams::default();
+    println!(
+        "index build bench: n={n} d={d} K={} L={} reps={reps}",
+        params.k_per_table, params.n_tables
+    );
+
+    let mut rng = Rng::seed_from_u64(42);
+    let items: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let s = 0.2 + 1.8 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+
+    // Reference index: supplies the exact families/scale every measured
+    // path hashes with, and the ground truth for integrity checks.
+    let (reference, _) =
+        AlshIndex::build_with(&items, params, 7, BuildOpts::single_threaded());
+    let fused = reference.hasher();
+    let scale = *reference.scale();
+
+    // ---- legacy baseline: the pre-parallel build loop ----------------------
+    // Per-item scale -> P -> fused hash -> L HashMap inserts, then a
+    // freeze-style sort+concat of every table into CSR arrays.
+    let mut legacy_best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let mut tables: Vec<HashMap<u64, Vec<u32>>> =
+            (0..params.n_tables).map(|_| HashMap::new()).collect();
+        let mut scaled: Vec<f32> = Vec::with_capacity(d);
+        let mut px: Vec<f32> = Vec::with_capacity(d + params.m);
+        let mut codes = vec![0i32; fused.n_codes()];
+        for (id, item) in items.iter().enumerate() {
+            scale.apply_into(item, &mut scaled);
+            p_transform_into(&scaled, params.m, &mut px);
+            fused.hash_into(&px, &mut codes);
+            for (t, table) in tables.iter_mut().enumerate() {
+                let ct = &codes[t * params.k_per_table..(t + 1) * params.k_per_table];
+                table.entry(bucket_key(ct)).or_default().push(id as u32);
+            }
+        }
+        let mut total_postings = 0usize;
+        for table in &tables {
+            let mut entries: Vec<(&u64, &Vec<u32>)> = table.iter().collect();
+            entries.sort_unstable_by_key(|e| *e.0);
+            let mut keys: Vec<u64> = Vec::with_capacity(entries.len());
+            let mut offsets: Vec<u32> = Vec::with_capacity(entries.len() + 1);
+            let mut postings: Vec<u32> = Vec::with_capacity(n);
+            offsets.push(0u32);
+            for (key, ids) in entries {
+                keys.push(*key);
+                postings.extend_from_slice(ids);
+                offsets.push(postings.len() as u32);
+            }
+            total_postings += postings.len();
+            std::hint::black_box((&keys, &offsets, &postings));
+        }
+        assert_eq!(total_postings, n * params.n_tables, "legacy build lost postings");
+        legacy_best = legacy_best.min(t0.elapsed().as_secs_f64());
+    }
+    let legacy_ips = n as f64 / legacy_best;
+    println!(
+        "legacy 1t (HashMap + freeze):      {legacy_best:>8.3}s  {:>12.0} items/s",
+        legacy_ips
+    );
+
+    // ---- parallel sharded streaming build at 1 / 4 / 8 threads -------------
+    let mut per_thread: Vec<(usize, f64, usize)> = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let mut best = f64::INFINITY;
+        let mut peak_bytes = 0usize;
+        for rep in 0..reps {
+            let t0 = Instant::now();
+            let (idx, stats) =
+                AlshIndex::build_with(&items, params, 7, BuildOpts::threads(threads));
+            best = best.min(t0.elapsed().as_secs_f64());
+            peak_bytes = stats.shard_peak_bytes;
+            if rep == 0 {
+                // Integrity: every thread count serves identical results.
+                assert_eq!(idx.table_stats(), reference.table_stats(), "{threads}t stats");
+                let q: Vec<f32> = (0..d).map(|j| ((j as f32) * 0.37).sin()).collect();
+                assert_eq!(
+                    idx.candidates(&q),
+                    reference.candidates(&q),
+                    "{threads}t candidate stream diverges"
+                );
+            }
+            std::hint::black_box(idx.n_items());
+        }
+        println!(
+            "parallel {threads}t (streamed CSR):      {best:>8.3}s  {:>12.0} items/s  (peak shard mem {:.1} MiB)",
+            n as f64 / best,
+            peak_bytes as f64 / (1024.0 * 1024.0)
+        );
+        per_thread.push((threads, best, peak_bytes));
+    }
+
+    let ips: Vec<f64> = per_thread.iter().map(|&(_, s, _)| n as f64 / s).collect();
+    let speedup_8t_vs_legacy = ips[2] / legacy_ips;
+    let speedup_8t_vs_1t = ips[2] / ips[0];
+    println!(
+        "speedup: 8t vs legacy {speedup_8t_vs_legacy:.2}x, 8t vs parallel-1t {speedup_8t_vs_1t:.2}x"
+    );
+
+    merge_bench_json_file(
+        "BENCH_build.json",
+        "index_build",
+        vec![
+            ("n".into(), Json::Num(n as f64)),
+            ("d".into(), Json::Num(d as f64)),
+            ("k_per_table".into(), Json::Num(params.k_per_table as f64)),
+            ("n_tables".into(), Json::Num(params.n_tables as f64)),
+            ("reps".into(), Json::Num(reps as f64)),
+            ("legacy_1t_items_per_sec".into(), Json::Num(legacy_ips)),
+            ("parallel_1t_items_per_sec".into(), Json::Num(ips[0])),
+            ("parallel_4t_items_per_sec".into(), Json::Num(ips[1])),
+            ("parallel_8t_items_per_sec".into(), Json::Num(ips[2])),
+            ("speedup_8t_vs_legacy".into(), Json::Num(speedup_8t_vs_legacy)),
+            ("speedup_8t_vs_1t".into(), Json::Num(speedup_8t_vs_1t)),
+            ("shard_peak_bytes_1t".into(), Json::Num(per_thread[0].2 as f64)),
+            ("shard_peak_bytes_4t".into(), Json::Num(per_thread[1].2 as f64)),
+            ("shard_peak_bytes_8t".into(), Json::Num(per_thread[2].2 as f64)),
+        ],
+    );
+}

@@ -2,15 +2,17 @@
 //! machinery as the ALSH index but hashing raw vectors with h^{L2} on both
 //! the data and the query side.
 //!
-//! Shares the serving hot-path machinery with `AlshIndex`: fused
-//! multi-table hashing, frozen CSR tables, and the caller-owned
-//! [`QueryScratch`] — so baseline-vs-ALSH benchmark comparisons measure
-//! the transforms, not implementation differences.
+//! Shares both the build and serving machinery with `AlshIndex`: the
+//! parallel sharded streaming build (`index::build`), fused multi-table
+//! hashing, frozen CSR tables, and the caller-owned [`QueryScratch`] —
+//! so baseline-vs-ALSH benchmark comparisons measure the transforms, not
+//! implementation differences.
 
 use crate::util::Rng;
 
+use crate::index::build::{build_tables, BuildOpts};
 use crate::index::scratch::with_thread_scratch;
-use crate::index::{FrozenTable, HashTable, QueryScratch, ScoredItem};
+use crate::index::{FrozenTable, QueryScratch, ScoredItem};
 use crate::lsh::{FusedHasher, L2LshFamily};
 use crate::transform::dot;
 
@@ -40,15 +42,11 @@ impl L2LshIndex {
             .map(|_| L2LshFamily::sample(dim, k_per_table, r, &mut rng))
             .collect();
         let fused = FusedHasher::from_families(&families);
-        let mut build_tables = vec![HashTable::new(); n_tables];
-        let mut codes = vec![0i32; fused.n_codes()];
-        for (id, item) in items.iter().enumerate() {
-            fused.hash_into(item, &mut codes);
-            for (t, table) in build_tables.iter_mut().enumerate() {
-                table.insert(&codes[t * k_per_table..(t + 1) * k_per_table], id as u32);
-            }
-        }
-        let tables: Vec<FrozenTable> = build_tables.iter().map(FrozenTable::freeze).collect();
+        // Same parallel sharded streaming build as AlshIndex, with the
+        // identity row fill (symmetric hashing: no P transform).
+        let (tables, _stats) = build_tables(items.len(), &fused, &BuildOpts::default(), |id, row| {
+            row.copy_from_slice(&items[id])
+        });
         let mut items_flat = Vec::with_capacity(items.len() * dim);
         for it in items {
             items_flat.extend_from_slice(it);
@@ -94,9 +92,18 @@ impl L2LshIndex {
         for &id in cands.iter() {
             scored.push(ScoredItem { id, score: dot(query, self.item(id)) });
         }
-        scored.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        // Same select-then-sort top-k as `AlshIndex::rerank_into`, so
+        // baseline-vs-ALSH latency comparisons don't differ by rerank
+        // implementation (O(C + k log k) on both sides).
         top.clear();
-        top.extend_from_slice(&scored[..k.min(scored.len())]);
+        let k = k.min(scored.len());
+        if k > 0 {
+            scored.select_nth_unstable_by(k - 1, |a, b| {
+                b.score.partial_cmp(&a.score).unwrap()
+            });
+            top.extend_from_slice(&scored[..k]);
+            top.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        }
         top
     }
 

@@ -4,7 +4,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::index::scratch::with_thread_scratch;
-use crate::index::{AlshIndex, AlshParams, QueryScratch, ScoredItem};
+use crate::index::{AlshIndex, AlshParams, BuildOpts, BuildStats, QueryScratch, ScoredItem};
 
 use super::metrics::Metrics;
 
@@ -20,11 +20,28 @@ pub struct MipsEngine {
 }
 
 impl MipsEngine {
+    /// Build an engine with the default parallel sharded build pipeline
+    /// (all available cores).
     pub fn new(items: &[Vec<f32>], params: AlshParams, seed: u64) -> Self {
         Self {
             index: AlshIndex::build(items, params, seed),
             metrics: Arc::new(Metrics::new()),
         }
+    }
+
+    /// Rebuild entry point with explicit build-pipeline options (worker
+    /// thread count, hash block size); returns the engine plus the
+    /// build's observability stats. The served index is byte-identical
+    /// for every `opts` choice — only build latency and transient memory
+    /// change.
+    pub fn new_with(
+        items: &[Vec<f32>],
+        params: AlshParams,
+        seed: u64,
+        opts: BuildOpts,
+    ) -> (Self, BuildStats) {
+        let (index, stats) = AlshIndex::build_with(items, params, seed, opts);
+        (Self::from_index(index), stats)
     }
 
     pub fn from_index(index: AlshIndex) -> Self {
@@ -132,6 +149,21 @@ mod tests {
                 (0..d).map(|_| (rng.f32() - 0.5) * s).collect()
             })
             .collect()
+    }
+
+    #[test]
+    fn new_with_serves_identical_results() {
+        let its = items(300, 8, 20);
+        let base = MipsEngine::new(&its, AlshParams::default(), 21);
+        let (eng, stats) =
+            MipsEngine::new_with(&its, AlshParams::default(), 21, BuildOpts::threads(3));
+        assert_eq!(stats.n_threads, 3);
+        assert_eq!(stats.n_items, 300);
+        let mut rng = Rng::seed_from_u64(22);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            assert_eq!(eng.query(&q, 5), base.query(&q, 5));
+        }
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Parallel sharded index build: the streaming build pipeline behind
+//! [`super::AlshIndex::build`] (and the symmetric L2LSH baseline).
+//!
+//! # Pipeline
+//!
+//! 1. **Shard** — the item id range is split into contiguous shards, one
+//!    per worker thread (`std::thread::scope`; no external deps).
+//! 2. **Block transform + hash** — each worker fills a flat
+//!    `[block × (D+m)]` buffer with transformed item rows (the `_slice`
+//!    transform variants) and hashes the whole block through
+//!    [`FusedHasher::hash_batch_into`] — matrix–matrix hashing on the
+//!    build side, mirroring the query batcher.
+//! 3. **Postings runs** — each worker reduces every item's K codes per
+//!    table to a u64 bucket key and accumulates per-table
+//!    `(key, item id)` runs, then sorts each run by `(key, id)`.
+//! 4. **Counting merge** — the sorted shard runs are merged (tables in
+//!    parallel) with [`FrozenTable::from_sorted_runs`]'s two-pass
+//!    counting merge **directly into the frozen CSR layout** — the
+//!    mutable `HashMap` build tables of the old path are gone entirely.
+//!
+//! # Equivalence
+//!
+//! The result is byte-identical for every thread count and block size:
+//! blocked hashing is bit-identical to per-item hashing (never
+//! reassociates a row's sum), shards are contiguous ascending id ranges
+//! merged in shard order, so every bucket's postings come out
+//! id-ascending — exactly what sequential insertion produced. Enforced by
+//! `tests/parallel_build_equivalence.rs` against a from-first-principles
+//! `HashMap` mirror across the plain, code-fed, and multi-probe query
+//! paths.
+
+use super::frozen::FrozenTable;
+use super::hash_table::bucket_key;
+use super::scratch::BuildScratch;
+use crate::lsh::FusedHasher;
+
+/// Options controlling the build pipeline. The options trade build speed
+/// and memory only — the built index is byte-identical for every choice.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOpts {
+    /// Worker threads; `None` uses `std::thread::available_parallelism()`.
+    pub n_threads: Option<usize>,
+    /// Items transformed + hashed per matrix–matrix block.
+    pub block: usize,
+}
+
+impl Default for BuildOpts {
+    fn default() -> Self {
+        Self { n_threads: None, block: 64 }
+    }
+}
+
+impl BuildOpts {
+    /// Single-threaded build (the reference path for equivalence tests
+    /// and latency-insensitive callers).
+    pub fn single_threaded() -> Self {
+        Self { n_threads: Some(1), ..Self::default() }
+    }
+
+    /// Build with exactly `n` worker threads.
+    pub fn threads(n: usize) -> Self {
+        Self { n_threads: Some(n.max(1)), ..Self::default() }
+    }
+}
+
+/// Observability from one build run (reported by `BENCH_build.json`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildStats {
+    /// Shards actually used (= worker threads that ran).
+    pub n_threads: usize,
+    /// Items indexed.
+    pub n_items: usize,
+    /// Peak bytes held in per-shard postings runs before the merge
+    /// released them (the pipeline's transient memory overhead).
+    pub shard_peak_bytes: usize,
+}
+
+/// One worker's output: per-table `(bucket key, item id)` runs, each
+/// sorted ascending by `(key, id)`.
+type ShardRuns = Vec<Vec<(u64, u32)>>;
+
+/// Hash items `start..end` in blocks; `fill_row(id, row)` writes item
+/// `id`'s transformed `fused.dim()`-long input row.
+fn hash_shard<F: Fn(usize, &mut [f32])>(
+    fill_row: &F,
+    fused: &FusedHasher,
+    start: usize,
+    end: usize,
+    block: usize,
+) -> ShardRuns {
+    let dp = fused.dim();
+    let nc = fused.n_codes();
+    let k = fused.k();
+    let n_tables = fused.n_tables();
+    let mut scratch = BuildScratch::new();
+    let mut runs: ShardRuns = (0..n_tables).map(|_| Vec::with_capacity(end - start)).collect();
+    let mut at = start;
+    while at < end {
+        let rows = block.min(end - at);
+        let (px, codes) = scratch.block_bufs(rows, dp, nc);
+        for i in 0..rows {
+            fill_row(at + i, &mut px[i * dp..(i + 1) * dp]);
+        }
+        fused.hash_batch_into(px, rows, codes);
+        for i in 0..rows {
+            let id = (at + i) as u32;
+            let code_row = &codes[i * nc..(i + 1) * nc];
+            for (t, run) in runs.iter_mut().enumerate() {
+                run.push((bucket_key(&code_row[t * k..(t + 1) * k]), id));
+            }
+        }
+        at += rows;
+    }
+    for run in runs.iter_mut() {
+        // (key, id) order; ids already ascend within each key because the
+        // shard walks ids in ascending order, so unstable sort is safe.
+        run.sort_unstable();
+    }
+    runs
+}
+
+/// Run the full pipeline: shard → block transform/hash → sorted postings
+/// runs → parallel counting merge into frozen CSR tables.
+///
+/// `fill_row(id, row)` writes item `id`'s transformed input row (length
+/// `fused.dim()`); it must be pure — workers call it concurrently.
+pub(crate) fn build_tables<F>(
+    n_items: usize,
+    fused: &FusedHasher,
+    opts: &BuildOpts,
+    fill_row: F,
+) -> (Vec<FrozenTable>, BuildStats)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(n_items > 0, "empty item collection");
+    assert!(n_items <= u32::MAX as usize, "item ids must fit u32");
+    let block = opts.block.max(1);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n_threads = opts.n_threads.unwrap_or(hw).max(1).min(n_items);
+    let shard_len = (n_items + n_threads - 1) / n_threads;
+    let ranges: Vec<(usize, usize)> = (0..n_threads)
+        .map(|w| (w * shard_len, ((w + 1) * shard_len).min(n_items)))
+        .filter(|&(s, e)| s < e)
+        .collect();
+
+    // Phase 1: hash shards (one worker per contiguous id range).
+    let fill = &fill_row;
+    let mut shards: Vec<ShardRuns> = Vec::with_capacity(ranges.len());
+    if ranges.len() == 1 {
+        let (s, e) = ranges[0];
+        shards.push(hash_shard(fill, fused, s, e, block));
+    } else {
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(s, e)| sc.spawn(move || hash_shard(fill, fused, s, e, block)))
+                .collect();
+            for h in handles {
+                shards.push(h.join().expect("build hash worker panicked"));
+            }
+        });
+    }
+
+    let entry_bytes = std::mem::size_of::<(u64, u32)>();
+    let shard_peak_bytes: usize = shards
+        .iter()
+        .flat_map(|runs| runs.iter())
+        .map(|run| run.capacity() * entry_bytes)
+        .sum();
+
+    // Phase 2: merge shard runs per table, tables split across threads.
+    let n_tables = fused.n_tables();
+    let merge_one = |t: usize| -> FrozenTable {
+        let runs: Vec<&[(u64, u32)]> = shards.iter().map(|sh| sh[t].as_slice()).collect();
+        FrozenTable::from_sorted_runs(&runs)
+    };
+    let mut tables: Vec<FrozenTable> = Vec::with_capacity(n_tables);
+    let merge_threads = ranges.len().min(n_tables);
+    if merge_threads <= 1 {
+        for t in 0..n_tables {
+            tables.push(merge_one(t));
+        }
+    } else {
+        let chunk = (n_tables + merge_threads - 1) / merge_threads;
+        let merge_ref = &merge_one;
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..merge_threads)
+                .map(|w| {
+                    let lo = (w * chunk).min(n_tables);
+                    let hi = ((w + 1) * chunk).min(n_tables);
+                    sc.spawn(move || (lo..hi).map(merge_ref).collect::<Vec<FrozenTable>>())
+                })
+                .collect();
+            for h in handles {
+                tables.extend(h.join().expect("build merge worker panicked"));
+            }
+        });
+    }
+
+    let stats =
+        BuildStats { n_threads: ranges.len(), n_items, shard_peak_bytes };
+    (tables, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::L2LshFamily;
+    use crate::util::Rng;
+
+    fn fused(l: usize, dim: usize, k: usize, seed: u64) -> FusedHasher {
+        let mut rng = Rng::seed_from_u64(seed);
+        let fams: Vec<L2LshFamily> =
+            (0..l).map(|_| L2LshFamily::sample(dim, k, 2.5, &mut rng)).collect();
+        FusedHasher::from_families(&fams)
+    }
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.normal_f32() * 0.4).collect()).collect()
+    }
+
+    /// Every thread count / block size must produce byte-identical tables.
+    #[test]
+    fn thread_and_block_invariance() {
+        let d = 10;
+        let its = items(230, d, 1);
+        let f = fused(5, d, 3, 2);
+        let fill = |id: usize, out: &mut [f32]| out.copy_from_slice(&its[id]);
+        let (base, base_stats) = build_tables(
+            its.len(),
+            &f,
+            &BuildOpts { n_threads: Some(1), block: 64 },
+            fill,
+        );
+        assert_eq!(base_stats.n_threads, 1);
+        assert_eq!(base_stats.n_items, 230);
+        assert!(base_stats.shard_peak_bytes > 0);
+        for (threads, block) in [(2usize, 64usize), (3, 7), (8, 1), (16, 33)] {
+            let (tables, stats) = build_tables(
+                its.len(),
+                &f,
+                &BuildOpts { n_threads: Some(threads), block },
+                fill,
+            );
+            assert_eq!(stats.n_threads, threads.min(230));
+            assert_eq!(tables.len(), base.len());
+            for (a, b) in tables.iter().zip(&base) {
+                assert_eq!(a.keys(), b.keys(), "threads={threads} block={block}");
+                assert_eq!(a.offsets(), b.offsets(), "threads={threads} block={block}");
+                assert_eq!(a.postings(), b.postings(), "threads={threads} block={block}");
+            }
+        }
+    }
+
+    /// More threads than items must not panic or drop postings.
+    #[test]
+    fn more_threads_than_items() {
+        let d = 4;
+        let its = items(3, d, 5);
+        let f = fused(2, d, 2, 6);
+        let (tables, stats) = build_tables(
+            its.len(),
+            &f,
+            &BuildOpts { n_threads: Some(8), block: 64 },
+            |id, out| out.copy_from_slice(&its[id]),
+        );
+        assert!(stats.n_threads <= 3);
+        for t in &tables {
+            assert_eq!(t.n_postings(), 3);
+        }
+    }
+}

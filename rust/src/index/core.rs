@@ -5,9 +5,11 @@
 //! * **Fused hashing** — all `L·K` codes per query come from one blocked
 //!   matrix–vector pass over the stacked projection matrix
 //!   ([`crate::lsh::FusedHasher`]), bit-identical to per-family hashing.
-//! * **Frozen CSR tables** — after build, each mutable `HashMap` table is
-//!   frozen into flat sorted-key/offsets/postings arrays
-//!   ([`super::frozen::FrozenTable`]); probes touch contiguous memory.
+//! * **Frozen CSR tables** — the parallel sharded build
+//!   ([`super::build`]) streams postings straight into flat
+//!   sorted-key/offsets/postings arrays
+//!   ([`super::frozen::FrozenTable`]); probes touch contiguous memory
+//!   and no mutable `HashMap` stage ever exists.
 //! * **Caller-owned scratch** — every transient buffer lives in a
 //!   [`QueryScratch`] handed in by the caller, so steady-state queries
 //!   allocate nothing and concurrent queries share no mutable state (no
@@ -15,15 +17,17 @@
 //!
 //! The allocating methods (`query`, `candidates`, …) are convenience
 //! wrappers over the `_into` variants using a thread-local scratch; hot
-//! loops should own a scratch and call `query_into` directly.
+//! loops should own a scratch and call `query_into` directly. Offline
+//! evaluation over many queries should use [`AlshIndex::query_batch_into`]
+//! (matrix–matrix hashing).
 
 use crate::util::Rng;
 
+use super::build::{self, BuildOpts, BuildStats};
 use super::frozen::FrozenTable;
-use super::hash_table::HashTable;
 use super::scratch::{with_thread_scratch, QueryScratch};
 use crate::lsh::{FusedHasher, L2LshFamily};
-use crate::transform::{dot, p_transform_into, q_transform_into, UScale};
+use crate::transform::{dot, q_transform_into, scale_p_transform_slice, UScale};
 
 /// Parameters of a bucketed ALSH index.
 #[derive(Clone, Copy, Debug)]
@@ -49,6 +53,11 @@ impl Default for AlshParams {
         Self { m: 3, u: 0.83, r: 2.5, k_per_table: 6, n_tables: 32 }
     }
 }
+
+/// Queries hashed per matrix–matrix chunk by the batch query path — large
+/// enough to amortize row-block loads across the chunk, small enough that
+/// the scratch's batch buffers stay bounded regardless of batch size.
+const QUERY_BATCH_BLOCK: usize = 256;
 
 /// A retrieved item with its exact inner-product score.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -78,12 +87,29 @@ pub struct AlshIndex {
 }
 
 impl AlshIndex {
-    /// Build the index over `items` (each of equal dimension).
+    /// Build the index over `items` (each of equal dimension) with the
+    /// default pipeline options (all available cores).
     ///
     /// Applies Eq. 11 scaling (max norm -> U), the P transform (Eq. 12),
-    /// hashes every item through the fused matrix, inserts into all L
-    /// build-side tables, then freezes them into CSR form.
+    /// hashes item blocks through the fused matrix (matrix–matrix), and
+    /// streams the postings straight into the frozen CSR tables — see
+    /// [`super::build`] for the sharded pipeline.
     pub fn build(items: &[Vec<f32>], params: AlshParams, seed: u64) -> Self {
+        Self::build_with(items, params, seed, BuildOpts::default()).0
+    }
+
+    /// [`AlshIndex::build`] with explicit pipeline options (thread count,
+    /// block size), returning build observability stats alongside the
+    /// index. The built index is **byte-identical** for every `opts`
+    /// choice: shards are contiguous id ranges merged in shard order, and
+    /// blocked hashing is bit-identical to per-item hashing
+    /// (property-tested in `tests/parallel_build_equivalence.rs`).
+    pub fn build_with(
+        items: &[Vec<f32>],
+        params: AlshParams,
+        seed: u64,
+        opts: BuildOpts,
+    ) -> (Self, BuildStats) {
         assert!(!items.is_empty(), "empty item collection");
         let dim = items[0].len();
         assert!(items.iter().all(|v| v.len() == dim), "ragged item dims");
@@ -93,27 +119,18 @@ impl AlshIndex {
             .map(|_| L2LshFamily::sample(dim + params.m, params.k_per_table, params.r, &mut rng))
             .collect();
         let fused = FusedHasher::from_families(&families);
-        let mut build_tables = vec![HashTable::new(); params.n_tables];
-        // Per-item buffers, reused across the whole pass (zero allocations
-        // in the loop body after the first item).
-        let mut scaled = Vec::with_capacity(dim);
-        let mut px = Vec::with_capacity(dim + params.m);
-        let mut codes = vec![0i32; fused.n_codes()];
-        for (id, item) in items.iter().enumerate() {
-            scale.apply_into(item, &mut scaled);
-            p_transform_into(&scaled, params.m, &mut px);
-            fused.hash_into(&px, &mut codes);
-            for (t, table) in build_tables.iter_mut().enumerate() {
-                let ct = &codes[t * params.k_per_table..(t + 1) * params.k_per_table];
-                table.insert(ct, id as u32);
-            }
-        }
-        let tables: Vec<FrozenTable> = build_tables.iter().map(FrozenTable::freeze).collect();
+        let factor = scale.factor;
+        let m = params.m;
+        let (tables, stats) = build::build_tables(items.len(), &fused, &opts, |id, row| {
+            scale_p_transform_slice(&items[id], factor, m, row)
+        });
         let mut items_flat = Vec::with_capacity(items.len() * dim);
         for item in items {
             items_flat.extend_from_slice(item);
         }
-        Self { params, scale, families, fused, tables, items_flat, dim, n_items: items.len() }
+        let index =
+            Self { params, scale, families, fused, tables, items_flat, dim, n_items: items.len() };
+        (index, stats)
     }
 
     pub fn params(&self) -> &AlshParams {
@@ -147,8 +164,11 @@ impl AlshIndex {
         &self.tables
     }
 
-    /// A scratch pre-sized for this index, so even the first query through
-    /// it performs no allocation.
+    /// A scratch with the fixed-shape buffers (stamps, codes, fracs)
+    /// pre-sized for this index. The variable-size buffers (candidates,
+    /// rerank storage) still grow to their workload high-water mark over
+    /// the first queries; after that warm-up, queries allocate nothing
+    /// (asserted by `tests/zero_alloc.rs`).
     pub fn scratch(&self) -> QueryScratch {
         let mut s = QueryScratch::new();
         s.reserve(self.n_items, self.fused.n_codes(), self.dim + self.params.m);
@@ -226,10 +246,45 @@ impl AlshIndex {
         &s.cands
     }
 
-    /// Blocked exact scoring of `cands` against `query` into `out`
-    /// (4 independent accumulation chains; per-item order identical to
-    /// [`dot`], so scores are bit-identical to the scalar path).
+    /// Exact scoring of `cands` against `query` into `out`. Defaults to
+    /// the bit-exact scalar blocked path; with the `simd` cargo feature
+    /// enabled and AVX2+FMA detected at runtime, dispatches to the
+    /// 8-lane FMA kernel ([`super::simd`]) instead. The SIMD path
+    /// reassociates sums, so its contract is identical top-k *sets*
+    /// (within float tolerance at ties), not bitwise scores.
     fn score_candidates(&self, query: &[f32], cands: &[u32], out: &mut Vec<ScoredItem>) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if super::simd::x86::available() {
+                // Safety: AVX2+FMA availability checked at runtime just above.
+                unsafe { self.score_candidates_f32x8(query, cands, out) };
+                return;
+            }
+        }
+        self.score_candidates_scalar(query, cands, out)
+    }
+
+    /// 8-lane FMA scoring (dispatched by [`AlshIndex::score_candidates`]).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available at runtime.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    unsafe fn score_candidates_f32x8(
+        &self,
+        query: &[f32],
+        cands: &[u32],
+        out: &mut Vec<ScoredItem>,
+    ) {
+        for &id in cands {
+            let score = unsafe { super::simd::x86::dot_f32x8(query, self.item(id)) };
+            out.push(ScoredItem { id, score });
+        }
+    }
+
+    /// Blocked scalar scoring (4 independent accumulation chains;
+    /// per-item order identical to [`dot`], so scores are bit-identical
+    /// to the plain scalar path).
+    fn score_candidates_scalar(&self, query: &[f32], cands: &[u32], out: &mut Vec<ScoredItem>) {
         let d = self.dim;
         let mut i = 0;
         while i + 4 <= cands.len() {
@@ -294,6 +349,77 @@ impl AlshIndex {
     ) -> &'s [ScoredItem] {
         self.candidates_into(query, s);
         self.rerank_into(query, k, s)
+    }
+
+    /// Batch query path for offline evaluation (figures, gold scans,
+    /// parameter sweeps): Q-transforms and hashes queries in fused
+    /// **matrix–matrix** chunks ([`FusedHasher::hash_batch_into`], the
+    /// same kernel the coordinator batcher uses), then probes and exactly
+    /// reranks each query. Results land in `out` (one top-k `Vec` per
+    /// query, cleared first) and are identical to per-query
+    /// [`AlshIndex::query_into`] — blocked batch hashing is bit-identical
+    /// to single-query hashing. Chunking bounds the scratch's batch
+    /// buffers to a fixed row count however large the batch is.
+    pub fn query_batch_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+    ) {
+        self.query_batch_impl(queries, k, s, out, None)
+    }
+
+    /// [`AlshIndex::query_batch_into`] that additionally records each
+    /// query's deduplicated candidate count in `counts` (cleared first) —
+    /// the candidates/query metric every evaluation sweep wants, captured
+    /// from the probe that already ran instead of re-probing.
+    pub fn query_batch_counts_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+        counts: &mut Vec<usize>,
+    ) {
+        self.query_batch_impl(queries, k, s, out, Some(counts))
+    }
+
+    fn query_batch_impl(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+        mut counts: Option<&mut Vec<usize>>,
+    ) {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "query dim mismatch");
+        }
+        out.clear();
+        if let Some(c) = counts.as_deref_mut() {
+            c.clear();
+        }
+        let nc = self.fused.n_codes();
+        for chunk in queries.chunks(QUERY_BATCH_BLOCK) {
+            s.hash_codes_batch(&self.fused, chunk, self.params.m);
+            for (i, q) in chunk.iter().enumerate() {
+                s.stage_batch_codes(i, nc);
+                self.probe_scratch_codes(s);
+                if let Some(c) = counts.as_deref_mut() {
+                    c.push(s.candidates().len());
+                }
+                out.push(self.rerank_into(q, k, s).to_vec());
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`AlshIndex::query_batch_into`]
+    /// (thread-local scratch).
+    pub fn query_batch(&self, queries: &[Vec<f32>], k: usize) -> Vec<Vec<ScoredItem>> {
+        let mut out = Vec::with_capacity(queries.len());
+        with_thread_scratch(|s| self.query_batch_into(queries, k, s, &mut out));
+        out
     }
 
     // ---- allocating convenience wrappers (thread-local scratch) ----------
@@ -513,6 +639,101 @@ mod tests {
         for k in [0usize, 1, 5, 1000] {
             let via_scratch = idx.rerank_into(&q, k, &mut s).to_vec();
             assert_eq!(via_scratch, idx.rerank(&q, &cands, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn build_with_is_thread_invariant() {
+        // The sharded pipeline must yield byte-identical tables for any
+        // thread/block choice (the full property test with a naive mirror
+        // lives in tests/parallel_build_equivalence.rs).
+        let items = norm_spread_items(350, 10, 60);
+        let (a, stats_a) = AlshIndex::build_with(
+            &items,
+            AlshParams::default(),
+            61,
+            BuildOpts::single_threaded(),
+        );
+        assert_eq!(stats_a.n_threads, 1);
+        let (b, stats_b) = AlshIndex::build_with(
+            &items,
+            AlshParams::default(),
+            61,
+            BuildOpts { n_threads: Some(5), block: 17 },
+        );
+        assert_eq!(stats_b.n_threads, 5);
+        assert!(stats_b.shard_peak_bytes > 0);
+        for (ta, tb) in a.tables().iter().zip(b.tables()) {
+            assert_eq!(ta.keys(), tb.keys());
+            assert_eq!(ta.offsets(), tb.offsets());
+            assert_eq!(ta.postings(), tb.postings());
+        }
+        let q: Vec<f32> = (0..10).map(|i| (i as f32 * 0.4).sin()).collect();
+        assert_eq!(a.query(&q, 10), b.query(&q, 10));
+    }
+
+    #[test]
+    fn query_batch_matches_per_query_path() {
+        let items = norm_spread_items(400, 12, 70);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 71);
+        let mut rng = Rng::seed_from_u64(72);
+        let queries: Vec<Vec<f32>> =
+            (0..17).map(|_| (0..12).map(|_| rng.normal_f32()).collect()).collect();
+        let batch = idx.query_batch(&queries, 10);
+        assert_eq!(batch.len(), queries.len());
+        for (q, top) in queries.iter().zip(&batch) {
+            assert_eq!(top, &idx.query(q, 10), "batch diverges from single-query path");
+        }
+        // Scratch variant agrees and handles the empty batch.
+        let mut s = idx.scratch();
+        let mut out = Vec::new();
+        idx.query_batch_into(&queries, 10, &mut s, &mut out);
+        assert_eq!(out, batch);
+        idx.query_batch_into(&[], 10, &mut s, &mut out);
+        assert!(out.is_empty());
+        // The counts variant reports each query's probe size.
+        let mut counts = Vec::new();
+        idx.query_batch_counts_into(&queries, 10, &mut s, &mut out, &mut counts);
+        assert_eq!(out, batch);
+        assert_eq!(counts.len(), queries.len());
+        for (q, &c) in queries.iter().zip(&counts) {
+            assert_eq!(c, idx.candidates(q).len());
+        }
+    }
+
+    /// With `--features simd` the rerank path may reassociate sums; the
+    /// returned top-k must still match the exact scalar ranking as a set
+    /// (tolerating only genuine near-ties at the k-th score).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn rerank_simd_equivalence() {
+        let items = norm_spread_items(500, 40, 80);
+        let idx = AlshIndex::build(&items, AlshParams::default(), 81);
+        let mut rng = Rng::seed_from_u64(82);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+            let cands = idx.candidates(&q);
+            let k = 10.min(cands.len());
+            if k == 0 {
+                continue;
+            }
+            let got = idx.rerank(&q, &cands, k);
+            // Exact scalar reference ranking over the same candidates.
+            let mut want: Vec<ScoredItem> = cands
+                .iter()
+                .map(|&id| ScoredItem { id, score: dot(&q, idx.item(id)) })
+                .collect();
+            want.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            want.truncate(k);
+            let kth = want.last().unwrap().score;
+            for g in &got {
+                let in_want = want.iter().any(|w| w.id == g.id);
+                assert!(
+                    in_want || (g.score - kth).abs() < 1e-3,
+                    "simd top-k id {} not in scalar top-k and not a near-tie",
+                    g.id
+                );
+            }
         }
     }
 

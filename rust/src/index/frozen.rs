@@ -1,18 +1,23 @@
-//! Immutable CSR hash tables: the serve-side form of [`HashTable`].
+//! Immutable CSR hash tables: the serve-side (and now build-target) form.
 //!
-//! After the build pass, each mutable `HashMap<u64, Vec<u32>>` table is
-//! frozen into three flat arrays — sorted bucket keys, CSR offsets, and
+//! Each table is three flat arrays — sorted bucket keys, CSR offsets, and
 //! one contiguous postings array — so a probe is a bounded binary search
 //! into cache-friendly memory instead of a hash-map walk plus a pointer
 //! chase into a per-bucket `Vec`. A 256-entry top-byte radix over the
 //! (avalanched, uniform) keys first narrows the search to ~1/256 of the
 //! key array, leaving a handful of comparisons per probe.
 //!
-//! Freezing preserves each bucket's postings order (ascending item id, the
-//! build insertion order), so candidate streams are byte-identical to the
-//! mutable form — property-tested in `tests/fused_csr_equivalence.rs`.
+//! Since the parallel sharded build there is no mutable `HashMap` stage at
+//! all: build workers emit per-shard `(bucket key, item id)` runs sorted by
+//! key, and [`FrozenTable::from_sorted_runs`] merges them with a two-pass
+//! counting merge **directly into the CSR arrays** — exact-capacity
+//! allocations, no per-bucket `Vec` churn. Runs arrive in ascending
+//! item-id shard order, so each bucket's postings come out id-ascending —
+//! byte-identical to what sequential insertion used to produce
+//! (property-tested in `tests/parallel_build_equivalence.rs` and
+//! `tests/fused_csr_equivalence.rs`).
 
-use super::hash_table::{bucket_key, HashTable};
+use super::hash_table::bucket_key;
 
 /// One frozen hash table in CSR layout.
 #[derive(Clone, Debug, Default)]
@@ -39,26 +44,82 @@ fn radix_starts(keys: &[u64]) -> Vec<u32> {
     starts
 }
 
+/// The smallest key at any run's cursor, or `None` when every run is
+/// exhausted — the one merge-frontier scan both passes of
+/// [`FrozenTable::from_sorted_runs`] share.
+fn next_min_key(runs: &[&[(u64, u32)]], pos: &[usize]) -> Option<u64> {
+    let mut min_key: Option<u64> = None;
+    for (r, run) in runs.iter().enumerate() {
+        if let Some(&(key, _)) = run.get(pos[r]) {
+            min_key = Some(match min_key {
+                Some(mk) if mk <= key => mk,
+                _ => key,
+            });
+        }
+    }
+    min_key
+}
+
 impl FrozenTable {
-    /// Freeze a build-side table. Postings order within each bucket is
-    /// preserved exactly.
-    pub fn freeze(table: &HashTable) -> Self {
-        let mut entries: Vec<(u64, &Vec<u32>)> =
-            table.buckets().map(|(k, v)| (*k, v)).collect();
-        entries.sort_unstable_by_key(|e| e.0);
-        let n_postings: usize = entries.iter().map(|(_, v)| v.len()).sum();
-        assert!(n_postings <= u32::MAX as usize, "postings overflow u32 offsets");
-        let mut keys = Vec::with_capacity(entries.len());
-        let mut offsets = Vec::with_capacity(entries.len() + 1);
-        let mut postings = Vec::with_capacity(n_postings);
+    /// Two-pass counting merge of per-shard `(bucket key, item id)` runs,
+    /// each sorted ascending by key, directly into the CSR arrays.
+    ///
+    /// Pass 1 walks the merge to count distinct keys; pass 2 fills
+    /// exact-capacity `keys`/`offsets`/`postings` — no intermediate maps,
+    /// no reallocation. For every bucket, postings are emitted in run
+    /// order: give the runs in ascending item-id shard order and each
+    /// bucket's postings come out id-ascending, exactly the order
+    /// sequential insertion produced.
+    pub fn from_sorted_runs(runs: &[&[(u64, u32)]]) -> Self {
+        let total: usize = runs.iter().map(|r| r.len()).sum();
+        assert!(total <= u32::MAX as usize, "postings overflow u32 offsets");
+        debug_assert!(
+            runs.iter().all(|r| r.windows(2).all(|w| w[0].0 <= w[1].0)),
+            "runs must be sorted ascending by key"
+        );
+        let mut pos = vec![0usize; runs.len()];
+        // Pass 1: count distinct keys across all runs.
+        let mut n_keys = 0usize;
+        while let Some(mk) = next_min_key(runs, &pos) {
+            n_keys += 1;
+            for (r, run) in runs.iter().enumerate() {
+                while pos[r] < run.len() && run[pos[r]].0 == mk {
+                    pos[r] += 1;
+                }
+            }
+        }
+        // Pass 2: exact-capacity fill.
+        let mut keys: Vec<u64> = Vec::with_capacity(n_keys);
+        let mut offsets: Vec<u32> = Vec::with_capacity(n_keys + 1);
+        let mut postings: Vec<u32> = Vec::with_capacity(total);
         offsets.push(0u32);
-        for (key, ids) in entries {
-            keys.push(key);
-            postings.extend_from_slice(ids);
+        for p in pos.iter_mut() {
+            *p = 0;
+        }
+        while let Some(mk) = next_min_key(runs, &pos) {
+            keys.push(mk);
+            for (r, run) in runs.iter().enumerate() {
+                while pos[r] < run.len() && run[pos[r]].0 == mk {
+                    postings.push(run[pos[r]].1);
+                    pos[r] += 1;
+                }
+            }
             offsets.push(postings.len() as u32);
         }
+        debug_assert_eq!(keys.len(), n_keys);
+        debug_assert_eq!(postings.len(), total);
         let starts = radix_starts(&keys);
         Self { keys, starts, offsets, postings }
+    }
+
+    /// Build from `(bucket key, item id)` pairs in insertion order; pairs
+    /// with equal keys keep their relative order (stable sort), matching
+    /// the semantics of the old mutable-`HashMap` insert path. Used by
+    /// single-run builds and tests; the parallel build uses
+    /// [`FrozenTable::from_sorted_runs`] on presorted shard runs.
+    pub fn from_pairs(mut pairs: Vec<(u64, u32)>) -> Self {
+        pairs.sort_by_key(|&(key, _)| key);
+        Self::from_sorted_runs(&[pairs.as_slice()])
     }
 
     /// Reassemble from persisted parts, validating CSR invariants.
@@ -159,49 +220,80 @@ mod tests {
     use super::*;
     use crate::util::check::check;
     use crate::util::Rng;
+    use std::collections::HashMap;
 
-    fn random_table(rng: &mut Rng, n_items: u32) -> HashTable {
-        let mut t = HashTable::new();
+    /// Naive mirror of the old mutable build table plus the insertion
+    /// stream that fed it: the oracle for the CSR constructors.
+    fn random_pairs(rng: &mut Rng, n_items: u32) -> (Vec<(u64, u32)>, HashMap<u64, Vec<u32>>) {
+        let mut pairs = Vec::new();
+        let mut mirror: HashMap<u64, Vec<u32>> = HashMap::new();
         for id in 0..n_items {
-            let codes: Vec<i32> =
-                (0..3).map(|_| (rng.below(6) as i32) - 3).collect();
-            t.insert(&codes, id);
+            let codes: Vec<i32> = (0..3).map(|_| (rng.below(6) as i32) - 3).collect();
+            let key = bucket_key(&codes);
+            pairs.push((key, id));
+            mirror.entry(key).or_default().push(id);
         }
-        t
+        (pairs, mirror)
     }
 
     #[test]
-    fn freeze_preserves_every_bucket() {
+    fn from_pairs_preserves_every_bucket() {
         check(40, |rng| {
             let n = 1 + rng.below(300) as u32;
-            let table = random_table(rng, n);
-            let frozen = FrozenTable::freeze(&table);
-            assert_eq!(frozen.n_buckets(), table.n_buckets());
-            assert_eq!(frozen.n_postings(), table.n_postings());
-            assert_eq!(frozen.max_bucket(), table.max_bucket());
-            for (key, ids) in table.buckets() {
+            let (pairs, mirror) = random_pairs(rng, n);
+            let frozen = FrozenTable::from_pairs(pairs);
+            assert_eq!(frozen.n_buckets(), mirror.len());
+            assert_eq!(frozen.n_postings(), n as usize);
+            let max = mirror.values().map(|v| v.len()).max().unwrap_or(0);
+            assert_eq!(frozen.max_bucket(), max);
+            for (key, ids) in &mirror {
                 assert_eq!(frozen.get_by_key(*key), ids.as_slice(), "bucket {key:#x}");
             }
         });
     }
 
     #[test]
+    fn sorted_runs_merge_matches_single_run() {
+        // Splitting the id range into contiguous shards and merging must
+        // give byte-identical CSR arrays to the single-run build.
+        check(40, |rng| {
+            let n = 1 + rng.below(400) as u32;
+            let (pairs, _) = random_pairs(rng, n);
+            let whole = FrozenTable::from_pairs(pairs.clone());
+            let n_shards = 1 + rng.below(6);
+            let shard_len = (pairs.len() + n_shards - 1) / n_shards;
+            let mut runs: Vec<Vec<(u64, u32)>> = Vec::new();
+            for chunk in pairs.chunks(shard_len.max(1)) {
+                let mut run = chunk.to_vec();
+                run.sort_unstable(); // by (key, id); ids already ascend per shard
+                runs.push(run);
+            }
+            let borrowed: Vec<&[(u64, u32)]> = runs.iter().map(|r| r.as_slice()).collect();
+            let merged = FrozenTable::from_sorted_runs(&borrowed);
+            assert_eq!(merged.keys(), whole.keys());
+            assert_eq!(merged.offsets(), whole.offsets());
+            assert_eq!(merged.postings(), whole.postings());
+        });
+    }
+
+    #[test]
     fn missing_keys_probe_empty() {
         let mut rng = Rng::seed_from_u64(9);
-        let table = random_table(&mut rng, 100);
-        let frozen = FrozenTable::freeze(&table);
+        let (pairs, mirror) = random_pairs(&mut rng, 100);
+        let frozen = FrozenTable::from_pairs(pairs);
         // Probe keys that are almost certainly absent.
         for i in 0..1000u64 {
             let key = i.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xDEAD_BEEF;
-            assert_eq!(frozen.get_by_key(key), table.get_by_key(key));
+            let want: &[u32] = mirror.get(&key).map(|v| v.as_slice()).unwrap_or(&[]);
+            assert_eq!(frozen.get_by_key(key), want);
         }
     }
 
     #[test]
     fn parts_roundtrip() {
         let mut rng = Rng::seed_from_u64(10);
-        let table = random_table(&mut rng, 200);
-        let frozen = FrozenTable::freeze(&table);
+        let (pairs, mirror) = random_pairs(&mut rng, 200);
+        let frozen = FrozenTable::from_pairs(pairs);
         let rebuilt = FrozenTable::from_parts(
             frozen.keys().to_vec(),
             frozen.offsets().to_vec(),
@@ -209,7 +301,7 @@ mod tests {
             200,
         )
         .unwrap();
-        for (key, ids) in table.buckets() {
+        for (key, ids) in &mirror {
             assert_eq!(rebuilt.get_by_key(*key), ids.as_slice());
         }
     }
@@ -229,11 +321,15 @@ mod tests {
     }
 
     #[test]
-    fn empty_table_freezes() {
-        let frozen = FrozenTable::freeze(&HashTable::new());
+    fn empty_table_builds() {
+        let frozen = FrozenTable::from_pairs(Vec::new());
         assert_eq!(frozen.n_buckets(), 0);
         assert_eq!(frozen.n_postings(), 0);
         assert_eq!(frozen.max_bucket(), 0);
         assert!(frozen.get(&[1, 2, 3]).is_empty());
+        // Merging only empty runs is also fine.
+        let empty_run: &[(u64, u32)] = &[];
+        let merged = FrozenTable::from_sorted_runs(&[empty_run, empty_run]);
+        assert_eq!(merged.n_buckets(), 0);
     }
 }

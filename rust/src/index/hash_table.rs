@@ -1,9 +1,13 @@
-//! One *build-side* LSH hash table: buckets keyed by a meta-hash of K
-//! integer codes. Mutable `HashMap` form used only while inserting; after
-//! the build pass every table is frozen into the immutable CSR layout of
-//! [`super::frozen::FrozenTable`], which is what the query path probes.
-
-use std::collections::HashMap;
+//! Bucket-key mixing for the (K, L) hash tables.
+//!
+//! The mutable `HashMap`-backed build-side `HashTable` that used to live
+//! here is gone: the build pipeline now streams `(bucket key, item id)`
+//! postings straight into the frozen CSR layout
+//! ([`super::frozen::FrozenTable::from_sorted_runs`]), so the only piece
+//! the hot paths still need is the key mix itself. Naive `HashMap` table
+//! mirrors survive solely inside tests (`tests/fused_csr_equivalence.rs`,
+//! `tests/parallel_build_equivalence.rs`), where they are rebuilt from
+//! first principles as the oracle the production path is checked against.
 
 /// Mix K i32 codes into one u64 bucket key (splitmix64-style avalanche,
 /// applied per code). Distinct code vectors collide with probability
@@ -20,73 +24,9 @@ pub fn bucket_key(codes: &[i32]) -> u64 {
     h
 }
 
-/// A single hash table mapping bucket keys to item-id postings lists.
-#[derive(Clone, Debug, Default)]
-pub struct HashTable {
-    buckets: HashMap<u64, Vec<u32>>,
-}
-
-impl HashTable {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Insert item `id` into the bucket for `codes`.
-    pub fn insert(&mut self, codes: &[i32], id: u32) {
-        self.buckets.entry(bucket_key(codes)).or_default().push(id);
-    }
-
-    /// The postings list for `codes` (empty slice if the bucket is empty).
-    pub fn get(&self, codes: &[i32]) -> &[u32] {
-        self.buckets
-            .get(&bucket_key(codes))
-            .map(|v| v.as_slice())
-            .unwrap_or(&[])
-    }
-
-    /// Number of non-empty buckets.
-    pub fn n_buckets(&self) -> usize {
-        self.buckets.len()
-    }
-
-    /// Total number of postings (= number of inserted items).
-    pub fn n_postings(&self) -> usize {
-        self.buckets.values().map(|v| v.len()).sum()
-    }
-
-    /// Size of the largest bucket (skew diagnostic for metrics).
-    pub fn max_bucket(&self) -> usize {
-        self.buckets.values().map(|v| v.len()).max().unwrap_or(0)
-    }
-
-    /// Iterate raw (key, postings) pairs — used by index persistence.
-    pub fn buckets(&self) -> impl Iterator<Item = (&u64, &Vec<u32>)> {
-        self.buckets.iter()
-    }
-
-    /// Probe by raw key (multi-probe querying).
-    pub fn get_by_key(&self, key: u64) -> &[u32] {
-        self.buckets.get(&key).map(|v| v.as_slice()).unwrap_or(&[])
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn insert_then_get() {
-        let mut t = HashTable::new();
-        t.insert(&[1, 2, 3], 42);
-        t.insert(&[1, 2, 3], 43);
-        t.insert(&[9, 9, 9], 44);
-        assert_eq!(t.get(&[1, 2, 3]), &[42, 43]);
-        assert_eq!(t.get(&[9, 9, 9]), &[44]);
-        assert!(t.get(&[0, 0, 0]).is_empty());
-        assert_eq!(t.n_buckets(), 2);
-        assert_eq!(t.n_postings(), 3);
-        assert_eq!(t.max_bucket(), 2);
-    }
 
     #[test]
     fn key_sensitive_to_order_and_value() {

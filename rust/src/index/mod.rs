@@ -10,6 +10,7 @@
 //!   rank every item by the number of hash agreements with the query over
 //!   K independent functions. This is what Figures 5–7 measure.
 
+pub mod build;
 pub mod collision;
 pub mod core;
 pub mod frozen;
@@ -17,9 +18,10 @@ pub mod hash_table;
 pub mod multiprobe;
 pub mod persist;
 pub mod scratch;
+mod simd;
 
+pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
 pub use frozen::FrozenTable;
-pub use hash_table::HashTable;
 pub use scratch::QueryScratch;

@@ -21,6 +21,7 @@
 
 use super::core::ScoredItem;
 use crate::lsh::FusedHasher;
+use crate::transform::q_transform_slice;
 
 /// Caller-owned scratch for the allocation-free query path. Construct via
 /// [`QueryScratch::new`] (or the pre-sizing `AlshIndex::scratch` /
@@ -48,6 +49,10 @@ pub struct QueryScratch {
     pub(crate) perturbs: Vec<(f32, usize, i32)>,
     /// Scatter/gather merge buffer (sharded router).
     pub(crate) merged: Vec<ScoredItem>,
+    /// Batch-query Q-transformed inputs, `[batch × (D+m)]` row-major.
+    pub(crate) qx_batch: Vec<f32>,
+    /// Batch-query fused code block, `[batch × L·K]` row-major.
+    pub(crate) codes_batch: Vec<i32>,
 }
 
 impl QueryScratch {
@@ -56,8 +61,10 @@ impl QueryScratch {
         Self::default()
     }
 
-    /// Grow the fixed-shape buffers up front so even the first query
-    /// allocates nothing (`n_codes` = L·K, `dp` = D + m).
+    /// Grow the fixed-shape buffers (stamps, codes, fracs, qx, perturbs)
+    /// up front (`n_codes` = L·K, `dp` = D + m). Variable-size buffers
+    /// (candidates, rerank storage) still grow to the workload's
+    /// high-water mark over the first queries.
     pub fn reserve(&mut self, n_items: usize, n_codes: usize, dp: usize) {
         if self.stamps.len() < n_items {
             self.stamps.resize(n_items, 0);
@@ -142,10 +149,79 @@ impl QueryScratch {
         fused.hash_frac_into(&self.qx, &mut self.codes[..nc], &mut self.fracs[..nc]);
     }
 
+    /// Q-transform and hash a whole batch of queries in one fused
+    /// matrix–matrix pass: row `i` of `codes_batch` holds query `i`'s
+    /// `L·K` codes afterwards (the `query_batch_into` front half).
+    pub(crate) fn hash_codes_batch(
+        &mut self,
+        fused: &FusedHasher,
+        queries: &[Vec<f32>],
+        m: usize,
+    ) {
+        let dp = fused.dim();
+        let nc = fused.n_codes();
+        let nb = queries.len();
+        if self.qx_batch.len() < nb * dp {
+            self.qx_batch.resize(nb * dp, 0.0);
+        }
+        if self.codes_batch.len() < nb * nc {
+            self.codes_batch.resize(nb * nc, 0);
+        }
+        for (i, q) in queries.iter().enumerate() {
+            debug_assert_eq!(q.len() + m, dp);
+            q_transform_slice(q, m, &mut self.qx_batch[i * dp..(i + 1) * dp]);
+        }
+        fused.hash_batch_into(&self.qx_batch[..nb * dp], nb, &mut self.codes_batch[..nb * nc]);
+    }
+
+    /// Copy batch row `i` (`nc` codes) into the single-query code buffer
+    /// so the existing probe machinery can consume it.
+    pub(crate) fn stage_batch_codes(&mut self, i: usize, nc: usize) {
+        if self.codes.len() < nc {
+            self.codes.resize(nc, 0);
+        }
+        self.codes[..nc].copy_from_slice(&self.codes_batch[i * nc..(i + 1) * nc]);
+    }
+
     /// Force the epoch counter (wraparound tests).
     #[cfg(test)]
     pub(crate) fn set_epoch(&mut self, epoch: u32) {
         self.epoch = epoch;
+    }
+}
+
+/// Per-worker scratch for the parallel sharded build: the flat transformed
+/// item block and its fused code block. Buffers grow once per worker and
+/// are reused across every block the shard processes, so the build's inner
+/// loop allocates only into the per-table postings runs.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct BuildScratch {
+    px_block: Vec<f32>,
+    codes_block: Vec<i32>,
+}
+
+impl BuildScratch {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Exact-size views for a block of `rows` items: the `[rows × dp]`
+    /// transformed-input buffer and the `[rows × nc]` code buffer.
+    pub(crate) fn block_bufs(
+        &mut self,
+        rows: usize,
+        dp: usize,
+        nc: usize,
+    ) -> (&mut [f32], &mut [i32]) {
+        let need_px = rows * dp;
+        if self.px_block.len() < need_px {
+            self.px_block.resize(need_px, 0.0);
+        }
+        let need_codes = rows * nc;
+        if self.codes_block.len() < need_codes {
+            self.codes_block.resize(need_codes, 0);
+        }
+        (&mut self.px_block[..need_px], &mut self.codes_block[..need_codes])
     }
 }
 

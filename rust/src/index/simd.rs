@@ -1,0 +1,154 @@
+//! Feature-gated AVX2/FMA rerank kernel (`--features simd`).
+//!
+//! `AlshIndex::score_candidates` defaults to the bit-exact scalar path;
+//! with the `simd` cargo feature enabled **and** AVX2+FMA detected at
+//! runtime, candidate dot products run 8 f32 lanes at a time with two
+//! independent FMA chains. SIMD accumulation reassociates the sum, so
+//! scores may differ from the scalar path by O(ε·d·‖q‖‖x‖); the
+//! equivalence contract is therefore on top-k *sets* under a tolerance,
+//! not bitwise scores — see the tests below and the feature-gated
+//! `rerank_simd_equivalence` test in `index::core`.
+//!
+//! The kernel is compiled on every x86_64 build (so the default build
+//! cannot silently rot it) but only dispatched with the feature on.
+#![allow(dead_code)]
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Whether the running CPU supports the kernel.
+    #[inline]
+    pub fn available() -> bool {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    }
+
+    /// 8-lane FMA dot product: two independent `f32x8` accumulator
+    /// chains over 16-element strides, one 8-element stride, then a
+    /// scalar tail, summed lane 0..7 deterministically at the end.
+    ///
+    /// # Safety
+    /// Caller must ensure [`available`] returned `true` and
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dot_f32x8(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(j)),
+                _mm256_loadu_ps(pb.add(j)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(j + 8)),
+                _mm256_loadu_ps(pb.add(j + 8)),
+                acc1,
+            );
+            j += 16;
+        }
+        if j + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(j)),
+                _mm256_loadu_ps(pb.add(j)),
+                acc0,
+            );
+            j += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut sum = 0.0f32;
+        for v in lanes {
+            sum += v;
+        }
+        while j < n {
+            sum += *pa.add(j) * *pb.add(j);
+            j += 1;
+        }
+        sum
+    }
+}
+
+#[cfg(all(test, target_arch = "x86_64"))]
+mod tests {
+    use crate::transform::dot;
+    use crate::util::check::check;
+
+    /// |simd − scalar| bounded by float reassociation error.
+    #[test]
+    fn simd_dot_matches_scalar_within_tolerance() {
+        if !super::x86::available() {
+            eprintln!("[simd test skipped: no AVX2+FMA at runtime]");
+            return;
+        }
+        check(60, |rng| {
+            let d = 1 + rng.below(200);
+            let a: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let scalar = dot(&a, &b) as f64;
+            let simd = unsafe { super::x86::dot_f32x8(&a, &b) } as f64;
+            let scale: f64 = 1.0 + a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum::<f64>();
+            assert!(
+                (scalar - simd).abs() <= 1e-5 * scale,
+                "d={d}: scalar {scalar} vs simd {simd}"
+            );
+        });
+    }
+
+    /// Top-k *sets* agree between the two scoring paths: any id the two
+    /// rankings disagree on must sit within float tolerance of the k-th
+    /// score (a genuine near-tie, not a kernel bug).
+    #[test]
+    fn simd_topk_set_matches_scalar() {
+        if !super::x86::available() {
+            eprintln!("[simd test skipped: no AVX2+FMA at runtime]");
+            return;
+        }
+        check(25, |rng| {
+            let d = 4 + rng.below(120);
+            let n = 50 + rng.below(300);
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.normal_f32() * 0.5).collect())
+                .collect();
+            let k = 1 + rng.below(15);
+            let top = |scores: &[f32]| -> Vec<usize> {
+                let mut idx: Vec<usize> = (0..scores.len()).collect();
+                idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+                idx.truncate(k);
+                idx
+            };
+            let scalar_scores: Vec<f32> = rows.iter().map(|r| dot(&q, r)).collect();
+            let simd_scores: Vec<f32> =
+                rows.iter().map(|r| unsafe { super::x86::dot_f32x8(&q, r) }).collect();
+            let ts = top(&scalar_scores);
+            let tv = top(&simd_scores);
+            let kth = scalar_scores[*ts.last().unwrap()];
+            // Set difference in either direction is only legal at
+            // genuine near-ties with the k-th score.
+            for &a in &ts {
+                if !tv.contains(&a) {
+                    assert!(
+                        (scalar_scores[a] - kth).abs() < 1e-3,
+                        "scalar top-k id {a} missing from simd top-k (d={d} n={n} k={k})"
+                    );
+                }
+            }
+            for &b in &tv {
+                if !ts.contains(&b) {
+                    assert!(
+                        (scalar_scores[b] - kth).abs() < 1e-3,
+                        "simd top-k id {b} missing from scalar top-k (d={d} n={n} k={k})"
+                    );
+                }
+            }
+        });
+    }
+}

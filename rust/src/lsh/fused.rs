@@ -17,8 +17,11 @@
 //! [`LANES`] rows share each load of `x[d]` and run [`LANES`] *independent*
 //! accumulation chains that fill the FMA pipeline. A matrix–matrix variant
 //! ([`FusedHasher::hash_batch_into`]) additionally reuses each row block
-//! across every query in a batch (the coordinator batcher's fallback hash
-//! path).
+//! across every input in a batch; it serves both the coordinator batcher's
+//! fallback hash path and the **build side**: the parallel sharded index
+//! build ([`crate::index::build`]) hashes whole item blocks through it,
+//! as does [`crate::index::AlshIndex::query_batch_into`] for offline
+//! evaluation batches.
 //!
 //! # Equivalence to per-family hashing
 //!
@@ -193,6 +196,14 @@ impl FusedHasher {
             }
             r += 1;
         }
+    }
+
+    /// Allocating convenience over [`FusedHasher::hash_batch_into`] for
+    /// offline tools and tests: returns the `[n_rows × L·K]` code block.
+    pub fn hash_batch(&self, xs: &[f32], n_rows: usize) -> Vec<i32> {
+        let mut out = vec![0i32; n_rows * self.n_codes()];
+        self.hash_batch_into(xs, n_rows, &mut out);
+        out
     }
 }
 

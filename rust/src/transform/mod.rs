@@ -77,6 +77,31 @@ pub fn p_transform_into(x: &[f32], m: usize, out: &mut Vec<f32>) {
     }
 }
 
+/// Fused Eq. 11 scaling + P transform (Eq. 12) into a preallocated slice:
+/// `out[..d] = factor·x`, `out[d..d+m]` = the norm powers of the scaled
+/// vector. This is the parallel build's block-fill path — workers write
+/// each item's transformed row straight into a flat `[block × (D+m)]`
+/// buffer that feeds the matrix–matrix hasher.
+///
+/// Bit-identical to `UScale::apply_into` followed by [`p_transform_into`]:
+/// the scaled values and the norm accumulation visit elements in the same
+/// order with the same f32 operations, so the hash codes (and therefore
+/// the candidate sets) cannot differ between the two build paths.
+pub fn scale_p_transform_slice(x: &[f32], factor: f32, m: usize, out: &mut [f32]) {
+    let d = x.len();
+    assert_eq!(out.len(), d + m, "output slice shape mismatch");
+    let mut n = 0.0f32;
+    for j in 0..d {
+        let s = x[j] * factor;
+        out[j] = s;
+        n += s * s; // same accumulation order as p_transform_into's sum
+    }
+    for j in 0..m {
+        out[d + j] = n;
+        n *= n;
+    }
+}
+
 /// Query transform `Q` (Eq. 13), with the WLOG unit-normalization folded in.
 pub fn q_transform(q: &[f32], m: usize) -> Vec<f32> {
     let mut out = Vec::with_capacity(q.len() + m);
@@ -87,10 +112,25 @@ pub fn q_transform(q: &[f32], m: usize) -> Vec<f32> {
 /// Allocation-free [`q_transform`]: overwrite `out`, reusing its capacity
 /// (the query hot path calls this once per query into scratch storage).
 pub fn q_transform_into(q: &[f32], m: usize, out: &mut Vec<f32>) {
-    let norm = l2_norm(q).max(1e-12);
     out.clear();
-    out.extend(q.iter().map(|v| v / norm));
-    out.extend(std::iter::repeat(0.5).take(m));
+    out.resize(q.len() + m, 0.0);
+    q_transform_slice(q, m, out);
+}
+
+/// [`q_transform`] into a preallocated slice — the batch query path
+/// ([`crate::index::AlshIndex::query_batch_into`]) writes each query's
+/// transformed row into a flat `[batch × (D+m)]` buffer with this.
+/// Bit-identical to [`q_transform_into`].
+pub fn q_transform_slice(q: &[f32], m: usize, out: &mut [f32]) {
+    let d = q.len();
+    assert_eq!(out.len(), d + m, "output slice shape mismatch");
+    let norm = l2_norm(q).max(1e-12);
+    for j in 0..d {
+        out[j] = q[j] / norm;
+    }
+    for j in 0..m {
+        out[d + j] = 0.5;
+    }
 }
 
 /// Sign-ALSH data transform (paper §5 future work; Shrivastava & Li 2015):
@@ -249,6 +289,32 @@ mod tests {
                 q_transform_into(&x, m, &mut qx);
                 assert_eq!(qx, q_transform(&x, m));
             }
+        });
+    }
+
+    /// The slice variants (the batch/build block-fill paths) must be
+    /// bit-identical to the Vec-based forms they mirror.
+    #[test]
+    fn slice_variants_match_into_forms() {
+        check(100, |rng| {
+            let d = 1 + rng.below(40);
+            let m = rng.below(6);
+            let x: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 3.0).collect();
+            let scale = UScale::fit([x.as_slice()], 0.83);
+
+            // scale + P fused into a slice == apply_into then p_transform_into.
+            let mut scaled = Vec::new();
+            let mut px = Vec::new();
+            scale.apply_into(&x, &mut scaled);
+            p_transform_into(&scaled, m, &mut px);
+            let mut px_slice = vec![0.0f32; d + m];
+            scale_p_transform_slice(&x, scale.factor, m, &mut px_slice);
+            assert_eq!(px_slice, px, "fused scale+P diverges (d={d} m={m})");
+
+            // Q into a slice == q_transform.
+            let mut qx_slice = vec![0.0f32; d + m];
+            q_transform_slice(&x, m, &mut qx_slice);
+            assert_eq!(qx_slice, q_transform(&x, m), "Q slice diverges");
         });
     }
 

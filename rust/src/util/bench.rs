@@ -134,17 +134,22 @@ impl Bench {
     }
 }
 
-/// Where `BENCH_query.json` lives: the repository root when detectable
-/// (cargo runs bench binaries with cwd = the `rust/` package dir), else
-/// the current directory.
-pub fn bench_json_path() -> std::path::PathBuf {
+/// Resolve `name` against the repository root when detectable (cargo runs
+/// bench binaries with cwd = the `rust/` package dir), else the current
+/// directory — where the `BENCH_*.json` trajectory files live.
+pub fn repo_root_file(name: &str) -> std::path::PathBuf {
     for base in ["ROADMAP.md", "../ROADMAP.md"] {
         let p = std::path::Path::new(base);
         if p.exists() {
-            return p.with_file_name("BENCH_query.json");
+            return p.with_file_name(name);
         }
     }
-    std::path::PathBuf::from("BENCH_query.json")
+    std::path::PathBuf::from(name)
+}
+
+/// Where `BENCH_query.json` lives.
+pub fn bench_json_path() -> std::path::PathBuf {
+    repo_root_file("BENCH_query.json")
 }
 
 /// Merge `entries` into the `section` object of `BENCH_query.json`,
@@ -152,13 +157,38 @@ pub fn bench_json_path() -> std::path::PathBuf {
 /// each own one section of the same file, so the perf trajectory is
 /// tracked across PRs in one machine-readable place).
 pub fn merge_bench_json(section: &str, entries: Vec<(String, crate::util::json::Json)>) {
+    merge_bench_json_file("BENCH_query.json", section, entries)
+}
+
+/// [`merge_bench_json`] for an arbitrary repo-root trajectory file
+/// (`BENCH_build.json` is owned by `benches/index_build.rs`).
+pub fn merge_bench_json_file(
+    file: &str,
+    section: &str,
+    entries: Vec<(String, crate::util::json::Json)>,
+) {
     use crate::util::json::Json;
-    let path = bench_json_path();
-    let mut root = std::fs::read_to_string(&path)
-        .ok()
-        .and_then(|text| Json::parse(&text).ok())
-        .unwrap_or(Json::Obj(Default::default()));
+    let path = repo_root_file(file);
+    // A missing file starts fresh silently; an *unparseable* one is worth
+    // a warning before being replaced — it held the cross-PR trajectory.
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(json) => json,
+            Err(e) => {
+                eprintln!(
+                    "[bench] {} exists but is unparseable ({e}); rewriting it fresh",
+                    path.display()
+                );
+                Json::Obj(Default::default())
+            }
+        },
+        Err(_) => Json::Obj(Default::default()),
+    };
     if !matches!(root, Json::Obj(_)) {
+        eprintln!(
+            "[bench] {} is not a JSON object; rewriting it fresh",
+            path.display()
+        );
         root = Json::Obj(Default::default());
     }
     let Json::Obj(map) = &mut root else { unreachable!() };

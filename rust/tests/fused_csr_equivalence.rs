@@ -6,14 +6,57 @@
 //! multi-probe paths.
 //!
 //! This is the contract that makes the perf work safe: blocking the
-//! matrix-vector pass never reassociates a single row's sum, and freezing
-//! preserves bucket postings order, so not one candidate may differ.
+//! matrix-vector pass never reassociates a single row's sum, and the
+//! streaming CSR merge preserves bucket postings order, so not one
+//! candidate may differ.
 
-use alsh::index::hash_table::{bucket_key, HashTable};
+use std::collections::HashMap;
+
+use alsh::index::hash_table::bucket_key;
 use alsh::index::{AlshIndex, AlshParams};
 use alsh::transform::{p_transform, q_transform};
 use alsh::util::check::check;
 use alsh::util::Rng;
+
+/// The seed implementation's mutable build table: a plain `HashMap` of
+/// bucket key -> postings in insertion order. The production crate no
+/// longer contains any `HashMap` build stage (the sharded build streams
+/// straight into frozen CSR), so the naive mirror lives here, rebuilt
+/// from first principles as the oracle.
+#[derive(Clone, Default)]
+struct HashTable {
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+impl HashTable {
+    fn new() -> Self {
+        Self::default()
+    }
+
+    fn insert(&mut self, codes: &[i32], id: u32) {
+        self.buckets.entry(bucket_key(codes)).or_default().push(id);
+    }
+
+    fn get(&self, codes: &[i32]) -> &[u32] {
+        self.get_by_key(bucket_key(codes))
+    }
+
+    fn get_by_key(&self, key: u64) -> &[u32] {
+        self.buckets.get(&key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    fn n_postings(&self) -> usize {
+        self.buckets.values().map(|v| v.len()).sum()
+    }
+
+    fn buckets(&self) -> impl Iterator<Item = (&u64, &Vec<u32>)> {
+        self.buckets.iter()
+    }
+}
 
 /// Rebuild the index's tables naively: per-family, per-code hashing into
 /// mutable HashMap tables (the seed implementation's build loop).

@@ -1,0 +1,154 @@
+//! Property tests for the parallel sharded build: for randomized corpora
+//! and parameters, every (thread count, block size) choice must produce
+//! **byte-identical** frozen CSR tables — equal to both the
+//! single-threaded pipeline and a naive `HashMap` mirror built from first
+//! principles — and identical candidate sets for every query on the
+//! plain, code-fed, and multi-probe paths.
+//!
+//! This is the acceptance contract of the sharded pipeline: shards are
+//! contiguous ascending-id ranges merged in shard order, and blocked
+//! matrix–matrix hashing is bit-identical to per-item hashing, so
+//! parallelism may change nothing observable.
+
+use std::collections::HashMap;
+
+use alsh::index::hash_table::bucket_key;
+use alsh::index::{AlshIndex, AlshParams, BuildOpts};
+use alsh::transform::{p_transform, q_transform};
+use alsh::util::check::check;
+use alsh::util::Rng;
+
+fn random_items(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let scale = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * scale).collect()
+        })
+        .collect()
+}
+
+/// First-principles mirror of the build: per-family per-code hashing into
+/// per-table `HashMap<bucket key, postings>` maps, ids in insertion order.
+fn naive_buckets(idx: &AlshIndex, items: &[Vec<f32>]) -> Vec<HashMap<u64, Vec<u32>>> {
+    let p = *idx.params();
+    let mut tables: Vec<HashMap<u64, Vec<u32>>> =
+        (0..p.n_tables).map(|_| HashMap::new()).collect();
+    for (id, item) in items.iter().enumerate() {
+        let px = p_transform(&idx.scale().apply(item), p.m);
+        for (family, table) in idx.families().iter().zip(tables.iter_mut()) {
+            let codes = family.hash(&px);
+            table.entry(bucket_key(&codes)).or_default().push(id as u32);
+        }
+    }
+    tables
+}
+
+#[test]
+fn parallel_build_matches_single_threaded_and_naive_mirror() {
+    check(20, |rng| {
+        let n = 30 + rng.below(220);
+        let d = 2 + rng.below(14);
+        let params = AlshParams {
+            m: 1 + rng.below(4),
+            k_per_table: 1 + rng.below(6),
+            n_tables: 1 + rng.below(8),
+            ..AlshParams::default()
+        };
+        let items = random_items(rng, n, d);
+        let seed = rng.next_u64();
+        let (single, stats) =
+            AlshIndex::build_with(&items, params, seed, BuildOpts::single_threaded());
+        assert_eq!(stats.n_threads, 1);
+
+        // The single-threaded pipeline must hold exactly the naive postings.
+        let mirror = naive_buckets(&single, &items);
+        for (frozen, naive) in single.tables().iter().zip(&mirror) {
+            assert_eq!(frozen.n_buckets(), naive.len());
+            let n_postings: usize = naive.values().map(|v| v.len()).sum();
+            assert_eq!(frozen.n_postings(), n_postings);
+            for (key, ids) in naive {
+                assert_eq!(frozen.get_by_key(*key), ids.as_slice(), "bucket {key:#x}");
+            }
+        }
+
+        // Every thread/block choice must be byte-identical to it, and
+        // serve identical candidate sets on every query path.
+        let mut scratch = single.scratch();
+        for (threads, block) in [(2usize, 64usize), (3, 5), (8, 1), (16, 31)] {
+            let (parallel, pstats) = AlshIndex::build_with(
+                &items,
+                params,
+                seed,
+                BuildOpts { n_threads: Some(threads), block },
+            );
+            // Shard count never exceeds the request (ceil-partitioning may
+            // need fewer shards than asked when n is small).
+            assert!(pstats.n_threads >= 1 && pstats.n_threads <= threads);
+            for (a, b) in parallel.tables().iter().zip(single.tables()) {
+                assert_eq!(a.keys(), b.keys(), "threads={threads} block={block}");
+                assert_eq!(a.offsets(), b.offsets(), "threads={threads} block={block}");
+                assert_eq!(a.postings(), b.postings(), "threads={threads} block={block}");
+            }
+            for _ in 0..3 {
+                let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+                // Plain path: identical candidate stream, including order.
+                let want = single.candidates_into(&q, &mut scratch).to_vec();
+                assert_eq!(
+                    parallel.candidates(&q),
+                    want,
+                    "plain candidates diverge (threads={threads})"
+                );
+
+                // Code-fed path (the batcher re-entry).
+                let qx = q_transform(&q, params.m);
+                let mut flat = Vec::new();
+                for fam in parallel.families() {
+                    fam.hash_into(&qx, &mut flat);
+                }
+                assert_eq!(
+                    parallel.candidates_from_codes(&flat),
+                    want,
+                    "code-fed candidates diverge (threads={threads})"
+                );
+
+                // Multi-probe path at several probe counts.
+                for probes in [1usize, 2, 4] {
+                    assert_eq!(
+                        parallel.candidates_multiprobe(&q, probes),
+                        single.candidates_multiprobe_into(&q, probes, &mut scratch),
+                        "multiprobe candidates diverge (threads={threads}, {probes} probes)"
+                    );
+                }
+
+                // And the full query agrees end to end.
+                assert_eq!(parallel.query(&q, 10), single.query_into(&q, 10, &mut scratch));
+            }
+        }
+    });
+}
+
+/// The default (auto-threaded) build is also identical to the
+/// single-threaded pipeline on whatever machine this runs on.
+#[test]
+fn default_build_matches_single_threaded() {
+    let mut rng = Rng::seed_from_u64(99);
+    let items = random_items(&mut rng, 500, 12);
+    let auto = AlshIndex::build(&items, AlshParams::default(), 7);
+    let (single, _) = AlshIndex::build_with(
+        &items,
+        AlshParams::default(),
+        7,
+        BuildOpts::single_threaded(),
+    );
+    for (a, b) in auto.tables().iter().zip(single.tables()) {
+        assert_eq!(a.keys(), b.keys());
+        assert_eq!(a.offsets(), b.offsets());
+        assert_eq!(a.postings(), b.postings());
+    }
+    for _ in 0..10 {
+        let q: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+        assert_eq!(auto.candidates(&q), single.candidates(&q));
+        assert_eq!(auto.query(&q, 10), single.query(&q, 10));
+    }
+}
