@@ -1,36 +1,45 @@
 //! Parameter sweep helper: (K, L) recall/candidate trade-off on both an
-//! adversarial random-query workload and the PureSVD tiny dataset.
-//! Used to pick `AlshParams::default()`; kept as a tuning tool.
+//! adversarial random-query workload and the PureSVD tiny dataset, for
+//! the flat index and the norm-range banded index side by side.
+//! Used to pick `AlshParams::default()` / `BandedParams::default()`;
+//! kept as a tuning tool.
 use alsh::baselines::LinearScan;
 use alsh::config::DatasetConfig;
 use alsh::data::generate_dataset;
-use alsh::index::{AlshIndex, AlshParams};
+use alsh::index::{AlshIndex, AlshParams, AnyIndex, BandedParams, NormRangeIndex};
 use alsh::util::Rng;
 
-fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>]) {
+fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>], n_bands: usize) {
     let scan = LinearScan::new(items);
-    println!("== {name} ({} items) ==", items.len());
+    println!("== {name} ({} items, banded B={n_bands}) ==", items.len());
     for (k, l) in [(4usize, 32usize), (6, 32), (6, 48), (8, 32), (8, 48), (10, 48)] {
         let params = AlshParams { k_per_table: k, n_tables: l, ..Default::default() };
-        let idx = AlshIndex::build(items, params, 7);
-        let mut scratch = idx.scratch();
-        // Whole evaluation batch through fused matrix–matrix hashing;
-        // candidate counts come from the same probe pass (no re-probing).
-        let mut tops: Vec<Vec<alsh::index::ScoredItem>> = Vec::new();
-        let mut counts: Vec<usize> = Vec::new();
-        idx.query_batch_counts_into(queries, 10, &mut scratch, &mut tops, &mut counts);
-        let mut hits = 0;
-        for (q, top) in queries.iter().zip(&tops) {
-            if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
-                hits += 1;
+        // Flat and banded at the same (K, L) and hash seed: the query
+        // codes are shared, only the table partitioning differs.
+        let flat: AnyIndex = AlshIndex::build(items, params, 7).into();
+        let banded: AnyIndex =
+            NormRangeIndex::build(items, params, BandedParams { n_bands }, 7).into();
+        for (label, idx) in [("flat  ", &flat), ("banded", &banded)] {
+            let mut scratch = idx.scratch();
+            // Whole evaluation batch through fused matrix–matrix hashing;
+            // candidate counts come from the same probe pass (no
+            // re-probing).
+            let mut tops: Vec<Vec<alsh::index::ScoredItem>> = Vec::new();
+            let mut counts: Vec<usize> = Vec::new();
+            idx.query_batch_counts_into(queries, 10, &mut scratch, &mut tops, &mut counts);
+            let mut hits = 0;
+            for (q, top) in queries.iter().zip(&tops) {
+                if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
+                    hits += 1;
+                }
             }
+            let cands: usize = counts.iter().sum();
+            println!(
+                "K={k:2} L={l:2} {label}: top1-in-top10 recall {hits}/{}, candidates {:.1}%",
+                queries.len(),
+                100.0 * cands as f64 / queries.len() as f64 / items.len() as f64
+            );
         }
-        let cands: usize = counts.iter().sum();
-        println!(
-            "K={k:2} L={l:2}: top1-in-top10 recall {hits}/{}, candidates {:.1}%",
-            queries.len(),
-            100.0 * cands as f64 / queries.len() as f64 / items.len() as f64
-        );
     }
 }
 
@@ -46,9 +55,9 @@ fn main() {
         .collect();
     let queries: Vec<Vec<f32>> =
         (0..100).map(|_| (0..dim).map(|_| rng.normal_f32()).collect()).collect();
-    sweep("random gaussian (adversarial)", &items, &queries);
+    sweep("random gaussian (adversarial)", &items, &queries, 4);
 
     let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
     let qs: Vec<Vec<f32>> = data.users[..100.min(data.users.len())].to_vec();
-    sweep("puresvd tiny (realistic)", &data.items, &qs);
+    sweep("puresvd tiny (realistic)", &data.items, &qs, 4);
 }

@@ -11,13 +11,20 @@
 //!
 //! Knobs: `ALSH_BUILD_BENCH_N` (items, default 100_000),
 //! `ALSH_BUILD_BENCH_D` (dim, default 128), `ALSH_BUILD_BENCH_REPS`
-//! (reps per config, min-of, default 2).
+//! (reps per config, min-of, default 2), `ALSH_BUILD_BENCH_BANDS`
+//! (B for the norm-range banded configuration, default 4).
+//!
+//! The banded configuration builds the same corpus as a B-band
+//! `NormRangeIndex` twice — bands fully parallel, and bands serialized
+//! under a `max_shard_bytes` cap — so `BENCH_build.json` tracks B-band
+//! build throughput *and* the peak concurrent shard memory the cap
+//! bounds.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use alsh::index::hash_table::bucket_key;
-use alsh::index::{AlshIndex, AlshParams, BuildOpts};
+use alsh::index::{AlshIndex, AlshParams, BandedParams, BuildOpts, NormRangeIndex};
 use alsh::transform::p_transform_into;
 use alsh::util::bench::merge_bench_json_file;
 use alsh::util::json::Json;
@@ -135,6 +142,67 @@ fn main() {
         "speedup: 8t vs legacy {speedup_8t_vs_legacy:.2}x, 8t vs parallel-1t {speedup_8t_vs_1t:.2}x"
     );
 
+    // ---- norm-range banded build (B bands, parallel vs memory-capped) ------
+    let n_bands = env_usize("ALSH_BUILD_BENCH_BANDS", 4).max(1);
+    let banded_params = BandedParams { n_bands };
+    let mut banded_best = f64::INFINITY;
+    let mut banded_peak = 0usize;
+    for rep in 0..reps {
+        let t0 = Instant::now();
+        let (bidx, bstats) = NormRangeIndex::build_with(
+            &items,
+            params,
+            banded_params,
+            7,
+            BuildOpts::threads(8),
+        );
+        banded_best = banded_best.min(t0.elapsed().as_secs_f64());
+        banded_peak = bstats.peak_concurrent_run_bytes;
+        if rep == 0 {
+            assert_eq!(bstats.n_groups, 1, "uncapped banded build must run one group");
+            assert_eq!(
+                bidx.table_stats().n_postings,
+                n * params.n_tables,
+                "banded build lost postings"
+            );
+        }
+        std::hint::black_box(bidx.n_items());
+    }
+    println!(
+        "banded {n_bands}-band 8t (parallel):   {banded_best:>8.3}s  {:>12.0} items/s  (peak concurrent run mem {:.1} MiB)",
+        n as f64 / banded_best,
+        banded_peak as f64 / (1024.0 * 1024.0)
+    );
+    // Capped run: force band serialization with a cap of half the
+    // uncapped concurrent estimate (at least one band's worth always
+    // proceeds), measuring the throughput cost of the memory bound.
+    let cap = (banded_peak / 2).max(1);
+    let mut capped_best = f64::INFINITY;
+    let mut capped_peak = 0usize;
+    let mut capped_groups = 0usize;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (bidx, bstats) = NormRangeIndex::build_with(
+            &items,
+            params,
+            banded_params,
+            7,
+            BuildOpts { n_threads: Some(8), max_shard_bytes: Some(cap), ..BuildOpts::default() },
+        );
+        capped_best = capped_best.min(t0.elapsed().as_secs_f64());
+        capped_peak = bstats.peak_concurrent_run_bytes;
+        capped_groups = bstats.n_groups;
+        std::hint::black_box(bidx.n_items());
+    }
+    assert!(capped_peak <= banded_peak, "cap must not raise concurrent peak");
+    println!(
+        "banded {n_bands}-band 8t (capped {:.1} MiB): {capped_best:>8.3}s  {:>12.0} items/s  ({} groups, peak {:.1} MiB)",
+        cap as f64 / (1024.0 * 1024.0),
+        n as f64 / capped_best,
+        capped_groups,
+        capped_peak as f64 / (1024.0 * 1024.0)
+    );
+
     merge_bench_json_file(
         "BENCH_build.json",
         "index_build",
@@ -153,6 +221,18 @@ fn main() {
             ("shard_peak_bytes_1t".into(), Json::Num(per_thread[0].2 as f64)),
             ("shard_peak_bytes_4t".into(), Json::Num(per_thread[1].2 as f64)),
             ("shard_peak_bytes_8t".into(), Json::Num(per_thread[2].2 as f64)),
+            ("banded_n_bands".into(), Json::Num(n_bands as f64)),
+            ("banded_8t_items_per_sec".into(), Json::Num(n as f64 / banded_best)),
+            (
+                "banded_peak_concurrent_run_bytes".into(),
+                Json::Num(banded_peak as f64),
+            ),
+            ("banded_capped_items_per_sec".into(), Json::Num(n as f64 / capped_best)),
+            (
+                "banded_capped_peak_concurrent_run_bytes".into(),
+                Json::Num(capped_peak as f64),
+            ),
+            ("banded_capped_n_groups".into(), Json::Num(capped_groups as f64)),
         ],
     );
 }

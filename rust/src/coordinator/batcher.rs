@@ -22,7 +22,7 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::index::{AlshIndex, ScoredItem};
+use crate::index::{AnyIndex, ScoredItem};
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::transform::q_transform_into;
 
@@ -100,9 +100,11 @@ pub struct PjrtBatcher {
 
 /// Batch-hash `rows` with the fused pure-Rust matrix–matrix kernel:
 /// Q-transform each row, then one blocked pass over the stacked `[L·K ×
-/// (D+m)]` matrix. The scratch buffers are owned by the worker loop.
+/// (D+m)]` matrix (shared by both index kinds — the banded index hashes
+/// queries with the same fused family set as the flat one). The scratch
+/// buffers are owned by the worker loop.
 fn fused_hash_batch(
-    index: &AlshIndex,
+    index: &AnyIndex,
     rows: &[Vec<f32>],
     qx: &mut Vec<f32>,
     xs: &mut Vec<f32>,
@@ -346,6 +348,35 @@ mod tests {
                 (0..d).map(|_| rng.normal_f32() * s).collect()
             })
             .collect()
+    }
+
+    /// A banded engine behind the batcher: the fused fallback hashes once
+    /// per query and the banded probe consumes the same code rows, so
+    /// batched answers must equal the direct engine path.
+    #[test]
+    fn fused_fallback_serves_banded_engine() {
+        use crate::index::BandedParams;
+        let its = items(500, 10, 40);
+        let engine = Arc::new(MipsEngine::new_banded(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            41,
+        ));
+        let batcher = PjrtBatcher::spawn(
+            Arc::clone(&engine),
+            "definitely-not-an-artifacts-dir",
+            BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+        )
+        .expect("fused fallback must spawn for banded engines");
+        let handle = batcher.handle();
+        let mut rng = Rng::seed_from_u64(42);
+        for _ in 0..15 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            let batched = handle.query(q.clone(), 10).expect("batched query");
+            assert_eq!(batched, engine.query(&q, 10));
+        }
+        batcher.shutdown();
     }
 
     /// Without artifacts the batcher must still serve, via the fused CPU

@@ -4,29 +4,33 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::index::scratch::with_thread_scratch;
-use crate::index::{AlshIndex, AlshParams, BuildOpts, BuildStats, QueryScratch, ScoredItem};
+use crate::index::{
+    AlshIndex, AlshParams, AnyIndex, BandedBuildStats, BandedParams, BuildOpts, BuildStats,
+    NormRangeIndex, QueryScratch, ScoredItem,
+};
 
 use super::metrics::Metrics;
 
-/// A self-contained MIPS engine over one item collection.
+/// A self-contained MIPS engine over one item collection, serving either
+/// the flat [`AlshIndex`] or the norm-range banded [`NormRangeIndex`]
+/// behind [`AnyIndex`] dispatch.
 ///
 /// The allocation-free request path (`query_into` with a caller-owned
 /// [`QueryScratch`]) is used per-shard by the router and by the batcher;
 /// the PJRT-accelerated path hashes whole batches through the AOT
-/// artifact (see `batcher`) and re-enters here via `query_with_codes_into`.
+/// artifact (see `batcher`) and re-enters here via `query_with_codes_into`
+/// — both index kinds consume the same `[L·K]` code rows, since the
+/// banded index shares one hash family set across its bands.
 pub struct MipsEngine {
-    index: AlshIndex,
+    index: AnyIndex,
     metrics: Arc<Metrics>,
 }
 
 impl MipsEngine {
-    /// Build an engine with the default parallel sharded build pipeline
-    /// (all available cores).
+    /// Build a flat-index engine with the default parallel sharded build
+    /// pipeline (all available cores).
     pub fn new(items: &[Vec<f32>], params: AlshParams, seed: u64) -> Self {
-        Self {
-            index: AlshIndex::build(items, params, seed),
-            metrics: Arc::new(Metrics::new()),
-        }
+        Self::from_any(AnyIndex::Flat(AlshIndex::build(items, params, seed)))
     }
 
     /// Rebuild entry point with explicit build-pipeline options (worker
@@ -44,11 +48,41 @@ impl MipsEngine {
         (Self::from_index(index), stats)
     }
 
+    /// Build a norm-range banded engine (per-band U scaling, shared hash
+    /// families) with the default pipeline options.
+    pub fn new_banded(
+        items: &[Vec<f32>],
+        params: AlshParams,
+        banded: BandedParams,
+        seed: u64,
+    ) -> Self {
+        Self::from_any(AnyIndex::Banded(NormRangeIndex::build(items, params, banded, seed)))
+    }
+
+    /// [`MipsEngine::new_banded`] with explicit pipeline options (thread
+    /// count, block size, concurrent-band memory cap), returning the
+    /// banded build's observability stats.
+    pub fn new_banded_with(
+        items: &[Vec<f32>],
+        params: AlshParams,
+        banded: BandedParams,
+        seed: u64,
+        opts: BuildOpts,
+    ) -> (Self, BandedBuildStats) {
+        let (index, stats) = NormRangeIndex::build_with(items, params, banded, seed, opts);
+        (Self::from_any(AnyIndex::Banded(index)), stats)
+    }
+
     pub fn from_index(index: AlshIndex) -> Self {
+        Self::from_any(AnyIndex::Flat(index))
+    }
+
+    /// Wrap an already-built index of either kind.
+    pub fn from_any(index: AnyIndex) -> Self {
         Self { index, metrics: Arc::new(Metrics::new()) }
     }
 
-    pub fn index(&self) -> &AlshIndex {
+    pub fn index(&self) -> &AnyIndex {
         &self.index
     }
 
@@ -164,6 +198,38 @@ mod tests {
             let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
             assert_eq!(eng.query(&q, 5), base.query(&q, 5));
         }
+    }
+
+    #[test]
+    fn banded_engine_matches_direct_banded_index() {
+        let its = items(400, 8, 30);
+        let banded = BandedParams { n_bands: 4 };
+        let eng = MipsEngine::new_banded(&its, AlshParams::default(), banded, 31);
+        assert_eq!(eng.index().n_bands(), 4);
+        let (eng2, stats) = MipsEngine::new_banded_with(
+            &its,
+            AlshParams::default(),
+            banded,
+            31,
+            BuildOpts::threads(2),
+        );
+        assert_eq!(stats.n_bands, 4);
+        let idx = NormRangeIndex::build(&its, AlshParams::default(), banded, 31);
+        let mut rng = Rng::seed_from_u64(32);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            assert_eq!(eng.query(&q, 5), idx.query(&q, 5));
+            assert_eq!(eng2.query(&q, 5), idx.query(&q, 5));
+        }
+        // Code-fed re-entry (the batcher path): the banded index consumes
+        // the same [L·K] code rows as the flat one.
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.61).cos()).collect();
+        let qx = q_transform(&q, eng.index().params().m);
+        let mut codes = Vec::new();
+        for fam in eng.index().families() {
+            fam.hash_into(&qx, &mut codes);
+        }
+        assert_eq!(eng.query_with_codes(&q, &codes, 10), eng.query(&q, 10));
     }
 
     #[test]

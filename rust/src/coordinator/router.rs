@@ -3,7 +3,7 @@
 //! out, each shard answers locally, and the final top-k is a cheap merge.
 
 use crate::index::scratch::with_thread_scratch;
-use crate::index::{AlshParams, QueryScratch, ScoredItem};
+use crate::index::{AlshParams, BandedParams, QueryScratch, ScoredItem};
 
 use super::engine::MipsEngine;
 
@@ -17,9 +17,35 @@ pub struct ShardedRouter {
 
 impl ShardedRouter {
     /// Split `items` into `n_shards` contiguous shards and build one
-    /// engine per shard (distinct hash seeds per shard, as each "node"
-    /// maintains its own hash functions).
+    /// flat engine per shard (distinct hash seeds per shard, as each
+    /// "node" maintains its own hash functions).
     pub fn build(items: &[Vec<f32>], n_shards: usize, params: AlshParams, seed: u64) -> Self {
+        Self::build_impl(items, n_shards, |chunk, shard| {
+            MipsEngine::new(chunk, params, seed.wrapping_add(shard))
+        })
+    }
+
+    /// [`ShardedRouter::build`] with norm-range banded engines per shard:
+    /// each shard partitions *its* items into norm bands with per-band U
+    /// scaling (shard norm profiles differ, so per-shard banding is the
+    /// natural fit).
+    pub fn build_banded(
+        items: &[Vec<f32>],
+        n_shards: usize,
+        params: AlshParams,
+        banded: BandedParams,
+        seed: u64,
+    ) -> Self {
+        Self::build_impl(items, n_shards, |chunk, shard| {
+            MipsEngine::new_banded(chunk, params, banded, seed.wrapping_add(shard))
+        })
+    }
+
+    fn build_impl(
+        items: &[Vec<f32>],
+        n_shards: usize,
+        make_engine: impl Fn(&[Vec<f32>], u64) -> MipsEngine,
+    ) -> Self {
         assert!(n_shards >= 1 && !items.is_empty());
         let dim = items[0].len();
         let per = items.len().div_ceil(n_shards);
@@ -27,7 +53,7 @@ impl ShardedRouter {
         let mut offsets = Vec::new();
         for (s, chunk) in items.chunks(per).enumerate() {
             offsets.push((s * per) as u32);
-            shards.push(MipsEngine::new(chunk, params, seed.wrapping_add(s as u64)));
+            shards.push(make_engine(chunk, s as u64));
         }
         Self { shards, offsets, dim }
     }
@@ -135,6 +161,31 @@ mod tests {
             let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
             let via_scratch = router.query_into(&q, 7, &mut s).to_vec();
             assert_eq!(via_scratch, router.query(&q, 7));
+        }
+    }
+
+    #[test]
+    fn banded_router_scores_global_ids_exactly() {
+        let its = items(500, 8, 30);
+        let router = ShardedRouter::build_banded(
+            &its,
+            4,
+            AlshParams::default(),
+            BandedParams { n_bands: 3 },
+            31,
+        );
+        assert_eq!(router.n_shards(), 4);
+        assert_eq!(router.shard(0).index().n_bands(), 3);
+        let mut s = QueryScratch::new();
+        let mut rng = Rng::seed_from_u64(32);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            let out = router.query_into(&q, 10, &mut s).to_vec();
+            assert_eq!(out, router.query(&q, 10));
+            for hit in &out {
+                let want = dot(&q, &its[hit.id as usize]);
+                assert!((hit.score - want).abs() < 1e-6, "global id mis-translated");
+            }
         }
     }
 

@@ -15,7 +15,7 @@ pub mod synthetic;
 
 pub use puresvd::{pure_svd, LatentFactors};
 pub use ratings::RatingsMatrix;
-pub use synthetic::{SyntheticConfig, SyntheticRatings};
+pub use synthetic::{skewed_norm_clusters, SyntheticConfig, SyntheticRatings};
 
 /// A fully prepared MIPS evaluation dataset: PureSVD user (query) and item
 /// vectors.

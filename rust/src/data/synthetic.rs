@@ -141,6 +141,94 @@ impl AliasTable {
     }
 }
 
+/// Skewed-norm clustered MIPS workload — the shared corpus behind the
+/// norm-range banding acceptance test (`tests/banded_equivalence.rs`)
+/// and the `index_query` bench, kept in one place so the CI-ratcheted
+/// numbers and the assertions measure the *same* distribution:
+///
+/// * `n_clusters` clusters of 10 near-duplicate items (direction noise
+///   0.03) with cluster norms spread over [0.5, 1.0] — each returned
+///   query is the cluster's direction (unit norm, noise 0.01), so its
+///   exact top-10 is dominated by true strong matches whose norms span
+///   the bulk range;
+/// * bulk noise items with norms uniform in [0.3, 1.0], all in the
+///   first 24 of 32 coordinates;
+/// * a heavy tail (`n_total / 8` items, norms 1.8–2.0) in the
+///   orthogonal last-8-coordinate subspace: never gold (zero inner
+///   product with every query), but it owns the global max norm, so a
+///   flat single-U scale crushes every bulk item while a norm-range
+///   index with `B = 8` gives the heavy tail its own top band and
+///   re-scales each bulk band back toward U.
+///
+/// Returns `(items, queries)`; item order is shuffled so band
+/// membership is about norms, not id ranges.
+pub fn skewed_norm_clusters(
+    n_total: usize,
+    n_clusters: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    const DIM: usize = 32;
+    const DIM_BULK: usize = 24;
+    const CLUSTER: usize = 10;
+    let n_heavy = n_total / 8;
+    let n_bulk = n_total.saturating_sub(n_heavy + n_clusters * CLUSTER);
+
+    let l2 = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    let unit_bulk = |rng: &mut Rng| -> Vec<f32> {
+        let mut v = vec![0.0f32; DIM];
+        for x in v.iter_mut().take(DIM_BULK) {
+            *x = rng.normal_f32();
+        }
+        let n = l2(&v);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    };
+
+    let mut items: Vec<Vec<f32>> = Vec::with_capacity(n_total);
+    let mut queries: Vec<Vec<f32>> = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        let dir = unit_bulk(rng);
+        let norm_c = 0.5 + 0.5 * (c as f32 / (n_clusters - 1).max(1) as f32);
+        for _ in 0..CLUSTER {
+            let mut v: Vec<f32> = dir.iter().map(|x| x + 0.03 * rng.normal_f32()).collect();
+            for x in v.iter_mut().skip(DIM_BULK) {
+                *x = 0.0;
+            }
+            let n = l2(&v);
+            let target = norm_c * (1.0 + 0.02 * (rng.f32() - 0.5));
+            v.iter_mut().for_each(|x| *x *= target / n);
+            items.push(v);
+        }
+        let mut q: Vec<f32> = dir.iter().map(|x| x + 0.01 * rng.normal_f32()).collect();
+        for x in q.iter_mut().skip(DIM_BULK) {
+            *x = 0.0;
+        }
+        let n = l2(&q);
+        q.iter_mut().for_each(|x| *x /= n);
+        queries.push(q);
+    }
+    for _ in 0..n_bulk {
+        let mut v = unit_bulk(rng);
+        let target = 0.3 + 0.7 * rng.f32();
+        v.iter_mut().for_each(|x| *x *= target);
+        items.push(v);
+    }
+    for _ in 0..n_heavy {
+        let mut v = vec![0.0f32; DIM];
+        for x in v.iter_mut().skip(DIM_BULK) {
+            *x = rng.normal_f32();
+        }
+        let n = l2(&v);
+        let target = 1.8 + 0.2 * rng.f32();
+        v.iter_mut().for_each(|x| *x *= target / n);
+        items.push(v);
+    }
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    rng.shuffle(&mut order);
+    let items = order.into_iter().map(|i| std::mem::take(&mut items[i])).collect();
+    (items, queries)
+}
+
 /// Generate a synthetic ratings matrix per `config`, fully determined by
 /// `seed`.
 pub fn generate(config: &SyntheticConfig, seed: u64) -> SyntheticRatings {

@@ -2,6 +2,24 @@
 
 use crate::transform::dot;
 
+/// Offer `(score, id)` to a descending-sorted top-`t` buffer — the one
+/// insertion rule both the single-query and batch gold scans share, so
+/// they cannot diverge (ties keep the first-seen id).
+#[inline]
+fn offer(top: &mut Vec<(f32, u32)>, t: usize, s: f32, id: u32) {
+    if top.len() < t {
+        top.push((s, id));
+        top.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    } else if s > top[t - 1].0 {
+        top[t - 1] = (s, id);
+        let mut j = t - 1;
+        while j > 0 && top[j].0 > top[j - 1].0 {
+            top.swap(j, j - 1);
+            j -= 1;
+        }
+    }
+}
+
 /// The ids of the `t` items with the largest inner product with `query`,
 /// in descending score order (full scan; this defines ground truth).
 pub fn gold_top_t(items: &[Vec<f32>], query: &[f32], t: usize) -> Vec<u32> {
@@ -12,20 +30,31 @@ pub fn gold_top_t(items: &[Vec<f32>], query: &[f32], t: usize) -> Vec<u32> {
     // Max-heap by (-score) via a small sorted buffer: t is tiny (<= 10).
     let mut top: Vec<(f32, u32)> = Vec::with_capacity(t + 1);
     for (i, item) in items.iter().enumerate() {
-        let s = dot(item, query);
-        if top.len() < t {
-            top.push((s, i as u32));
-            top.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        } else if s > top[t - 1].0 {
-            top[t - 1] = (s, i as u32);
-            let mut j = t - 1;
-            while j > 0 && top[j].0 > top[j - 1].0 {
-                top.swap(j, j - 1);
-                j -= 1;
-            }
-        }
+        offer(&mut top, t, dot(item, query), i as u32);
     }
     top.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Batch gold scan (the offline-eval batch API): exact top-`t` ids for
+/// every query in **one pass over the corpus** — each item row is loaded
+/// once and scored against all queries, instead of `Q` full scans
+/// re-streaming the item matrix. Results are identical to per-query
+/// [`gold_top_t`] (same insertion rule, same f32 `dot`).
+pub fn gold_top_t_batch(items: &[Vec<f32>], queries: &[Vec<f32>], t: usize) -> Vec<Vec<u32>> {
+    let t = t.min(items.len());
+    if t == 0 || queries.is_empty() {
+        return vec![Vec::new(); queries.len()];
+    }
+    let mut tops: Vec<Vec<(f32, u32)>> =
+        (0..queries.len()).map(|_| Vec::with_capacity(t + 1)).collect();
+    for (i, item) in items.iter().enumerate() {
+        for (q, top) in queries.iter().zip(tops.iter_mut()) {
+            offer(top, t, dot(item, q), i as u32);
+        }
+    }
+    tops.into_iter()
+        .map(|top| top.into_iter().map(|(_, i)| i).collect())
+        .collect()
 }
 
 #[cfg(test)]
@@ -69,5 +98,27 @@ mod tests {
     fn t_zero() {
         let items = vec![vec![1.0f32]];
         assert!(gold_top_t(&items, &[1.0], 0).is_empty());
+    }
+
+    #[test]
+    fn batch_matches_per_query_scan() {
+        let mut rng = Rng::seed_from_u64(5);
+        let items: Vec<Vec<f32>> = (0..300)
+            .map(|_| (0..10).map(|_| rng.normal_f32() * 0.5).collect())
+            .collect();
+        let queries: Vec<Vec<f32>> = (0..17)
+            .map(|_| (0..10).map(|_| rng.normal_f32()).collect())
+            .collect();
+        for t in [1usize, 5, 10, 500] {
+            let batch = gold_top_t_batch(&items, &queries, t);
+            assert_eq!(batch.len(), queries.len());
+            for (q, got) in queries.iter().zip(&batch) {
+                assert_eq!(got, &gold_top_t(&items, q, t), "t={t}");
+            }
+        }
+        // Degenerate shapes.
+        assert!(gold_top_t_batch(&items, &[], 10).is_empty());
+        let empty_t = gold_top_t_batch(&items, &queries, 0);
+        assert!(empty_t.iter().all(|v| v.is_empty()));
     }
 }

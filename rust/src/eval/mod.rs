@@ -6,6 +6,6 @@ pub mod gold;
 pub mod metrics;
 pub mod pr;
 
-pub use gold::gold_top_t;
+pub use gold::{gold_top_t, gold_top_t_batch};
 pub use metrics::{ndcg_at_k, spearman};
 pub use pr::{average_curves, pr_curve, PrCurve};

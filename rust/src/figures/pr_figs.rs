@@ -9,7 +9,7 @@
 use crate::config::{DatasetConfig, PrExperimentConfig};
 use crate::util::Rng;
 use crate::data::{generate_dataset, Dataset};
-use crate::eval::{average_curves, gold_top_t, pr_curve, PrCurve};
+use crate::eval::{average_curves, gold_top_t_batch, pr_curve, PrCurve};
 use crate::index::collision::rank_by_counts;
 use crate::index::{CollisionRanker, Scheme};
 
@@ -124,12 +124,12 @@ pub fn run_pr_on_dataset(
     let mut user_ids: Vec<usize> = (0..users.len()).collect();
     rng.shuffle(&mut user_ids);
     user_ids.truncate(cfg.n_users.min(users.len()));
+    let eval_users: Vec<Vec<f32>> = user_ids.iter().map(|&u| users[u].clone()).collect();
 
-    // Gold top-T per user (T = t_max prefix covers all smaller T).
-    let gold: Vec<Vec<u32>> = user_ids
-        .iter()
-        .map(|&u| gold_top_t(items, &users[u], t_max))
-        .collect();
+    // Gold top-T per user (T = t_max prefix covers all smaller T), via
+    // the one-pass batch gold scan: the item matrix streams once for the
+    // whole user sample instead of once per user.
+    let gold: Vec<Vec<u32>> = gold_top_t_batch(items, &eval_users, t_max);
 
     // Bulk item hashing goes through the compiled L1 artifact when
     // available (EXPERIMENTS.md §Perf); scalar fallback otherwise.
@@ -153,8 +153,8 @@ pub fn run_pr_on_dataset(
             cfg.k_values.iter().copied().enumerate().collect();
         k_sorted.sort_unstable_by_key(|&(_, k)| k);
         let ks: Vec<usize> = k_sorted.iter().map(|&(_, k)| k).collect();
-        for (ui, &u) in user_ids.iter().enumerate() {
-            let qc = ranker.query_codes(&users[u]);
+        for (ui, user) in eval_users.iter().enumerate() {
+            let qc = ranker.query_codes(user);
             let swept = ranker.matches_at_ks(&qc, &ks);
             for (si, &(ki, k)) in k_sorted.iter().enumerate() {
                 let ids = rank_by_counts(&swept[si], k.min(ranker.k()));

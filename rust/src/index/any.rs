@@ -1,0 +1,292 @@
+//! Flat-vs-banded index dispatch: one enum the coordinator (engine,
+//! batcher, router, server) and the offline tools serve through, so a
+//! deployment picks the flat [`AlshIndex`] or the norm-range partitioned
+//! [`NormRangeIndex`] per corpus without the serving stack caring.
+//!
+//! Enum (not trait-object) dispatch: the query surface borrows out of the
+//! caller's [`QueryScratch`] with lifetimes a dyn-safe trait would
+//! obscure, the match arms inline, and there are exactly two variants.
+
+use super::banded::NormRangeIndex;
+use super::core::{AlshIndex, AlshParams, ScoredItem};
+use super::frozen::TableStats;
+use super::scratch::{with_thread_scratch, QueryScratch};
+use crate::lsh::{FusedHasher, L2LshFamily};
+
+/// A flat or norm-range banded ALSH index behind one serving surface.
+pub enum AnyIndex {
+    /// Single table set, one global U scale.
+    Flat(AlshIndex),
+    /// B norm bands with per-band U scaling, shared hash families.
+    Banded(NormRangeIndex),
+}
+
+impl From<AlshIndex> for AnyIndex {
+    fn from(index: AlshIndex) -> Self {
+        AnyIndex::Flat(index)
+    }
+}
+
+impl From<NormRangeIndex> for AnyIndex {
+    fn from(index: NormRangeIndex) -> Self {
+        AnyIndex::Banded(index)
+    }
+}
+
+impl AnyIndex {
+    /// The flat index, if this is one.
+    pub fn as_flat(&self) -> Option<&AlshIndex> {
+        match self {
+            AnyIndex::Flat(i) => Some(i),
+            AnyIndex::Banded(_) => None,
+        }
+    }
+
+    /// The banded index, if this is one.
+    pub fn as_banded(&self) -> Option<&NormRangeIndex> {
+        match self {
+            AnyIndex::Flat(_) => None,
+            AnyIndex::Banded(i) => Some(i),
+        }
+    }
+
+    pub fn params(&self) -> &AlshParams {
+        match self {
+            AnyIndex::Flat(i) => i.params(),
+            AnyIndex::Banded(i) => i.params(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            AnyIndex::Flat(i) => i.dim(),
+            AnyIndex::Banded(i) => i.dim(),
+        }
+    }
+
+    pub fn n_items(&self) -> usize {
+        match self {
+            AnyIndex::Flat(i) => i.n_items(),
+            AnyIndex::Banded(i) => i.n_items(),
+        }
+    }
+
+    /// Norm bands served (1 for the flat index).
+    pub fn n_bands(&self) -> usize {
+        match self {
+            AnyIndex::Flat(_) => 1,
+            AnyIndex::Banded(i) => i.n_bands(),
+        }
+    }
+
+    /// The shared hash families (PJRT artifact inputs, code-fed paths).
+    pub fn families(&self) -> &[L2LshFamily] {
+        match self {
+            AnyIndex::Flat(i) => i.families(),
+            AnyIndex::Banded(i) => i.families(),
+        }
+    }
+
+    /// The fused multi-table hasher (batcher fallback, benches).
+    pub fn hasher(&self) -> &FusedHasher {
+        match self {
+            AnyIndex::Flat(i) => i.hasher(),
+            AnyIndex::Banded(i) => i.hasher(),
+        }
+    }
+
+    /// Aggregate table statistics (summed across bands when banded).
+    pub fn table_stats(&self) -> TableStats {
+        match self {
+            AnyIndex::Flat(i) => i.table_stats(),
+            AnyIndex::Banded(i) => i.table_stats(),
+        }
+    }
+
+    /// A scratch pre-sized for this index.
+    pub fn scratch(&self) -> QueryScratch {
+        match self {
+            AnyIndex::Flat(i) => i.scratch(),
+            AnyIndex::Banded(i) => i.scratch(),
+        }
+    }
+
+    /// Allocation-free candidate retrieval.
+    pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
+        match self {
+            AnyIndex::Flat(i) => i.candidates_into(query, s),
+            AnyIndex::Banded(i) => i.candidates_into(query, s),
+        }
+    }
+
+    /// Allocation-free candidate retrieval from externally computed
+    /// `[L·K]` codes (the batcher/PJRT re-entry).
+    pub fn candidates_from_codes_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        match self {
+            AnyIndex::Flat(i) => i.candidates_from_codes_into(codes_flat, s),
+            AnyIndex::Banded(i) => i.candidates_from_codes_into(codes_flat, s),
+        }
+    }
+
+    /// Allocation-free exact rerank of `s.cands`.
+    pub fn rerank_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        match self {
+            AnyIndex::Flat(i) => i.rerank_into(query, k, s),
+            AnyIndex::Banded(i) => i.rerank_into(query, k, s),
+        }
+    }
+
+    /// Full allocation-free query: probe + exact rerank.
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        match self {
+            AnyIndex::Flat(i) => i.query_into(query, k, s),
+            AnyIndex::Banded(i) => i.query_into(query, k, s),
+        }
+    }
+
+    /// Allocation-free multi-probe query.
+    pub fn query_multiprobe_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        n_probes: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        match self {
+            AnyIndex::Flat(i) => i.query_multiprobe_into(query, top_k, n_probes, s),
+            AnyIndex::Banded(i) => i.query_multiprobe_into(query, top_k, n_probes, s),
+        }
+    }
+
+    /// Batch query path for offline evaluation (matrix–matrix hashing).
+    pub fn query_batch_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+    ) {
+        match self {
+            AnyIndex::Flat(i) => i.query_batch_into(queries, k, s, out),
+            AnyIndex::Banded(i) => i.query_batch_into(queries, k, s, out),
+        }
+    }
+
+    /// [`AnyIndex::query_batch_into`] that also records per-query
+    /// deduplicated candidate counts.
+    pub fn query_batch_counts_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+        counts: &mut Vec<usize>,
+    ) {
+        match self {
+            AnyIndex::Flat(i) => i.query_batch_counts_into(queries, k, s, out, counts),
+            AnyIndex::Banded(i) => i.query_batch_counts_into(queries, k, s, out, counts),
+        }
+    }
+
+    /// Allocating convenience query (thread-local scratch).
+    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
+    }
+
+    /// Allocating convenience candidates (thread-local scratch).
+    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_into(query, s).to_vec())
+    }
+
+    /// Serialize to `path` (persist v3; flat and banded kinds share the
+    /// container format — see `index::persist`).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        match self {
+            AnyIndex::Flat(i) => i.save(path),
+            AnyIndex::Banded(i) => i.save(path),
+        }
+    }
+
+    /// Load either kind from `path` (see `index::persist::load_any`).
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        super::persist::load_any(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::banded::BandedParams;
+    use crate::util::Rng;
+
+    fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let s = 0.1 + 1.9 * rng.f32();
+                (0..d).map(|_| rng.normal_f32() * s).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_agrees_with_direct_paths() {
+        let its = items(300, 8, 1);
+        let flat = AlshIndex::build(&its, AlshParams::default(), 2);
+        let banded = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 3 },
+            2,
+        );
+        let any_flat: AnyIndex = AlshIndex::build(&its, AlshParams::default(), 2).into();
+        let any_banded: AnyIndex = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 3 },
+            2,
+        )
+        .into();
+        assert_eq!(any_flat.n_bands(), 1);
+        assert_eq!(any_banded.n_bands(), 3);
+        assert!(any_flat.as_flat().is_some() && any_flat.as_banded().is_none());
+        assert!(any_banded.as_banded().is_some());
+        let mut rng = Rng::seed_from_u64(3);
+        let mut s = any_flat.scratch();
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            assert_eq!(any_flat.query(&q, 5), flat.query(&q, 5));
+            assert_eq!(any_banded.query(&q, 5), banded.query(&q, 5));
+            assert_eq!(any_flat.query_into(&q, 5, &mut s).to_vec(), flat.query(&q, 5));
+            assert_eq!(
+                any_banded.query_into(&q, 5, &mut s).to_vec(),
+                banded.query(&q, 5)
+            );
+            assert_eq!(any_banded.candidates(&q), banded.candidates(&q));
+        }
+        assert_eq!(any_flat.table_stats(), flat.table_stats());
+        assert_eq!(any_banded.table_stats(), banded.table_stats());
+        // Batch dispatch.
+        let queries: Vec<Vec<f32>> =
+            (0..7).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let mut out = Vec::new();
+        let mut counts = Vec::new();
+        any_banded.query_batch_counts_into(&queries, 5, &mut s, &mut out, &mut counts);
+        assert_eq!(out, banded.query_batch(&queries, 5));
+        assert_eq!(counts.len(), queries.len());
+    }
+}

@@ -1,0 +1,974 @@
+//! Norm-range partitioned ALSH index (Norm-Ranging LSH, Yan et al. 2018):
+//! per-band U scaling with shared-hash banded queries.
+//!
+//! # Why bands: the per-band U math
+//!
+//! The flat index pays for the whole corpus with a single Eq. 11 scale
+//! `s = U / max‖x‖`. Items whose norms sit far below the max are crushed
+//! toward the origin: after scaling `‖s·x‖ ≈ 0`, so by Eq. 17 the
+//! transformed distance to *any* query collapses to the constant
+//! `‖Q(q) − P(x)‖² ≈ 1 + m/4` — the query's angle to the item stops
+//! mattering. At that constant mid-range distance the index can neither
+//! *find* a crushed item when it is the true match (its collision
+//! probability is no higher than anyone else's → recall loss) nor
+//! *reject* it when it is noise (its collision probability is no lower →
+//! a floor on candidates). Equivalently, the effective approximation
+//! ratio c of Theorem 2 degrades, so the only way the flat index keeps
+//! recall on skewed-norm data is to run an unselective (low-K) operating
+//! point — and eat enormous candidate sets.
+//!
+//! [`NormRangeIndex`] splits the items into B norm bands (equal-count
+//! split over the sorted norms) and fits an **independent** `U`-scale per
+//! band: band b is scaled by `s_b = U / max_{x ∈ band b}‖x‖`. Within each
+//! band the norm spread is a factor-of-B narrower, so after scaling every
+//! band's items sit near the full (0, U] range — the `−2 s·qᵀx` term in
+//! Eq. 17 is restored and true matches in *every* norm range hash close
+//! to their queries again. That lets the banded index run a **more
+//! selective K at equal recall@k**, which is where the measured win
+//! lives: candidate sets (and the rerank bill, our dominant per-query
+//! cost) shrink by large factors at matched recall — see
+//! `tests/banded_equivalence.rs` and the banded-vs-flat section of
+//! `BENCH_query.json`. Each band feeds the ordinary sharded streaming
+//! build ([`super::build`]) with its own fill closure, producing B
+//! independent frozen-CSR table sets.
+//!
+//! # The shared-query-codes trick
+//!
+//! The query transform `Q(q) = [q/‖q‖; ½; …; ½]` (Eq. 13) does **not**
+//! depend on the data-side scale, and all bands share one
+//! [`FusedHasher`] family set (same seed-derived projections as the flat
+//! index). So a query is Q-transformed and hashed **once** — one fused
+//! matvec for all `L·K` codes — and the same code block is replayed
+//! against every band's CSR tables. Per-band postings are band-local ids;
+//! they are translated to global ids through the band's sorted id map as
+//! they stream into the **shared** stamp-dedup scratch, and one global
+//! exact rerank (the same blocked/SIMD kernel as the flat index,
+//! [`super::rerank`]) produces the top-k. Query cost is therefore
+//! `1× hash + B× probe + 1× rerank` — and the probes touch *smaller*
+//! buckets, so the rerank pool (the dominant per-query cost) shrinks.
+//!
+//! # Equivalences
+//!
+//! With `B = 1` the single band contains every item in ascending id order
+//! and its fitted scale equals the flat scale bitwise, so the band's
+//! tables — and every candidate stream and top-k across the plain,
+//! code-fed, and multi-probe paths — are **byte-identical** to the flat
+//! [`super::AlshIndex`] (property-tested in `tests/banded_equivalence.rs`).
+//! With any B, the top band's scale also equals the flat scale (it
+//! contains the global max norm), so top-band retrieval is exactly the
+//! flat retrieval restricted to that band — which is why banded recall on
+//! large-norm winners can only match or beat flat recall at equal L·K.
+//!
+//! # Build memory
+//!
+//! B bands multiply the number of table sets (B·L) but each band holds
+//! only its slice of the items, so total hash work stays ~n·L·K. Bands
+//! build in parallel by default; because every concurrent
+//! `build_tables` call holds its transient postings runs until its merge,
+//! [`BuildOpts::max_shard_bytes`] bounds the *concurrent* run bytes —
+//! bands are greedily grouped under the cap and the groups run in
+//! sequence (see [`BandedBuildStats::peak_concurrent_run_bytes`]).
+
+use crate::util::Rng;
+
+use super::build::{build_tables, run_bytes_estimate, BuildOpts, BuildStats};
+use super::core::{run_query_batch, AlshParams, ScoredItem};
+use super::frozen::{FrozenTable, TableStats};
+use super::scratch::{with_thread_scratch, DedupSink, QueryScratch};
+use crate::lsh::{FusedHasher, L2LshFamily};
+use crate::transform::{l2_norm, q_transform_into, scale_p_transform_slice, UScale};
+
+/// Parameters of the norm-range partition.
+#[derive(Clone, Copy, Debug)]
+pub struct BandedParams {
+    /// Number of norm bands B (equal-count split over sorted norms).
+    /// Clamped to `[1, n_items]` at build time; `B = 1` reproduces the
+    /// flat index byte-for-byte.
+    pub n_bands: usize,
+}
+
+impl Default for BandedParams {
+    fn default() -> Self {
+        // 4 bands captures most of the candidate-set win on skewed-norm
+        // corpora (see BENCH_query.json) while keeping B× table-set
+        // metadata negligible.
+        Self { n_bands: 4 }
+    }
+}
+
+/// Build observability for a banded build (per band + concurrency).
+#[derive(Clone, Debug, Default)]
+pub struct BandedBuildStats {
+    /// Bands actually built (B after clamping).
+    pub n_bands: usize,
+    /// Per-band pipeline stats, band 0 (smallest norms) first.
+    pub per_band: Vec<BuildStats>,
+    /// Largest estimated transient postings-run bytes held by any set of
+    /// concurrently-built bands (a group is further split into waves of
+    /// at most `n_threads` bands) — what
+    /// [`BuildOpts::max_shard_bytes`] caps.
+    pub peak_concurrent_run_bytes: usize,
+    /// Sequential band groups the memory cap forced (1 = fully parallel).
+    pub n_groups: usize,
+}
+
+/// One norm band: its id slice, per-band scale, and frozen tables.
+pub struct Band {
+    /// Eq. 11 scale fitted to *this band's* max norm.
+    pub(crate) scale: UScale,
+    /// Smallest item norm in the band (diagnostics / persistence).
+    pub(crate) min_norm: f32,
+    /// Largest item norm in the band (= `scale.max_norm`).
+    pub(crate) max_norm: f32,
+    /// Global ids of the band's items, strictly ascending. Table postings
+    /// are indices into this map (band-local ids).
+    pub(crate) ids: Vec<u32>,
+    /// The band's L frozen CSR tables over band-local ids.
+    pub(crate) tables: Vec<FrozenTable>,
+}
+
+impl Band {
+    /// Items in the band.
+    pub fn n_items(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// The band's fitted Eq. 11 scale.
+    pub fn scale(&self) -> &UScale {
+        &self.scale
+    }
+
+    /// `(min, max)` item norm in the band.
+    pub fn norm_range(&self) -> (f32, f32) {
+        (self.min_norm, self.max_norm)
+    }
+
+    /// Global ids of the band's items, ascending (postings map).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// The band's frozen CSR tables (persistence / diagnostics).
+    pub fn tables(&self) -> &[FrozenTable] {
+        &self.tables
+    }
+
+    /// Aggregate table statistics for this band.
+    pub fn table_stats(&self) -> TableStats {
+        TableStats::from_tables(&self.tables)
+    }
+}
+
+/// Norm-range partitioned ALSH index: B bands with per-band U scaling,
+/// one shared hash family set, global exact rerank. See the module docs
+/// for the math and the shared-query-codes design.
+pub struct NormRangeIndex {
+    params: AlshParams,
+    banded: BandedParams,
+    /// One K-wide family per table — the *same* sampling as the flat
+    /// index at equal seed (retained for persistence and code-fed paths).
+    families: Vec<L2LshFamily>,
+    /// The families stacked into one `[L·K × (D+m)]` matrix, shared by
+    /// every band.
+    fused: FusedHasher,
+    /// Bands in ascending-norm order.
+    bands: Vec<Band>,
+    /// Original (unscaled) item vectors, row-major by *global* id — the
+    /// global rerank pool.
+    items_flat: Vec<f32>,
+    dim: usize,
+    n_items: usize,
+}
+
+impl NormRangeIndex {
+    /// Build over `items` with the default pipeline options.
+    pub fn build(
+        items: &[Vec<f32>],
+        params: AlshParams,
+        banded: BandedParams,
+        seed: u64,
+    ) -> Self {
+        Self::build_with(items, params, banded, seed, BuildOpts::default()).0
+    }
+
+    /// [`NormRangeIndex::build`] with explicit pipeline options. The
+    /// built index is byte-identical for every `opts` choice (each band
+    /// goes through the thread/block-invariant [`super::build`] pipeline;
+    /// band grouping only changes *when* bands build, never what they
+    /// contain).
+    pub fn build_with(
+        items: &[Vec<f32>],
+        params: AlshParams,
+        banded: BandedParams,
+        seed: u64,
+        opts: BuildOpts,
+    ) -> (Self, BandedBuildStats) {
+        assert!(!items.is_empty(), "empty item collection");
+        let dim = items[0].len();
+        assert!(items.iter().all(|v| v.len() == dim), "ragged item dims");
+        let n = items.len();
+        let b = banded.n_bands.max(1).min(n);
+
+        // Same family sampling as the flat index at equal seed: the
+        // query-side codes are interchangeable between the two.
+        let mut rng = Rng::seed_from_u64(seed);
+        let families: Vec<L2LshFamily> = (0..params.n_tables)
+            .map(|_| L2LshFamily::sample(dim + params.m, params.k_per_table, params.r, &mut rng))
+            .collect();
+        let fused = FusedHasher::from_families(&families);
+
+        // Equal-count split over sorted norms; ties broken by id so the
+        // partition is deterministic. Within each band, ids are restored
+        // to ascending order so every bucket's postings stream out
+        // id-ascending exactly as the flat build's do.
+        let norms: Vec<f32> = items.iter().map(|v| l2_norm(v)).collect();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            norms[a as usize]
+                .partial_cmp(&norms[b as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut band_ids: Vec<Vec<u32>> = Vec::with_capacity(b);
+        for band_idx in 0..b {
+            let lo = band_idx * n / b;
+            let hi = (band_idx + 1) * n / b;
+            let mut ids = order[lo..hi].to_vec();
+            ids.sort_unstable();
+            band_ids.push(ids);
+        }
+
+        // Greedy band grouping under the concurrent-run-memory cap: a
+        // group's bands build in parallel; groups run in sequence.
+        let cap = opts.max_shard_bytes.unwrap_or(usize::MAX).max(1);
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cur_bytes = 0usize;
+        for (band_idx, ids) in band_ids.iter().enumerate() {
+            let est = run_bytes_estimate(ids.len(), params.n_tables);
+            if !cur.is_empty() && cur_bytes.saturating_add(est) > cap {
+                groups.push(std::mem::take(&mut cur));
+                cur_bytes = 0;
+            }
+            cur.push(band_idx);
+            cur_bytes += est;
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+
+        // Per-band build: each band runs the ordinary sharded pipeline
+        // with its own scale in the fill closure. Each memory group runs
+        // in waves of at most `total_threads` concurrent bands (so
+        // `BuildOpts::single_threaded()` really is sequential), and the
+        // worker threads are split across a wave's bands so a wave never
+        // oversubscribes.
+        let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        let total_threads = opts.n_threads.unwrap_or(hw).max(1);
+        // Per-band scale from the norms already computed for the split —
+        // the same `u / max` rule as `UScale::fit`, without re-scanning
+        // the corpus (max over a band's precomputed norms is bitwise
+        // equal to `fit`'s fold, which is what the B=1 flat byte-identity
+        // rests on).
+        assert!(params.u > 0.0 && params.u < 1.0, "U must be in (0,1), got {}", params.u);
+        let band_minmax: Vec<(f32, f32)> = band_ids
+            .iter()
+            .map(|ids| {
+                let mut min_norm = f32::MAX;
+                let mut max_norm = 0.0f32;
+                for &id in ids {
+                    let nv = norms[id as usize];
+                    min_norm = min_norm.min(nv);
+                    max_norm = max_norm.max(nv);
+                }
+                (min_norm, max_norm)
+            })
+            .collect();
+        let scales: Vec<UScale> = band_minmax
+            .iter()
+            .map(|&(_, max_norm)| UScale {
+                u: params.u,
+                factor: if max_norm > 0.0 { params.u / max_norm } else { 1.0 },
+                max_norm,
+            })
+            .collect();
+        let m = params.m;
+        let build_band = |band_idx: usize, band_opts: &BuildOpts| {
+            let ids = &band_ids[band_idx];
+            let factor = scales[band_idx].factor;
+            build_tables(ids.len(), &fused, band_opts, |local, row| {
+                scale_p_transform_slice(&items[ids[local] as usize], factor, m, row)
+            })
+        };
+        let mut built: Vec<Option<(Vec<FrozenTable>, BuildStats)>> =
+            (0..b).map(|_| None).collect();
+        let mut peak_concurrent_run_bytes = 0usize;
+        for group in &groups {
+            let concurrency = group.len().min(total_threads);
+            let band_opts = BuildOpts {
+                n_threads: Some((total_threads / concurrency).max(1)),
+                ..opts
+            };
+            for wave in group.chunks(concurrency) {
+                let wave_bytes: usize = wave
+                    .iter()
+                    .map(|&i| run_bytes_estimate(band_ids[i].len(), params.n_tables))
+                    .sum();
+                peak_concurrent_run_bytes = peak_concurrent_run_bytes.max(wave_bytes);
+                if wave.len() == 1 {
+                    built[wave[0]] = Some(build_band(wave[0], &band_opts));
+                } else {
+                    let build_ref = &build_band;
+                    let mut results: Vec<(usize, (Vec<FrozenTable>, BuildStats))> =
+                        Vec::with_capacity(wave.len());
+                    std::thread::scope(|sc| {
+                        let handles: Vec<_> = wave
+                            .iter()
+                            .map(|&i| {
+                                let opts_i = band_opts;
+                                sc.spawn(move || (i, build_ref(i, &opts_i)))
+                            })
+                            .collect();
+                        for h in handles {
+                            results.push(h.join().expect("band build worker panicked"));
+                        }
+                    });
+                    for (i, r) in results {
+                        built[i] = Some(r);
+                    }
+                }
+            }
+        }
+
+        let mut bands: Vec<Band> = Vec::with_capacity(b);
+        let mut per_band: Vec<BuildStats> = Vec::with_capacity(b);
+        for (band_idx, (ids, scale)) in band_ids.into_iter().zip(scales).enumerate() {
+            let (tables, stats) = built[band_idx].take().expect("band not built");
+            per_band.push(stats);
+            let (min_norm, max_norm) = band_minmax[band_idx];
+            bands.push(Band { scale, min_norm, max_norm, ids, tables });
+        }
+
+        let mut items_flat = Vec::with_capacity(n * dim);
+        for item in items {
+            items_flat.extend_from_slice(item);
+        }
+        let index = Self {
+            params,
+            banded: BandedParams { n_bands: b },
+            families,
+            fused,
+            bands,
+            items_flat,
+            dim,
+            n_items: n,
+        };
+        let stats = BandedBuildStats {
+            n_bands: b,
+            per_band,
+            peak_concurrent_run_bytes,
+            n_groups: groups.len(),
+        };
+        (index, stats)
+    }
+
+    pub fn params(&self) -> &AlshParams {
+        &self.params
+    }
+
+    pub fn banded_params(&self) -> &BandedParams {
+        &self.banded
+    }
+
+    /// Number of norm bands B.
+    pub fn n_bands(&self) -> usize {
+        self.bands.len()
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The shared hash families (persistence / code-fed paths).
+    pub fn families(&self) -> &[L2LshFamily] {
+        &self.families
+    }
+
+    /// The shared fused multi-table hasher.
+    pub fn hasher(&self) -> &FusedHasher {
+        &self.fused
+    }
+
+    /// The bands, ascending-norm order.
+    pub fn bands(&self) -> &[Band] {
+        &self.bands
+    }
+
+    /// Item vector by global id.
+    pub fn item(&self, id: u32) -> &[f32] {
+        let i = id as usize;
+        &self.items_flat[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Aggregate table statistics across every band.
+    pub fn table_stats(&self) -> TableStats {
+        self.bands
+            .iter()
+            .map(Band::table_stats)
+            .fold(TableStats::default(), TableStats::merge)
+    }
+
+    /// Per-band aggregate table statistics, band 0 (smallest norms) first.
+    pub fn band_table_stats(&self) -> Vec<TableStats> {
+        self.bands.iter().map(Band::table_stats).collect()
+    }
+
+    /// A scratch pre-sized for this index (same shape rules as
+    /// [`super::AlshIndex::scratch`]).
+    pub fn scratch(&self) -> QueryScratch {
+        let mut s = QueryScratch::new();
+        s.reserve(self.n_items, self.fused.n_codes(), self.dim + self.params.m);
+        s
+    }
+
+    /// The one banded probe loop: replay one `[L·K]` code row against
+    /// every band's tables, translating band-local postings to global ids
+    /// into the shared dedup sink. Band-major so each band's tables
+    /// stream contiguously; with B = 1 this is exactly the flat probe
+    /// order. When `counts` is given, the per-band deduplicated candidate
+    /// counts are appended (bands are disjoint in global id space, so the
+    /// attribution is exact). Every code-driven probe path — plain,
+    /// code-fed, batch, per-band counting — goes through here.
+    fn replay_codes(
+        &self,
+        sink: &mut DedupSink<'_>,
+        codes: &[i32],
+        mut counts: Option<&mut Vec<usize>>,
+    ) {
+        let k = self.params.k_per_table;
+        for band in &self.bands {
+            let before = sink.len();
+            for (t, table) in band.tables.iter().enumerate() {
+                sink.extend_mapped(table.get(&codes[t * k..(t + 1) * k]), &band.ids);
+            }
+            if let Some(c) = counts.as_deref_mut() {
+                c.push(sink.len() - before);
+            }
+        }
+    }
+
+    /// Probe every band with the codes in `s.codes` (see
+    /// [`Self::replay_codes`]).
+    fn probe_scratch_codes(&self, s: &mut QueryScratch) {
+        let (mut sink, codes, _, _) = s.dedup(self.n_items);
+        self.replay_codes(&mut sink, codes, None);
+    }
+
+    /// Allocation-free candidate retrieval: hash once, replay the codes
+    /// against every band, dedup into first-seen global-id order.
+    pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        q_transform_into(query, self.params.m, &mut s.qx);
+        s.hash_codes(&self.fused);
+        self.probe_scratch_codes(s);
+        &s.cands
+    }
+
+    /// Candidate retrieval from externally computed per-table codes (the
+    /// batcher/PJRT re-entry; codes arrive as one `[L·K]` row).
+    pub fn candidates_from_codes_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        assert_eq!(
+            codes_flat.len(),
+            self.params.k_per_table * self.params.n_tables
+        );
+        let (mut sink, _, _, _) = s.dedup(self.n_items);
+        self.replay_codes(&mut sink, codes_flat, None);
+        &s.cands
+    }
+
+    /// Per-band deduplicated candidate counts for one query (bands are
+    /// disjoint in global id space, so the per-band attribution is
+    /// exact). `counts` is cleared first; the full candidate list is in
+    /// `s.candidates()` afterwards, as with [`Self::candidates_into`].
+    pub fn band_candidate_counts_into(
+        &self,
+        query: &[f32],
+        s: &mut QueryScratch,
+        counts: &mut Vec<usize>,
+    ) {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        q_transform_into(query, self.params.m, &mut s.qx);
+        s.hash_codes(&self.fused);
+        counts.clear();
+        let (mut sink, codes, _, _) = s.dedup(self.n_items);
+        self.replay_codes(&mut sink, codes, Some(counts));
+    }
+
+    /// Allocation-free multi-probe candidate union: the perturbation
+    /// ranking is computed **once per table** from the shared query
+    /// fractional parts (it is band-independent) and every probed key —
+    /// base and perturbed — is replayed against all B bands. With B = 1
+    /// the probe order is exactly the flat
+    /// [`super::AlshIndex::candidates_multiprobe_into`] order.
+    pub fn candidates_multiprobe_into<'s>(
+        &self,
+        query: &[f32],
+        n_probes: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        assert!(n_probes >= 1);
+        let p = self.params;
+        q_transform_into(query, p.m, &mut s.qx);
+        s.hash_codes_with_fracs(&self.fused);
+        let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items);
+        for t in 0..p.n_tables {
+            let base = t * p.k_per_table;
+            // Shared probe-key enumeration (the one ordering, see
+            // `super::multiprobe`); each key — base and perturbed —
+            // replays against all B bands.
+            super::multiprobe::for_each_probe_key(
+                &mut codes[base..base + p.k_per_table],
+                &fracs[base..base + p.k_per_table],
+                perturbs,
+                n_probes,
+                |key| {
+                    for band in &self.bands {
+                        sink.extend_mapped(band.tables[t].get_by_key(key), &band.ids);
+                    }
+                },
+            );
+        }
+        &s.cands
+    }
+
+    /// Allocation-free global exact rerank of `s.cands` — the same shared
+    /// kernel as the flat index ([`super::rerank`]).
+    pub fn rerank_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        super::rerank::rerank_into(&self.items_flat, self.dim, query, k, s)
+    }
+
+    /// Full allocation-free query: one hash, B band probes, one global
+    /// exact rerank.
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_into(query, s);
+        self.rerank_into(query, k, s)
+    }
+
+    /// Allocation-free multi-probe query.
+    pub fn query_multiprobe_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        n_probes: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_multiprobe_into(query, n_probes, s);
+        self.rerank_into(query, top_k, s)
+    }
+
+    /// Batch query path (offline eval): Q-transform + hash whole chunks
+    /// matrix–matrix, then replay each row's codes through the banded
+    /// probe — identical results to per-query [`Self::query_into`].
+    pub fn query_batch_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+    ) {
+        self.query_batch_impl(queries, k, s, out, None)
+    }
+
+    /// [`Self::query_batch_into`] that also records each query's
+    /// deduplicated candidate count in `counts` (cleared first).
+    pub fn query_batch_counts_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+        counts: &mut Vec<usize>,
+    ) {
+        self.query_batch_impl(queries, k, s, out, Some(counts))
+    }
+
+    fn query_batch_impl(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+        counts: Option<&mut Vec<usize>>,
+    ) {
+        run_query_batch(
+            &self.fused,
+            self.params.m,
+            self.dim,
+            &self.items_flat,
+            queries,
+            k,
+            s,
+            out,
+            counts,
+            |s| self.probe_scratch_codes(s),
+        )
+    }
+
+    // ---- allocating convenience wrappers (thread-local scratch) ----------
+
+    /// See [`Self::candidates_into`].
+    pub fn candidates(&self, query: &[f32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_into(query, s).to_vec())
+    }
+
+    /// See [`Self::candidates_from_codes_into`].
+    pub fn candidates_from_codes(&self, codes_flat: &[i32]) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_from_codes_into(codes_flat, s).to_vec())
+    }
+
+    /// See [`Self::candidates_multiprobe_into`].
+    pub fn candidates_multiprobe(&self, query: &[f32], n_probes: usize) -> Vec<u32> {
+        with_thread_scratch(|s| self.candidates_multiprobe_into(query, n_probes, s).to_vec())
+    }
+
+    /// See [`Self::query_into`].
+    pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
+    }
+
+    /// See [`Self::query_multiprobe_into`].
+    pub fn query_multiprobe(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        n_probes: usize,
+    ) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_multiprobe_into(query, top_k, n_probes, s).to_vec())
+    }
+
+    /// Allocating convenience over [`Self::query_batch_into`].
+    pub fn query_batch(&self, queries: &[Vec<f32>], k: usize) -> Vec<Vec<ScoredItem>> {
+        let mut out = Vec::with_capacity(queries.len());
+        with_thread_scratch(|s| self.query_batch_into(queries, k, s, &mut out));
+        out
+    }
+
+    /// Reassemble from persisted parts (see `index::persist`), validating
+    /// the band partition invariants.
+    pub(crate) fn from_parts(
+        params: AlshParams,
+        banded: BandedParams,
+        families: Vec<L2LshFamily>,
+        bands: Vec<Band>,
+        items_flat: Vec<f32>,
+        dim: usize,
+        n_items: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(families.len() == params.n_tables, "family count mismatch");
+        anyhow::ensure!(bands.len() == banded.n_bands, "band count mismatch");
+        anyhow::ensure!(items_flat.len() == dim * n_items, "items_flat size mismatch");
+        let mut seen = vec![false; n_items];
+        for band in &bands {
+            anyhow::ensure!(
+                band.tables.len() == params.n_tables,
+                "corrupt index file: band table count mismatch"
+            );
+            anyhow::ensure!(
+                band.ids.windows(2).all(|w| w[0] < w[1]),
+                "corrupt index file: band ids not strictly ascending"
+            );
+            for &id in &band.ids {
+                let slot = seen
+                    .get_mut(id as usize)
+                    .ok_or_else(|| anyhow::anyhow!("corrupt index file: band id out of range"))?;
+                anyhow::ensure!(!*slot, "corrupt index file: item id in two bands");
+                *slot = true;
+            }
+        }
+        anyhow::ensure!(
+            seen.iter().all(|&v| v),
+            "corrupt index file: bands do not cover every item"
+        );
+        let fused = FusedHasher::from_families(&families);
+        Ok(Self { params, banded, families, fused, bands, items_flat, dim, n_items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::dot;
+
+    /// Heavily skewed norms: most items tiny, a few large — the regime
+    /// norm-range banding exists for.
+    fn skewed_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let target = if rng.f32() < 0.8 {
+                    0.05 + 0.25 * rng.f32()
+                } else {
+                    1.0 + rng.f32()
+                };
+                let mut v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                let norm = l2_norm(&v).max(1e-9);
+                v.iter_mut().for_each(|x| *x *= target / norm);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bands_partition_items_with_ascending_norm_ranges() {
+        let items = skewed_items(500, 8, 1);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            2,
+        );
+        assert_eq!(idx.n_bands(), 4);
+        let mut all: Vec<u32> = Vec::new();
+        for band in idx.bands() {
+            assert!(band.n_items() > 0);
+            assert!(band.ids().windows(2).all(|w| w[0] < w[1]));
+            all.extend_from_slice(band.ids());
+            // Per-band postings = band items × L.
+            assert_eq!(
+                band.table_stats().n_postings,
+                band.n_items() * idx.params().n_tables
+            );
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..500).collect::<Vec<u32>>());
+        // Equal-count split: bands differ by at most one item.
+        let sizes: Vec<usize> = idx.bands().iter().map(Band::n_items).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // Ascending norm ranges, and each band's scale is fit to its max.
+        for w in idx.bands().windows(2) {
+            assert!(w[0].max_norm <= w[1].min_norm + 1e-6);
+        }
+        for band in idx.bands() {
+            assert_eq!(band.scale().max_norm, band.max_norm);
+        }
+        // Aggregate stats sum the bands.
+        assert_eq!(idx.table_stats().n_postings, 500 * idx.params().n_tables);
+    }
+
+    #[test]
+    fn query_returns_sorted_exact_scores() {
+        let items = skewed_items(400, 10, 3);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            4,
+        );
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            let top = idx.query(&q, 10);
+            for w in top.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            for h in &top {
+                let want = dot(&q, &items[h.id as usize]);
+                assert!((h.score - want).abs() < 1e-6, "scores must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_paths_equal_convenience_paths() {
+        let items = skewed_items(300, 8, 6);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 3 },
+            7,
+        );
+        let mut s = idx.scratch();
+        let mut rng = Rng::seed_from_u64(8);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            assert_eq!(idx.candidates_into(&q, &mut s).to_vec(), idx.candidates(&q));
+            assert_eq!(idx.query_into(&q, 5, &mut s).to_vec(), idx.query(&q, 5));
+            for probes in [1usize, 3] {
+                assert_eq!(
+                    idx.candidates_multiprobe_into(&q, probes, &mut s).to_vec(),
+                    idx.candidates_multiprobe(&q, probes)
+                );
+                assert_eq!(
+                    idx.query_multiprobe_into(&q, 5, probes, &mut s).to_vec(),
+                    idx.query_multiprobe(&q, 5, probes)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn band_counts_sum_to_candidate_total() {
+        let items = skewed_items(600, 8, 9);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            10,
+        );
+        let mut s = idx.scratch();
+        let mut counts = Vec::new();
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            idx.band_candidate_counts_into(&q, &mut s, &mut counts);
+            assert_eq!(counts.len(), 4);
+            let total: usize = counts.iter().sum();
+            assert_eq!(total, s.candidates().len());
+            assert_eq!(total, idx.candidates(&q).len());
+        }
+    }
+
+    #[test]
+    fn code_fed_path_matches_inline_hashing() {
+        let items = skewed_items(200, 8, 12);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            13,
+        );
+        let q: Vec<f32> = (0..8).map(|i| (i as f32).cos()).collect();
+        let qx = crate::transform::q_transform(&q, idx.params().m);
+        let mut flat = Vec::new();
+        for fam in idx.families() {
+            fam.hash_into(&qx, &mut flat);
+        }
+        assert_eq!(idx.candidates_from_codes(&flat), idx.candidates(&q));
+    }
+
+    #[test]
+    fn query_batch_matches_per_query_path() {
+        let items = skewed_items(400, 10, 14);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            15,
+        );
+        let mut rng = Rng::seed_from_u64(16);
+        let queries: Vec<Vec<f32>> =
+            (0..13).map(|_| (0..10).map(|_| rng.normal_f32()).collect()).collect();
+        let batch = idx.query_batch(&queries, 10);
+        assert_eq!(batch.len(), queries.len());
+        for (q, top) in queries.iter().zip(&batch) {
+            assert_eq!(top, &idx.query(q, 10));
+        }
+        let mut s = idx.scratch();
+        let mut out = Vec::new();
+        let mut counts = Vec::new();
+        idx.query_batch_counts_into(&queries, 10, &mut s, &mut out, &mut counts);
+        assert_eq!(out, batch);
+        assert_eq!(counts.len(), queries.len());
+        for (q, &c) in queries.iter().zip(&counts) {
+            assert_eq!(c, idx.candidates(q).len());
+        }
+        idx.query_batch_into(&[], 10, &mut s, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn build_is_thread_and_grouping_invariant() {
+        let items = skewed_items(350, 8, 17);
+        let params = AlshParams::default();
+        let banded = BandedParams { n_bands: 4 };
+        let (base, base_stats) = NormRangeIndex::build_with(
+            &items,
+            params,
+            banded,
+            18,
+            BuildOpts::single_threaded(),
+        );
+        assert_eq!(base_stats.n_bands, 4);
+        assert_eq!(base_stats.per_band.len(), 4);
+        // A tiny memory cap forces one band per group; tables must be
+        // byte-identical anyway.
+        let capped_opts = BuildOpts {
+            n_threads: Some(4),
+            block: 13,
+            max_shard_bytes: Some(1),
+        };
+        let (capped, capped_stats) =
+            NormRangeIndex::build_with(&items, params, banded, 18, capped_opts);
+        assert_eq!(capped_stats.n_groups, 4, "cap of 1 byte must serialize bands");
+        assert!(
+            capped_stats.peak_concurrent_run_bytes
+                <= base_stats.peak_concurrent_run_bytes
+        );
+        let (parallel, parallel_stats) = NormRangeIndex::build_with(
+            &items,
+            params,
+            banded,
+            18,
+            BuildOpts { n_threads: Some(8), block: 5, max_shard_bytes: None },
+        );
+        assert_eq!(parallel_stats.n_groups, 1, "no cap => one parallel group");
+        for other in [&capped, &parallel] {
+            for (a, b) in base.bands().iter().zip(other.bands()) {
+                assert_eq!(a.ids(), b.ids());
+                for (ta, tb) in a.tables().iter().zip(b.tables()) {
+                    assert_eq!(ta.keys(), tb.keys());
+                    assert_eq!(ta.offsets(), tb.offsets());
+                    assert_eq!(ta.postings(), tb.postings());
+                }
+            }
+        }
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.4).sin()).collect();
+        assert_eq!(base.query(&q, 10), capped.query(&q, 10));
+        assert_eq!(base.query(&q, 10), parallel.query(&q, 10));
+    }
+
+    #[test]
+    fn more_bands_than_items_clamps() {
+        let items = skewed_items(3, 4, 20);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 16 },
+            21,
+        );
+        assert_eq!(idx.n_bands(), 3);
+        assert_eq!(idx.table_stats().n_postings, 3 * idx.params().n_tables);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let items = skewed_items(10, 4, 22);
+        let idx = NormRangeIndex::build(
+            &items,
+            AlshParams::default(),
+            BandedParams { n_bands: 2 },
+            23,
+        );
+        let _ = idx.query(&[1.0, 2.0], 1);
+    }
+}

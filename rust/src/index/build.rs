@@ -42,11 +42,22 @@ pub struct BuildOpts {
     pub n_threads: Option<usize>,
     /// Items transformed + hashed per matrix–matrix block.
     pub block: usize,
+    /// Soft cap (bytes) on the transient postings-run memory held by
+    /// *concurrent* `build_tables` calls. One call's runs total
+    /// ~`n_items · L · 16` bytes whatever the thread count (every shard's
+    /// runs stay alive until the counting merge), so the cap is enforced
+    /// by callers that issue several builds at once: the norm-range
+    /// banded build ([`crate::index::NormRangeIndex`]) groups bands so
+    /// the concurrently-building bands' estimates
+    /// ([`run_bytes_estimate`]) stay under the cap, serializing band
+    /// groups when needed (always at least one band per group). `None`
+    /// leaves concurrency unbounded.
+    pub max_shard_bytes: Option<usize>,
 }
 
 impl Default for BuildOpts {
     fn default() -> Self {
-        Self { n_threads: None, block: 64 }
+        Self { n_threads: None, block: 64, max_shard_bytes: None }
     }
 }
 
@@ -61,6 +72,14 @@ impl BuildOpts {
     pub fn threads(n: usize) -> Self {
         Self { n_threads: Some(n.max(1)), ..Self::default() }
     }
+}
+
+/// Estimated bytes of transient per-shard postings runs that one
+/// `build_tables` call over `n_items` items and `n_tables` tables holds
+/// until its counting merge completes — the quantity
+/// [`BuildOpts::max_shard_bytes`] caps across concurrent calls.
+pub fn run_bytes_estimate(n_items: usize, n_tables: usize) -> usize {
+    n_items * n_tables * std::mem::size_of::<(u64, u32)>()
 }
 
 /// Observability from one build run (reported by `BENCH_build.json`).
@@ -231,7 +250,7 @@ mod tests {
         let (base, base_stats) = build_tables(
             its.len(),
             &f,
-            &BuildOpts { n_threads: Some(1), block: 64 },
+            &BuildOpts { n_threads: Some(1), block: 64, ..BuildOpts::default() },
             fill,
         );
         assert_eq!(base_stats.n_threads, 1);
@@ -241,7 +260,7 @@ mod tests {
             let (tables, stats) = build_tables(
                 its.len(),
                 &f,
-                &BuildOpts { n_threads: Some(threads), block },
+                &BuildOpts { n_threads: Some(threads), block, ..BuildOpts::default() },
                 fill,
             );
             assert_eq!(stats.n_threads, threads.min(230));
@@ -263,7 +282,7 @@ mod tests {
         let (tables, stats) = build_tables(
             its.len(),
             &f,
-            &BuildOpts { n_threads: Some(8), block: 64 },
+            &BuildOpts { n_threads: Some(8), block: 64, ..BuildOpts::default() },
             |id, out| out.copy_from_slice(&its[id]),
         );
         assert!(stats.n_threads <= 3);

@@ -24,10 +24,10 @@
 use crate::util::Rng;
 
 use super::build::{self, BuildOpts, BuildStats};
-use super::frozen::FrozenTable;
+use super::frozen::{FrozenTable, TableStats};
 use super::scratch::{with_thread_scratch, QueryScratch};
 use crate::lsh::{FusedHasher, L2LshFamily};
-use crate::transform::{dot, q_transform_into, scale_p_transform_slice, UScale};
+use crate::transform::{q_transform_into, scale_p_transform_slice, UScale};
 
 /// Parameters of a bucketed ALSH index.
 #[derive(Clone, Copy, Debug)]
@@ -58,6 +58,48 @@ impl Default for AlshParams {
 /// enough to amortize row-block loads across the chunk, small enough that
 /// the scratch's batch buffers stay bounded regardless of batch size.
 const QUERY_BATCH_BLOCK: usize = 256;
+
+/// The one implementation of the chunked batch-query loop, shared by the
+/// flat and banded indexes ([`AlshIndex::query_batch_into`] and
+/// `NormRangeIndex::query_batch_into`): Q-transform + hash each chunk in
+/// one fused matrix–matrix pass, then per query stage the code row, run
+/// the index-specific `probe`, optionally record the deduplicated
+/// candidate count, and exact-rerank into `out` (cleared first). Batch
+/// hashing is bit-identical to single-query hashing, so results equal
+/// the per-query paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_query_batch<P: Fn(&mut QueryScratch)>(
+    fused: &FusedHasher,
+    m: usize,
+    dim: usize,
+    items_flat: &[f32],
+    queries: &[Vec<f32>],
+    k: usize,
+    s: &mut QueryScratch,
+    out: &mut Vec<Vec<ScoredItem>>,
+    mut counts: Option<&mut Vec<usize>>,
+    probe: P,
+) {
+    for q in queries {
+        assert_eq!(q.len(), dim, "query dim mismatch");
+    }
+    out.clear();
+    if let Some(c) = counts.as_deref_mut() {
+        c.clear();
+    }
+    let nc = fused.n_codes();
+    for chunk in queries.chunks(QUERY_BATCH_BLOCK) {
+        s.hash_codes_batch(fused, chunk, m);
+        for (i, q) in chunk.iter().enumerate() {
+            s.stage_batch_codes(i, nc);
+            probe(s);
+            if let Some(c) = counts.as_deref_mut() {
+                c.push(s.candidates().len());
+            }
+            out.push(super::rerank::rerank_into(items_flat, dim, q, k, s).to_vec());
+        }
+    }
+}
 
 /// A retrieved item with its exact inner-product score.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -246,97 +288,18 @@ impl AlshIndex {
         &s.cands
     }
 
-    /// Exact scoring of `cands` against `query` into `out`. Defaults to
-    /// the bit-exact scalar blocked path; with the `simd` cargo feature
-    /// enabled and AVX2+FMA detected at runtime, dispatches to the
-    /// 8-lane FMA kernel ([`super::simd`]) instead. The SIMD path
-    /// reassociates sums, so its contract is identical top-k *sets*
-    /// (within float tolerance at ties), not bitwise scores.
-    fn score_candidates(&self, query: &[f32], cands: &[u32], out: &mut Vec<ScoredItem>) {
-        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-        {
-            if super::simd::x86::available() {
-                // Safety: AVX2+FMA availability checked at runtime just above.
-                unsafe { self.score_candidates_f32x8(query, cands, out) };
-                return;
-            }
-        }
-        self.score_candidates_scalar(query, cands, out)
-    }
-
-    /// 8-lane FMA scoring (dispatched by [`AlshIndex::score_candidates`]).
-    ///
-    /// # Safety
-    /// Caller must ensure AVX2 and FMA are available at runtime.
-    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-    unsafe fn score_candidates_f32x8(
-        &self,
-        query: &[f32],
-        cands: &[u32],
-        out: &mut Vec<ScoredItem>,
-    ) {
-        for &id in cands {
-            let score = unsafe { super::simd::x86::dot_f32x8(query, self.item(id)) };
-            out.push(ScoredItem { id, score });
-        }
-    }
-
-    /// Blocked scalar scoring (4 independent accumulation chains;
-    /// per-item order identical to [`dot`], so scores are bit-identical
-    /// to the plain scalar path).
-    fn score_candidates_scalar(&self, query: &[f32], cands: &[u32], out: &mut Vec<ScoredItem>) {
-        let d = self.dim;
-        let mut i = 0;
-        while i + 4 <= cands.len() {
-            let r0 = self.item(cands[i]);
-            let r1 = self.item(cands[i + 1]);
-            let r2 = self.item(cands[i + 2]);
-            let r3 = self.item(cands[i + 3]);
-            let mut a0 = 0.0f32;
-            let mut a1 = 0.0f32;
-            let mut a2 = 0.0f32;
-            let mut a3 = 0.0f32;
-            for j in 0..d {
-                let qv = query[j];
-                a0 += qv * r0[j];
-                a1 += qv * r1[j];
-                a2 += qv * r2[j];
-                a3 += qv * r3[j];
-            }
-            out.push(ScoredItem { id: cands[i], score: a0 });
-            out.push(ScoredItem { id: cands[i + 1], score: a1 });
-            out.push(ScoredItem { id: cands[i + 2], score: a2 });
-            out.push(ScoredItem { id: cands[i + 3], score: a3 });
-            i += 4;
-        }
-        while i < cands.len() {
-            out.push(ScoredItem { id: cands[i], score: dot(query, self.item(cands[i])) });
-            i += 1;
-        }
-    }
-
     /// Allocation-free exact rerank of `s.cands` (the batched blocked
-    /// rerank over `items_flat`); top `k` lands in `s.top`, sorted by
-    /// descending score.
+    /// rerank over `items_flat`, shared with the banded index via
+    /// [`super::rerank`]: scalar path bit-exact, 8-lane FMA under
+    /// `--features simd` with runtime CPU detection); top `k` lands in
+    /// `s.top`, sorted by descending score.
     pub fn rerank_into<'s>(
         &self,
         query: &[f32],
         k: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
-        let QueryScratch { cands, scored, top, .. } = s;
-        scored.clear();
-        self.score_candidates(query, cands, scored);
-        top.clear();
-        let k = k.min(scored.len());
-        if k > 0 {
-            scored.select_nth_unstable_by(k - 1, |a, b| {
-                b.score.partial_cmp(&a.score).unwrap()
-            });
-            top.extend_from_slice(&scored[..k]);
-            top.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-        }
-        top
+        super::rerank::rerank_into(&self.items_flat, self.dim, query, k, s)
     }
 
     /// Full allocation-free query: probe + exact rerank, results in
@@ -391,27 +354,20 @@ impl AlshIndex {
         k: usize,
         s: &mut QueryScratch,
         out: &mut Vec<Vec<ScoredItem>>,
-        mut counts: Option<&mut Vec<usize>>,
+        counts: Option<&mut Vec<usize>>,
     ) {
-        for q in queries {
-            assert_eq!(q.len(), self.dim, "query dim mismatch");
-        }
-        out.clear();
-        if let Some(c) = counts.as_deref_mut() {
-            c.clear();
-        }
-        let nc = self.fused.n_codes();
-        for chunk in queries.chunks(QUERY_BATCH_BLOCK) {
-            s.hash_codes_batch(&self.fused, chunk, self.params.m);
-            for (i, q) in chunk.iter().enumerate() {
-                s.stage_batch_codes(i, nc);
-                self.probe_scratch_codes(s);
-                if let Some(c) = counts.as_deref_mut() {
-                    c.push(s.candidates().len());
-                }
-                out.push(self.rerank_into(q, k, s).to_vec());
-            }
-        }
+        run_query_batch(
+            &self.fused,
+            self.params.m,
+            self.dim,
+            &self.items_flat,
+            queries,
+            k,
+            s,
+            out,
+            counts,
+            |s| self.probe_scratch_codes(s),
+        )
     }
 
     /// Allocating convenience wrapper over [`AlshIndex::query_batch_into`]
@@ -441,18 +397,7 @@ impl AlshIndex {
 
     /// Exact-rerank an arbitrary candidate list by inner product; top `k`.
     pub fn rerank(&self, query: &[f32], candidates: &[u32], k: usize) -> Vec<ScoredItem> {
-        let mut scored: Vec<ScoredItem> = Vec::new();
-        self.score_candidates(query, candidates, &mut scored);
-        let k = k.min(scored.len());
-        if k == 0 {
-            return Vec::new();
-        }
-        scored.select_nth_unstable_by(k - 1, |a, b| {
-            b.score.partial_cmp(&a.score).unwrap()
-        });
-        scored.truncate(k);
-        scored.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-        scored
+        super::rerank::rerank_list(&self.items_flat, self.dim, query, candidates, k)
     }
 
     /// Full query: retrieve candidates, exact-rerank, return top `k`.
@@ -460,19 +405,16 @@ impl AlshIndex {
         with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
     }
 
-    /// Aggregate table statistics: (total buckets, total postings, max bucket).
-    pub fn table_stats(&self) -> (usize, usize, usize) {
-        let b = self.tables.iter().map(|t| t.n_buckets()).sum();
-        let p = self.tables.iter().map(|t| t.n_postings()).sum();
-        let m = self.tables.iter().map(|t| t.max_bucket()).max().unwrap_or(0);
-        (b, p, m)
+    /// Aggregate table statistics across the L tables.
+    pub fn table_stats(&self) -> TableStats {
+        TableStats::from_tables(&self.tables)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transform::q_transform;
+    use crate::transform::{dot, q_transform};
 
     /// Items with wildly varying norms — the regime where MIPS != NNS.
     fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -495,8 +437,9 @@ mod tests {
     fn build_populates_all_tables() {
         let items = norm_spread_items(100, 8, 1);
         let idx = AlshIndex::build(&items, AlshParams::default(), 2);
-        let (_b, postings, _m) = idx.table_stats();
-        assert_eq!(postings, 100 * idx.params().n_tables);
+        let stats = idx.table_stats();
+        assert_eq!(stats.n_postings, 100 * idx.params().n_tables);
+        assert!(stats.n_buckets > 0 && stats.max_bucket > 0);
     }
 
     #[test]
@@ -659,7 +602,7 @@ mod tests {
             &items,
             AlshParams::default(),
             61,
-            BuildOpts { n_threads: Some(5), block: 17 },
+            BuildOpts { n_threads: Some(5), block: 17, ..BuildOpts::default() },
         );
         assert_eq!(stats_b.n_threads, 5);
         assert!(stats_b.shard_peak_bytes > 0);

@@ -19,6 +19,41 @@
 
 use super::hash_table::bucket_key;
 
+/// Aggregate statistics over a set of frozen CSR tables (one index's L
+/// tables, or one norm band's). Replaces the old anonymous
+/// `(buckets, postings, max bucket)` tuple.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TableStats {
+    /// Non-empty buckets, summed across the tables.
+    pub n_buckets: usize,
+    /// Postings summed across the tables (= items × L for a full index —
+    /// every item lands in exactly one bucket per table).
+    pub n_postings: usize,
+    /// Largest single bucket in any table (the skew diagnostic metrics
+    /// report; giant buckets are what norm-range banding shrinks).
+    pub max_bucket: usize,
+}
+
+impl TableStats {
+    /// Aggregate over `tables`.
+    pub fn from_tables(tables: &[FrozenTable]) -> Self {
+        Self {
+            n_buckets: tables.iter().map(|t| t.n_buckets()).sum(),
+            n_postings: tables.iter().map(|t| t.n_postings()).sum(),
+            max_bucket: tables.iter().map(|t| t.max_bucket()).max().unwrap_or(0),
+        }
+    }
+
+    /// Combine two aggregates (summing across bands or shards).
+    pub fn merge(self, other: TableStats) -> Self {
+        Self {
+            n_buckets: self.n_buckets + other.n_buckets,
+            n_postings: self.n_postings + other.n_postings,
+            max_bucket: self.max_bucket.max(other.max_bucket),
+        }
+    }
+}
+
 /// One frozen hash table in CSR layout.
 #[derive(Clone, Debug, Default)]
 pub struct FrozenTable {

@@ -9,7 +9,14 @@
 //! * **Collision-count ranking** (Eq. 21, used by the paper's evaluation):
 //!   rank every item by the number of hash agreements with the query over
 //!   K independent functions. This is what Figures 5–7 measure.
+//!
+//! The bucketed mode serves in two layouts behind [`AnyIndex`]: the flat
+//! single-scale [`AlshIndex`] and the norm-range partitioned
+//! [`NormRangeIndex`] ([`banded`]: per-band U scaling, shared hash
+//! families, queries hashed once and replayed across bands).
 
+pub mod any;
+pub mod banded;
 pub mod build;
 pub mod collision;
 pub mod core;
@@ -17,11 +24,14 @@ pub mod frozen;
 pub mod hash_table;
 pub mod multiprobe;
 pub mod persist;
+mod rerank;
 pub mod scratch;
 mod simd;
 
+pub use any::AnyIndex;
+pub use banded::{Band, BandedBuildStats, BandedParams, NormRangeIndex};
 pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
-pub use frozen::FrozenTable;
+pub use frozen::{FrozenTable, TableStats};
 pub use scratch::QueryScratch;

@@ -19,6 +19,39 @@ use super::scratch::{with_thread_scratch, QueryScratch};
 use crate::index::hash_table::bucket_key;
 use crate::transform::q_transform_into;
 
+/// Enumerate one table's probe bucket keys — the base key, then the best
+/// `n_probes − 1` single-coordinate ±1 perturbations ranked by boundary
+/// distance (`fracs_t` are the table's pre-floor fractional parts) —
+/// invoking `probe(key)` for each. This is the **one** implementation of
+/// the probe ordering, shared by the flat and banded indexes: the banded
+/// B = 1 byte-identity property depends on both enumerating keys in
+/// exactly this order. `codes_t` is perturbed in place and restored.
+pub(crate) fn for_each_probe_key(
+    codes_t: &mut [i32],
+    fracs_t: &[f32],
+    perturbs: &mut Vec<(f32, usize, i32)>,
+    n_probes: usize,
+    mut probe: impl FnMut(u64),
+) {
+    // (boundary distance, coordinate, delta): distance to the boundary
+    // below is `frac`; above is `1 - frac`.
+    perturbs.clear();
+    for (k_idx, &frac) in fracs_t.iter().enumerate() {
+        perturbs.push((frac, k_idx, -1));
+        perturbs.push((1.0 - frac, k_idx, 1));
+    }
+    perturbs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // Base probe.
+    probe(bucket_key(codes_t));
+    // Extra probes: flip one coordinate at a time.
+    for &(_, k_idx, delta) in perturbs.iter().take(n_probes - 1) {
+        codes_t[k_idx] += delta;
+        let key = bucket_key(codes_t);
+        codes_t[k_idx] -= delta;
+        probe(key);
+    }
+}
+
 impl AlshIndex {
     /// Allocation-free candidate union over `n_probes` buckets per table
     /// (1 = the plain base probe; each extra probe flips the
@@ -37,25 +70,13 @@ impl AlshIndex {
         let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items());
         for (t, table) in self.tables().iter().enumerate() {
             let base = t * p.k_per_table;
-            // (boundary distance, coordinate, delta): distance to the
-            // boundary below is `frac`; above is `1 - frac`.
-            perturbs.clear();
-            for k_idx in 0..p.k_per_table {
-                let frac = fracs[base + k_idx];
-                perturbs.push((frac, k_idx, -1));
-                perturbs.push((1.0 - frac, k_idx, 1));
-            }
-            perturbs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            let codes_t = &mut codes[base..base + p.k_per_table];
-            // Base probe.
-            sink.extend(table.get(codes_t));
-            // Extra probes: flip one coordinate at a time.
-            for &(_, k_idx, delta) in perturbs.iter().take(n_probes - 1) {
-                codes_t[k_idx] += delta;
-                let key = bucket_key(codes_t);
-                codes_t[k_idx] -= delta;
-                sink.extend(table.get_by_key(key));
-            }
+            for_each_probe_key(
+                &mut codes[base..base + p.k_per_table],
+                &fracs[base..base + p.k_per_table],
+                perturbs,
+                n_probes,
+                |key| sink.extend(table.get_by_key(key)),
+            );
         }
         &s.cands
     }

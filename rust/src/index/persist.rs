@@ -1,38 +1,58 @@
-//! Index persistence: save/load the built ALSH index to a compact binary
-//! file, so a service restart skips the (re)build.
+//! Index persistence: save/load built indexes to a compact binary file,
+//! so a service restart skips the (re)build.
 //!
-//! Since v2 the tables are serialized in their frozen CSR form (sorted
-//! keys + offsets + contiguous postings), so loading is a straight read
-//! into the serve-side layout — no HashMap rebuild, no per-bucket
-//! allocations. The fast-load reader decodes every array in one streaming
-//! pass through a single reused 64 KiB chunk buffer into exact-capacity
-//! destination `Vec`s: no per-table byte-array intermediates, no
-//! reallocation. There is deliberately no v1 (HashMap bucket dump) read
-//! path: no shipping build ever produced a v1 file — the seed tree had no
-//! crate manifest, so `save` was never runnable before v2 existed.
+//! Format v3 adds an index-kind discriminator so one container format
+//! carries both layouts: the flat [`AlshIndex`] (kind 0, body identical
+//! to v2) and the norm-range banded [`NormRangeIndex`] (kind 1: shared
+//! families once, then per band its scale, norm range, sorted global-id
+//! map, and L frozen CSR tables over band-local ids). v2 files (flat,
+//! no kind field) still load. There is deliberately no v1 (HashMap
+//! bucket dump) read path: no shipping build ever produced a v1 file.
 //!
-//! Format (little-endian, length-prefixed):
+//! Tables are serialized in their frozen CSR form (sorted keys + offsets
+//! + contiguous postings), so loading is a straight read into the
+//! serve-side layout. The fast-load reader decodes every array in one
+//! streaming pass through a single reused 64 KiB chunk buffer into
+//! exact-capacity destination `Vec`s: no per-table byte-array
+//! intermediates, no reallocation.
 //!
 //! ```text
-//! magic "ALSH" | version u32 | params (m, u, r, K, L) | scale (u, factor,
-//! max_norm) | dim u64 | n_items u64 | items_flat f32[n*dim]
-//! | L × family { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
-//! | L × table { n_buckets u64, n_postings u64, keys u64[n_buckets],
-//!               offsets u32[n_buckets+1], postings u32[n_postings] }
+//! magic "ALSH" | version u32 (3) | kind u32 (0 flat, 1 banded)
+//! flat body (== the v2 body, which had no kind field):
+//!   params (m, u, r, K, L) | scale (u, factor, max_norm)
+//!   | dim u64 | n_items u64 | items_flat f32[n*dim]
+//!   | L × family { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
+//!   | L × table { n_buckets u64, n_postings u64, keys u64[n_buckets],
+//!                 offsets u32[n_buckets+1], postings u32[n_postings] }
+//! banded body:
+//!   params | n_bands u64 | dim u64 | n_items u64 | items_flat f32[n*dim]
+//!   | L × family
+//!   | B × band { scale (u, factor, max_norm), min_norm f32, max_norm f32,
+//!                band_len u64, ids u32[band_len], L × table }
 //! ```
 //!
 //! No external serialization crates exist in this environment (DESIGN.md
 //! §5b), so the codec is hand-rolled with explicit versioning and
-//! corruption checks (CSR invariants are revalidated on load).
+//! corruption checks (CSR and band-partition invariants are revalidated
+//! on load).
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use super::any::AnyIndex;
+use super::banded::{Band, BandedParams, NormRangeIndex};
 use super::core::{AlshIndex, AlshParams};
 use super::frozen::FrozenTable;
+use crate::lsh::L2LshFamily;
+use crate::transform::UScale;
 
 const MAGIC: &[u8; 4] = b"ALSH";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// Last version without the kind field (flat body starts right after the
+/// version word).
+const VERSION_FLAT_ONLY: u32 = 2;
+const KIND_FLAT: u32 = 0;
+const KIND_BANDED: u32 = 1;
 
 struct Writer<W: Write> {
     w: W,
@@ -63,6 +83,42 @@ impl<W: Write> Writer<W> {
     fn u64s(&mut self, vs: &[u64]) -> std::io::Result<()> {
         for v in vs {
             self.u64(*v)?;
+        }
+        Ok(())
+    }
+
+    fn params(&mut self, p: &AlshParams) -> std::io::Result<()> {
+        self.u64(p.m as u64)?;
+        self.f32(p.u)?;
+        self.f32(p.r)?;
+        self.u64(p.k_per_table as u64)?;
+        self.u64(p.n_tables as u64)
+    }
+
+    fn scale(&mut self, s: &UScale) -> std::io::Result<()> {
+        self.f32(s.u)?;
+        self.f32(s.factor)?;
+        self.f32(s.max_norm)
+    }
+
+    fn families(&mut self, families: &[L2LshFamily]) -> std::io::Result<()> {
+        for fam in families {
+            self.u64(fam.dim() as u64)?;
+            self.u64(fam.k() as u64)?;
+            self.f32(fam.r())?;
+            self.f32s(&fam.a_scaled_raw())?;
+            self.f32s(fam.b_vector())?;
+        }
+        Ok(())
+    }
+
+    fn tables(&mut self, tables: &[FrozenTable]) -> std::io::Result<()> {
+        for t in tables {
+            self.u64(t.n_buckets() as u64)?;
+            self.u64(t.n_postings() as u64)?;
+            self.u64s(t.keys())?;
+            self.u32s(t.offsets())?;
+            self.u32s(t.postings())?;
         }
         Ok(())
     }
@@ -133,109 +189,249 @@ impl<R: Read> Reader<R> {
     read_array!(f32s, f32, 4);
     read_array!(u32s, u32, 4);
     read_array!(u64s, u64, 8);
+
+    fn params(&mut self) -> anyhow::Result<AlshParams> {
+        Ok(AlshParams {
+            m: self.len(64, "m")?,
+            u: self.f32()?,
+            r: self.f32()?,
+            k_per_table: self.len(1 << 20, "k_per_table")?,
+            n_tables: self.len(1 << 20, "n_tables")?,
+        })
+    }
+
+    fn scale(&mut self) -> anyhow::Result<UScale> {
+        Ok(UScale { u: self.f32()?, factor: self.f32()?, max_norm: self.f32()? })
+    }
+
+    fn families(&mut self, params: &AlshParams, dim: usize) -> anyhow::Result<Vec<L2LshFamily>> {
+        let mut families = Vec::with_capacity(params.n_tables);
+        for _ in 0..params.n_tables {
+            let fdim = self.len(1 << 24, "family dim")?;
+            let fk = self.len(1 << 20, "family k")?;
+            anyhow::ensure!(
+                fdim == dim + params.m && fk == params.k_per_table,
+                "corrupt index file: family shape mismatch"
+            );
+            let fr = self.f32()?;
+            let a = self.f32s(fk * fdim)?;
+            let b = self.f32s(fk)?;
+            families.push(L2LshFamily::from_raw(fdim, fk, fr, a, b));
+        }
+        Ok(families)
+    }
+
+    /// `n_tables` frozen tables whose postings ids must be `< max_id`
+    /// (global n_items for flat, band length for a band).
+    fn tables(&mut self, n_tables: usize, max_id: u32) -> anyhow::Result<Vec<FrozenTable>> {
+        let mut tables = Vec::with_capacity(n_tables);
+        for _ in 0..n_tables {
+            // Every bucket is non-empty, so buckets <= postings <= items.
+            let n_buckets = self.len(max_id as u64, "n_buckets")?;
+            let n_postings = self.len(max_id as u64, "n_postings")?;
+            let keys = self.u64s(n_buckets)?;
+            let offsets = self.u32s(n_buckets + 1)?;
+            let postings = self.u32s(n_postings)?;
+            tables.push(FrozenTable::from_parts(keys, offsets, postings, max_id)?);
+        }
+        Ok(tables)
+    }
+}
+
+fn write_flat_body<W: Write>(w: &mut Writer<W>, idx: &AlshIndex) -> std::io::Result<()> {
+    w.params(idx.params())?;
+    w.scale(idx.scale())?;
+    w.u64(idx.dim() as u64)?;
+    w.u64(idx.n_items() as u64)?;
+    for id in 0..idx.n_items() as u32 {
+        w.f32s(idx.item(id))?;
+    }
+    w.families(idx.families())?;
+    w.tables(idx.tables())
+}
+
+fn read_flat_body<R: Read>(r: &mut Reader<R>) -> anyhow::Result<AlshIndex> {
+    let params = r.params()?;
+    let scale = r.scale()?;
+    let dim = r.len(1 << 24, "dim")?;
+    // Item ids are u32 throughout, so n_items is capped accordingly.
+    let n_items = r.len(u32::MAX as u64, "n_items")?;
+    let items_flat = r.f32s(n_items * dim)?;
+    let families = r.families(&params, dim)?;
+    let tables = r.tables(params.n_tables, n_items as u32)?;
+    Ok(AlshIndex::from_parts(params, scale, families, tables, items_flat, dim, n_items))
+}
+
+fn write_banded_body<W: Write>(w: &mut Writer<W>, idx: &NormRangeIndex) -> std::io::Result<()> {
+    w.params(idx.params())?;
+    w.u64(idx.n_bands() as u64)?;
+    w.u64(idx.dim() as u64)?;
+    w.u64(idx.n_items() as u64)?;
+    for id in 0..idx.n_items() as u32 {
+        w.f32s(idx.item(id))?;
+    }
+    w.families(idx.families())?;
+    for band in idx.bands() {
+        w.scale(band.scale())?;
+        let (min_norm, max_norm) = band.norm_range();
+        w.f32(min_norm)?;
+        w.f32(max_norm)?;
+        w.u64(band.n_items() as u64)?;
+        w.u32s(band.ids())?;
+        w.tables(band.tables())?;
+    }
+    Ok(())
+}
+
+fn read_banded_body<R: Read>(r: &mut Reader<R>) -> anyhow::Result<NormRangeIndex> {
+    let params = r.params()?;
+    let n_bands = r.len(u32::MAX as u64, "n_bands")?;
+    anyhow::ensure!(n_bands >= 1, "corrupt index file: zero bands");
+    let dim = r.len(1 << 24, "dim")?;
+    let n_items = r.len(u32::MAX as u64, "n_items")?;
+    anyhow::ensure!(
+        n_bands <= n_items,
+        "corrupt index file: {n_bands} bands for {n_items} items"
+    );
+    let items_flat = r.f32s(n_items * dim)?;
+    let families = r.families(&params, dim)?;
+    let mut bands = Vec::with_capacity(n_bands);
+    for _ in 0..n_bands {
+        let scale = r.scale()?;
+        let min_norm = r.f32()?;
+        let max_norm = r.f32()?;
+        let band_len = r.len(n_items as u64, "band_len")?;
+        let ids = r.u32s(band_len)?;
+        let tables = r.tables(params.n_tables, band_len as u32)?;
+        bands.push(Band { scale, min_norm, max_norm, ids, tables });
+    }
+    NormRangeIndex::from_parts(
+        params,
+        BandedParams { n_bands },
+        families,
+        bands,
+        items_flat,
+        dim,
+        n_items,
+    )
+}
+
+/// Open `path`, check magic/version/kind, and decode whichever index kind
+/// the file holds (rejecting trailing garbage). When `want_kind` is set,
+/// a kind mismatch is rejected right after the 12-byte header — the
+/// wrong-kind body (potentially gigabytes of items and tables) is never
+/// decoded.
+fn load_file(path: &Path, want_kind: Option<u32>) -> anyhow::Result<AnyIndex> {
+    let file = std::fs::File::open(path)?;
+    let mut r = Reader::new(BufReader::new(file));
+    let mut magic = [0u8; 4];
+    r.r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
+    let version = r.u32()?;
+    let kind = match version {
+        // v2 files predate the kind field and are always flat.
+        VERSION_FLAT_ONLY => KIND_FLAT,
+        VERSION => {
+            let k = r.u32()?;
+            anyhow::ensure!(
+                k == KIND_FLAT || k == KIND_BANDED,
+                "unknown index kind {k} (this build knows 0=flat, 1=banded)"
+            );
+            k
+        }
+        other => anyhow::bail!(
+            "unsupported index version {other} (this build reads v{VERSION_FLAT_ONLY} and v{VERSION})"
+        ),
+    };
+    if let Some(want) = want_kind {
+        if want != kind {
+            if kind == KIND_BANDED {
+                anyhow::bail!(
+                    "index file holds a banded (norm-range) index; load it with \
+                     NormRangeIndex::load or index::persist::load_any"
+                );
+            }
+            anyhow::bail!(
+                "index file holds a flat index; load it with AlshIndex::load \
+                 or index::persist::load_any"
+            );
+        }
+    }
+    let index = if kind == KIND_FLAT {
+        AnyIndex::Flat(read_flat_body(&mut r)?)
+    } else {
+        AnyIndex::Banded(read_banded_body(&mut r)?)
+    };
+    // Reject trailing garbage.
+    let mut extra = [0u8; 1];
+    anyhow::ensure!(
+        r.r.read(&mut extra)? == 0,
+        "corrupt index file: trailing bytes"
+    );
+    Ok(index)
+}
+
+/// Load whichever index kind `path` holds (flat v2/v3 or banded v3).
+pub fn load_any(path: impl AsRef<Path>) -> crate::Result<AnyIndex> {
+    load_file(path.as_ref(), None)
 }
 
 impl AlshIndex {
-    /// Serialize the index to `path`.
+    /// Serialize the index to `path` (v3, kind flat).
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
         let file = std::fs::File::create(path.as_ref())?;
         let mut w = Writer { w: BufWriter::new(file) };
         w.w.write_all(MAGIC)?;
         w.u32(VERSION)?;
-        let p = self.params();
-        w.u64(p.m as u64)?;
-        w.f32(p.u)?;
-        w.f32(p.r)?;
-        w.u64(p.k_per_table as u64)?;
-        w.u64(p.n_tables as u64)?;
-        let s = self.scale();
-        w.f32(s.u)?;
-        w.f32(s.factor)?;
-        w.f32(s.max_norm)?;
-        w.u64(self.dim() as u64)?;
-        w.u64(self.n_items() as u64)?;
-        for id in 0..self.n_items() as u32 {
-            w.f32s(self.item(id))?;
-        }
-        for fam in self.families() {
-            w.u64(fam.dim() as u64)?;
-            w.u64(fam.k() as u64)?;
-            w.f32(fam.r())?;
-            w.f32s(&fam.a_scaled_raw())?;
-            w.f32s(fam.b_vector())?;
-        }
-        for t in self.tables() {
-            w.u64(t.n_buckets() as u64)?;
-            w.u64(t.n_postings() as u64)?;
-            w.u64s(t.keys())?;
-            w.u32s(t.offsets())?;
-            w.u32s(t.postings())?;
-        }
+        w.u32(KIND_FLAT)?;
+        write_flat_body(&mut w, self)?;
         w.w.flush()?;
         Ok(())
     }
 
-    /// Load an index previously written by [`AlshIndex::save`].
+    /// Load a **flat** index previously written by [`AlshIndex::save`]
+    /// (v3 kind 0, or a legacy v2 file). A banded file is rejected from
+    /// its header (before any body is decoded) with a pointer to
+    /// [`NormRangeIndex::load`]; use
+    /// [`load_any`](super::persist::load_any) when the kind is unknown.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
-        let file = std::fs::File::open(path.as_ref())?;
-        let mut r = Reader::new(BufReader::new(file));
-        let mut magic = [0u8; 4];
-        r.r.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
-        let version = r.u32()?;
-        anyhow::ensure!(version == VERSION, "unsupported index version {version}");
-        let params = AlshParams {
-            m: r.len(64, "m")?,
-            u: r.f32()?,
-            r: r.f32()?,
-            k_per_table: r.len(1 << 20, "k_per_table")?,
-            n_tables: r.len(1 << 20, "n_tables")?,
-        };
-        let scale = crate::transform::UScale {
-            u: r.f32()?,
-            factor: r.f32()?,
-            max_norm: r.f32()?,
-        };
-        let dim = r.len(1 << 24, "dim")?;
-        // Item ids are u32 throughout, so n_items is capped accordingly.
-        let n_items = r.len(u32::MAX as u64, "n_items")?;
-        let items_flat = r.f32s(n_items * dim)?;
-        let mut families = Vec::with_capacity(params.n_tables);
-        for _ in 0..params.n_tables {
-            let fdim = r.len(1 << 24, "family dim")?;
-            let fk = r.len(1 << 20, "family k")?;
-            anyhow::ensure!(
-                fdim == dim + params.m && fk == params.k_per_table,
-                "corrupt index file: family shape mismatch"
-            );
-            let fr = r.f32()?;
-            let a = r.f32s(fk * fdim)?;
-            let b = r.f32s(fk)?;
-            families.push(crate::lsh::L2LshFamily::from_raw(fdim, fk, fr, a, b));
+        match load_file(path.as_ref(), Some(KIND_FLAT))? {
+            AnyIndex::Flat(index) => Ok(index),
+            AnyIndex::Banded(_) => unreachable!("load_file verified the kind"),
         }
-        let mut tables = Vec::with_capacity(params.n_tables);
-        for _ in 0..params.n_tables {
-            // Every bucket is non-empty, so buckets <= postings <= items.
-            let n_buckets = r.len(n_items as u64, "n_buckets")?;
-            let n_postings = r.len(n_items as u64, "n_postings")?;
-            let keys = r.u64s(n_buckets)?;
-            let offsets = r.u32s(n_buckets + 1)?;
-            let postings = r.u32s(n_postings)?;
-            tables.push(FrozenTable::from_parts(keys, offsets, postings, n_items as u32)?);
+    }
+}
+
+impl NormRangeIndex {
+    /// Serialize the banded index to `path` (v3, kind banded).
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let file = std::fs::File::create(path.as_ref())?;
+        let mut w = Writer { w: BufWriter::new(file) };
+        w.w.write_all(MAGIC)?;
+        w.u32(VERSION)?;
+        w.u32(KIND_BANDED)?;
+        write_banded_body(&mut w, self)?;
+        w.w.flush()?;
+        Ok(())
+    }
+
+    /// Load a **banded** index previously written by
+    /// [`NormRangeIndex::save`]. A flat file is rejected from its header
+    /// (before any body is decoded) with a pointer to
+    /// [`AlshIndex::load`]; use [`load_any`](super::persist::load_any)
+    /// when the kind is unknown.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        match load_file(path.as_ref(), Some(KIND_BANDED))? {
+            AnyIndex::Banded(index) => Ok(index),
+            AnyIndex::Flat(_) => unreachable!("load_file verified the kind"),
         }
-        // Reject trailing garbage.
-        let mut extra = [0u8; 1];
-        anyhow::ensure!(
-            r.r.read(&mut extra)? == 0,
-            "corrupt index file: trailing bytes"
-        );
-        Ok(AlshIndex::from_parts(params, scale, families, tables, items_flat, dim, n_items))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::index::banded::BandedParams;
     use crate::util::Rng;
 
     fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -249,6 +445,20 @@ mod tests {
         let dir = std::env::temp_dir().join("alsh-persist-tests");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    /// Byte-surgery a v3 **flat** file down to the exact v2 layout: drop
+    /// the 4-byte kind field and stamp version 2 (the v2 body is
+    /// identical to the v3 flat body).
+    fn to_v2_bytes(v3_flat: &[u8]) -> Vec<u8> {
+        assert_eq!(&v3_flat[..4], b"ALSH");
+        assert_eq!(u32::from_le_bytes(v3_flat[4..8].try_into().unwrap()), 3);
+        assert_eq!(u32::from_le_bytes(v3_flat[8..12].try_into().unwrap()), 0);
+        let mut out = Vec::with_capacity(v3_flat.len() - 4);
+        out.extend_from_slice(&v3_flat[..4]);
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&v3_flat[12..]);
+        out
     }
 
     #[test]
@@ -311,6 +521,152 @@ mod tests {
     }
 
     #[test]
+    fn banded_roundtrip_preserves_everything() {
+        // Norm spread so the bands are meaningfully different.
+        let mut rng = Rng::seed_from_u64(30);
+        let its: Vec<Vec<f32>> = (0..500)
+            .map(|_| {
+                let s = 0.1 + 2.0 * rng.f32();
+                (0..10).map(|_| rng.normal_f32() * s).collect()
+            })
+            .collect();
+        let idx = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 4 },
+            31,
+        );
+        let path = tmp("banded_roundtrip.alsh");
+        idx.save(&path).unwrap();
+        let loaded = NormRangeIndex::load(&path).unwrap();
+        assert_eq!(loaded.n_items(), idx.n_items());
+        assert_eq!(loaded.n_bands(), 4);
+        assert_eq!(idx.table_stats(), loaded.table_stats());
+        assert_eq!(idx.band_table_stats(), loaded.band_table_stats());
+        for (a, b) in idx.bands().iter().zip(loaded.bands()) {
+            assert_eq!(a.ids(), b.ids());
+            assert_eq!(a.norm_range(), b.norm_range());
+            assert_eq!(a.scale().factor, b.scale().factor);
+            for (ta, tb) in a.tables().iter().zip(b.tables()) {
+                assert_eq!(ta.keys(), tb.keys());
+                assert_eq!(ta.offsets(), tb.offsets());
+                assert_eq!(ta.postings(), tb.postings());
+            }
+        }
+        for _ in 0..15 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            assert_eq!(idx.candidates(&q), loaded.candidates(&q));
+            assert_eq!(idx.query(&q, 10), loaded.query(&q, 10));
+            assert_eq!(
+                idx.candidates_multiprobe(&q, 4),
+                loaded.candidates_multiprobe(&q, 4)
+            );
+        }
+        // load_any agrees on the kind.
+        let any = load_any(&path).unwrap();
+        assert!(any.as_banded().is_some());
+        assert_eq!(any.table_stats(), idx.table_stats());
+    }
+
+    #[test]
+    fn legacy_v2_flat_file_still_loads() {
+        let its = items(120, 8, 40);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 41);
+        let path = tmp("v2_legacy.alsh");
+        idx.save(&path).unwrap();
+        let v2 = to_v2_bytes(&std::fs::read(&path).unwrap());
+        std::fs::write(&path, &v2).unwrap();
+        let loaded = AlshIndex::load(&path).unwrap();
+        let mut rng = Rng::seed_from_u64(42);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            assert_eq!(idx.query(&q, 10), loaded.query(&q, 10));
+            assert_eq!(idx.candidates(&q), loaded.candidates(&q));
+        }
+        // load_any reads v2 too, as a flat index.
+        assert!(load_any(&path).unwrap().as_flat().is_some());
+    }
+
+    #[test]
+    fn flat_reader_rejects_banded_file_with_clear_error() {
+        let its = items(60, 6, 50);
+        let idx = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 2 },
+            51,
+        );
+        let path = tmp("kind_banded.alsh");
+        idx.save(&path).unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("banded"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn banded_reader_rejects_flat_file_with_clear_error() {
+        let its = items(60, 6, 52);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 53);
+        let path = tmp("kind_flat.alsh");
+        idx.save(&path).unwrap();
+        let err = NormRangeIndex::load(&path).err().expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("flat"), "unhelpful error: {msg}");
+    }
+
+    /// A v3 banded file whose version word is stamped v2 is what a v2
+    /// reader would have seen: the banded body misparses as a flat body
+    /// and must die on the sanity caps, not load garbage.
+    #[test]
+    fn v3_banded_bytes_with_v2_version_fail_clearly() {
+        let its = items(40, 6, 54);
+        let idx = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 2 },
+            55,
+        );
+        let path = tmp("banded_as_v2.alsh");
+        idx.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("corrupt"), "got: {err:#}");
+    }
+
+    /// The reverse: a genuine v2 file whose version word is stamped v3
+    /// makes the reader parse the flat body's first field as a kind and
+    /// must fail with the unknown-kind error.
+    #[test]
+    fn v2_bytes_with_v3_version_fail_clearly() {
+        let its = items(40, 6, 56);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 57);
+        let path = tmp("v2_as_v3.alsh");
+        idx.save(&path).unwrap();
+        let mut v2 = to_v2_bytes(&std::fs::read(&path).unwrap());
+        v2[4..8].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&path, &v2).unwrap();
+        let err = AlshIndex::load(&path).err().expect("should fail");
+        // The v2 body starts with m = 3 (the default), which reads as
+        // kind 3 — unknown.
+        assert!(format!("{err:#}").contains("unknown index kind"), "got: {err:#}");
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let its = items(20, 4, 58);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 59);
+        let path = tmp("bad_kind.alsh");
+        idx.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&7u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_any(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("unknown index kind"), "got: {err:#}");
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let path = tmp("bad_magic.alsh");
         std::fs::write(&path, b"NOPE....").unwrap();
@@ -369,5 +725,23 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = AlshIndex::load(&path).err().expect("should fail");
         assert!(format!("{err:#}").contains("corrupt"), "got: {err:#}");
+    }
+
+    #[test]
+    fn rejects_corrupted_band_partition() {
+        let its = items(50, 4, 60);
+        let idx = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 2 },
+            61,
+        );
+        let path = tmp("band_corrupt.alsh");
+        idx.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Truncating inside the final band's tables must be caught (the
+        // reader hits EOF before the partition validates).
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(NormRangeIndex::load(&path).is_err());
     }
 }

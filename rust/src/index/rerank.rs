@@ -1,0 +1,154 @@
+//! Shared exact-rerank kernel: blocked scalar scoring (bit-identical to
+//! the plain `dot` path) with the feature-gated AVX2/FMA dispatch, plus
+//! the select-then-sort top-k — used verbatim by both the flat
+//! [`super::AlshIndex`] and the norm-range banded
+//! [`super::NormRangeIndex`], so the two indexes cannot diverge in rerank
+//! behavior (the B=1 byte-identity property rests on this sharing).
+
+use super::core::ScoredItem;
+use super::scratch::QueryScratch;
+use crate::transform::dot;
+
+/// Item row `id` of a `[n × dim]` row-major matrix.
+#[inline]
+fn row(items_flat: &[f32], dim: usize, id: u32) -> &[f32] {
+    let i = id as usize;
+    &items_flat[i * dim..(i + 1) * dim]
+}
+
+/// Exact scoring of `cands` against `query` into `out`. Defaults to the
+/// bit-exact scalar blocked path; with the `simd` cargo feature enabled
+/// and AVX2+FMA detected at runtime, dispatches to the 8-lane FMA kernel
+/// ([`super::simd`]) instead. The SIMD path reassociates sums, so its
+/// contract is identical top-k *sets* (within float tolerance at ties),
+/// not bitwise scores.
+pub(crate) fn score_candidates(
+    items_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    cands: &[u32],
+    out: &mut Vec<ScoredItem>,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::x86::available() {
+            // Safety: AVX2+FMA availability checked at runtime just above.
+            unsafe { score_candidates_f32x8(items_flat, dim, query, cands, out) };
+            return;
+        }
+    }
+    score_candidates_scalar(items_flat, dim, query, cands, out)
+}
+
+/// 8-lane FMA scoring (dispatched by [`score_candidates`]).
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available at runtime.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+unsafe fn score_candidates_f32x8(
+    items_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    cands: &[u32],
+    out: &mut Vec<ScoredItem>,
+) {
+    for &id in cands {
+        let score = unsafe { super::simd::x86::dot_f32x8(query, row(items_flat, dim, id)) };
+        out.push(ScoredItem { id, score });
+    }
+}
+
+/// Blocked scalar scoring (4 independent accumulation chains; per-item
+/// order identical to [`dot`], so scores are bit-identical to the plain
+/// scalar path).
+fn score_candidates_scalar(
+    items_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    cands: &[u32],
+    out: &mut Vec<ScoredItem>,
+) {
+    let d = dim;
+    let mut i = 0;
+    while i + 4 <= cands.len() {
+        let r0 = row(items_flat, d, cands[i]);
+        let r1 = row(items_flat, d, cands[i + 1]);
+        let r2 = row(items_flat, d, cands[i + 2]);
+        let r3 = row(items_flat, d, cands[i + 3]);
+        let mut a0 = 0.0f32;
+        let mut a1 = 0.0f32;
+        let mut a2 = 0.0f32;
+        let mut a3 = 0.0f32;
+        for j in 0..d {
+            let qv = query[j];
+            a0 += qv * r0[j];
+            a1 += qv * r1[j];
+            a2 += qv * r2[j];
+            a3 += qv * r3[j];
+        }
+        out.push(ScoredItem { id: cands[i], score: a0 });
+        out.push(ScoredItem { id: cands[i + 1], score: a1 });
+        out.push(ScoredItem { id: cands[i + 2], score: a2 });
+        out.push(ScoredItem { id: cands[i + 3], score: a3 });
+        i += 4;
+    }
+    while i < cands.len() {
+        out.push(ScoredItem {
+            id: cands[i],
+            score: dot(query, row(items_flat, d, cands[i])),
+        });
+        i += 1;
+    }
+}
+
+/// Sort `scored`'s top `k` (by descending score) into `top`:
+/// select-then-sort, O(C + k log k). Both buffers live in the caller's
+/// scratch; `top` is cleared first.
+pub(crate) fn select_top_k(
+    scored: &mut Vec<ScoredItem>,
+    top: &mut Vec<ScoredItem>,
+    k: usize,
+) {
+    top.clear();
+    let k = k.min(scored.len());
+    if k > 0 {
+        scored.select_nth_unstable_by(k - 1, |a, b| {
+            b.score.partial_cmp(&a.score).unwrap()
+        });
+        top.extend_from_slice(&scored[..k]);
+        top.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    }
+}
+
+/// Allocation-free exact rerank of `s.cands` against the `[n × dim]`
+/// row-major item matrix; top `k` lands in `s.top`, sorted by descending
+/// score, and is returned borrowed from the scratch.
+pub(crate) fn rerank_into<'s>(
+    items_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    k: usize,
+    s: &'s mut QueryScratch,
+) -> &'s [ScoredItem] {
+    let QueryScratch { cands, scored, top, .. } = s;
+    scored.clear();
+    score_candidates(items_flat, dim, query, cands, scored);
+    select_top_k(scored, top, k);
+    top
+}
+
+/// Allocating exact rerank of an arbitrary candidate list (the
+/// convenience `rerank` wrappers).
+pub(crate) fn rerank_list(
+    items_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    candidates: &[u32],
+    k: usize,
+) -> Vec<ScoredItem> {
+    let mut scored: Vec<ScoredItem> = Vec::new();
+    score_candidates(items_flat, dim, query, candidates, &mut scored);
+    let mut top = Vec::new();
+    select_top_k(&mut scored, &mut top, k);
+    top
+}

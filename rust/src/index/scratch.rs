@@ -255,6 +255,28 @@ impl DedupSink<'_> {
             }
         }
     }
+
+    /// Offer a postings list of *band-local* ids, translating through
+    /// `map[local] -> global id` before stamping (the norm-range banded
+    /// probe path: each band's frozen tables store ids local to the band).
+    #[inline]
+    pub fn extend_mapped(&mut self, locals: &[u32], map: &[u32]) {
+        for &local in locals {
+            let id = map[local as usize];
+            let s = &mut self.stamps[id as usize];
+            if *s != self.epoch {
+                *s = self.epoch;
+                self.out.push(id);
+            }
+        }
+    }
+
+    /// Candidates emitted so far this epoch (per-band count capture).
+    /// (No `is_empty` twin: counting, not emptiness, is the use case.)
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
 }
 
 #[cfg(test)]
@@ -291,6 +313,21 @@ mod tests {
             sink.extend(&[2, 2, 3]);
             assert_eq!(s.candidates(), &[2, 3]);
         }
+    }
+
+    #[test]
+    fn mapped_extend_translates_and_dedups_against_plain_extend() {
+        // Band-local ids [0, 1, 2] mapping to globals [7, 3, 9]: the
+        // mapped sink must dedup in *global* id space, interleaved with
+        // plain (already-global) postings.
+        let map = [7u32, 3, 9];
+        let mut s = QueryScratch::new();
+        let (mut sink, _, _, _) = s.dedup(10);
+        sink.extend_mapped(&[0, 1, 0], &map);
+        assert_eq!(sink.len(), 2);
+        sink.extend(&[3, 9, 5]);
+        sink.extend_mapped(&[2, 1], &map);
+        assert_eq!(s.candidates(), &[7, 3, 9, 5]);
     }
 
     #[test]

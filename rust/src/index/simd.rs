@@ -1,9 +1,10 @@
 //! Feature-gated AVX2/FMA rerank kernel (`--features simd`).
 //!
-//! `AlshIndex::score_candidates` defaults to the bit-exact scalar path;
-//! with the `simd` cargo feature enabled **and** AVX2+FMA detected at
-//! runtime, candidate dot products run 8 f32 lanes at a time with two
-//! independent FMA chains. SIMD accumulation reassociates the sum, so
+//! The shared rerank kernel (`index::rerank`, behind both
+//! `AlshIndex::rerank_into` and `NormRangeIndex::rerank_into`) defaults
+//! to the bit-exact scalar path; with the `simd` cargo feature enabled
+//! **and** AVX2+FMA detected at runtime, candidate dot products run 8
+//! f32 lanes at a time with two independent FMA chains. SIMD accumulation reassociates the sum, so
 //! scores may differ from the scalar path by O(ε·d·‖q‖‖x‖); the
 //! equivalence contract is therefore on top-k *sets* under a tolerance,
 //! not bitwise scores — see the tests below and the feature-gated

@@ -79,7 +79,7 @@ fn parallel_build_matches_single_threaded_and_naive_mirror() {
                 &items,
                 params,
                 seed,
-                BuildOpts { n_threads: Some(threads), block },
+                BuildOpts { n_threads: Some(threads), block, ..BuildOpts::default() },
             );
             // Shard count never exceeds the request (ceil-partitioning may
             // need fewer shards than asked when n is small).

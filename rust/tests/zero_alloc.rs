@@ -7,7 +7,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use alsh::index::{AlshIndex, AlshParams};
+use alsh::index::{AlshIndex, AlshParams, BandedParams, NormRangeIndex};
 use alsh::util::Rng;
 
 thread_local! {
@@ -80,6 +80,59 @@ fn steady_state_queries_allocate_nothing() {
         after - before,
         0,
         "steady-state scratch queries performed {} heap allocations",
+        after - before
+    );
+}
+
+/// The banded query path shares the scratch discipline: one hash, B band
+/// probes through the mapped dedup sink, one global rerank — zero
+/// steady-state allocations, same as the flat index.
+#[test]
+fn banded_steady_state_queries_allocate_nothing() {
+    let mut rng = Rng::seed_from_u64(7);
+    let items: Vec<Vec<f32>> = (0..2000)
+        .map(|_| {
+            let s = 0.1 + 1.9 * rng.f32();
+            (0..24).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+    let idx = NormRangeIndex::build(
+        &items,
+        AlshParams::default(),
+        BandedParams { n_bands: 4 },
+        8,
+    );
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..24).map(|_| rng.normal_f32()).collect())
+        .collect();
+
+    let mut scratch = idx.scratch();
+    let mut counts = Vec::with_capacity(idx.n_bands());
+    let mut sink = 0usize;
+    for q in &queries {
+        sink += idx.query_into(q, 10, &mut scratch).len();
+        sink += idx.candidates_multiprobe_into(q, 4, &mut scratch).len();
+        sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+        idx.band_candidate_counts_into(q, &mut scratch, &mut counts);
+        sink += counts.iter().sum::<usize>();
+    }
+
+    let before = allocs_on_this_thread();
+    for _ in 0..3 {
+        for q in &queries {
+            sink += idx.query_into(q, 10, &mut scratch).len();
+            sink += idx.candidates_multiprobe_into(q, 4, &mut scratch).len();
+            sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+            idx.band_candidate_counts_into(q, &mut scratch, &mut counts);
+            sink += counts.iter().sum::<usize>();
+        }
+    }
+    let after = allocs_on_this_thread();
+    assert!(sink > 0, "queries must return results");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state banded scratch queries performed {} heap allocations",
         after - before
     );
 }
