@@ -1,19 +1,40 @@
 //! Parameter sweep helper: (K, L) recall/candidate trade-off on both an
 //! adversarial random-query workload and the PureSVD tiny dataset, for
-//! the flat index and the norm-range banded index side by side.
-//! Used to pick `AlshParams::default()` / `BandedParams::default()`;
-//! kept as a tuning tool.
+//! the flat index and the norm-range banded index side by side, under
+//! any hash scheme (`--scheme {l2-alsh,sign-alsh,simple-lsh}`, default
+//! l2-alsh — the current behavior).
+//! Used to pick `AlshParams::default()` / `BandedParams::default()` /
+//! `AlshParams::recommended(scheme)`; kept as a tuning tool.
 use alsh::baselines::LinearScan;
 use alsh::config::DatasetConfig;
 use alsh::data::generate_dataset;
-use alsh::index::{AlshIndex, AlshParams, AnyIndex, BandedParams, NormRangeIndex};
+use alsh::index::{
+    AlshIndex, AlshParams, AnyIndex, BandedParams, MipsHashScheme, NormRangeIndex,
+};
 use alsh::util::Rng;
 
-fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>], n_bands: usize) {
+fn sweep(
+    name: &str,
+    items: &[Vec<f32>],
+    queries: &[Vec<f32>],
+    n_bands: usize,
+    scheme: MipsHashScheme,
+) {
     let scan = LinearScan::new(items);
-    println!("== {name} ({} items, banded B={n_bands}) ==", items.len());
-    for (k, l) in [(4usize, 32usize), (6, 32), (6, 48), (8, 32), (8, 48), (10, 48)] {
-        let params = AlshParams { k_per_table: k, n_tables: l, ..Default::default() };
+    println!("== {name} ({} items, scheme {scheme}, banded B={n_bands}) ==", items.len());
+    // SRP sign bits carry less per-code selectivity than L2 quantization
+    // cells, so the SRP grid sweeps wider K at the same table counts.
+    let grid: &[(usize, usize)] = if scheme.is_srp() {
+        &[(8, 32), (10, 32), (12, 32), (12, 48), (16, 32), (16, 48)]
+    } else {
+        &[(4, 32), (6, 32), (6, 48), (8, 32), (8, 48), (10, 48)]
+    };
+    for &(k, l) in grid {
+        let params = AlshParams {
+            k_per_table: k,
+            n_tables: l,
+            ..AlshParams::recommended(scheme)
+        };
         // Flat and banded at the same (K, L) and hash seed: the query
         // codes are shared, only the table partitioning differs.
         let flat: AnyIndex = AlshIndex::build(items, params, 7).into();
@@ -44,6 +65,11 @@ fn sweep(name: &str, items: &[Vec<f32>], queries: &[Vec<f32>], n_bands: usize) {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scheme = MipsHashScheme::from_cli_args(&args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     let mut rng = Rng::seed_from_u64(42);
     let n = 20_000;
     let dim = 64;
@@ -55,9 +81,9 @@ fn main() {
         .collect();
     let queries: Vec<Vec<f32>> =
         (0..100).map(|_| (0..dim).map(|_| rng.normal_f32()).collect()).collect();
-    sweep("random gaussian (adversarial)", &items, &queries, 4);
+    sweep("random gaussian (adversarial)", &items, &queries, 4, scheme);
 
     let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
     let qs: Vec<Vec<f32>> = data.users[..100.min(data.users.len())].to_vec();
-    sweep("puresvd tiny (realistic)", &data.items, &qs, 4);
+    sweep("puresvd tiny (realistic)", &data.items, &qs, 4, scheme);
 }

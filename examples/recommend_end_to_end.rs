@@ -20,6 +20,9 @@
 //! make artifacts && cargo run --release --example recommend_end_to_end
 //! # quick mode (tiny dataset):
 //! cargo run --release --example recommend_end_to_end -- --tiny
+//! # alternate hash schemes (default l2-alsh; SRP schemes serve through
+//! # the fused CPU hash path — no PJRT query artifact exists for them):
+//! cargo run --release --example recommend_end_to_end -- --scheme sign-alsh
 //! ```
 
 use std::sync::Arc;
@@ -30,7 +33,7 @@ use alsh::config::DatasetConfig;
 use alsh::coordinator::{BatcherConfig, MipsEngine, PjrtBatcher};
 use alsh::data::generate_dataset;
 use alsh::eval::gold_top_t_batch;
-use alsh::index::{AlshParams, AnyIndex, BandedParams, QueryScratch};
+use alsh::index::{AlshParams, AnyIndex, BandedParams, MipsHashScheme, QueryScratch};
 
 /// Batch-evaluate one index over the test users: returns (total gold hits
 /// in top-k, wall time, mean candidates/query) from a single
@@ -57,9 +60,14 @@ fn eval_batch(
 }
 
 fn main() -> anyhow::Result<()> {
-    let tiny = std::env::args().any(|a| a == "--tiny");
+    let args: Vec<String> = std::env::args().collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    let scheme = MipsHashScheme::from_cli_args(&args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     let ds = if tiny { DatasetConfig::tiny() } else { DatasetConfig::movielens_like() };
-    println!("== dataset: {} ==", ds.name);
+    println!("== dataset: {} | scheme: {scheme} ==", ds.name);
     let t0 = Instant::now();
     let data = generate_dataset(&ds)?;
     println!(
@@ -83,8 +91,12 @@ fn main() -> anyhow::Result<()> {
     // banded index at the recall-tuned point (same hash seed, so the
     // family sets are identical and only the banding differs), and the
     // symmetric L2LSH baseline at the same parameters.
-    let recall_params = AlshParams { n_tables: 48, k_per_table: 5, ..AlshParams::default() };
-    let speed_params = AlshParams { n_tables: 48, k_per_table: 8, ..AlshParams::default() };
+    // SRP sign bits are individually less selective than L2 quantization
+    // cells, so the SRP schemes run wider meta-hashes at the same L.
+    let (recall_k, speed_k) = if scheme.is_srp() { (10, 14) } else { (5, 8) };
+    let base = AlshParams::recommended(scheme);
+    let recall_params = AlshParams { n_tables: 48, k_per_table: recall_k, ..base };
+    let speed_params = AlshParams { n_tables: 48, k_per_table: speed_k, ..base };
     let banded_params = BandedParams::default();
     let t1 = Instant::now();
     let engine = Arc::new(MipsEngine::new(&data.items, recall_params, ds.seed ^ 0xA15));
@@ -170,8 +182,16 @@ fn main() -> anyhow::Result<()> {
         );
     };
     row("exact linear scan (1-by-1)", None, scan_elapsed);
-    row("ALSH K=5 (batched)", Some(alsh_recall), alsh_elapsed);
-    row("ALSH K=8 (batched)", Some(alsh_fast_recall), alsh_fast_elapsed);
+    row(
+        &format!("ALSH K={recall_k} (batched)"),
+        Some(alsh_recall),
+        alsh_elapsed,
+    );
+    row(
+        &format!("ALSH K={speed_k} (batched)"),
+        Some(alsh_fast_recall),
+        alsh_fast_elapsed,
+    );
     row(
         &format!("ALSH banded B={} (batched)", banded_params.n_bands),
         Some(banded_recall),
@@ -180,7 +200,7 @@ fn main() -> anyhow::Result<()> {
     row("L2LSH baseline (1-by-1)", Some(l2_recall), l2_elapsed);
     let pct = |cpq: f64| 100.0 * cpq / data.items.len() as f64;
     println!(
-        "candidates probed/query: K=5 flat {:.0} ({:.1}%), K=8 flat {:.0} ({:.1}%), K=5 banded {:.0} ({:.1}%)",
+        "candidates probed/query: K={recall_k} flat {:.0} ({:.1}%), K={speed_k} flat {:.0} ({:.1}%), K={recall_k} banded {:.0} ({:.1}%)",
         alsh_cpq,
         pct(alsh_cpq),
         alsh_fast_cpq,

@@ -7,7 +7,7 @@
 //! fused-vs-reference numbers land in `BENCH_query.json` ("hashing"
 //! section) so the perf trajectory is tracked across PRs.
 
-use alsh::lsh::{FusedHasher, L2LshFamily};
+use alsh::lsh::{FusedHasher, FusedSrpHasher, L2LshFamily, SrpFamily};
 use alsh::runtime::Runtime;
 use alsh::transform::{p_transform, q_transform};
 use alsh::util::bench::{merge_bench_json, Bench};
@@ -82,6 +82,60 @@ fn main() {
             ("fused_ns_per_code".into(), Json::Num(fused_stats.ns_per_item())),
             ("fused_batch_ns_per_code".into(), Json::Num(batch_stats.ns_per_item())),
             ("fused_speedup".into(), Json::Num(speedup)),
+        ],
+    );
+
+    // -- fused SRP (Sign-ALSH / Simple-LSH) at the same K·L shape ------------
+    // No floor/offset and a branch-free sign emit: the SRP kernel is the
+    // cheaper of the two fused pipelines per code.
+    let srp_families: Vec<SrpFamily> = (0..l)
+        .map(|_| SrpFamily::sample(dim + m, k, &mut rng))
+        .collect();
+    let srp = FusedSrpHasher::from_families(&srp_families);
+    let mut srp_ref_out: Vec<i32> = Vec::with_capacity(l * k);
+    let srp_ref_stats = bench
+        .run(&format!("srp reference     d={dim} KL={}", l * k), n_codes, || {
+            srp_ref_out.clear();
+            for fam in &srp_families {
+                fam.hash_into(&px, &mut srp_ref_out);
+            }
+            srp_ref_out.len()
+        })
+        .clone();
+    let mut srp_out = vec![0i32; srp.n_codes()];
+    let srp_stats = bench
+        .run(&format!("srp fused matvec  d={dim} KL={}", l * k), n_codes, || {
+            srp.hash_into(&px, &mut srp_out);
+            srp_out.len()
+        })
+        .clone();
+    assert_eq!(srp_ref_out, srp_out, "fused/reference SRP code divergence");
+    let mut srp_batch_out = vec![0i32; batch * srp.n_codes()];
+    let srp_batch_stats = bench
+        .run(
+            &format!("srp fused matmat  d={dim} KL={} B={batch}", l * k),
+            n_codes * batch as f64,
+            || {
+                srp.hash_batch_into(&xs, batch, &mut srp_batch_out);
+                srp_batch_out.len()
+            },
+        )
+        .clone();
+    println!(
+        "srp fused at (d={dim}, K·L={}): {:.2} ns/code single, {:.2} ns/code batched",
+        l * k,
+        srp_stats.ns_per_item(),
+        srp_batch_stats.ns_per_item()
+    );
+    merge_bench_json(
+        "hashing",
+        vec![
+            ("srp_reference_ns_per_code".into(), Json::Num(srp_ref_stats.ns_per_item())),
+            ("srp_fused_ns_per_code".into(), Json::Num(srp_stats.ns_per_item())),
+            (
+                "srp_fused_batch_ns_per_code".into(),
+                Json::Num(srp_batch_stats.ns_per_item()),
+            ),
         ],
     );
 

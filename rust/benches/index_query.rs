@@ -1,7 +1,12 @@
 //! Index benchmarks: build time, bucketed query latency vs the exact scan
 //! and the L2LSH baseline — the sublinearity claim (Theorem 4) measured —
 //! plus the norm-range banded index vs the flat index (the
-//! candidates/query and latency win norm-range partitioning buys).
+//! candidates/query and latency win norm-range partitioning buys) and
+//! the **scheme comparison**: L2-ALSH vs Sign-ALSH vs Simple-LSH at an
+//! equal (K, L) table budget on the same skewed-norm workload
+//! (per-scheme p50/p99 latency, recall@10, candidates/query — the
+//! `scheme_*` keys in `BENCH_query.json`; the Sign-beats-L2 margin is
+//! asserted by `tests/scheme_equivalence.rs`).
 //!
 //! The ALSH query loop runs the allocation-free scratch path (fused hash
 //! + frozen CSR probe + blocked rerank); per-query p50/p99 latency and
@@ -30,7 +35,7 @@
 
 use alsh::baselines::{L2LshIndex, LinearScan};
 use alsh::data::skewed_norm_clusters;
-use alsh::index::{AlshIndex, AlshParams, BandedParams, NormRangeIndex};
+use alsh::index::{AlshIndex, AlshParams, BandedParams, MipsHashScheme, NormRangeIndex};
 use alsh::util::bench::{merge_bench_json, Bench};
 use alsh::util::json::Json;
 use alsh::util::Rng;
@@ -145,6 +150,63 @@ fn main() {
             "[n={n}] banded vs flat: candidates ratio {ratio:.2} at recall {banded_recall:.2} (flat loose {flat_recall:.2}, flat tight {ftight_recall:.2}); per-band cands/query {:?}",
             per_band.iter().map(|v| *v as u64).collect::<Vec<_>>()
         );
+
+        // ---- scheme comparison at the equal (6, 16) table budget ----
+        // The flat L2 index above *is* the (6, 16) L2-ALSH operating
+        // point; Sign-ALSH runs (m=1, U=0.83) — the small-m point that
+        // resists the global-scale norm crush on this workload — and
+        // Simple-LSH its single-append transform, all through the same
+        // fused/bit-packed pipeline and the same batch query API.
+        let sign_params = AlshParams {
+            scheme: MipsHashScheme::SignAlsh,
+            m: 1,
+            u: 0.83,
+            ..loose
+        };
+        let simple_params = AlshParams { scheme: MipsHashScheme::SimpleLsh, ..loose };
+        let sign = AlshIndex::build(&items, sign_params, 3);
+        let simple = AlshIndex::build(&items, simple_params, 3);
+        let sign_stats = bench
+            .run(&format!("sign_alsh_query n={n} top10 (scratch)"), 1.0, || {
+                qi = (qi + 1) % queries.len();
+                sign.query_into(&queries[qi], 10, &mut scratch).len()
+            })
+            .clone();
+        let simple_stats = bench
+            .run(&format!("simple_lsh_query n={n} top10 (scratch)"), 1.0, || {
+                qi = (qi + 1) % queries.len();
+                simple.query_into(&queries[qi], 10, &mut scratch).len()
+            })
+            .clone();
+        sign.query_batch_counts_into(&queries, 10, &mut scratch, &mut tops, &mut counts);
+        let (sign_recall, sign_cpq) = score(&tops, &counts, "sign K=6");
+        simple.query_batch_counts_into(&queries, 10, &mut scratch, &mut tops, &mut counts);
+        let (simple_recall, simple_cpq) = score(&tops, &counts, "simple K=6");
+        let sign_ratio = if flat_cpq > 0.0 { sign_cpq / flat_cpq } else { 1.0 };
+        println!(
+            "[n={n}] scheme comparison at (K=6, L=16): sign recall {sign_recall:.2} at {:.2}x \
+             l2 candidates (l2 recall {flat_recall:.2}); simple recall {simple_recall:.2}",
+            sign_ratio
+        );
+        for (scheme_name, stats, recall, cpq) in [
+            ("l2_alsh", &alsh_stats, flat_recall, flat_cpq),
+            ("sign_alsh", &sign_stats, sign_recall, sign_cpq),
+            ("simple_lsh", &simple_stats, simple_recall, simple_cpq),
+        ] {
+            for (key, val) in [
+                ("p50_us", stats.median.as_nanos() as f64 / 1e3),
+                ("p99_us", stats.p99.as_nanos() as f64 / 1e3),
+                ("candidates_per_query", cpq),
+                ("recall_top1_in_top10", recall),
+            ] {
+                json_entries
+                    .push((format!("n{n}_scheme_{scheme_name}_{key}"), Json::Num(val)));
+            }
+        }
+        json_entries.push((
+            format!("n{n}_sign_vs_l2_candidates_ratio"),
+            Json::Num(sign_ratio),
+        ));
 
         for (key, val) in [
             ("p50_us", alsh_stats.median.as_nanos() as f64 / 1e3),

@@ -12,13 +12,13 @@ use crate::util::Rng;
 
 use crate::index::build::{build_tables, BuildOpts};
 use crate::index::scratch::with_thread_scratch;
-use crate::index::{FrozenTable, QueryScratch, ScoredItem};
+use crate::index::{FrozenTable, QueryScratch, ScoredItem, SchemeHasher};
 use crate::lsh::{FusedHasher, L2LshFamily};
 use crate::transform::dot;
 
 /// Bucketed symmetric L2LSH index.
 pub struct L2LshIndex {
-    fused: FusedHasher,
+    fused: SchemeHasher,
     tables: Vec<FrozenTable>,
     items_flat: Vec<f32>,
     dim: usize,
@@ -41,12 +41,15 @@ impl L2LshIndex {
         let families: Vec<L2LshFamily> = (0..n_tables)
             .map(|_| L2LshFamily::sample(dim, k_per_table, r, &mut rng))
             .collect();
-        let fused = FusedHasher::from_families(&families);
+        let fused = SchemeHasher::L2(FusedHasher::from_families(&families));
         // Same parallel sharded streaming build as AlshIndex, with the
         // identity row fill (symmetric hashing: no P transform).
-        let (tables, _stats) = build_tables(items.len(), &fused, &BuildOpts::default(), |id, row| {
-            row.copy_from_slice(&items[id])
-        });
+        let (tables, _stats) = build_tables(
+            items.len(),
+            &fused,
+            &BuildOpts::default(),
+            |id, row| row.copy_from_slice(&items[id]),
+        );
         let mut items_flat = Vec::with_capacity(items.len() * dim);
         for it in items {
             items_flat.extend_from_slice(it);

@@ -22,9 +22,8 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::index::{AnyIndex, ScoredItem};
+use crate::index::{AnyIndex, MipsHashScheme, ScoredItem};
 use crate::runtime::{ArtifactMeta, Runtime};
-use crate::transform::q_transform_into;
 
 use super::engine::MipsEngine;
 use super::metrics::Metrics;
@@ -99,10 +98,11 @@ pub struct PjrtBatcher {
 }
 
 /// Batch-hash `rows` with the fused pure-Rust matrix–matrix kernel:
-/// Q-transform each row, then one blocked pass over the stacked `[L·K ×
-/// (D+m)]` matrix (shared by both index kinds — the banded index hashes
-/// queries with the same fused family set as the flat one). The scratch
-/// buffers are owned by the worker loop.
+/// Q-transform each row per the index's scheme, then one blocked pass
+/// over the stacked `[L·K × D']` matrix (shared by both index kinds —
+/// the banded index hashes queries with the same fused family set as the
+/// flat one, whatever the scheme). The scratch buffers are owned by the
+/// worker loop.
 fn fused_hash_batch(
     index: &AnyIndex,
     rows: &[Vec<f32>],
@@ -112,12 +112,13 @@ fn fused_hash_batch(
 ) -> crate::Result<Vec<Vec<i32>>> {
     let dim = index.dim();
     let m = index.params().m;
+    let scheme = index.scheme();
     let hasher = index.hasher();
     let nc = hasher.n_codes();
     xs.clear();
     for row in rows {
         anyhow::ensure!(row.len() == dim, "row dim {} != {dim}", row.len());
-        q_transform_into(row, m, qx);
+        scheme.query_into(row, m, qx);
         xs.extend_from_slice(qx);
     }
     let need = rows.len() * nc;
@@ -150,29 +151,40 @@ impl PjrtBatcher {
 
         // Probe the runtime on the caller thread for a fast error on real
         // config mismatches; fall back to fused hashing when the runtime
-        // itself is unavailable.
-        let backend = match Runtime::load(&dir) {
-            Ok(probe) => {
-                let meta = probe.find("alsh_query", dim)?;
-                anyhow::ensure!(
-                    meta.m == m,
-                    "artifact m={} but index m={m}; re-run make artifacts",
-                    meta.m
-                );
-                drop(probe);
-                anyhow::ensure!(
-                    lk <= meta.k,
-                    "index uses {lk} hashes > artifact capacity {}",
-                    meta.k
-                );
-                let (a_dk, b) = engine.concat_family_inputs(meta.k);
-                HashBackend::Pjrt { meta, a_dk, b }
-            }
-            Err(e) => {
-                crate::log_info!(
-                    "PJRT runtime unavailable ({e:#}); batcher using fused CPU hashing"
-                );
-                HashBackend::Fused
+        // itself is unavailable. Only the L2-ALSH scheme has a compiled
+        // `alsh_query` artifact — the SRP schemes always hash through the
+        // fused CPU kernel (which serves them at full speed; the bit-pack
+        // keys need no artifact).
+        let backend = if params.scheme != MipsHashScheme::L2Alsh {
+            crate::log_info!(
+                "scheme {} has no PJRT query artifact; batcher using fused CPU hashing",
+                params.scheme
+            );
+            HashBackend::Fused
+        } else {
+            match Runtime::load(&dir) {
+                Ok(probe) => {
+                    let meta = probe.find("alsh_query", dim)?;
+                    anyhow::ensure!(
+                        meta.m == m,
+                        "artifact m={} but index m={m}; re-run make artifacts",
+                        meta.m
+                    );
+                    drop(probe);
+                    anyhow::ensure!(
+                        lk <= meta.k,
+                        "index uses {lk} hashes > artifact capacity {}",
+                        meta.k
+                    );
+                    let (a_dk, b) = engine.concat_family_inputs(meta.k);
+                    HashBackend::Pjrt { meta, a_dk, b }
+                }
+                Err(e) => {
+                    crate::log_info!(
+                        "PJRT runtime unavailable ({e:#}); batcher using fused CPU hashing"
+                    );
+                    HashBackend::Fused
+                }
             }
         };
         let max_batch = match &backend {

@@ -143,7 +143,10 @@ impl MipsEngine {
 
     /// The flat `(a, b)` artifact inputs spanning all L tables: columns
     /// `t*K..(t+1)*K` of `a` are table t's family, zero-padded up to
-    /// `k_total` columns (the artifact's fixed K).
+    /// `k_total` columns (the artifact's fixed K). L2-ALSH only — the
+    /// batcher never calls this for SRP-scheme engines (they hash
+    /// through the fused CPU path), and an SRP index has no L2 families
+    /// to concatenate.
     pub fn concat_family_inputs(&self, k_total: usize) -> (Vec<f32>, Vec<f32>) {
         let p = self.index.params();
         let dp = self.index.dim() + p.m;

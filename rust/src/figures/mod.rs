@@ -10,6 +10,7 @@
 //! | 6 | Netflix precision–recall          | `run_pr_figure`      |
 //! | 7 | ALSH sensitivity to r             | `fig7_r_sensitivity` |
 //! | 8 (ext) | L2-ALSH vs Sign-ALSH ablation | `fig8_sign_ablation` |
+//! | 9 (ext) | Sign-ALSH vs L2-ALSH ρ\* curves | `fig9_sign_vs_l2` |
 //!
 //! Each function returns CSV-ready rows; the `repro figure N` CLI prints
 //! them and writes `results/figN_*.csv`.
@@ -18,7 +19,9 @@ pub mod pr_figs;
 pub mod theory_figs;
 
 pub use pr_figs::{fig7_r_sensitivity, fig8_sign_ablation, run_pr_figure, PrPoint};
-pub use theory_figs::{fig1_rho_star, fig2_optimal_params, fig3_recommended, fig4_collision};
+pub use theory_figs::{
+    fig1_rho_star, fig2_optimal_params, fig3_recommended, fig4_collision, fig9_sign_vs_l2,
+};
 
 /// Write CSV text (header + rows) to `results/<name>.csv`, creating the
 /// directory if needed. Returns the path written.

@@ -1,6 +1,11 @@
-//! Figures 1–4: pure theory, regenerated from the closed forms.
+//! Figures 1–4: pure theory, regenerated from the closed forms — plus
+//! the Sign-ALSH-vs-L2-ALSH ρ\* comparison (the headline figure of
+//! Shrivastava & Li 2015, "Improved ALSH for MIPS").
 
-use crate::theory::{collision_probability, optimize_rho, rho_alsh, GridSpec};
+use crate::theory::{
+    collision_probability, optimize_rho, optimize_rho_sign, rho_alsh, rho_sign_alsh,
+    GridSpec,
+};
 
 /// The S0 fractions the paper plots (S0 = frac · U).
 pub const S0_FRACS: [f64; 5] = [0.9, 0.8, 0.7, 0.6, 0.5];
@@ -74,6 +79,35 @@ pub fn fig4_collision() -> String {
     csv
 }
 
+/// The Shrivastava & Li 2015 comparison figure: ρ\*-vs-c for Sign-ALSH
+/// next to L2-ALSH, plus both schemes' recommended fixed operating
+/// points (L2: m=3, U=0.83, r=2.5; Sign: m=2, U=0.75). CSV columns:
+/// `s0_frac,c,rho_l2_star,rho_sign_star,rho_l2_recommended,rho_sign_recommended`.
+/// Rows appear only where both schemes are feasible, so the curves are
+/// directly comparable point by point.
+pub fn fig9_sign_vs_l2(grid: &GridSpec) -> String {
+    let mut csv = String::from(
+        "s0_frac,c,rho_l2_star,rho_sign_star,rho_l2_recommended,rho_sign_recommended\n",
+    );
+    for &frac in &S0_FRACS {
+        for &c in &c_grid() {
+            let l2 = optimize_rho(frac, c, grid);
+            let sign = optimize_rho_sign(frac, c, grid);
+            let l2_fixed = rho_alsh(frac * 0.83, c, 0.83, 3, 2.5);
+            let sign_fixed = rho_sign_alsh(frac * 0.75, c, 0.75, 2);
+            if let (Some(l2), Some(sign), Some(l2_fixed), Some(sign_fixed)) =
+                (l2, sign, l2_fixed, sign_fixed)
+            {
+                csv.push_str(&format!(
+                    "{frac},{c:.2},{:.6},{:.6},{l2_fixed:.6},{sign_fixed:.6}\n",
+                    l2.rho, sign.rho
+                ));
+            }
+        }
+    }
+    csv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +173,40 @@ mod tests {
                 "recommended params far from optimal at s0={} c={}: {} vs {}",
                 r[0], r[1], r[3], r[2]
             );
+        }
+    }
+
+    /// The 2015 comparison reproduced: Sign-ALSH ρ* dominates L2-ALSH ρ*
+    /// at every plotted (S0, c), both optima are sublinear, and both
+    /// columns increase in c (harder approximation => larger exponent).
+    #[test]
+    fn fig9_sign_dominates_l2() {
+        let rows = parse(&fig9_sign_vs_l2(&GridSpec::coarse()));
+        assert!(!rows.is_empty());
+        for r in &rows {
+            let (l2, sign) = (r[2], r[3]);
+            assert!(l2 > 0.0 && l2 < 1.0, "l2 rho* {l2} out of range");
+            assert!(sign > 0.0 && sign < 1.0, "sign rho* {sign} out of range");
+            assert!(
+                sign <= l2 + 1e-9,
+                "sign rho* {sign} > l2 rho* {l2} at s0={} c={}",
+                r[0],
+                r[1]
+            );
+            // Fixed operating points sit above their optima. The sign
+            // point (m=2, U=0.75) lies exactly on the coarse grid, so
+            // the bound is tight; the L2 point's U=0.83 falls between
+            // coarse-grid U values and may dip a hair below the grid
+            // minimum — allow that discretization slack.
+            assert!(r[4] >= l2 - 0.01 && r[5] >= sign - 1e-9);
+        }
+        for &frac in &S0_FRACS {
+            let mut prev = (0.0, 0.0);
+            for r in rows.iter().filter(|r| r[0] == frac) {
+                assert!(r[2] >= prev.0 - 1e-9, "l2 rho* not increasing in c");
+                assert!(r[3] >= prev.1 - 1e-9, "sign rho* not increasing in c");
+                prev = (r[2], r[3]);
+            }
         }
     }
 

@@ -10,8 +10,9 @@
 use super::banded::NormRangeIndex;
 use super::core::{AlshIndex, AlshParams, ScoredItem};
 use super::frozen::TableStats;
+use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 use super::scratch::{with_thread_scratch, QueryScratch};
-use crate::lsh::{FusedHasher, L2LshFamily};
+use crate::lsh::L2LshFamily;
 
 /// A flat or norm-range banded ALSH index behind one serving surface.
 pub enum AnyIndex {
@@ -79,7 +80,14 @@ impl AnyIndex {
         }
     }
 
-    /// The shared hash families (PJRT artifact inputs, code-fed paths).
+    /// The scheme the served index was built with.
+    pub fn scheme(&self) -> MipsHashScheme {
+        self.params().scheme
+    }
+
+    /// The shared L2LSH hash families (PJRT artifact inputs, code-fed
+    /// paths). **Panics** for SRP-scheme indexes — use
+    /// [`AnyIndex::scheme_families`].
     pub fn families(&self) -> &[L2LshFamily] {
         match self {
             AnyIndex::Flat(i) => i.families(),
@@ -87,8 +95,16 @@ impl AnyIndex {
         }
     }
 
+    /// The shared hash families, per scheme.
+    pub fn scheme_families(&self) -> &SchemeFamilies {
+        match self {
+            AnyIndex::Flat(i) => i.scheme_families(),
+            AnyIndex::Banded(i) => i.scheme_families(),
+        }
+    }
+
     /// The fused multi-table hasher (batcher fallback, benches).
-    pub fn hasher(&self) -> &FusedHasher {
+    pub fn hasher(&self) -> &SchemeHasher {
         match self {
             AnyIndex::Flat(i) => i.hasher(),
             AnyIndex::Banded(i) => i.hasher(),

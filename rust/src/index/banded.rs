@@ -34,11 +34,13 @@
 //!
 //! # The shared-query-codes trick
 //!
-//! The query transform `Q(q) = [q/‖q‖; ½; …; ½]` (Eq. 13) does **not**
-//! depend on the data-side scale, and all bands share one
-//! [`FusedHasher`] family set (same seed-derived projections as the flat
-//! index). So a query is Q-transformed and hashed **once** — one fused
-//! matvec for all `L·K` codes — and the same code block is replayed
+//! The query transform — `Q(q) = [q/‖q‖; ½; …; ½]` (Eq. 13) for
+//! L2-ALSH, `[q/‖q‖; 0; …]` for the SRP schemes — does **not** depend
+//! on the data-side scale, and all bands share one fused family set
+//! ([`crate::index::SchemeHasher`], same seed-derived projections as
+//! the flat index). So a query is Q-transformed and hashed **once** —
+//! one fused matvec for all `L·K` codes — and the same code block is
+//! replayed
 //! against every band's CSR tables. Per-band postings are band-local ids;
 //! they are translated to global ids through the band's sorted id map as
 //! they stream into the **shared** stamp-dedup scratch, and one global
@@ -74,9 +76,10 @@ use crate::util::Rng;
 use super::build::{build_tables, run_bytes_estimate, BuildOpts, BuildStats};
 use super::core::{run_query_batch, AlshParams, ScoredItem};
 use super::frozen::{FrozenTable, TableStats};
+use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 use super::scratch::{with_thread_scratch, DedupSink, QueryScratch};
-use crate::lsh::{FusedHasher, L2LshFamily};
-use crate::transform::{l2_norm, q_transform_into, scale_p_transform_slice, UScale};
+use crate::lsh::L2LshFamily;
+use crate::transform::{l2_norm, UScale};
 
 /// Parameters of the norm-range partition.
 #[derive(Clone, Copy, Debug)]
@@ -166,11 +169,12 @@ pub struct NormRangeIndex {
     params: AlshParams,
     banded: BandedParams,
     /// One K-wide family per table — the *same* sampling as the flat
-    /// index at equal seed (retained for persistence and code-fed paths).
-    families: Vec<L2LshFamily>,
-    /// The families stacked into one `[L·K × (D+m)]` matrix, shared by
+    /// index at equal seed and scheme (retained for persistence and
+    /// code-fed paths), stored per scheme.
+    families: SchemeFamilies,
+    /// The families stacked into one `[L·K × D']` matrix, shared by
     /// every band.
-    fused: FusedHasher,
+    fused: SchemeHasher,
     /// Bands in ascending-norm order.
     bands: Vec<Band>,
     /// Original (unscaled) item vectors, row-major by *global* id — the
@@ -209,13 +213,19 @@ impl NormRangeIndex {
         let n = items.len();
         let b = banded.n_bands.max(1).min(n);
 
-        // Same family sampling as the flat index at equal seed: the
-        // query-side codes are interchangeable between the two.
+        // Same family sampling as the flat index at equal seed and
+        // scheme: the query-side codes are interchangeable between the
+        // two.
+        let scheme = params.scheme;
         let mut rng = Rng::seed_from_u64(seed);
-        let families: Vec<L2LshFamily> = (0..params.n_tables)
-            .map(|_| L2LshFamily::sample(dim + params.m, params.k_per_table, params.r, &mut rng))
-            .collect();
-        let fused = FusedHasher::from_families(&families);
+        let families = scheme.sample_families(
+            dim + scheme.append_len(params.m),
+            params.k_per_table,
+            params.n_tables,
+            params.r,
+            &mut rng,
+        );
+        let fused = families.fuse();
 
         // Equal-count split over sorted norms; ties broken by id so the
         // partition is deterministic. Within each band, ids are restored
@@ -297,7 +307,7 @@ impl NormRangeIndex {
             let ids = &band_ids[band_idx];
             let factor = scales[band_idx].factor;
             build_tables(ids.len(), &fused, band_opts, |local, row| {
-                scale_p_transform_slice(&items[ids[local] as usize], factor, m, row)
+                scheme.data_row_into(&items[ids[local] as usize], factor, m, row)
             })
         };
         let mut built: Vec<Option<(Vec<FrozenTable>, BuildStats)>> =
@@ -393,13 +403,28 @@ impl NormRangeIndex {
         self.dim
     }
 
-    /// The shared hash families (persistence / code-fed paths).
+    /// The scheme this index was built with.
+    pub fn scheme(&self) -> MipsHashScheme {
+        self.params.scheme
+    }
+
+    /// The shared L2LSH hash families (code-fed reference paths).
+    /// **Panics** for SRP-scheme indexes — use
+    /// [`NormRangeIndex::scheme_families`].
     pub fn families(&self) -> &[L2LshFamily] {
+        self.families.as_l2().expect(
+            "families(): this index runs an SRP scheme (sign-alsh / simple-lsh); \
+             use scheme_families() for scheme-generic access",
+        )
+    }
+
+    /// The shared hash families, per scheme (persistence, diagnostics).
+    pub fn scheme_families(&self) -> &SchemeFamilies {
         &self.families
     }
 
     /// The shared fused multi-table hasher.
-    pub fn hasher(&self) -> &FusedHasher {
+    pub fn hasher(&self) -> &SchemeHasher {
         &self.fused
     }
 
@@ -431,7 +456,11 @@ impl NormRangeIndex {
     /// [`super::AlshIndex::scratch`]).
     pub fn scratch(&self) -> QueryScratch {
         let mut s = QueryScratch::new();
-        s.reserve(self.n_items, self.fused.n_codes(), self.dim + self.params.m);
+        s.reserve(
+            self.n_items,
+            self.fused.n_codes(),
+            self.dim + self.params.scheme.append_len(self.params.m),
+        );
         s
     }
 
@@ -450,10 +479,14 @@ impl NormRangeIndex {
         mut counts: Option<&mut Vec<usize>>,
     ) {
         let k = self.params.k_per_table;
+        let scheme = self.params.scheme;
         for band in &self.bands {
             let before = sink.len();
             for (t, table) in band.tables.iter().enumerate() {
-                sink.extend_mapped(table.get(&codes[t * k..(t + 1) * k]), &band.ids);
+                sink.extend_mapped(
+                    table.get_by_key(scheme.table_key(&codes[t * k..(t + 1) * k])),
+                    &band.ids,
+                );
             }
             if let Some(c) = counts.as_deref_mut() {
                 c.push(sink.len() - before);
@@ -472,7 +505,7 @@ impl NormRangeIndex {
     /// against every band, dedup into first-seen global-id order.
     pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
-        q_transform_into(query, self.params.m, &mut s.qx);
+        self.params.scheme.query_into(query, self.params.m, &mut s.qx);
         s.hash_codes(&self.fused);
         self.probe_scratch_codes(s);
         &s.cands
@@ -505,7 +538,7 @@ impl NormRangeIndex {
         counts: &mut Vec<usize>,
     ) {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
-        q_transform_into(query, self.params.m, &mut s.qx);
+        self.params.scheme.query_into(query, self.params.m, &mut s.qx);
         s.hash_codes(&self.fused);
         counts.clear();
         let (mut sink, codes, _, _) = s.dedup(self.n_items);
@@ -527,8 +560,8 @@ impl NormRangeIndex {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
         assert!(n_probes >= 1);
         let p = self.params;
-        q_transform_into(query, p.m, &mut s.qx);
-        s.hash_codes_with_fracs(&self.fused);
+        p.scheme.query_into(query, p.m, &mut s.qx);
+        s.hash_codes_with_conf(&self.fused);
         let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items);
         for t in 0..p.n_tables {
             let base = t * p.k_per_table;
@@ -536,6 +569,7 @@ impl NormRangeIndex {
             // `super::multiprobe`); each key — base and perturbed —
             // replays against all B bands.
             super::multiprobe::for_each_probe_key(
+                p.scheme,
                 &mut codes[base..base + p.k_per_table],
                 &fracs[base..base + p.k_per_table],
                 perturbs,
@@ -621,6 +655,7 @@ impl NormRangeIndex {
     ) {
         run_query_batch(
             &self.fused,
+            self.params.scheme,
             self.params.m,
             self.dim,
             &self.items_flat,
@@ -677,7 +712,7 @@ impl NormRangeIndex {
     pub(crate) fn from_parts(
         params: AlshParams,
         banded: BandedParams,
-        families: Vec<L2LshFamily>,
+        families: SchemeFamilies,
         bands: Vec<Band>,
         items_flat: Vec<f32>,
         dim: usize,
@@ -708,7 +743,7 @@ impl NormRangeIndex {
             seen.iter().all(|&v| v),
             "corrupt index file: bands do not cover every item"
         );
-        let fused = FusedHasher::from_families(&families);
+        let fused = families.fuse();
         Ok(Self { params, banded, families, fused, bands, items_flat, dim, n_items })
     }
 }

@@ -6,12 +6,14 @@
 //! 1. **Shard** — the item id range is split into contiguous shards, one
 //!    per worker thread (`std::thread::scope`; no external deps).
 //! 2. **Block transform + hash** — each worker fills a flat
-//!    `[block × (D+m)]` buffer with transformed item rows (the `_slice`
-//!    transform variants) and hashes the whole block through
-//!    [`FusedHasher::hash_batch_into`] — matrix–matrix hashing on the
-//!    build side, mirroring the query batcher.
+//!    `[block × D']` buffer with transformed item rows (the scheme's
+//!    `_slice` transform variant) and hashes the whole block through
+//!    [`SchemeHasher::hash_batch_into`] — matrix–matrix hashing on the
+//!    build side, mirroring the query batcher, for whichever hash
+//!    scheme the index runs.
 //! 3. **Postings runs** — each worker reduces every item's K codes per
-//!    table to a u64 bucket key and accumulates per-table
+//!    table to a u64 bucket key (avalanche-mixed for L2 codes,
+//!    bit-packed for SRP sign bits) and accumulates per-table
 //!    `(key, item id)` runs, then sorts each run by `(key, id)`.
 //! 4. **Counting merge** — the sorted shard runs are merged (tables in
 //!    parallel) with [`FrozenTable::from_sorted_runs`]'s two-pass
@@ -30,9 +32,8 @@
 //! paths.
 
 use super::frozen::FrozenTable;
-use super::hash_table::bucket_key;
+use super::scheme::SchemeHasher;
 use super::scratch::BuildScratch;
-use crate::lsh::FusedHasher;
 
 /// Options controlling the build pipeline. The options trade build speed
 /// and memory only — the built index is byte-identical for every choice.
@@ -99,10 +100,13 @@ pub struct BuildStats {
 type ShardRuns = Vec<Vec<(u64, u32)>>;
 
 /// Hash items `start..end` in blocks; `fill_row(id, row)` writes item
-/// `id`'s transformed `fused.dim()`-long input row.
+/// `id`'s transformed `fused.dim()`-long input row. Bucket keys come
+/// from the hasher variant itself ([`SchemeHasher::table_key`]:
+/// avalanche mix for L2 codes, bit-pack for SRP sign bits), so build
+/// and query keys can never disagree.
 fn hash_shard<F: Fn(usize, &mut [f32])>(
     fill_row: &F,
-    fused: &FusedHasher,
+    fused: &SchemeHasher,
     start: usize,
     end: usize,
     block: usize,
@@ -125,7 +129,7 @@ fn hash_shard<F: Fn(usize, &mut [f32])>(
             let id = (at + i) as u32;
             let code_row = &codes[i * nc..(i + 1) * nc];
             for (t, run) in runs.iter_mut().enumerate() {
-                run.push((bucket_key(&code_row[t * k..(t + 1) * k]), id));
+                run.push((fused.table_key(&code_row[t * k..(t + 1) * k]), id));
             }
         }
         at += rows;
@@ -145,7 +149,7 @@ fn hash_shard<F: Fn(usize, &mut [f32])>(
 /// `fused.dim()`); it must be pure — workers call it concurrently.
 pub(crate) fn build_tables<F>(
     n_items: usize,
-    fused: &FusedHasher,
+    fused: &SchemeHasher,
     opts: &BuildOpts,
     fill_row: F,
 ) -> (Vec<FrozenTable>, BuildStats)
@@ -225,14 +229,14 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lsh::L2LshFamily;
+    use crate::lsh::{FusedHasher, L2LshFamily};
     use crate::util::Rng;
 
-    fn fused(l: usize, dim: usize, k: usize, seed: u64) -> FusedHasher {
+    fn fused(l: usize, dim: usize, k: usize, seed: u64) -> SchemeHasher {
         let mut rng = Rng::seed_from_u64(seed);
         let fams: Vec<L2LshFamily> =
             (0..l).map(|_| L2LshFamily::sample(dim, k, 2.5, &mut rng)).collect();
-        FusedHasher::from_families(&fams)
+        SchemeHasher::L2(FusedHasher::from_families(&fams))
     }
 
     fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {

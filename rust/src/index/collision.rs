@@ -4,6 +4,11 @@
 //! `Matches_j = Σ_t 1(h_t(query) = h_t(item_j))` and items are ranked by
 //! that count. Figures 5–7 are precision–recall curves of this ranking
 //! against the exact top-T inner products.
+//!
+//! [`Scheme`] here is the *evaluation-protocol* selector for this ranker
+//! (it predates the serving-side scheme layer and carries per-variant
+//! `m`); the production indexes select their construction through
+//! [`crate::index::MipsHashScheme`] instead.
 
 use crate::util::Rng;
 

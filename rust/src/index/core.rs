@@ -25,23 +25,35 @@ use crate::util::Rng;
 
 use super::build::{self, BuildOpts, BuildStats};
 use super::frozen::{FrozenTable, TableStats};
+use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 use super::scratch::{with_thread_scratch, QueryScratch};
-use crate::lsh::{FusedHasher, L2LshFamily};
-use crate::transform::{q_transform_into, scale_p_transform_slice, UScale};
+use crate::lsh::L2LshFamily;
+use crate::transform::UScale;
 
 /// Parameters of a bucketed ALSH index.
 #[derive(Clone, Copy, Debug)]
 pub struct AlshParams {
-    /// Number of norm-power components appended by P/Q (paper recommends 3).
+    /// Number of norm-power components appended by P/Q (paper recommends
+    /// 3 for L2-ALSH; Shrivastava & Li 2015 recommend 2 for Sign-ALSH;
+    /// ignored by Simple-LSH, whose transform is single-append).
     pub m: usize,
-    /// Norm shrink target U (paper recommends 0.83).
+    /// Norm shrink target U (paper recommends 0.83; Sign-ALSH 0.75).
     pub u: f32,
     /// Quantization width r of the L2LSH family (paper recommends 2.5).
+    /// Unused by the SRP schemes (sign bits have no bucket width).
     pub r: f32,
-    /// Codes concatenated per table (meta-hash width K).
+    /// Codes concatenated per table (meta-hash width K). For the SRP
+    /// schemes these are sign *bits* packed into one u64 bucket key, so
+    /// K <= 64 — and an SRP bit carries less selectivity than an L2
+    /// quantization cell, so SRP operating points want a larger K (see
+    /// [`AlshParams::recommended`]).
     pub k_per_table: usize,
     /// Number of hash tables L.
     pub n_tables: usize,
+    /// Which asymmetric construction to run (transforms + hash family +
+    /// bucket keys) — see [`MipsHashScheme`]. Defaults to the paper's
+    /// L2-ALSH.
+    pub scheme: MipsHashScheme,
 }
 
 impl Default for AlshParams {
@@ -50,7 +62,38 @@ impl Default for AlshParams {
         // (top1-in-top10 ≈ 0.85-0.95 across workloads); raise K /
         // lower L to trade recall for fewer probed candidates — see
         // `examples/param_sweep.rs` for the measured trade-off curve.
-        Self { m: 3, u: 0.83, r: 2.5, k_per_table: 6, n_tables: 32 }
+        Self {
+            m: 3,
+            u: 0.83,
+            r: 2.5,
+            k_per_table: 6,
+            n_tables: 32,
+            scheme: MipsHashScheme::L2Alsh,
+        }
+    }
+}
+
+impl AlshParams {
+    /// The literature-recommended operating point per scheme: the paper's
+    /// §3.5 values for L2-ALSH, Shrivastava & Li 2015's (m=2, U=0.75)
+    /// for Sign-ALSH, and a matching bit budget for Simple-LSH. The SRP
+    /// schemes run wider K (1-bit codes are individually far less
+    /// selective than L2 quantization cells at r=2.5).
+    pub fn recommended(scheme: MipsHashScheme) -> Self {
+        match scheme {
+            MipsHashScheme::L2Alsh => Self::default(),
+            MipsHashScheme::SignAlsh => Self {
+                m: 2,
+                u: 0.75,
+                k_per_table: 16,
+                n_tables: 32,
+                scheme,
+                ..Self::default()
+            },
+            MipsHashScheme::SimpleLsh => {
+                Self { k_per_table: 16, n_tables: 32, scheme, ..Self::default() }
+            }
+        }
     }
 }
 
@@ -69,7 +112,8 @@ const QUERY_BATCH_BLOCK: usize = 256;
 /// the per-query paths.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_query_batch<P: Fn(&mut QueryScratch)>(
-    fused: &FusedHasher,
+    fused: &SchemeHasher,
+    scheme: MipsHashScheme,
     m: usize,
     dim: usize,
     items_flat: &[f32],
@@ -89,7 +133,7 @@ pub(crate) fn run_query_batch<P: Fn(&mut QueryScratch)>(
     }
     let nc = fused.n_codes();
     for chunk in queries.chunks(QUERY_BATCH_BLOCK) {
-        s.hash_codes_batch(fused, chunk, m);
+        s.hash_codes_batch(fused, scheme, chunk, m);
         for (i, q) in chunk.iter().enumerate() {
             s.stage_batch_codes(i, nc);
             probe(s);
@@ -115,11 +159,12 @@ pub struct ScoredItem {
 pub struct AlshIndex {
     params: AlshParams,
     scale: UScale,
-    /// One K-wide hash family per table, over dimension D + m (retained
-    /// for persistence, the PJRT artifact inputs, and reference paths).
-    families: Vec<L2LshFamily>,
-    /// The same families stacked into one `[L·K × (D+m)]` matrix.
-    fused: FusedHasher,
+    /// One K-wide hash family per table, over dimension D' = D +
+    /// `scheme.append_len(m)` (retained for persistence, the PJRT
+    /// artifact inputs, and reference paths), stored per scheme.
+    families: SchemeFamilies,
+    /// The same families stacked into one `[L·K × D']` matrix.
+    fused: SchemeHasher,
     /// Frozen CSR tables (build-side `HashMap` form is dropped after build).
     tables: Vec<FrozenTable>,
     /// Original (unscaled) item vectors, row-major — used for exact rerank.
@@ -155,16 +200,21 @@ impl AlshIndex {
         assert!(!items.is_empty(), "empty item collection");
         let dim = items[0].len();
         assert!(items.iter().all(|v| v.len() == dim), "ragged item dims");
+        let scheme = params.scheme;
         let scale = UScale::fit(items.iter().map(|v| v.as_slice()), params.u);
         let mut rng = Rng::seed_from_u64(seed);
-        let families: Vec<L2LshFamily> = (0..params.n_tables)
-            .map(|_| L2LshFamily::sample(dim + params.m, params.k_per_table, params.r, &mut rng))
-            .collect();
-        let fused = FusedHasher::from_families(&families);
+        let families = scheme.sample_families(
+            dim + scheme.append_len(params.m),
+            params.k_per_table,
+            params.n_tables,
+            params.r,
+            &mut rng,
+        );
+        let fused = families.fuse();
         let factor = scale.factor;
         let m = params.m;
         let (tables, stats) = build::build_tables(items.len(), &fused, &opts, |id, row| {
-            scale_p_transform_slice(&items[id], factor, m, row)
+            scheme.data_row_into(&items[id], factor, m, row)
         });
         let mut items_flat = Vec::with_capacity(items.len() * dim);
         for item in items {
@@ -191,13 +241,28 @@ impl AlshIndex {
         &self.scale
     }
 
-    /// The hash families (for the PJRT-accelerated build path).
+    /// The scheme this index was built with.
+    pub fn scheme(&self) -> MipsHashScheme {
+        self.params.scheme
+    }
+
+    /// The L2LSH hash families (the PJRT artifact inputs and code-fed
+    /// reference paths). **Panics** for SRP-scheme indexes — those have
+    /// no L2 families; use [`AlshIndex::scheme_families`].
     pub fn families(&self) -> &[L2LshFamily] {
+        self.families.as_l2().expect(
+            "families(): this index runs an SRP scheme (sign-alsh / simple-lsh); \
+             use scheme_families() for scheme-generic access",
+        )
+    }
+
+    /// The hash families, per scheme (persistence, diagnostics).
+    pub fn scheme_families(&self) -> &SchemeFamilies {
         &self.families
     }
 
     /// The fused multi-table hasher (batcher fallback, benches).
-    pub fn hasher(&self) -> &FusedHasher {
+    pub fn hasher(&self) -> &SchemeHasher {
         &self.fused
     }
 
@@ -213,7 +278,11 @@ impl AlshIndex {
     /// (asserted by `tests/zero_alloc.rs`).
     pub fn scratch(&self) -> QueryScratch {
         let mut s = QueryScratch::new();
-        s.reserve(self.n_items, self.fused.n_codes(), self.dim + self.params.m);
+        s.reserve(
+            self.n_items,
+            self.fused.n_codes(),
+            self.dim + self.params.scheme.append_len(self.params.m),
+        );
         s
     }
 
@@ -221,7 +290,7 @@ impl AlshIndex {
     pub(crate) fn from_parts(
         params: AlshParams,
         scale: UScale,
-        families: Vec<L2LshFamily>,
+        families: SchemeFamilies,
         tables: Vec<FrozenTable>,
         items_flat: Vec<f32>,
         dim: usize,
@@ -230,7 +299,7 @@ impl AlshIndex {
         assert_eq!(families.len(), params.n_tables);
         assert_eq!(tables.len(), params.n_tables);
         assert_eq!(items_flat.len(), dim * n_items);
-        let fused = FusedHasher::from_families(&families);
+        let fused = families.fuse();
         Self { params, scale, families, fused, tables, items_flat, dim, n_items }
     }
 
@@ -244,9 +313,10 @@ impl AlshIndex {
     /// `s.cands`.
     fn probe_scratch_codes(&self, s: &mut QueryScratch) {
         let k = self.params.k_per_table;
+        let scheme = self.params.scheme;
         let (mut sink, codes, _, _) = s.dedup(self.n_items);
         for (t, table) in self.tables.iter().enumerate() {
-            sink.extend(table.get(&codes[t * k..(t + 1) * k]));
+            sink.extend(table.get_by_key(scheme.table_key(&codes[t * k..(t + 1) * k])));
         }
     }
 
@@ -254,7 +324,7 @@ impl AlshIndex {
     /// buckets across all L tables, deduplicated, in first-seen order.
     pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
-        q_transform_into(query, self.params.m, &mut s.qx);
+        self.params.scheme.query_into(query, self.params.m, &mut s.qx);
         s.hash_codes(&self.fused);
         self.probe_scratch_codes(s);
         &s.cands
@@ -280,10 +350,11 @@ impl AlshIndex {
         s: &'s mut QueryScratch,
     ) -> &'s [u32] {
         let k = self.params.k_per_table;
+        let scheme = self.params.scheme;
         assert_eq!(codes_flat.len(), k * self.params.n_tables);
         let (mut sink, _, _, _) = s.dedup(self.n_items);
         for (t, table) in self.tables.iter().enumerate() {
-            sink.extend(table.get(&codes_flat[t * k..(t + 1) * k]));
+            sink.extend(table.get_by_key(scheme.table_key(&codes_flat[t * k..(t + 1) * k])));
         }
         &s.cands
     }
@@ -316,7 +387,7 @@ impl AlshIndex {
 
     /// Batch query path for offline evaluation (figures, gold scans,
     /// parameter sweeps): Q-transforms and hashes queries in fused
-    /// **matrix–matrix** chunks ([`FusedHasher::hash_batch_into`], the
+    /// **matrix–matrix** chunks ([`SchemeHasher::hash_batch_into`], the
     /// same kernel the coordinator batcher uses), then probes and exactly
     /// reranks each query. Results land in `out` (one top-k `Vec` per
     /// query, cleared first) and are identical to per-query
@@ -358,6 +429,7 @@ impl AlshIndex {
     ) {
         run_query_batch(
             &self.fused,
+            self.params.scheme,
             self.params.m,
             self.dim,
             &self.items_flat,

@@ -1,4 +1,7 @@
-//! Bucket-key mixing for the (K, L) hash tables.
+//! Bucket-key construction for the (K, L) hash tables: the avalanche mix
+//! for L2LSH code vectors ([`bucket_key`]) and the bit-pack for SRP sign
+//! bits ([`srp_bucket_key`]); [`crate::index::MipsHashScheme::table_key`]
+//! picks per scheme.
 //!
 //! The mutable `HashMap`-backed build-side `HashTable` that used to live
 //! here is gone: the build pipeline now streams `(bucket key, item id)`
@@ -24,6 +27,25 @@ pub fn bucket_key(codes: &[i32]) -> u64 {
     h
 }
 
+/// Pack K SRP sign codes into one u64 bucket key word: bit `j` is set
+/// iff `codes[j] > 0`. The in-tree hashers emit 0/1 codes, and the
+/// sign-bit rule also maps a ±1 convention (e.g. an external SimHash
+/// producer feeding the code-fed API) to the same key space instead of
+/// silently packing garbage. No avalanche mix: the key *is* the K-bit
+/// SimHash signature, which is what lets multi-probe flip individual
+/// bits with `key ^ (1 << j)` ([`crate::index::multiprobe`]). Distinct
+/// signatures map to distinct keys, so there are no key collisions at
+/// all (K <= 64 is asserted at `FusedSrpHasher` construction).
+#[inline]
+pub fn srp_bucket_key(codes: &[i32]) -> u64 {
+    debug_assert!(codes.len() <= 64, "SRP key packs at most 64 bits");
+    let mut key = 0u64;
+    for (j, &c) in codes.iter().enumerate() {
+        key |= ((c > 0) as u64) << j;
+    }
+    key
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -41,6 +63,32 @@ mod tests {
     #[test]
     fn key_deterministic() {
         assert_eq!(bucket_key(&[5, -7, 123]), bucket_key(&[5, -7, 123]));
+    }
+
+    #[test]
+    fn srp_key_packs_bits_exactly() {
+        assert_eq!(srp_bucket_key(&[]), 0);
+        assert_eq!(srp_bucket_key(&[1]), 1);
+        assert_eq!(srp_bucket_key(&[0, 1]), 2);
+        assert_eq!(srp_bucket_key(&[1, 0, 1, 1]), 0b1101);
+        // Bit j of the key is code j; flipping one code is one XOR.
+        let codes = [1, 0, 0, 1, 1, 0, 1, 0];
+        let base = srp_bucket_key(&codes);
+        for j in 0..codes.len() {
+            let mut flipped = codes;
+            flipped[j] ^= 1;
+            assert_eq!(srp_bucket_key(&flipped), base ^ (1u64 << j), "bit {j}");
+        }
+        // Distinct signatures are distinct keys (injective packing).
+        let mut seen = std::collections::HashSet::new();
+        for bits in 0..(1u64 << 6) {
+            let codes: Vec<i32> = (0..6).map(|j| ((bits >> j) & 1) as i32).collect();
+            assert!(seen.insert(srp_bucket_key(&codes)));
+        }
+        // A ±1 sign convention maps onto the same key space (sign bit =
+        // positive), so external code-fed producers can't silently
+        // collapse every code to the same bit.
+        assert_eq!(srp_bucket_key(&[1, -1, 1, -1]), srp_bucket_key(&[1, 0, 1, 0]));
     }
 
     #[test]

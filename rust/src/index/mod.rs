@@ -13,7 +13,13 @@
 //! The bucketed mode serves in two layouts behind [`AnyIndex`]: the flat
 //! single-scale [`AlshIndex`] and the norm-range partitioned
 //! [`NormRangeIndex`] ([`banded`]: per-band U scaling, shared hash
-//! families, queries hashed once and replayed across bands).
+//! families, queries hashed once and replayed across bands). Both layouts
+//! run any of three hash **schemes** behind [`MipsHashScheme`]
+//! ([`scheme`]): the paper's L2-ALSH, Sign-ALSH (SRP over the sign
+//! transforms, Shrivastava & Li 2015), and Simple-LSH (single-append
+//! symmetric SRP, Neyshabur & Srebro 2015) — selected by
+//! [`AlshParams::scheme`] and carried end to end through build, serve,
+//! multi-probe, and persistence.
 
 pub mod any;
 pub mod banded;
@@ -25,6 +31,7 @@ pub mod hash_table;
 pub mod multiprobe;
 pub mod persist;
 mod rerank;
+pub mod scheme;
 pub mod scratch;
 mod simd;
 
@@ -34,4 +41,5 @@ pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
 pub use frozen::{FrozenTable, TableStats};
+pub use scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 pub use scratch::QueryScratch;

@@ -1,42 +1,65 @@
 //! Multi-probe querying (Lv et al. 2007, adapted to ALSH) — an extension
 //! that recovers recall with far fewer tables by also probing buckets
-//! whose codes differ by ±1 in the least-confident coordinates.
+//! whose codes differ in the least-confident coordinates, per scheme:
 //!
-//! For each table, the base probe uses codes `c_i = floor(t_i)` where
-//! `t_i = (a_iᵀQ(q) + b_i)/r`. The fractional part `f_i = t_i − c_i`
-//! measures confidence: `f_i` near 0 means the point was close to the
-//! bucket below (perturb −1), near 1 means close to the bucket above
-//! (perturb +1). We rank single-coordinate perturbations by boundary
-//! distance and probe the best `n_probes − 1` extra buckets per table.
+//! * **L2 codes** — the base probe uses codes `c_i = floor(t_i)` where
+//!   `t_i = (a_iᵀQ(q) + b_i)/r`. The fractional part `f_i = t_i − c_i`
+//!   measures confidence: `f_i` near 0 means the point was close to the
+//!   bucket below (perturb −1), near 1 means close to the bucket above
+//!   (perturb +1). Single-coordinate ±1 perturbations are ranked by
+//!   boundary distance.
+//! * **SRP sign bits** — each bit's confidence is its margin `|a_iᵀQ(q)|`
+//!   (distance of the projection to the sign boundary): a tiny margin
+//!   means the bit was nearly a coin flip. Single-bit flips are ranked by
+//!   ascending margin and probed as `base_key ^ (1 << i)` on the
+//!   bit-packed bucket key.
 //!
-//! The probe path shares the fused hasher (codes + fractional parts in one
-//! blocked pass), the frozen CSR tables, and the caller's [`QueryScratch`]
-//! with the plain path — multi-probe queries are also allocation-free at
-//! steady state.
+//! The probe path shares the scheme's fused hasher (codes + confidence
+//! channel in one blocked pass), the frozen CSR tables, and the caller's
+//! [`QueryScratch`] with the plain path — multi-probe queries are also
+//! allocation-free at steady state for every scheme
+//! (`tests/zero_alloc.rs` covers both the L2 and SRP paths).
 
 use super::core::{AlshIndex, ScoredItem};
+use super::scheme::MipsHashScheme;
 use super::scratch::{with_thread_scratch, QueryScratch};
-use crate::index::hash_table::bucket_key;
-use crate::transform::q_transform_into;
+use crate::index::hash_table::{bucket_key, srp_bucket_key};
 
 /// Enumerate one table's probe bucket keys — the base key, then the best
-/// `n_probes − 1` single-coordinate ±1 perturbations ranked by boundary
-/// distance (`fracs_t` are the table's pre-floor fractional parts) —
-/// invoking `probe(key)` for each. This is the **one** implementation of
-/// the probe ordering, shared by the flat and banded indexes: the banded
-/// B = 1 byte-identity property depends on both enumerating keys in
-/// exactly this order. `codes_t` is perturbed in place and restored.
+/// `n_probes − 1` single-coordinate perturbations ranked by the scheme's
+/// confidence channel (`conf_t`: fractional parts for L2, sign margins
+/// for SRP) — invoking `probe(key)` for each. This is the **one**
+/// implementation of the probe ordering, shared by the flat and banded
+/// indexes: the banded B = 1 byte-identity property depends on both
+/// enumerating keys in exactly this order. For L2, `codes_t` is
+/// perturbed in place and restored; for SRP the packed key is flipped
+/// bitwise and `codes_t` is left untouched.
 pub(crate) fn for_each_probe_key(
+    scheme: MipsHashScheme,
     codes_t: &mut [i32],
-    fracs_t: &[f32],
+    conf_t: &[f32],
     perturbs: &mut Vec<(f32, usize, i32)>,
     n_probes: usize,
     mut probe: impl FnMut(u64),
 ) {
+    perturbs.clear();
+    if scheme.is_srp() {
+        // (margin, bit, unused): the closer aᵀx was to 0, the sooner the
+        // bit gets flipped.
+        for (k_idx, &margin) in conf_t.iter().enumerate() {
+            perturbs.push((margin, k_idx, 1));
+        }
+        perturbs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let base = srp_bucket_key(codes_t);
+        probe(base);
+        for &(_, k_idx, _) in perturbs.iter().take(n_probes - 1) {
+            probe(base ^ (1u64 << k_idx));
+        }
+        return;
+    }
     // (boundary distance, coordinate, delta): distance to the boundary
     // below is `frac`; above is `1 - frac`.
-    perturbs.clear();
-    for (k_idx, &frac) in fracs_t.iter().enumerate() {
+    for (k_idx, &frac) in conf_t.iter().enumerate() {
         perturbs.push((frac, k_idx, -1));
         perturbs.push((1.0 - frac, k_idx, 1));
     }
@@ -65,12 +88,13 @@ impl AlshIndex {
         assert_eq!(query.len(), self.dim(), "query dim mismatch");
         assert!(n_probes >= 1);
         let p = *self.params();
-        q_transform_into(query, p.m, &mut s.qx);
-        s.hash_codes_with_fracs(self.hasher());
+        p.scheme.query_into(query, p.m, &mut s.qx);
+        s.hash_codes_with_conf(self.hasher());
         let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items());
         for (t, table) in self.tables().iter().enumerate() {
             let base = t * p.k_per_table;
             for_each_probe_key(
+                p.scheme,
                 &mut codes[base..base + p.k_per_table],
                 &fracs[base..base + p.k_per_table],
                 perturbs,

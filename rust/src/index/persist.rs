@@ -1,13 +1,16 @@
 //! Index persistence: save/load built indexes to a compact binary file,
 //! so a service restart skips the (re)build.
 //!
-//! Format v3 adds an index-kind discriminator so one container format
-//! carries both layouts: the flat [`AlshIndex`] (kind 0, body identical
-//! to v2) and the norm-range banded [`NormRangeIndex`] (kind 1: shared
-//! families once, then per band its scale, norm range, sorted global-id
-//! map, and L frozen CSR tables over band-local ids). v2 files (flat,
-//! no kind field) still load. There is deliberately no v1 (HashMap
-//! bucket dump) read path: no shipping build ever produced a v1 file.
+//! Format v4 adds a **scheme discriminator** to the v3 header so one
+//! container format carries every (kind × scheme) combination: flat
+//! [`AlshIndex`] or norm-range banded [`NormRangeIndex`], running
+//! L2-ALSH, Sign-ALSH, or Simple-LSH ([`MipsHashScheme`]). The scheme
+//! sits in the header, right after the kind, so a wrong-scheme load is
+//! rejected from the first 16 bytes — the body (potentially gigabytes)
+//! is never decoded. v3 files (kind, no scheme — always L2-ALSH) and v2
+//! files (flat L2-ALSH, no kind) still load. There is deliberately no
+//! v1 (HashMap bucket dump) read path: no shipping build ever produced
+//! a v1 file.
 //!
 //! Tables are serialized in their frozen CSR form (sorted keys + offsets
 //! + contiguous postings), so loading is a straight read into the
@@ -17,11 +20,12 @@
 //! intermediates, no reallocation.
 //!
 //! ```text
-//! magic "ALSH" | version u32 (3) | kind u32 (0 flat, 1 banded)
-//! flat body (== the v2 body, which had no kind field):
+//! magic "ALSH" | version u32 (4) | kind u32 (0 flat, 1 banded)
+//!             | scheme u32 (0 l2-alsh, 1 sign-alsh, 2 simple-lsh)
+//! flat body (== the v2/v3 body for scheme 0):
 //!   params (m, u, r, K, L) | scale (u, factor, max_norm)
 //!   | dim u64 | n_items u64 | items_flat f32[n*dim]
-//!   | L × family { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
+//!   | L × family
 //!   | L × table { n_buckets u64, n_postings u64, keys u64[n_buckets],
 //!                 offsets u32[n_buckets+1], postings u32[n_postings] }
 //! banded body:
@@ -29,6 +33,8 @@
 //!   | L × family
 //!   | B × band { scale (u, factor, max_norm), min_norm f32, max_norm f32,
 //!                band_len u64, ids u32[band_len], L × table }
+//! family, scheme 0 (L2LSH):  { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
+//! family, schemes 1–2 (SRP): { dp u64, k u64, a f32[k*dp] }
 //! ```
 //!
 //! No external serialization crates exist in this environment (DESIGN.md
@@ -43,13 +49,16 @@ use super::any::AnyIndex;
 use super::banded::{Band, BandedParams, NormRangeIndex};
 use super::core::{AlshIndex, AlshParams};
 use super::frozen::FrozenTable;
-use crate::lsh::L2LshFamily;
+use super::scheme::{MipsHashScheme, SchemeFamilies};
+use crate::lsh::{L2LshFamily, SrpFamily};
 use crate::transform::UScale;
 
 const MAGIC: &[u8; 4] = b"ALSH";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
+/// Last version without the scheme field (kind only; always L2-ALSH).
+const VERSION_KIND_ONLY: u32 = 3;
 /// Last version without the kind field (flat body starts right after the
-/// version word).
+/// version word; always L2-ALSH).
 const VERSION_FLAT_ONLY: u32 = 2;
 const KIND_FLAT: u32 = 0;
 const KIND_BANDED: u32 = 1;
@@ -101,13 +110,24 @@ impl<W: Write> Writer<W> {
         self.f32(s.max_norm)
     }
 
-    fn families(&mut self, families: &[L2LshFamily]) -> std::io::Result<()> {
-        for fam in families {
-            self.u64(fam.dim() as u64)?;
-            self.u64(fam.k() as u64)?;
-            self.f32(fam.r())?;
-            self.f32s(&fam.a_scaled_raw())?;
-            self.f32s(fam.b_vector())?;
+    fn families(&mut self, families: &SchemeFamilies) -> std::io::Result<()> {
+        match families {
+            SchemeFamilies::L2(fams) => {
+                for fam in fams {
+                    self.u64(fam.dim() as u64)?;
+                    self.u64(fam.k() as u64)?;
+                    self.f32(fam.r())?;
+                    self.f32s(&fam.a_scaled_raw())?;
+                    self.f32s(fam.b_vector())?;
+                }
+            }
+            SchemeFamilies::Srp(fams) => {
+                for fam in fams {
+                    self.u64(fam.dim() as u64)?;
+                    self.u64(fam.k() as u64)?;
+                    self.f32s(fam.a_rows())?;
+                }
+            }
         }
         Ok(())
     }
@@ -191,12 +211,15 @@ impl<R: Read> Reader<R> {
     read_array!(u64s, u64, 8);
 
     fn params(&mut self) -> anyhow::Result<AlshParams> {
+        // The scheme is not part of the params block (it lives in the
+        // v4 header); callers overwrite the default after decoding.
         Ok(AlshParams {
             m: self.len(64, "m")?,
             u: self.f32()?,
             r: self.f32()?,
             k_per_table: self.len(1 << 20, "k_per_table")?,
             n_tables: self.len(1 << 20, "n_tables")?,
+            scheme: MipsHashScheme::L2Alsh,
         })
     }
 
@@ -204,13 +227,29 @@ impl<R: Read> Reader<R> {
         Ok(UScale { u: self.f32()?, factor: self.f32()?, max_norm: self.f32()? })
     }
 
-    fn families(&mut self, params: &AlshParams, dim: usize) -> anyhow::Result<Vec<L2LshFamily>> {
+    fn families(&mut self, params: &AlshParams, dim: usize) -> anyhow::Result<SchemeFamilies> {
+        let scheme = params.scheme;
+        let dp = dim + scheme.append_len(params.m);
+        if scheme.is_srp() {
+            let mut families = Vec::with_capacity(params.n_tables);
+            for _ in 0..params.n_tables {
+                let fdim = self.len(1 << 24, "family dim")?;
+                let fk = self.len(64, "family k")?;
+                anyhow::ensure!(
+                    fdim == dp && fk == params.k_per_table,
+                    "corrupt index file: family shape mismatch"
+                );
+                let a = self.f32s(fk * fdim)?;
+                families.push(SrpFamily::from_raw(fdim, fk, a));
+            }
+            return Ok(SchemeFamilies::Srp(families));
+        }
         let mut families = Vec::with_capacity(params.n_tables);
         for _ in 0..params.n_tables {
             let fdim = self.len(1 << 24, "family dim")?;
             let fk = self.len(1 << 20, "family k")?;
             anyhow::ensure!(
-                fdim == dim + params.m && fk == params.k_per_table,
+                fdim == dp && fk == params.k_per_table,
                 "corrupt index file: family shape mismatch"
             );
             let fr = self.f32()?;
@@ -218,7 +257,7 @@ impl<R: Read> Reader<R> {
             let b = self.f32s(fk)?;
             families.push(L2LshFamily::from_raw(fdim, fk, fr, a, b));
         }
-        Ok(families)
+        Ok(SchemeFamilies::L2(families))
     }
 
     /// `n_tables` frozen tables whose postings ids must be `< max_id`
@@ -246,12 +285,17 @@ fn write_flat_body<W: Write>(w: &mut Writer<W>, idx: &AlshIndex) -> std::io::Res
     for id in 0..idx.n_items() as u32 {
         w.f32s(idx.item(id))?;
     }
-    w.families(idx.families())?;
+    w.families(idx.scheme_families())?;
     w.tables(idx.tables())
 }
 
-fn read_flat_body<R: Read>(r: &mut Reader<R>) -> anyhow::Result<AlshIndex> {
-    let params = r.params()?;
+fn read_flat_body<R: Read>(
+    r: &mut Reader<R>,
+    scheme: MipsHashScheme,
+) -> anyhow::Result<AlshIndex> {
+    // The scheme is a header field, not part of the params block (the
+    // params block is byte-identical across v2–v4).
+    let params = AlshParams { scheme, ..r.params()? };
     let scale = r.scale()?;
     let dim = r.len(1 << 24, "dim")?;
     // Item ids are u32 throughout, so n_items is capped accordingly.
@@ -270,7 +314,7 @@ fn write_banded_body<W: Write>(w: &mut Writer<W>, idx: &NormRangeIndex) -> std::
     for id in 0..idx.n_items() as u32 {
         w.f32s(idx.item(id))?;
     }
-    w.families(idx.families())?;
+    w.families(idx.scheme_families())?;
     for band in idx.bands() {
         w.scale(band.scale())?;
         let (min_norm, max_norm) = band.norm_range();
@@ -283,8 +327,11 @@ fn write_banded_body<W: Write>(w: &mut Writer<W>, idx: &NormRangeIndex) -> std::
     Ok(())
 }
 
-fn read_banded_body<R: Read>(r: &mut Reader<R>) -> anyhow::Result<NormRangeIndex> {
-    let params = r.params()?;
+fn read_banded_body<R: Read>(
+    r: &mut Reader<R>,
+    scheme: MipsHashScheme,
+) -> anyhow::Result<NormRangeIndex> {
+    let params = AlshParams { scheme, ..r.params()? };
     let n_bands = r.len(u32::MAX as u64, "n_bands")?;
     anyhow::ensure!(n_bands >= 1, "corrupt index file: zero bands");
     let dim = r.len(1 << 24, "dim")?;
@@ -316,31 +363,48 @@ fn read_banded_body<R: Read>(r: &mut Reader<R>) -> anyhow::Result<NormRangeIndex
     )
 }
 
-/// Open `path`, check magic/version/kind, and decode whichever index kind
-/// the file holds (rejecting trailing garbage). When `want_kind` is set,
-/// a kind mismatch is rejected right after the 12-byte header — the
-/// wrong-kind body (potentially gigabytes of items and tables) is never
-/// decoded.
-fn load_file(path: &Path, want_kind: Option<u32>) -> anyhow::Result<AnyIndex> {
+/// Open `path`, check magic/version/kind/scheme, and decode whichever
+/// index the file holds (rejecting trailing garbage). When `want_kind` /
+/// `want_scheme` is set, a mismatch is rejected right after the 16-byte
+/// header — the wrong body (potentially gigabytes of items and tables)
+/// is never decoded.
+fn load_file(
+    path: &Path,
+    want_kind: Option<u32>,
+    want_scheme: Option<MipsHashScheme>,
+) -> anyhow::Result<AnyIndex> {
     let file = std::fs::File::open(path)?;
     let mut r = Reader::new(BufReader::new(file));
     let mut magic = [0u8; 4];
     r.r.read_exact(&mut magic)?;
     anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
     let version = r.u32()?;
-    let kind = match version {
-        // v2 files predate the kind field and are always flat.
-        VERSION_FLAT_ONLY => KIND_FLAT,
-        VERSION => {
+    let (kind, scheme) = match version {
+        // v2 files predate the kind and scheme fields: always flat L2.
+        VERSION_FLAT_ONLY => (KIND_FLAT, MipsHashScheme::L2Alsh),
+        // v3 files carry the kind but predate schemes: always L2.
+        VERSION_KIND_ONLY | VERSION => {
             let k = r.u32()?;
             anyhow::ensure!(
                 k == KIND_FLAT || k == KIND_BANDED,
                 "unknown index kind {k} (this build knows 0=flat, 1=banded)"
             );
-            k
+            let scheme = if version == VERSION {
+                let sid = r.u32()?;
+                MipsHashScheme::from_id(sid).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown hash scheme {sid} (this build knows 0=l2-alsh, \
+                         1=sign-alsh, 2=simple-lsh)"
+                    )
+                })?
+            } else {
+                MipsHashScheme::L2Alsh
+            };
+            (k, scheme)
         }
         other => anyhow::bail!(
-            "unsupported index version {other} (this build reads v{VERSION_FLAT_ONLY} and v{VERSION})"
+            "unsupported index version {other} (this build reads v{VERSION_FLAT_ONLY}, \
+             v{VERSION_KIND_ONLY} and v{VERSION})"
         ),
     };
     if let Some(want) = want_kind {
@@ -357,10 +421,17 @@ fn load_file(path: &Path, want_kind: Option<u32>) -> anyhow::Result<AnyIndex> {
             );
         }
     }
+    if let Some(want) = want_scheme {
+        anyhow::ensure!(
+            want == scheme,
+            "index file holds a {scheme} index but this deployment expects {want}; \
+             rebuild the index or load with the matching scheme (load_any accepts any)"
+        );
+    }
     let index = if kind == KIND_FLAT {
-        AnyIndex::Flat(read_flat_body(&mut r)?)
+        AnyIndex::Flat(read_flat_body(&mut r, scheme)?)
     } else {
-        AnyIndex::Banded(read_banded_body(&mut r)?)
+        AnyIndex::Banded(read_banded_body(&mut r, scheme)?)
     };
     // Reject trailing garbage.
     let mut extra = [0u8; 1];
@@ -371,31 +442,59 @@ fn load_file(path: &Path, want_kind: Option<u32>) -> anyhow::Result<AnyIndex> {
     Ok(index)
 }
 
-/// Load whichever index kind `path` holds (flat v2/v3 or banded v3).
+/// Load whichever index kind and scheme `path` holds (flat v2/v3/v4 or
+/// banded v3/v4, any scheme).
 pub fn load_any(path: impl AsRef<Path>) -> crate::Result<AnyIndex> {
-    load_file(path.as_ref(), None)
+    load_file(path.as_ref(), None, None)
+}
+
+/// [`load_any`] that additionally pins the hash scheme: a file built
+/// under a different scheme is rejected from its 16-byte header with a
+/// clear error — the deployment-safety check for services that hash
+/// queries with a fixed artifact or compare codes across processes.
+pub fn load_any_scheme(
+    path: impl AsRef<Path>,
+    scheme: MipsHashScheme,
+) -> crate::Result<AnyIndex> {
+    load_file(path.as_ref(), None, Some(scheme))
 }
 
 impl AlshIndex {
-    /// Serialize the index to `path` (v3, kind flat).
+    /// Serialize the index to `path` (v4, kind flat, scheme from
+    /// `params.scheme`).
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
         let file = std::fs::File::create(path.as_ref())?;
         let mut w = Writer { w: BufWriter::new(file) };
         w.w.write_all(MAGIC)?;
         w.u32(VERSION)?;
         w.u32(KIND_FLAT)?;
+        w.u32(self.params().scheme.id())?;
         write_flat_body(&mut w, self)?;
         w.w.flush()?;
         Ok(())
     }
 
     /// Load a **flat** index previously written by [`AlshIndex::save`]
-    /// (v3 kind 0, or a legacy v2 file). A banded file is rejected from
-    /// its header (before any body is decoded) with a pointer to
-    /// [`NormRangeIndex::load`]; use
-    /// [`load_any`](super::persist::load_any) when the kind is unknown.
+    /// (v4 kind 0, or a legacy v2/v3 file), whatever its scheme. A
+    /// banded file is rejected from its header (before any body is
+    /// decoded) with a pointer to [`NormRangeIndex::load`]; use
+    /// [`load_any`](super::persist::load_any) when the kind is unknown,
+    /// and [`AlshIndex::load_scheme`] to also pin the scheme.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
-        match load_file(path.as_ref(), Some(KIND_FLAT))? {
+        match load_file(path.as_ref(), Some(KIND_FLAT), None)? {
+            AnyIndex::Flat(index) => Ok(index),
+            AnyIndex::Banded(_) => unreachable!("load_file verified the kind"),
+        }
+    }
+
+    /// [`AlshIndex::load`] that additionally pins the hash scheme: a
+    /// file built under a different scheme is rejected from its header
+    /// with a clear error, before any body bytes are decoded.
+    pub fn load_scheme(
+        path: impl AsRef<Path>,
+        scheme: MipsHashScheme,
+    ) -> crate::Result<Self> {
+        match load_file(path.as_ref(), Some(KIND_FLAT), Some(scheme))? {
             AnyIndex::Flat(index) => Ok(index),
             AnyIndex::Banded(_) => unreachable!("load_file verified the kind"),
         }
@@ -403,25 +502,40 @@ impl AlshIndex {
 }
 
 impl NormRangeIndex {
-    /// Serialize the banded index to `path` (v3, kind banded).
+    /// Serialize the banded index to `path` (v4, kind banded, scheme
+    /// from `params.scheme`).
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
         let file = std::fs::File::create(path.as_ref())?;
         let mut w = Writer { w: BufWriter::new(file) };
         w.w.write_all(MAGIC)?;
         w.u32(VERSION)?;
         w.u32(KIND_BANDED)?;
+        w.u32(self.params().scheme.id())?;
         write_banded_body(&mut w, self)?;
         w.w.flush()?;
         Ok(())
     }
 
     /// Load a **banded** index previously written by
-    /// [`NormRangeIndex::save`]. A flat file is rejected from its header
-    /// (before any body is decoded) with a pointer to
-    /// [`AlshIndex::load`]; use [`load_any`](super::persist::load_any)
-    /// when the kind is unknown.
+    /// [`NormRangeIndex::save`], whatever its scheme. A flat file is
+    /// rejected from its header (before any body is decoded) with a
+    /// pointer to [`AlshIndex::load`]; use
+    /// [`load_any`](super::persist::load_any) when the kind is unknown,
+    /// and [`NormRangeIndex::load_scheme`] to also pin the scheme.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
-        match load_file(path.as_ref(), Some(KIND_BANDED))? {
+        match load_file(path.as_ref(), Some(KIND_BANDED), None)? {
+            AnyIndex::Banded(index) => Ok(index),
+            AnyIndex::Flat(_) => unreachable!("load_file verified the kind"),
+        }
+    }
+
+    /// [`NormRangeIndex::load`] that additionally pins the hash scheme
+    /// (rejected from the header on mismatch).
+    pub fn load_scheme(
+        path: impl AsRef<Path>,
+        scheme: MipsHashScheme,
+    ) -> crate::Result<Self> {
+        match load_file(path.as_ref(), Some(KIND_BANDED), Some(scheme))? {
             AnyIndex::Banded(index) => Ok(index),
             AnyIndex::Flat(_) => unreachable!("load_file verified the kind"),
         }
@@ -433,6 +547,8 @@ mod tests {
     use super::*;
     use crate::index::banded::BandedParams;
     use crate::util::Rng;
+
+    use super::super::scheme::MipsHashScheme;
 
     fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
         let mut rng = Rng::seed_from_u64(seed);
@@ -447,17 +563,33 @@ mod tests {
         dir.join(name)
     }
 
-    /// Byte-surgery a v3 **flat** file down to the exact v2 layout: drop
-    /// the 4-byte kind field and stamp version 2 (the v2 body is
-    /// identical to the v3 flat body).
-    fn to_v2_bytes(v3_flat: &[u8]) -> Vec<u8> {
-        assert_eq!(&v3_flat[..4], b"ALSH");
-        assert_eq!(u32::from_le_bytes(v3_flat[4..8].try_into().unwrap()), 3);
-        assert_eq!(u32::from_le_bytes(v3_flat[8..12].try_into().unwrap()), 0);
-        let mut out = Vec::with_capacity(v3_flat.len() - 4);
-        out.extend_from_slice(&v3_flat[..4]);
+    /// Byte-surgery a v4 **flat L2-ALSH** file down to the exact v2
+    /// layout: drop the kind and scheme fields and stamp version 2 (the
+    /// v2 body is identical to the v4 flat L2 body).
+    fn to_v2_bytes(v4_flat: &[u8]) -> Vec<u8> {
+        assert_eq!(&v4_flat[..4], b"ALSH");
+        assert_eq!(u32::from_le_bytes(v4_flat[4..8].try_into().unwrap()), 4);
+        assert_eq!(u32::from_le_bytes(v4_flat[8..12].try_into().unwrap()), 0);
+        assert_eq!(u32::from_le_bytes(v4_flat[12..16].try_into().unwrap()), 0);
+        let mut out = Vec::with_capacity(v4_flat.len() - 8);
+        out.extend_from_slice(&v4_flat[..4]);
         out.extend_from_slice(&2u32.to_le_bytes());
-        out.extend_from_slice(&v3_flat[12..]);
+        out.extend_from_slice(&v4_flat[16..]);
+        out
+    }
+
+    /// Byte-surgery a v4 **L2-ALSH** file (either kind) down to the
+    /// exact v3 layout: drop the 4-byte scheme field and stamp version 3
+    /// (the v3 body is identical to the v4 L2 body).
+    fn to_v3_bytes(v4: &[u8]) -> Vec<u8> {
+        assert_eq!(&v4[..4], b"ALSH");
+        assert_eq!(u32::from_le_bytes(v4[4..8].try_into().unwrap()), 4);
+        assert_eq!(u32::from_le_bytes(v4[12..16].try_into().unwrap()), 0, "L2 files only");
+        let mut out = Vec::with_capacity(v4.len() - 4);
+        out.extend_from_slice(&v4[..4]);
+        out.extend_from_slice(&3u32.to_le_bytes());
+        out.extend_from_slice(&v4[8..12]);
+        out.extend_from_slice(&v4[16..]);
         out
     }
 
@@ -577,14 +709,169 @@ mod tests {
         let v2 = to_v2_bytes(&std::fs::read(&path).unwrap());
         std::fs::write(&path, &v2).unwrap();
         let loaded = AlshIndex::load(&path).unwrap();
+        assert_eq!(loaded.scheme(), MipsHashScheme::L2Alsh);
         let mut rng = Rng::seed_from_u64(42);
         for _ in 0..10 {
             let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
             assert_eq!(idx.query(&q, 10), loaded.query(&q, 10));
             assert_eq!(idx.candidates(&q), loaded.candidates(&q));
         }
-        // load_any reads v2 too, as a flat index.
+        // load_any reads v2 too, as a flat index; pinning the L2 scheme
+        // accepts it (pre-scheme files are L2 by definition).
         assert!(load_any(&path).unwrap().as_flat().is_some());
+        assert!(load_any_scheme(&path, MipsHashScheme::L2Alsh).is_ok());
+        assert!(AlshIndex::load_scheme(&path, MipsHashScheme::SignAlsh).is_err());
+    }
+
+    /// v3 files (kind field, no scheme field) still load, both kinds,
+    /// and read back as L2-ALSH.
+    #[test]
+    fn legacy_v3_files_still_load() {
+        let its = items(150, 8, 70);
+        let flat = AlshIndex::build(&its, AlshParams::default(), 71);
+        let flat_path = tmp("v3_legacy_flat.alsh");
+        flat.save(&flat_path).unwrap();
+        std::fs::write(&flat_path, to_v3_bytes(&std::fs::read(&flat_path).unwrap()))
+            .unwrap();
+        let loaded = AlshIndex::load(&flat_path).unwrap();
+        assert_eq!(loaded.scheme(), MipsHashScheme::L2Alsh);
+
+        let banded = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 3 },
+            72,
+        );
+        let banded_path = tmp("v3_legacy_banded.alsh");
+        banded.save(&banded_path).unwrap();
+        std::fs::write(
+            &banded_path,
+            to_v3_bytes(&std::fs::read(&banded_path).unwrap()),
+        )
+        .unwrap();
+        let loaded_banded = NormRangeIndex::load(&banded_path).unwrap();
+        assert_eq!(loaded_banded.n_bands(), 3);
+        assert_eq!(loaded_banded.scheme(), MipsHashScheme::L2Alsh);
+
+        let mut rng = Rng::seed_from_u64(73);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            assert_eq!(flat.query(&q, 10), loaded.query(&q, 10));
+            assert_eq!(banded.query(&q, 10), loaded_banded.query(&q, 10));
+            assert_eq!(banded.candidates(&q), loaded_banded.candidates(&q));
+        }
+        // v4's scheme pinning accepts v3 files as L2.
+        assert!(load_any_scheme(&flat_path, MipsHashScheme::L2Alsh).is_ok());
+        assert!(load_any_scheme(&banded_path, MipsHashScheme::L2Alsh).is_ok());
+    }
+
+    /// Every (kind × scheme) combination roundtrips, preserving the
+    /// scheme, the candidate streams, and the query results.
+    #[test]
+    fn scheme_roundtrips_preserve_everything() {
+        let mut rng = Rng::seed_from_u64(80);
+        let its: Vec<Vec<f32>> = (0..300)
+            .map(|_| {
+                let s = 0.1 + 1.9 * rng.f32();
+                (0..8).map(|_| rng.normal_f32() * s).collect()
+            })
+            .collect();
+        for scheme in [MipsHashScheme::SignAlsh, MipsHashScheme::SimpleLsh] {
+            let params = AlshParams {
+                k_per_table: 12,
+                n_tables: 16,
+                ..AlshParams::recommended(scheme)
+            };
+            let flat = AlshIndex::build(&its, params, 81);
+            let path = tmp(&format!("scheme_flat_{scheme}.alsh"));
+            flat.save(&path).unwrap();
+            let loaded = AlshIndex::load(&path).unwrap();
+            assert_eq!(loaded.scheme(), scheme);
+            assert_eq!(
+                loaded.scheme_families().as_srp().unwrap().len(),
+                params.n_tables
+            );
+            let banded = NormRangeIndex::build(
+                &its,
+                params,
+                BandedParams { n_bands: 3 },
+                81,
+            );
+            let banded_path = tmp(&format!("scheme_banded_{scheme}.alsh"));
+            banded.save(&banded_path).unwrap();
+            let loaded_banded = NormRangeIndex::load(&banded_path).unwrap();
+            assert_eq!(loaded_banded.scheme(), scheme);
+            for _ in 0..10 {
+                let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+                assert_eq!(flat.query(&q, 10), loaded.query(&q, 10));
+                assert_eq!(flat.candidates(&q), loaded.candidates(&q));
+                assert_eq!(
+                    flat.candidates_multiprobe(&q, 4),
+                    loaded.candidates_multiprobe(&q, 4)
+                );
+                assert_eq!(banded.query(&q, 10), loaded_banded.query(&q, 10));
+                assert_eq!(banded.candidates(&q), loaded_banded.candidates(&q));
+            }
+            // load_any agrees on kind and scheme.
+            let any = load_any(&path).unwrap();
+            assert_eq!(any.scheme(), scheme);
+            assert!(any.as_flat().is_some());
+        }
+    }
+
+    /// Wrong-scheme loads are rejected at the header with a clear error,
+    /// both directions (L2 file into an SRP deployment and vice versa).
+    #[test]
+    fn wrong_scheme_loads_rejected_both_directions() {
+        let its = items(60, 6, 90);
+        let l2 = AlshIndex::build(&its, AlshParams::default(), 91);
+        let l2_path = tmp("scheme_l2.alsh");
+        l2.save(&l2_path).unwrap();
+        let sign_params = AlshParams {
+            k_per_table: 10,
+            n_tables: 8,
+            ..AlshParams::recommended(MipsHashScheme::SignAlsh)
+        };
+        let sign = AlshIndex::build(&its, sign_params, 92);
+        let sign_path = tmp("scheme_sign.alsh");
+        sign.save(&sign_path).unwrap();
+
+        let err = AlshIndex::load_scheme(&l2_path, MipsHashScheme::SignAlsh)
+            .err()
+            .expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("l2-alsh") && msg.contains("sign-alsh"),
+            "unhelpful error: {msg}"
+        );
+        let err = AlshIndex::load_scheme(&sign_path, MipsHashScheme::L2Alsh)
+            .err()
+            .expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("sign-alsh") && msg.contains("l2-alsh"),
+            "unhelpful error: {msg}"
+        );
+        let err = load_any_scheme(&sign_path, MipsHashScheme::SimpleLsh)
+            .err()
+            .expect("should fail");
+        assert!(format!("{err:#}").contains("simple-lsh"));
+        // The matching scheme loads fine.
+        assert!(AlshIndex::load_scheme(&sign_path, MipsHashScheme::SignAlsh).is_ok());
+        assert!(AlshIndex::load_scheme(&l2_path, MipsHashScheme::L2Alsh).is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_scheme() {
+        let its = items(20, 4, 95);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 96);
+        let path = tmp("bad_scheme.alsh");
+        idx.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12..16].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_any(&path).err().expect("should fail");
+        assert!(format!("{err:#}").contains("unknown hash scheme"), "got: {err:#}");
     }
 
     #[test]
@@ -628,9 +915,9 @@ mod tests {
         );
         let path = tmp("banded_as_v2.alsh");
         idx.save(&path).unwrap();
-        let mut bytes = std::fs::read(&path).unwrap();
-        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
-        std::fs::write(&path, &bytes).unwrap();
+        let mut v3 = to_v3_bytes(&std::fs::read(&path).unwrap());
+        v3[4..8].copy_from_slice(&2u32.to_le_bytes());
+        std::fs::write(&path, &v3).unwrap();
         let err = AlshIndex::load(&path).err().expect("should fail");
         assert!(format!("{err:#}").contains("corrupt"), "got: {err:#}");
     }

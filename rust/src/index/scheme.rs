@@ -1,0 +1,469 @@
+//! The pluggable MIPS hash-scheme layer: one enum that selects, end to
+//! end, which asymmetric construction an index runs — transforms, hash
+//! family, fused hasher, bucket keys, and multi-probe perturbation all
+//! dispatch through it.
+//!
+//! # The three schemes
+//!
+//! | scheme | transform pair | hash | bucket key |
+//! |---|---|---|---|
+//! | [`MipsHashScheme::L2Alsh`] | `P(x)=[x; ‖x‖²; …]`, `Q(q)=[q/‖q‖; ½; …]` (Eq. 12–13) | quantized L2LSH `floor((aᵀx+b)/r)` | avalanche mix of K i32 codes |
+//! | [`MipsHashScheme::SignAlsh`] | `P(x)=[x; ½−‖x‖²; …]`, `Q(q)=[q/‖q‖; 0; …]` (Shrivastava & Li 2015) | SRP sign bit `1[aᵀx>=0]` | K bits packed into one u64 word |
+//! | [`MipsHashScheme::SimpleLsh`] | `P(x)=[x; √(1−‖x‖²)]`, `Q(q)=[q/‖q‖; 0]` (Neyshabur & Srebro 2015) | SRP sign bit | K bits packed into one u64 word |
+//!
+//! All three share the Eq. 11 norm shrink (`max ‖x‖ -> U < 1`) on the
+//! data side, and all three query transforms are **scale-free**, which is
+//! why the norm-range banded [`super::NormRangeIndex`] works per scheme:
+//! a query hashes once and the codes replay against every band.
+//!
+//! Simple-LSH appends exactly **one** component, so `AlshParams::m` is
+//! ignored by it (the effective append length is
+//! [`MipsHashScheme::append_len`]).
+//!
+//! # Dispatch design
+//!
+//! Scheme state rides in [`crate::index::AlshParams::scheme`], so every
+//! existing build/serve entry point (`AlshIndex::build`,
+//! `MipsEngine::new`, `ShardedRouter::build`, persistence) selects a
+//! scheme without signature changes. The index stores its families as a
+//! [`SchemeFamilies`] and hashes through a [`SchemeHasher`] — two-variant
+//! enums (L2 / SRP), not trait objects, for the same reasons as
+//! [`super::AnyIndex`]: the hot paths borrow out of the caller's scratch
+//! and the match arms inline. With `scheme = L2Alsh` (the default) every
+//! code path — family sampling RNG stream, fused hashing, bucket keys,
+//! probe order — is **byte-identical** to the pre-scheme-layer code.
+
+use crate::lsh::{FusedHasher, FusedSrpHasher, L2LshFamily, SrpFamily};
+use crate::transform::{
+    q_transform_sign_into, q_transform_sign_slice, q_transform_slice,
+    scale_p_transform_sign_slice, scale_p_transform_simple_slice, scale_p_transform_slice,
+};
+use crate::util::Rng;
+
+use super::hash_table::{bucket_key, srp_bucket_key};
+
+/// Which asymmetric MIPS construction an index runs (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MipsHashScheme {
+    /// The paper's L2-ALSH (Eq. 11–17): quantized L2LSH over P/Q.
+    #[default]
+    L2Alsh,
+    /// Sign-ALSH (Shrivastava & Li 2015): SRP over the sign transforms.
+    SignAlsh,
+    /// Simple-LSH (Neyshabur & Srebro 2015): single-append symmetric SRP.
+    SimpleLsh,
+}
+
+impl MipsHashScheme {
+    /// Every scheme, in persist-id order.
+    pub const ALL: [MipsHashScheme; 3] =
+        [MipsHashScheme::L2Alsh, MipsHashScheme::SignAlsh, MipsHashScheme::SimpleLsh];
+
+    /// Stable id (persist v4 header discriminator).
+    pub fn id(self) -> u32 {
+        match self {
+            MipsHashScheme::L2Alsh => 0,
+            MipsHashScheme::SignAlsh => 1,
+            MipsHashScheme::SimpleLsh => 2,
+        }
+    }
+
+    /// Inverse of [`MipsHashScheme::id`].
+    pub fn from_id(id: u32) -> Option<Self> {
+        Self::ALL.into_iter().find(|s| s.id() == id)
+    }
+
+    /// Canonical CLI / JSON name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MipsHashScheme::L2Alsh => "l2-alsh",
+            MipsHashScheme::SignAlsh => "sign-alsh",
+            MipsHashScheme::SimpleLsh => "simple-lsh",
+        }
+    }
+
+    /// Parse a CLI name (`l2-alsh` | `sign-alsh` | `simple-lsh`).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|v| v.name() == s)
+    }
+
+    /// Scan CLI args for the shared `--scheme <name>` flag (the
+    /// examples' selector). Absent flag means the default L2-ALSH; an
+    /// unknown name returns a ready-to-print usage error so every
+    /// binary reports the same scheme list.
+    pub fn from_cli_args(args: &[String]) -> Result<Self, String> {
+        match args.iter().position(|a| a == "--scheme") {
+            Some(i) => {
+                let name = args.get(i + 1).map(String::as_str).unwrap_or("");
+                Self::parse(name).ok_or_else(|| {
+                    format!(
+                        "unknown --scheme {name:?}; use l2-alsh, sign-alsh or simple-lsh"
+                    )
+                })
+            }
+            None => Ok(Self::L2Alsh),
+        }
+    }
+
+    /// Whether the scheme hashes with sign random projections (bit-packed
+    /// u64 bucket keys, bit-flip multi-probe).
+    pub fn is_srp(self) -> bool {
+        !matches!(self, MipsHashScheme::L2Alsh)
+    }
+
+    /// Components appended to data/query vectors: `m` for the two ALSH
+    /// schemes, always 1 for Simple-LSH (its transform is single-append).
+    pub fn append_len(self, m: usize) -> usize {
+        match self {
+            MipsHashScheme::L2Alsh | MipsHashScheme::SignAlsh => m,
+            MipsHashScheme::SimpleLsh => 1,
+        }
+    }
+
+    /// Fused Eq. 11 scaling + P transform into a preallocated `[D +
+    /// append_len]` slice — the build-side block-fill path, per scheme.
+    #[inline]
+    pub fn data_row_into(self, x: &[f32], factor: f32, m: usize, out: &mut [f32]) {
+        match self {
+            MipsHashScheme::L2Alsh => scale_p_transform_slice(x, factor, m, out),
+            MipsHashScheme::SignAlsh => scale_p_transform_sign_slice(x, factor, m, out),
+            MipsHashScheme::SimpleLsh => scale_p_transform_simple_slice(x, factor, out),
+        }
+    }
+
+    /// Q transform into a preallocated `[D + append_len]` slice (the
+    /// batch query path). All three are scale-free in the query norm.
+    #[inline]
+    pub fn query_row_into(self, q: &[f32], m: usize, out: &mut [f32]) {
+        match self {
+            MipsHashScheme::L2Alsh => q_transform_slice(q, m, out),
+            MipsHashScheme::SignAlsh => q_transform_sign_slice(q, m, out),
+            MipsHashScheme::SimpleLsh => q_transform_sign_slice(q, 1, out),
+        }
+    }
+
+    /// Allocation-free Q transform reusing `out`'s capacity (the
+    /// single-query hot path).
+    #[inline]
+    pub fn query_into(self, q: &[f32], m: usize, out: &mut Vec<f32>) {
+        match self {
+            MipsHashScheme::L2Alsh => crate::transform::q_transform_into(q, m, out),
+            MipsHashScheme::SignAlsh => q_transform_sign_into(q, m, out),
+            MipsHashScheme::SimpleLsh => q_transform_sign_into(q, 1, out),
+        }
+    }
+
+    /// One table's bucket key from its K codes: avalanche mix for L2LSH
+    /// codes, bit-pack for SRP sign bits.
+    #[inline]
+    pub fn table_key(self, codes_t: &[i32]) -> u64 {
+        if self.is_srp() {
+            srp_bucket_key(codes_t)
+        } else {
+            bucket_key(codes_t)
+        }
+    }
+
+    /// Sample the L hash families for this scheme over input dimension
+    /// `dp` (= D + append_len). For `L2Alsh` the RNG stream is exactly
+    /// the historical `L2LshFamily::sample` sequence — the pre-scheme
+    /// byte-identity rests on this.
+    pub fn sample_families(
+        self,
+        dp: usize,
+        k_per_table: usize,
+        n_tables: usize,
+        r: f32,
+        rng: &mut Rng,
+    ) -> SchemeFamilies {
+        if self.is_srp() {
+            assert!(
+                k_per_table <= 64,
+                "SRP schemes pack K sign bits into a u64 bucket key; K={k_per_table} > 64"
+            );
+            SchemeFamilies::Srp(
+                (0..n_tables).map(|_| SrpFamily::sample(dp, k_per_table, rng)).collect(),
+            )
+        } else {
+            SchemeFamilies::L2(
+                (0..n_tables).map(|_| L2LshFamily::sample(dp, k_per_table, r, rng)).collect(),
+            )
+        }
+    }
+}
+
+impl std::fmt::Display for MipsHashScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The L hash families of an index, per scheme (persistence, PJRT
+/// artifact inputs, reference/code-fed paths).
+#[derive(Clone, Debug)]
+pub enum SchemeFamilies {
+    /// K-wide L2LSH families (the `L2Alsh` scheme).
+    L2(Vec<L2LshFamily>),
+    /// K-wide SRP families (the `SignAlsh` / `SimpleLsh` schemes).
+    Srp(Vec<SrpFamily>),
+}
+
+impl SchemeFamilies {
+    /// Number of families (= L tables).
+    pub fn len(&self) -> usize {
+        match self {
+            SchemeFamilies::L2(f) => f.len(),
+            SchemeFamilies::Srp(f) => f.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The L2LSH families, if this is the L2-ALSH scheme.
+    pub fn as_l2(&self) -> Option<&[L2LshFamily]> {
+        match self {
+            SchemeFamilies::L2(f) => Some(f),
+            SchemeFamilies::Srp(_) => None,
+        }
+    }
+
+    /// The SRP families, if this is an SRP scheme.
+    pub fn as_srp(&self) -> Option<&[SrpFamily]> {
+        match self {
+            SchemeFamilies::L2(_) => None,
+            SchemeFamilies::Srp(f) => Some(f),
+        }
+    }
+
+    /// Stack the families into the scheme's fused multi-table hasher.
+    pub fn fuse(&self) -> SchemeHasher {
+        match self {
+            SchemeFamilies::L2(f) => SchemeHasher::L2(FusedHasher::from_families(f)),
+            SchemeFamilies::Srp(f) => SchemeHasher::Srp(FusedSrpHasher::from_families(f)),
+        }
+    }
+}
+
+/// The fused multi-table hasher of an index, per scheme: one blocked
+/// matvec/matmat pass produces all `L·K` codes whichever hash family the
+/// scheme uses. Mirrors the [`FusedHasher`] surface so `BuildScratch`,
+/// the sharded streaming build, `QueryScratch` replay, and the batchers
+/// drive either variant identically.
+#[derive(Clone, Debug)]
+pub enum SchemeHasher {
+    /// Quantized L2LSH (codes are `floor` quantization cells).
+    L2(FusedHasher),
+    /// Sign random projections (codes are 0/1 sign bits).
+    Srp(FusedSrpHasher),
+}
+
+impl SchemeHasher {
+    /// Input dimension D' (= D + append_len).
+    pub fn dim(&self) -> usize {
+        match self {
+            SchemeHasher::L2(h) => h.dim(),
+            SchemeHasher::Srp(h) => h.dim(),
+        }
+    }
+
+    /// Codes per table (meta-hash width K).
+    pub fn k(&self) -> usize {
+        match self {
+            SchemeHasher::L2(h) => h.k(),
+            SchemeHasher::Srp(h) => h.k(),
+        }
+    }
+
+    /// Number of tables L.
+    pub fn n_tables(&self) -> usize {
+        match self {
+            SchemeHasher::L2(h) => h.n_tables(),
+            SchemeHasher::Srp(h) => h.n_tables(),
+        }
+    }
+
+    /// Total codes per input (= L·K).
+    pub fn n_codes(&self) -> usize {
+        match self {
+            SchemeHasher::L2(h) => h.n_codes(),
+            SchemeHasher::Srp(h) => h.n_codes(),
+        }
+    }
+
+    /// The L2 fused hasher, if this is the L2-ALSH scheme (benches,
+    /// PJRT-parity reference paths).
+    pub fn as_l2(&self) -> Option<&FusedHasher> {
+        match self {
+            SchemeHasher::L2(h) => Some(h),
+            SchemeHasher::Srp(_) => None,
+        }
+    }
+
+    /// One table's bucket key from its K codes, derived from the hasher
+    /// variant itself (avalanche mix for L2 codes, bit-pack for SRP sign
+    /// bits). The build pipeline keys through this so a hasher and its
+    /// key function can never disagree; it always matches
+    /// [`MipsHashScheme::table_key`] for the scheme the hasher was
+    /// sampled under.
+    #[inline]
+    pub fn table_key(&self, codes_t: &[i32]) -> u64 {
+        match self {
+            SchemeHasher::L2(_) => bucket_key(codes_t),
+            SchemeHasher::Srp(_) => srp_bucket_key(codes_t),
+        }
+    }
+
+    /// All `L·K` codes of `x` into `out` (len `n_codes()`), one blocked
+    /// matrix–vector pass.
+    #[inline]
+    pub fn hash_into(&self, x: &[f32], out: &mut [i32]) {
+        match self {
+            SchemeHasher::L2(h) => h.hash_into(x, out),
+            SchemeHasher::Srp(h) => h.hash_into(x, out),
+        }
+    }
+
+    /// Codes plus the per-code multi-probe confidence channel: pre-floor
+    /// fractional parts for L2 (boundary distance within the cell), sign
+    /// margins `|aᵀx|` for SRP (distance to the sign boundary).
+    #[inline]
+    pub fn hash_conf_into(&self, x: &[f32], codes: &mut [i32], conf: &mut [f32]) {
+        match self {
+            SchemeHasher::L2(h) => h.hash_frac_into(x, codes, conf),
+            SchemeHasher::Srp(h) => h.hash_margin_into(x, codes, conf),
+        }
+    }
+
+    /// Batch matrix–matrix variant (`[n_rows × D']` in, `[n_rows × L·K]`
+    /// out) — the build side and the batch query path.
+    #[inline]
+    pub fn hash_batch_into(&self, xs: &[f32], n_rows: usize, out: &mut [i32]) {
+        match self {
+            SchemeHasher::L2(h) => h.hash_batch_into(xs, n_rows, out),
+            SchemeHasher::Srp(h) => h.hash_batch_into(xs, n_rows, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_and_names_roundtrip() {
+        for scheme in MipsHashScheme::ALL {
+            assert_eq!(MipsHashScheme::from_id(scheme.id()), Some(scheme));
+            assert_eq!(MipsHashScheme::parse(scheme.name()), Some(scheme));
+            assert_eq!(format!("{scheme}"), scheme.name());
+        }
+        assert_eq!(MipsHashScheme::from_id(99), None);
+        assert_eq!(MipsHashScheme::parse("alsh"), None);
+        assert_eq!(MipsHashScheme::default(), MipsHashScheme::L2Alsh);
+    }
+
+    #[test]
+    fn append_len_per_scheme() {
+        assert_eq!(MipsHashScheme::L2Alsh.append_len(3), 3);
+        assert_eq!(MipsHashScheme::SignAlsh.append_len(2), 2);
+        // Simple-LSH is single-append whatever m says.
+        assert_eq!(MipsHashScheme::SimpleLsh.append_len(3), 1);
+        assert_eq!(MipsHashScheme::SimpleLsh.append_len(0), 1);
+    }
+
+    #[test]
+    fn table_key_dispatch() {
+        // L2: avalanche mix; SRP: bit pack.
+        assert_eq!(MipsHashScheme::L2Alsh.table_key(&[1, 0, 1]), bucket_key(&[1, 0, 1]));
+        assert_eq!(MipsHashScheme::SignAlsh.table_key(&[1, 0, 1]), 0b101);
+        assert_eq!(MipsHashScheme::SimpleLsh.table_key(&[0, 1]), 0b10);
+    }
+
+    #[test]
+    fn sampled_families_fuse_consistently() {
+        let mut rng = Rng::seed_from_u64(3);
+        for scheme in MipsHashScheme::ALL {
+            let fams = scheme.sample_families(10, 4, 3, 2.5, &mut rng);
+            assert_eq!(fams.len(), 3);
+            assert_eq!(fams.as_l2().is_some(), !scheme.is_srp());
+            assert_eq!(fams.as_srp().is_some(), scheme.is_srp());
+            let hasher = fams.fuse();
+            assert_eq!(hasher.dim(), 10);
+            assert_eq!(hasher.k(), 4);
+            assert_eq!(hasher.n_tables(), 3);
+            assert_eq!(hasher.n_codes(), 12);
+            let x: Vec<f32> = (0..10).map(|i| (i as f32 * 0.37).sin()).collect();
+            let mut codes = vec![0i32; 12];
+            hasher.hash_into(&x, &mut codes);
+            let mut conf = vec![0f32; 12];
+            let mut codes2 = vec![0i32; 12];
+            hasher.hash_conf_into(&x, &mut codes2, &mut conf);
+            assert_eq!(codes, codes2, "{scheme}: conf variant changed codes");
+            if scheme.is_srp() {
+                assert!(codes.iter().all(|&c| c == 0 || c == 1), "{scheme}");
+            }
+            // The hasher-derived key function agrees with the scheme's
+            // (the build pipeline keys through the hasher).
+            assert_eq!(
+                hasher.table_key(&codes[..4]),
+                scheme.table_key(&codes[..4]),
+                "{scheme}: hasher/scheme key disagreement"
+            );
+        }
+    }
+
+    /// L2-ALSH family sampling must be the exact historical RNG stream.
+    #[test]
+    fn l2_sampling_matches_direct_family_sampling() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        let fams = MipsHashScheme::L2Alsh.sample_families(9, 5, 4, 2.5, &mut a);
+        let direct: Vec<L2LshFamily> =
+            (0..4).map(|_| L2LshFamily::sample(9, 5, 2.5, &mut b)).collect();
+        let x: Vec<f32> = (0..9).map(|i| i as f32 * 0.21 - 0.9).collect();
+        for (fam, want) in fams.as_l2().unwrap().iter().zip(&direct) {
+            assert_eq!(fam.hash(&x), want.hash(&x));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn srp_k_over_64_rejected() {
+        let mut rng = Rng::seed_from_u64(1);
+        let _ = MipsHashScheme::SignAlsh.sample_families(4, 65, 1, 2.5, &mut rng);
+    }
+
+    /// Data/query rows agree with the standalone transform functions and
+    /// preserve the transformed inner product per scheme's contract.
+    #[test]
+    fn transform_dispatch_matches_standalone() {
+        let x = [0.3f32, 0.4];
+        let q = [3.0f32, 4.0];
+        let m = 2;
+        for scheme in MipsHashScheme::ALL {
+            let dp = 2 + scheme.append_len(m);
+            let mut data = vec![0.0f32; dp];
+            scheme.data_row_into(&x, 1.0, m, &mut data);
+            let mut qrow = vec![0.0f32; dp];
+            scheme.query_row_into(&q, m, &mut qrow);
+            let mut qvec = Vec::new();
+            scheme.query_into(&q, m, &mut qvec);
+            assert_eq!(qvec, qrow, "{scheme}: vec vs slice Q diverge");
+            match scheme {
+                MipsHashScheme::L2Alsh => {
+                    assert_eq!(data, crate::transform::p_transform(&x, m));
+                    assert_eq!(qrow, crate::transform::q_transform(&q, m));
+                }
+                MipsHashScheme::SignAlsh => {
+                    assert_eq!(data, crate::transform::p_transform_sign(&x, m));
+                    assert_eq!(qrow, crate::transform::q_transform_sign(&q, m));
+                }
+                MipsHashScheme::SimpleLsh => {
+                    assert_eq!(data, crate::transform::p_transform_simple(&x));
+                    assert_eq!(qrow, crate::transform::q_transform_sign(&q, 1));
+                }
+            }
+        }
+    }
+}

@@ -20,8 +20,7 @@
 //! [`DedupSink`] from it.
 
 use super::core::ScoredItem;
-use crate::lsh::FusedHasher;
-use crate::transform::q_transform_slice;
+use super::scheme::{MipsHashScheme, SchemeHasher};
 
 /// Caller-owned scratch for the allocation-free query path. Construct via
 /// [`QueryScratch::new`] (or the pre-sizing `AlshIndex::scratch` /
@@ -128,33 +127,35 @@ impl QueryScratch {
     }
 
     /// Hash the Q-transformed query already in `self.qx` into
-    /// `self.codes` with `fused`.
-    pub(crate) fn hash_codes(&mut self, fused: &FusedHasher) {
+    /// `self.codes` with the scheme's fused hasher.
+    pub(crate) fn hash_codes(&mut self, fused: &SchemeHasher) {
         let nc = fused.n_codes();
         self.grow_codes(nc, false);
         fused.hash_into(&self.qx, &mut self.codes[..nc]);
     }
 
     /// Hash an externally supplied input vector into `self.codes`.
-    pub(crate) fn hash_codes_external(&mut self, fused: &FusedHasher, x: &[f32]) {
+    pub(crate) fn hash_codes_external(&mut self, fused: &SchemeHasher, x: &[f32]) {
         let nc = fused.n_codes();
         self.grow_codes(nc, false);
         fused.hash_into(x, &mut self.codes[..nc]);
     }
 
-    /// Hash `self.qx` into `self.codes` + `self.fracs` (multi-probe).
-    pub(crate) fn hash_codes_with_fracs(&mut self, fused: &FusedHasher) {
+    /// Hash `self.qx` into `self.codes` + `self.fracs` (multi-probe:
+    /// fractional parts for L2, sign margins for SRP).
+    pub(crate) fn hash_codes_with_conf(&mut self, fused: &SchemeHasher) {
         let nc = fused.n_codes();
         self.grow_codes(nc, true);
-        fused.hash_frac_into(&self.qx, &mut self.codes[..nc], &mut self.fracs[..nc]);
+        fused.hash_conf_into(&self.qx, &mut self.codes[..nc], &mut self.fracs[..nc]);
     }
 
-    /// Q-transform and hash a whole batch of queries in one fused
-    /// matrix–matrix pass: row `i` of `codes_batch` holds query `i`'s
-    /// `L·K` codes afterwards (the `query_batch_into` front half).
+    /// Q-transform (per scheme) and hash a whole batch of queries in one
+    /// fused matrix–matrix pass: row `i` of `codes_batch` holds query
+    /// `i`'s `L·K` codes afterwards (the `query_batch_into` front half).
     pub(crate) fn hash_codes_batch(
         &mut self,
-        fused: &FusedHasher,
+        fused: &SchemeHasher,
+        scheme: MipsHashScheme,
         queries: &[Vec<f32>],
         m: usize,
     ) {
@@ -168,8 +169,8 @@ impl QueryScratch {
             self.codes_batch.resize(nb * nc, 0);
         }
         for (i, q) in queries.iter().enumerate() {
-            debug_assert_eq!(q.len() + m, dp);
-            q_transform_slice(q, m, &mut self.qx_batch[i * dp..(i + 1) * dp]);
+            debug_assert_eq!(q.len() + scheme.append_len(m), dp);
+            scheme.query_row_into(q, m, &mut self.qx_batch[i * dp..(i + 1) * dp]);
         }
         fused.hash_batch_into(&self.qx_batch[..nb * dp], nb, &mut self.codes_batch[..nb * nc]);
     }

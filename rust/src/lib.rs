@@ -14,6 +14,27 @@
 //!   (ρ\*) optimizer, the PureSVD data pipeline, and the full evaluation
 //!   harness that regenerates every figure in the paper.
 //!
+//! The index serves three hash **schemes** behind one pluggable layer
+//! ([`index::MipsHashScheme`], selected by `AlshParams::scheme`): the
+//! paper's L2-ALSH, **Sign-ALSH** (SRP over the sign transforms,
+//! Shrivastava & Li 2015 — the §5 follow-on), and **Simple-LSH**
+//! (single-append symmetric SRP, Neyshabur & Srebro 2015). Every layer
+//! — fused hashing ([`lsh::FusedHasher`] / [`lsh::FusedSrpHasher`]),
+//! the sharded streaming CSR build, the allocation-free query scratch,
+//! multi-probe, norm-range banding, persistence (v4), engine / batcher /
+//! router — dispatches per scheme.
+//!
+//! ## Module map (serving spine)
+//!
+//! * [`transform`] — the asymmetric P/Q transform pairs, per scheme.
+//! * [`lsh`] — hash families (L2LSH, SRP) and their fused multi-table
+//!   hashers.
+//! * [`index`] — the scheme layer, flat/banded indexes, frozen CSR
+//!   tables, build pipeline, multi-probe, persistence.
+//! * [`coordinator`] — engine, dynamic batcher, sharded router, server.
+//! * [`theory`] / [`figures`] / [`eval`] — ρ curves (L2 and Sign),
+//!   figure regeneration, offline evaluation.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! compute once; the Rust binary loads `artifacts/*.hlo.txt` via PJRT.
 //!

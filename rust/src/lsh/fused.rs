@@ -37,7 +37,32 @@ use super::family::dot_simple;
 use super::L2LshFamily;
 
 /// Rows processed per block: independent accumulator chains per load of x.
-const LANES: usize = 4;
+pub(super) const LANES: usize = 4;
+
+/// One block of [`LANES`] row dot products against `x`, each accumulated
+/// in `dot_simple` order (bit-identical to the per-family path). Shared
+/// by [`FusedHasher`] and [`super::FusedSrpHasher`] — the one blocked
+/// matvec kernel both fused pipelines are built on.
+#[inline]
+pub(super) fn dot_block(rows: &[f32], dim: usize, x: &[f32]) -> [f32; LANES] {
+    debug_assert_eq!(rows.len(), LANES * dim);
+    debug_assert_eq!(x.len(), dim);
+    let (r0, rest) = rows.split_at(dim);
+    let (r1, rest) = rest.split_at(dim);
+    let (r2, r3) = rest.split_at(dim);
+    let mut a0 = 0.0f32;
+    let mut a1 = 0.0f32;
+    let mut a2 = 0.0f32;
+    let mut a3 = 0.0f32;
+    for d in 0..dim {
+        let xv = x[d];
+        a0 += r0[d] * xv;
+        a1 += r1[d] * xv;
+        a2 += r2[d] * xv;
+        a3 += r3[d] * xv;
+    }
+    [a0, a1, a2, a3]
+}
 
 /// All L hash families of an index, stacked for single-pass hashing.
 #[derive(Clone, Debug)]
@@ -92,29 +117,6 @@ impl FusedHasher {
         self.l * self.k
     }
 
-    /// One block of `LANES` row dot products against `x`, each accumulated
-    /// in `dot_simple` order (bit-identical to the per-family path).
-    #[inline]
-    fn dot_block(rows: &[f32], dim: usize, x: &[f32]) -> [f32; LANES] {
-        debug_assert_eq!(rows.len(), LANES * dim);
-        debug_assert_eq!(x.len(), dim);
-        let (r0, rest) = rows.split_at(dim);
-        let (r1, rest) = rest.split_at(dim);
-        let (r2, r3) = rest.split_at(dim);
-        let mut a0 = 0.0f32;
-        let mut a1 = 0.0f32;
-        let mut a2 = 0.0f32;
-        let mut a3 = 0.0f32;
-        for d in 0..dim {
-            let xv = x[d];
-            a0 += r0[d] * xv;
-            a1 += r1[d] * xv;
-            a2 += r2[d] * xv;
-            a3 += r3[d] * xv;
-        }
-        [a0, a1, a2, a3]
-    }
-
     /// All `L·K` codes of `x` into `out` (len `n_codes()`), one blocked
     /// matrix–vector pass.
     pub fn hash_into(&self, x: &[f32], out: &mut [i32]) {
@@ -124,7 +126,7 @@ impl FusedHasher {
         let dim = self.dim;
         let mut r = 0;
         while r + LANES <= nc {
-            let acc = Self::dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
+            let acc = dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
             for (j, a) in acc.iter().enumerate() {
                 out[r + j] = (a + self.offs[r + j]).floor() as i32;
             }
@@ -153,7 +155,7 @@ impl FusedHasher {
         };
         let mut r = 0;
         while r + LANES <= nc {
-            let acc = Self::dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
+            let acc = dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
             for (j, a) in acc.iter().enumerate() {
                 emit(r + j, *a);
             }
@@ -181,7 +183,7 @@ impl FusedHasher {
             let rows = &self.rows[r * dim..(r + LANES) * dim];
             for q in 0..n_rows {
                 let x = &xs[q * dim..(q + 1) * dim];
-                let acc = Self::dot_block(rows, dim, x);
+                let acc = dot_block(rows, dim, x);
                 for (j, a) in acc.iter().enumerate() {
                     out[q * nc + r + j] = (a + self.offs[r + j]).floor() as i32;
                 }

@@ -1,0 +1,270 @@
+//! Fused multi-table sign-random-projection hashing: the SRP twin of
+//! [`super::FusedHasher`], serving the Sign-ALSH and Simple-LSH schemes.
+//!
+//! # Layout
+//!
+//! [`FusedSrpHasher`] stacks every [`SrpFamily`]'s `[K × D']` projection
+//! rows into one contiguous `[L·K × D']` matrix (row `t·K + j` is hash
+//! function `j` of table `t`, matching the `[L·K]` flat code layout the
+//! whole query/build machinery speaks) and computes an input's codes as
+//! one blocked matrix–vector product over the shared
+//! [`super::fused::dot_block`] kernel. Codes are the sign bits
+//! `1[aᵀx >= 0]` emitted as `i32` 0/1 values so the existing
+//! `QueryScratch` replay, code-fed re-entry, and build pipelines carry
+//! them unchanged; per table, the K bits are then packed into one `u64`
+//! **bucket key word** by [`crate::index::hash_table::srp_bucket_key`]
+//! (bit `j` = code `j`) — no avalanche mix is needed because the key *is*
+//! the K-bit SimHash signature.
+//!
+//! # Multi-probe margins
+//!
+//! [`FusedSrpHasher::hash_margin_into`] additionally emits each code's
+//! **margin** `|aᵀx|` — the distance of the projection to the sign
+//! boundary. A small margin means the bit was nearly a coin flip, so
+//! multi-probe ranks single-bit flips by ascending margin (the SRP
+//! analogue of the L2 path's fractional-part ranking) and probes
+//! `key ^ (1 << j)` for the least-confident coordinates.
+//!
+//! # Equivalence
+//!
+//! Bit-identical to [`SrpFamily::hash_one`]: each row's accumulation
+//! visits dimensions in `dot_simple` order, and blocking only interleaves
+//! independent rows — property-tested below against a per-family mirror
+//! (all L·K positions, batch vs single, odd dims).
+
+use super::family::dot_simple;
+use super::fused::{dot_block, LANES};
+use super::SrpFamily;
+
+/// All L SRP families of an index, stacked for single-pass hashing.
+#[derive(Clone, Debug)]
+pub struct FusedSrpHasher {
+    /// Input dimension D' (= D + m for Sign-ALSH, D + 1 for Simple-LSH).
+    dim: usize,
+    /// Sign bits per table (meta-hash width K, <= 64 so keys pack in u64).
+    k: usize,
+    /// Number of tables L.
+    l: usize,
+    /// `[l*k * dim]` row-major; row `t*k + j` = family t's direction j.
+    rows: Vec<f32>,
+}
+
+impl FusedSrpHasher {
+    /// Stack `families` (all with equal `dim`, `k`) into one fused matrix.
+    pub fn from_families(families: &[SrpFamily]) -> Self {
+        assert!(!families.is_empty(), "no families to fuse");
+        let dim = families[0].dim();
+        let k = families[0].k();
+        assert!(
+            families.iter().all(|f| f.dim() == dim && f.k() == k),
+            "families disagree on (dim, k)"
+        );
+        assert!(k <= 64, "SRP meta-hash width K={k} exceeds the 64-bit key word");
+        let l = families.len();
+        let mut rows = Vec::with_capacity(l * k * dim);
+        for fam in families {
+            rows.extend_from_slice(fam.a_rows());
+        }
+        Self { dim, k, l, rows }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.l
+    }
+
+    /// Total codes per input (= L·K).
+    pub fn n_codes(&self) -> usize {
+        self.l * self.k
+    }
+
+    /// All `L·K` sign bits of `x` into `out` (len `n_codes()`), one
+    /// blocked matrix–vector pass. Codes are 0/1.
+    pub fn hash_into(&self, x: &[f32], out: &mut [i32]) {
+        let nc = self.n_codes();
+        assert_eq!(x.len(), self.dim, "input dim mismatch");
+        assert_eq!(out.len(), nc, "output len mismatch");
+        let dim = self.dim;
+        let mut r = 0;
+        while r + LANES <= nc {
+            let acc = dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
+            for (j, a) in acc.iter().enumerate() {
+                out[r + j] = (*a >= 0.0) as i32;
+            }
+            r += LANES;
+        }
+        while r < nc {
+            let row = &self.rows[r * dim..(r + 1) * dim];
+            out[r] = (dot_simple(row, x) >= 0.0) as i32;
+            r += 1;
+        }
+    }
+
+    /// Sign bits plus per-code margins `|aᵀx|` (multi-probe confidence:
+    /// small margin = the bit was nearly a coin flip, flip it first).
+    pub fn hash_margin_into(&self, x: &[f32], codes: &mut [i32], margins: &mut [f32]) {
+        let nc = self.n_codes();
+        assert_eq!(x.len(), self.dim, "input dim mismatch");
+        assert_eq!(codes.len(), nc, "codes len mismatch");
+        assert_eq!(margins.len(), nc, "margins len mismatch");
+        let dim = self.dim;
+        let mut emit = |r: usize, dot: f32| {
+            codes[r] = (dot >= 0.0) as i32;
+            margins[r] = dot.abs();
+        };
+        let mut r = 0;
+        while r + LANES <= nc {
+            let acc = dot_block(&self.rows[r * dim..(r + LANES) * dim], dim, x);
+            for (j, a) in acc.iter().enumerate() {
+                emit(r + j, *a);
+            }
+            r += LANES;
+        }
+        while r < nc {
+            emit(r, dot_simple(&self.rows[r * dim..(r + 1) * dim], x));
+            r += 1;
+        }
+    }
+
+    /// Batch matrix–matrix variant: hash `n_rows` inputs (flattened
+    /// row-major in `xs`, each `dim` long) into `out[q * n_codes() + i]`.
+    /// Blocks over hash rows in the outer loop so each `[LANES × D']` row
+    /// block stays hot in L1 across the whole batch — the build side and
+    /// the batch query path, mirroring `FusedHasher::hash_batch_into`.
+    pub fn hash_batch_into(&self, xs: &[f32], n_rows: usize, out: &mut [i32]) {
+        let nc = self.n_codes();
+        let dim = self.dim;
+        assert_eq!(xs.len(), n_rows * dim, "batch input size mismatch");
+        assert_eq!(out.len(), n_rows * nc, "batch output size mismatch");
+        let mut r = 0;
+        while r + LANES <= nc {
+            let rows = &self.rows[r * dim..(r + LANES) * dim];
+            for q in 0..n_rows {
+                let x = &xs[q * dim..(q + 1) * dim];
+                let acc = dot_block(rows, dim, x);
+                for (j, a) in acc.iter().enumerate() {
+                    out[q * nc + r + j] = (*a >= 0.0) as i32;
+                }
+            }
+            r += LANES;
+        }
+        while r < nc {
+            let row = &self.rows[r * dim..(r + 1) * dim];
+            for q in 0..n_rows {
+                let x = &xs[q * dim..(q + 1) * dim];
+                out[q * nc + r] = (dot_simple(row, x) >= 0.0) as i32;
+            }
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::Rng;
+
+    fn families(l: usize, dim: usize, k: usize, seed: u64) -> Vec<SrpFamily> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..l).map(|_| SrpFamily::sample(dim, k, &mut rng)).collect()
+    }
+
+    /// The naive per-family mirror: every one of the L·K positions must
+    /// match `SrpFamily::hash`, including odd dims and non-LANES-multiple
+    /// code counts.
+    #[test]
+    fn fused_matches_per_family_bitwise() {
+        check(60, |rng| {
+            let dim = 1 + rng.below(47); // odd dims included
+            let k = 1 + rng.below(9);
+            let l = 1 + rng.below(7);
+            let fams = families(l, dim, k, rng.next_u64());
+            let fused = FusedSrpHasher::from_families(&fams);
+            let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let mut want = Vec::with_capacity(l * k);
+            for fam in &fams {
+                fam.hash_into(&x, &mut want);
+            }
+            let mut got = vec![0i32; fused.n_codes()];
+            fused.hash_into(&x, &mut got);
+            assert_eq!(got, want, "fused SRP codes diverge (dim={dim} k={k} l={l})");
+            assert!(got.iter().all(|&c| c == 0 || c == 1));
+        });
+    }
+
+    /// The margin variant emits the same codes plus |aᵀx| per position.
+    #[test]
+    fn margin_variant_matches_hash_and_dots() {
+        check(40, |rng| {
+            let dim = 1 + rng.below(23);
+            let k = 1 + rng.below(7);
+            let l = 1 + rng.below(5);
+            let fams = families(l, dim, k, rng.next_u64());
+            let fused = FusedSrpHasher::from_families(&fams);
+            let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let mut codes = vec![0i32; fused.n_codes()];
+            let mut margins = vec![0f32; fused.n_codes()];
+            fused.hash_margin_into(&x, &mut codes, &mut margins);
+            let mut plain = vec![0i32; fused.n_codes()];
+            fused.hash_into(&x, &mut plain);
+            assert_eq!(codes, plain);
+            for (t, fam) in fams.iter().enumerate() {
+                for j in 0..k {
+                    let dot = crate::lsh::family::dot_simple(
+                        &fam.a_rows()[j * dim..(j + 1) * dim],
+                        &x,
+                    );
+                    assert_eq!(margins[t * k + j], dot.abs());
+                }
+            }
+        });
+    }
+
+    /// Batch rows must equal single-input hashing row by row.
+    #[test]
+    fn batch_matches_single() {
+        check(30, |rng| {
+            let dim = 1 + rng.below(19);
+            let k = 1 + rng.below(6);
+            let l = 1 + rng.below(5);
+            let n = 1 + rng.below(10);
+            let fams = families(l, dim, k, rng.next_u64());
+            let fused = FusedSrpHasher::from_families(&fams);
+            let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+            let mut batch = vec![0i32; n * fused.n_codes()];
+            fused.hash_batch_into(&xs, n, &mut batch);
+            let mut one = vec![0i32; fused.n_codes()];
+            for q in 0..n {
+                fused.hash_into(&xs[q * dim..(q + 1) * dim], &mut one);
+                assert_eq!(
+                    &batch[q * fused.n_codes()..(q + 1) * fused.n_codes()],
+                    one.as_slice()
+                );
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_over_64_panics() {
+        let fams = families(1, 4, 65, 1);
+        let _ = FusedSrpHasher::from_families(&fams);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let fams = families(2, 8, 4, 1);
+        let fused = FusedSrpHasher::from_families(&fams);
+        let mut out = vec![0i32; fused.n_codes()];
+        fused.hash_into(&[0.0; 5], &mut out);
+    }
+}

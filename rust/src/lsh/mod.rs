@@ -6,11 +6,18 @@
 //! This pure-Rust implementation mirrors, bit-for-bit up to f32 rounding,
 //! the Pallas kernel shipped in `artifacts/` (which computes
 //! `floor(x @ (A/r) + b/r)`); integration tests cross-check the two.
+//!
+//! The sign-random-projection family ([`SrpFamily`], SimHash) and its
+//! fused multi-table twin ([`FusedSrpHasher`]) serve the SRP-based
+//! schemes (Sign-ALSH, Simple-LSH) behind
+//! [`crate::index::MipsHashScheme`].
 
 pub mod family;
 pub mod fused;
+pub mod fused_srp;
 pub mod srp;
 
 pub use family::L2LshFamily;
 pub use fused::FusedHasher;
+pub use fused_srp::FusedSrpHasher;
 pub use srp::SrpFamily;

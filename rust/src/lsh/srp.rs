@@ -31,6 +31,19 @@ impl SrpFamily {
         self.k
     }
 
+    /// Borrow the raw `[k][dim]` projection rows (each hash function's
+    /// direction contiguous) — used by [`super::FusedSrpHasher`] to stack
+    /// all families into one matrix without copying per call.
+    pub fn a_rows(&self) -> &[f32] {
+        &self.a
+    }
+
+    /// Rebuild a family from persisted raw `[k][dim]` storage.
+    pub fn from_raw(dim: usize, k: usize, a: Vec<f32>) -> Self {
+        assert_eq!(a.len(), k * dim);
+        Self { dim, k, a }
+    }
+
     /// Projection matrix in artifact layout `[dim][k]` (the `a` input of
     /// the `sign_alsh_*` artifacts).
     pub fn a_matrix_dk(&self) -> Vec<f32> {

@@ -24,7 +24,7 @@ const USAGE: &str = "\
 repro — ALSH for sublinear-time MIPS (NIPS 2014) reproduction
 
 USAGE:
-  repro figure <1..8> [--dataset movielens|netflix|tiny] [--users N]
+  repro figure <1..9> [--dataset movielens|netflix|tiny] [--users N]
                       [--out-dir results] [--coarse]
   repro serve  [--dataset tiny] [--addr 127.0.0.1:7878] [--artifacts artifacts]
                [--max-batch 64] [--max-wait-us 2000] [--tables 32]
@@ -76,7 +76,7 @@ fn run_figure(args: &Args) -> anyhow::Result<()> {
     let n: u32 = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow::anyhow!("figure number required (1-7)"))?
+        .ok_or_else(|| anyhow::anyhow!("figure number required (1-9)"))?
         .parse()?;
     let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
     let pr_cfg = parse_flags(args)?;
@@ -130,7 +130,11 @@ fn run_figure(args: &Args) -> anyhow::Result<()> {
             }
             (format!("fig8_{}", ds.name), csv)
         }
-        other => anyhow::bail!("unknown figure {other} (1-8)"),
+        9 => (
+            "fig9_sign_vs_l2_rho".to_string(),
+            figures::fig9_sign_vs_l2(&grid),
+        ),
+        other => anyhow::bail!("unknown figure {other} (1-9)"),
     };
     print!("{csv}");
     let path = figures::write_csv(&out_dir, &name, &csv)?;

@@ -22,6 +22,46 @@ pub fn collision_probability(r: f64, d: f64) -> f64 {
     p.clamp(0.0, 1.0)
 }
 
+/// Collision probability of two vectors at angle `θ = cos⁻¹(cos_theta)`
+/// under a sign random projection `h(x) = 1[aᵀx >= 0]` (Goemans &
+/// Williamson 1995; the SimHash engine of Sign-ALSH and Simple-LSH):
+///
+/// ```text
+/// P[h(x) = h(y)] = 1 − θ/π
+/// ```
+///
+/// Monotonically increasing in `cos_theta`: 1 at cos = 1 (θ = 0), ½ at
+/// cos = 0 (orthogonal), 0 at cos = −1 (antipodal).
+pub fn srp_collision_probability(cos_theta: f64) -> f64 {
+    let theta = cos_theta.clamp(-1.0, 1.0).acos();
+    (1.0 - theta / std::f64::consts::PI).clamp(0.0, 1.0)
+}
+
+/// Monte-Carlo estimate of the SRP collision probability (validation
+/// only, the SimHash twin of [`collision_probability_mc`]): draws `n`
+/// projections `a ~ N(0, I₂)` against the planar pair `u = (1, 0)`,
+/// `v = (cos θ, sin θ)` — WLOG, since SRP collision depends only on the
+/// angle within the pair's span — and counts sign agreements.
+pub fn srp_collision_probability_mc(
+    cos_theta: f64,
+    n: usize,
+    rng: &mut crate::util::Rng,
+) -> f64 {
+    let theta = cos_theta.clamp(-1.0, 1.0).acos();
+    let (sin_t, cos_t) = theta.sin_cos();
+    let mut hits = 0usize;
+    for _ in 0..n {
+        let a0: f64 = rng.normal_f64();
+        let a1: f64 = rng.normal_f64();
+        let su = a0 >= 0.0;
+        let sv = a0 * cos_t + a1 * sin_t >= 0.0;
+        if su == sv {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
 /// Monte-Carlo estimate of the collision probability (validation only):
 /// draws `n` (a, b) pairs and counts collisions of two 1-D points at
 /// distance `d`. Used by tests to validate the closed form.
@@ -88,6 +128,37 @@ mod tests {
             assert!(
                 (closed - mc).abs() < 5e-3,
                 "F_{r}({d}): closed {closed} vs mc {mc}"
+            );
+        }
+    }
+
+    #[test]
+    fn srp_limits_and_monotonicity() {
+        assert!((srp_collision_probability(1.0) - 1.0).abs() < 1e-12);
+        assert!((srp_collision_probability(0.0) - 0.5).abs() < 1e-12);
+        assert!(srp_collision_probability(-1.0).abs() < 1e-12);
+        // Out-of-range cosines clamp instead of NaN.
+        assert_eq!(srp_collision_probability(1.5), 1.0);
+        let mut prev = 0.0;
+        for i in -100..=100 {
+            let p = srp_collision_probability(i as f64 / 100.0);
+            assert!(p >= prev - 1e-12, "not increasing in cos θ");
+            assert!((0.0..=1.0).contains(&p));
+            prev = p;
+        }
+    }
+
+    /// The Monte-Carlo validation the Sign-ALSH ρ curves rest on: the
+    /// closed form 1 − θ/π matches sampled sign random projections.
+    #[test]
+    fn srp_matches_monte_carlo() {
+        let mut rng = Rng::seed_from_u64(21);
+        for cos_theta in [0.95, 0.7, 0.3, 0.0, -0.5, -0.9] {
+            let closed = srp_collision_probability(cos_theta);
+            let mc = srp_collision_probability_mc(cos_theta, 200_000, &mut rng);
+            assert!(
+                (closed - mc).abs() < 5e-3,
+                "SRP p(cos={cos_theta}): closed {closed} vs mc {mc}"
             );
         }
     }

@@ -1,12 +1,18 @@
 //! The paper's theory, executable: collision probabilities, ρ exponents,
-//! and the grid-search optimizer behind Figures 1–4.
+//! and the grid-search optimizer behind Figures 1–4 — plus the Sign-ALSH
+//! collision probability and ρ\* (Shrivastava & Li 2015) behind the
+//! scheme-comparison figure.
 
 pub mod collision;
 pub mod normal;
 pub mod rho;
 pub mod validate;
 
-pub use collision::collision_probability;
+pub use collision::{
+    collision_probability, srp_collision_probability, srp_collision_probability_mc,
+};
 pub use normal::{erf, normal_cdf};
-pub use rho::{optimize_rho, rho_alsh, GridSpec, RhoOpt};
+pub use rho::{
+    optimize_rho, optimize_rho_sign, rho_alsh, rho_sign_alsh, GridSpec, RhoOpt,
+};
 pub use validate::{validate_theorem3, validation_csv, ValidationRow};

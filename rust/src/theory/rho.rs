@@ -1,7 +1,27 @@
 //! The query-time exponent ρ for ALSH-for-MIPS and its grid-search
-//! optimizer ρ\* (Eq. 19–20) — the math behind Figures 1–3.
+//! optimizer ρ\* (Eq. 19–20) — the math behind Figures 1–3 — plus the
+//! **Sign-ALSH** exponent (Shrivastava & Li 2015, "Improved ALSH for
+//! MIPS") behind the scheme-comparison figure
+//! (`figures::theory_figs::fig9_sign_vs_l2`).
+//!
+//! # Sign-ALSH ρ
+//!
+//! Under the sign transforms `P(x) = [x; ½−‖x‖²; …; ½−‖x‖^(2^m)]`,
+//! `Q(q) = [q/‖q‖; 0; …]` with data scaled so `‖x‖ <= U`, the
+//! transformed pair satisfies `Q(q)·P(x) = qᵀx`, `‖Q(q)‖ = 1` and
+//! `‖P(x)‖² = m/4 + ‖x‖^(2^(m+1))` (telescoping the appended squares),
+//! so SRP collision probability is `1 − cos⁻¹(z)/π` with
+//! `z = qᵀx / √(m/4 + ‖x‖^(2^(m+1)))`. Over the good side (`qᵀx >= S0`,
+//! `‖x‖ <= U`) the worst case is `z₁ = S0/√(m/4 + U^(2^(m+1)))`; over
+//! the bad side (`qᵀx <= cS0`, and `‖x‖ >= qᵀx` for unit q) the best
+//! case is `z₂ = cS0/√(m/4 + (cS0)^(2^(m+1)))` — giving
+//! `ρ = log p(z₁) / log p(z₂)`. There is no quantization width r and no
+//! additive error term: only (m, U) remain, and the resulting ρ\*
+//! **dominates** L2-ALSH's everywhere on the paper's grid (validated in
+//! `figures::theory_figs` tests against the closed forms here, which the
+//! `srp_matches_monte_carlo` test pins to sampled projections).
 
-use super::collision::collision_probability;
+use super::collision::{collision_probability, srp_collision_probability};
 
 /// p1 for a c-approximate MIPS instance: collision probability at the
 /// *good* side (qᵀx >= S0), including the transform error term U^(2^(m+1)).
@@ -32,6 +52,54 @@ pub fn rho_alsh(s0: f64, c: f64, u: f64, m: u32, r: f64) -> Option<f64> {
     }
     let rho = p1.ln() / p2.ln();
     (rho.is_finite() && rho > 0.0).then_some(rho)
+}
+
+/// Sign-ALSH p1: SRP collision probability at the good side's worst-case
+/// cosine `S0 / √(m/4 + U^(2^(m+1)))`.
+pub fn p1_sign_alsh(s0: f64, u: f64, m: u32) -> f64 {
+    let denom = (m as f64 / 4.0 + u.powi(2i32.pow(m + 1))).sqrt();
+    srp_collision_probability(s0 / denom)
+}
+
+/// Sign-ALSH p2: SRP collision probability at the bad side's best-case
+/// cosine `cS0 / √(m/4 + (cS0)^(2^(m+1)))`.
+pub fn p2_sign_alsh(s0: f64, c: f64, m: u32) -> f64 {
+    let t = c * s0;
+    let denom = (m as f64 / 4.0 + t.powi(2i32.pow(m + 1))).sqrt();
+    srp_collision_probability(t / denom)
+}
+
+/// Sign-ALSH ρ = log p1 / log p2. Returns `None` when infeasible
+/// (p1 <= p2: no sublinear guarantee at these parameters).
+pub fn rho_sign_alsh(s0: f64, c: f64, u: f64, m: u32) -> Option<f64> {
+    let p1 = p1_sign_alsh(s0, u, m);
+    let p2 = p2_sign_alsh(s0, c, m);
+    if !(p1 > p2 && p1 < 1.0 && p2 > 0.0) {
+        return None;
+    }
+    let rho = p1.ln() / p2.ln();
+    (rho.is_finite() && rho > 0.0).then_some(rho)
+}
+
+/// ρ\* for Sign-ALSH: min over the grid's (m, U) of [`rho_sign_alsh`]
+/// at `S0 = s0_frac · U` (SRP has no quantization width, so the grid's
+/// `rs` axis is unused and the reported `r` is 0).
+pub fn optimize_rho_sign(s0_frac: f64, c: f64, grid: &GridSpec) -> Option<RhoOpt> {
+    let mut best: Option<RhoOpt> = None;
+    for &m in &grid.ms {
+        for &u in &grid.us {
+            let s0 = s0_frac * u;
+            if s0 <= 0.0 {
+                continue;
+            }
+            if let Some(rho) = rho_sign_alsh(s0, c, u, m) {
+                if best.map_or(true, |b| rho < b.rho) {
+                    best = Some(RhoOpt { rho, m, u, r: 0.0 });
+                }
+            }
+        }
+    }
+    best
 }
 
 /// Search grid for the ρ\* optimization (Eq. 20).
@@ -144,6 +212,65 @@ mod tests {
     fn infeasible_when_error_dominates() {
         // Big U, tiny m, c close to 1: the error term kills the gap.
         assert!(rho_alsh(0.9 * 0.99, 0.999, 0.99, 1, 2.5).is_none());
+    }
+
+    #[test]
+    fn sign_rho_sublinear_at_recommended_params() {
+        // Shrivastava & Li 2015's recommended (m=2, U=0.75).
+        let rho = rho_sign_alsh(0.9 * 0.75, 0.5, 0.75, 2).expect("feasible");
+        assert!(rho > 0.0 && rho < 1.0, "sign rho = {rho}");
+        // And it beats the L2-ALSH recommended point at the same task.
+        let l2 = rho_alsh(0.9 * 0.83, 0.5, 0.83, 3, 2.5).unwrap();
+        assert!(rho < l2, "sign {rho} !< l2 {l2}");
+    }
+
+    #[test]
+    fn sign_rho_increases_in_c() {
+        let grid = GridSpec::coarse();
+        let r_02 = optimize_rho_sign(0.9, 0.2, &grid).unwrap().rho;
+        let r_05 = optimize_rho_sign(0.9, 0.5, &grid).unwrap().rho;
+        let r_09 = optimize_rho_sign(0.9, 0.9, &grid).unwrap().rho;
+        assert!(r_02 < r_05 && r_05 < r_09, "{r_02} {r_05} {r_09}");
+    }
+
+    /// The Shrivastava & Li 2015 headline: Sign-ALSH ρ* dominates
+    /// L2-ALSH ρ* across the whole (S0, c) plane.
+    #[test]
+    fn sign_rho_star_dominates_l2_everywhere() {
+        let grid = GridSpec::coarse();
+        for s0_frac in [0.5, 0.7, 0.9] {
+            for c10 in 1..10 {
+                let c = c10 as f64 * 0.1;
+                let l2 = optimize_rho(s0_frac, c, &grid);
+                let sign = optimize_rho_sign(s0_frac, c, &grid);
+                if let (Some(l2), Some(sign)) = (l2, sign) {
+                    assert!(sign.rho > 0.0 && sign.rho < 1.0);
+                    assert!(
+                        sign.rho <= l2.rho + 1e-9,
+                        "sign rho*({s0_frac},{c}) = {} > l2 {}",
+                        sign.rho,
+                        l2.rho
+                    );
+                }
+            }
+        }
+    }
+
+    /// p1/p2 sanity: good side collides more, and both are genuine
+    /// probabilities.
+    #[test]
+    fn sign_p1_exceeds_p2_for_reasonable_params() {
+        let (s0, c, u, m) = (0.9 * 0.75, 0.5, 0.75, 2);
+        let p1 = p1_sign_alsh(s0, u, m);
+        let p2 = p2_sign_alsh(s0, c, m);
+        assert!(p1 > p2, "{p1} vs {p2}");
+        assert!((0.0..=1.0).contains(&p1) && (0.0..=1.0).contains(&p2));
+    }
+
+    #[test]
+    fn sign_infeasible_when_no_gap() {
+        // c = 1: the good and bad sides coincide — no gap, no guarantee.
+        assert!(rho_sign_alsh(0.9 * 0.75, 1.0, 0.75, 2).is_none());
     }
 
     #[test]

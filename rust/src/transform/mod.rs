@@ -7,6 +7,15 @@
 //!
 //! These mirror `python/compile/model.py`; integration tests cross-check
 //! them against the compiled HLO artifacts.
+//!
+//! The SRP-based schemes' transforms live here too and are selected by
+//! [`crate::index::MipsHashScheme`]:
+//!
+//! * **Sign-ALSH** (Shrivastava & Li 2015): `P(x) = [x; ½ − ‖x‖²; …]`,
+//!   `Q(q) = [q/‖q‖; 0; …]` — see [`p_transform_sign`].
+//! * **Simple-LSH** (Neyshabur & Srebro 2015): the single-append
+//!   `P(x) = [x; √(1 − ‖x‖²)]`, `Q(q) = [q/‖q‖; 0]` — see
+//!   [`p_transform_simple`].
 
 /// Euclidean norm of a vector.
 #[inline]
@@ -136,23 +145,83 @@ pub fn q_transform_slice(q: &[f32], m: usize, out: &mut [f32]) {
 /// Sign-ALSH data transform (paper §5 future work; Shrivastava & Li 2015):
 /// `P(x) = [x; ½ − ‖x‖²; ½ − ‖x‖⁴; …; ½ − ‖x‖^(2^m)]`, for `‖x‖ <= U < 1`.
 pub fn p_transform_sign(x: &[f32], m: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(x.len() + m);
-    out.extend_from_slice(x);
-    let mut n = x.iter().map(|v| v * v).sum::<f32>();
-    for _ in 0..m {
-        out.push(0.5 - n);
+    let mut out = vec![0.0f32; x.len() + m];
+    scale_p_transform_sign_slice(x, 1.0, m, &mut out);
+    out
+}
+
+/// Fused Eq. 11 scaling + Sign-ALSH P transform into a preallocated slice
+/// — the Sign-ALSH scheme's build-side block-fill path, mirroring
+/// [`scale_p_transform_slice`]. With `factor = 1.0` it is bit-identical
+/// to [`p_transform_sign`] (same accumulation order).
+pub fn scale_p_transform_sign_slice(x: &[f32], factor: f32, m: usize, out: &mut [f32]) {
+    let d = x.len();
+    assert_eq!(out.len(), d + m, "output slice shape mismatch");
+    let mut n = 0.0f32;
+    for j in 0..d {
+        let s = x[j] * factor;
+        out[j] = s;
+        n += s * s;
+    }
+    for j in 0..m {
+        out[d + j] = 0.5 - n;
         n *= n;
     }
-    out
 }
 
 /// Sign-ALSH query transform: `Q(q) = [q/‖q‖; 0; …; 0]`.
 pub fn q_transform_sign(q: &[f32], m: usize) -> Vec<f32> {
-    let norm = l2_norm(q).max(1e-12);
-    let mut out = Vec::with_capacity(q.len() + m);
-    out.extend(q.iter().map(|v| v / norm));
-    out.extend(std::iter::repeat(0.0).take(m));
+    let mut out = vec![0.0f32; q.len() + m];
+    q_transform_sign_slice(q, m, &mut out);
     out
+}
+
+/// [`q_transform_sign`] into a preallocated slice (the batch query path
+/// for the Sign-ALSH and Simple-LSH schemes — both append zeros).
+pub fn q_transform_sign_slice(q: &[f32], m: usize, out: &mut [f32]) {
+    let d = q.len();
+    assert_eq!(out.len(), d + m, "output slice shape mismatch");
+    let norm = l2_norm(q).max(1e-12);
+    for j in 0..d {
+        out[j] = q[j] / norm;
+    }
+    for j in 0..m {
+        out[d + j] = 0.0;
+    }
+}
+
+/// Allocation-free [`q_transform_sign`]: overwrite `out`, reusing its
+/// capacity (the SRP-scheme query hot path).
+pub fn q_transform_sign_into(q: &[f32], m: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(q.len() + m, 0.0);
+    q_transform_sign_slice(q, m, out);
+}
+
+/// Simple-LSH data transform (Neyshabur & Srebro 2015): the single-append
+/// `P(x) = [x; √(1 − ‖x‖²)]`, for `‖x‖ <= U <= 1`. After the transform
+/// `‖P(x)‖ = 1`, so the SRP angle between `P(x)` and `Q(q)` is exactly
+/// `cos⁻¹(qᵀx / ‖q‖)` — MIPS becomes angular search with no error term.
+pub fn p_transform_simple(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len() + 1];
+    scale_p_transform_simple_slice(x, 1.0, &mut out);
+    out
+}
+
+/// Fused Eq. 11 scaling + Simple-LSH P transform into a preallocated
+/// slice (the Simple-LSH scheme's build-side block-fill path). The
+/// appended component is clamped at 0 so f32 rounding of `‖x‖² ≈ 1`
+/// can never produce a NaN.
+pub fn scale_p_transform_simple_slice(x: &[f32], factor: f32, out: &mut [f32]) {
+    let d = x.len();
+    assert_eq!(out.len(), d + 1, "output slice shape mismatch");
+    let mut n = 0.0f32;
+    for j in 0..d {
+        let s = x[j] * factor;
+        out[j] = s;
+        n += s * s;
+    }
+    out[d] = (1.0 - n).max(0.0).sqrt();
 }
 
 #[cfg(test)]
@@ -330,6 +399,58 @@ mod tests {
         assert_eq!(qq.len(), 5);
         assert!((qq[0] - 0.6).abs() < 1e-6);
         assert!(qq[2..].iter().all(|&v| v == 0.0));
+    }
+
+    /// The sign/simple slice variants (the SRP schemes' build and batch
+    /// paths) must be bit-identical to the allocating forms, and the
+    /// fused scaling must equal scale-then-transform.
+    #[test]
+    fn sign_and_simple_slice_variants_match() {
+        check(100, |rng| {
+            let d = 1 + rng.below(40);
+            let m = 1 + rng.below(5);
+            let x: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 3.0).collect();
+            let scale = UScale::fit([x.as_slice()], 0.83);
+
+            let scaled = scale.apply(&x);
+            let mut px_slice = vec![0.0f32; d + m];
+            scale_p_transform_sign_slice(&x, scale.factor, m, &mut px_slice);
+            assert_eq!(px_slice, p_transform_sign(&scaled, m), "fused scale+sign-P diverges");
+
+            let mut qx_slice = vec![0.0f32; d + m];
+            q_transform_sign_slice(&x, m, &mut qx_slice);
+            assert_eq!(qx_slice, q_transform_sign(&x, m), "sign-Q slice diverges");
+            let mut qx_into = Vec::new();
+            for _ in 0..2 {
+                q_transform_sign_into(&x, m, &mut qx_into);
+                assert_eq!(qx_into, q_transform_sign(&x, m));
+            }
+
+            let mut simple_slice = vec![0.0f32; d + 1];
+            scale_p_transform_simple_slice(&x, scale.factor, &mut simple_slice);
+            assert_eq!(simple_slice, p_transform_simple(&scaled), "fused scale+simple-P diverges");
+        });
+    }
+
+    /// Simple-LSH: the transformed data vector is unit-norm, so the SRP
+    /// cosine between Q(q) and P(x) equals qᵀx for unit q.
+    #[test]
+    fn simple_transform_is_unit_norm_and_preserves_ip() {
+        check(100, |rng| {
+            let d = 2 + rng.below(20);
+            let mut q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let qn = l2_norm(&q).max(1e-6);
+            q.iter_mut().for_each(|v| *v /= qn);
+            let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let xn = l2_norm(&x).max(1e-6);
+            let target = 0.1 + 0.85 * rng.f32();
+            x.iter_mut().for_each(|v| *v = *v / xn * target);
+            let px = p_transform_simple(&x);
+            assert!((l2_norm(&px) - 1.0).abs() < 1e-5, "‖P(x)‖ != 1");
+            // Q appends a zero, so Q(q)·P(x) = qᵀx exactly.
+            let qq = q_transform_sign(&q, 1);
+            assert!((dot(&qq, &px) - dot(&q, &x)).abs() < 1e-5);
+        });
     }
 
     /// The transformed inner product is preserved exactly: Q(q)·P(x) = qᵀx

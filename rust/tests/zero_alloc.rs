@@ -7,7 +7,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use alsh::index::{AlshIndex, AlshParams, BandedParams, NormRangeIndex};
+use alsh::index::{AlshIndex, AlshParams, BandedParams, MipsHashScheme, NormRangeIndex};
 use alsh::util::Rng;
 
 thread_local! {
@@ -80,6 +80,56 @@ fn steady_state_queries_allocate_nothing() {
         after - before,
         0,
         "steady-state scratch queries performed {} heap allocations",
+        after - before
+    );
+}
+
+/// The SRP query path (Sign-ALSH: fused bit-packed hashing, packed-key
+/// probes, bit-flip multi-probe) shares the scratch discipline with the
+/// L2 path: zero steady-state allocations through the same warmed
+/// scratch.
+#[test]
+fn srp_steady_state_queries_allocate_nothing() {
+    let mut rng = Rng::seed_from_u64(17);
+    let items: Vec<Vec<f32>> = (0..2000)
+        .map(|_| {
+            let s = 0.2 + 1.8 * rng.f32();
+            (0..24).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+    let params = AlshParams {
+        k_per_table: 12,
+        n_tables: 16,
+        ..AlshParams::recommended(MipsHashScheme::SignAlsh)
+    };
+    let idx = AlshIndex::build(&items, params, 18);
+    assert_eq!(idx.scheme(), MipsHashScheme::SignAlsh);
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..24).map(|_| rng.normal_f32()).collect())
+        .collect();
+
+    let mut scratch = idx.scratch();
+    let mut sink = 0usize;
+    for q in &queries {
+        sink += idx.query_into(q, 10, &mut scratch).len();
+        sink += idx.candidates_multiprobe_into(q, 4, &mut scratch).len();
+        sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+    }
+
+    let before = allocs_on_this_thread();
+    for _ in 0..3 {
+        for q in &queries {
+            sink += idx.query_into(q, 10, &mut scratch).len();
+            sink += idx.candidates_multiprobe_into(q, 4, &mut scratch).len();
+            sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+        }
+    }
+    let after = allocs_on_this_thread();
+    assert!(sink > 0, "queries must return results");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state SRP scratch queries performed {} heap allocations",
         after - before
     );
 }
