@@ -5,13 +5,50 @@
 //! l2-alsh — the current behavior).
 //! Used to pick `AlshParams::default()` / `BandedParams::default()` /
 //! `AlshParams::recommended(scheme)`; kept as a tuning tool.
+//!
+//! `--mmap` roundtrips every built index through the persist v5
+//! aligned container and runs the sweep **through the zero-copy mapped
+//! index** (`open_mmap`) instead of the heap one — the query surface is
+//! storage-generic, so the printed numbers must not change.
 use alsh::baselines::LinearScan;
 use alsh::config::DatasetConfig;
 use alsh::data::generate_dataset;
 use alsh::index::{
-    AlshIndex, AlshParams, AnyIndex, BandedParams, MipsHashScheme, NormRangeIndex,
+    open_mmap, AlshIndex, AlshParams, AnyIndex, BandedParams, MipsHashScheme, NormRangeIndex,
+    PersistFormat, Storage,
 };
 use alsh::util::Rng;
+
+/// One (K, L) grid point through one index (heap or mapped — the sweep
+/// body is storage-generic).
+fn eval_point<S: Storage>(
+    label: &str,
+    idx: &AnyIndex<S>,
+    items_len: usize,
+    queries: &[Vec<f32>],
+    scan: &LinearScan,
+    k: usize,
+    l: usize,
+) {
+    let mut scratch = idx.scratch();
+    // Whole evaluation batch through fused matrix–matrix hashing;
+    // candidate counts come from the same probe pass (no re-probing).
+    let mut tops: Vec<Vec<alsh::index::ScoredItem>> = Vec::new();
+    let mut counts: Vec<usize> = Vec::new();
+    idx.query_batch_counts_into(queries, 10, &mut scratch, &mut tops, &mut counts);
+    let mut hits = 0;
+    for (q, top) in queries.iter().zip(&tops) {
+        if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
+            hits += 1;
+        }
+    }
+    let cands: usize = counts.iter().sum();
+    println!(
+        "K={k:2} L={l:2} {label}: top1-in-top10 recall {hits}/{}, candidates {:.1}%",
+        queries.len(),
+        100.0 * cands as f64 / queries.len() as f64 / items_len as f64
+    );
+}
 
 fn sweep(
     name: &str,
@@ -19,9 +56,14 @@ fn sweep(
     queries: &[Vec<f32>],
     n_bands: usize,
     scheme: MipsHashScheme,
+    mmap: bool,
 ) {
     let scan = LinearScan::new(items);
-    println!("== {name} ({} items, scheme {scheme}, banded B={n_bands}) ==", items.len());
+    println!(
+        "== {name} ({} items, scheme {scheme}, banded B={n_bands}{}) ==",
+        items.len(),
+        if mmap { ", via mmap" } else { "" }
+    );
     // SRP sign bits carry less per-code selectivity than L2 quantization
     // cells, so the SRP grid sweeps wider K at the same table counts.
     let grid: &[(usize, usize)] = if scheme.is_srp() {
@@ -29,6 +71,10 @@ fn sweep(
     } else {
         &[(4, 32), (6, 32), (6, 48), (8, 32), (8, 48), (10, 48)]
     };
+    let tmp_dir = std::env::temp_dir().join("alsh-param-sweep");
+    if mmap {
+        std::fs::create_dir_all(&tmp_dir).expect("create sweep temp dir");
+    }
     for &(k, l) in grid {
         let params = AlshParams {
             k_per_table: k,
@@ -41,25 +87,18 @@ fn sweep(
         let banded: AnyIndex =
             NormRangeIndex::build(items, params, BandedParams { n_bands }, 7).into();
         for (label, idx) in [("flat  ", &flat), ("banded", &banded)] {
-            let mut scratch = idx.scratch();
-            // Whole evaluation batch through fused matrix–matrix hashing;
-            // candidate counts come from the same probe pass (no
-            // re-probing).
-            let mut tops: Vec<Vec<alsh::index::ScoredItem>> = Vec::new();
-            let mut counts: Vec<usize> = Vec::new();
-            idx.query_batch_counts_into(queries, 10, &mut scratch, &mut tops, &mut counts);
-            let mut hits = 0;
-            for (q, top) in queries.iter().zip(&tops) {
-                if top.iter().any(|h| h.id == scan.query(q, 1)[0].id) {
-                    hits += 1;
-                }
+            if mmap {
+                // v5 save → zero-copy open → the same sweep body over
+                // the mapped index.
+                let tag = label.trim();
+                let path = tmp_dir.join(format!("sweep_{tag}_{k}_{l}.alsh"));
+                idx.save_as(&path, PersistFormat::V5).expect("save v5");
+                let mapped = open_mmap(&path).expect("open_mmap");
+                eval_point(label, &mapped, items.len(), queries, &scan, k, l);
+                std::fs::remove_file(&path).ok();
+            } else {
+                eval_point(label, idx, items.len(), queries, &scan, k, l);
             }
-            let cands: usize = counts.iter().sum();
-            println!(
-                "K={k:2} L={l:2} {label}: top1-in-top10 recall {hits}/{}, candidates {:.1}%",
-                queries.len(),
-                100.0 * cands as f64 / queries.len() as f64 / items.len() as f64
-            );
         }
     }
 }
@@ -70,6 +109,7 @@ fn main() {
         eprintln!("{e}");
         std::process::exit(2);
     });
+    let mmap = args.iter().any(|a| a == "--mmap");
     let mut rng = Rng::seed_from_u64(42);
     let n = 20_000;
     let dim = 64;
@@ -81,9 +121,9 @@ fn main() {
         .collect();
     let queries: Vec<Vec<f32>> =
         (0..100).map(|_| (0..dim).map(|_| rng.normal_f32()).collect()).collect();
-    sweep("random gaussian (adversarial)", &items, &queries, 4, scheme);
+    sweep("random gaussian (adversarial)", &items, &queries, 4, scheme, mmap);
 
     let data = generate_dataset(&DatasetConfig::tiny()).unwrap();
     let qs: Vec<Vec<f32>> = data.users[..100.min(data.users.len())].to_vec();
-    sweep("puresvd tiny (realistic)", &data.items, &qs, 4, scheme);
+    sweep("puresvd tiny (realistic)", &data.items, &qs, 4, scheme, mmap);
 }

@@ -23,6 +23,8 @@
 //! # alternate hash schemes (default l2-alsh; SRP schemes serve through
 //! # the fused CPU hash path — no PJRT query artifact exists for them):
 //! cargo run --release --example recommend_end_to_end -- --scheme sign-alsh
+//! # zero-copy serving: persist v5 + open_mmap restart demo
+//! cargo run --release --example recommend_end_to_end -- --tiny --mmap
 //! ```
 
 use std::sync::Arc;
@@ -33,13 +35,16 @@ use alsh::config::DatasetConfig;
 use alsh::coordinator::{BatcherConfig, MipsEngine, PjrtBatcher};
 use alsh::data::generate_dataset;
 use alsh::eval::gold_top_t_batch;
-use alsh::index::{AlshParams, AnyIndex, BandedParams, MipsHashScheme, QueryScratch};
+use alsh::index::{
+    AlshParams, AnyIndex, BandedParams, MipsHashScheme, PersistFormat, QueryScratch, Storage,
+};
 
 /// Batch-evaluate one index over the test users: returns (total gold hits
 /// in top-k, wall time, mean candidates/query) from a single
-/// `query_batch_counts_into` pass.
-fn eval_batch(
-    index: &AnyIndex,
+/// `query_batch_counts_into` pass. Storage-generic: the `--mmap` restart
+/// demo runs the same evaluation through a zero-copy mapped index.
+fn eval_batch<S: Storage>(
+    index: &AnyIndex<S>,
     users: &[Vec<f32>],
     gold: &[Vec<u32>],
     top_k: usize,
@@ -62,6 +67,7 @@ fn eval_batch(
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let tiny = args.iter().any(|a| a == "--tiny");
+    let mmap = args.iter().any(|a| a == "--mmap");
     let scheme = MipsHashScheme::from_cli_args(&args).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
@@ -208,6 +214,54 @@ fn main() -> anyhow::Result<()> {
         banded_cpq,
         pct(banded_cpq)
     );
+
+    // -- zero-copy restart demo (persist v5 + open_mmap) ----------------------
+    if mmap {
+        println!("\n== --mmap: v5 save → zero-copy reopen → identical serving ==");
+        let dir = std::env::temp_dir().join("alsh-recommend-mmap");
+        std::fs::create_dir_all(&dir)?;
+        let flat_path = dir.join("flat.alsh.v5");
+        let banded_path = dir.join("banded.alsh.v5");
+        let t = Instant::now();
+        engine.index().save_as(&flat_path, PersistFormat::V5)?;
+        engine_banded.index().save_as(&banded_path, PersistFormat::V5)?;
+        println!("saved v5 containers in {:?}", t.elapsed());
+        let t = Instant::now();
+        let mapped = MipsEngine::<alsh::index::Mapped>::open_mmap(&flat_path)?;
+        let mapped_banded = MipsEngine::<alsh::index::Mapped>::open_mmap(&banded_path)?;
+        let open_elapsed = t.elapsed();
+        let t = Instant::now();
+        let first = mapped.query(&test_users[0], top_k);
+        let first_query = t.elapsed();
+        println!(
+            "open_mmap (both indexes): {open_elapsed:?}; first mapped query (page-faults \
+             the touched sections): {first_query:?}"
+        );
+        let (m_recall, m_elapsed, m_cpq) =
+            eval_batch(mapped.index(), &test_users, &gold, top_k, &mut scratch);
+        let (mb_recall, mb_elapsed, mb_cpq) =
+            eval_batch(mapped_banded.index(), &test_users, &gold, top_k, &mut scratch);
+        row(
+            &format!("ALSH K={recall_k} (mmap)"),
+            Some(m_recall),
+            m_elapsed,
+        );
+        row(
+            &format!("ALSH banded B={} (mmap)", banded_params.n_bands),
+            Some(mb_recall),
+            mb_elapsed,
+        );
+        assert_eq!(first, engine.query(&test_users[0], top_k), "mapped top-k diverged");
+        assert_eq!((m_recall, m_cpq), (alsh_recall, alsh_cpq), "mapped flat diverged");
+        assert_eq!(
+            (mb_recall, mb_cpq),
+            (banded_recall, banded_cpq),
+            "mapped banded diverged"
+        );
+        println!("mapped results byte-identical to the heap indexes ✓");
+        std::fs::remove_file(&flat_path).ok();
+        std::fs::remove_file(&banded_path).ok();
+    }
 
     // -- batched path (PJRT artifact, or the fused CPU fallback) --------------
     match PjrtBatcher::spawn(Arc::clone(&engine), "artifacts", BatcherConfig::default()) {

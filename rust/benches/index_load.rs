@@ -1,0 +1,211 @@
+//! Index restart benchmark: persist v4 streaming load vs persist v5
+//! zero-copy `open_mmap`, flat and norm-range banded.
+//!
+//! Measures, per kind:
+//! * v4 `load_any` wall time (the O(file) streaming decode),
+//! * v5 `open_mmap` wall time (the O(header) mapped open),
+//! * first-query latency on a freshly opened mapped index (the page
+//!   faults land here, not at open), and
+//! * warm p50 query latency, heap vs mapped (steady state must match —
+//!   the mapped index walks the same CSR layout out of the page cache).
+//!
+//! Emits the `index_load` section of `BENCH_load.json` and asserts the
+//! headline acceptance: `open_mmap` at least 10× faster than the v4
+//! streaming load at the bench corpus size.
+//!
+//! Knobs: `ALSH_LOAD_BENCH_N` (items, default 60_000),
+//! `ALSH_LOAD_BENCH_D` (dim, default 64), `ALSH_LOAD_BENCH_BANDS`
+//! (default 4), `ALSH_LOAD_BENCH_REPS` (min-of, default 3).
+
+use std::time::Instant;
+
+use alsh::index::persist::load_any;
+use alsh::index::storage::Storage;
+use alsh::index::{
+    open_mmap, AlshIndex, AlshParams, AnyIndex, BandedParams, NormRangeIndex, PersistFormat,
+};
+use alsh::util::bench::merge_bench_json_file;
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn min_secs(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Warm p50 query latency (µs) over `queries`, after one warm-up pass.
+fn warm_p50_us<S: Storage>(idx: &AnyIndex<S>, queries: &[Vec<f32>]) -> f64 {
+    let mut scratch = idx.scratch();
+    for q in queries {
+        std::hint::black_box(idx.query_into(q, 10, &mut scratch).len());
+    }
+    let mut lats: Vec<f64> = queries
+        .iter()
+        .map(|q| {
+            let t = Instant::now();
+            std::hint::black_box(idx.query_into(q, 10, &mut scratch).len());
+            t.elapsed().as_secs_f64() * 1e6
+        })
+        .collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats[lats.len() / 2]
+}
+
+struct KindResult {
+    v4_load_s: f64,
+    v5_open_s: f64,
+    speedup: f64,
+    first_query_us: f64,
+    p50_heap_us: f64,
+    p50_mapped_us: f64,
+    v4_bytes: u64,
+    v5_bytes: u64,
+}
+
+fn bench_kind<S: Storage>(
+    label: &str,
+    built: &AnyIndex<S>,
+    queries: &[Vec<f32>],
+    reps: usize,
+) -> KindResult {
+    let dir = std::env::temp_dir().join("alsh-load-bench");
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let v4_path = dir.join(format!("{label}.v4.alsh"));
+    let v5_path = dir.join(format!("{label}.v5.alsh"));
+    built.save_as(&v4_path, PersistFormat::V4).expect("save v4");
+    built.save_as(&v5_path, PersistFormat::V5).expect("save v5");
+    let v4_bytes = std::fs::metadata(&v4_path).unwrap().len();
+    let v5_bytes = std::fs::metadata(&v5_path).unwrap().len();
+
+    // Streaming v4 load (page cache warm from the save — both sides get
+    // warm-cache treatment, so the delta is pure decode/copy work).
+    let v4_load_s = min_secs(reps, || {
+        std::hint::black_box(load_any(&v4_path).expect("v4 load").n_items());
+    });
+    // Zero-copy v5 open.
+    let v5_open_s = min_secs(reps, || {
+        std::hint::black_box(open_mmap(&v5_path).expect("v5 open").n_items());
+    });
+    let speedup = v4_load_s / v5_open_s;
+
+    // First query on a fresh mapping: the touched pages fault in here.
+    let mapped = open_mmap(&v5_path).expect("v5 open");
+    let t = Instant::now();
+    let first = mapped.query(&queries[0], 10);
+    let first_query_us = t.elapsed().as_secs_f64() * 1e6;
+
+    // Integrity + warm p50 on both storages.
+    let heap = load_any(&v4_path).expect("v4 load");
+    assert_eq!(first, heap.query(&queries[0], 10), "{label}: mapped != heap");
+    let mut hs = heap.scratch();
+    let mut ms = mapped.scratch();
+    for q in queries.iter().take(5) {
+        assert_eq!(
+            heap.query_into(q, 10, &mut hs).to_vec(),
+            mapped.query_into(q, 10, &mut ms).to_vec(),
+            "{label}: mapped query diverged"
+        );
+    }
+    let p50_heap_us = warm_p50_us(&heap, queries);
+    let p50_mapped_us = warm_p50_us(&mapped, queries);
+
+    println!(
+        "{label}: v4 load {:.1}ms ({:.1} MiB) | v5 open {:.3}ms ({:.1} MiB) | {speedup:.0}x \
+         | first mapped query {first_query_us:.0}µs | warm p50 heap {p50_heap_us:.1}µs \
+         vs mapped {p50_mapped_us:.1}µs",
+        v4_load_s * 1e3,
+        v4_bytes as f64 / (1024.0 * 1024.0),
+        v5_open_s * 1e3,
+        v5_bytes as f64 / (1024.0 * 1024.0),
+    );
+    std::fs::remove_file(&v4_path).ok();
+    std::fs::remove_file(&v5_path).ok();
+    KindResult {
+        v4_load_s,
+        v5_open_s,
+        speedup,
+        first_query_us,
+        p50_heap_us,
+        p50_mapped_us,
+        v4_bytes,
+        v5_bytes,
+    }
+}
+
+fn main() {
+    let n = env_usize("ALSH_LOAD_BENCH_N", 60_000);
+    let d = env_usize("ALSH_LOAD_BENCH_D", 64);
+    let n_bands = env_usize("ALSH_LOAD_BENCH_BANDS", 4).max(1);
+    let reps = env_usize("ALSH_LOAD_BENCH_REPS", 3).max(1);
+    let params = AlshParams::default();
+    println!(
+        "index load bench: n={n} d={d} K={} L={} B={n_bands} reps={reps}",
+        params.k_per_table, params.n_tables
+    );
+
+    let mut rng = Rng::seed_from_u64(7);
+    let items: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let s = 0.2 + 1.8 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+    let queries: Vec<Vec<f32>> =
+        (0..200).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+
+    let flat: AnyIndex = AlshIndex::build(&items, params, 8).into();
+    let banded: AnyIndex =
+        NormRangeIndex::build(&items, params, BandedParams { n_bands }, 8).into();
+
+    let flat_r = bench_kind("flat", &flat, &queries, reps);
+    let banded_r = bench_kind("banded", &banded, &queries, reps);
+
+    // Headline acceptance: the mapped open must beat the streaming load
+    // by ≥10× (it is O(header) vs O(file)); only meaningful once the
+    // corpus is big enough that the v4 decode dominates process noise.
+    if n >= 20_000 {
+        for (label, r) in [("flat", &flat_r), ("banded", &banded_r)] {
+            assert!(
+                r.speedup >= 10.0,
+                "{label}: open_mmap only {:.1}x faster than v4 streaming load \
+                 ({:.3}ms vs {:.3}ms) — zero-copy open regressed",
+                r.speedup,
+                r.v5_open_s * 1e3,
+                r.v4_load_s * 1e3
+            );
+        }
+    }
+
+    let mut entries: Vec<(String, Json)> = vec![
+        ("n".into(), Json::Num(n as f64)),
+        ("d".into(), Json::Num(d as f64)),
+        ("n_bands".into(), Json::Num(n_bands as f64)),
+        ("reps".into(), Json::Num(reps as f64)),
+    ];
+    for (label, r) in [("flat", &flat_r), ("banded", &banded_r)] {
+        entries.push((format!("{label}_v4_load_ms"), Json::Num(r.v4_load_s * 1e3)));
+        entries.push((format!("{label}_v5_open_ms"), Json::Num(r.v5_open_s * 1e3)));
+        entries.push((format!("{label}_open_speedup_v5_vs_v4"), Json::Num(r.speedup)));
+        entries.push((
+            format!("{label}_first_mapped_query_us"),
+            Json::Num(r.first_query_us),
+        ));
+        entries.push((format!("{label}_warm_p50_heap_us"), Json::Num(r.p50_heap_us)));
+        entries.push((
+            format!("{label}_warm_p50_mapped_us"),
+            Json::Num(r.p50_mapped_us),
+        ));
+        entries.push((format!("{label}_v4_file_bytes"), Json::Num(r.v4_bytes as f64)));
+        entries.push((format!("{label}_v5_file_bytes"), Json::Num(r.v5_bytes as f64)));
+    }
+    merge_bench_json_file("BENCH_load.json", "index_load", entries);
+}

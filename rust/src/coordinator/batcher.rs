@@ -22,6 +22,7 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::index::storage::Storage;
 use crate::index::{AnyIndex, MipsHashScheme, ScoredItem};
 use crate::runtime::{ArtifactMeta, Runtime};
 
@@ -103,8 +104,8 @@ pub struct PjrtBatcher {
 /// the banded index hashes queries with the same fused family set as the
 /// flat one, whatever the scheme). The scratch buffers are owned by the
 /// worker loop.
-fn fused_hash_batch(
-    index: &AnyIndex,
+fn fused_hash_batch<S: Storage>(
+    index: &AnyIndex<S>,
     rows: &[Vec<f32>],
     qx: &mut Vec<f32>,
     xs: &mut Vec<f32>,
@@ -138,8 +139,13 @@ impl PjrtBatcher {
     /// its K columns (a mismatch is a hard error). When no runtime can be
     /// loaded at all, the worker falls back to the engine's fused CPU
     /// hasher and serving works without artifacts.
-    pub fn spawn(
-        engine: Arc<MipsEngine>,
+    ///
+    /// Storage-generic: a zero-copy mapped engine
+    /// (`MipsEngine::open_mmap`) batches exactly like a heap one — the
+    /// fused fallback hashes through the owned family matrix and the
+    /// probes walk the mapped CSR sections.
+    pub fn spawn<S: Storage>(
+        engine: Arc<MipsEngine<S>>,
         artifacts_dir: impl Into<std::path::PathBuf>,
         cfg: BatcherConfig,
     ) -> crate::Result<Self> {
@@ -248,8 +254,8 @@ impl PjrtBatcher {
         })
     }
 
-    fn batch_loop(
-        engine: Arc<MipsEngine>,
+    fn batch_loop<S: Storage>(
+        engine: Arc<MipsEngine<S>>,
         metrics: Arc<Metrics>,
         rx: Receiver<Msg>,
         job_tx: Sender<HashJob>,

@@ -4,6 +4,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::index::scratch::with_thread_scratch;
+use crate::index::storage::{Mapped, Owned, Storage};
 use crate::index::{
     AlshIndex, AlshParams, AnyIndex, BandedBuildStats, BandedParams, BuildOpts, BuildStats,
     NormRangeIndex, QueryScratch, ScoredItem,
@@ -13,7 +14,8 @@ use super::metrics::Metrics;
 
 /// A self-contained MIPS engine over one item collection, serving either
 /// the flat [`AlshIndex`] or the norm-range banded [`NormRangeIndex`]
-/// behind [`AnyIndex`] dispatch.
+/// behind [`AnyIndex`] dispatch — over heap storage (the default) or a
+/// zero-copy mapped index ([`MipsEngine::open_mmap`]).
 ///
 /// The allocation-free request path (`query_into` with a caller-owned
 /// [`QueryScratch`]) is used per-shard by the router and by the batcher;
@@ -21,8 +23,8 @@ use super::metrics::Metrics;
 /// artifact (see `batcher`) and re-enters here via `query_with_codes_into`
 /// — both index kinds consume the same `[L·K]` code rows, since the
 /// banded index shares one hash family set across its bands.
-pub struct MipsEngine {
-    index: AnyIndex,
+pub struct MipsEngine<S: Storage = Owned> {
+    index: AnyIndex<S>,
     metrics: Arc<Metrics>,
 }
 
@@ -76,13 +78,25 @@ impl MipsEngine {
     pub fn from_index(index: AlshIndex) -> Self {
         Self::from_any(AnyIndex::Flat(index))
     }
+}
 
-    /// Wrap an already-built index of either kind.
-    pub fn from_any(index: AnyIndex) -> Self {
+impl MipsEngine<Mapped> {
+    /// Serve straight out of a v5 index file: zero-copy open (O(header),
+    /// no array read or copied — see `index::persist::open_mmap`),
+    /// whichever kind and scheme the file holds. The returned engine has
+    /// the exact same query surface as a heap engine.
+    pub fn open_mmap(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        Ok(Self::from_any(crate::index::persist::open_mmap(path)?))
+    }
+}
+
+impl<S: Storage> MipsEngine<S> {
+    /// Wrap an already-built (or mapped) index of either kind.
+    pub fn from_any(index: AnyIndex<S>) -> Self {
         Self { index, metrics: Arc::new(Metrics::new()) }
     }
 
-    pub fn index(&self) -> &AnyIndex {
+    pub fn index(&self) -> &AnyIndex<S> {
         &self.index
     }
 

@@ -3,13 +3,16 @@
 //! out, each shard answers locally, and the final top-k is a cheap merge.
 
 use crate::index::scratch::with_thread_scratch;
+use crate::index::storage::{Mapped, Owned, Storage};
 use crate::index::{AlshParams, BandedParams, QueryScratch, ScoredItem};
 
 use super::engine::MipsEngine;
 
-/// A collection of shard engines with global-id translation.
-pub struct ShardedRouter {
-    shards: Vec<MipsEngine>,
+/// A collection of shard engines with global-id translation — heap-built
+/// shards (the default) or zero-copy mapped shards
+/// ([`ShardedRouter::open_mmap_shards`]).
+pub struct ShardedRouter<S: Storage = Owned> {
+    shards: Vec<MipsEngine<S>>,
     /// Global id of shard s's local item 0.
     offsets: Vec<u32>,
     dim: usize,
@@ -57,12 +60,55 @@ impl ShardedRouter {
         }
         Self { shards, offsets, dim }
     }
+}
+
+impl ShardedRouter<Mapped> {
+    /// Assemble a router over per-shard v5 index files, each opened
+    /// zero-copy (`MipsEngine::open_mmap`): the restart path for a
+    /// sharded deployment — O(shards) opens, no postings byte copied,
+    /// page-cache shared with any co-resident process. `paths[s]` must
+    /// hold shard `s`'s items in the same contiguous-chunk order the
+    /// build produced (global ids are reconstructed cumulatively, as in
+    /// [`ShardedRouter::build`]).
+    pub fn open_mmap_shards<P: AsRef<std::path::Path>>(paths: &[P]) -> crate::Result<Self> {
+        anyhow::ensure!(!paths.is_empty(), "no shard files given");
+        let mut engines = Vec::with_capacity(paths.len());
+        for p in paths {
+            engines.push(MipsEngine::<Mapped>::open_mmap(p)?);
+        }
+        Self::from_engines(engines)
+    }
+}
+
+impl<S: Storage> ShardedRouter<S> {
+    /// Assemble a router from pre-built (or pre-opened) shard engines,
+    /// reconstructing the cumulative global-id offsets from the shard
+    /// sizes. All shards must serve the same item dimension.
+    pub fn from_engines(shards: Vec<MipsEngine<S>>) -> crate::Result<Self> {
+        anyhow::ensure!(!shards.is_empty(), "no shard engines given");
+        let dim = shards[0].index().dim();
+        let mut offsets = Vec::with_capacity(shards.len());
+        let mut next = 0u64;
+        for e in &shards {
+            anyhow::ensure!(
+                e.index().dim() == dim,
+                "shard dim {} != {dim}",
+                e.index().dim()
+            );
+            offsets.push(u32::try_from(next).map_err(|_| {
+                anyhow::anyhow!("total items across shards overflow u32 global ids")
+            })?);
+            next += e.index().n_items() as u64;
+        }
+        anyhow::ensure!(next <= u32::MAX as u64 + 1, "total items overflow u32 global ids");
+        Ok(Self { shards, offsets, dim })
+    }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
-    pub fn shard(&self, s: usize) -> &MipsEngine {
+    pub fn shard(&self, s: usize) -> &MipsEngine<S> {
         &self.shards[s]
     }
 

@@ -12,31 +12,49 @@ use super::core::{AlshIndex, AlshParams, ScoredItem};
 use super::frozen::TableStats;
 use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 use super::scratch::{with_thread_scratch, QueryScratch};
+use super::storage::{Mapped, Owned, Storage};
 use crate::lsh::L2LshFamily;
 
-/// A flat or norm-range banded ALSH index behind one serving surface.
-pub enum AnyIndex {
+/// A flat or norm-range banded ALSH index behind one serving surface,
+/// over heap ([`Owned`], the default) or zero-copy mmap ([`Mapped`])
+/// storage.
+pub enum AnyIndex<S: Storage = Owned> {
     /// Single table set, one global U scale.
-    Flat(AlshIndex),
+    Flat(AlshIndex<S>),
     /// B norm bands with per-band U scaling, shared hash families.
-    Banded(NormRangeIndex),
+    Banded(NormRangeIndex<S>),
 }
 
-impl From<AlshIndex> for AnyIndex {
-    fn from(index: AlshIndex) -> Self {
+/// An index of either kind served straight out of a v5 index file: open
+/// with [`MappedIndex::open_mmap`] (or `index::persist::open_mmap`) and
+/// plug it into `MipsEngine::from_any` / the batcher / the router
+/// exactly like a heap index — the whole query surface is
+/// storage-generic.
+pub type MappedIndex = AnyIndex<Mapped>;
+
+impl MappedIndex {
+    /// Zero-copy open of a v5 index file (any kind, any scheme) — see
+    /// `index::persist::open_mmap`.
+    pub fn open_mmap(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        super::persist::open_mmap(path)
+    }
+}
+
+impl<S: Storage> From<AlshIndex<S>> for AnyIndex<S> {
+    fn from(index: AlshIndex<S>) -> Self {
         AnyIndex::Flat(index)
     }
 }
 
-impl From<NormRangeIndex> for AnyIndex {
-    fn from(index: NormRangeIndex) -> Self {
+impl<S: Storage> From<NormRangeIndex<S>> for AnyIndex<S> {
+    fn from(index: NormRangeIndex<S>) -> Self {
         AnyIndex::Banded(index)
     }
 }
 
-impl AnyIndex {
+impl<S: Storage> AnyIndex<S> {
     /// The flat index, if this is one.
-    pub fn as_flat(&self) -> Option<&AlshIndex> {
+    pub fn as_flat(&self) -> Option<&AlshIndex<S>> {
         match self {
             AnyIndex::Flat(i) => Some(i),
             AnyIndex::Banded(_) => None,
@@ -44,7 +62,7 @@ impl AnyIndex {
     }
 
     /// The banded index, if this is one.
-    pub fn as_banded(&self) -> Option<&NormRangeIndex> {
+    pub fn as_banded(&self) -> Option<&NormRangeIndex<S>> {
         match self {
             AnyIndex::Flat(_) => None,
             AnyIndex::Banded(i) => Some(i),
@@ -228,8 +246,8 @@ impl AnyIndex {
         with_thread_scratch(|s| self.candidates_into(query, s).to_vec())
     }
 
-    /// Serialize to `path` (persist v3; flat and banded kinds share the
-    /// container format — see `index::persist`).
+    /// Serialize to `path` (persist v4 — the streaming container; flat
+    /// and banded kinds share the format — see `index::persist`).
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
         match self {
             AnyIndex::Flat(i) => i.save(path),
@@ -237,7 +255,23 @@ impl AnyIndex {
         }
     }
 
-    /// Load either kind from `path` (see `index::persist::load_any`).
+    /// Serialize to `path` in the chosen container format (v4 streaming
+    /// or v5 mmap-ready aligned sections — see `index::persist`).
+    pub fn save_as(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        format: super::persist::PersistFormat,
+    ) -> crate::Result<()> {
+        match self {
+            AnyIndex::Flat(i) => i.save_as(path, format),
+            AnyIndex::Banded(i) => i.save_as(path, format),
+        }
+    }
+}
+
+impl AnyIndex {
+    /// Load either kind from `path` into heap storage (any version —
+    /// see `index::persist::load_any`).
     pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
         super::persist::load_any(path)
     }

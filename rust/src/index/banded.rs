@@ -78,6 +78,7 @@ use super::core::{run_query_batch, AlshParams, ScoredItem};
 use super::frozen::{FrozenTable, TableStats};
 use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 use super::scratch::{with_thread_scratch, DedupSink, QueryScratch};
+use super::storage::{Owned, Storage};
 use crate::lsh::L2LshFamily;
 use crate::transform::{l2_norm, UScale};
 
@@ -116,7 +117,9 @@ pub struct BandedBuildStats {
 }
 
 /// One norm band: its id slice, per-band scale, and frozen tables.
-pub struct Band {
+/// Generic over [`Storage`] like everything downstream of the build: the
+/// id map and the tables are mapped views under `Band<Mapped>`.
+pub struct Band<S: Storage = Owned> {
     /// Eq. 11 scale fitted to *this band's* max norm.
     pub(crate) scale: UScale,
     /// Smallest item norm in the band (diagnostics / persistence).
@@ -125,12 +128,12 @@ pub struct Band {
     pub(crate) max_norm: f32,
     /// Global ids of the band's items, strictly ascending. Table postings
     /// are indices into this map (band-local ids).
-    pub(crate) ids: Vec<u32>,
+    pub(crate) ids: S::U32s,
     /// The band's L frozen CSR tables over band-local ids.
-    pub(crate) tables: Vec<FrozenTable>,
+    pub(crate) tables: Vec<FrozenTable<S>>,
 }
 
-impl Band {
+impl<S: Storage> Band<S> {
     /// Items in the band.
     pub fn n_items(&self) -> usize {
         self.ids.len()
@@ -152,7 +155,7 @@ impl Band {
     }
 
     /// The band's frozen CSR tables (persistence / diagnostics).
-    pub fn tables(&self) -> &[FrozenTable] {
+    pub fn tables(&self) -> &[FrozenTable<S>] {
         &self.tables
     }
 
@@ -165,7 +168,7 @@ impl Band {
 /// Norm-range partitioned ALSH index: B bands with per-band U scaling,
 /// one shared hash family set, global exact rerank. See the module docs
 /// for the math and the shared-query-codes design.
-pub struct NormRangeIndex {
+pub struct NormRangeIndex<S: Storage = Owned> {
     params: AlshParams,
     banded: BandedParams,
     /// One K-wide family per table — the *same* sampling as the flat
@@ -176,10 +179,10 @@ pub struct NormRangeIndex {
     /// every band.
     fused: SchemeHasher,
     /// Bands in ascending-norm order.
-    bands: Vec<Band>,
+    bands: Vec<Band<S>>,
     /// Original (unscaled) item vectors, row-major by *global* id — the
     /// global rerank pool.
-    items_flat: Vec<f32>,
+    items_flat: S::F32s,
     dim: usize,
     n_items: usize,
 }
@@ -382,6 +385,76 @@ impl NormRangeIndex {
         (index, stats)
     }
 
+    /// Reassemble from persisted parts (see `index::persist`), validating
+    /// the band partition invariants **in full** — the streaming (heap)
+    /// load path, where the O(n_items) scan is already dwarfed by the
+    /// copy. The mapped open uses [`NormRangeIndex::from_parts_shallow`].
+    pub(crate) fn from_parts(
+        params: AlshParams,
+        banded: BandedParams,
+        families: SchemeFamilies,
+        bands: Vec<Band>,
+        items_flat: Vec<f32>,
+        dim: usize,
+        n_items: usize,
+    ) -> anyhow::Result<Self> {
+        let mut seen = vec![false; n_items];
+        for band in &bands {
+            anyhow::ensure!(
+                band.ids.windows(2).all(|w| w[0] < w[1]),
+                "corrupt index file: band ids not strictly ascending"
+            );
+            for &id in band.ids.iter() {
+                let slot = seen
+                    .get_mut(id as usize)
+                    .ok_or_else(|| anyhow::anyhow!("corrupt index file: band id out of range"))?;
+                anyhow::ensure!(!*slot, "corrupt index file: item id in two bands");
+                *slot = true;
+            }
+        }
+        anyhow::ensure!(
+            seen.iter().all(|&v| v),
+            "corrupt index file: bands do not cover every item"
+        );
+        Self::from_parts_shallow(params, banded, families, bands, items_flat, dim, n_items)
+    }
+}
+
+impl<S: Storage> NormRangeIndex<S> {
+    /// Assemble from parts with **shape checks only** (band/table/family
+    /// counts, item-matrix size) — the `open_mmap` constructor, which
+    /// must stay O(header): no band-coverage scan, no O(n_items)
+    /// allocation, no postings page ever touched. Deep corruption inside
+    /// the mapped arrays surfaces as a safe probe miss or index panic,
+    /// never UB.
+    pub(crate) fn from_parts_shallow(
+        params: AlshParams,
+        banded: BandedParams,
+        families: SchemeFamilies,
+        bands: Vec<Band<S>>,
+        items_flat: S::F32s,
+        dim: usize,
+        n_items: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(families.len() == params.n_tables, "family count mismatch");
+        anyhow::ensure!(bands.len() == banded.n_bands, "band count mismatch");
+        anyhow::ensure!(items_flat.len() == dim * n_items, "items_flat size mismatch");
+        let mut total = 0usize;
+        for band in &bands {
+            anyhow::ensure!(
+                band.tables.len() == params.n_tables,
+                "corrupt index file: band table count mismatch"
+            );
+            total += band.ids.len();
+        }
+        anyhow::ensure!(
+            total == n_items,
+            "corrupt index file: band sizes sum to {total}, expected {n_items}"
+        );
+        let fused = families.fuse();
+        Ok(Self { params, banded, families, fused, bands, items_flat, dim, n_items })
+    }
+
     pub fn params(&self) -> &AlshParams {
         &self.params
     }
@@ -429,27 +502,33 @@ impl NormRangeIndex {
     }
 
     /// The bands, ascending-norm order.
-    pub fn bands(&self) -> &[Band] {
+    pub fn bands(&self) -> &[Band<S>] {
         &self.bands
     }
 
     /// Item vector by global id.
     pub fn item(&self, id: u32) -> &[f32] {
         let i = id as usize;
-        &self.items_flat[i * self.dim..(i + 1) * self.dim]
+        let flat: &[f32] = &self.items_flat;
+        &flat[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The row-major `[n_items × dim]` item matrix (persistence).
+    pub(crate) fn items_flat(&self) -> &[f32] {
+        &self.items_flat
     }
 
     /// Aggregate table statistics across every band.
     pub fn table_stats(&self) -> TableStats {
         self.bands
             .iter()
-            .map(Band::table_stats)
+            .map(|b| b.table_stats())
             .fold(TableStats::default(), TableStats::merge)
     }
 
     /// Per-band aggregate table statistics, band 0 (smallest norms) first.
     pub fn band_table_stats(&self) -> Vec<TableStats> {
-        self.bands.iter().map(Band::table_stats).collect()
+        self.bands.iter().map(|b| b.table_stats()).collect()
     }
 
     /// A scratch pre-sized for this index (same shape rules as
@@ -592,7 +671,7 @@ impl NormRangeIndex {
         k: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
-        super::rerank::rerank_into(&self.items_flat, self.dim, query, k, s)
+        super::rerank::rerank_into(self.items_flat(), self.dim, query, k, s)
     }
 
     /// Full allocation-free query: one hash, B band probes, one global
@@ -658,7 +737,7 @@ impl NormRangeIndex {
             self.params.scheme,
             self.params.m,
             self.dim,
-            &self.items_flat,
+            self.items_flat(),
             queries,
             k,
             s,
@@ -707,45 +786,6 @@ impl NormRangeIndex {
         out
     }
 
-    /// Reassemble from persisted parts (see `index::persist`), validating
-    /// the band partition invariants.
-    pub(crate) fn from_parts(
-        params: AlshParams,
-        banded: BandedParams,
-        families: SchemeFamilies,
-        bands: Vec<Band>,
-        items_flat: Vec<f32>,
-        dim: usize,
-        n_items: usize,
-    ) -> anyhow::Result<Self> {
-        anyhow::ensure!(families.len() == params.n_tables, "family count mismatch");
-        anyhow::ensure!(bands.len() == banded.n_bands, "band count mismatch");
-        anyhow::ensure!(items_flat.len() == dim * n_items, "items_flat size mismatch");
-        let mut seen = vec![false; n_items];
-        for band in &bands {
-            anyhow::ensure!(
-                band.tables.len() == params.n_tables,
-                "corrupt index file: band table count mismatch"
-            );
-            anyhow::ensure!(
-                band.ids.windows(2).all(|w| w[0] < w[1]),
-                "corrupt index file: band ids not strictly ascending"
-            );
-            for &id in &band.ids {
-                let slot = seen
-                    .get_mut(id as usize)
-                    .ok_or_else(|| anyhow::anyhow!("corrupt index file: band id out of range"))?;
-                anyhow::ensure!(!*slot, "corrupt index file: item id in two bands");
-                *slot = true;
-            }
-        }
-        anyhow::ensure!(
-            seen.iter().all(|&v| v),
-            "corrupt index file: bands do not cover every item"
-        );
-        let fused = families.fuse();
-        Ok(Self { params, banded, families, fused, bands, items_flat, dim, n_items })
-    }
 }
 
 #[cfg(test)]

@@ -27,6 +27,7 @@ use super::build::{self, BuildOpts, BuildStats};
 use super::frozen::{FrozenTable, TableStats};
 use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 use super::scratch::{with_thread_scratch, QueryScratch};
+use super::storage::{Owned, Storage};
 use crate::lsh::L2LshFamily;
 use crate::transform::UScale;
 
@@ -156,19 +157,25 @@ pub struct ScoredItem {
 ///
 /// Immutable once built (`Sync` without interior mutability): all query
 /// state lives in the caller's [`QueryScratch`].
-pub struct AlshIndex {
+///
+/// Generic over [`Storage`]: `AlshIndex` (the default, heap `Vec`s) is
+/// what [`AlshIndex::build`] and the streaming persist loader produce;
+/// `AlshIndex<Mapped>` serves the same query surface over zero-copy
+/// views into a v5 index file (`index::persist::open_mmap`).
+pub struct AlshIndex<S: Storage = Owned> {
     params: AlshParams,
     scale: UScale,
     /// One K-wide hash family per table, over dimension D' = D +
     /// `scheme.append_len(m)` (retained for persistence, the PJRT
-    /// artifact inputs, and reference paths), stored per scheme.
+    /// artifact inputs, and reference paths), stored per scheme. Small
+    /// (O(L·K·D')), so owned under every storage.
     families: SchemeFamilies,
     /// The same families stacked into one `[L·K × D']` matrix.
     fused: SchemeHasher,
     /// Frozen CSR tables (build-side `HashMap` form is dropped after build).
-    tables: Vec<FrozenTable>,
+    tables: Vec<FrozenTable<S>>,
     /// Original (unscaled) item vectors, row-major — used for exact rerank.
-    items_flat: Vec<f32>,
+    items_flat: S::F32s,
     dim: usize,
     n_items: usize,
 }
@@ -224,7 +231,9 @@ impl AlshIndex {
             Self { params, scale, families, fused, tables, items_flat, dim, n_items: items.len() };
         (index, stats)
     }
+}
 
+impl<S: Storage> AlshIndex<S> {
     pub fn params(&self) -> &AlshParams {
         &self.params
     }
@@ -267,8 +276,14 @@ impl AlshIndex {
     }
 
     /// The frozen CSR hash tables (persistence / diagnostics).
-    pub fn tables(&self) -> &[FrozenTable] {
+    pub fn tables(&self) -> &[FrozenTable<S>] {
         &self.tables
+    }
+
+    /// The row-major `[n_items × dim]` item matrix (persistence — the
+    /// v5 writer serializes it as one section).
+    pub(crate) fn items_flat(&self) -> &[f32] {
+        &self.items_flat
     }
 
     /// A scratch with the fixed-shape buffers (stamps, codes, fracs)
@@ -286,13 +301,15 @@ impl AlshIndex {
         s
     }
 
-    /// Reassemble an index from persisted parts (see `index::persist`).
+    /// Reassemble an index from persisted parts (see `index::persist`) —
+    /// heap vectors from the streaming loader or mapped views from
+    /// `open_mmap`, same constructor.
     pub(crate) fn from_parts(
         params: AlshParams,
         scale: UScale,
         families: SchemeFamilies,
-        tables: Vec<FrozenTable>,
-        items_flat: Vec<f32>,
+        tables: Vec<FrozenTable<S>>,
+        items_flat: S::F32s,
         dim: usize,
         n_items: usize,
     ) -> Self {
@@ -306,7 +323,8 @@ impl AlshIndex {
     /// Item vector by id.
     pub fn item(&self, id: u32) -> &[f32] {
         let i = id as usize;
-        &self.items_flat[i * self.dim..(i + 1) * self.dim]
+        let flat: &[f32] = &self.items_flat;
+        &flat[i * self.dim..(i + 1) * self.dim]
     }
 
     /// Probe all L tables with the codes in `s.codes`, deduplicating into
@@ -370,7 +388,7 @@ impl AlshIndex {
         k: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
-        super::rerank::rerank_into(&self.items_flat, self.dim, query, k, s)
+        super::rerank::rerank_into(self.items_flat(), self.dim, query, k, s)
     }
 
     /// Full allocation-free query: probe + exact rerank, results in
@@ -432,7 +450,7 @@ impl AlshIndex {
             self.params.scheme,
             self.params.m,
             self.dim,
-            &self.items_flat,
+            self.items_flat(),
             queries,
             k,
             s,
@@ -469,7 +487,7 @@ impl AlshIndex {
 
     /// Exact-rerank an arbitrary candidate list by inner product; top `k`.
     pub fn rerank(&self, query: &[f32], candidates: &[u32], k: usize) -> Vec<ScoredItem> {
-        super::rerank::rerank_list(&self.items_flat, self.dim, query, candidates, k)
+        super::rerank::rerank_list(self.items_flat(), self.dim, query, candidates, k)
     }
 
     /// Full query: retrieve candidates, exact-rerank, return top `k`.

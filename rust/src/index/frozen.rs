@@ -1,11 +1,11 @@
 //! Immutable CSR hash tables: the serve-side (and now build-target) form.
 //!
-//! Each table is three flat arrays — sorted bucket keys, CSR offsets, and
-//! one contiguous postings array — so a probe is a bounded binary search
-//! into cache-friendly memory instead of a hash-map walk plus a pointer
-//! chase into a per-bucket `Vec`. A 256-entry top-byte radix over the
-//! (avalanched, uniform) keys first narrows the search to ~1/256 of the
-//! key array, leaving a handful of comparisons per probe.
+//! Each table is four flat arrays — sorted bucket keys, a 256-entry
+//! top-byte radix, CSR offsets, and one contiguous postings array — so a
+//! probe is a bounded binary search into cache-friendly memory instead of
+//! a hash-map walk plus a pointer chase into a per-bucket `Vec`. The
+//! radix over the (avalanched, uniform) keys first narrows the search to
+//! ~1/256 of the key array, leaving a handful of comparisons per probe.
 //!
 //! Since the parallel sharded build there is no mutable `HashMap` stage at
 //! all: build workers emit per-shard `(bucket key, item id)` runs sorted by
@@ -16,8 +16,19 @@
 //! byte-identical to what sequential insertion used to produce
 //! (property-tested in `tests/parallel_build_equivalence.rs` and
 //! `tests/fused_csr_equivalence.rs`).
+//!
+//! # Storage polymorphism
+//!
+//! The table is generic over [`Storage`]: the build pipeline produces
+//! `FrozenTable<Owned>` (plain `Vec`s — and `FrozenTable` still names
+//! exactly that, via the default type parameter), while persist v5's
+//! `open_mmap` assembles `FrozenTable<Mapped>` from zero-copy views into
+//! the index file — the arrays on disk are exactly the arrays the probe
+//! loop walks, so the entire query surface runs unchanged on memory that
+//! was never copied (`tests/mmap_equivalence.rs`).
 
 use super::hash_table::bucket_key;
+use super::storage::{Owned, Storage};
 
 /// Aggregate statistics over a set of frozen CSR tables (one index's L
 /// tables, or one norm band's). Replaces the old anonymous
@@ -35,8 +46,8 @@ pub struct TableStats {
 }
 
 impl TableStats {
-    /// Aggregate over `tables`.
-    pub fn from_tables(tables: &[FrozenTable]) -> Self {
+    /// Aggregate over `tables` (any storage).
+    pub fn from_tables<S: Storage>(tables: &[FrozenTable<S>]) -> Self {
         Self {
             n_buckets: tables.iter().map(|t| t.n_buckets()).sum(),
             n_postings: tables.iter().map(|t| t.n_postings()).sum(),
@@ -54,18 +65,43 @@ impl TableStats {
     }
 }
 
-/// One frozen hash table in CSR layout.
-#[derive(Clone, Debug, Default)]
-pub struct FrozenTable {
+/// One frozen hash table in CSR layout, over owned or mapped storage.
+pub struct FrozenTable<S: Storage = Owned> {
     /// Bucket keys, sorted ascending (unique by construction).
-    keys: Vec<u64>,
+    keys: S::U64s,
     /// Top-byte radix: keys with high byte `b` live at
     /// `keys[starts[b] as usize..starts[b + 1] as usize]`. Length 257.
-    starts: Vec<u32>,
+    starts: S::U32s,
     /// CSR offsets into `postings`; length `keys.len() + 1`.
-    offsets: Vec<u32>,
+    offsets: S::U32s,
     /// All postings, concatenated in bucket order.
-    postings: Vec<u32>,
+    postings: S::U32s,
+}
+
+impl<S: Storage> Clone for FrozenTable<S> {
+    fn clone(&self) -> Self {
+        Self {
+            keys: self.keys.clone(),
+            starts: self.starts.clone(),
+            offsets: self.offsets.clone(),
+            postings: self.postings.clone(),
+        }
+    }
+}
+
+impl<S: Storage> std::fmt::Debug for FrozenTable<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FrozenTable")
+            .field("n_buckets", &self.n_buckets())
+            .field("n_postings", &self.n_postings())
+            .finish()
+    }
+}
+
+impl Default for FrozenTable<Owned> {
+    fn default() -> Self {
+        Self::from_pairs(Vec::new())
+    }
 }
 
 fn radix_starts(keys: &[u64]) -> Vec<u32> {
@@ -95,7 +131,7 @@ fn next_min_key(runs: &[&[(u64, u32)]], pos: &[usize]) -> Option<u64> {
     min_key
 }
 
-impl FrozenTable {
+impl FrozenTable<Owned> {
     /// Two-pass counting merge of per-shard `(bucket key, item id)` runs,
     /// each sorted ascending by key, directly into the CSR arrays.
     ///
@@ -157,8 +193,10 @@ impl FrozenTable {
         Self::from_sorted_runs(&[pairs.as_slice()])
     }
 
-    /// Reassemble from persisted parts, validating CSR invariants.
-    /// `max_id` bounds the stored item ids (exclusive).
+    /// Reassemble from persisted parts, validating CSR invariants in
+    /// full (the streaming load path — deep O(table) validation is the
+    /// right trade when every byte is being copied anyway). `max_id`
+    /// bounds the stored item ids (exclusive).
     pub fn from_parts(
         keys: Vec<u64>,
         offsets: Vec<u32>,
@@ -193,6 +231,58 @@ impl FrozenTable {
         let starts = radix_starts(&keys);
         Ok(Self { keys, starts, offsets, postings })
     }
+}
+
+impl<S: Storage> FrozenTable<S> {
+    /// Assemble from already-materialized storage (the persist v5 path:
+    /// all four arrays — including the radix `starts` — live in the file
+    /// as sections). Validation here is **O(1)-per-table shape checks
+    /// plus the 257-entry radix**, deliberately not the O(n) deep CSR
+    /// scan of [`FrozenTable::from_parts`]: the mapped open must stay
+    /// O(header) and must not fault in the postings pages. Deep
+    /// corruption inside keys/postings surfaces as a clean probe miss or
+    /// a safe index panic, never UB.
+    pub(crate) fn from_storage_parts(
+        keys: S::U64s,
+        starts: S::U32s,
+        offsets: S::U32s,
+        postings: S::U32s,
+    ) -> anyhow::Result<Self> {
+        {
+            let s: &[u32] = &starts;
+            let o: &[u32] = &offsets;
+            anyhow::ensure!(
+                s.len() == 257,
+                "corrupt table: radix starts length {} != 257",
+                s.len()
+            );
+            anyhow::ensure!(
+                o.len() == keys.len() + 1,
+                "corrupt table: {} offsets for {} keys",
+                o.len(),
+                keys.len()
+            );
+            anyhow::ensure!(s[0] == 0, "corrupt table: radix starts[0] != 0");
+            anyhow::ensure!(
+                s[256] as usize == keys.len(),
+                "corrupt table: radix end {} != {} keys",
+                s[256],
+                keys.len()
+            );
+            anyhow::ensure!(
+                s.windows(2).all(|w| w[0] <= w[1]),
+                "corrupt table: radix starts not monotonic"
+            );
+            anyhow::ensure!(o[0] == 0, "corrupt table: offsets[0] != 0");
+            anyhow::ensure!(
+                *o.last().unwrap() as usize == postings.len(),
+                "corrupt table: offsets end {} != {} postings",
+                o.last().unwrap(),
+                postings.len()
+            );
+        }
+        Ok(Self { keys, starts, offsets, postings })
+    }
 
     /// The postings list for `codes` (empty slice for an empty bucket).
     #[inline]
@@ -200,16 +290,22 @@ impl FrozenTable {
         self.get_by_key(bucket_key(codes))
     }
 
-    /// Probe by raw bucket key.
+    /// Probe by raw bucket key. One code path for both storages: the
+    /// slice locals are a single pointer+len load whether the backing is
+    /// a `Vec` or a mapped section.
     #[inline]
     pub fn get_by_key(&self, key: u64) -> &[u32] {
+        let starts: &[u32] = &self.starts;
+        let keys: &[u64] = &self.keys;
+        let offsets: &[u32] = &self.offsets;
+        let postings: &[u32] = &self.postings;
         let b = (key >> 56) as usize;
-        let lo = self.starts[b] as usize;
-        let hi = self.starts[b + 1] as usize;
-        match self.keys[lo..hi].binary_search(&key) {
+        let lo = starts[b] as usize;
+        let hi = starts[b + 1] as usize;
+        match keys[lo..hi].binary_search(&key) {
             Ok(i) => {
                 let i = lo + i;
-                &self.postings[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+                &postings[offsets[i] as usize..offsets[i + 1] as usize]
             }
             Err(_) => &[],
         }
@@ -237,6 +333,12 @@ impl FrozenTable {
     /// Sorted bucket keys (persistence).
     pub fn keys(&self) -> &[u64] {
         &self.keys
+    }
+
+    /// Top-byte radix starts, length 257 (persistence — stored as a v5
+    /// section so the mapped open never rescans the keys).
+    pub fn starts(&self) -> &[u32] {
+        &self.starts
     }
 
     /// CSR offsets (persistence).
@@ -342,6 +444,25 @@ mod tests {
     }
 
     #[test]
+    fn storage_parts_roundtrip_probes_identically() {
+        // Reassembling through the v5-style constructor (radix included)
+        // must probe byte-identically to the original.
+        let mut rng = Rng::seed_from_u64(23);
+        let (pairs, mirror) = random_pairs(&mut rng, 300);
+        let frozen = FrozenTable::from_pairs(pairs);
+        let rebuilt = FrozenTable::<Owned>::from_storage_parts(
+            frozen.keys().to_vec(),
+            frozen.starts().to_vec(),
+            frozen.offsets().to_vec(),
+            frozen.postings().to_vec(),
+        )
+        .unwrap();
+        for (key, ids) in &mirror {
+            assert_eq!(rebuilt.get_by_key(*key), ids.as_slice());
+        }
+    }
+
+    #[test]
     fn from_parts_rejects_corruption() {
         // Unsorted keys.
         assert!(FrozenTable::from_parts(vec![5, 3], vec![0, 1, 2], vec![0, 1], 10).is_err());
@@ -353,6 +474,57 @@ mod tests {
         assert!(FrozenTable::from_parts(vec![1], vec![0, 3], vec![0, 1], 10).is_err());
         // Posting id out of range.
         assert!(FrozenTable::from_parts(vec![1], vec![0, 1], vec![10], 10).is_err());
+    }
+
+    #[test]
+    fn from_storage_parts_rejects_bad_shapes() {
+        let good = FrozenTable::from_pairs(vec![(7, 0), (9, 1), (9, 2)]);
+        let (k, s, o, p) = (
+            good.keys().to_vec(),
+            good.starts().to_vec(),
+            good.offsets().to_vec(),
+            good.postings().to_vec(),
+        );
+        // Wrong radix length.
+        assert!(FrozenTable::<Owned>::from_storage_parts(
+            k.clone(),
+            s[..256].to_vec(),
+            o.clone(),
+            p.clone()
+        )
+        .is_err());
+        // Radix end disagrees with key count.
+        let mut bad_s = s.clone();
+        bad_s[256] += 1;
+        assert!(
+            FrozenTable::<Owned>::from_storage_parts(k.clone(), bad_s, o.clone(), p.clone())
+                .is_err()
+        );
+        // Non-monotone radix.
+        let mut bad_s = s.clone();
+        bad_s[10] = 200;
+        bad_s[11] = 100;
+        assert!(
+            FrozenTable::<Owned>::from_storage_parts(k.clone(), bad_s, o.clone(), p.clone())
+                .is_err()
+        );
+        // Offsets length mismatch.
+        assert!(FrozenTable::<Owned>::from_storage_parts(
+            k.clone(),
+            s.clone(),
+            o[..o.len() - 1].to_vec(),
+            p.clone()
+        )
+        .is_err());
+        // Offsets end != postings.
+        let mut bad_o = o.clone();
+        *bad_o.last_mut().unwrap() += 1;
+        assert!(
+            FrozenTable::<Owned>::from_storage_parts(k.clone(), s.clone(), bad_o, p.clone())
+                .is_err()
+        );
+        // The untouched parts still assemble.
+        assert!(FrozenTable::<Owned>::from_storage_parts(k, s, o, p).is_ok());
     }
 
     #[test]

@@ -34,12 +34,15 @@ mod rerank;
 pub mod scheme;
 pub mod scratch;
 mod simd;
+pub mod storage;
 
-pub use any::AnyIndex;
+pub use any::{AnyIndex, MappedIndex};
 pub use banded::{Band, BandedBuildStats, BandedParams, NormRangeIndex};
 pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
 pub use frozen::{FrozenTable, TableStats};
+pub use persist::{open_mmap, open_mmap_scheme, PersistFormat};
 pub use scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 pub use scratch::QueryScratch;
+pub use storage::{MapSlice, Mapped, MmapFile, Owned, Storage};

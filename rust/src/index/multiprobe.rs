@@ -23,6 +23,7 @@
 use super::core::{AlshIndex, ScoredItem};
 use super::scheme::MipsHashScheme;
 use super::scratch::{with_thread_scratch, QueryScratch};
+use super::storage::Storage;
 use crate::index::hash_table::{bucket_key, srp_bucket_key};
 
 /// Enumerate one table's probe bucket keys — the base key, then the best
@@ -75,7 +76,7 @@ pub(crate) fn for_each_probe_key(
     }
 }
 
-impl AlshIndex {
+impl<S: Storage> AlshIndex<S> {
     /// Allocation-free candidate union over `n_probes` buckets per table
     /// (1 = the plain base probe; each extra probe flips the
     /// least-confident code by ±1).

@@ -1,60 +1,96 @@
 //! Index persistence: save/load built indexes to a compact binary file,
 //! so a service restart skips the (re)build.
 //!
-//! Format v4 adds a **scheme discriminator** to the v3 header so one
-//! container format carries every (kind × scheme) combination: flat
-//! [`AlshIndex`] or norm-range banded [`NormRangeIndex`], running
-//! L2-ALSH, Sign-ALSH, or Simple-LSH ([`MipsHashScheme`]). The scheme
-//! sits in the header, right after the kind, so a wrong-scheme load is
-//! rejected from the first 16 bytes — the body (potentially gigabytes)
-//! is never decoded. v3 files (kind, no scheme — always L2-ALSH) and v2
-//! files (flat L2-ALSH, no kind) still load. There is deliberately no
-//! v1 (HashMap bucket dump) read path: no shipping build ever produced
-//! a v1 file.
+//! Two container formats share one header and one metadata codec:
 //!
-//! Tables are serialized in their frozen CSR form (sorted keys + offsets
-//! + contiguous postings), so loading is a straight read into the
-//! serve-side layout. The fast-load reader decodes every array in one
-//! streaming pass through a single reused 64 KiB chunk buffer into
-//! exact-capacity destination `Vec`s: no per-table byte-array
-//! intermediates, no reallocation.
+//! * **v4 (streaming)** — the scheme-discriminated packed container.
+//!   Loading decodes every array in one streaming pass through a reused
+//!   64 KiB chunk buffer into exact-capacity `Vec`s. v2 (flat L2-ALSH,
+//!   no kind) and v3 (kind, no scheme) files still load through the
+//!   same path. There is deliberately no v1 (HashMap bucket dump) read
+//!   path: no shipping build ever produced a v1 file.
+//! * **v5 (mmap-ready)** — every variable-length array (item matrix,
+//!   band id maps, and per table: `keys`, radix `starts`, CSR
+//!   `offsets`, `postings`) is a 64-byte-aligned, length-prefixed
+//!   **section**, written exactly as it sits in memory. [`open_mmap`]
+//!   maps the file and serves straight out of the page cache: the open
+//!   is O(header) — magic/version/kind/scheme, the section table, and
+//!   the small metadata block are validated, and **no section byte is
+//!   read or copied**. Restarts are near-instant at any corpus size and
+//!   concurrent processes share the physical pages (`MAP_SHARED`,
+//!   read-only).
+//!
+//! The kind (flat [`AlshIndex`] / banded [`NormRangeIndex`]) and scheme
+//! ([`MipsHashScheme`]) sit in the first 16 bytes of both formats, so a
+//! wrong-kind or wrong-scheme load is rejected before any body —
+//! potentially gigabytes — is decoded or mapped.
+//!
+//! # v5 on-disk layout
+//!
+//! All integers and floats are **little-endian**; the format is not
+//! portable to big-endian hosts (the mapped arrays are consumed in
+//! place, so there is no byte-swapping stage — document, don't convert).
+//! Layout, with every section offset a multiple of 64
+//! ([`SECTION_ALIGN`]; zero padding between regions, file length =
+//! `align64(end of last section)`):
 //!
 //! ```text
-//! magic "ALSH" | version u32 (4) | kind u32 (0 flat, 1 banded)
-//!             | scheme u32 (0 l2-alsh, 1 sign-alsh, 2 simple-lsh)
-//! flat body (== the v2/v3 body for scheme 0):
-//!   params (m, u, r, K, L) | scale (u, factor, max_norm)
-//!   | dim u64 | n_items u64 | items_flat f32[n*dim]
-//!   | L × family
-//!   | L × table { n_buckets u64, n_postings u64, keys u64[n_buckets],
-//!                 offsets u32[n_buckets+1], postings u32[n_postings] }
-//! banded body:
-//!   params | n_bands u64 | dim u64 | n_items u64 | items_flat f32[n*dim]
-//!   | L × family
-//!   | B × band { scale (u, factor, max_norm), min_norm f32, max_norm f32,
-//!                band_len u64, ids u32[band_len], L × table }
+//! 0   magic "ALSH" | version u32 (5) | kind u32 (0 flat, 1 banded)
+//!                  | scheme u32 (0 l2-alsh, 1 sign-alsh, 2 simple-lsh)
+//! 16  meta_len u64 | n_sections u64
+//! 32  section table: n_sections × { byte_offset u64, byte_len u64 }
+//! ..  meta block (meta_len bytes, the v4 codec minus the arrays):
+//!       flat:   params (m, u, r, K, L) | scale | dim u64 | n_items u64
+//!               | L × family
+//!       banded: params | n_bands u64 | dim u64 | n_items u64
+//!               | L × family
+//!               | B × { scale | min_norm f32 | max_norm f32 | band_len u64 }
+//! ..  sections, 64-byte-aligned, in this fixed order:
+//!       flat:   items f32[n·dim]
+//!               | L × { keys u64[nb] | starts u32[257]
+//!                       | offsets u32[nb+1] | postings u32[np] }
+//!       banded: items f32[n·dim]
+//!               | B × { ids u32[band_len] | L × { keys | starts
+//!                       | offsets | postings } }
 //! family, scheme 0 (L2LSH):  { dp u64, k u64, r f32, a f32[k*dp], b f32[k] }
 //! family, schemes 1–2 (SRP): { dp u64, k u64, a f32[k*dp] }
 //! ```
 //!
+//! Per-table element counts are implied by the section lengths
+//! (`nb = keys.byte_len / 8`), so the mapped open validates shape
+//! consistency — alignment, bounds, ordering, radix/offset endpoints —
+//! from the header region alone, in O(sections), never O(file). Deep
+//! CSR invariants (key sortedness, posting id ranges) are *not*
+//! re-scanned on the mapped path — that is the point of the format; a
+//! corrupted body surfaces as a clean probe miss or a safe index panic,
+//! never UB. The heap loader (`load_any` reads v5 too, staging through
+//! a lazily-faulted mapping and deep-copying) re-validates everything
+//! in full, same as v4, and rejects wrong kind/scheme from the 16-byte
+//! header before touching the body. Saves are atomic (`<path>.tmp` +
+//! rename), so re-saving a served path never truncates a live mapping.
+//!
 //! No external serialization crates exist in this environment (DESIGN.md
 //! §5b), so the codec is hand-rolled with explicit versioning and
-//! corruption checks (CSR and band-partition invariants are revalidated
-//! on load).
+//! corruption checks.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
-use super::any::AnyIndex;
+use super::any::{AnyIndex, MappedIndex};
 use super::banded::{Band, BandedParams, NormRangeIndex};
 use super::core::{AlshIndex, AlshParams};
 use super::frozen::FrozenTable;
 use super::scheme::{MipsHashScheme, SchemeFamilies};
+use super::storage::{map_slice, MapSlice, Mapped, MmapFile, Storage, SECTION_ALIGN};
 use crate::lsh::{L2LshFamily, SrpFamily};
 use crate::transform::UScale;
 
 const MAGIC: &[u8; 4] = b"ALSH";
+/// The streaming container version (`PersistFormat::V4`).
 const VERSION: u32 = 4;
+/// The mmap-ready aligned-section container (`PersistFormat::V5`).
+const VERSION_MMAP: u32 = 5;
 /// Last version without the scheme field (kind only; always L2-ALSH).
 const VERSION_KIND_ONLY: u32 = 3;
 /// Last version without the kind field (flat body starts right after the
@@ -62,6 +98,23 @@ const VERSION_KIND_ONLY: u32 = 3;
 const VERSION_FLAT_ONLY: u32 = 2;
 const KIND_FLAT: u32 = 0;
 const KIND_BANDED: u32 = 1;
+/// Fixed v5 bytes before the section table: 16-byte discriminator header
+/// plus `meta_len` and `n_sections`.
+const V5_PRELUDE: usize = 32;
+
+/// Which on-disk container [`AlshIndex::save_as`] /
+/// [`NormRangeIndex::save_as`] emit: the packed streaming format or the
+/// mmap-ready aligned-section format ([`open_mmap`]). `save` keeps
+/// writing V4 — existing deployments read it everywhere — and V5 is the
+/// opt-in for zero-copy restarts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PersistFormat {
+    /// v4: packed streaming container (smallest files, O(file) load).
+    V4,
+    /// v5: 64-byte-aligned sections, zero-copy `open_mmap` (O(header)
+    /// open, page-cache-shared across processes).
+    V5,
+}
 
 struct Writer<W: Write> {
     w: W,
@@ -132,13 +185,25 @@ impl<W: Write> Writer<W> {
         Ok(())
     }
 
-    fn tables(&mut self, tables: &[FrozenTable]) -> std::io::Result<()> {
+    fn tables<S: Storage>(&mut self, tables: &[FrozenTable<S>]) -> std::io::Result<()> {
         for t in tables {
             self.u64(t.n_buckets() as u64)?;
             self.u64(t.n_postings() as u64)?;
             self.u64s(t.keys())?;
             self.u32s(t.offsets())?;
             self.u32s(t.postings())?;
+        }
+        Ok(())
+    }
+
+    /// `n` zero bytes (v5 alignment padding).
+    fn pad(&mut self, n: usize) -> std::io::Result<()> {
+        const ZEROS: [u8; SECTION_ALIGN] = [0u8; SECTION_ALIGN];
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(SECTION_ALIGN);
+            self.w.write_all(&ZEROS[..take])?;
+            left -= take;
         }
         Ok(())
     }
@@ -212,7 +277,7 @@ impl<R: Read> Reader<R> {
 
     fn params(&mut self) -> anyhow::Result<AlshParams> {
         // The scheme is not part of the params block (it lives in the
-        // v4 header); callers overwrite the default after decoding.
+        // v4/v5 header); callers overwrite the default after decoding.
         Ok(AlshParams {
             m: self.len(64, "m")?,
             u: self.f32()?,
@@ -277,14 +342,15 @@ impl<R: Read> Reader<R> {
     }
 }
 
-fn write_flat_body<W: Write>(w: &mut Writer<W>, idx: &AlshIndex) -> std::io::Result<()> {
+fn write_flat_body<W: Write, S: Storage>(
+    w: &mut Writer<W>,
+    idx: &AlshIndex<S>,
+) -> std::io::Result<()> {
     w.params(idx.params())?;
     w.scale(idx.scale())?;
     w.u64(idx.dim() as u64)?;
     w.u64(idx.n_items() as u64)?;
-    for id in 0..idx.n_items() as u32 {
-        w.f32s(idx.item(id))?;
-    }
+    w.f32s(idx.items_flat())?;
     w.families(idx.scheme_families())?;
     w.tables(idx.tables())
 }
@@ -294,7 +360,7 @@ fn read_flat_body<R: Read>(
     scheme: MipsHashScheme,
 ) -> anyhow::Result<AlshIndex> {
     // The scheme is a header field, not part of the params block (the
-    // params block is byte-identical across v2–v4).
+    // params block is byte-identical across v2–v5).
     let params = AlshParams { scheme, ..r.params()? };
     let scale = r.scale()?;
     let dim = r.len(1 << 24, "dim")?;
@@ -306,14 +372,15 @@ fn read_flat_body<R: Read>(
     Ok(AlshIndex::from_parts(params, scale, families, tables, items_flat, dim, n_items))
 }
 
-fn write_banded_body<W: Write>(w: &mut Writer<W>, idx: &NormRangeIndex) -> std::io::Result<()> {
+fn write_banded_body<W: Write, S: Storage>(
+    w: &mut Writer<W>,
+    idx: &NormRangeIndex<S>,
+) -> std::io::Result<()> {
     w.params(idx.params())?;
     w.u64(idx.n_bands() as u64)?;
     w.u64(idx.dim() as u64)?;
     w.u64(idx.n_items() as u64)?;
-    for id in 0..idx.n_items() as u32 {
-        w.f32s(idx.item(id))?;
-    }
+    w.f32s(idx.items_flat())?;
     w.families(idx.scheme_families())?;
     for band in idx.bands() {
         w.scale(band.scale())?;
@@ -363,50 +430,16 @@ fn read_banded_body<R: Read>(
     )
 }
 
-/// Open `path`, check magic/version/kind/scheme, and decode whichever
-/// index the file holds (rejecting trailing garbage). When `want_kind` /
-/// `want_scheme` is set, a mismatch is rejected right after the 16-byte
-/// header — the wrong body (potentially gigabytes of items and tables)
-/// is never decoded.
-fn load_file(
-    path: &Path,
+/// The one kind/scheme gate both the streaming loader and the mapped
+/// open go through: a mismatch against the caller's pinned expectation
+/// is rejected from the 16-byte header — the wrong body (potentially
+/// gigabytes) is never decoded or mapped.
+fn check_kind_scheme(
+    kind: u32,
+    scheme: MipsHashScheme,
     want_kind: Option<u32>,
     want_scheme: Option<MipsHashScheme>,
-) -> anyhow::Result<AnyIndex> {
-    let file = std::fs::File::open(path)?;
-    let mut r = Reader::new(BufReader::new(file));
-    let mut magic = [0u8; 4];
-    r.r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
-    let version = r.u32()?;
-    let (kind, scheme) = match version {
-        // v2 files predate the kind and scheme fields: always flat L2.
-        VERSION_FLAT_ONLY => (KIND_FLAT, MipsHashScheme::L2Alsh),
-        // v3 files carry the kind but predate schemes: always L2.
-        VERSION_KIND_ONLY | VERSION => {
-            let k = r.u32()?;
-            anyhow::ensure!(
-                k == KIND_FLAT || k == KIND_BANDED,
-                "unknown index kind {k} (this build knows 0=flat, 1=banded)"
-            );
-            let scheme = if version == VERSION {
-                let sid = r.u32()?;
-                MipsHashScheme::from_id(sid).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown hash scheme {sid} (this build knows 0=l2-alsh, \
-                         1=sign-alsh, 2=simple-lsh)"
-                    )
-                })?
-            } else {
-                MipsHashScheme::L2Alsh
-            };
-            (k, scheme)
-        }
-        other => anyhow::bail!(
-            "unsupported index version {other} (this build reads v{VERSION_FLAT_ONLY}, \
-             v{VERSION_KIND_ONLY} and v{VERSION})"
-        ),
-    };
+) -> anyhow::Result<()> {
     if let Some(want) = want_kind {
         if want != kind {
             if kind == KIND_BANDED {
@@ -428,6 +461,72 @@ fn load_file(
              rebuild the index or load with the matching scheme (load_any accepts any)"
         );
     }
+    Ok(())
+}
+
+fn parse_kind(k: u32) -> anyhow::Result<u32> {
+    anyhow::ensure!(
+        k == KIND_FLAT || k == KIND_BANDED,
+        "unknown index kind {k} (this build knows 0=flat, 1=banded)"
+    );
+    Ok(k)
+}
+
+fn parse_scheme(sid: u32) -> anyhow::Result<MipsHashScheme> {
+    MipsHashScheme::from_id(sid).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown hash scheme {sid} (this build knows 0=l2-alsh, \
+             1=sign-alsh, 2=simple-lsh)"
+        )
+    })
+}
+
+/// Open `path`, check magic/version/kind/scheme, and decode whichever
+/// index the file holds into heap storage (rejecting trailing garbage).
+/// v2–v4 stream through the chunked reader; v5 goes through one aligned
+/// whole-file read plus the shared section parser, then a deep-validated
+/// copy into owned arrays. When `want_kind` / `want_scheme` is set, a
+/// mismatch is rejected right after the 16-byte header.
+fn load_file(
+    path: &Path,
+    want_kind: Option<u32>,
+    want_scheme: Option<MipsHashScheme>,
+) -> anyhow::Result<AnyIndex> {
+    let file = std::fs::File::open(path)?;
+    let mut r = Reader::new(BufReader::new(file));
+    let mut magic = [0u8; 4];
+    r.r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not an ALSH index file");
+    let version = r.u32()?;
+    let (kind, scheme) = match version {
+        // v2 files predate the kind and scheme fields: always flat L2.
+        VERSION_FLAT_ONLY => (KIND_FLAT, MipsHashScheme::L2Alsh),
+        // v3 files carry the kind but predate schemes: always L2.
+        VERSION_KIND_ONLY | VERSION => {
+            let k = parse_kind(r.u32()?)?;
+            let scheme =
+                if version == VERSION { parse_scheme(r.u32()?)? } else { MipsHashScheme::L2Alsh };
+            (k, scheme)
+        }
+        // v5: aligned-section container — re-enter through the one v5
+        // header parser (`parse_v5` rejects wrong kind/scheme from the
+        // 16-byte header, before any section byte, preserving the
+        // v2–v4 early-rejection contract), then deep-copy into owned
+        // arrays with full validation. The staging buffer is a
+        // lazily-faulted mapping, not a heap read, so its pages are
+        // page-cache-backed and evictable: peak unique memory is the
+        // owned copy alone.
+        VERSION_MMAP => {
+            drop(r);
+            let map = MmapFile::map(path)?;
+            return mapped_to_owned(parse_v5(&map, want_kind, want_scheme)?);
+        }
+        other => anyhow::bail!(
+            "unsupported index version {other} (this build reads v{VERSION_FLAT_ONLY}, \
+             v{VERSION_KIND_ONLY}, v{VERSION} and v{VERSION_MMAP})"
+        ),
+    };
+    check_kind_scheme(kind, scheme, want_kind, want_scheme)?;
     let index = if kind == KIND_FLAT {
         AnyIndex::Flat(read_flat_body(&mut r, scheme)?)
     } else {
@@ -442,8 +541,489 @@ fn load_file(
     Ok(index)
 }
 
-/// Load whichever index kind and scheme `path` holds (flat v2/v3/v4 or
-/// banded v3/v4, any scheme).
+/// Deep-copy a parsed v5 index into heap storage, re-running the full
+/// CSR and band-partition validation the mapped open skips — the
+/// streaming-load contract (`load_any` on a v5 file) is identical to the
+/// v4 one: every invariant checked, every array owned.
+fn mapped_to_owned(any: MappedIndex) -> anyhow::Result<AnyIndex> {
+    fn copy_tables(
+        tables: &[FrozenTable<Mapped>],
+        max_id: u32,
+    ) -> anyhow::Result<Vec<FrozenTable>> {
+        tables
+            .iter()
+            .map(|t| {
+                FrozenTable::from_parts(
+                    t.keys().to_vec(),
+                    t.offsets().to_vec(),
+                    t.postings().to_vec(),
+                    max_id,
+                )
+            })
+            .collect()
+    }
+    match any {
+        AnyIndex::Flat(i) => {
+            let tables = copy_tables(i.tables(), i.n_items() as u32)?;
+            Ok(AnyIndex::Flat(AlshIndex::from_parts(
+                *i.params(),
+                *i.scale(),
+                i.scheme_families().clone(),
+                tables,
+                i.items_flat().to_vec(),
+                i.dim(),
+                i.n_items(),
+            )))
+        }
+        AnyIndex::Banded(i) => {
+            let mut bands: Vec<Band> = Vec::with_capacity(i.n_bands());
+            for band in i.bands() {
+                let tables = copy_tables(band.tables(), band.n_items() as u32)?;
+                let (min_norm, max_norm) = band.norm_range();
+                bands.push(Band {
+                    scale: *band.scale(),
+                    min_norm,
+                    max_norm,
+                    ids: band.ids().to_vec(),
+                    tables,
+                });
+            }
+            Ok(AnyIndex::Banded(NormRangeIndex::from_parts(
+                *i.params(),
+                *i.banded_params(),
+                i.scheme_families().clone(),
+                bands,
+                i.items_flat().to_vec(),
+                i.dim(),
+                i.n_items(),
+            )?))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v5 writer
+// ---------------------------------------------------------------------------
+
+fn align64(x: usize) -> usize {
+    (x + (SECTION_ALIGN - 1)) & !(SECTION_ALIGN - 1)
+}
+
+/// Write a file atomically and durably: serialize into a
+/// per-invocation-unique `<path>.tmp.<pid>.<seq>`, fsync it, then
+/// rename over `path` (and best-effort fsync the directory). Both
+/// container writers go through this so (a) a crash or power loss
+/// mid-save never leaves a torn index at the final path — the data
+/// blocks are on disk before the name is published, (b) concurrent
+/// savers of the same destination cannot interleave into one temp file
+/// (last rename wins with a complete file either way), and (c)
+/// re-saving a path that a live process has `open_mmap`'ed swaps the
+/// directory entry instead of truncating the mapped inode out from
+/// under the reader (which would SIGBUS its next probe).
+fn atomic_write(
+    path: &Path,
+    write: impl FnOnce(&Path) -> crate::Result<()>,
+) -> crate::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(format!(
+        ".tmp.{}.{}",
+        std::process::id(),
+        SAVE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let publish = || -> crate::Result<()> {
+        write(&tmp)?;
+        // Data durable before the name exists.
+        std::fs::File::open(&tmp)?.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        // Make the rename itself durable; best-effort — not every
+        // platform permits fsync on a directory handle.
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    };
+    match publish() {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+/// One v5 section awaiting serialization (borrowed from the index).
+enum Section<'a> {
+    U64(&'a [u64]),
+    U32(&'a [u32]),
+    F32(&'a [f32]),
+}
+
+impl Section<'_> {
+    fn byte_len(&self) -> usize {
+        match self {
+            Section::U64(s) => s.len() * 8,
+            Section::U32(s) => s.len() * 4,
+            Section::F32(s) => s.len() * 4,
+        }
+    }
+
+    /// The section's bytes as they must appear on disk. On little-endian
+    /// hosts the in-memory representation *is* the file representation
+    /// (the same reinterpretation the mapped reader performs), so a
+    /// multi-GB section is one `write_all` instead of hundreds of
+    /// millions of per-element calls. Big-endian hosts fall back to the
+    /// per-element `to_le_bytes` writers in `write_v5_file` — the file
+    /// bytes are identical either way.
+    #[cfg(target_endian = "little")]
+    fn as_bytes(&self) -> &[u8] {
+        // Safety: u64/u32/f32 slices reinterpret as bytes losslessly;
+        // the length is the exact byte length of the slice.
+        unsafe {
+            match self {
+                Section::U64(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 8)
+                }
+                Section::U32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+                Section::F32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+            }
+        }
+    }
+}
+
+/// The fixed per-table section order (`keys`, `starts`, `offsets`,
+/// `postings`) — the writer-side twin of `SectionCursor`'s reads.
+fn push_table_sections<'a, S: Storage>(t: &'a FrozenTable<S>, out: &mut Vec<Section<'a>>) {
+    out.push(Section::U64(t.keys()));
+    out.push(Section::U32(t.starts()));
+    out.push(Section::U32(t.offsets()));
+    out.push(Section::U32(t.postings()));
+}
+
+/// Serialize the small metadata block (everything except the arrays) for
+/// a flat index.
+fn flat_meta<S: Storage>(idx: &AlshIndex<S>) -> std::io::Result<Vec<u8>> {
+    let mut w = Writer { w: Vec::new() };
+    w.params(idx.params())?;
+    w.scale(idx.scale())?;
+    w.u64(idx.dim() as u64)?;
+    w.u64(idx.n_items() as u64)?;
+    w.families(idx.scheme_families())?;
+    Ok(w.w)
+}
+
+/// Serialize the banded metadata block: shared params/families plus the
+/// per-band scalars and lengths (the id/table arrays are sections).
+fn banded_meta<S: Storage>(idx: &NormRangeIndex<S>) -> std::io::Result<Vec<u8>> {
+    let mut w = Writer { w: Vec::new() };
+    w.params(idx.params())?;
+    w.u64(idx.n_bands() as u64)?;
+    w.u64(idx.dim() as u64)?;
+    w.u64(idx.n_items() as u64)?;
+    w.families(idx.scheme_families())?;
+    for band in idx.bands() {
+        w.scale(band.scale())?;
+        let (min_norm, max_norm) = band.norm_range();
+        w.f32(min_norm)?;
+        w.f32(max_norm)?;
+        w.u64(band.n_items() as u64)?;
+    }
+    Ok(w.w)
+}
+
+/// Write a complete v5 file: prelude, section table, meta block, then
+/// every section zero-padded to 64-byte alignment — the arrays land on
+/// disk exactly as they sit in memory, which is what makes the mapped
+/// open zero-copy.
+fn write_v5_file(
+    path: &Path,
+    kind: u32,
+    scheme: MipsHashScheme,
+    meta: &[u8],
+    sections: &[Section<'_>],
+) -> crate::Result<()> {
+    let n = sections.len();
+    let meta_end = V5_PRELUDE + 16 * n + meta.len();
+    let mut entries: Vec<(u64, u64)> = Vec::with_capacity(n);
+    let mut cur = align64(meta_end);
+    for s in sections {
+        entries.push((cur as u64, s.byte_len() as u64));
+        cur = align64(cur + s.byte_len());
+    }
+    let total = cur;
+    let file = std::fs::File::create(path)?;
+    let mut w = Writer { w: BufWriter::new(file) };
+    w.w.write_all(MAGIC)?;
+    w.u32(VERSION_MMAP)?;
+    w.u32(kind)?;
+    w.u32(scheme.id())?;
+    w.u64(meta.len() as u64)?;
+    w.u64(n as u64)?;
+    for &(off, len) in &entries {
+        w.u64(off)?;
+        w.u64(len)?;
+    }
+    w.w.write_all(meta)?;
+    let mut written = meta_end;
+    for (s, &(off, _)) in sections.iter().zip(&entries) {
+        w.pad(off as usize - written)?;
+        #[cfg(target_endian = "little")]
+        w.w.write_all(s.as_bytes())?;
+        #[cfg(not(target_endian = "little"))]
+        match s {
+            Section::U64(v) => w.u64s(v)?,
+            Section::U32(v) => w.u32s(v)?,
+            Section::F32(v) => w.f32s(v)?,
+        }
+        written = off as usize + s.byte_len();
+    }
+    w.pad(total - written)?;
+    w.w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// v5 reader (zero-copy open + shared section parser)
+// ---------------------------------------------------------------------------
+
+fn u32_at(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+fn u64_at(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Walks the v5 section table in order, handing out typed zero-copy
+/// views. Validates, per section: table bounds, 64-byte alignment,
+/// element-size divisibility, in-file bounds, and non-overlap with
+/// everything before it — all from the header region, no section byte
+/// touched.
+struct SectionCursor<'a> {
+    map: &'a Arc<MmapFile>,
+    next: usize,
+    n: usize,
+    /// End of the last consumed region (starts at the end of the meta
+    /// block, so no section can alias the header).
+    prev_end: usize,
+}
+
+impl<'a> SectionCursor<'a> {
+    fn new(map: &'a Arc<MmapFile>, n: usize, meta_end: usize) -> Self {
+        Self { map, next: 0, n, prev_end: meta_end }
+    }
+
+    fn take<T>(&mut self, what: &str) -> anyhow::Result<MapSlice<T>> {
+        anyhow::ensure!(
+            self.next < self.n,
+            "corrupt index file: section table exhausted reading {what}"
+        );
+        let bytes = self.map.bytes();
+        let entry = V5_PRELUDE + 16 * self.next;
+        let off = usize::try_from(u64_at(bytes, entry))
+            .map_err(|_| anyhow::anyhow!("corrupt index file: {what} section offset overflows"))?;
+        let len = usize::try_from(u64_at(bytes, entry + 8))
+            .map_err(|_| anyhow::anyhow!("corrupt index file: {what} section length overflows"))?;
+        anyhow::ensure!(
+            off % SECTION_ALIGN == 0,
+            "corrupt index file: {what} section offset {off} not {SECTION_ALIGN}-byte aligned"
+        );
+        anyhow::ensure!(
+            off >= self.prev_end,
+            "corrupt index file: {what} section at {off} overlaps earlier data (expected >= {})",
+            self.prev_end
+        );
+        let s = map_slice::<T>(self.map, off, len, what)?;
+        self.prev_end = off + len;
+        self.next += 1;
+        Ok(s)
+    }
+
+    fn take_exact<T>(
+        &mut self,
+        n_elems: usize,
+        what: &str,
+    ) -> anyhow::Result<MapSlice<T>> {
+        let s = self.take::<T>(what)?;
+        anyhow::ensure!(
+            s.len() == n_elems,
+            "corrupt index file: {what} section holds {} elements, expected {n_elems}",
+            s.len()
+        );
+        Ok(s)
+    }
+
+    /// All sections consumed and the file ends exactly at the padded end
+    /// of the last one (the v5 trailing-garbage check).
+    fn finish(self) -> anyhow::Result<()> {
+        debug_assert_eq!(self.next, self.n, "section count checked before parsing");
+        let expected = align64(self.prev_end);
+        anyhow::ensure!(
+            self.map.len() == expected,
+            "corrupt index file: file length {} != expected {expected} (trailing bytes?)",
+            self.map.len()
+        );
+        Ok(())
+    }
+}
+
+/// Parse a v5 image into a mapped index. Shared by [`open_mmap`] and the
+/// heap loader (which stages through the same lazily-faulted mapping,
+/// then deep-copies) — one header-dispatch path for the whole format.
+fn parse_v5(
+    map: &Arc<MmapFile>,
+    want_kind: Option<u32>,
+    want_scheme: Option<MipsHashScheme>,
+) -> anyhow::Result<MappedIndex> {
+    let bytes = map.bytes();
+    anyhow::ensure!(bytes.len() >= V5_PRELUDE, "not an ALSH index file: too short");
+    anyhow::ensure!(&bytes[..4] == MAGIC, "not an ALSH index file");
+    let version = u32_at(bytes, 4);
+    if version != VERSION_MMAP {
+        if (VERSION_FLAT_ONLY..=VERSION).contains(&version) {
+            anyhow::bail!(
+                "index file is the v{version} streaming container; open_mmap reads only \
+                 the v5 aligned container — load it with index::persist::load_any and \
+                 re-save with PersistFormat::V5"
+            );
+        }
+        anyhow::bail!("unsupported index version {version} (open_mmap reads v{VERSION_MMAP})");
+    }
+    let kind = parse_kind(u32_at(bytes, 8))?;
+    let scheme = parse_scheme(u32_at(bytes, 12))?;
+    check_kind_scheme(kind, scheme, want_kind, want_scheme)?;
+    let meta_len = usize::try_from(u64_at(bytes, 16))
+        .map_err(|_| anyhow::anyhow!("corrupt index file: meta length overflows"))?;
+    let n_sections = usize::try_from(u64_at(bytes, 24))
+        .map_err(|_| anyhow::anyhow!("corrupt index file: section count overflows"))?;
+    let table_end = V5_PRELUDE
+        .checked_add(n_sections.checked_mul(16).ok_or_else(|| {
+            anyhow::anyhow!("corrupt index file: section table size overflows")
+        })?)
+        .ok_or_else(|| anyhow::anyhow!("corrupt index file: section table size overflows"))?;
+    let meta_end = table_end
+        .checked_add(meta_len)
+        .ok_or_else(|| anyhow::anyhow!("corrupt index file: header size overflows"))?;
+    anyhow::ensure!(
+        meta_end <= bytes.len(),
+        "corrupt index file: header region ({meta_end} bytes) exceeds file length {}",
+        bytes.len()
+    );
+    let mut r = Reader::new(&bytes[table_end..meta_end]);
+
+    if kind == KIND_FLAT {
+        let params = AlshParams { scheme, ..r.params()? };
+        let scale = r.scale()?;
+        let dim = r.len(1 << 24, "dim")?;
+        let n_items = r.len(u32::MAX as u64, "n_items")?;
+        let families = r.families(&params, dim)?;
+        anyhow::ensure!(r.r.is_empty(), "corrupt index file: trailing metadata bytes");
+        let expected = 1 + 4 * params.n_tables;
+        anyhow::ensure!(
+            n_sections == expected,
+            "corrupt index file: {n_sections} sections, expected {expected} for a flat \
+             index with {} tables",
+            params.n_tables
+        );
+        let mut sec = SectionCursor::new(map, n_sections, meta_end);
+        let items = sec.take_exact::<f32>(n_items * dim, "items")?;
+        let mut tables: Vec<FrozenTable<Mapped>> = Vec::with_capacity(params.n_tables);
+        for _ in 0..params.n_tables {
+            let keys = sec.take::<u64>("keys")?;
+            let starts = sec.take_exact::<u32>(257, "starts")?;
+            let offsets = sec.take_exact::<u32>(keys.len() + 1, "offsets")?;
+            let postings = sec.take::<u32>("postings")?;
+            tables.push(FrozenTable::<Mapped>::from_storage_parts(
+                keys, starts, offsets, postings,
+            )?);
+        }
+        sec.finish()?;
+        return Ok(AnyIndex::Flat(AlshIndex::from_parts(
+            params, scale, families, tables, items, dim, n_items,
+        )));
+    }
+
+    let params = AlshParams { scheme, ..r.params()? };
+    let n_bands = r.len(u32::MAX as u64, "n_bands")?;
+    anyhow::ensure!(n_bands >= 1, "corrupt index file: zero bands");
+    let dim = r.len(1 << 24, "dim")?;
+    let n_items = r.len(u32::MAX as u64, "n_items")?;
+    anyhow::ensure!(
+        n_bands <= n_items,
+        "corrupt index file: {n_bands} bands for {n_items} items"
+    );
+    let families = r.families(&params, dim)?;
+    struct BandMeta {
+        scale: UScale,
+        min_norm: f32,
+        max_norm: f32,
+        band_len: usize,
+    }
+    let mut band_meta = Vec::with_capacity(n_bands);
+    for _ in 0..n_bands {
+        let scale = r.scale()?;
+        let min_norm = r.f32()?;
+        let max_norm = r.f32()?;
+        let band_len = r.len(n_items as u64, "band_len")?;
+        band_meta.push(BandMeta { scale, min_norm, max_norm, band_len });
+    }
+    anyhow::ensure!(r.r.is_empty(), "corrupt index file: trailing metadata bytes");
+    let expected = 1 + n_bands * (1 + 4 * params.n_tables);
+    anyhow::ensure!(
+        n_sections == expected,
+        "corrupt index file: {n_sections} sections, expected {expected} for a banded \
+         index with {n_bands} bands of {} tables",
+        params.n_tables
+    );
+    let mut sec = SectionCursor::new(map, n_sections, meta_end);
+    let items = sec.take_exact::<f32>(n_items * dim, "items")?;
+    let mut bands: Vec<Band<Mapped>> = Vec::with_capacity(n_bands);
+    for bm in band_meta {
+        let ids = sec.take_exact::<u32>(bm.band_len, "band ids")?;
+        let mut tables: Vec<FrozenTable<Mapped>> = Vec::with_capacity(params.n_tables);
+        for _ in 0..params.n_tables {
+            let keys = sec.take::<u64>("keys")?;
+            let starts = sec.take_exact::<u32>(257, "starts")?;
+            let offsets = sec.take_exact::<u32>(keys.len() + 1, "offsets")?;
+            let postings = sec.take::<u32>("postings")?;
+            tables.push(FrozenTable::<Mapped>::from_storage_parts(
+                keys, starts, offsets, postings,
+            )?);
+        }
+        bands.push(Band {
+            scale: bm.scale,
+            min_norm: bm.min_norm,
+            max_norm: bm.max_norm,
+            ids,
+            tables,
+        });
+    }
+    sec.finish()?;
+    Ok(AnyIndex::Banded(NormRangeIndex::from_parts_shallow(
+        params,
+        BandedParams { n_bands },
+        families,
+        bands,
+        items,
+        dim,
+        n_items,
+    )?))
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// Load whichever index kind and scheme `path` holds into heap storage
+/// (flat v2–v5 or banded v3–v5, any scheme).
 pub fn load_any(path: impl AsRef<Path>) -> crate::Result<AnyIndex> {
     load_file(path.as_ref(), None, None)
 }
@@ -459,32 +1039,90 @@ pub fn load_any_scheme(
     load_file(path.as_ref(), None, Some(scheme))
 }
 
-impl AlshIndex {
-    /// Serialize the index to `path` (v4, kind flat, scheme from
-    /// `params.scheme`).
+/// Zero-copy open of a v5 index file (either kind, any scheme): map the
+/// file, validate the header and section table in O(header), and serve
+/// straight out of the page cache. No keys/offsets/postings/item byte is
+/// read or copied at open time — the open allocates O(tables) metadata
+/// regardless of corpus size (asserted in `tests/mmap_equivalence.rs`),
+/// and the returned [`MappedIndex`] plugs into `MipsEngine::from_any`,
+/// the batcher, and the router exactly like a heap index.
+pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<MappedIndex> {
+    let map = MmapFile::map(path.as_ref())?;
+    parse_v5(&map, None, None)
+}
+
+/// [`open_mmap`] that additionally pins the hash scheme (rejected from
+/// the 16-byte header on mismatch).
+pub fn open_mmap_scheme(
+    path: impl AsRef<Path>,
+    scheme: MipsHashScheme,
+) -> crate::Result<MappedIndex> {
+    let map = MmapFile::map(path.as_ref())?;
+    parse_v5(&map, None, Some(scheme))
+}
+
+/// The one kind-pinned unwrap both typed load surfaces share (the
+/// kind was already verified from the header by `load_file`/`parse_v5`).
+fn unwrap_flat<S: Storage>(any: AnyIndex<S>) -> AlshIndex<S> {
+    match any {
+        AnyIndex::Flat(index) => index,
+        AnyIndex::Banded(_) => unreachable!("kind verified from header"),
+    }
+}
+
+fn unwrap_banded<S: Storage>(any: AnyIndex<S>) -> NormRangeIndex<S> {
+    match any {
+        AnyIndex::Flat(_) => unreachable!("kind verified from header"),
+        AnyIndex::Banded(index) => index,
+    }
+}
+
+impl<S: Storage> AlshIndex<S> {
+    /// Serialize the index to `path` (v4 streaming container, kind flat,
+    /// scheme from `params.scheme`). Use [`AlshIndex::save_as`] with
+    /// [`PersistFormat::V5`] for the mmap-ready container.
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
-        let file = std::fs::File::create(path.as_ref())?;
-        let mut w = Writer { w: BufWriter::new(file) };
-        w.w.write_all(MAGIC)?;
-        w.u32(VERSION)?;
-        w.u32(KIND_FLAT)?;
-        w.u32(self.params().scheme.id())?;
-        write_flat_body(&mut w, self)?;
-        w.w.flush()?;
-        Ok(())
+        self.save_as(path, PersistFormat::V4)
     }
 
+    /// Serialize in the chosen container format (see [`PersistFormat`]).
+    /// Atomic: the bytes land in `<path>.tmp` and are renamed over
+    /// `path`, so a concurrent `open_mmap` reader of the old file keeps
+    /// its (old) mapping instead of being truncated into a SIGBUS.
+    pub fn save_as(&self, path: impl AsRef<Path>, format: PersistFormat) -> crate::Result<()> {
+        atomic_write(path.as_ref(), |tmp| match format {
+            PersistFormat::V4 => {
+                let file = std::fs::File::create(tmp)?;
+                let mut w = Writer { w: BufWriter::new(file) };
+                w.w.write_all(MAGIC)?;
+                w.u32(VERSION)?;
+                w.u32(KIND_FLAT)?;
+                w.u32(self.params().scheme.id())?;
+                write_flat_body(&mut w, self)?;
+                w.w.flush()?;
+                Ok(())
+            }
+            PersistFormat::V5 => {
+                let meta = flat_meta(self)?;
+                let mut sections = vec![Section::F32(self.items_flat())];
+                for t in self.tables() {
+                    push_table_sections(t, &mut sections);
+                }
+                write_v5_file(tmp, KIND_FLAT, self.params().scheme, &meta, &sections)
+            }
+        })
+    }
+}
+
+impl AlshIndex {
     /// Load a **flat** index previously written by [`AlshIndex::save`]
-    /// (v4 kind 0, or a legacy v2/v3 file), whatever its scheme. A
-    /// banded file is rejected from its header (before any body is
-    /// decoded) with a pointer to [`NormRangeIndex::load`]; use
+    /// (any readable version), whatever its scheme. A banded file is
+    /// rejected from its header (before any body is decoded) with a
+    /// pointer to [`NormRangeIndex::load`]; use
     /// [`load_any`](super::persist::load_any) when the kind is unknown,
     /// and [`AlshIndex::load_scheme`] to also pin the scheme.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
-        match load_file(path.as_ref(), Some(KIND_FLAT), None)? {
-            AnyIndex::Flat(index) => Ok(index),
-            AnyIndex::Banded(_) => unreachable!("load_file verified the kind"),
-        }
+        Ok(unwrap_flat(load_file(path.as_ref(), Some(KIND_FLAT), None)?))
     }
 
     /// [`AlshIndex::load`] that additionally pins the hash scheme: a
@@ -494,39 +1132,76 @@ impl AlshIndex {
         path: impl AsRef<Path>,
         scheme: MipsHashScheme,
     ) -> crate::Result<Self> {
-        match load_file(path.as_ref(), Some(KIND_FLAT), Some(scheme))? {
-            AnyIndex::Flat(index) => Ok(index),
-            AnyIndex::Banded(_) => unreachable!("load_file verified the kind"),
-        }
+        Ok(unwrap_flat(load_file(path.as_ref(), Some(KIND_FLAT), Some(scheme))?))
+    }
+}
+
+impl AlshIndex<Mapped> {
+    /// Zero-copy open of a **flat** v5 file (see [`open_mmap`]); a
+    /// banded file is rejected from the header.
+    pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let map = MmapFile::map(path.as_ref())?;
+        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), None)?))
+    }
+
+    /// [`AlshIndex::open_mmap`] that additionally pins the hash scheme.
+    pub fn open_mmap_scheme(
+        path: impl AsRef<Path>,
+        scheme: MipsHashScheme,
+    ) -> crate::Result<Self> {
+        let map = MmapFile::map(path.as_ref())?;
+        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), Some(scheme))?))
+    }
+}
+
+impl<S: Storage> NormRangeIndex<S> {
+    /// Serialize the banded index to `path` (v4 streaming container,
+    /// kind banded, scheme from `params.scheme`). Use
+    /// [`NormRangeIndex::save_as`] with [`PersistFormat::V5`] for the
+    /// mmap-ready container.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        self.save_as(path, PersistFormat::V4)
+    }
+
+    /// Serialize in the chosen container format (see [`PersistFormat`]).
+    /// Atomic (`<path>.tmp` + rename) — see [`AlshIndex::save_as`].
+    pub fn save_as(&self, path: impl AsRef<Path>, format: PersistFormat) -> crate::Result<()> {
+        atomic_write(path.as_ref(), |tmp| match format {
+            PersistFormat::V4 => {
+                let file = std::fs::File::create(tmp)?;
+                let mut w = Writer { w: BufWriter::new(file) };
+                w.w.write_all(MAGIC)?;
+                w.u32(VERSION)?;
+                w.u32(KIND_BANDED)?;
+                w.u32(self.params().scheme.id())?;
+                write_banded_body(&mut w, self)?;
+                w.w.flush()?;
+                Ok(())
+            }
+            PersistFormat::V5 => {
+                let meta = banded_meta(self)?;
+                let mut sections = vec![Section::F32(self.items_flat())];
+                for band in self.bands() {
+                    sections.push(Section::U32(band.ids()));
+                    for t in band.tables() {
+                        push_table_sections(t, &mut sections);
+                    }
+                }
+                write_v5_file(tmp, KIND_BANDED, self.params().scheme, &meta, &sections)
+            }
+        })
     }
 }
 
 impl NormRangeIndex {
-    /// Serialize the banded index to `path` (v4, kind banded, scheme
-    /// from `params.scheme`).
-    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
-        let file = std::fs::File::create(path.as_ref())?;
-        let mut w = Writer { w: BufWriter::new(file) };
-        w.w.write_all(MAGIC)?;
-        w.u32(VERSION)?;
-        w.u32(KIND_BANDED)?;
-        w.u32(self.params().scheme.id())?;
-        write_banded_body(&mut w, self)?;
-        w.w.flush()?;
-        Ok(())
-    }
-
     /// Load a **banded** index previously written by
-    /// [`NormRangeIndex::save`], whatever its scheme. A flat file is
-    /// rejected from its header (before any body is decoded) with a
-    /// pointer to [`AlshIndex::load`]; use
+    /// [`NormRangeIndex::save`] (any readable version), whatever its
+    /// scheme. A flat file is rejected from its header (before any body
+    /// is decoded) with a pointer to [`AlshIndex::load`]; use
     /// [`load_any`](super::persist::load_any) when the kind is unknown,
     /// and [`NormRangeIndex::load_scheme`] to also pin the scheme.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
-        match load_file(path.as_ref(), Some(KIND_BANDED), None)? {
-            AnyIndex::Banded(index) => Ok(index),
-            AnyIndex::Flat(_) => unreachable!("load_file verified the kind"),
-        }
+        Ok(unwrap_banded(load_file(path.as_ref(), Some(KIND_BANDED), None)?))
     }
 
     /// [`NormRangeIndex::load`] that additionally pins the hash scheme
@@ -535,10 +1210,25 @@ impl NormRangeIndex {
         path: impl AsRef<Path>,
         scheme: MipsHashScheme,
     ) -> crate::Result<Self> {
-        match load_file(path.as_ref(), Some(KIND_BANDED), Some(scheme))? {
-            AnyIndex::Banded(index) => Ok(index),
-            AnyIndex::Flat(_) => unreachable!("load_file verified the kind"),
-        }
+        Ok(unwrap_banded(load_file(path.as_ref(), Some(KIND_BANDED), Some(scheme))?))
+    }
+}
+
+impl NormRangeIndex<Mapped> {
+    /// Zero-copy open of a **banded** v5 file (see [`open_mmap`]); a
+    /// flat file is rejected from the header.
+    pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let map = MmapFile::map(path.as_ref())?;
+        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), None)?))
+    }
+
+    /// [`NormRangeIndex::open_mmap`] that additionally pins the scheme.
+    pub fn open_mmap_scheme(
+        path: impl AsRef<Path>,
+        scheme: MipsHashScheme,
+    ) -> crate::Result<Self> {
+        let map = MmapFile::map(path.as_ref())?;
+        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), Some(scheme))?))
     }
 }
 
@@ -1030,5 +1720,104 @@ mod tests {
         // reader hits EOF before the partition validates).
         std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
         assert!(NormRangeIndex::load(&path).is_err());
+    }
+
+    // ---- v5 (mmap-ready aligned container) ---------------------------------
+
+    /// `save_as(V5)` + streaming `load_any` roundtrips both kinds with
+    /// full deep validation — the v5 container is a first-class citizen
+    /// of the heap load path too, via one shared header dispatch.
+    #[test]
+    fn v5_streaming_load_roundtrips_both_kinds() {
+        let mut rng = Rng::seed_from_u64(100);
+        let its: Vec<Vec<f32>> = (0..400)
+            .map(|_| {
+                let s = 0.1 + 1.9 * rng.f32();
+                (0..10).map(|_| rng.normal_f32() * s).collect()
+            })
+            .collect();
+        let flat = AlshIndex::build(&its, AlshParams::default(), 101);
+        let flat_path = tmp("v5_flat.alsh");
+        flat.save_as(&flat_path, PersistFormat::V5).unwrap();
+        let loaded = AlshIndex::load(&flat_path).unwrap();
+        assert_eq!(loaded.table_stats(), flat.table_stats());
+
+        let banded = NormRangeIndex::build(
+            &its,
+            AlshParams::default(),
+            BandedParams { n_bands: 3 },
+            101,
+        );
+        let banded_path = tmp("v5_banded.alsh");
+        banded.save_as(&banded_path, PersistFormat::V5).unwrap();
+        let loaded_banded = NormRangeIndex::load(&banded_path).unwrap();
+        assert_eq!(loaded_banded.n_bands(), 3);
+        assert_eq!(loaded_banded.table_stats(), banded.table_stats());
+
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            assert_eq!(flat.query(&q, 10), loaded.query(&q, 10));
+            assert_eq!(flat.candidates(&q), loaded.candidates(&q));
+            assert_eq!(banded.query(&q, 10), loaded_banded.query(&q, 10));
+            assert_eq!(banded.candidates(&q), loaded_banded.candidates(&q));
+        }
+        // load_any dispatches on the kind header for v5 exactly like v4.
+        assert!(load_any(&flat_path).unwrap().as_flat().is_some());
+        assert!(load_any(&banded_path).unwrap().as_banded().is_some());
+        assert!(load_any_scheme(&flat_path, MipsHashScheme::L2Alsh).is_ok());
+        assert!(load_any_scheme(&flat_path, MipsHashScheme::SignAlsh).is_err());
+    }
+
+    /// Every v5 section offset is 64-byte aligned and the arrays land on
+    /// disk byte-identical to memory (spot-checked via the first table's
+    /// keys section).
+    #[test]
+    fn v5_sections_are_aligned_and_verbatim() {
+        let its = items(200, 8, 110);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 111);
+        let path = tmp("v5_aligned.alsh");
+        idx.save_as(&path, PersistFormat::V5).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"ALSH");
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 5);
+        let n_sections = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+        assert_eq!(n_sections, 1 + 4 * idx.params().n_tables);
+        let mut prev_end = 0usize;
+        for i in 0..n_sections {
+            let e = 32 + 16 * i;
+            let off = u64::from_le_bytes(bytes[e..e + 8].try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap()) as usize;
+            assert_eq!(off % 64, 0, "section {i} misaligned");
+            assert!(off >= prev_end, "section {i} out of order");
+            assert!(off + len <= bytes.len(), "section {i} out of bounds");
+            prev_end = off + len;
+        }
+        // Section 1 is table 0's keys: verbatim little-endian u64s.
+        let e = 32 + 16;
+        let off = u64::from_le_bytes(bytes[e..e + 8].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap()) as usize;
+        let keys = idx.tables()[0].keys();
+        assert_eq!(len, keys.len() * 8);
+        for (j, &k) in keys.iter().enumerate() {
+            let got =
+                u64::from_le_bytes(bytes[off + 8 * j..off + 8 * j + 8].try_into().unwrap());
+            assert_eq!(got, k, "key {j} not verbatim on disk");
+        }
+    }
+
+    /// `open_mmap` on a v4 file fails with a pointer at the streaming
+    /// loader instead of misparsing, and vice versa the v5 magic check
+    /// still rejects junk.
+    #[test]
+    fn open_mmap_rejects_v4_with_clear_error() {
+        let its = items(50, 6, 120);
+        let idx = AlshIndex::build(&its, AlshParams::default(), 121);
+        let path = tmp("v4_for_mmap.alsh");
+        idx.save(&path).unwrap();
+        let err = open_mmap(&path).err().expect("should fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("v4") && msg.contains("load_any"), "unhelpful: {msg}");
+        std::fs::write(&path, b"NOPE....junkjunkjunkjunkjunkjunk").unwrap();
+        assert!(open_mmap(&path).is_err());
     }
 }

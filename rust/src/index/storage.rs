@@ -1,0 +1,358 @@
+//! Storage polymorphism for the frozen serve-side arrays: one set of
+//! query kernels, two memories.
+//!
+//! Every hot array an index serves from — radix `starts`, CSR `offsets`,
+//! `postings`, bucket `keys`, the row-major item matrix, band id maps —
+//! is reached through the [`Storage`] trait's associated slice types:
+//!
+//! * [`Owned`] — plain `Vec`s, produced by the build pipeline and the
+//!   streaming persist loader. This is the default type parameter
+//!   everywhere, so `AlshIndex` still means `AlshIndex<Owned>` and no
+//!   build-side call site changes.
+//! * [`Mapped`] — [`MapSlice`] views into one [`MmapFile`], produced by
+//!   `index::persist::open_mmap` from a v5 file whose sections are laid
+//!   out exactly as the in-memory arrays. Opening copies **nothing**:
+//!   the kernel pages the arrays in on first touch and the page cache
+//!   shares them across every process serving the same file.
+//!
+//! [`MapSlice`] holds `(ptr, len, Arc<MmapFile>)` rather than a borrowed
+//! `&[T]` so a mapped index is `'static + Send + Sync` like an owned one
+//! — no self-referential lifetimes, and the mapping lives exactly as
+//! long as the last view into it. The `Arc` bump per section is the only
+//! per-section cost, which is how `open_mmap` keeps its O(tables)
+//! allocation budget (asserted by `tests/mmap_equivalence.rs` with a
+//! counting allocator).
+//!
+//! The mmap itself is a self-contained raw-libc wrapper (`mmap`,
+//! `munmap` via `extern "C"` — `libc` is already linked by std on every
+//! unix target), consistent with the repo's hermetic vendored-deps
+//! policy: no new external crates. Non-unix targets fall back to one
+//! 64-byte-aligned heap read ([`MmapFile::read_aligned`]), which keeps
+//! the same section-view machinery working at the cost of the one copy
+//! mmap avoids.
+
+use std::fmt;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Alignment every v5 section starts on (and the alignment of the heap
+/// fallback buffer): comfortably covers the widest element (u64) and
+/// matches the cache-line size the hot probe loops are blocked for.
+pub const SECTION_ALIGN: usize = 64;
+
+/// Selects the memory the frozen serve-side arrays live in. Implemented
+/// by the [`Owned`] and [`Mapped`] markers; generic code only ever sees
+/// the associated slice types, so the query kernels compile once per
+/// storage with identical code shape (a `Vec` and a `MapSlice` both
+/// deref to a fat pointer).
+pub trait Storage: 'static {
+    type U64s: Deref<Target = [u64]> + Clone + fmt::Debug + Send + Sync + 'static;
+    type U32s: Deref<Target = [u32]> + Clone + fmt::Debug + Send + Sync + 'static;
+    type F32s: Deref<Target = [f32]> + Clone + fmt::Debug + Send + Sync + 'static;
+}
+
+/// Heap-owned storage (`Vec`s): the build pipeline's output and the
+/// streaming loader's destination. The default everywhere.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Owned;
+
+impl Storage for Owned {
+    type U64s = Vec<u64>;
+    type U32s = Vec<u32>;
+    type F32s = Vec<f32>;
+}
+
+/// Zero-copy storage: every array is a [`MapSlice`] view into one
+/// [`MmapFile`] (persist v5, `index::persist::open_mmap`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Mapped;
+
+impl Storage for Mapped {
+    type U64s = MapSlice<u64>;
+    type U32s = MapSlice<u32>;
+    type F32s = MapSlice<f32>;
+}
+
+/// The targets the raw `mmap` declaration below is known-correct for:
+/// 64-bit unix, where `off_t` is 64 bits wide so the hand-written
+/// prototype matches the C ABI. 32-bit unix would need `mmap64` (glibc's
+/// plain `mmap` takes a 32-bit `off_t` there) — those targets, like
+/// non-unix ones, take the aligned-heap-read fallback instead of risking
+/// a mismatched FFI signature.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    // Raw prototypes for the two calls we need; libc is linked by std on
+    // every unix target, so no crate is required.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    // Identical values on Linux and macOS.
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+}
+
+enum Backing {
+    /// A live `mmap(2)` mapping (64-bit unix).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap,
+    /// A 64-byte-aligned heap buffer (the fallback for targets without
+    /// the raw mmap path, and [`MmapFile::read_aligned`] callers).
+    Heap(std::alloc::Layout),
+}
+
+/// A read-only byte region backing a set of [`MapSlice`] views: either a
+/// shared file mapping ([`MmapFile::map`]) or an aligned heap buffer
+/// ([`MmapFile::read_aligned`]). Unmapped/freed when the last
+/// `Arc<MmapFile>` drops.
+pub struct MmapFile {
+    ptr: *mut u8,
+    len: usize,
+    backing: Backing,
+}
+
+// Safety: the region is read-only for its whole lifetime (PROT_READ, or
+// a heap buffer never written after construction).
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+impl MmapFile {
+    /// Map `path` read-only and page-cache-shared (`MAP_SHARED`), so
+    /// concurrent processes serving the same index file share physical
+    /// pages. O(1) in the file size — nothing is read until a query
+    /// touches a page. Falls back to [`MmapFile::read_aligned`] on
+    /// non-unix targets.
+    pub fn map(path: impl AsRef<Path>) -> anyhow::Result<Arc<Self>> {
+        let path = path.as_ref();
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::fd::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len();
+            anyhow::ensure!(len > 0, "not an ALSH index file: {} is empty", path.display());
+            anyhow::ensure!(len <= usize::MAX as u64, "file too large to map");
+            let len = len as usize;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            anyhow::ensure!(
+                ptr as isize != -1,
+                "mmap({}) failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            );
+            // The fd can close now; the mapping keeps the file alive.
+            Ok(Arc::new(Self { ptr: ptr as *mut u8, len, backing: Backing::Mmap }))
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            Self::read_aligned(path)
+        }
+    }
+
+    /// Read the whole file into one `SECTION_ALIGN`-aligned heap buffer.
+    /// Used by the streaming (heap) loader for v5 files — same section
+    /// parsing as the mapped path, one copy instead of zero — and as the
+    /// portable fallback for [`MmapFile::map`].
+    pub fn read_aligned(path: impl AsRef<Path>) -> anyhow::Result<Arc<Self>> {
+        use std::io::Read;
+        let path = path.as_ref();
+        let mut file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        anyhow::ensure!(len > 0, "not an ALSH index file: {} is empty", path.display());
+        anyhow::ensure!(len <= usize::MAX as u64, "file too large to read");
+        let len = len as usize;
+        let layout = std::alloc::Layout::from_size_align(len, SECTION_ALIGN)
+            .map_err(|e| anyhow::anyhow!("bad buffer layout: {e}"))?;
+        let ptr = unsafe { std::alloc::alloc(layout) };
+        anyhow::ensure!(!ptr.is_null(), "allocation of {len} bytes failed");
+        let this = Self { ptr, len, backing: Backing::Heap(layout) };
+        // `this` owns the buffer from here on, so an early `?` frees it.
+        let buf = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
+        file.read_exact(buf)?;
+        Ok(Arc::new(this))
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Total byte length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Never true — construction rejects empty files.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+}
+
+/// A typed view of `byte_len` bytes of `owner` at `byte_off`, validating
+/// bounds, element-size divisibility, and `T`'s alignment (section
+/// offsets are 64-byte aligned on disk and the base is page- or
+/// 64-byte-aligned, so this only fails on corrupt section tables).
+/// Restricted to the crate: `T` must be a plain-old-data type with no
+/// invalid bit patterns (u32/u64/f32 here).
+pub(crate) fn map_slice<T>(
+    owner: &Arc<MmapFile>,
+    byte_off: usize,
+    byte_len: usize,
+    what: &str,
+) -> anyhow::Result<MapSlice<T>> {
+    let elem = std::mem::size_of::<T>();
+    let end = byte_off
+        .checked_add(byte_len)
+        .ok_or_else(|| anyhow::anyhow!("corrupt index file: {what} section overflows"))?;
+    anyhow::ensure!(
+        end <= owner.len,
+        "corrupt index file: {what} section [{byte_off}, {end}) exceeds file length {}",
+        owner.len
+    );
+    anyhow::ensure!(
+        byte_len % elem == 0,
+        "corrupt index file: {what} section length {byte_len} not a multiple of {elem}"
+    );
+    anyhow::ensure!(
+        byte_off % std::mem::align_of::<T>() == 0,
+        "corrupt index file: {what} section offset {byte_off} misaligned for {elem}-byte elements"
+    );
+    Ok(MapSlice {
+        ptr: unsafe { owner.ptr.add(byte_off) } as *const T,
+        len: byte_len / elem,
+        _owner: Arc::clone(owner),
+    })
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mmap => unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            },
+            Backing::Heap(layout) => unsafe { std::alloc::dealloc(self.ptr, *layout) },
+        }
+    }
+}
+
+impl fmt::Debug for MmapFile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MmapFile").field("len", &self.len).finish()
+    }
+}
+
+/// A `'static` typed view into an [`MmapFile`]: `(ptr, len)` plus an
+/// `Arc` keeping the mapping alive. Derefs to `&[T]`, so every generic
+/// query kernel consumes it exactly like a `Vec`.
+pub struct MapSlice<T> {
+    ptr: *const T,
+    len: usize,
+    _owner: Arc<MmapFile>,
+}
+
+// Safety: the underlying memory is read-only and outlives the slice via
+// the Arc; T is a plain-old-data type.
+unsafe impl<T: Send + Sync> Send for MapSlice<T> {}
+unsafe impl<T: Send + Sync> Sync for MapSlice<T> {}
+
+impl<T> Deref for MapSlice<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl<T> Clone for MapSlice<T> {
+    fn clone(&self) -> Self {
+        Self { ptr: self.ptr, len: self.len, _owner: Arc::clone(&self._owner) }
+    }
+}
+
+impl<T> fmt::Debug for MapSlice<T> {
+    // Deliberately not printing elements: Debug on a mapped index must
+    // not page in gigabytes of postings.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MapSlice").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alsh-storage-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn map_and_slice_roundtrip() {
+        let path = tmp("map_roundtrip.bin");
+        let vals: Vec<u64> = (0..32).map(|i| i * 3 + 1).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        for open in [MmapFile::map(&path).unwrap(), MmapFile::read_aligned(&path).unwrap()] {
+            let s: MapSlice<u64> = map_slice(&open, 0, bytes.len(), "vals").unwrap();
+            assert_eq!(&*s, vals.as_slice());
+            // Offset view (8-byte aligned).
+            let tail: MapSlice<u64> = map_slice(&open, 16, bytes.len() - 16, "tail").unwrap();
+            assert_eq!(&*tail, &vals[2..]);
+            // The view keeps the mapping alive after the Arc drops.
+            drop(open);
+            assert_eq!(s[31], 31 * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn slice_rejects_bad_geometry() {
+        let path = tmp("bad_geometry.bin");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        let map = MmapFile::map(&path).unwrap();
+        // Out of bounds.
+        assert!(map_slice::<u64>(&map, 0, 72, "x").is_err());
+        assert!(map_slice::<u64>(&map, 64, 8, "x").is_err());
+        // Overflowing offset.
+        assert!(map_slice::<u64>(&map, usize::MAX - 4, 16, "x").is_err());
+        // Length not a multiple of the element size.
+        assert!(map_slice::<u64>(&map, 0, 12, "x").is_err());
+        // Misaligned offset.
+        assert!(map_slice::<u64>(&map, 4, 8, "x").is_err());
+        // Empty view at the end is fine.
+        assert_eq!(map_slice::<u32>(&map, 64, 0, "x").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn empty_file_rejected() {
+        let path = tmp("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        assert!(MmapFile::map(&path).is_err());
+        assert!(MmapFile::read_aligned(&path).is_err());
+    }
+}

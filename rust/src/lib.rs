@@ -21,8 +21,10 @@
 //! (single-append symmetric SRP, Neyshabur & Srebro 2015). Every layer
 //! — fused hashing ([`lsh::FusedHasher`] / [`lsh::FusedSrpHasher`]),
 //! the sharded streaming CSR build, the allocation-free query scratch,
-//! multi-probe, norm-range banding, persistence (v4), engine / batcher /
-//! router — dispatches per scheme.
+//! multi-probe, norm-range banding, persistence (v4 streaming / v5
+//! zero-copy mmap, [`index::persist`]), engine / batcher / router —
+//! dispatches per scheme, over owned or memory-mapped storage
+//! ([`index::storage`]).
 //!
 //! ## Module map (serving spine)
 //!

@@ -1,0 +1,363 @@
+//! Acceptance suite for zero-copy mmap index loading (persist v5):
+//!
+//! * **Property equivalence** — for every kind (flat, banded B>1) ×
+//!   scheme (l2-alsh, sign-alsh, simple-lsh), an index saved as v5 and
+//!   reopened via `open_mmap` returns byte-identical results to both the
+//!   originally built index and the heap-loaded v4 index, on all four
+//!   query paths: plain, code-fed, multi-probe, and batch.
+//! * **Zero-copy open** — a counting global allocator asserts that
+//!   `open_mmap` allocates O(tables) metadata only: opening an index
+//!   with 8× the postings performs (essentially) the same number of
+//!   allocations, because no keys/offsets/postings/item byte is copied.
+//! * **Zero-alloc steady state** — the warmed query path over a mapped
+//!   index performs zero heap allocations, exactly like the heap index
+//!   (the storage-generic kernels compile to the same shape).
+//! * **Serving-stack integration** — a mapped engine behind the batcher
+//!   and mapped shards behind the router serve identically to their
+//!   heap twins.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use alsh::coordinator::{BatcherConfig, MipsEngine, PjrtBatcher, ShardedRouter};
+use alsh::index::{
+    open_mmap, open_mmap_scheme, AlshIndex, AlshParams, AnyIndex, BandedParams, Mapped,
+    MipsHashScheme, NormRangeIndex, PersistFormat, Storage,
+};
+use alsh::util::Rng;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("alsh-mmap-equivalence");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Skewed-norm items — the regime where banding matters, so banded
+/// tables are genuinely different per band.
+fn skewed_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 1.9 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+/// The `[L·K]` code row for `q` — feeds the code-fed (batcher/PJRT
+/// re-entry) path, per scheme.
+fn code_row<S: Storage>(idx: &AnyIndex<S>, q: &[f32]) -> Vec<i32> {
+    let mut qx = Vec::new();
+    idx.scheme().query_into(q, idx.params().m, &mut qx);
+    let mut codes = vec![0i32; idx.hasher().n_codes()];
+    idx.hasher().hash_into(&qx, &mut codes);
+    codes
+}
+
+/// All four query paths of `a` and `b` agree exactly on `queries`.
+fn assert_paths_equal<SA: Storage, SB: Storage>(
+    a: &AnyIndex<SA>,
+    b: &AnyIndex<SB>,
+    queries: &[Vec<f32>],
+    ctx: &str,
+) {
+    let mut sa = a.scratch();
+    let mut sb = b.scratch();
+    for q in queries {
+        // 1. Plain: candidate stream (exact order) and top-k.
+        assert_eq!(
+            a.candidates_into(q, &mut sa).to_vec(),
+            b.candidates_into(q, &mut sb).to_vec(),
+            "{ctx}: candidate stream diverged"
+        );
+        assert_eq!(
+            a.query_into(q, 10, &mut sa).to_vec(),
+            b.query_into(q, 10, &mut sb).to_vec(),
+            "{ctx}: top-k diverged"
+        );
+        // 2. Code-fed (the batcher/PJRT re-entry).
+        let codes = code_row(a, q);
+        assert_eq!(codes, code_row(b, q), "{ctx}: hashed code rows diverged");
+        assert_eq!(
+            a.candidates_from_codes_into(&codes, &mut sa).to_vec(),
+            b.candidates_from_codes_into(&codes, &mut sb).to_vec(),
+            "{ctx}: code-fed candidates diverged"
+        );
+        // 3. Multi-probe.
+        for probes in [1usize, 4] {
+            assert_eq!(
+                a.query_multiprobe_into(q, 10, probes, &mut sa).to_vec(),
+                b.query_multiprobe_into(q, 10, probes, &mut sb).to_vec(),
+                "{ctx}: multi-probe ({probes}) top-k diverged"
+            );
+        }
+    }
+    // 4. Batch (fused matrix–matrix hashing), with candidate counts.
+    let mut out_a = Vec::new();
+    let mut out_b = Vec::new();
+    let mut counts_a = Vec::new();
+    let mut counts_b = Vec::new();
+    a.query_batch_counts_into(queries, 10, &mut sa, &mut out_a, &mut counts_a);
+    b.query_batch_counts_into(queries, 10, &mut sb, &mut out_b, &mut counts_b);
+    assert_eq!(out_a, out_b, "{ctx}: batch results diverged");
+    assert_eq!(counts_a, counts_b, "{ctx}: batch candidate counts diverged");
+}
+
+/// The acceptance property: every kind × scheme roundtrips through v5 +
+/// `open_mmap` with byte-identical behavior on all four query paths, and
+/// the v4 heap load agrees too.
+#[test]
+fn mapped_equals_heap_across_kinds_and_schemes() {
+    let its = skewed_items(600, 10, 1);
+    let mut rng = Rng::seed_from_u64(2);
+    let queries: Vec<Vec<f32>> =
+        (0..12).map(|_| (0..10).map(|_| rng.normal_f32()).collect()).collect();
+    for scheme in MipsHashScheme::ALL {
+        let params = AlshParams {
+            k_per_table: if scheme.is_srp() { 12 } else { 6 },
+            n_tables: 16,
+            ..AlshParams::recommended(scheme)
+        };
+        let built: Vec<(&str, AnyIndex)> = vec![
+            ("flat", AlshIndex::build(&its, params, 3).into()),
+            (
+                "banded",
+                NormRangeIndex::build(&its, params, BandedParams { n_bands: 3 }, 3).into(),
+            ),
+        ];
+        for (kind, idx) in &built {
+            let ctx = format!("{kind}/{scheme}");
+            let v4_path = tmp(&format!("eq_{kind}_{scheme}.v4"));
+            let v5_path = tmp(&format!("eq_{kind}_{scheme}.v5"));
+            idx.save_as(&v4_path, PersistFormat::V4).unwrap();
+            idx.save_as(&v5_path, PersistFormat::V5).unwrap();
+            let heap = AnyIndex::load(&v4_path).unwrap();
+            let mapped = open_mmap(&v5_path).unwrap();
+            assert_paths_equal(idx, &heap, &queries, &format!("{ctx} built-vs-v4"));
+            assert_paths_equal(idx, &mapped, &queries, &format!("{ctx} built-vs-mmap"));
+            assert_paths_equal(&heap, &mapped, &queries, &format!("{ctx} v4-vs-mmap"));
+            // The streaming loader reads v5 too (deep-validated copy) and
+            // agrees with the mapped view.
+            let v5_heap = AnyIndex::load(&v5_path).unwrap();
+            assert_paths_equal(&v5_heap, &mapped, &queries, &format!("{ctx} v5heap-vs-mmap"));
+            // Kind and scheme ride in both headers.
+            assert_eq!(mapped.scheme(), scheme, "{ctx}");
+            assert_eq!(mapped.as_banded().is_some(), *kind == "banded", "{ctx}");
+            assert_eq!(mapped.table_stats(), idx.table_stats(), "{ctx}");
+            assert!(open_mmap_scheme(&v5_path, scheme).is_ok());
+            std::fs::remove_file(&v4_path).ok();
+            std::fs::remove_file(&v5_path).ok();
+        }
+    }
+}
+
+/// Scheme pinning on the mapped open is rejected from the header.
+#[test]
+fn mapped_open_rejects_wrong_scheme_and_kind() {
+    let its = skewed_items(80, 6, 10);
+    let flat = AlshIndex::build(&its, AlshParams::default(), 11);
+    let flat_path = tmp("pin_flat.v5");
+    flat.save_as(&flat_path, PersistFormat::V5).unwrap();
+    let err = open_mmap_scheme(&flat_path, MipsHashScheme::SignAlsh).err().unwrap();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("l2-alsh") && msg.contains("sign-alsh"), "unhelpful: {msg}");
+    // Kind-pinned opens.
+    assert!(AlshIndex::<Mapped>::open_mmap(&flat_path).is_ok());
+    let err = NormRangeIndex::<Mapped>::open_mmap(&flat_path).err().unwrap();
+    assert!(format!("{err:#}").contains("flat"), "unhelpful kind error");
+}
+
+/// `open_mmap` is zero-copy: the number of allocations it performs is
+/// independent of the corpus/postings size (O(tables) metadata only).
+/// An 8× bigger corpus must open with (essentially) the same allocation
+/// count — if anyone ever copies a section into a Vec, this blows up by
+/// thousands.
+#[test]
+fn open_mmap_allocations_independent_of_postings() {
+    let params = AlshParams::default();
+    let small = AlshIndex::build(&skewed_items(400, 12, 20), params, 21);
+    let big = AlshIndex::build(&skewed_items(3200, 12, 22), params, 21);
+    assert!(big.table_stats().n_postings >= 8 * small.table_stats().n_postings);
+    let small_path = tmp("alloc_small.v5");
+    let big_path = tmp("alloc_big.v5");
+    small.save_as(&small_path, PersistFormat::V5).unwrap();
+    big.save_as(&big_path, PersistFormat::V5).unwrap();
+
+    // Warm once (thread-local lazy inits, path plumbing).
+    drop(open_mmap(&small_path).unwrap());
+
+    let before = allocs_on_this_thread();
+    let small_mapped = open_mmap(&small_path).unwrap();
+    let small_allocs = allocs_on_this_thread() - before;
+
+    let before = allocs_on_this_thread();
+    let big_mapped = open_mmap(&big_path).unwrap();
+    let big_allocs = allocs_on_this_thread() - before;
+
+    assert!(small_mapped.n_items() == 400 && big_mapped.n_items() == 3200);
+    assert!(
+        big_allocs <= small_allocs + 8,
+        "open_mmap allocations grew with corpus size: {small_allocs} (400 items) -> \
+         {big_allocs} (3200 items) — a section is being copied"
+    );
+    // Same property for the banded kind (bands add O(B·L) metadata, not
+    // O(postings)).
+    let small_b = NormRangeIndex::build(
+        &skewed_items(400, 12, 23),
+        params,
+        BandedParams { n_bands: 3 },
+        24,
+    );
+    let big_b = NormRangeIndex::build(
+        &skewed_items(3200, 12, 25),
+        params,
+        BandedParams { n_bands: 3 },
+        24,
+    );
+    let small_b_path = tmp("alloc_small_banded.v5");
+    let big_b_path = tmp("alloc_big_banded.v5");
+    small_b.save_as(&small_b_path, PersistFormat::V5).unwrap();
+    big_b.save_as(&big_b_path, PersistFormat::V5).unwrap();
+    let before = allocs_on_this_thread();
+    drop(open_mmap(&small_b_path).unwrap());
+    let small_allocs = allocs_on_this_thread() - before;
+    let before = allocs_on_this_thread();
+    drop(open_mmap(&big_b_path).unwrap());
+    let big_allocs = allocs_on_this_thread() - before;
+    assert!(
+        big_allocs <= small_allocs + 8,
+        "banded open_mmap allocations grew with corpus size: {small_allocs} -> {big_allocs}"
+    );
+}
+
+/// The steady-state query path over a mapped index allocates nothing —
+/// the zero-alloc guarantee survives the storage refactor (including the
+/// SIMD rerank over borrowed postings under `--features simd`).
+#[test]
+fn mapped_steady_state_queries_allocate_nothing() {
+    let its = skewed_items(2000, 24, 30);
+    let queries: Vec<Vec<f32>> = {
+        let mut rng = Rng::seed_from_u64(31);
+        (0..64).map(|_| (0..24).map(|_| rng.normal_f32()).collect()).collect()
+    };
+    let flat_path = tmp("steady_flat.v5");
+    let banded_path = tmp("steady_banded.v5");
+    AlshIndex::build(&its, AlshParams::default(), 32)
+        .save_as(&flat_path, PersistFormat::V5)
+        .unwrap();
+    NormRangeIndex::build(&its, AlshParams::default(), BandedParams { n_bands: 4 }, 32)
+        .save_as(&banded_path, PersistFormat::V5)
+        .unwrap();
+    for path in [&flat_path, &banded_path] {
+        let idx = open_mmap(path).unwrap();
+        let mut scratch = idx.scratch();
+        let mut sink = 0usize;
+        // Warm-up: variable-size buffers grow to the workload high-water
+        // mark; the mapped pages fault in.
+        for q in &queries {
+            sink += idx.query_into(q, 10, &mut scratch).len();
+            sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+        }
+        let before = allocs_on_this_thread();
+        for _ in 0..3 {
+            for q in &queries {
+                sink += idx.query_into(q, 10, &mut scratch).len();
+                sink += idx.query_multiprobe_into(q, 10, 4, &mut scratch).len();
+            }
+        }
+        let after = allocs_on_this_thread();
+        assert!(sink > 0);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state mapped queries performed {} heap allocations",
+            after - before
+        );
+    }
+}
+
+/// A mapped engine serves through the dynamic batcher (fused CPU hash
+/// fallback) exactly like its heap twin, and mapped shards behind the
+/// router score global ids exactly like the built router.
+#[test]
+fn mapped_engine_serves_through_batcher_and_router() {
+    let its = skewed_items(500, 10, 40);
+    let mut rng = Rng::seed_from_u64(41);
+    let queries: Vec<Vec<f32>> =
+        (0..10).map(|_| (0..10).map(|_| rng.normal_f32()).collect()).collect();
+
+    // Engine + batcher over a mapped banded index.
+    let heap_engine = MipsEngine::new_banded(
+        &its,
+        AlshParams::default(),
+        BandedParams { n_bands: 3 },
+        42,
+    );
+    let path = tmp("engine_banded.v5");
+    heap_engine.index().save_as(&path, PersistFormat::V5).unwrap();
+    let mapped_engine = Arc::new(MipsEngine::<Mapped>::open_mmap(&path).unwrap());
+    assert_eq!(mapped_engine.index().n_bands(), 3);
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&mapped_engine),
+        "definitely-not-an-artifacts-dir",
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+    )
+    .expect("batcher must spawn over a mapped engine");
+    let handle = batcher.handle();
+    for q in &queries {
+        let batched = handle.query(q.clone(), 10).expect("batched query");
+        assert_eq!(batched, heap_engine.query(q, 10), "batched mapped != heap");
+    }
+    batcher.shutdown();
+
+    // Router over mapped shards: save each built shard as v5 and
+    // reassemble with open_mmap_shards.
+    let heap_router = ShardedRouter::build(&its, 4, AlshParams::default(), 43);
+    let shard_paths: Vec<std::path::PathBuf> = (0..heap_router.n_shards())
+        .map(|s| {
+            let p = tmp(&format!("router_shard_{s}.v5"));
+            heap_router.shard(s).index().save_as(&p, PersistFormat::V5).unwrap();
+            p
+        })
+        .collect();
+    let mapped_router = ShardedRouter::<Mapped>::open_mmap_shards(&shard_paths).unwrap();
+    assert_eq!(mapped_router.n_shards(), heap_router.n_shards());
+    for q in &queries {
+        assert_eq!(
+            mapped_router.query(q, 10),
+            heap_router.query(q, 10),
+            "mapped router diverged"
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Robustness of the mapped (persist v5) open path: every header-level
+//! corruption — truncation, out-of-bounds or misaligned section table
+//! entries, wrong magic/version/kind/scheme, section-count lies,
+//! trailing bytes — must fail with a clear `Err` **before any section is
+//! touched**. No panic, no UB: the open validates everything it trusts
+//! from the header region alone.
+
+use alsh::index::{
+    open_mmap, open_mmap_scheme, AlshIndex, AlshParams, BandedParams, MipsHashScheme,
+    NormRangeIndex, PersistFormat,
+};
+use alsh::util::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("alsh-mmap-robustness");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 1.9 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+/// A fresh valid v5 flat file plus its bytes.
+fn v5_flat(name: &str) -> (std::path::PathBuf, Vec<u8>) {
+    let idx = AlshIndex::build(&items(150, 8, 1), AlshParams::default(), 2);
+    let path = tmp(name);
+    idx.save_as(&path, PersistFormat::V5).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+/// Write `bytes` to `path` and assert `open_mmap` fails with an error
+/// whose rendered chain contains `needle`.
+fn assert_open_fails(path: &std::path::Path, bytes: &[u8], needle: &str, ctx: &str) {
+    std::fs::write(path, bytes).unwrap();
+    match open_mmap(path) {
+        Ok(_) => panic!("{ctx}: corrupt file opened successfully"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains(needle),
+                "{ctx}: error should mention {needle:?}, got: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrong_magic_rejected() {
+    let (path, mut bytes) = v5_flat("magic.v5");
+    bytes[..4].copy_from_slice(b"NOPE");
+    assert_open_fails(&path, &bytes, "not an ALSH index", "magic");
+}
+
+#[test]
+fn too_short_rejected() {
+    let path = tmp("short.v5");
+    std::fs::write(&path, b"ALSH").unwrap();
+    assert!(open_mmap(&path).is_err());
+    // Empty file too (mmap of length 0 is its own failure mode).
+    std::fs::write(&path, b"").unwrap();
+    assert!(open_mmap(&path).is_err());
+}
+
+#[test]
+fn unknown_version_and_streaming_versions_rejected() {
+    let (path, bytes) = v5_flat("version.v5");
+    let mut v99 = bytes.clone();
+    v99[4..8].copy_from_slice(&99u32.to_le_bytes());
+    assert_open_fails(&path, &v99, "version", "v99");
+    // A genuine v4 file: clear pointer at the streaming loader.
+    let idx = AlshIndex::build(&items(50, 6, 3), AlshParams::default(), 4);
+    idx.save(&path).unwrap();
+    let err = open_mmap(&path).err().expect("v4 must not mmap-open");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("v4") && msg.contains("load_any"), "unhelpful: {msg}");
+}
+
+#[test]
+fn unknown_kind_and_scheme_rejected() {
+    let (path, bytes) = v5_flat("kind_scheme.v5");
+    let mut bad_kind = bytes.clone();
+    bad_kind[8..12].copy_from_slice(&7u32.to_le_bytes());
+    assert_open_fails(&path, &bad_kind, "unknown index kind", "kind 7");
+    let mut bad_scheme = bytes.clone();
+    bad_scheme[12..16].copy_from_slice(&9u32.to_le_bytes());
+    assert_open_fails(&path, &bad_scheme, "unknown hash scheme", "scheme 9");
+}
+
+#[test]
+fn wrong_kind_and_scheme_pins_rejected_from_header() {
+    let (path, _) = v5_flat("pins.v5");
+    // Wrong scheme pin.
+    let err = open_mmap_scheme(&path, MipsHashScheme::SimpleLsh).err().unwrap();
+    assert!(format!("{err:#}").contains("simple-lsh"));
+    // Wrong kind pin (banded open of a flat file).
+    let err = NormRangeIndex::<alsh::index::Mapped>::open_mmap(&path).err().unwrap();
+    assert!(format!("{err:#}").contains("flat"));
+}
+
+#[test]
+fn truncation_rejected_at_every_region() {
+    let (path, bytes) = v5_flat("trunc.v5");
+    // Inside the prelude, the section table, the meta block, and the
+    // sections: every truncation point must error (most via file-length
+    // checks, never via a panic).
+    for cut in [8, 24, 40, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(open_mmap(&path).is_err(), "truncation at {cut} bytes opened");
+    }
+}
+
+#[test]
+fn out_of_bounds_section_offset_rejected() {
+    let (path, mut bytes) = v5_flat("oob_off.v5");
+    // Section table entry 0 starts at byte 32: point it far past EOF
+    // (64-aligned so the alignment check doesn't mask the bounds check).
+    let huge = ((bytes.len() as u64 + 1_000_000) / 64) * 64;
+    bytes[32..40].copy_from_slice(&huge.to_le_bytes());
+    assert_open_fails(&path, &bytes, "exceeds file length", "oob offset");
+}
+
+#[test]
+fn out_of_bounds_section_length_rejected() {
+    let (path, mut bytes) = v5_flat("oob_len.v5");
+    // Keep entry 0's offset, stretch its length past EOF.
+    bytes[40..48].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+    assert_open_fails(&path, &bytes, "exceeds file length", "oob length");
+}
+
+#[test]
+fn overflowing_section_geometry_rejected() {
+    let (path, mut bytes) = v5_flat("overflow.v5");
+    // offset + len wraps around usize: the checked add must catch it
+    // (64-aligned offset so alignment doesn't mask it).
+    bytes[32..40].copy_from_slice(&(u64::MAX - 63).to_le_bytes());
+    bytes[40..48].copy_from_slice(&1024u64.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(open_mmap(&path).is_err());
+}
+
+#[test]
+fn misaligned_section_offset_rejected() {
+    let (path, mut bytes) = v5_flat("misaligned.v5");
+    let off = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+    bytes[32..40].copy_from_slice(&(off + 4).to_le_bytes());
+    assert_open_fails(&path, &bytes, "aligned", "misaligned offset");
+}
+
+#[test]
+fn overlapping_sections_rejected() {
+    let (path, mut bytes) = v5_flat("overlap.v5");
+    // Make section 1 (entry at byte 48) point back at section 0's
+    // offset: ordered-non-overlapping validation must reject it.
+    let off0 = bytes[32..40].to_vec();
+    bytes[48..56].copy_from_slice(&off0);
+    assert_open_fails(&path, &bytes, "overlaps", "overlap");
+}
+
+#[test]
+fn lying_section_count_rejected() {
+    let (path, mut bytes) = v5_flat("count.v5");
+    let n = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    // Fewer sections than the kind/meta imply.
+    bytes[24..32].copy_from_slice(&(n - 1).to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(open_mmap(&path).is_err());
+    // Absurdly many sections: the table would run past EOF.
+    bytes[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(open_mmap(&path).is_err());
+}
+
+#[test]
+fn meta_length_lies_rejected() {
+    let (path, mut bytes) = v5_flat("meta_len.v5");
+    // Meta block stretched past EOF.
+    bytes[16..24].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+    assert_open_fails(&path, &bytes, "exceeds file length", "meta overrun");
+    // Meta block shortened: the metadata decode hits EOF cleanly.
+    let (_, fresh) = v5_flat("meta_len.v5");
+    let mut short = fresh.clone();
+    short[16..24].copy_from_slice(&8u64.to_le_bytes());
+    std::fs::write(&path, &short).unwrap();
+    assert!(open_mmap(&path).is_err());
+}
+
+#[test]
+fn trailing_garbage_rejected() {
+    let (path, mut bytes) = v5_flat("trailing.v5");
+    bytes.extend_from_slice(&[0xAB; 128]);
+    assert_open_fails(&path, &bytes, "trailing", "appended junk");
+}
+
+#[test]
+fn wrong_element_count_sections_rejected() {
+    // Shrink the radix `starts` section (entry 2 of a flat file —
+    // items, keys, starts, ...) from 257 u32s to 256: caught by the
+    // element-count check, before any probe.
+    let (path, mut bytes) = v5_flat("starts_count.v5");
+    let e = 32 + 2 * 16;
+    let len = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap());
+    assert_eq!(len, 257 * 4, "expected entry 2 to be the radix starts");
+    bytes[e + 8..e + 16].copy_from_slice(&(len - 4).to_le_bytes());
+    assert_open_fails(&path, &bytes, "257", "radix length");
+}
+
+/// Banded-specific header corruption: a band-length lie is caught by
+/// the ids-section element count, and a clipped band table set by the
+/// section count.
+#[test]
+fn banded_header_corruption_rejected() {
+    let idx = NormRangeIndex::build(
+        &items(200, 8, 50),
+        AlshParams::default(),
+        BandedParams { n_bands: 3 },
+        51,
+    );
+    let path = tmp("banded.v5");
+    idx.save_as(&path, PersistFormat::V5).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // The per-band lengths live at the tail of the meta block (last 3 ×
+    // (scale 12B + min 4B + max 4B + len 8B) = 84 bytes). Bump band 0's
+    // length by one: its ids section no longer matches.
+    let table_end = 32
+        + 16 * u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    let meta_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let band0_len_off = table_end + meta_len - 3 * 28 + 20;
+    let mut bad = bytes.clone();
+    let v = u64::from_le_bytes(bad[band0_len_off..band0_len_off + 8].try_into().unwrap());
+    bad[band0_len_off..band0_len_off + 8].copy_from_slice(&(v + 1).to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    assert!(open_mmap(&path).is_err(), "band-length lie opened");
+    // Untouched file still opens.
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(open_mmap(&path).is_ok());
+}
