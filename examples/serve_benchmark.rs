@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use alsh::config::DatasetConfig;
-use alsh::coordinator::{serve_on, BatcherConfig, MipsEngine, PjrtBatcher};
+use alsh::coordinator::{serve_on, BatcherConfig, MipsEngine, PjrtBatcher, ServeConfig};
 use alsh::data::generate_dataset;
 use alsh::index::AlshParams;
 use alsh::util::json::Json;
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     {
         let engine = Arc::clone(&engine);
         std::thread::spawn(move || {
-            let _ = serve_on(listener, handle, engine);
+            let _ = serve_on(listener, handle, engine, ServeConfig::default());
         });
     }
     println!("server on {addr}; warming up…");

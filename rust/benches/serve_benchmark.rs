@@ -1,0 +1,324 @@
+//! Closed-loop serving benchmark over the robust coordinator stack,
+//! emitting `BENCH_serve.json` (sections `serve` and `overload`) so the
+//! serving trajectory — throughput, tail latency, shed rate, degraded
+//! fraction, recall-at-degraded — is ratcheted across PRs like the query
+//! and build benches.
+//!
+//! Phase 1 drives a healthy server with closed-loop TCP clients and
+//! records throughput and p50/p99/p999. Phase 2 measures recall@10 of
+//! the healthy vs the degraded probe budget against the exact scan.
+//! Phase 3 rebuilds the stack undersized (tiny queue, injected batch
+//! delay, tight deadlines) and pushes ~4× its sustainable load to
+//! measure shed rate, degraded fraction, deadline misses, and ping p99
+//! while overloaded.
+//!
+//! Env knobs (CI sizes down): `ALSH_SERVE_N` items, `ALSH_SERVE_CLIENTS`
+//! × `ALSH_SERVE_QPC` healthy queries, `ALSH_SERVE_OVER_CLIENTS` ×
+//! `ALSH_SERVE_OVER_QPC` overload queries.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use alsh::coordinator::{
+    serve_on, AdmissionConfig, BatcherConfig, FaultPlan, MipsEngine, PjrtBatcher, ServeConfig,
+};
+use alsh::eval::gold_top_t;
+use alsh::index::{AlshParams, ProbeBudget};
+use alsh::util::bench::merge_bench_json_file;
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    /// One request/response round trip; returns the reply and the
+    /// client-observed latency in µs.
+    fn roundtrip(&mut self, req: &str) -> (Json, u64) {
+        let t = Instant::now();
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        (Json::parse(&line).expect("valid json response"), t.elapsed().as_micros() as u64)
+    }
+}
+
+fn query_line(q: &[f32], top_k: usize, deadline_ms: Option<u64>) -> String {
+    let qj: Vec<f64> = q.iter().map(|v| *v as f64).collect();
+    match deadline_ms {
+        Some(ms) => format!(
+            "{{\"vector\":{},\"top_k\":{top_k},\"deadline_ms\":{ms}}}",
+            alsh::util::json::num_arr(&qj)
+        ),
+        None => format!("{{\"vector\":{},\"top_k\":{top_k}}}", alsh::util::json::num_arr(&qj)),
+    }
+}
+
+fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    let n_items = env_usize("ALSH_SERVE_N", 4000);
+    let n_clients = env_usize("ALSH_SERVE_CLIENTS", 6);
+    let qpc = env_usize("ALSH_SERVE_QPC", 120);
+    let over_clients = env_usize("ALSH_SERVE_OVER_CLIENTS", 16);
+    let over_qpc = env_usize("ALSH_SERVE_OVER_QPC", 40);
+    let dim = 32;
+    let top_k = 10;
+
+    let items = norm_spread_items(n_items, dim, 11);
+    let params = AlshParams { n_tables: 32, k_per_table: 6, ..AlshParams::default() };
+
+    // ── Phase 1: healthy closed-loop throughput + tails ──────────────
+    let engine = Arc::new(MipsEngine::new(&items, params, 12));
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "artifacts",
+        BatcherConfig { max_wait: Duration::from_micros(300), ..Default::default() },
+    )
+    .expect("batcher");
+    let handle = batcher.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let (h, e) = (handle.clone(), Arc::clone(&engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, h, e, ServeConfig::default());
+        });
+    }
+    println!("phase 1: {n_clients} clients × {qpc} queries, {n_items} items dim {dim}");
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(500 + c as u64);
+                let mut client = Client::connect(addr);
+                let mut lats = Vec::with_capacity(qpc);
+                let mut degraded = 0usize;
+                for _ in 0..qpc {
+                    let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+                    let (resp, lat) = client.roundtrip(&query_line(&q, top_k, None));
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                    if resp.get("degraded") == Some(&Json::Bool(true)) {
+                        degraded += 1;
+                    }
+                    lats.push(lat);
+                }
+                (lats, degraded)
+            })
+        })
+        .collect();
+    let mut lats: Vec<u64> = Vec::new();
+    let mut degraded_healthy = 0usize;
+    for t in threads {
+        let (l, d) = t.join().unwrap();
+        lats.extend(l);
+        degraded_healthy += d;
+    }
+    let wall = t0.elapsed();
+    lats.sort_unstable();
+    let total = lats.len();
+    let qps = total as f64 / wall.as_secs_f64();
+    let (p50, p99, p999) = (pct(&lats, 0.50), pct(&lats, 0.99), pct(&lats, 0.999));
+    println!(
+        "  {total} queries in {wall:?} → {qps:.0} q/s; p50 {p50}µs p99 {p99}µs p999 {p999}µs; degraded {degraded_healthy}"
+    );
+    let healthy_snap = engine.metrics().snapshot();
+
+    // ── Phase 2: recall@10, healthy vs degraded budget ───────────────
+    let degraded_budget = handle.degraded_budget();
+    let mut rng = Rng::seed_from_u64(900);
+    let n_recall = 100.min(n_items);
+    let (mut hit_full, mut hit_deg) = (0usize, 0usize);
+    for _ in 0..n_recall {
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+        let gold = gold_top_t(&items, &q, top_k);
+        let full: Vec<u32> =
+            engine.query_budgeted(&q, top_k, ProbeBudget::full()).iter().map(|h| h.id).collect();
+        let deg: Vec<u32> =
+            engine.query_budgeted(&q, top_k, degraded_budget).iter().map(|h| h.id).collect();
+        hit_full += gold.iter().filter(|id| full.contains(id)).count();
+        hit_deg += gold.iter().filter(|id| deg.contains(id)).count();
+    }
+    let recall_full = hit_full as f64 / (n_recall * top_k) as f64;
+    let recall_deg = hit_deg as f64 / (n_recall * top_k) as f64;
+    let recall_ratio = if recall_full > 0.0 { recall_deg / recall_full } else { 0.0 };
+    println!(
+        "phase 2: recall@10 healthy {recall_full:.3} vs degraded {recall_deg:.3} (ratio {recall_ratio:.3}, budget {degraded_budget:?})"
+    );
+    batcher.shutdown();
+
+    // ── Phase 3: overload (tiny queue, injected delay, tight SLOs) ───
+    let over_engine = Arc::new(MipsEngine::new(&items, params, 13));
+    let over_cfg = BatcherConfig {
+        max_wait: Duration::from_micros(300),
+        queue_depth: 16,
+        admission: AdmissionConfig {
+            default_deadline: Duration::from_millis(250),
+            target_p99: Duration::from_millis(40),
+            degrade_fill: 0.25,
+            shed_fill: 0.75,
+            recover_fill: 0.1,
+            min_dwell: Duration::from_millis(50),
+            eval_interval: Duration::from_millis(1),
+            latency_window: Duration::from_millis(200),
+            ..Default::default()
+        },
+        fault_plan: Some(FaultPlan {
+            delay_from: 0,
+            delay_until: usize::MAX,
+            delay: Duration::from_millis(5),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let over_batcher =
+        PjrtBatcher::spawn(Arc::clone(&over_engine), "artifacts", over_cfg).expect("batcher");
+    let over_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let over_addr = over_listener.local_addr().unwrap();
+    {
+        let (h, e) = (over_batcher.handle(), Arc::clone(&over_engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(over_listener, h, e, ServeConfig::default());
+        });
+    }
+    println!("phase 3: {over_clients} clients × {over_qpc} queries against an undersized server");
+    let stop = Arc::new(AtomicBool::new(false));
+    let ping_thread = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut client = Client::connect(over_addr);
+            let mut lats = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                let (resp, lat) = client.roundtrip(r#"{"cmd": "ping"}"#);
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                lats.push(lat);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            lats
+        })
+    };
+    let t1 = Instant::now();
+    let over_threads: Vec<_> = (0..over_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(2000 + c as u64);
+                let mut client = Client::connect(over_addr);
+                // (ok, degraded, shed, deadline, lats)
+                let mut stats = (0usize, 0usize, 0usize, 0usize, Vec::new());
+                for _ in 0..over_qpc {
+                    let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+                    let (resp, lat) = client.roundtrip(&query_line(&q, top_k, Some(100)));
+                    stats.4.push(lat);
+                    if resp.get("ok") == Some(&Json::Bool(true)) {
+                        stats.0 += 1;
+                        if resp.get("degraded") == Some(&Json::Bool(true)) {
+                            stats.1 += 1;
+                        }
+                    } else {
+                        match resp.get("code").and_then(Json::as_str) {
+                            Some("overloaded") => stats.2 += 1,
+                            Some("deadline_exceeded") => stats.3 += 1,
+                            other => panic!("unexpected failure code {other:?}: {resp:?}"),
+                        }
+                    }
+                }
+                stats
+            })
+        })
+        .collect();
+    let (mut ok, mut degraded, mut shed, mut deadline) = (0usize, 0usize, 0usize, 0usize);
+    let mut over_lats: Vec<u64> = Vec::new();
+    for t in over_threads {
+        let s = t.join().unwrap();
+        ok += s.0;
+        degraded += s.1;
+        shed += s.2;
+        deadline += s.3;
+        over_lats.extend(s.4);
+    }
+    let over_wall = t1.elapsed();
+    stop.store(true, Ordering::Relaxed);
+    let mut ping_lats = ping_thread.join().unwrap();
+    ping_lats.sort_unstable();
+    over_lats.sort_unstable();
+    let sent = over_lats.len();
+    let shed_rate = shed as f64 / sent as f64;
+    let deadline_rate = deadline as f64 / sent as f64;
+    let degraded_fraction = if ok > 0 { degraded as f64 / ok as f64 } else { 0.0 };
+    let ping_p99 = pct(&ping_lats, 0.99);
+    println!(
+        "  {sent} sent in {over_wall:?}: ok {ok} (degraded {degraded}), shed {shed} ({:.1}%), deadline {deadline} ({:.1}%), ping p99 {ping_p99}µs",
+        shed_rate * 100.0,
+        deadline_rate * 100.0
+    );
+    over_batcher.shutdown();
+
+    merge_bench_json_file(
+        "BENCH_serve.json",
+        "serve",
+        vec![
+            ("n_items".into(), num(n_items as f64)),
+            ("clients".into(), num(n_clients as f64)),
+            ("queries".into(), num(total as f64)),
+            ("throughput_qps".into(), num(qps)),
+            ("p50_us".into(), num(p50 as f64)),
+            ("p99_us".into(), num(p99 as f64)),
+            ("p999_us".into(), num(p999 as f64)),
+            ("mean_batch_size".into(), num(healthy_snap.mean_batch_size())),
+            ("degraded_fraction".into(), num(degraded_healthy as f64 / total as f64)),
+            ("recall_at10_healthy".into(), num(recall_full)),
+            ("recall_at10_degraded".into(), num(recall_deg)),
+            ("recall_degraded_ratio".into(), num(recall_ratio)),
+        ],
+    );
+    merge_bench_json_file(
+        "BENCH_serve.json",
+        "overload",
+        vec![
+            ("clients".into(), num(over_clients as f64)),
+            ("sent".into(), num(sent as f64)),
+            ("ok".into(), num(ok as f64)),
+            ("shed_rate".into(), num(shed_rate)),
+            ("deadline_rate".into(), num(deadline_rate)),
+            ("degraded_fraction".into(), num(degraded_fraction)),
+            ("query_p999_us".into(), num(pct(&over_lats, 0.999) as f64)),
+            ("ping_p99_us".into(), num(ping_p99 as f64)),
+        ],
+    );
+    std::process::exit(0); // acceptor threads are still parked in accept()
+}

@@ -1,0 +1,442 @@
+//! Admission control for the serving tier: structured serve errors, the
+//! overload configuration, and the [`LoadController`] that drives the
+//! three-level degradation ladder.
+//!
+//! # The ladder
+//!
+//! Every admitted query flows through a bounded queue; the controller
+//! watches two measured signals — queue fill (depth / capacity) and the
+//! recent p99 of end-to-end admitted-query latency — and holds one of
+//! three levels:
+//!
+//! * **0 — healthy**: full [`crate::index::ProbeBudget`], every admitted
+//!   query gets the unconstrained answer.
+//! * **1 — degraded**: queries run under a reduced probe budget (fewer
+//!   tables, capped rerank pool — see
+//!   [`AdmissionConfig::degraded_table_frac`] /
+//!   [`AdmissionConfig::degraded_rerank_cap`]) with a declared recall
+//!   floor ([`AdmissionConfig::recall_floor`], asserted in
+//!   `tests/overload.rs`): shed *work* before shedding *requests*.
+//! * **2 — shedding**: new queries are rejected up front with a
+//!   structured `overloaded` error; queries already admitted still drain.
+//!
+//! # Hysteresis
+//!
+//! Escalation is immediate (overload hurts now); de-escalation is one
+//! level at a time and only after [`AdmissionConfig::min_dwell`] at the
+//! current level **and** both signals have recovered (fill below
+//! [`AdmissionConfig::recover_fill`], recent p99 below 80% of target) —
+//! so the ladder ratchets down slowly instead of flapping around the
+//! thresholds. Latency samples carry timestamps and age out of the
+//! [`AdmissionConfig::latency_window`], so a burst's p99 cannot pin the
+//! ladder high after the burst has drained.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+
+/// Structured serve-path error: every failure a client can observe maps
+/// to one of these codes, and the server renders them as
+/// `{ok: false, code, error}` JSON — never a panic, never a silently
+/// truncated answer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself is malformed (bad vector, bad `top_k`, …).
+    InvalidArgument(String),
+    /// The request's deadline expired before a result was produced; the
+    /// answer would be stale, so none is served.
+    DeadlineExceeded(String),
+    /// The admission queue is full or the ladder is at the shed level.
+    Overloaded(String),
+    /// Serving-stack failure (worker gone, channel closed, hash error).
+    Internal(String),
+}
+
+impl ServeError {
+    /// The stable machine-readable code clients switch on.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::InvalidArgument(_) => "invalid_argument",
+            ServeError::DeadlineExceeded(_) => "deadline_exceeded",
+            ServeError::Overloaded(_) => "overloaded",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// The human-readable detail.
+    pub fn message(&self) -> &str {
+        match self {
+            ServeError::InvalidArgument(m)
+            | ServeError::DeadlineExceeded(m)
+            | ServeError::Overloaded(m)
+            | ServeError::Internal(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code(), self.message())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Overload/admission configuration. The defaults are deliberately
+/// generous (2 s deadline, 500 ms p99 target) so that lightly loaded
+/// deployments — and the existing test suites — never degrade or shed;
+/// production configs tighten them to the SLO.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Deadline applied when the client sends no `deadline_ms`.
+    pub default_deadline: Duration,
+    /// p99 target: recent p99 above this escalates to degraded.
+    pub target_p99: Duration,
+    /// Queue fill (depth/capacity) at or above which the ladder degrades.
+    pub degrade_fill: f64,
+    /// Queue fill at or above which new queries are shed outright.
+    pub shed_fill: f64,
+    /// Queue fill the ladder must fall to before de-escalating.
+    pub recover_fill: f64,
+    /// Minimum time at a level before de-escalating (hysteresis).
+    pub min_dwell: Duration,
+    /// Ladder re-evaluation throttle: at most one evaluation per
+    /// interval across all threads. `Duration::ZERO` evaluates on every
+    /// call (used by unit tests for determinism).
+    pub eval_interval: Duration,
+    /// Only latency samples younger than this feed the recent p99.
+    pub latency_window: Duration,
+    /// Fraction of the L tables probed at the degraded level (ceil,
+    /// clamped to `[1, L]`).
+    pub degraded_table_frac: f64,
+    /// Rerank-pool cap at the degraded level.
+    pub degraded_rerank_cap: usize,
+    /// Declared recall floor at the degraded level, as a fraction of
+    /// healthy recall on the same workload (asserted in
+    /// `tests/overload.rs` and ratcheted in `BENCH_serve.json`).
+    pub recall_floor: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            default_deadline: Duration::from_secs(2),
+            target_p99: Duration::from_millis(500),
+            degrade_fill: 0.5,
+            shed_fill: 0.9,
+            recover_fill: 0.25,
+            min_dwell: Duration::from_millis(500),
+            eval_interval: Duration::from_millis(2),
+            latency_window: Duration::from_secs(1),
+            degraded_table_frac: 0.75,
+            degraded_rerank_cap: 4096,
+            recall_floor: 0.9,
+        }
+    }
+}
+
+/// Latency ring size (power of two; ~the last few hundred queries).
+const RING: usize = 512;
+/// Low bits of each packed slot hold the latency (µs, saturated).
+const LAT_BITS: u32 = 24;
+const LAT_MAX: u64 = (1u64 << LAT_BITS) - 1;
+
+/// The shared ladder state: lock-free, updated from connection threads
+/// (admission) and the batcher thread (completion latencies).
+pub struct LoadController {
+    cfg: AdmissionConfig,
+    queue_cap: usize,
+    metrics: Arc<Metrics>,
+    /// Current ladder level (0 healthy / 1 degraded / 2 shedding).
+    level: AtomicU8,
+    /// µs-since-start the current level was entered (hysteresis dwell).
+    level_since_us: AtomicU64,
+    /// µs-since-start of the last ladder evaluation (throttle CAS).
+    last_eval_us: AtomicU64,
+    /// Ring of packed `(timestamp_us << 24) | latency_us` samples. A
+    /// zero slot is empty; timestamps wrap after ~2^40 µs (12 days),
+    /// which at worst mis-ages a window of samples once.
+    lats: Vec<AtomicU64>,
+    lat_idx: AtomicU64,
+    start: Instant,
+}
+
+impl LoadController {
+    pub fn new(cfg: AdmissionConfig, queue_cap: usize, metrics: Arc<Metrics>) -> Self {
+        Self {
+            cfg,
+            queue_cap: queue_cap.max(1),
+            metrics,
+            level: AtomicU8::new(0),
+            level_since_us: AtomicU64::new(0),
+            last_eval_us: AtomicU64::new(0),
+            lats: (0..RING).map(|_| AtomicU64::new(0)).collect(),
+            lat_idx: AtomicU64::new(0),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Current ladder level (0/1/2) without re-evaluating.
+    pub fn level(&self) -> u8 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// A query was admitted to the bounded queue.
+    pub fn on_enqueue(&self) {
+        self.metrics.record_queue_push();
+    }
+
+    /// A query left the queue (dispatched into a batch).
+    pub fn on_dequeue(&self) {
+        self.metrics.record_queue_pop();
+    }
+
+    /// Record one admitted query's end-to-end latency (admission →
+    /// response), timestamped so it ages out of the p99 window.
+    pub fn record_latency(&self, latency_us: u64) {
+        let packed = (self.now_us() << LAT_BITS) | latency_us.min(LAT_MAX);
+        let i = self.lat_idx.fetch_add(1, Ordering::Relaxed) as usize % RING;
+        self.lats[i].store(packed, Ordering::Relaxed);
+    }
+
+    /// p99 over the latency samples inside the window (0 if none).
+    pub fn recent_p99_us(&self) -> u64 {
+        self.recent_p99_at(self.now_us())
+    }
+
+    fn recent_p99_at(&self, now_us: u64) -> u64 {
+        let window = self.cfg.latency_window.as_micros() as u64;
+        let cutoff = now_us.saturating_sub(window);
+        let mut lats: Vec<u64> = Vec::with_capacity(RING);
+        for slot in &self.lats {
+            let packed = slot.load(Ordering::Relaxed);
+            if packed != 0 && (packed >> LAT_BITS) >= cutoff {
+                lats.push(packed & LAT_MAX);
+            }
+        }
+        if lats.is_empty() {
+            return 0;
+        }
+        lats.sort_unstable();
+        let idx = ((lats.len() as f64) * 0.99).ceil() as usize;
+        lats[idx.saturating_sub(1).min(lats.len() - 1)]
+    }
+
+    /// Re-evaluate the ladder (throttled to one evaluation per
+    /// [`AdmissionConfig::eval_interval`] across threads) and return the
+    /// level in force. Escalation is immediate; de-escalation steps one
+    /// level after the dwell once both signals have recovered.
+    pub fn evaluate(&self) -> u8 {
+        let now = self.now_us();
+        let interval = self.cfg.eval_interval.as_micros() as u64;
+        if interval > 0 {
+            let last = self.last_eval_us.load(Ordering::Relaxed);
+            if now.saturating_sub(last) < interval
+                || self
+                    .last_eval_us
+                    .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_err()
+            {
+                return self.level.load(Ordering::Relaxed);
+            }
+        }
+        let fill = self.metrics.queue_depth() as f64 / self.queue_cap as f64;
+        let p99 = self.recent_p99_at(now);
+        let target = self.cfg.target_p99.as_micros() as u64;
+        let level = self.level.load(Ordering::Relaxed);
+        let desired: u8 = if fill >= self.cfg.shed_fill {
+            2
+        } else if fill >= self.cfg.degrade_fill || p99 > target {
+            1
+        } else {
+            0
+        };
+        if desired > level {
+            self.level.store(desired, Ordering::Relaxed);
+            self.level_since_us.store(now, Ordering::Relaxed);
+            crate::log_info!(
+                "load ladder: {level} -> {desired} (fill {fill:.2}, recent p99 {p99}us)"
+            );
+            return desired;
+        }
+        if desired < level {
+            let since = self.level_since_us.load(Ordering::Relaxed);
+            let dwell = self.cfg.min_dwell.as_micros() as u64;
+            if now.saturating_sub(since) >= dwell
+                && fill <= self.cfg.recover_fill
+                && p99 <= target.saturating_mul(4) / 5
+            {
+                let next = level - 1;
+                self.level.store(next, Ordering::Relaxed);
+                self.level_since_us.store(now, Ordering::Relaxed);
+                crate::log_info!(
+                    "load ladder: {level} -> {next} (fill {fill:.2}, recent p99 {p99}us)"
+                );
+                return next;
+            }
+        }
+        level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(cfg: AdmissionConfig, cap: usize) -> LoadController {
+        LoadController::new(cfg, cap, Arc::new(Metrics::new()))
+    }
+
+    /// Evaluate-every-call config with instant de-escalation so unit
+    /// tests are deterministic.
+    fn fast_cfg() -> AdmissionConfig {
+        AdmissionConfig {
+            eval_interval: Duration::ZERO,
+            min_dwell: Duration::ZERO,
+            latency_window: Duration::from_secs(60),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        assert_eq!(ServeError::InvalidArgument("x".into()).code(), "invalid_argument");
+        assert_eq!(ServeError::DeadlineExceeded("x".into()).code(), "deadline_exceeded");
+        assert_eq!(ServeError::Overloaded("x".into()).code(), "overloaded");
+        assert_eq!(ServeError::Internal("x".into()).code(), "internal");
+        let e = ServeError::Overloaded("queue full".into());
+        assert_eq!(e.to_string(), "overloaded: queue full");
+        assert_eq!(e.message(), "queue full");
+    }
+
+    #[test]
+    fn ladder_escalates_on_queue_fill_and_sheds() {
+        let c = controller(fast_cfg(), 10);
+        assert_eq!(c.evaluate(), 0);
+        // 50% fill → degrade.
+        for _ in 0..5 {
+            c.on_enqueue();
+        }
+        assert_eq!(c.evaluate(), 1);
+        // 90% fill → shed.
+        for _ in 0..4 {
+            c.on_enqueue();
+        }
+        assert_eq!(c.evaluate(), 2);
+        assert_eq!(c.level(), 2);
+    }
+
+    #[test]
+    fn ladder_escalates_on_p99() {
+        let c = controller(fast_cfg(), 1024);
+        // Empty window → healthy.
+        assert_eq!(c.evaluate(), 0);
+        for _ in 0..100 {
+            c.record_latency(2_000_000); // 2 s >> 500 ms target
+        }
+        assert_eq!(c.evaluate(), 1);
+    }
+
+    #[test]
+    fn deescalation_steps_one_level_with_recovered_signals() {
+        let c = controller(fast_cfg(), 10);
+        for _ in 0..9 {
+            c.on_enqueue();
+        }
+        assert_eq!(c.evaluate(), 2);
+        // Drain to 10% fill (below recover_fill 0.25): one step per eval.
+        for _ in 0..8 {
+            c.on_dequeue();
+        }
+        assert_eq!(c.evaluate(), 1);
+        assert_eq!(c.evaluate(), 0);
+        assert_eq!(c.evaluate(), 0);
+    }
+
+    #[test]
+    fn deescalation_respects_dwell() {
+        let cfg = AdmissionConfig { min_dwell: Duration::from_secs(3600), ..fast_cfg() };
+        let c = controller(cfg, 10);
+        for _ in 0..9 {
+            c.on_enqueue();
+        }
+        assert_eq!(c.evaluate(), 2);
+        for _ in 0..9 {
+            c.on_dequeue();
+        }
+        // Signals recovered but dwell not elapsed: the level holds.
+        assert_eq!(c.evaluate(), 2);
+        assert_eq!(c.level(), 2);
+    }
+
+    #[test]
+    fn deescalation_blocked_while_p99_is_hot() {
+        let c = controller(fast_cfg(), 10);
+        for _ in 0..6 {
+            c.on_enqueue();
+        }
+        assert_eq!(c.evaluate(), 1);
+        for _ in 0..6 {
+            c.on_dequeue();
+        }
+        c.record_latency(2_000_000);
+        // Queue drained but the window still holds a hot sample.
+        assert_eq!(c.evaluate(), 1);
+    }
+
+    #[test]
+    fn latency_samples_age_out_of_window() {
+        let cfg =
+            AdmissionConfig { latency_window: Duration::from_millis(40), ..fast_cfg() };
+        let c = controller(cfg, 1024);
+        for _ in 0..50 {
+            c.record_latency(2_000_000);
+        }
+        assert_eq!(c.evaluate(), 1);
+        std::thread::sleep(Duration::from_millis(80));
+        // The hot samples aged out; recovery follows.
+        assert_eq!(c.recent_p99_us(), 0);
+        assert_eq!(c.evaluate(), 0);
+    }
+
+    #[test]
+    fn eval_interval_throttles_reevaluation() {
+        let cfg =
+            AdmissionConfig { eval_interval: Duration::from_secs(3600), ..fast_cfg() };
+        let c = controller(cfg, 10);
+        assert_eq!(c.evaluate(), 0);
+        for _ in 0..9 {
+            c.on_enqueue();
+        }
+        // Calls inside the interval return the cached level — the queue
+        // spike is not observed until the interval elapses.
+        assert_eq!(c.evaluate(), 0);
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn p99_tracks_the_tail() {
+        let c = controller(fast_cfg(), 1024);
+        for i in 0..200u64 {
+            c.record_latency(if i < 198 { 100 } else { 50_000 });
+        }
+        let p99 = c.recent_p99_us();
+        assert!(p99 >= 100, "p99 {p99}");
+        // 2/200 hot samples sit exactly at the 99th percentile edge.
+        assert!(p99 >= 100 && p99 <= 50_000);
+    }
+}

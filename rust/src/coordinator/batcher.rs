@@ -1,48 +1,141 @@
 //! Dynamic batcher over the hash path: PJRT artifact when available,
-//! fused pure-Rust matrix–matrix hashing otherwise.
+//! fused pure-Rust matrix–matrix hashing otherwise — hardened for
+//! overload and runtime faults.
 //!
 //! PJRT executables are shape-monomorphic (fixed batch) and their handles
 //! are not `Send`, so the design is:
 //!
-//! * a dedicated **worker thread** owns the hash backend — either the
-//!   `Runtime` with the compiled `alsh_query` executable, or (when no
+//! * a dedicated **worker thread** owns the primary hash backend — either
+//!   the `Runtime` with the compiled `alsh_query` executable, or (when no
 //!   artifacts are present / no XLA backend is built in) the engine's
-//!   [`crate::lsh::FusedHasher`], driven in batch matrix–matrix mode;
-//! * a **batcher thread** collects incoming queries until the batch fills
-//!   (`max_batch`) or a deadline passes (`max_wait`), ships one padded
-//!   batch to the worker, and fans results back out per query (CSR bucket
-//!   probe + exact rerank on the shared `MipsEngine`, through one reused
-//!   `QueryScratch` — the fan-out loop allocates only the response
-//!   vectors).
+//!   [`crate::lsh::FusedHasher`], driven in batch matrix–matrix mode. A
+//!   failing primary is retried with capped exponential backoff, then the
+//!   **circuit breaker** trips ([`BreakerState::Open`]) and the batch —
+//!   and subsequent batches — serve through the fused CPU path until a
+//!   cooldown elapses and a half-open probe succeeds;
+//! * a **batcher thread** pops admitted queries from the bounded queue,
+//!   collects a batch until it fills (`max_batch`), the wait deadline
+//!   passes (`max_wait`), or the first query's own deadline looms, then
+//!   ships one batch to the worker and fans results back out per query
+//!   (budgeted CSR probe + exact rerank on the shared `MipsEngine`,
+//!   through one reused `QueryScratch`). Expired or malformed requests
+//!   are triaged *before* dispatch, so a backend failure is always
+//!   genuine. If the worker dies mid-job (see [`FaultPlan::poison_at`])
+//!   the batcher serves the batch inline on the fused path — readers
+//!   never hang on a dead worker.
 //!
-//! Channels are std mpsc; per-request responses travel over one-shot
-//! channels (an mpsc used once).
+//! Admission is deadline-aware ([`BatcherHandle::query_deadline`]): every
+//! request carries a deadline, expired requests are rejected with a
+//! structured `deadline_exceeded` error instead of a stale answer, and
+//! the [`LoadController`] ladder decides per request whether it runs at
+//! full budget, at the degraded [`crate::index::ProbeBudget`], or is shed
+//! with `overloaded`. Channels are std mpsc; per-request responses travel
+//! over one-shot channels (an mpsc used once).
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::index::storage::Storage;
-use crate::index::{AnyIndex, MipsHashScheme, ScoredItem};
+use crate::index::{AnyIndex, MipsHashScheme, ProbeBudget, ScoredItem};
 use crate::runtime::{ArtifactMeta, Runtime};
 
+use super::admission::{AdmissionConfig, LoadController, ServeError};
 use super::engine::MipsEngine;
 use super::metrics::Metrics;
 
-/// Dynamic-batching policy.
+/// Dynamic-batching + robustness policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Max queries per dispatched batch (clamped to the artifact batch).
     pub max_batch: usize,
     /// Max time the first query in a batch waits for company.
     pub max_wait: Duration,
-    /// Depth of the ingress queue (backpressure bound).
+    /// Depth of the bounded admission queue (backpressure bound; a full
+    /// queue sheds with a structured `overloaded` error).
     pub queue_depth: usize,
+    /// Deadline/ladder configuration (see [`AdmissionConfig`]).
+    pub admission: AdmissionConfig,
+    /// Primary-hash retries before the circuit breaker trips.
+    pub hash_retries: usize,
+    /// Initial retry backoff; doubles per retry, capped at 8×.
+    pub retry_backoff: Duration,
+    /// How long the breaker stays open before a half-open re-probe.
+    pub breaker_cooldown: Duration,
+    /// Test-only fault injection (None in production).
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_wait: Duration::from_millis(2), queue_depth: 1024 }
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            admission: AdmissionConfig::default(),
+            hash_retries: 2,
+            retry_backoff: Duration::from_micros(500),
+            breaker_cooldown: Duration::from_millis(250),
+            fault_plan: None,
+        }
+    }
+}
+
+/// Test-only fault injection, keyed by the worker's batch sequence
+/// number. `fails_at` batches make the primary hash attempt error (so
+/// retries, the breaker, and the fused fallback are exercised on real
+/// plumbing); `delay_for` batches sleep first (latency spikes);
+/// `poison_at` kills the worker thread mid-job without a reply (the
+/// batcher must detect the drop and serve inline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// First batch seq whose primary hash attempt fails…
+    pub fail_from: usize,
+    /// …up to (exclusive) this one. `usize::MAX` = permanent.
+    pub fail_until: usize,
+    /// First batch seq delayed by `delay`…
+    pub delay_from: usize,
+    /// …up to (exclusive) this one.
+    pub delay_until: usize,
+    /// Injected latency per delayed batch.
+    pub delay: Duration,
+    /// Batch seq at which the worker thread exits without replying.
+    pub poison_at: Option<usize>,
+}
+
+impl FaultPlan {
+    fn fails_at(&self, seq: usize) -> bool {
+        seq >= self.fail_from && seq < self.fail_until
+    }
+
+    fn delay_for(&self, seq: usize) -> Option<Duration> {
+        (seq >= self.delay_from && seq < self.delay_until && !self.delay.is_zero())
+            .then_some(self.delay)
+    }
+}
+
+/// Circuit-breaker state over the primary hash backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Primary path healthy; batches hash through it.
+    Closed,
+    /// Primary path failed `hash_retries + 1` times in a row (or the
+    /// worker died): batches serve via the fused CPU path until the
+    /// cooldown elapses.
+    Open,
+    /// Cooldown elapsed: the next batch probes the primary path; success
+    /// re-closes the breaker, failure re-opens it.
+    HalfOpen,
+}
+
+impl BreakerState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => BreakerState::Closed,
+            1 => BreakerState::Open,
+            _ => BreakerState::HalfOpen,
+        }
     }
 }
 
@@ -54,7 +147,23 @@ struct HashJob {
 struct QueryRequest {
     vector: Vec<f32>,
     top_k: usize,
-    resp: Sender<Result<Vec<ScoredItem>, String>>,
+    /// Hard completion deadline; past it the request errors, never
+    /// serves a stale answer.
+    deadline: Instant,
+    /// Admission time, for end-to-end latency (the ladder's p99 signal).
+    enqueued: Instant,
+    /// Probe budget assigned at admission (full or the degraded budget).
+    budget: ProbeBudget,
+    degraded: bool,
+    resp: Sender<Result<QueryReply, ServeError>>,
+}
+
+/// A served query: the top-k hits plus whether the query ran under the
+/// degraded budget (surfaced to clients as `degraded: true`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryReply {
+    pub hits: Vec<ScoredItem>,
+    pub degraded: bool,
 }
 
 enum Msg {
@@ -76,18 +185,87 @@ enum HashBackend {
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: SyncSender<Msg>,
+    controller: Arc<LoadController>,
+    metrics: Arc<Metrics>,
+    breaker: Arc<AtomicU8>,
+    degraded_budget: ProbeBudget,
+    default_deadline: Duration,
 }
 
 impl BatcherHandle {
-    /// Submit one MIPS query; blocks until its batch is served.
+    /// Submit one MIPS query with the configured default deadline;
+    /// blocks until its batch is served. Compatibility wrapper over
+    /// [`BatcherHandle::query_deadline`].
     pub fn query(&self, vector: Vec<f32>, top_k: usize) -> crate::Result<Vec<ScoredItem>> {
-        let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Query(QueryRequest { vector, top_k, resp }))
-            .map_err(|_| anyhow::anyhow!("batcher is gone"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("batcher dropped the request"))?
+        self.query_deadline(vector, top_k, None)
+            .map(|r| r.hits)
             .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Submit one MIPS query under a deadline (None = the configured
+    /// default). Admission is where the ladder bites: already-expired
+    /// requests get `deadline_exceeded`, shed-level load gets
+    /// `overloaded` (as does a full queue), and degraded-level load runs
+    /// under the reduced probe budget with `degraded: true` in the
+    /// reply.
+    pub fn query_deadline(
+        &self,
+        vector: Vec<f32>,
+        top_k: usize,
+        deadline: Option<Instant>,
+    ) -> Result<QueryReply, ServeError> {
+        let now = Instant::now();
+        let deadline = deadline.unwrap_or(now + self.default_deadline);
+        if deadline <= now {
+            self.metrics.record_deadline_exceeded();
+            return Err(ServeError::DeadlineExceeded(
+                "deadline expired before admission".into(),
+            ));
+        }
+        let level = self.controller.evaluate();
+        if level >= 2 {
+            self.metrics.record_shed();
+            return Err(ServeError::Overloaded("server is shedding load".into()));
+        }
+        let (budget, degraded) = if level == 1 {
+            (self.degraded_budget, true)
+        } else {
+            (ProbeBudget::full(), false)
+        };
+        let (resp, rx) = mpsc::channel();
+        let req =
+            QueryRequest { vector, top_k, deadline, enqueued: now, budget, degraded, resp };
+        match self.tx.try_send(Msg::Query(req)) {
+            Ok(()) => self.controller.on_enqueue(),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_shed();
+                return Err(ServeError::Overloaded("admission queue is full".into()));
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(ServeError::Internal("batcher is gone".into()));
+            }
+        }
+        rx.recv().map_err(|_| ServeError::Internal("batcher dropped the request".into()))?
+    }
+
+    /// The shared ladder state (level, recent p99).
+    pub fn controller(&self) -> &LoadController {
+        &self.controller
+    }
+
+    /// Current ladder level without re-evaluating.
+    pub fn level(&self) -> u8 {
+        self.controller.level()
+    }
+
+    /// Current circuit-breaker state.
+    pub fn breaker_state(&self) -> BreakerState {
+        BreakerState::from_u8(self.breaker.load(Ordering::Relaxed))
+    }
+
+    /// The probe budget degraded-level queries run under.
+    pub fn degraded_budget(&self) -> ProbeBudget {
+        self.degraded_budget
     }
 }
 
@@ -103,7 +281,7 @@ pub struct PjrtBatcher {
 /// over the stacked `[L·K × D']` matrix (shared by both index kinds —
 /// the banded index hashes queries with the same fused family set as the
 /// flat one, whatever the scheme). The scratch buffers are owned by the
-/// worker loop.
+/// calling loop.
 fn fused_hash_batch<S: Storage>(
     index: &AnyIndex<S>,
     rows: &[Vec<f32>],
@@ -128,6 +306,26 @@ fn fused_hash_batch<S: Storage>(
     }
     hasher.hash_batch_into(xs, rows.len(), &mut codes[..need]);
     Ok((0..rows.len()).map(|i| codes[i * nc..(i + 1) * nc].to_vec()).collect())
+}
+
+/// One attempt at the primary hash path: PJRT when loaded, the fused CPU
+/// kernel otherwise. Fault injection fails the attempt *before* it runs,
+/// so injected failures exercise exactly the retry/breaker plumbing a
+/// real backend failure would.
+fn primary_hash_once<S: Storage>(
+    pjrt: &mut Option<(Runtime, ArtifactMeta, Vec<f32>, Vec<f32>)>,
+    index: &AnyIndex<S>,
+    rows: &[Vec<f32>],
+    injected: bool,
+    qx: &mut Vec<f32>,
+    xs: &mut Vec<f32>,
+    codes: &mut Vec<i32>,
+) -> crate::Result<Vec<Vec<i32>>> {
+    anyhow::ensure!(!injected, "injected hash failure (fault plan)");
+    match pjrt {
+        Some((runtime, meta, a_dk, b)) => runtime.run_hash(meta, rows, a_dk, b),
+        None => fused_hash_batch(index, rows, qx, xs, codes),
+    }
 }
 
 impl PjrtBatcher {
@@ -198,65 +396,187 @@ impl PjrtBatcher {
             HashBackend::Fused => cfg.max_batch.max(1),
         };
 
-        // Worker thread: owns the hash backend (PJRT handles are not Send,
-        // so the runtime is re-created on this thread).
+        let metrics = engine.metrics();
+        let controller = Arc::new(LoadController::new(
+            cfg.admission,
+            cfg.queue_depth,
+            Arc::clone(&metrics),
+        ));
+        let breaker = Arc::new(AtomicU8::new(0)); // Closed
+
+        // Degraded budget: a fraction of the tables (and, for banded
+        // indexes, of the norm bands — the smallest-norm bands are
+        // dropped first) plus a rerank-pool cap. n_probes stays 1: the
+        // serving path is single-probe today, so the degraded knobs are
+        // the ones that cut real work.
+        let frac = cfg.admission.degraded_table_frac;
+        let nb = engine.index().n_bands();
+        let degraded_budget = ProbeBudget {
+            n_probes: 1,
+            max_tables: ((params.n_tables as f64 * frac).ceil() as usize)
+                .clamp(1, params.n_tables),
+            max_bands: ((nb as f64 * frac).ceil() as usize).clamp(1, nb),
+            max_rerank: cfg.admission.degraded_rerank_cap.max(1),
+        };
+
+        // Worker thread: owns the primary hash backend (PJRT handles are
+        // not Send, so the runtime is re-created on this thread), the
+        // retry/backoff loop, and the breaker transitions.
         let (job_tx, job_rx) = mpsc::channel::<HashJob>();
         let worker_dir = dir.clone();
         let worker_engine = Arc::clone(&engine);
+        let worker_breaker = Arc::clone(&breaker);
+        let worker_metrics = Arc::clone(&metrics);
+        let plan = cfg.fault_plan;
+        let retries = cfg.hash_retries;
+        let retry_backoff = cfg.retry_backoff.max(Duration::from_micros(1));
+        let cooldown = cfg.breaker_cooldown;
         let worker_thread = std::thread::Builder::new()
             .name("hash-worker".into())
-            .spawn(move || match backend {
-                HashBackend::Pjrt { meta, a_dk, b } => {
-                    let mut runtime = match Runtime::load(&worker_dir) {
-                        Ok(r) => r,
+            .spawn(move || {
+                let mut pjrt = match backend {
+                    HashBackend::Pjrt { meta, a_dk, b } => match Runtime::load(&worker_dir) {
+                        Ok(r) => Some((r, meta, a_dk, b)),
                         Err(e) => {
-                            crate::log_error!("pjrt worker failed to start: {e:#}");
-                            while let Ok(job) = job_rx.recv() {
-                                let _ =
-                                    job.resp.send(Err(anyhow::anyhow!("runtime load failed")));
+                            // Load failure is not a runtime fault: the
+                            // fused path simply becomes the primary and
+                            // the breaker stays closed over it.
+                            crate::log_error!(
+                                "pjrt worker failed to start ({e:#}); fused CPU hashing is the primary path"
+                            );
+                            None
+                        }
+                    },
+                    HashBackend::Fused => None,
+                };
+                let index = worker_engine.index();
+                let (mut qx, mut xs, mut codes) = (Vec::new(), Vec::new(), Vec::new());
+                let mut seq: usize = 0;
+                let mut reopen_at = Instant::now();
+                while let Ok(job) = job_rx.recv() {
+                    let s = seq;
+                    seq += 1;
+                    if let Some(p) = plan {
+                        if p.poison_at == Some(s) {
+                            crate::log_warn!("fault plan: poisoning hash worker at batch {s}");
+                            return; // job unanswered; the batcher serves it inline
+                        }
+                        if let Some(d) = p.delay_for(s) {
+                            std::thread::sleep(d);
+                        }
+                    }
+                    let injected = plan.map_or(false, |p| p.fails_at(s));
+                    let state = BreakerState::from_u8(worker_breaker.load(Ordering::Relaxed));
+                    let attempt_primary = match state {
+                        BreakerState::Closed => true,
+                        BreakerState::Open | BreakerState::HalfOpen => {
+                            if Instant::now() >= reopen_at {
+                                worker_breaker
+                                    .store(BreakerState::HalfOpen as u8, Ordering::Relaxed);
+                                true
+                            } else {
+                                false
                             }
-                            return;
                         }
                     };
-                    while let Ok(job) = job_rx.recv() {
-                        let res = runtime.run_hash(&meta, &job.rows, &a_dk, &b);
-                        let _ = job.resp.send(res);
-                    }
-                }
-                HashBackend::Fused => {
-                    let index = worker_engine.index();
-                    let mut qx = Vec::new();
-                    let mut xs = Vec::new();
-                    let mut codes = Vec::new();
-                    while let Ok(job) = job_rx.recv() {
-                        let res =
-                            fused_hash_batch(index, &job.rows, &mut qx, &mut xs, &mut codes);
-                        let _ = job.resp.send(res);
-                    }
+                    let res = if attempt_primary {
+                        let mut backoff = retry_backoff;
+                        let mut out = None;
+                        let mut last_err = None;
+                        for attempt in 0..=retries {
+                            match primary_hash_once(
+                                &mut pjrt, index, &job.rows, injected, &mut qx, &mut xs,
+                                &mut codes,
+                            ) {
+                                Ok(rows) => {
+                                    out = Some(rows);
+                                    break;
+                                }
+                                Err(e) => {
+                                    last_err = Some(e);
+                                    if attempt < retries {
+                                        std::thread::sleep(backoff);
+                                        backoff = (backoff * 2).min(retry_backoff * 8);
+                                    }
+                                }
+                            }
+                        }
+                        match out {
+                            Some(rows) => {
+                                if state != BreakerState::Closed {
+                                    crate::log_info!(
+                                        "hash breaker re-closed after successful probe"
+                                    );
+                                }
+                                worker_breaker
+                                    .store(BreakerState::Closed as u8, Ordering::Relaxed);
+                                Ok(rows)
+                            }
+                            None => {
+                                crate::log_warn!(
+                                    "primary hash path failed {} times ({:#}); breaker open, serving via fused CPU path",
+                                    retries + 1,
+                                    last_err.as_ref().expect("failure implies an error")
+                                );
+                                worker_breaker
+                                    .store(BreakerState::Open as u8, Ordering::Relaxed);
+                                reopen_at = Instant::now() + cooldown;
+                                worker_metrics.record_pjrt_fallback();
+                                fused_hash_batch(index, &job.rows, &mut qx, &mut xs, &mut codes)
+                            }
+                        }
+                    } else {
+                        worker_metrics.record_pjrt_fallback();
+                        fused_hash_batch(index, &job.rows, &mut qx, &mut xs, &mut codes)
+                    };
+                    let _ = job.resp.send(res);
                 }
             })
             .expect("spawn hash worker");
 
-        // Batcher thread: dynamic batching + fan-out.
+        // Batcher thread: dynamic batching + triage + fan-out.
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
-        let metrics = engine.metrics();
+        let loop_controller = Arc::clone(&controller);
+        let loop_breaker = Arc::clone(&breaker);
+        let loop_metrics = Arc::clone(&metrics);
+        let default_deadline = cfg.admission.default_deadline;
         let batcher_thread = std::thread::Builder::new()
             .name("alsh-batcher".into())
             .spawn(move || {
-                Self::batch_loop(engine, metrics, rx, job_tx, max_batch, cfg.max_wait, lk)
+                Self::batch_loop(
+                    engine,
+                    loop_metrics,
+                    loop_controller,
+                    loop_breaker,
+                    rx,
+                    job_tx,
+                    max_batch,
+                    cfg.max_wait,
+                    lk,
+                )
             })
             .expect("spawn batcher");
 
         Ok(Self {
-            handle: Some(BatcherHandle { tx }),
+            handle: Some(BatcherHandle {
+                tx,
+                controller,
+                metrics,
+                breaker,
+                degraded_budget,
+                default_deadline,
+            }),
             batcher_thread: Some(batcher_thread),
             worker_thread: Some(worker_thread),
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn batch_loop<S: Storage>(
         engine: Arc<MipsEngine<S>>,
         metrics: Arc<Metrics>,
+        controller: Arc<LoadController>,
+        breaker: Arc<AtomicU8>,
         rx: Receiver<Msg>,
         job_tx: Sender<HashJob>,
         max_batch: usize,
@@ -264,20 +584,29 @@ impl PjrtBatcher {
         lk: usize,
     ) {
         // One scratch for the whole loop: probes + reranks are
-        // allocation-free at steady state.
+        // allocation-free at steady state. The f-prefixed buffers back
+        // the inline fused fallback (worker-death path only).
         let mut scratch = engine.index().scratch();
+        let dim = engine.index().dim();
+        let (mut fqx, mut fxs, mut fcodes) = (Vec::new(), Vec::new(), Vec::new());
         'outer: while let Ok(first) = rx.recv() {
             let Msg::Query(first) = first else { break };
+            controller.on_dequeue();
             let mut reqs = vec![first];
-            let deadline = Instant::now() + max_wait;
+            // Close the batch at max_wait, or earlier if the first
+            // query's deadline would otherwise expire while waiting.
+            let close = (Instant::now() + max_wait).min(reqs[0].deadline);
             let mut stop_after = false;
             while reqs.len() < max_batch {
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= close {
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(Msg::Query(r)) => reqs.push(r),
+                match rx.recv_timeout(close - now) {
+                    Ok(Msg::Query(r)) => {
+                        controller.on_dequeue();
+                        reqs.push(r);
+                    }
                     Ok(Msg::Shutdown) => {
                         stop_after = true;
                         break;
@@ -286,41 +615,88 @@ impl PjrtBatcher {
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            metrics.record_batch(reqs.len());
-            let rows: Vec<Vec<f32>> = reqs.iter().map(|r| r.vector.clone()).collect();
-            let (resp, hash_rx) = mpsc::channel();
-            if job_tx.send(HashJob { rows, resp }).is_err() {
-                metrics.record_error();
-                for req in reqs {
-                    let _ = req.resp.send(Err("hash worker is gone".into()));
+            // Pre-dispatch triage: expired deadlines and wrong-dim
+            // vectors never reach the hash backend, so a backend failure
+            // is always genuine (the breaker never trips on a client
+            // mistake).
+            let mut live: Vec<QueryRequest> = Vec::with_capacity(reqs.len());
+            let now = Instant::now();
+            for req in reqs {
+                if now >= req.deadline {
+                    metrics.record_deadline_exceeded();
+                    let _ = req.resp.send(Err(ServeError::DeadlineExceeded(
+                        "deadline expired while queued".into(),
+                    )));
+                } else if req.vector.len() != dim {
+                    metrics.record_error();
+                    let _ = req.resp.send(Err(ServeError::InvalidArgument(format!(
+                        "vector dim {} != index dim {dim}",
+                        req.vector.len()
+                    ))));
+                } else {
+                    live.push(req);
+                }
+            }
+            if live.is_empty() {
+                if stop_after {
+                    break 'outer;
                 }
                 continue;
             }
-            match hash_rx.recv() {
-                Ok(Ok(code_rows)) => {
-                    for (req, codes) in reqs.into_iter().zip(code_rows) {
-                        let out = engine
-                            .query_with_codes_into(
+            metrics.record_batch(live.len());
+            let rows: Vec<Vec<f32>> = live.iter().map(|r| r.vector.clone()).collect();
+            let (resp, hash_rx) = mpsc::channel();
+            let worker_result = if job_tx.send(HashJob { rows: rows.clone(), resp }).is_err() {
+                None
+            } else {
+                hash_rx.recv().ok()
+            };
+            let hashed = match worker_result {
+                Some(res) => res,
+                None => {
+                    // Worker gone or poisoned mid-job: the reply channel
+                    // dropped without a result. Serve this batch — and
+                    // signal the breaker open — inline on the fused CPU
+                    // path, so readers never hang on a dead worker.
+                    breaker.store(BreakerState::Open as u8, Ordering::Relaxed);
+                    metrics.record_pjrt_fallback();
+                    crate::log_warn!(
+                        "hash worker unavailable; serving batch inline via fused CPU path"
+                    );
+                    fused_hash_batch(engine.index(), &rows, &mut fqx, &mut fxs, &mut fcodes)
+                }
+            };
+            match hashed {
+                Ok(code_rows) => {
+                    for (req, codes) in live.into_iter().zip(code_rows) {
+                        if Instant::now() >= req.deadline {
+                            metrics.record_deadline_exceeded();
+                            let _ = req.resp.send(Err(ServeError::DeadlineExceeded(
+                                "deadline expired during batch".into(),
+                            )));
+                            continue;
+                        }
+                        let hits = engine
+                            .query_with_codes_budgeted_into(
                                 &req.vector,
                                 &codes[..lk],
                                 req.top_k,
+                                req.budget,
                                 &mut scratch,
                             )
                             .to_vec();
-                        let _ = req.resp.send(Ok(out));
+                        if req.degraded {
+                            metrics.record_degraded();
+                        }
+                        controller.record_latency(req.enqueued.elapsed().as_micros() as u64);
+                        let _ = req.resp.send(Ok(QueryReply { hits, degraded: req.degraded }));
                     }
                 }
-                Ok(Err(e)) => {
+                Err(e) => {
                     metrics.record_error();
                     let msg = format!("hash failed: {e:#}");
-                    for req in reqs {
-                        let _ = req.resp.send(Err(msg.clone()));
-                    }
-                }
-                Err(_) => {
-                    metrics.record_error();
-                    for req in reqs {
-                        let _ = req.resp.send(Err("hash worker dropped the job".into()));
+                    for req in live {
+                        let _ = req.resp.send(Err(ServeError::Internal(msg.clone())));
                     }
                 }
             }
@@ -336,7 +712,7 @@ impl PjrtBatcher {
 
     /// Graceful shutdown: stop the batch loop (even if client handles are
     /// still alive), then join both threads. In-flight queries finish;
-    /// later `query()` calls fail with "batcher is gone".
+    /// later `query()` calls fail with a structured internal error.
     pub fn shutdown(mut self) {
         if let Some(h) = self.handle.take() {
             let _ = h.tx.send(Msg::Shutdown);
@@ -467,5 +843,53 @@ mod tests {
         assert_eq!(snap.queries, 80);
         assert!(snap.batches <= 80, "batches recorded");
         batcher.shutdown();
+    }
+
+    /// An already-expired deadline is rejected at admission with the
+    /// structured error, before any work happens.
+    #[test]
+    fn expired_deadline_rejected_at_admission() {
+        let its = items(100, 8, 8);
+        let engine = Arc::new(MipsEngine::new(&its, AlshParams::default(), 9));
+        let batcher = PjrtBatcher::spawn(
+            Arc::clone(&engine),
+            "definitely-not-an-artifacts-dir",
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        let handle = batcher.handle();
+        let past = Instant::now() - Duration::from_millis(1);
+        let err = handle
+            .query_deadline(vec![0.1f32; 8], 5, Some(past))
+            .expect_err("expired deadline must be rejected");
+        assert_eq!(err.code(), "deadline_exceeded");
+        assert_eq!(engine.metrics().snapshot().deadline_exceeded, 1);
+        // Healthy defaults: the breaker is closed, the ladder at 0, and
+        // a normal query still flows.
+        assert_eq!(handle.breaker_state(), BreakerState::Closed);
+        assert_eq!(handle.level(), 0);
+        let reply = handle.query_deadline(vec![0.1f32; 8], 5, None).expect("healthy query");
+        assert!(!reply.degraded);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_windows() {
+        let p = FaultPlan {
+            fail_from: 2,
+            fail_until: 4,
+            delay_from: 1,
+            delay_until: 2,
+            delay: Duration::from_millis(5),
+            poison_at: Some(7),
+        };
+        assert!(!p.fails_at(1) && p.fails_at(2) && p.fails_at(3) && !p.fails_at(4));
+        assert_eq!(p.delay_for(1), Some(Duration::from_millis(5)));
+        assert_eq!(p.delay_for(2), None);
+        // Default plan injects nothing.
+        let d = FaultPlan::default();
+        assert!(!d.fails_at(0));
+        assert_eq!(d.delay_for(0), None);
+        assert_eq!(d.poison_at, None);
     }
 }

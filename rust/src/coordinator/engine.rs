@@ -7,7 +7,7 @@ use crate::index::scratch::with_thread_scratch;
 use crate::index::storage::{Mapped, Owned, Storage};
 use crate::index::{
     AlshIndex, AlshParams, AnyIndex, BandedBuildStats, BandedParams, BuildOpts, BuildStats,
-    NormRangeIndex, QueryScratch, ScoredItem,
+    NormRangeIndex, ProbeBudget, QueryScratch, ScoredItem,
 };
 
 use super::metrics::Metrics;
@@ -143,10 +143,52 @@ impl<S: Storage> MipsEngine<S> {
         out
     }
 
+    /// Budgeted query path (degraded serving): same shape as
+    /// [`MipsEngine::query_into`] with the probe constrained by `budget`.
+    /// Bit-identical at [`ProbeBudget::full`].
+    pub fn query_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let t0 = Instant::now();
+        self.index.candidates_budgeted_into(query, budget, s);
+        let n_cands = s.candidates().len();
+        let out = self.index.rerank_into(query, top_k, s);
+        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+        out
+    }
+
+    /// Budgeted code-fed re-entry (the degraded batcher path): the hash
+    /// already happened batch-wide, the probe honours `budget`.
+    pub fn query_with_codes_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        codes: &[i32],
+        top_k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let t0 = Instant::now();
+        self.index.candidates_from_codes_budgeted_into(codes, budget, s);
+        let n_cands = s.candidates().len();
+        let out = self.index.rerank_into(query, top_k, s);
+        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+        out
+    }
+
     /// Allocating convenience wrapper over [`MipsEngine::query_into`]
     /// (thread-local scratch).
     pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
         with_thread_scratch(|s| self.query_into(query, top_k, s).to_vec())
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`MipsEngine::query_budgeted_into`].
+    pub fn query_budgeted(&self, query: &[f32], top_k: usize, budget: ProbeBudget) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_budgeted_into(query, top_k, budget, s).to_vec())
     }
 
     /// Allocating convenience wrapper over

@@ -1,9 +1,18 @@
 //! Serving metrics: counters + a log-bucketed latency histogram, all
 //! lock-free atomics so the hot path never blocks on observability.
+//!
+//! Besides the query/batch/error counters the serving tier records its
+//! overload behaviour: `shed` (rejected at admission), `deadline_exceeded`
+//! (expired before a result), `degraded_queries` (served under a reduced
+//! probe budget), `pjrt_fallbacks` (batches the circuit breaker routed to
+//! the fused CPU path), and a live `queue_depth` gauge the
+//! [`super::admission::LoadController`] reads as its fill signal.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Number of log2 latency buckets: bucket i covers [2^i, 2^(i+1)) µs.
+/// Number of log2 latency buckets. Bucket 0 covers `[0, 2)` µs (the
+/// sub-microsecond samples — explicitly, not via clamping); bucket
+/// `i ≥ 1` covers `[2^i, 2^(i+1))` µs.
 const N_BUCKETS: usize = 24;
 
 /// Process-wide serving metrics.
@@ -14,6 +23,17 @@ pub struct Metrics {
     pub batched_queries: AtomicU64,
     pub candidates: AtomicU64,
     pub errors: AtomicU64,
+    /// Queries rejected at admission (queue full or ladder at shed).
+    pub shed: AtomicU64,
+    /// Queries whose deadline expired before a result was produced.
+    pub deadline_exceeded: AtomicU64,
+    /// Queries served under a reduced probe budget.
+    pub degraded_queries: AtomicU64,
+    /// Batches served by the fused CPU path because the PJRT backend
+    /// failed (breaker open or in-flight failure).
+    pub pjrt_fallbacks: AtomicU64,
+    /// Live admission-queue depth (gauge, not a counter).
+    queue_depth: AtomicU64,
     latency_us: [AtomicU64; N_BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -29,7 +49,13 @@ impl Metrics {
         self.queries.fetch_add(1, Ordering::Relaxed);
         self.candidates.fetch_add(n_candidates as u64, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
-        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(N_BUCKETS - 1);
+        // `latency_us < 2` (including 0) lands in bucket 0 explicitly;
+        // everything else in its log2 bucket, clamped to the last one.
+        let bucket = if latency_us < 2 {
+            0
+        } else {
+            (63 - latency_us.leading_zeros() as usize).min(N_BUCKETS - 1)
+        };
         self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
@@ -43,6 +69,44 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A query was rejected at admission (shed).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A query's deadline expired before a result was produced.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A query was served under a reduced probe budget.
+    pub fn record_degraded(&self) {
+        self.degraded_queries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch was routed to the fused CPU path after PJRT failure.
+    pub fn record_pjrt_fallback(&self) {
+        self.pjrt_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A query entered the admission queue.
+    pub fn record_queue_push(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A query left the admission queue. Saturating: a pop without a
+    /// matched push (e.g. drained during shutdown) never wraps the gauge.
+    pub fn record_queue_pop(&self) {
+        let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
+    /// Live admission-queue depth.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
     /// Consistent-enough snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
@@ -54,6 +118,11 @@ impl Metrics {
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
             candidates: self.candidates.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            degraded_queries: self.degraded_queries.load(Ordering::Relaxed),
+            pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
             mean_latency_us: if queries > 0 {
                 self.latency_sum_us.load(Ordering::Relaxed) as f64 / queries as f64
             } else {
@@ -75,7 +144,8 @@ fn percentile(hist: &[u64], p: f64) -> u64 {
     for (i, &c) in hist.iter().enumerate() {
         seen += c;
         if seen >= target {
-            return 1u64 << i; // lower bound of the bucket
+            // Lower bound of the bucket; bucket 0 is [0, 2) µs.
+            return if i == 0 { 0 } else { 1u64 << i };
         }
     }
     1u64 << (hist.len() - 1)
@@ -89,6 +159,11 @@ pub struct MetricsSnapshot {
     pub batched_queries: u64,
     pub candidates: u64,
     pub errors: u64,
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub degraded_queries: u64,
+    pub pjrt_fallbacks: u64,
+    pub queue_depth: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -145,5 +220,48 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.p50_latency_us, 0);
         assert_eq!(s.mean_latency_us, 0.0);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn zero_latency_buckets_explicitly() {
+        let m = Metrics::new();
+        // All sub-2µs samples — including the literal 0 — land in bucket
+        // 0, so the p50 reports the bucket's true lower bound of 0.
+        m.record_query(0, 0);
+        m.record_query(1, 0);
+        let s = m.snapshot();
+        assert_eq!(s.queries, 2);
+        assert_eq!(s.p50_latency_us, 0);
+        assert_eq!(s.p99_latency_us, 0);
+        // 2µs is the first sample outside bucket 0.
+        m.record_query(2, 0);
+        m.record_query(2, 0);
+        m.record_query(2, 0);
+        assert_eq!(m.snapshot().p99_latency_us, 2);
+    }
+
+    #[test]
+    fn robustness_counters_and_gauge() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_deadline_exceeded();
+        m.record_degraded();
+        m.record_pjrt_fallback();
+        m.record_queue_push();
+        m.record_queue_push();
+        m.record_queue_pop();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.degraded_queries, 1);
+        assert_eq!(s.pjrt_fallbacks, 1);
+        assert_eq!(s.queue_depth, 1);
+        // The gauge saturates at zero instead of wrapping.
+        m.record_queue_pop();
+        m.record_queue_pop();
+        assert_eq!(m.queue_depth(), 0);
     }
 }

@@ -1,29 +1,62 @@
-//! Layer-3 coordinator: the MIPS serving system.
+//! Layer-3 coordinator: the overload-robust MIPS serving system.
 //!
 //! Shape (vLLM-router-like, scaled to this paper):
 //!
 //! ```text
-//!  TCP/JSON clients ──► server ──► dynamic batcher ──► PJRT worker thread
-//!                                        │                (hash artifact)
-//!                                        ▼
-//!                              per-query bucket probes ──► exact rerank
-//!                                        │
+//!  TCP/JSON clients ──► server ──► admission ──► dynamic batcher ──► PJRT worker
+//!                         │        (deadline,         │ retry/breaker │ thread
+//!                         │         ladder,           ▼               ▼
+//!                         │         bounded   per-query budgeted   fused CPU
+//!                         │         queue)    probes + rerank      fallback
+//!                         ▼
 //!  sharded corpora:  router ──► shard engines ──► scatter/gather merge
 //! ```
 //!
-//! Python never appears here: hashing runs through the AOT artifacts via
-//! PJRT on a dedicated worker thread (PJRT handles are not `Send`), and
-//! table probing + reranking are pure Rust. Concurrency is std threads +
-//! channels (the offline build has no async runtime; see Cargo.toml).
+//! **Admission queue.** The batcher's queue is bounded
+//! ([`BatcherConfig::queue_depth`]); admission uses a non-blocking
+//! `try_send`, so a full queue rejects immediately with a structured
+//! `overloaded` error instead of building unbounded latency. Queue
+//! pushes/pops drive the [`Metrics`] depth gauge that the load
+//! controller reads as its fill signal.
+//!
+//! **Deadline semantics.** Every request carries a deadline — the
+//! client's `deadline_ms` or [`AdmissionConfig::default_deadline`].
+//! Expired requests are rejected with `deadline_exceeded` at three
+//! points: before admission, when popped from the queue (never hashed),
+//! and again at fan-out after the batch returns (never answered stale).
+//! A reply is therefore either on time or an explicit error — no stale
+//! answers.
+//!
+//! **Degradation ladder.** The [`LoadController`] maps measured queue
+//! fill and recent p99 onto three levels: 0 healthy (full probe budget),
+//! 1 degraded (reduced [`crate::index::ProbeBudget`] — fewer
+//! tables/bands and a rerank cap — with a declared recall floor,
+//! [`AdmissionConfig::recall_floor`]), 2 shed (reject with
+//! `overloaded`). Escalation is immediate; de-escalation steps one level
+//! at a time after a minimum dwell with recovered signals (hysteresis),
+//! so the ladder never flaps. Degraded replies are marked
+//! `degraded: true` — work is shed before requests are.
+//!
+//! **Circuit breaker.** PJRT batch failures retry with capped backoff;
+//! persistent failure trips a breaker (`Closed → Open`) and batches are
+//! served by the bit-identical fused CPU hash path instead. After a
+//! cooldown the breaker half-opens and re-probes the backend with one
+//! live batch (`Open → HalfOpen → Closed` on success). A test-only
+//! [`FaultPlan`] injects latency spikes, batch failures, and poisoned
+//! workers to prove readers never hang through any of this.
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatcherConfig, BatcherHandle, PjrtBatcher};
+pub use admission::{AdmissionConfig, LoadController, ServeError};
+pub use batcher::{
+    BatcherConfig, BatcherHandle, BreakerState, FaultPlan, PjrtBatcher, QueryReply,
+};
 pub use engine::MipsEngine;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::ShardedRouter;
-pub use server::{serve, serve_on, ServeConfig};
+pub use server::{handle_request, serve, serve_on, ServeConfig};

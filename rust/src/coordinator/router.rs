@@ -4,7 +4,7 @@
 
 use crate::index::scratch::with_thread_scratch;
 use crate::index::storage::{Mapped, Owned, Storage};
-use crate::index::{AlshParams, BandedParams, QueryScratch, ScoredItem};
+use crate::index::{AlshParams, BandedParams, ProbeBudget, QueryScratch, ScoredItem};
 
 use super::engine::MipsEngine;
 
@@ -124,10 +124,24 @@ impl<S: Storage> ShardedRouter<S> {
         top_k: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
+        self.query_budgeted_into(query, top_k, ProbeBudget::full(), s)
+    }
+
+    /// [`ShardedRouter::query_into`] with every shard probing under
+    /// `budget` — the degraded serving path fans the same reduced budget
+    /// out to all shards. Bit-identical to the plain path at
+    /// [`ProbeBudget::full`].
+    pub fn query_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
         assert_eq!(query.len(), self.dim);
         s.merged.clear();
         for (engine, &off) in self.shards.iter().zip(&self.offsets) {
-            let n = engine.query_into(query, top_k, s).len();
+            let n = engine.query_budgeted_into(query, top_k, budget, s).len();
             for i in 0..n {
                 let hit = s.top[i];
                 s.merged.push(ScoredItem { id: hit.id + off, score: hit.score });
@@ -141,6 +155,17 @@ impl<S: Storage> ShardedRouter<S> {
     /// Allocating convenience wrapper over [`ShardedRouter::query_into`].
     pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
         with_thread_scratch(|s| self.query_into(query, top_k, s).to_vec())
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`ShardedRouter::query_budgeted_into`].
+    pub fn query_budgeted(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+    ) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_budgeted_into(query, top_k, budget, s).to_vec())
     }
 
     /// Total queries served across shards.

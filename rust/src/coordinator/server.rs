@@ -3,51 +3,90 @@
 //! Protocol (one JSON object per line):
 //!
 //! ```text
-//! → {"vector": [0.1, ...], "top_k": 10}
-//! ← {"ok": true, "items": [5, 2], "scores": [1.9, 1.2], "latency_us": 830}
+//! → {"vector": [0.1, ...], "top_k": 10, "deadline_ms": 250}
+//! ← {"ok": true, "items": [5, 2], "scores": [1.9, 1.2], "degraded": false, "latency_us": 830}
 //! → {"cmd": "metrics"}
 //! ← {"ok": true, "metrics": {...}}
 //! → {"cmd": "ping"}
 //! ← {"ok": true}
 //! ```
+//!
+//! Every failure is a structured `{"ok": false, "code": ..., "error": ...}`
+//! line — `invalid_argument` (malformed/non-finite vector, bad `top_k`,
+//! bad `deadline_ms`, oversized line), `deadline_exceeded`, `overloaded`,
+//! or `internal` — and never kills the connection: the offending line is
+//! consumed (oversized lines are discarded to the next newline) and the
+//! connection keeps serving. `ping` and `metrics` are answered inline on
+//! the connection thread, never through the batcher queue, so health
+//! checks stay responsive while queries are being shed.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::json::{num_arr, obj, Json};
 
-use super::batcher::BatcherHandle;
+use super::batcher::{BatcherHandle, BreakerState};
 use super::engine::MipsEngine;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub addr: String,
+    /// Longest accepted request line in bytes; longer lines get a
+    /// structured error and are discarded without killing the connection.
+    pub max_line_len: usize,
+    /// Largest accepted `top_k` (absurd values are client mistakes, and
+    /// each admitted `top_k` costs rerank heap work).
+    pub max_top_k: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7878".into() }
+        Self { addr: "127.0.0.1:7878".into(), max_line_len: 1 << 20, max_top_k: 1024 }
     }
 }
 
-fn err_response(msg: impl Into<String>) -> Json {
-    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+/// Clients may stretch their deadline only so far: anything above an
+/// hour is clamped (also keeps `Duration::from_secs_f64` panic-free).
+const MAX_DEADLINE_MS: f64 = 3_600_000.0;
+
+fn err_response(code: &str, msg: impl Into<String>) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::Str(code.into())),
+        ("error", Json::Str(msg.into())),
+    ])
 }
 
 /// Handle one JSON-lines request string. Pure function over the request
 /// text — directly unit/integration testable without sockets.
-pub fn handle_request(line: &str, handle: &BatcherHandle, engine: &Arc<MipsEngine>) -> Json {
+pub fn handle_request(
+    line: &str,
+    handle: &BatcherHandle,
+    engine: &Arc<MipsEngine>,
+    cfg: &ServeConfig,
+) -> Json {
+    if line.len() > cfg.max_line_len {
+        return err_response(
+            "invalid_argument",
+            format!("request line exceeds {} bytes", cfg.max_line_len),
+        );
+    }
     let req = match Json::parse(line) {
         Ok(r) => r,
-        Err(e) => return err_response(format!("bad request: {e}")),
+        Err(e) => return err_response("invalid_argument", format!("bad request: {e}")),
     };
     match req.get("cmd").and_then(Json::as_str) {
         Some("ping") => obj(vec![("ok", Json::Bool(true))]),
         Some("metrics") => {
             let s = engine.metrics().snapshot();
+            let breaker = match handle.breaker_state() {
+                BreakerState::Closed => "closed",
+                BreakerState::Open => "open",
+                BreakerState::HalfOpen => "half_open",
+            };
             obj(vec![
                 ("ok", Json::Bool(true)),
                 (
@@ -58,6 +97,13 @@ pub fn handle_request(line: &str, handle: &BatcherHandle, engine: &Arc<MipsEngin
                         ("batched_queries", Json::Num(s.batched_queries as f64)),
                         ("candidates", Json::Num(s.candidates as f64)),
                         ("errors", Json::Num(s.errors as f64)),
+                        ("shed", Json::Num(s.shed as f64)),
+                        ("deadline_exceeded", Json::Num(s.deadline_exceeded as f64)),
+                        ("degraded_queries", Json::Num(s.degraded_queries as f64)),
+                        ("pjrt_fallbacks", Json::Num(s.pjrt_fallbacks as f64)),
+                        ("queue_depth", Json::Num(s.queue_depth as f64)),
+                        ("load_level", Json::Num(handle.level() as f64)),
+                        ("breaker", Json::Str(breaker.into())),
                         ("mean_latency_us", Json::Num(s.mean_latency_us)),
                         ("p50_latency_us", Json::Num(s.p50_latency_us as f64)),
                         ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
@@ -66,65 +112,159 @@ pub fn handle_request(line: &str, handle: &BatcherHandle, engine: &Arc<MipsEngin
                 ),
             ])
         }
-        Some(other) => err_response(format!("unknown cmd {other:?}")),
+        Some(other) => err_response("invalid_argument", format!("unknown cmd {other:?}")),
         None => {
             let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
-                return err_response("missing or malformed vector");
+                return err_response("invalid_argument", "missing or malformed vector");
             };
-            if vector.len() != engine.index().dim() {
-                return err_response(format!(
-                    "vector dim {} != index dim {}",
-                    vector.len(),
-                    engine.index().dim()
-                ));
+            // JSON numbers can't spell NaN, but overflow (1e39 → f32 Inf,
+            // 1e999 → f64 inf) can still smuggle non-finite components in.
+            if vector.iter().any(|v| !v.is_finite()) {
+                return err_response(
+                    "invalid_argument",
+                    "vector contains non-finite components",
+                );
             }
-            let top_k = req.get("top_k").and_then(Json::as_usize).unwrap_or(10);
+            if vector.len() != engine.index().dim() {
+                return err_response(
+                    "invalid_argument",
+                    format!(
+                        "vector dim {} != index dim {}",
+                        vector.len(),
+                        engine.index().dim()
+                    ),
+                );
+            }
+            let top_k = match req.get("top_k") {
+                None => 10,
+                Some(v) => match v.as_usize() {
+                    Some(k) if (1..=cfg.max_top_k).contains(&k) => k,
+                    Some(0) => {
+                        return err_response("invalid_argument", "top_k must be >= 1")
+                    }
+                    Some(k) => {
+                        return err_response(
+                            "invalid_argument",
+                            format!("top_k {k} exceeds max {}", cfg.max_top_k),
+                        )
+                    }
+                    None => {
+                        return err_response(
+                            "invalid_argument",
+                            "top_k must be a positive integer",
+                        )
+                    }
+                },
+            };
+            let deadline = match req.get("deadline_ms") {
+                None => None,
+                Some(v) => match v.as_f64() {
+                    Some(ms) if ms.is_finite() && ms > 0.0 => {
+                        let ms = ms.min(MAX_DEADLINE_MS);
+                        Some(Instant::now() + Duration::from_secs_f64(ms / 1000.0))
+                    }
+                    _ => {
+                        return err_response(
+                            "invalid_argument",
+                            "deadline_ms must be a positive finite number of milliseconds",
+                        )
+                    }
+                },
+            };
             let t0 = Instant::now();
-            match handle.query(vector, top_k) {
-                Ok(hits) => {
-                    let ids: Vec<f64> = hits.iter().map(|h| h.id as f64).collect();
-                    let scores: Vec<f64> = hits.iter().map(|h| h.score as f64).collect();
+            match handle.query_deadline(vector, top_k, deadline) {
+                Ok(reply) => {
+                    let ids: Vec<f64> = reply.hits.iter().map(|h| h.id as f64).collect();
+                    let scores: Vec<f64> =
+                        reply.hits.iter().map(|h| h.score as f64).collect();
                     obj(vec![
                         ("ok", Json::Bool(true)),
                         ("items", num_arr(&ids)),
                         ("scores", num_arr(&scores)),
+                        ("degraded", Json::Bool(reply.degraded)),
                         (
                             "latency_us",
                             Json::Num(t0.elapsed().as_micros() as f64),
                         ),
                     ])
                 }
-                Err(e) => err_response(format!("{e:#}")),
+                Err(e) => err_response(e.code(), e.message()),
             }
         }
     }
+}
+
+/// Drop bytes until (and including) the next newline — the tail of an
+/// oversized request line. EOF ends the discard.
+fn discard_to_newline(reader: &mut BufReader<TcpStream>) -> std::io::Result<()> {
+    loop {
+        let (n, done) = {
+            let avail = reader.fill_buf()?;
+            if avail.is_empty() {
+                return Ok(());
+            }
+            match avail.iter().position(|&b| b == b'\n') {
+                Some(pos) => (pos + 1, true),
+                None => (avail.len(), false),
+            }
+        };
+        reader.consume(n);
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+fn write_json_line(writer: &mut TcpStream, resp: &Json) -> std::io::Result<()> {
+    let mut out = resp.to_string();
+    out.push('\n');
+    writer.write_all(out.as_bytes())
 }
 
 fn handle_conn(
     stream: TcpStream,
     handle: BatcherHandle,
     engine: Arc<MipsEngine>,
+    cfg: Arc<ServeConfig>,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let cap = cfg.max_line_len as u64;
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        // Bounded read: at most max_line_len + 1 bytes buffer per read,
+        // however long the client's line is.
+        let n = (&mut reader).take(cap + 1).read_until(b'\n', &mut buf)?;
+        if n == 0 {
+            return Ok(()); // EOF
+        }
+        if buf.last() != Some(&b'\n') && n as u64 > cap {
+            // Oversized line: structured error, discard the tail, keep
+            // the connection serving.
+            discard_to_newline(&mut reader)?;
+            let resp = err_response(
+                "invalid_argument",
+                format!("request line exceeds {} bytes", cfg.max_line_len),
+            );
+            write_json_line(&mut writer, &resp)?;
             continue;
         }
-        let resp = handle_request(&line, &handle, &engine);
-        let mut out = resp.to_string();
-        out.push('\n');
-        writer.write_all(out.as_bytes())?;
+        let text = String::from_utf8_lossy(&buf);
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let resp = handle_request(line, &handle, &engine, &cfg);
+        write_json_line(&mut writer, &resp)?;
     }
-    Ok(())
 }
 
 /// Bind `cfg.addr` and serve forever (thread per connection).
 pub fn serve(cfg: ServeConfig, handle: BatcherHandle, engine: Arc<MipsEngine>) -> crate::Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
     crate::log_info!("serving MIPS on {}", cfg.addr);
-    serve_on(listener, handle, engine)
+    serve_on(listener, handle, engine, cfg)
 }
 
 /// Accept loop over an existing listener (testable entry point).
@@ -132,14 +272,17 @@ pub fn serve_on(
     listener: TcpListener,
     handle: BatcherHandle,
     engine: Arc<MipsEngine>,
+    cfg: ServeConfig,
 ) -> crate::Result<()> {
+    let cfg = Arc::new(cfg);
     loop {
         let (stream, peer) = listener.accept()?;
         crate::log_debug!("connection from {peer}");
         let h = handle.clone();
         let e = Arc::clone(&engine);
+        let c = Arc::clone(&cfg);
         std::thread::spawn(move || {
-            if let Err(err) = handle_conn(stream, h, e) {
+            if let Err(err) = handle_conn(stream, h, e, c) {
                 crate::log_warn!("connection error: {err}");
             }
         });

@@ -8,6 +8,7 @@
 //! obscure, the match arms inline, and there are exactly two variants.
 
 use super::banded::NormRangeIndex;
+use super::budget::ProbeBudget;
 use super::core::{AlshIndex, AlshParams, ScoredItem};
 use super::frozen::TableStats;
 use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
@@ -166,6 +167,35 @@ impl<S: Storage> AnyIndex<S> {
         }
     }
 
+    /// Budgeted candidate retrieval (degraded serving; bit-identical to
+    /// the plain paths at [`ProbeBudget::full`]).
+    pub fn candidates_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        match self {
+            AnyIndex::Flat(i) => i.candidates_budgeted_into(query, budget, s),
+            AnyIndex::Banded(i) => i.candidates_budgeted_into(query, budget, s),
+        }
+    }
+
+    /// Budgeted variant of [`AnyIndex::candidates_from_codes_into`] (the
+    /// degraded batcher re-entry; `n_probes` is ignored — external codes
+    /// carry no confidence channel).
+    pub fn candidates_from_codes_budgeted_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        match self {
+            AnyIndex::Flat(i) => i.candidates_from_codes_budgeted_into(codes_flat, budget, s),
+            AnyIndex::Banded(i) => i.candidates_from_codes_budgeted_into(codes_flat, budget, s),
+        }
+    }
+
     /// Allocation-free exact rerank of `s.cands`.
     pub fn rerank_into<'s>(
         &self,
@@ -189,6 +219,21 @@ impl<S: Storage> AnyIndex<S> {
         match self {
             AnyIndex::Flat(i) => i.query_into(query, k, s),
             AnyIndex::Banded(i) => i.query_into(query, k, s),
+        }
+    }
+
+    /// Budgeted probe + exact rerank (degraded serving; bit-identical to
+    /// [`AnyIndex::query_into`] at full budget).
+    pub fn query_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        match self {
+            AnyIndex::Flat(i) => i.query_budgeted_into(query, k, budget, s),
+            AnyIndex::Banded(i) => i.query_budgeted_into(query, k, budget, s),
         }
     }
 
@@ -239,6 +284,11 @@ impl<S: Storage> AnyIndex<S> {
     /// Allocating convenience query (thread-local scratch).
     pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
         with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
+    }
+
+    /// See [`AnyIndex::query_budgeted_into`].
+    pub fn query_budgeted(&self, query: &[f32], k: usize, budget: ProbeBudget) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_budgeted_into(query, k, budget, s).to_vec())
     }
 
     /// Allocating convenience candidates (thread-local scratch).

@@ -73,6 +73,7 @@
 
 use crate::util::Rng;
 
+use super::budget::ProbeBudget;
 use super::build::{build_tables, run_bytes_estimate, BuildOpts, BuildStats};
 use super::core::{run_query_batch, AlshParams, ScoredItem};
 use super::frozen::{FrozenTable, TableStats};
@@ -580,6 +581,123 @@ impl<S: Storage> NormRangeIndex<S> {
         self.replay_codes(&mut sink, codes, None);
     }
 
+    /// Budgeted base-probe replay. At [`ProbeBudget::full`] this walks
+    /// bands ascending, all tables — bit-identical to
+    /// [`Self::replay_codes`]. A partial `max_bands` budget instead walks
+    /// descending from the **largest-norm** band (under MIPS the winners
+    /// concentrate there, so those bands buy the most recall per probe);
+    /// `max_tables` takes each band's first `nt` tables and `max_rerank`
+    /// stops probing between bands once the pool is full.
+    fn replay_codes_budgeted(&self, sink: &mut DedupSink<'_>, codes: &[i32], budget: ProbeBudget) {
+        let k = self.params.k_per_table;
+        let scheme = self.params.scheme;
+        let nb = self.bands.len();
+        let b_used = budget.bands(nb);
+        let nt = budget.tables(self.params.n_tables);
+        let cap = budget.max_rerank;
+        for j in 0..b_used {
+            let band = &self.bands[if b_used == nb { j } else { nb - 1 - j }];
+            for (t, table) in band.tables.iter().take(nt).enumerate() {
+                sink.extend_mapped(
+                    table.get_by_key(scheme.table_key(&codes[t * k..(t + 1) * k])),
+                    &band.ids,
+                );
+            }
+            if sink.len() >= cap {
+                break;
+            }
+        }
+    }
+
+    /// Budgeted multi-probe replay: the shared probe-key enumeration per
+    /// table (see [`super::multiprobe::for_each_probe_key`]), each key
+    /// replayed against the budgeted band set. At full budget the visit
+    /// order — table-outer, bands ascending per key — is bit-identical to
+    /// [`Self::candidates_multiprobe_into`]; a partial band budget visits
+    /// the largest-norm bands first, as in [`Self::replay_codes_budgeted`].
+    fn replay_probes_budgeted(
+        &self,
+        sink: &mut DedupSink<'_>,
+        codes: &mut [i32],
+        fracs: &[f32],
+        perturbs: &mut Vec<(f32, usize, i32)>,
+        budget: ProbeBudget,
+    ) {
+        let k = self.params.k_per_table;
+        let scheme = self.params.scheme;
+        let nb = self.bands.len();
+        let b_used = budget.bands(nb);
+        let nt = budget.tables(self.params.n_tables);
+        let cap = budget.max_rerank;
+        for t in 0..nt {
+            let base = t * k;
+            super::multiprobe::for_each_probe_key(
+                scheme,
+                &mut codes[base..base + k],
+                &fracs[base..base + k],
+                perturbs,
+                budget.n_probes,
+                |key| {
+                    for j in 0..b_used {
+                        let band = &self.bands[if b_used == nb { j } else { nb - 1 - j }];
+                        sink.extend_mapped(band.tables[t].get_by_key(key), &band.ids);
+                    }
+                },
+            );
+            if sink.len() >= cap {
+                break;
+            }
+        }
+    }
+
+    /// Budgeted candidate retrieval — the banded twin of
+    /// [`super::AlshIndex::candidates_budgeted_into`]: bit-identical to
+    /// the plain paths at [`ProbeBudget::full`] /
+    /// [`ProbeBudget::with_probes`], a strict subset under any partial
+    /// budget.
+    pub fn candidates_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        assert!(budget.n_probes >= 1);
+        self.params.scheme.query_into(query, self.params.m, &mut s.qx);
+        if budget.n_probes == 1 {
+            s.hash_codes(&self.fused);
+            let (mut sink, codes, _, _) = s.dedup(self.n_items);
+            self.replay_codes_budgeted(&mut sink, codes, budget);
+        } else {
+            s.hash_codes_with_conf(&self.fused);
+            let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items);
+            self.replay_probes_budgeted(&mut sink, codes, fracs, perturbs, budget);
+        }
+        s.truncate_candidates(budget.max_rerank);
+        &s.cands
+    }
+
+    /// Budgeted variant of [`Self::candidates_from_codes_into`] (the
+    /// degraded batcher re-entry). `n_probes` is ignored — external codes
+    /// carry no confidence channel.
+    pub fn candidates_from_codes_budgeted_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
+        assert_eq!(
+            codes_flat.len(),
+            self.params.k_per_table * self.params.n_tables
+        );
+        {
+            let (mut sink, _, _, _) = s.dedup(self.n_items);
+            self.replay_codes_budgeted(&mut sink, codes_flat, budget);
+        }
+        s.truncate_candidates(budget.max_rerank);
+        &s.cands
+    }
+
     /// Allocation-free candidate retrieval: hash once, replay the codes
     /// against every band, dedup into first-seen global-id order.
     pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
@@ -686,6 +804,19 @@ impl<S: Storage> NormRangeIndex<S> {
         self.rerank_into(query, k, s)
     }
 
+    /// Budgeted probe + global exact rerank — the degraded-serving entry
+    /// point. Bit-identical to [`Self::query_into`] at full budget.
+    pub fn query_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_budgeted_into(query, budget, s);
+        self.rerank_into(query, k, s)
+    }
+
     /// Allocation-free multi-probe query.
     pub fn query_multiprobe_into<'s>(
         &self,
@@ -767,6 +898,11 @@ impl<S: Storage> NormRangeIndex<S> {
     /// See [`Self::query_into`].
     pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
         with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
+    }
+
+    /// See [`Self::query_budgeted_into`].
+    pub fn query_budgeted(&self, query: &[f32], k: usize, budget: ProbeBudget) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_budgeted_into(query, k, budget, s).to_vec())
     }
 
     /// See [`Self::query_multiprobe_into`].

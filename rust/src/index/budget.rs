@@ -1,0 +1,108 @@
+//! Per-query probe budget: degraded serving as a *parameter* of the one
+//! probe implementation, not a fork of it.
+//!
+//! Under overload the coordinator's degradation ladder (see
+//! `coordinator::admission`) wants to shed *work* before shedding
+//! *requests* — ALSH recall degrades smoothly with the probe budget, so a
+//! reduced-budget query is still a correct (exact-scored) MIPS answer
+//! over a smaller candidate pool. [`ProbeBudget`] carries the four knobs
+//! every candidate path honours:
+//!
+//! * `n_probes` — multi-probe buckets per table (1 = base probe only);
+//! * `max_tables` — how many of the L tables to probe;
+//! * `max_bands` — how many norm bands to probe (banded index only; the
+//!   *largest-norm* bands are kept, since under MIPS the winners
+//!   concentrate there);
+//! * `max_rerank` — cap on the deduplicated candidate pool handed to the
+//!   exact rerank (the dominant per-query cost).
+//!
+//! [`ProbeBudget::full`] is the identity: every budgeted path produces
+//! **bit-identical** results to its unbudgeted twin at full budget
+//! (property-tested in `tests/budget_equivalence.rs`), which is what lets
+//! the batcher route *all* traffic — healthy and degraded — through the
+//! budgeted entry points.
+
+/// Per-query probe/rerank budget. `Default` is [`ProbeBudget::full`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProbeBudget {
+    /// Buckets probed per table (multi-probe); 1 = base probe only.
+    pub n_probes: usize,
+    /// Tables probed (clamped to `[1, L]` at query time).
+    pub max_tables: usize,
+    /// Norm bands probed (clamped to `[1, B]`; ignored by the flat
+    /// index). A partial band budget keeps the largest-norm bands.
+    pub max_bands: usize,
+    /// Cap on the deduplicated candidate pool handed to the exact rerank.
+    /// Probing stops early (between tables/bands) once the cap is
+    /// reached, and the pool is truncated to exactly this size.
+    pub max_rerank: usize,
+}
+
+impl ProbeBudget {
+    /// The unconstrained budget: bit-identical to the plain query paths.
+    pub const fn full() -> Self {
+        Self {
+            n_probes: 1,
+            max_tables: usize::MAX,
+            max_bands: usize::MAX,
+            max_rerank: usize::MAX,
+        }
+    }
+
+    /// Full budget except `n_probes` buckets per table — bit-identical to
+    /// the plain multi-probe paths.
+    pub const fn with_probes(n_probes: usize) -> Self {
+        Self { n_probes, ..Self::full() }
+    }
+
+    /// Whether this budget constrains nothing (the healthy-mode check).
+    pub fn is_full(&self) -> bool {
+        *self == Self::full()
+    }
+
+    /// Tables to probe for an index with `l` tables: `max_tables` clamped
+    /// to `[1, l]` (a query always probes at least one table).
+    pub fn tables(&self, l: usize) -> usize {
+        self.max_tables.clamp(1, l.max(1))
+    }
+
+    /// Bands to probe for an index with `b` bands, clamped to `[1, b]`.
+    pub fn bands(&self, b: usize) -> usize {
+        self.max_bands.clamp(1, b.max(1))
+    }
+}
+
+impl Default for ProbeBudget {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_is_identity_shaped() {
+        let f = ProbeBudget::full();
+        assert!(f.is_full());
+        assert_eq!(f, ProbeBudget::default());
+        assert_eq!(f.tables(32), 32);
+        assert_eq!(f.bands(4), 4);
+        assert!(!ProbeBudget::with_probes(4).is_full());
+        assert_eq!(ProbeBudget::with_probes(4).n_probes, 4);
+    }
+
+    #[test]
+    fn clamps_to_index_shape() {
+        let b = ProbeBudget { max_tables: 8, max_bands: 2, ..ProbeBudget::full() };
+        assert_eq!(b.tables(32), 8);
+        assert_eq!(b.tables(4), 4);
+        assert_eq!(b.bands(4), 2);
+        assert_eq!(b.bands(1), 1);
+        // Degenerate budgets still probe something.
+        let z = ProbeBudget { max_tables: 0, max_bands: 0, ..ProbeBudget::full() };
+        assert_eq!(z.tables(32), 1);
+        assert_eq!(z.bands(4), 1);
+    }
+}

@@ -23,6 +23,7 @@
 
 use crate::util::Rng;
 
+use super::budget::ProbeBudget;
 use super::build::{self, BuildOpts, BuildStats};
 use super::frozen::{FrozenTable, TableStats};
 use super::scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
@@ -327,24 +328,75 @@ impl<S: Storage> AlshIndex<S> {
         &flat[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// The one probe loop, parameterized by [`ProbeBudget`]: walk the
+    /// first `budget.tables(L)` tables over the codes (and, when
+    /// `budget.n_probes > 1`, the confidence channel) already staged in
+    /// `s`, stopping early between tables once `budget.max_rerank`
+    /// candidates are pooled, then trim to exactly the cap. At
+    /// [`ProbeBudget::full`] this is bit-identical to the historical
+    /// unbudgeted loop — the degraded serving mode is a parameter of this
+    /// loop, not a fork of it.
+    fn probe_scratch_codes_budgeted(&self, budget: ProbeBudget, s: &mut QueryScratch) {
+        let k = self.params.k_per_table;
+        let scheme = self.params.scheme;
+        let nt = budget.tables(self.params.n_tables);
+        let cap = budget.max_rerank;
+        {
+            let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items);
+            for (t, table) in self.tables.iter().take(nt).enumerate() {
+                let base = t * k;
+                if budget.n_probes == 1 {
+                    sink.extend(table.get_by_key(scheme.table_key(&codes[base..base + k])));
+                } else {
+                    super::multiprobe::for_each_probe_key(
+                        scheme,
+                        &mut codes[base..base + k],
+                        &fracs[base..base + k],
+                        perturbs,
+                        budget.n_probes,
+                        |key| sink.extend(table.get_by_key(key)),
+                    );
+                }
+                if sink.len() >= cap {
+                    break;
+                }
+            }
+        }
+        s.truncate_candidates(cap);
+    }
+
     /// Probe all L tables with the codes in `s.codes`, deduplicating into
     /// `s.cands`.
     fn probe_scratch_codes(&self, s: &mut QueryScratch) {
-        let k = self.params.k_per_table;
-        let scheme = self.params.scheme;
-        let (mut sink, codes, _, _) = s.dedup(self.n_items);
-        for (t, table) in self.tables.iter().enumerate() {
-            sink.extend(table.get_by_key(scheme.table_key(&codes[t * k..(t + 1) * k])));
-        }
+        self.probe_scratch_codes_budgeted(ProbeBudget::full(), s);
     }
 
     /// Allocation-free candidate retrieval: the union of the probed
     /// buckets across all L tables, deduplicated, in first-seen order.
     pub fn candidates_into<'s>(&self, query: &[f32], s: &'s mut QueryScratch) -> &'s [u32] {
+        self.candidates_budgeted_into(query, ProbeBudget::full(), s)
+    }
+
+    /// Budgeted candidate retrieval: same probe loop as
+    /// [`AlshIndex::candidates_into`] / multi-probe, constrained by
+    /// `budget` (tables, probes per table, rerank-pool cap). Bit-identical
+    /// to the plain paths at [`ProbeBudget::full`] /
+    /// [`ProbeBudget::with_probes`].
+    pub fn candidates_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
+        assert!(budget.n_probes >= 1);
         self.params.scheme.query_into(query, self.params.m, &mut s.qx);
-        s.hash_codes(&self.fused);
-        self.probe_scratch_codes(s);
+        if budget.n_probes == 1 {
+            s.hash_codes(&self.fused);
+        } else {
+            s.hash_codes_with_conf(&self.fused);
+        }
+        self.probe_scratch_codes_budgeted(budget, s);
         &s.cands
     }
 
@@ -367,13 +419,34 @@ impl<S: Storage> AlshIndex<S> {
         codes_flat: &[i32],
         s: &'s mut QueryScratch,
     ) -> &'s [u32] {
+        self.candidates_from_codes_budgeted_into(codes_flat, ProbeBudget::full(), s)
+    }
+
+    /// Budgeted variant of [`AlshIndex::candidates_from_codes_into`].
+    /// Honours `max_tables` and `max_rerank`; `n_probes` is ignored here
+    /// because external codes carry no confidence channel to order the
+    /// perturbations by.
+    pub fn candidates_from_codes_budgeted_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [u32] {
         let k = self.params.k_per_table;
         let scheme = self.params.scheme;
         assert_eq!(codes_flat.len(), k * self.params.n_tables);
-        let (mut sink, _, _, _) = s.dedup(self.n_items);
-        for (t, table) in self.tables.iter().enumerate() {
-            sink.extend(table.get_by_key(scheme.table_key(&codes_flat[t * k..(t + 1) * k])));
+        let nt = budget.tables(self.params.n_tables);
+        let cap = budget.max_rerank;
+        {
+            let (mut sink, _, _, _) = s.dedup(self.n_items);
+            for (t, table) in self.tables.iter().take(nt).enumerate() {
+                sink.extend(table.get_by_key(scheme.table_key(&codes_flat[t * k..(t + 1) * k])));
+                if sink.len() >= cap {
+                    break;
+                }
+            }
         }
+        s.truncate_candidates(cap);
         &s.cands
     }
 
@@ -400,6 +473,19 @@ impl<S: Storage> AlshIndex<S> {
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
         self.candidates_into(query, s);
+        self.rerank_into(query, k, s)
+    }
+
+    /// Budgeted probe + exact rerank: the degraded-serving entry point.
+    /// Bit-identical to [`AlshIndex::query_into`] at full budget.
+    pub fn query_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.candidates_budgeted_into(query, budget, s);
         self.rerank_into(query, k, s)
     }
 
@@ -493,6 +579,11 @@ impl<S: Storage> AlshIndex<S> {
     /// Full query: retrieve candidates, exact-rerank, return top `k`.
     pub fn query(&self, query: &[f32], k: usize) -> Vec<ScoredItem> {
         with_thread_scratch(|s| self.query_into(query, k, s).to_vec())
+    }
+
+    /// See [`AlshIndex::query_budgeted_into`].
+    pub fn query_budgeted(&self, query: &[f32], k: usize, budget: ProbeBudget) -> Vec<ScoredItem> {
+        with_thread_scratch(|s| self.query_budgeted_into(query, k, budget, s).to_vec())
     }
 
     /// Aggregate table statistics across the L tables.

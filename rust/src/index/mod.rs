@@ -23,6 +23,7 @@
 
 pub mod any;
 pub mod banded;
+pub mod budget;
 pub mod build;
 pub mod collision;
 pub mod core;
@@ -38,6 +39,7 @@ pub mod storage;
 
 pub use any::{AnyIndex, MappedIndex};
 pub use banded::{Band, BandedBuildStats, BandedParams, NormRangeIndex};
+pub use budget::ProbeBudget;
 pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};

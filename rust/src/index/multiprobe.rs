@@ -86,24 +86,7 @@ impl<S: Storage> AlshIndex<S> {
         n_probes: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [u32] {
-        assert_eq!(query.len(), self.dim(), "query dim mismatch");
-        assert!(n_probes >= 1);
-        let p = *self.params();
-        p.scheme.query_into(query, p.m, &mut s.qx);
-        s.hash_codes_with_conf(self.hasher());
-        let (mut sink, codes, fracs, perturbs) = s.dedup(self.n_items());
-        for (t, table) in self.tables().iter().enumerate() {
-            let base = t * p.k_per_table;
-            for_each_probe_key(
-                p.scheme,
-                &mut codes[base..base + p.k_per_table],
-                &fracs[base..base + p.k_per_table],
-                perturbs,
-                n_probes,
-                |key| sink.extend(table.get_by_key(key)),
-            );
-        }
-        &s.cands
+        self.candidates_budgeted_into(query, super::budget::ProbeBudget::with_probes(n_probes), s)
     }
 
     /// Allocation-free multi-probe query: probe + exact rerank into the

@@ -114,6 +114,16 @@ impl QueryScratch {
         )
     }
 
+    /// Cap the candidate list at `cap` entries (no-op when already
+    /// within). The budgeted probe paths stop probing early once the cap
+    /// is reached, but a single postings list can overshoot it — this
+    /// trims the tail so the rerank pool is exactly bounded.
+    pub(crate) fn truncate_candidates(&mut self, cap: usize) {
+        if self.cands.len() > cap {
+            self.cands.truncate(cap);
+        }
+    }
+
     /// Grow `codes` (and optionally `fracs`) to `n_codes` entries,
     /// returning nothing — the single place the code-buffer sizing rule
     /// lives.

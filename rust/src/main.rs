@@ -173,7 +173,7 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         },
     )?;
-    serve(ServeConfig { addr }, batcher.handle(), engine)
+    serve(ServeConfig { addr, ..Default::default() }, batcher.handle(), engine)
 }
 
 fn run_query(args: &Args) -> anyhow::Result<()> {

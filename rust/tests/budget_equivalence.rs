@@ -1,0 +1,226 @@
+//! `ProbeBudget` acceptance: the budgeted query paths are the *same*
+//! implementation as the plain ones, parameterized — not a fork.
+//!
+//! 1. **Full budget is bit-identical** on every path (flat/banded ×
+//!    plain/code-fed/multi-probe × all three schemes, plus the engine
+//!    and the sharded router): `ProbeBudget::full()` must change nothing,
+//!    down to candidate order.
+//! 2. **Partial budgets shed work, not correctness**: fewer tables give
+//!    a subset of the full candidate set (monotone in the table count),
+//!    a rerank cap bounds the candidate pool, and a band budget on the
+//!    norm-range index only probes the largest-norm bands.
+
+use alsh::coordinator::{MipsEngine, ShardedRouter};
+use alsh::index::{
+    AlshIndex, AlshParams, BandedParams, MipsHashScheme, NormRangeIndex, ProbeBudget,
+};
+use alsh::transform::q_transform;
+use alsh::util::Rng;
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+fn queries(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect()
+}
+
+const SCHEMES: [MipsHashScheme; 3] =
+    [MipsHashScheme::L2Alsh, MipsHashScheme::SignAlsh, MipsHashScheme::SimpleLsh];
+
+#[test]
+fn full_budget_is_bit_identical_on_flat_paths() {
+    for (si, scheme) in SCHEMES.into_iter().enumerate() {
+        let its = norm_spread_items(400, 10, 10 + si as u64);
+        let params =
+            AlshParams { n_tables: 16, k_per_table: 4, scheme, ..AlshParams::default() };
+        let idx = AlshIndex::build(&its, params, 20 + si as u64);
+        let mut s = idx.scratch();
+        for q in queries(12, 10, 30 + si as u64) {
+            let want = idx.candidates(&q);
+            assert_eq!(
+                idx.candidates_budgeted_into(&q, ProbeBudget::full(), &mut s).to_vec(),
+                want,
+                "{scheme:?}: full budget must not perturb the candidate stream"
+            );
+            assert_eq!(idx.query_budgeted(&q, 10, ProbeBudget::full()), idx.query(&q, 10));
+            for probes in [2usize, 4] {
+                assert_eq!(
+                    idx.candidates_budgeted_into(
+                        &q,
+                        ProbeBudget::with_probes(probes),
+                        &mut s
+                    )
+                    .to_vec(),
+                    idx.candidates_multiprobe(&q, probes),
+                    "{scheme:?}: with_probes({probes}) must equal the multiprobe path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_budget_is_bit_identical_on_banded_paths() {
+    for (si, scheme) in SCHEMES.into_iter().enumerate() {
+        let its = norm_spread_items(500, 8, 40 + si as u64);
+        let params =
+            AlshParams { n_tables: 12, k_per_table: 4, scheme, ..AlshParams::default() };
+        let idx =
+            NormRangeIndex::build(&its, params, BandedParams { n_bands: 4 }, 50 + si as u64);
+        let mut s = idx.scratch();
+        for q in queries(12, 8, 60 + si as u64) {
+            let want = idx.candidates(&q);
+            assert_eq!(
+                idx.candidates_budgeted_into(&q, ProbeBudget::full(), &mut s).to_vec(),
+                want,
+                "{scheme:?}: banded full budget must not perturb the candidate stream"
+            );
+            assert_eq!(idx.query_budgeted(&q, 10, ProbeBudget::full()), idx.query(&q, 10));
+            for probes in [2usize, 4] {
+                assert_eq!(
+                    idx.candidates_budgeted_into(
+                        &q,
+                        ProbeBudget::with_probes(probes),
+                        &mut s
+                    )
+                    .to_vec(),
+                    idx.candidates_multiprobe(&q, probes),
+                    "{scheme:?}: banded with_probes({probes}) must equal the multiprobe path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_budget_is_bit_identical_on_code_fed_paths() {
+    let its = norm_spread_items(400, 8, 70);
+    let params = AlshParams { n_tables: 12, k_per_table: 4, ..AlshParams::default() };
+    let flat = AlshIndex::build(&its, params, 71);
+    let banded = NormRangeIndex::build(&its, params, BandedParams { n_bands: 3 }, 71);
+    let mut sf = flat.scratch();
+    let mut sb = banded.scratch();
+    for q in queries(10, 8, 72) {
+        let qx = q_transform(&q, params.m);
+        let mut codes = Vec::new();
+        for fam in flat.families() {
+            fam.hash_into(&qx, &mut codes);
+        }
+        assert_eq!(
+            flat.candidates_from_codes_budgeted_into(&codes, ProbeBudget::full(), &mut sf)
+                .to_vec(),
+            flat.candidates_from_codes(&codes)
+        );
+        let mut bcodes = Vec::new();
+        for fam in banded.families() {
+            fam.hash_into(&qx, &mut bcodes);
+        }
+        assert_eq!(
+            banded
+                .candidates_from_codes_budgeted_into(&bcodes, ProbeBudget::full(), &mut sb)
+                .to_vec(),
+            banded.candidates_from_codes(&bcodes)
+        );
+    }
+}
+
+#[test]
+fn table_budget_is_a_monotone_subset() {
+    let its = norm_spread_items(500, 10, 80);
+    let params = AlshParams { n_tables: 16, k_per_table: 3, ..AlshParams::default() };
+    let idx = AlshIndex::build(&its, params, 81);
+    let mut s = idx.scratch();
+    for q in queries(10, 10, 82) {
+        let full = idx.candidates(&q);
+        let mut prev_len = 0usize;
+        for nt in [1usize, 4, 8, 16] {
+            let budget = ProbeBudget { max_tables: nt, ..ProbeBudget::full() };
+            let got = idx.candidates_budgeted_into(&q, budget, &mut s).to_vec();
+            assert!(
+                got.iter().all(|id| full.contains(id)),
+                "table-budgeted candidates must be a subset of the full set"
+            );
+            assert!(got.len() >= prev_len, "more tables can only add candidates");
+            prev_len = got.len();
+            if nt == params.n_tables {
+                assert_eq!(got, full, "max_tables = L must be the identity");
+            }
+        }
+    }
+}
+
+#[test]
+fn rerank_cap_bounds_the_pool_and_feeds_the_same_rerank() {
+    let its = norm_spread_items(600, 8, 90);
+    let params = AlshParams { n_tables: 24, k_per_table: 2, ..AlshParams::default() };
+    let idx = AlshIndex::build(&its, params, 91);
+    let mut s = idx.scratch();
+    let cap = 32usize;
+    let budget = ProbeBudget { max_rerank: cap, ..ProbeBudget::full() };
+    for q in queries(10, 8, 92) {
+        let cands = idx.candidates_budgeted_into(&q, budget, &mut s).to_vec();
+        assert!(cands.len() <= cap, "rerank cap exceeded: {} > {cap}", cands.len());
+        // The budgeted query is exactly "exact rerank over the capped
+        // pool" — degraded answers are never score-approximate.
+        assert_eq!(idx.query_budgeted(&q, 5, budget), idx.rerank(&q, &cands, 5));
+        let full = idx.candidates(&q);
+        assert!(cands.iter().all(|id| full.contains(id)));
+    }
+}
+
+#[test]
+fn band_budget_keeps_the_largest_norm_bands() {
+    let its = norm_spread_items(600, 8, 100);
+    let params = AlshParams { n_tables: 8, k_per_table: 3, ..AlshParams::default() };
+    let idx = NormRangeIndex::build(&its, params, BandedParams { n_bands: 4 }, 101);
+    assert_eq!(idx.n_bands(), 4);
+    // Bands are stored in ascending-norm order; a budget of 2 must only
+    // surface ids from the two largest-norm bands.
+    let top_ids: std::collections::HashSet<u32> = idx.bands()[2..]
+        .iter()
+        .flat_map(|b| b.ids().iter().copied())
+        .collect();
+    let mut s = idx.scratch();
+    let budget = ProbeBudget { max_bands: 2, ..ProbeBudget::full() };
+    for q in queries(10, 8, 102) {
+        let got = idx.candidates_budgeted_into(&q, budget, &mut s).to_vec();
+        assert!(
+            got.iter().all(|id| top_ids.contains(id)),
+            "band budget must drop the smallest-norm bands first"
+        );
+        let full = idx.candidates(&q);
+        assert!(got.iter().all(|id| full.contains(id)));
+        assert_eq!(
+            idx.candidates_budgeted_into(&q, ProbeBudget { max_bands: 4, ..ProbeBudget::full() }, &mut s)
+                .to_vec(),
+            full,
+            "max_bands = B must be the identity"
+        );
+    }
+}
+
+#[test]
+fn engine_and_router_budgeted_full_equal_plain() {
+    let its = norm_spread_items(500, 8, 110);
+    let params = AlshParams { n_tables: 16, k_per_table: 4, ..AlshParams::default() };
+    let engine = MipsEngine::new(&its, params, 111);
+    let router = ShardedRouter::build(&its, 3, params, 112);
+    for q in queries(10, 8, 113) {
+        assert_eq!(engine.query_budgeted(&q, 10, ProbeBudget::full()), engine.query(&q, 10));
+        assert_eq!(router.query_budgeted(&q, 10, ProbeBudget::full()), router.query(&q, 10));
+        // A reduced budget still returns exact-scored, sorted results.
+        let budget = ProbeBudget { max_tables: 4, max_rerank: 64, ..ProbeBudget::full() };
+        let out = router.query_budgeted(&q, 10, budget);
+        for w in out.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Fault-injection harness over the batcher: injected hash failures,
+//! latency spikes, and poisoned workers must never hang a reader, never
+//! serve a stale answer, and always either complete correctly (bit-equal
+//! to the fused CPU path) or fail with a structured error.
+//!
+//! No artifacts are needed: the primary hash backend here is the fused
+//! CPU path itself, and the `FaultPlan` fails *attempts* before they
+//! run, so the retry / breaker / fallback plumbing under test is exactly
+//! what a real PJRT failure would exercise.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use alsh::coordinator::{BatcherConfig, BreakerState, FaultPlan, MipsEngine, PjrtBatcher};
+use alsh::index::AlshParams;
+use alsh::util::Rng;
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+fn engine(seed: u64) -> Arc<MipsEngine> {
+    let items = norm_spread_items(400, 8, seed);
+    Arc::new(MipsEngine::new(&items, AlshParams::default(), seed + 1))
+}
+
+fn spawn(engine: &Arc<MipsEngine>, cfg: BatcherConfig) -> PjrtBatcher {
+    PjrtBatcher::spawn(Arc::clone(engine), "definitely-not-an-artifacts-dir", cfg)
+        .expect("batcher")
+}
+
+/// Batches 0 and 1 fail every hash attempt: the first query must trip
+/// the breaker and still be answered — bit-for-bit equal to the fused
+/// CPU path — and once the faults stop and the cooldown elapses, a
+/// half-open probe must re-close the breaker.
+#[test]
+fn injected_failures_trip_breaker_serve_fallback_and_recover() {
+    let e = engine(10);
+    let batcher = spawn(
+        &e,
+        BatcherConfig {
+            max_wait: Duration::from_micros(200),
+            hash_retries: 1,
+            retry_backoff: Duration::from_micros(100),
+            breaker_cooldown: Duration::from_millis(80),
+            fault_plan: Some(FaultPlan { fail_from: 0, fail_until: 2, ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let handle = batcher.handle();
+    let mut rng = Rng::seed_from_u64(11);
+    let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+
+    // Batch 0: both attempts fail, the breaker opens, the batch is still
+    // served via the fused path — identical to the direct engine answer.
+    let reply = handle.query_deadline(q.clone(), 10, None).expect("served via fallback");
+    assert_eq!(reply.hits, e.query(&q, 10), "fallback answers must be bit-identical");
+    assert!(!reply.degraded);
+    assert_eq!(handle.breaker_state(), BreakerState::Open);
+    assert!(e.metrics().snapshot().pjrt_fallbacks >= 1);
+
+    // While open (within the cooldown) batches serve without probing.
+    let q2: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+    let reply = handle.query_deadline(q2.clone(), 10, None).expect("served while open");
+    assert_eq!(reply.hits, e.query(&q2, 10));
+
+    // Past the cooldown, and past the fault window, the half-open probe
+    // succeeds and the breaker re-closes.
+    std::thread::sleep(Duration::from_millis(120));
+    let q3: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+    let reply = handle.query_deadline(q3.clone(), 10, None).expect("served after recovery");
+    assert_eq!(reply.hits, e.query(&q3, 10));
+    assert_eq!(
+        handle.breaker_state(),
+        BreakerState::Closed,
+        "breaker must re-close once faults stop"
+    );
+    assert_eq!(e.metrics().snapshot().errors, 0, "faults were absorbed, not surfaced");
+    batcher.shutdown();
+}
+
+/// A permanent 50 ms latency spike: a query with a 15 ms deadline must
+/// come back as `deadline_exceeded` (bounded, never hung, never stale),
+/// while a query with a generous deadline completes correctly.
+#[test]
+fn latency_spikes_are_bounded_by_the_deadline() {
+    let e = engine(20);
+    let batcher = spawn(
+        &e,
+        BatcherConfig {
+            max_wait: Duration::from_micros(200),
+            fault_plan: Some(FaultPlan {
+                delay_from: 0,
+                delay_until: usize::MAX,
+                delay: Duration::from_millis(50),
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let handle = batcher.handle();
+    let q = vec![0.3f32; 8];
+
+    let t0 = Instant::now();
+    let err = handle
+        .query_deadline(q.clone(), 10, Some(Instant::now() + Duration::from_millis(15)))
+        .expect_err("the spike must not produce a stale answer");
+    assert_eq!(err.code(), "deadline_exceeded");
+    assert!(t0.elapsed() < Duration::from_secs(2), "deadline errors must be prompt");
+    assert!(e.metrics().snapshot().deadline_exceeded >= 1);
+
+    let reply = handle
+        .query_deadline(q.clone(), 10, Some(Instant::now() + Duration::from_millis(500)))
+        .expect("generous deadline rides out the spike");
+    assert_eq!(reply.hits, e.query(&q, 10));
+    batcher.shutdown();
+}
+
+/// The worker thread dies mid-job without replying: the batcher must
+/// detect the dropped reply channel, serve the batch inline on the fused
+/// path (readers never hang), and keep serving afterwards with the
+/// breaker open. Shutdown stays clean with a dead worker.
+#[test]
+fn poisoned_worker_never_hangs_readers() {
+    let e = engine(30);
+    let batcher = spawn(
+        &e,
+        BatcherConfig {
+            max_wait: Duration::from_micros(200),
+            breaker_cooldown: Duration::from_secs(3600), // stays open
+            fault_plan: Some(FaultPlan { poison_at: Some(1), ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let handle = batcher.handle();
+    let mut rng = Rng::seed_from_u64(31);
+
+    // Batch 0 is served normally.
+    let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+    let reply = handle.query_deadline(q.clone(), 10, None).expect("healthy batch");
+    assert_eq!(reply.hits, e.query(&q, 10));
+    assert_eq!(handle.breaker_state(), BreakerState::Closed);
+
+    // Batch 1 poisons the worker: no reply ever comes from it, and the
+    // batcher must serve inline rather than hang this reader.
+    let q2: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+    let reply = handle.query_deadline(q2.clone(), 10, None).expect("served inline");
+    assert_eq!(reply.hits, e.query(&q2, 10), "inline fallback must be bit-identical");
+    assert_eq!(handle.breaker_state(), BreakerState::Open);
+    assert!(e.metrics().snapshot().pjrt_fallbacks >= 1);
+
+    // The worker is gone for good; every later batch serves inline.
+    for _ in 0..3 {
+        let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let reply = handle.query_deadline(q.clone(), 10, None).expect("inline serving");
+        assert_eq!(reply.hits, e.query(&q, 10));
+    }
+    assert_eq!(e.metrics().snapshot().errors, 0);
+    batcher.shutdown(); // joins a dead worker cleanly
+}
+
+/// Concurrent mixed traffic across overlapping fault windows (delays,
+/// then failures): every request either completes bit-identically or
+/// fails with a structured error — no panics, no hangs, no wedged
+/// connections.
+#[test]
+fn concurrent_traffic_survives_fault_windows() {
+    let e = engine(40);
+    let batcher = spawn(
+        &e,
+        BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            hash_retries: 1,
+            retry_backoff: Duration::from_micros(100),
+            breaker_cooldown: Duration::from_millis(20),
+            fault_plan: Some(FaultPlan {
+                fail_from: 2,
+                fail_until: 6,
+                delay_from: 0,
+                delay_until: 3,
+                delay: Duration::from_millis(2),
+                poison_at: None,
+            }),
+            ..Default::default()
+        },
+    );
+    let handle = batcher.handle();
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let h = handle.clone();
+            let e = Arc::clone(&e);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(400 + t as u64);
+                for _ in 0..20 {
+                    let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+                    match h.query_deadline(q.clone(), 5, None) {
+                        Ok(reply) => assert_eq!(reply.hits, e.query(&q, 5)),
+                        Err(err) => assert!(
+                            ["deadline_exceeded", "overloaded", "internal"]
+                                .contains(&err.code()),
+                            "unstructured failure: {err}"
+                        ),
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(
+        e.metrics().snapshot().pjrt_fallbacks >= 1,
+        "the fault window must have tripped the breaker at least once"
+    );
+    batcher.shutdown();
+}

@@ -1,0 +1,279 @@
+//! Serving-tier robustness: request validation, structured error codes,
+//! bounded line reads, and concurrent mixed traffic over live sockets.
+//!
+//! Every malformed request must produce a structured
+//! `{ok: false, code, error}` reply — never a panic, never a silent
+//! truncation, never a killed connection — and the stack must keep
+//! serving valid traffic throughout.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use alsh::coordinator::{
+    handle_request, serve_on, BatcherConfig, MipsEngine, PjrtBatcher, ServeConfig,
+};
+use alsh::index::AlshParams;
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+fn boot(dim: usize) -> (Arc<MipsEngine>, PjrtBatcher) {
+    let items = norm_spread_items(300, dim, 1);
+    let engine = Arc::new(MipsEngine::new(&items, AlshParams::default(), 2));
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "definitely-not-an-artifacts-dir",
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+    )
+    .expect("batcher");
+    (engine, batcher)
+}
+
+fn code_of(resp: &Json) -> &str {
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "expected an error: {resp:?}");
+    resp.get("code").and_then(Json::as_str).expect("error responses carry a code")
+}
+
+#[test]
+fn validation_rejects_malformed_requests_with_structured_codes() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    // Missing / malformed vector.
+    for req in [
+        "{}",
+        r#"{"vector": "nope"}"#,
+        r#"{"vector": [1.0, "x", 3.0]}"#,
+        r#"{"vector": null}"#,
+    ] {
+        let resp = h(req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+        assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("vector"));
+    }
+
+    // Non-finite components: 1e39 overflows f32, 1e999 overflows f64.
+    for req in [
+        r#"{"vector": [1e39, 0, 0, 0, 0, 0, 0, 0]}"#,
+        r#"{"vector": [0, 0, 0, 0, 0, 0, 0, 1e999]}"#,
+        r#"{"vector": [0, 0, 0, 0, 0, 0, 0, -1e999]}"#,
+    ] {
+        let resp = h(req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("finite"),
+            "{req} → {resp:?}"
+        );
+    }
+
+    // Wrong dimension.
+    let resp = h(r#"{"vector": [1.0, 2.0]}"#);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("dim"));
+
+    // Bad top_k: zero, absurd, fractional, negative, non-numeric.
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    for (top_k, why) in
+        [("0", "zero"), ("100000", "absurd"), ("2.5", "fractional"), ("-3", "negative"), (r#""ten""#, "non-numeric")]
+    {
+        let resp = h(&format!(r#"{{"vector": {q}, "top_k": {top_k}}}"#));
+        assert_eq!(code_of(&resp), "invalid_argument", "top_k {why}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("top_k"),
+            "top_k {why} → {resp:?}"
+        );
+    }
+
+    // Bad deadline_ms: zero, negative, non-finite, non-numeric.
+    for deadline in ["0", "-5", "1e999", r#""soon""#] {
+        let resp = h(&format!(r#"{{"vector": {q}, "deadline_ms": {deadline}}}"#));
+        assert_eq!(code_of(&resp), "invalid_argument", "deadline_ms {deadline}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("deadline_ms"),
+            "deadline_ms {deadline} → {resp:?}"
+        );
+    }
+
+    // Unparseable JSON and unknown commands.
+    assert_eq!(code_of(&h("{nope")), "invalid_argument");
+    assert_eq!(code_of(&h(r#"{"cmd": "selfdestruct"}"#)), "invalid_argument");
+
+    // Oversized line (handler-level cap).
+    let tight = ServeConfig { max_line_len: 64, ..ServeConfig::default() };
+    let long = format!(r#"{{"vector": {q}, "top_k": 10, "pad": "{}"}}"#, "x".repeat(200));
+    let resp = handle_request(&long, &handle, &engine, &tight);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("exceeds"));
+
+    // After all that abuse, a valid query still serves — healthy, not
+    // degraded, with a generous explicit deadline.
+    let resp = h(&format!(r#"{{"vector": {q}, "top_k": 5, "deadline_ms": 60000}}"#));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("degraded"), Some(&Json::Bool(false)));
+    assert_eq!(resp.get("items").and_then(Json::as_arr).unwrap().len(), 5);
+    batcher.shutdown();
+}
+
+#[test]
+fn metrics_command_reports_robustness_counters() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let resp = handle_request(r#"{"cmd": "metrics"}"#, &handle, &engine, &cfg);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let m = resp.get("metrics").expect("metrics object");
+    for key in [
+        "queries",
+        "errors",
+        "shed",
+        "deadline_exceeded",
+        "degraded_queries",
+        "pjrt_fallbacks",
+        "queue_depth",
+        "load_level",
+    ] {
+        assert!(m.get(key).and_then(Json::as_f64).is_some(), "metrics missing {key}");
+    }
+    assert_eq!(m.get("breaker").and_then(Json::as_str), Some("closed"));
+    batcher.shutdown();
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().unwrap();
+        Self { writer, reader: BufReader::new(stream) }
+    }
+
+    fn roundtrip(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).expect("valid json response")
+    }
+}
+
+/// N client threads of mixed valid/invalid/ping/metrics traffic through a
+/// live listener: every request gets a reply, errors never kill a
+/// connection thread, and shutdown afterwards is clean and structured.
+#[test]
+fn concurrent_mixed_traffic_never_wedges_the_server() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let (h, e) = (handle.clone(), Arc::clone(&engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, h, e, ServeConfig::default());
+        });
+    }
+    let n_threads = 8;
+    let per_thread = 24;
+    let threads: Vec<_> = (0..n_threads)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(300 + t as u64);
+                let mut client = Client::connect(addr);
+                let mut ok_queries = 0usize;
+                for i in 0..per_thread {
+                    match i % 6 {
+                        0 | 1 => {
+                            let q: Vec<f64> =
+                                (0..8).map(|_| rng.normal_f64() * 0.5).collect();
+                            let req = format!(
+                                r#"{{"vector": {}, "top_k": 3}}"#,
+                                alsh::util::json::num_arr(&q)
+                            );
+                            let resp = client.roundtrip(&req);
+                            assert_eq!(
+                                resp.get("ok"),
+                                Some(&Json::Bool(true)),
+                                "{resp:?}"
+                            );
+                            ok_queries += 1;
+                        }
+                        2 => {
+                            let resp = client.roundtrip(r#"{"vector": [1.0, 2.0]}"#);
+                            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+                        }
+                        3 => {
+                            let resp = client.roundtrip("{definitely not json");
+                            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+                        }
+                        4 => {
+                            let resp = client.roundtrip(r#"{"cmd": "ping"}"#);
+                            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                        }
+                        _ => {
+                            let resp = client.roundtrip(r#"{"cmd": "metrics"}"#);
+                            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                        }
+                    }
+                }
+                ok_queries
+            })
+        })
+        .collect();
+    let total_ok: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert_eq!(total_ok, n_threads * per_thread / 6 * 2);
+    assert_eq!(engine.metrics().snapshot().queries, total_ok as u64);
+
+    // Clean shutdown: in-flight work done, later queries get a
+    // structured internal error instead of a hang or a panic.
+    batcher.shutdown();
+    let err = handle
+        .query_deadline(vec![0.1f32; 8], 3, None)
+        .expect_err("post-shutdown queries must fail structurally");
+    assert_eq!(err.code(), "internal");
+}
+
+/// An oversized request line gets a structured error and the rest of the
+/// line is discarded — the same connection then keeps serving.
+#[test]
+fn oversized_line_is_rejected_and_connection_survives() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let e = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let _ = serve_on(
+                listener,
+                handle,
+                e,
+                ServeConfig { max_line_len: 512, ..ServeConfig::default() },
+            );
+        });
+    }
+    let mut client = Client::connect(addr);
+    let huge = format!(r#"{{"vector": [{}]}}"#, "0.5, ".repeat(2000) + "0.5");
+    assert!(huge.len() > 512);
+    let resp = client.roundtrip(&huge);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(resp.get("code").and_then(Json::as_str), Some("invalid_argument"));
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("exceeds"));
+    // The connection is still alive and sane.
+    let resp = client.roundtrip(r#"{"cmd": "ping"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    batcher.shutdown();
+}

@@ -8,7 +8,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
-use alsh::coordinator::{serve_on, BatcherConfig, MipsEngine, PjrtBatcher};
+use alsh::coordinator::{serve_on, BatcherConfig, MipsEngine, PjrtBatcher, ServeConfig};
 use alsh::index::AlshParams;
 use alsh::util::json::Json;
 use alsh::util::Rng;
@@ -68,7 +68,7 @@ fn boot() -> Option<(std::net::SocketAddr, Arc<MipsEngine>, PjrtBatcher)> {
     let handle = batcher.handle();
     let e2 = Arc::clone(&engine);
     std::thread::spawn(move || {
-        let _ = serve_on(listener, handle, e2);
+        let _ = serve_on(listener, handle, e2, ServeConfig::default());
     });
     Some((addr, engine, batcher))
 }
