@@ -12,9 +12,16 @@
 //! measure shed rate, degraded fraction, deadline misses, and ping p99
 //! while overloaded.
 //!
+//! Phase 4 serves a live (mutable) engine: closed-loop query clients
+//! run against a writer pushing an upsert/overwrite/delete mix through
+//! the server while the background compactor drains the delta, and the
+//! query tail *while compacting* lands in section `live` — plus the
+//! measured WAL replay time of a crash-recovery open.
+//!
 //! Env knobs (CI sizes down): `ALSH_SERVE_N` items, `ALSH_SERVE_CLIENTS`
 //! × `ALSH_SERVE_QPC` healthy queries, `ALSH_SERVE_OVER_CLIENTS` ×
-//! `ALSH_SERVE_OVER_QPC` overload queries.
+//! `ALSH_SERVE_OVER_QPC` overload queries, `ALSH_SERVE_MUT` mutations in
+//! the live phase.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,7 +33,7 @@ use alsh::coordinator::{
     serve_on, AdmissionConfig, BatcherConfig, FaultPlan, MipsEngine, PjrtBatcher, ServeConfig,
 };
 use alsh::eval::gold_top_t;
-use alsh::index::{AlshParams, ProbeBudget};
+use alsh::index::{AlshParams, LiveConfig, ProbeBudget};
 use alsh::util::bench::merge_bench_json_file;
 use alsh::util::json::Json;
 use alsh::util::Rng;
@@ -288,6 +295,146 @@ fn main() {
     );
     over_batcher.shutdown();
 
+    // ── Phase 4: live engine — queries while mutating + compacting ───
+    let n_mut = env_usize("ALSH_SERVE_MUT", 600);
+    let live_dir = std::env::temp_dir().join(format!(
+        "alsh_serve_bench_live_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let live_engine = Arc::new(
+        MipsEngine::create_live(
+            &live_dir,
+            &items,
+            LiveConfig { params, n_bands: 1, seed: 14 },
+        )
+        .expect("live engine"),
+    );
+    let live_batcher = PjrtBatcher::spawn(
+        Arc::clone(&live_engine),
+        "artifacts",
+        BatcherConfig { max_wait: Duration::from_micros(300), ..Default::default() },
+    )
+    .expect("batcher");
+    // Background compactor with a threshold well under the mutation
+    // count, so the query window spans several delta→frozen swaps.
+    live_engine
+        .live()
+        .expect("live core")
+        .spawn_compactor(n_mut / 4 + 1, Duration::from_millis(1));
+    let live_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let live_addr = live_listener.local_addr().unwrap();
+    {
+        let (h, e) = (live_batcher.handle(), Arc::clone(&live_engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(live_listener, h, e, ServeConfig::default());
+        });
+    }
+    println!("phase 4: {n_clients} query clients against a live engine, {n_mut} mutations");
+    let writer_done = Arc::new(AtomicBool::new(false));
+    let writer_thread = {
+        let done = Arc::clone(&writer_done);
+        std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(3000);
+            let mut client = Client::connect(live_addr);
+            let mut lats = Vec::with_capacity(n_mut);
+            for i in 0..n_mut {
+                // 70% insert, 15% overwrite, 15% delete-of-existing.
+                let line = match i % 20 {
+                    0..=13 => {
+                        let v: Vec<f64> =
+                            (0..dim).map(|_| rng.normal_f64() * 0.5).collect();
+                        format!(
+                            "{{\"cmd\":\"upsert\",\"id\":{},\"vector\":{}}}",
+                            100_000 + i,
+                            alsh::util::json::num_arr(&v)
+                        )
+                    }
+                    14..=16 => {
+                        let v: Vec<f64> =
+                            (0..dim).map(|_| rng.normal_f64() * 0.5).collect();
+                        format!(
+                            "{{\"cmd\":\"upsert\",\"id\":{},\"vector\":{}}}",
+                            i % n_items,
+                            alsh::util::json::num_arr(&v)
+                        )
+                    }
+                    _ => format!("{{\"cmd\":\"delete\",\"id\":{}}}", (i * 7) % n_items),
+                };
+                let (resp, lat) = client.roundtrip(&line);
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                lats.push(lat);
+            }
+            done.store(true, Ordering::Relaxed);
+            lats
+        })
+    };
+    let t2 = Instant::now();
+    let live_threads: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let done = Arc::clone(&writer_done);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(3500 + c as u64);
+                let mut client = Client::connect(live_addr);
+                let mut lats = Vec::new();
+                let mut i = 0usize;
+                // Keep querying until the writer finishes AND each
+                // client has served its quota, so the tail always
+                // overlaps the mutation + compaction window.
+                while i < qpc || !done.load(Ordering::Relaxed) {
+                    let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+                    let (resp, lat) = client.roundtrip(&query_line(&q, top_k, None));
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                    lats.push(lat);
+                    i += 1;
+                }
+                lats
+            })
+        })
+        .collect();
+    let mut mut_lats = writer_thread.join().unwrap();
+    let mut live_lats: Vec<u64> = Vec::new();
+    for t in live_threads {
+        live_lats.extend(t.join().unwrap());
+    }
+    let live_wall = t2.elapsed();
+    live_lats.sort_unstable();
+    mut_lats.sort_unstable();
+    let live_total = live_lats.len();
+    let live_qps = live_total as f64 / live_wall.as_secs_f64();
+    let stats = live_engine.live_stats().expect("live stats");
+    println!(
+        "  {live_total} queries + {n_mut} mutations in {live_wall:?} → {live_qps:.0} q/s; \
+         query p99 {}µs, mutation p99 {}µs; {} compactions, gen {}",
+        pct(&live_lats, 0.99),
+        pct(&mut_lats, 0.99),
+        stats.compactions,
+        stats.generation,
+    );
+    live_engine.live().expect("live core").stop_compactor();
+    live_batcher.shutdown();
+
+    // WAL replay cost: leave a fresh uncompacted mutation tail in the
+    // WAL, then time the crash-recovery open that replays it.
+    let n_replay = n_mut.min(400);
+    let mut rng = Rng::seed_from_u64(4000);
+    for i in 0..n_replay {
+        let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+        live_engine.upsert((200_000 + i) as u32, &v).expect("upsert");
+    }
+    drop(live_engine);
+    let t3 = Instant::now();
+    let reopened = MipsEngine::open_live(&live_dir).expect("recovery open");
+    let wal_replay_ms = t3.elapsed().as_secs_f64() * 1e3;
+    let replayed = reopened.live_stats().expect("live stats").delta_items;
+    assert!(replayed >= n_replay as u64, "replay lost records: {replayed} < {n_replay}");
+    println!("  WAL replay: {replayed} delta rows recovered in {wal_replay_ms:.2}ms");
+    drop(reopened);
+    std::fs::remove_dir_all(&live_dir).ok();
+
     merge_bench_json_file(
         "BENCH_serve.json",
         "serve",
@@ -318,6 +465,21 @@ fn main() {
             ("degraded_fraction".into(), num(degraded_fraction)),
             ("query_p999_us".into(), num(pct(&over_lats, 0.999) as f64)),
             ("ping_p99_us".into(), num(ping_p99 as f64)),
+        ],
+    );
+    merge_bench_json_file(
+        "BENCH_serve.json",
+        "live",
+        vec![
+            ("mutations".into(), num(n_mut as f64)),
+            ("queries".into(), num(live_total as f64)),
+            ("throughput_qps".into(), num(live_qps)),
+            ("query_p50_us".into(), num(pct(&live_lats, 0.50) as f64)),
+            ("query_p99_us".into(), num(pct(&live_lats, 0.99) as f64)),
+            ("mutation_p99_us".into(), num(pct(&mut_lats, 0.99) as f64)),
+            ("compactions".into(), num(stats.compactions as f64)),
+            ("wal_replay_rows".into(), num(replayed as f64)),
+            ("wal_replay_ms".into(), num(wal_replay_ms)),
         ],
     );
     std::process::exit(0); // acceptor threads are still parked in accept()

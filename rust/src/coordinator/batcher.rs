@@ -38,7 +38,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::index::storage::Storage;
-use crate::index::{AnyIndex, MipsHashScheme, ProbeBudget, ScoredItem};
+use crate::index::{MipsHashScheme, ProbeBudget, ScoredItem};
 use crate::runtime::{ArtifactMeta, Runtime};
 
 use super::admission::{AdmissionConfig, LoadController, ServeError};
@@ -280,19 +280,20 @@ pub struct PjrtBatcher {
 /// Q-transform each row per the index's scheme, then one blocked pass
 /// over the stacked `[L·K × D']` matrix (shared by both index kinds —
 /// the banded index hashes queries with the same fused family set as the
-/// flat one, whatever the scheme). The scratch buffers are owned by the
-/// calling loop.
+/// flat one, whatever the scheme; a live engine's hasher is stable
+/// across base generations, so the codes stay valid through compaction
+/// swaps). The scratch buffers are owned by the calling loop.
 fn fused_hash_batch<S: Storage>(
-    index: &AnyIndex<S>,
+    engine: &MipsEngine<S>,
     rows: &[Vec<f32>],
     qx: &mut Vec<f32>,
     xs: &mut Vec<f32>,
     codes: &mut Vec<i32>,
 ) -> crate::Result<Vec<Vec<i32>>> {
-    let dim = index.dim();
-    let m = index.params().m;
-    let scheme = index.scheme();
-    let hasher = index.hasher();
+    let dim = engine.dim();
+    let m = engine.params().m;
+    let scheme = engine.scheme();
+    let hasher = engine.hasher();
     let nc = hasher.n_codes();
     xs.clear();
     for row in rows {
@@ -314,7 +315,7 @@ fn fused_hash_batch<S: Storage>(
 /// real backend failure would.
 fn primary_hash_once<S: Storage>(
     pjrt: &mut Option<(Runtime, ArtifactMeta, Vec<f32>, Vec<f32>)>,
-    index: &AnyIndex<S>,
+    engine: &MipsEngine<S>,
     rows: &[Vec<f32>],
     injected: bool,
     qx: &mut Vec<f32>,
@@ -324,7 +325,7 @@ fn primary_hash_once<S: Storage>(
     anyhow::ensure!(!injected, "injected hash failure (fault plan)");
     match pjrt {
         Some((runtime, meta, a_dk, b)) => runtime.run_hash(meta, rows, a_dk, b),
-        None => fused_hash_batch(index, rows, qx, xs, codes),
+        None => fused_hash_batch(engine, rows, qx, xs, codes),
     }
 }
 
@@ -348,9 +349,9 @@ impl PjrtBatcher {
         cfg: BatcherConfig,
     ) -> crate::Result<Self> {
         let dir = artifacts_dir.into();
-        let dim = engine.index().dim();
-        let m = engine.index().params().m;
-        let params = *engine.index().params();
+        let dim = engine.dim();
+        let m = engine.params().m;
+        let params = *engine.params();
         let lk = params.n_tables * params.k_per_table;
 
         // Probe the runtime on the caller thread for a fast error on real
@@ -410,7 +411,7 @@ impl PjrtBatcher {
         // serving path is single-probe today, so the degraded knobs are
         // the ones that cut real work.
         let frac = cfg.admission.degraded_table_frac;
-        let nb = engine.index().n_bands();
+        let nb = engine.n_bands();
         let degraded_budget = ProbeBudget {
             n_probes: 1,
             max_tables: ((params.n_tables as f64 * frac).ceil() as usize)
@@ -449,7 +450,6 @@ impl PjrtBatcher {
                     },
                     HashBackend::Fused => None,
                 };
-                let index = worker_engine.index();
                 let (mut qx, mut xs, mut codes) = (Vec::new(), Vec::new(), Vec::new());
                 let mut seq: usize = 0;
                 let mut reopen_at = Instant::now();
@@ -485,8 +485,8 @@ impl PjrtBatcher {
                         let mut last_err = None;
                         for attempt in 0..=retries {
                             match primary_hash_once(
-                                &mut pjrt, index, &job.rows, injected, &mut qx, &mut xs,
-                                &mut codes,
+                                &mut pjrt, &worker_engine, &job.rows, injected, &mut qx,
+                                &mut xs, &mut codes,
                             ) {
                                 Ok(rows) => {
                                     out = Some(rows);
@@ -522,12 +522,14 @@ impl PjrtBatcher {
                                     .store(BreakerState::Open as u8, Ordering::Relaxed);
                                 reopen_at = Instant::now() + cooldown;
                                 worker_metrics.record_pjrt_fallback();
-                                fused_hash_batch(index, &job.rows, &mut qx, &mut xs, &mut codes)
+                                fused_hash_batch(
+                                    &worker_engine, &job.rows, &mut qx, &mut xs, &mut codes,
+                                )
                             }
                         }
                     } else {
                         worker_metrics.record_pjrt_fallback();
-                        fused_hash_batch(index, &job.rows, &mut qx, &mut xs, &mut codes)
+                        fused_hash_batch(&worker_engine, &job.rows, &mut qx, &mut xs, &mut codes)
                     };
                     let _ = job.resp.send(res);
                 }
@@ -586,8 +588,8 @@ impl PjrtBatcher {
         // One scratch for the whole loop: probes + reranks are
         // allocation-free at steady state. The f-prefixed buffers back
         // the inline fused fallback (worker-death path only).
-        let mut scratch = engine.index().scratch();
-        let dim = engine.index().dim();
+        let mut scratch = engine.scratch();
+        let dim = engine.dim();
         let (mut fqx, mut fxs, mut fcodes) = (Vec::new(), Vec::new(), Vec::new());
         'outer: while let Ok(first) = rx.recv() {
             let Msg::Query(first) = first else { break };
@@ -663,7 +665,7 @@ impl PjrtBatcher {
                     crate::log_warn!(
                         "hash worker unavailable; serving batch inline via fused CPU path"
                     );
-                    fused_hash_batch(engine.index(), &rows, &mut fqx, &mut fxs, &mut fcodes)
+                    fused_hash_batch(&engine, &rows, &mut fqx, &mut fxs, &mut fcodes)
                 }
             };
             match hashed {
@@ -793,6 +795,51 @@ mod tests {
             assert_eq!(batched, engine.query(&q, 10));
         }
         batcher.shutdown();
+    }
+
+    /// A live engine behind the batcher: batched answers equal the
+    /// direct live path, and upserts/deletes land mid-stream without
+    /// disturbing the batcher (its fused hasher is generation-stable).
+    #[test]
+    fn fused_fallback_serves_live_engine_through_mutation() {
+        use crate::index::LiveConfig;
+        let dir = std::env::temp_dir().join(format!(
+            "alsh_batcher_live_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let its = items(300, 10, 50);
+        let engine = Arc::new(
+            MipsEngine::create_live(
+                &dir,
+                &its,
+                LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 51 },
+            )
+            .unwrap(),
+        );
+        let batcher = PjrtBatcher::spawn(
+            Arc::clone(&engine),
+            "definitely-not-an-artifacts-dir",
+            BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+        )
+        .expect("fused fallback must spawn for live engines");
+        let handle = batcher.handle();
+        let mut rng = Rng::seed_from_u64(52);
+        for round in 0..10 {
+            let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            let batched = handle.query(q.clone(), 10).expect("batched query");
+            assert_eq!(batched, engine.query(&q, 10));
+            // Mutate between rounds; later batches serve the new state.
+            engine.upsert(1000 + round, &its[round as usize]).unwrap();
+        }
+        engine.compact().unwrap();
+        let q: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+        assert_eq!(handle.query(q.clone(), 10).unwrap(), engine.query(&q, 10));
+        batcher.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

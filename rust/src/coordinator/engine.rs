@@ -1,30 +1,46 @@
 //! The per-shard query engine: ALSH index + exact rerank + metrics.
 
+use anyhow::bail;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::index::delta::LiveStorage;
 use crate::index::scratch::with_thread_scratch;
 use crate::index::storage::{Mapped, Owned, Storage};
 use crate::index::{
     AlshIndex, AlshParams, AnyIndex, BandedBuildStats, BandedParams, BuildOpts, BuildStats,
-    NormRangeIndex, ProbeBudget, QueryScratch, ScoredItem,
+    LiveConfig, LiveIndex, LiveStats, MipsHashScheme, NormRangeIndex, ProbeBudget, QueryScratch,
+    SchemeHasher, ScoredItem,
 };
+use crate::lsh::L2LshFamily;
 
 use super::metrics::Metrics;
+
+/// What the engine serves: a frozen index (heap or mmap) or the live
+/// mutable tier layered over one.
+enum EngineCore<S: Storage> {
+    Frozen(AnyIndex<S>),
+    Live(LiveIndex<S>),
+}
 
 /// A self-contained MIPS engine over one item collection, serving either
 /// the flat [`AlshIndex`] or the norm-range banded [`NormRangeIndex`]
 /// behind [`AnyIndex`] dispatch — over heap storage (the default) or a
-/// zero-copy mapped index ([`MipsEngine::open_mmap`]).
+/// zero-copy mapped index ([`MipsEngine::open_mmap`]) — or the live
+/// mutable tier ([`LiveIndex`], [`MipsEngine::open_live`]), which serves
+/// the same four query paths over a frozen base plus an in-memory delta
+/// and accepts crash-consistent [`MipsEngine::upsert`] /
+/// [`MipsEngine::delete`] while readers run.
 ///
 /// The allocation-free request path (`query_into` with a caller-owned
 /// [`QueryScratch`]) is used per-shard by the router and by the batcher;
 /// the PJRT-accelerated path hashes whole batches through the AOT
 /// artifact (see `batcher`) and re-enters here via `query_with_codes_into`
 /// — both index kinds consume the same `[L·K]` code rows, since the
-/// banded index shares one hash family set across its bands.
+/// banded index shares one hash family set across its bands (and the
+/// live tier shares its base's families across generations).
 pub struct MipsEngine<S: Storage = Owned> {
-    index: AnyIndex<S>,
+    core: EngineCore<S>,
     metrics: Arc<Metrics>,
 }
 
@@ -90,23 +106,199 @@ impl MipsEngine<Mapped> {
     }
 }
 
+impl<S: LiveStorage> MipsEngine<S> {
+    /// Create a live directory from an initial item set and serve it.
+    pub fn create_live(
+        dir: impl AsRef<std::path::Path>,
+        items: &[Vec<f32>],
+        cfg: LiveConfig,
+    ) -> crate::Result<Self> {
+        Ok(Self::from_live(LiveIndex::create(dir, items, cfg)?))
+    }
+
+    /// Open an existing live directory (manifest + base generation + WAL
+    /// replay — see `index::delta` for the recovery contract).
+    pub fn open_live(dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        Ok(Self::from_live(LiveIndex::open(dir)?))
+    }
+
+    /// Drain the live delta into a fresh frozen generation and swap it
+    /// in. Errors on a frozen engine.
+    pub fn compact(&self) -> crate::Result<u64> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                let generation = live.compact_once()?;
+                self.sync_live_metrics();
+                Ok(generation)
+            }
+            EngineCore::Frozen(_) => bail!("compact: engine serves a frozen index"),
+        }
+    }
+}
+
 impl<S: Storage> MipsEngine<S> {
     /// Wrap an already-built (or mapped) index of either kind.
     pub fn from_any(index: AnyIndex<S>) -> Self {
-        Self { index, metrics: Arc::new(Metrics::new()) }
+        Self { core: EngineCore::Frozen(index), metrics: Arc::new(Metrics::new()) }
     }
 
+    /// Wrap a live mutable index.
+    pub fn from_live(live: LiveIndex<S>) -> Self {
+        let engine = Self { core: EngineCore::Live(live), metrics: Arc::new(Metrics::new()) };
+        engine.sync_live_metrics();
+        engine
+    }
+
+    /// The frozen index. Panics on a live engine (the live tier swaps
+    /// its base generation under readers, so there is no stable handle
+    /// to lend out) — use the engine-level accessors (`dim`, `params`,
+    /// `scheme`, `hasher`, …) or [`MipsEngine::live`] instead.
     pub fn index(&self) -> &AnyIndex<S> {
-        &self.index
+        match &self.core {
+            EngineCore::Frozen(index) => index,
+            EngineCore::Live(_) => {
+                panic!("MipsEngine::index: live engine has no stable frozen index handle")
+            }
+        }
+    }
+
+    /// The live tier, if this engine serves one.
+    pub fn live(&self) -> Option<&LiveIndex<S>> {
+        match &self.core {
+            EngineCore::Live(live) => Some(live),
+            EngineCore::Frozen(_) => None,
+        }
+    }
+
+    /// Whether this engine serves the live mutable tier.
+    pub fn is_live(&self) -> bool {
+        matches!(self.core, EngineCore::Live(_))
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
     }
 
+    /// Item dimensionality.
+    pub fn dim(&self) -> usize {
+        match &self.core {
+            EngineCore::Frozen(index) => index.dim(),
+            EngineCore::Live(live) => live.dim(),
+        }
+    }
+
+    /// Current logical item count (for a live engine: base − tombstones
+    /// + delta).
+    pub fn n_items(&self) -> usize {
+        match &self.core {
+            EngineCore::Frozen(index) => index.n_items(),
+            EngineCore::Live(live) => live.n_items(),
+        }
+    }
+
+    /// Norm bands (1 = flat layout).
+    pub fn n_bands(&self) -> usize {
+        match &self.core {
+            EngineCore::Frozen(index) => index.n_bands(),
+            EngineCore::Live(live) => live.n_bands(),
+        }
+    }
+
+    /// ALSH parameters.
+    pub fn params(&self) -> &AlshParams {
+        match &self.core {
+            EngineCore::Frozen(index) => index.params(),
+            EngineCore::Live(live) => live.params(),
+        }
+    }
+
+    /// The hash scheme.
+    pub fn scheme(&self) -> MipsHashScheme {
+        match &self.core {
+            EngineCore::Frozen(index) => index.scheme(),
+            EngineCore::Live(live) => live.scheme(),
+        }
+    }
+
+    /// The fused multi-table hasher (batcher CPU fallback; stable across
+    /// live generations because every generation rebuilds from the same
+    /// seed).
+    pub fn hasher(&self) -> &SchemeHasher {
+        match &self.core {
+            EngineCore::Frozen(index) => index.hasher(),
+            EngineCore::Live(live) => live.hasher(),
+        }
+    }
+
+    /// The L2 hash families (PJRT artifact inputs). Panics for SRP
+    /// schemes, matching [`AnyIndex::families`].
+    pub fn families(&self) -> &[L2LshFamily] {
+        match &self.core {
+            EngineCore::Frozen(index) => index.families(),
+            EngineCore::Live(live) => live
+                .scheme_families()
+                .as_l2()
+                .expect("families: SRP-scheme index has no L2 families"),
+        }
+    }
+
+    /// Point-in-time live-tier counters; `None` on a frozen engine.
+    pub fn live_stats(&self) -> Option<LiveStats> {
+        self.live().map(|live| live.stats())
+    }
+
+    /// Upsert (insert or replace) an item by external id. Errors on a
+    /// frozen engine; the WAL append is durable before this returns.
+    pub fn upsert(&self, ext_id: u32, vector: &[f32]) -> crate::Result<()> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                live.upsert(ext_id, vector)?;
+                self.sync_live_metrics();
+                Ok(())
+            }
+            EngineCore::Frozen(_) => {
+                bail!("upsert: engine serves a frozen index (open a live directory to mutate)")
+            }
+        }
+    }
+
+    /// Delete an item by external id (idempotent). Errors on a frozen
+    /// engine; the WAL append is durable before this returns.
+    pub fn delete(&self, ext_id: u32) -> crate::Result<()> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                live.delete(ext_id)?;
+                self.sync_live_metrics();
+                Ok(())
+            }
+            EngineCore::Frozen(_) => {
+                bail!("delete: engine serves a frozen index (open a live directory to mutate)")
+            }
+        }
+    }
+
+    /// Push the live tier's current counters into the metrics gauges.
+    /// No-op on a frozen engine.
+    fn sync_live_metrics(&self) {
+        if let EngineCore::Live(live) = &self.core {
+            self.metrics.record_live_stats(&live.stats());
+        }
+    }
+
+    /// A metrics snapshot with the live-tier gauges refreshed first, so
+    /// background-compactor progress is visible without a mutation in
+    /// between.
+    pub fn metrics_snapshot(&self) -> super::metrics::MetricsSnapshot {
+        self.sync_live_metrics();
+        self.metrics.snapshot()
+    }
+
     /// A scratch pre-sized for this engine's index.
     pub fn scratch(&self) -> QueryScratch {
-        self.index.scratch()
+        match &self.core {
+            EngineCore::Frozen(index) => index.scratch(),
+            EngineCore::Live(live) => live.scratch(),
+        }
     }
 
     /// Allocation-free query path: Q-transform + fused hash + CSR probe +
@@ -117,12 +309,7 @@ impl<S: Storage> MipsEngine<S> {
         top_k: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
-        let t0 = Instant::now();
-        self.index.candidates_into(query, s);
-        let n_cands = s.candidates().len();
-        let out = self.index.rerank_into(query, top_k, s);
-        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
-        out
+        self.query_budgeted_into(query, top_k, ProbeBudget::full(), s)
     }
 
     /// PJRT path re-entry: the batcher already hashed this query (via the
@@ -135,12 +322,7 @@ impl<S: Storage> MipsEngine<S> {
         top_k: usize,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
-        let t0 = Instant::now();
-        self.index.candidates_from_codes_into(codes, s);
-        let n_cands = s.candidates().len();
-        let out = self.index.rerank_into(query, top_k, s);
-        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
-        out
+        self.query_with_codes_budgeted_into(query, codes, top_k, ProbeBudget::full(), s)
     }
 
     /// Budgeted query path (degraded serving): same shape as
@@ -154,11 +336,21 @@ impl<S: Storage> MipsEngine<S> {
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
         let t0 = Instant::now();
-        self.index.candidates_budgeted_into(query, budget, s);
-        let n_cands = s.candidates().len();
-        let out = self.index.rerank_into(query, top_k, s);
-        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
-        out
+        match &self.core {
+            EngineCore::Frozen(index) => {
+                index.candidates_budgeted_into(query, budget, s);
+                let n_cands = s.candidates().len();
+                let out = index.rerank_into(query, top_k, s);
+                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+                out
+            }
+            EngineCore::Live(live) => {
+                let n_top = live.query_budgeted_into(query, top_k, budget, s).len();
+                let n_cands = s.candidates().len();
+                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+                &s.top[..n_top]
+            }
+        }
     }
 
     /// Budgeted code-fed re-entry (the degraded batcher path): the hash
@@ -172,11 +364,21 @@ impl<S: Storage> MipsEngine<S> {
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
         let t0 = Instant::now();
-        self.index.candidates_from_codes_budgeted_into(codes, budget, s);
-        let n_cands = s.candidates().len();
-        let out = self.index.rerank_into(query, top_k, s);
-        self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
-        out
+        match &self.core {
+            EngineCore::Frozen(index) => {
+                index.candidates_from_codes_budgeted_into(codes, budget, s);
+                let n_cands = s.candidates().len();
+                let out = index.rerank_into(query, top_k, s);
+                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+                out
+            }
+            EngineCore::Live(live) => {
+                let n_top = live.query_from_codes_budgeted_into(codes, query, top_k, budget, s).len();
+                let n_cands = s.candidates().len();
+                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+                &s.top[..n_top]
+            }
+        }
     }
 
     /// Allocating convenience wrapper over [`MipsEngine::query_into`]
@@ -204,8 +406,8 @@ impl<S: Storage> MipsEngine<S> {
     /// through the fused CPU path), and an SRP index has no L2 families
     /// to concatenate.
     pub fn concat_family_inputs(&self, k_total: usize) -> (Vec<f32>, Vec<f32>) {
-        let p = self.index.params();
-        let dp = self.index.dim() + p.m;
+        let p = self.params();
+        let dp = self.dim() + p.m;
         let l = p.n_tables;
         let k = p.k_per_table;
         assert!(
@@ -215,7 +417,7 @@ impl<S: Storage> MipsEngine<S> {
         );
         let mut a = vec![0.0f32; dp * k_total];
         let mut b = vec![0.0f32; k_total];
-        for (t, fam) in self.index.families().iter().enumerate() {
+        for (t, fam) in self.families().iter().enumerate() {
             let fam_a = fam.a_matrix_dk(); // [dp, k]
             for d in 0..dp {
                 for j in 0..k {
@@ -349,6 +551,60 @@ mod tests {
                 assert_eq!(code, want[j], "table {t} hash {j}");
             }
         }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "alsh_engine_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn live_engine_matches_live_index_and_mutates() {
+        let dir = tmp_dir("live");
+        let its = items(120, 8, 40);
+        let cfg = LiveConfig::default();
+        let eng = MipsEngine::create_live(&dir, &its, cfg).unwrap();
+        let live = LiveIndex::<Owned>::open(&dir).unwrap();
+        assert!(eng.is_live());
+        assert_eq!(eng.dim(), 8);
+        assert_eq!(eng.n_items(), 120);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert_eq!(eng.query(&q, 5), live.query(&q, 5));
+        // Mutations flow through and the gauges follow.
+        eng.upsert(700, &its[3]).unwrap();
+        eng.delete(5).unwrap();
+        assert_eq!(eng.n_items(), 120);
+        let stats = eng.live_stats().unwrap();
+        assert_eq!(stats.delta_items, 1);
+        assert_eq!(stats.tombstones, 1);
+        let snap = eng.metrics_snapshot();
+        assert_eq!(snap.delta_items, 1);
+        assert_eq!(snap.tombstones, 1);
+        assert!(snap.wal_bytes > 0);
+        // Compaction drains the delta into generation 1.
+        assert_eq!(eng.compact().unwrap(), 1);
+        let snap = eng.metrics_snapshot();
+        assert_eq!(snap.delta_items, 0);
+        assert_eq!(snap.compactions, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn frozen_engine_rejects_mutation() {
+        let eng = MipsEngine::new(&items(50, 6, 41), AlshParams::default(), 42);
+        assert!(!eng.is_live());
+        assert!(eng.live_stats().is_none());
+        assert!(eng.upsert(1, &[0.0; 6]).is_err());
+        assert!(eng.delete(1).is_err());
+        assert!(eng.compact().is_err());
     }
 
     #[test]

@@ -7,8 +7,16 @@
 //! probe budget), `pjrt_fallbacks` (batches the circuit breaker routed to
 //! the fused CPU path), and a live `queue_depth` gauge the
 //! [`super::admission::LoadController`] reads as its fill signal.
+//!
+//! A mutable engine additionally publishes the live-tier gauges
+//! (`delta_items`, `tombstones`, `compactions`, `wal_bytes`,
+//! `last_compaction_ms`) via [`Metrics::record_live_stats`] — refreshed
+//! by [`super::MipsEngine::metrics_snapshot`] so background-compactor
+//! progress is visible without an intervening mutation.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::index::LiveStats;
 
 /// Number of log2 latency buckets. Bucket 0 covers `[0, 2)` µs (the
 /// sub-microsecond samples — explicitly, not via clamping); bucket
@@ -34,6 +42,14 @@ pub struct Metrics {
     pub pjrt_fallbacks: AtomicU64,
     /// Live admission-queue depth (gauge, not a counter).
     queue_depth: AtomicU64,
+    /// Live-tier gauges (all zero on a frozen engine): rows in the
+    /// mutable delta, dead rows awaiting compaction, compactions run,
+    /// current WAL length, and the last compaction's wall time.
+    pub delta_items: AtomicU64,
+    pub tombstones: AtomicU64,
+    pub compactions: AtomicU64,
+    pub wal_bytes: AtomicU64,
+    pub last_compaction_ms: AtomicU64,
     latency_us: [AtomicU64; N_BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -107,6 +123,15 @@ impl Metrics {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Publish the live tier's point-in-time counters as gauges.
+    pub fn record_live_stats(&self, s: &LiveStats) {
+        self.delta_items.store(s.delta_items, Ordering::Relaxed);
+        self.tombstones.store(s.tombstones, Ordering::Relaxed);
+        self.compactions.store(s.compactions, Ordering::Relaxed);
+        self.wal_bytes.store(s.wal_bytes, Ordering::Relaxed);
+        self.last_compaction_ms.store(s.last_compaction_ms, Ordering::Relaxed);
+    }
+
     /// Consistent-enough snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
@@ -123,6 +148,11 @@ impl Metrics {
             degraded_queries: self.degraded_queries.load(Ordering::Relaxed),
             pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            delta_items: self.delta_items.load(Ordering::Relaxed),
+            tombstones: self.tombstones.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
+            last_compaction_ms: self.last_compaction_ms.load(Ordering::Relaxed),
             mean_latency_us: if queries > 0 {
                 self.latency_sum_us.load(Ordering::Relaxed) as f64 / queries as f64
             } else {
@@ -164,6 +194,11 @@ pub struct MetricsSnapshot {
     pub degraded_queries: u64,
     pub pjrt_fallbacks: u64,
     pub queue_depth: u64,
+    pub delta_items: u64,
+    pub tombstones: u64,
+    pub compactions: u64,
+    pub wal_bytes: u64,
+    pub last_compaction_ms: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -263,5 +298,34 @@ mod tests {
         m.record_queue_pop();
         m.record_queue_pop();
         assert_eq!(m.queue_depth(), 0);
+    }
+
+    #[test]
+    fn live_gauges_overwrite_not_accumulate() {
+        let m = Metrics::new();
+        m.record_live_stats(&LiveStats {
+            delta_items: 3,
+            tombstones: 2,
+            compactions: 1,
+            wal_bytes: 640,
+            last_compaction_ms: 12,
+            generation: 1,
+            n_items: 100,
+        });
+        m.record_live_stats(&LiveStats {
+            delta_items: 0,
+            tombstones: 0,
+            compactions: 2,
+            wal_bytes: 0,
+            last_compaction_ms: 9,
+            generation: 2,
+            n_items: 100,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.delta_items, 0);
+        assert_eq!(s.tombstones, 0);
+        assert_eq!(s.compactions, 2);
+        assert_eq!(s.wal_bytes, 0);
+        assert_eq!(s.last_compaction_ms, 9);
     }
 }

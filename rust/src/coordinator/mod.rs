@@ -44,6 +44,17 @@
 //! live batch (`Open → HalfOpen → Closed` on success). A test-only
 //! [`FaultPlan`] injects latency spikes, batch failures, and poisoned
 //! workers to prove readers never hang through any of this.
+//!
+//! **Live mutation.** A [`MipsEngine`] can serve the crash-consistent
+//! live tier ([`crate::index::LiveIndex`], [`MipsEngine::open_live`])
+//! instead of a frozen index: the server's `upsert`/`delete` commands
+//! WAL-log and apply mutations while readers keep running lock-free on
+//! epoch-swapped snapshots, and a background compactor drains the delta
+//! back into a fresh frozen generation. The whole serving stack —
+//! batcher fan-out (its fused hasher is generation-stable), budgeted
+//! degradation, router sharding — works unchanged on top, and the
+//! live-tier gauges flow through [`Metrics`] into the `metrics`
+//! command.
 
 pub mod admission;
 pub mod batcher;

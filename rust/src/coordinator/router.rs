@@ -86,19 +86,15 @@ impl<S: Storage> ShardedRouter<S> {
     /// sizes. All shards must serve the same item dimension.
     pub fn from_engines(shards: Vec<MipsEngine<S>>) -> crate::Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "no shard engines given");
-        let dim = shards[0].index().dim();
+        let dim = shards[0].dim();
         let mut offsets = Vec::with_capacity(shards.len());
         let mut next = 0u64;
         for e in &shards {
-            anyhow::ensure!(
-                e.index().dim() == dim,
-                "shard dim {} != {dim}",
-                e.index().dim()
-            );
+            anyhow::ensure!(e.dim() == dim, "shard dim {} != {dim}", e.dim());
             offsets.push(u32::try_from(next).map_err(|_| {
                 anyhow::anyhow!("total items across shards overflow u32 global ids")
             })?);
-            next += e.index().n_items() as u64;
+            next += e.n_items() as u64;
         }
         anyhow::ensure!(next <= u32::MAX as u64 + 1, "total items overflow u32 global ids");
         Ok(Self { shards, offsets, dim })
@@ -246,7 +242,7 @@ mod tests {
             31,
         );
         assert_eq!(router.n_shards(), 4);
-        assert_eq!(router.shard(0).index().n_bands(), 3);
+        assert_eq!(router.shard(0).n_bands(), 3);
         let mut s = QueryScratch::new();
         let mut rng = Rng::seed_from_u64(32);
         for _ in 0..10 {
@@ -268,6 +264,41 @@ mod tests {
         for w in out.windows(2) {
             assert!(w[0].score >= w[1].score);
         }
+    }
+
+    /// A live shard routes next to frozen ones: the router only sees the
+    /// engine query surface, so mutations on one shard show up in merged
+    /// results with correctly translated global ids.
+    #[test]
+    fn live_shard_mutates_behind_router() {
+        use crate::index::LiveConfig;
+        let dir = std::env::temp_dir().join(format!(
+            "alsh_router_live_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let its = items(200, 6, 60);
+        let frozen = MipsEngine::new(&its[..100], AlshParams::default(), 61);
+        let live = MipsEngine::create_live(
+            &dir,
+            &its[100..],
+            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 61 },
+        )
+        .unwrap();
+        let router = ShardedRouter::from_engines(vec![frozen, live]).unwrap();
+        assert_eq!(router.n_shards(), 2);
+        let q: Vec<f32> = (0..6).map(|i| (i as f32 * 0.43).cos()).collect();
+        let before = router.query(&q, 10);
+        assert!(before.iter().all(|h| (h.id as usize) < 200));
+        // Mutate the live shard; shard-local ext id 7 dies, so global id
+        // 107 must vanish from every later merged result.
+        router.shard(1).delete(7).unwrap();
+        let after = router.query(&q, 200);
+        assert!(after.iter().all(|h| h.id != 107), "deleted item resurfaced");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

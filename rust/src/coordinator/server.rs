@@ -9,7 +9,19 @@
 //! ← {"ok": true, "metrics": {...}}
 //! → {"cmd": "ping"}
 //! ← {"ok": true}
+//! → {"cmd": "upsert", "id": 42, "vector": [0.1, ...]}
+//! ← {"ok": true, "n_items": 1001}
+//! → {"cmd": "delete", "id": 42}
+//! ← {"ok": true, "n_items": 1000}
 //! ```
+//!
+//! `upsert`/`delete` mutate a live engine ([`MipsEngine::open_live`]):
+//! the WAL append is durable before the `ok` line is written, and the
+//! new state is visible to every query admitted afterwards. Against a
+//! frozen engine both commands answer `invalid_argument`. The `metrics`
+//! command additionally reports the live-tier gauges (`delta_items`,
+//! `tombstones`, `compactions`, `wal_bytes`, `last_compaction_ms` — all
+//! zero on a frozen engine).
 //!
 //! Every failure is a structured `{"ok": false, "code": ..., "error": ...}`
 //! line — `invalid_argument` (malformed/non-finite vector, bad `top_k`,
@@ -81,7 +93,7 @@ pub fn handle_request(
     match req.get("cmd").and_then(Json::as_str) {
         Some("ping") => obj(vec![("ok", Json::Bool(true))]),
         Some("metrics") => {
-            let s = engine.metrics().snapshot();
+            let s = engine.metrics_snapshot();
             let breaker = match handle.breaker_state() {
                 BreakerState::Closed => "closed",
                 BreakerState::Open => "open",
@@ -102,6 +114,11 @@ pub fn handle_request(
                         ("degraded_queries", Json::Num(s.degraded_queries as f64)),
                         ("pjrt_fallbacks", Json::Num(s.pjrt_fallbacks as f64)),
                         ("queue_depth", Json::Num(s.queue_depth as f64)),
+                        ("delta_items", Json::Num(s.delta_items as f64)),
+                        ("tombstones", Json::Num(s.tombstones as f64)),
+                        ("compactions", Json::Num(s.compactions as f64)),
+                        ("wal_bytes", Json::Num(s.wal_bytes as f64)),
+                        ("last_compaction_ms", Json::Num(s.last_compaction_ms as f64)),
                         ("load_level", Json::Num(handle.level() as f64)),
                         ("breaker", Json::Str(breaker.into())),
                         ("mean_latency_us", Json::Num(s.mean_latency_us)),
@@ -111,6 +128,54 @@ pub fn handle_request(
                     ]),
                 ),
             ])
+        }
+        Some("upsert") => {
+            let Some(id) = parse_ext_id(&req) else {
+                return err_response("invalid_argument", "id must be an integer in u32 range");
+            };
+            let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
+                return err_response("invalid_argument", "missing or malformed vector");
+            };
+            if vector.iter().any(|v| !v.is_finite()) {
+                return err_response("invalid_argument", "vector contains non-finite components");
+            }
+            if vector.len() != engine.dim() {
+                return err_response(
+                    "invalid_argument",
+                    format!("vector dim {} != index dim {}", vector.len(), engine.dim()),
+                );
+            }
+            if !engine.is_live() {
+                return err_response(
+                    "invalid_argument",
+                    "engine serves a frozen index; upsert requires a live index",
+                );
+            }
+            match engine.upsert(id, &vector) {
+                Ok(()) => obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("n_items", Json::Num(engine.n_items() as f64)),
+                ]),
+                Err(e) => err_response("internal", format!("upsert failed: {e:#}")),
+            }
+        }
+        Some("delete") => {
+            let Some(id) = parse_ext_id(&req) else {
+                return err_response("invalid_argument", "id must be an integer in u32 range");
+            };
+            if !engine.is_live() {
+                return err_response(
+                    "invalid_argument",
+                    "engine serves a frozen index; delete requires a live index",
+                );
+            }
+            match engine.delete(id) {
+                Ok(()) => obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("n_items", Json::Num(engine.n_items() as f64)),
+                ]),
+                Err(e) => err_response("internal", format!("delete failed: {e:#}")),
+            }
         }
         Some(other) => err_response("invalid_argument", format!("unknown cmd {other:?}")),
         None => {
@@ -125,14 +190,10 @@ pub fn handle_request(
                     "vector contains non-finite components",
                 );
             }
-            if vector.len() != engine.index().dim() {
+            if vector.len() != engine.dim() {
                 return err_response(
                     "invalid_argument",
-                    format!(
-                        "vector dim {} != index dim {}",
-                        vector.len(),
-                        engine.index().dim()
-                    ),
+                    format!("vector dim {} != index dim {}", vector.len(), engine.dim()),
                 );
             }
             let top_k = match req.get("top_k") {
@@ -192,6 +253,13 @@ pub fn handle_request(
             }
         }
     }
+}
+
+/// The `id` field of a mutation command, if it is an integer that fits
+/// an external item id (u32).
+fn parse_ext_id(req: &Json) -> Option<u32> {
+    let id = req.get("id")?.as_usize()?;
+    u32::try_from(id).ok()
 }
 
 /// Drop bytes until (and including) the next newline — the tail of an

@@ -1,0 +1,1365 @@
+//! Live mutable index tier: crash-consistent upserts/deletes under
+//! concurrent readers, with verified background compaction.
+//!
+//! A [`LiveIndex`] layers a mutable **delta** over a frozen base
+//! generation (any [`AnyIndex`] layout — flat or banded, heap or mmap).
+//! Every query path replays the query's codes against both layers in one
+//! dedup pass and reranks the union with the shared exact kernel, so a
+//! live index with an **empty** delta returns results byte-identical to
+//! its frozen base.
+//!
+//! # On-disk layout and recovery contract
+//!
+//! A live index owns a directory:
+//!
+//! ```text
+//! MANIFEST        current generation G + build seed (atomic rename, checksummed)
+//! gen-<G>.alsh    the frozen base for generation G (v5 container)
+//! gen-<G>.ids     external ids of the base rows, ascending (checksummed)
+//! wal-<G>.log     append-only WAL of mutations since gen-<G> (see `index::wal`)
+//! ```
+//!
+//! Every upsert/delete is appended to the WAL — checksummed, `fsync`'d —
+//! **before** it is applied in memory, so the on-disk state is always
+//! `snapshot ⊕ durable WAL prefix`. Recovery ([`LiveIndex::open`]) reads
+//! the MANIFEST, opens the generation it names, replays the WAL over it
+//! (truncating a torn tail at the first bad record), and reaches a state
+//! byte-equal to a from-scratch instance that applied the same surviving
+//! mutation prefix live (property-tested in `tests/crash_recovery.rs`).
+//! Files from other generations and stale `*.tmp.*` save leftovers are
+//! swept on open — they are compaction or save attempts that never
+//! reached their MANIFEST commit point.
+//!
+//! # Reader guarantee (epoch snapshot swap)
+//!
+//! Readers never take a lock on the query path's steady state. The
+//! current [`LiveSnapshot`] (base generation + delta) is published
+//! through an epoch cell: one atomic generation counter plus a mutex'd
+//! `Arc` slot that writers replace wholesale. Each reader caches the
+//! `(cell, generation, Arc)` triple in its [`QueryScratch`]; while the
+//! generation is unchanged a query costs one atomic load, and when it
+//! has changed the reader re-clones the `Arc` under a lock held only for
+//! that clone — never while building, hashing, or compacting. Queries
+//! then run entirely against their snapshot, so a reader mid-query is
+//! immune to concurrent mutations and compaction swaps (asserted by the
+//! serve-while-compacting tests in `tests/live_mutation.rs`).
+//!
+//! # Delta structure
+//!
+//! The delta holds, per snapshot: appended rows (`vectors`), per-table
+//! sorted `(bucket key, row)` runs binary-searched with the **same**
+//! scheme codes the frozen tables are keyed by, a tombstone bitset over
+//! base rows, and the external-id maps. Upserting an id that lives in
+//! the base tombstones the base row and appends a delta row; upserting
+//! an id already in the delta kills the old delta row. Internally ids
+//! are dense: `0..n_base` are base rows, `n_base..` index delta rows,
+//! and results are translated back to external ids after rerank.
+//!
+//! # Norm-band migration
+//!
+//! Over a banded base, a delta row is hashed with the scale factor of
+//! the band whose frozen `[min_norm, max_norm]` range covers its norm
+//! (clamped to the extreme bands when it falls outside every range —
+//! the approximation-quality cost of serving a drifted norm from a
+//! frozen banding). When an upsert changes an item's norm across a band
+//! boundary, the delta row simply carries its new band assignment; the
+//! next compaction re-fits the band partition and per-band U scales over
+//! the live item set, completing the migration exactly.
+//!
+//! # Compaction
+//!
+//! [`LiveIndex::compact_once`] collects the live rows (base minus
+//! tombstones, plus live delta rows), sorted by external id, and
+//! rebuilds a frozen index with the **original** seed and params through
+//! the normal sharded build pipeline — so the new generation is
+//! byte-identical to a from-scratch build over the same logical item
+//! set. The protocol: write `gen-<G+1>.alsh` + `gen-<G+1>.ids`, create
+//! an empty `wal-<G+1>.log`, then atomically rename the new MANIFEST —
+//! the single commit point — then swap the in-memory snapshot and sweep
+//! old-generation files. A crash (or injected [`CompactorFaultPlan`]
+//! fault) before the MANIFEST rename recovers to the old generation
+//! plus its WAL; after it, to the new generation with an empty delta.
+//! Mutations stall for the duration of a compaction (they share the
+//! writer lock); readers never do.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
+
+use super::any::AnyIndex;
+use super::banded::{BandedParams, NormRangeIndex};
+use super::budget::ProbeBudget;
+use super::core::{AlshIndex, AlshParams, ScoredItem};
+use super::multiprobe::for_each_probe_key;
+use super::persist::{self, PersistFormat};
+use super::rerank::rerank_dual_into;
+use super::scheme::{SchemeFamilies, SchemeHasher};
+use super::scratch::QueryScratch;
+use super::storage::{Mapped, Owned, Storage};
+use super::wal::{Wal, WalRecord};
+use crate::util::xxh64;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+const MANIFEST_MAGIC: &[u8; 8] = b"ALSHLIV1";
+const MANIFEST_SEED: u64 = 0xA15B_11FE;
+const IDS_MAGIC: &[u8; 8] = b"ALSHIDS1";
+const IDS_SEED: u64 = 0xA15B_01D5;
+
+/// How each live generation's base file is opened: heap
+/// ([`Owned`], streaming load) or zero-copy ([`Mapped`], `open_mmap`).
+/// The base is *always* served from the persisted generation file —
+/// even right after [`LiveIndex::create`] — so the serving state is the
+/// recovery state by construction.
+pub trait LiveStorage: Storage + Sized {
+    /// Open a generation's base index file in this storage.
+    fn open_base(path: &Path) -> Result<AnyIndex<Self>>;
+}
+
+impl LiveStorage for Owned {
+    fn open_base(path: &Path) -> Result<AnyIndex<Self>> {
+        persist::load_any(path)
+    }
+}
+
+impl LiveStorage for Mapped {
+    fn open_base(path: &Path) -> Result<AnyIndex<Self>> {
+        persist::open_mmap(path)
+    }
+}
+
+/// Build-time configuration for a new live index directory.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveConfig {
+    /// ALSH parameters for every generation's frozen base.
+    pub params: AlshParams,
+    /// Norm bands per generation: `<= 1` builds the flat layout,
+    /// otherwise the norm-range banded layout.
+    pub n_bands: usize,
+    /// Build seed, persisted in the MANIFEST: every compaction rebuilds
+    /// with it, so the hash families — and therefore the delta's bucket
+    /// keys — are stable across generations.
+    pub seed: u64,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self { params: AlshParams::default(), n_bands: 1, seed: 0x5EED }
+    }
+}
+
+/// Fault-injection plan for the compactor (the crash-consistency test
+/// harness; all-off in production). An injected crash abandons the
+/// remaining protocol steps and marks the writer defunct — exactly the
+/// on-disk state a real crash at that point leaves — after which the
+/// instance should be dropped and the directory re-opened.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompactorFaultPlan {
+    /// Crash after writing the new generation's files but before the
+    /// MANIFEST rename (recovery must land on the *old* generation).
+    pub crash_before_manifest: bool,
+    /// Crash right after the MANIFEST rename, before the in-memory swap
+    /// and old-file sweep (recovery must land on the *new* generation).
+    pub crash_after_manifest: bool,
+    /// Panic at compaction entry — poisons a background compactor
+    /// thread while leaving serving untouched.
+    pub poison: bool,
+}
+
+/// Point-in-time live counters (mirrored into `coordinator::metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LiveStats {
+    /// Live (non-superseded) delta rows.
+    pub delta_items: u64,
+    /// Tombstoned base rows plus dead (superseded/deleted) delta rows.
+    pub tombstones: u64,
+    /// Completed compactions over this instance's lifetime.
+    pub compactions: u64,
+    /// Current WAL file length in bytes.
+    pub wal_bytes: u64,
+    /// Wall-clock milliseconds of the most recent compaction.
+    pub last_compaction_ms: u64,
+    /// Current base generation number.
+    pub generation: u64,
+    /// Logical item count (base − tombstones + live delta rows).
+    pub n_items: u64,
+}
+
+/// One delta row's bookkeeping; the vector lives at the same row index
+/// in `DeltaState::vectors`.
+#[derive(Clone, Copy, Debug)]
+struct DeltaEntry {
+    ext_id: u32,
+    /// Band the row was hashed under (0 for a flat base).
+    band: u32,
+    alive: bool,
+}
+
+/// The mutable overlay, cloned copy-on-write per mutation so published
+/// snapshots stay immutable. Compaction bounds its size, so the clone
+/// is O(delta), not O(corpus).
+#[derive(Clone, Debug, Default)]
+struct DeltaState {
+    entries: Vec<DeltaEntry>,
+    /// `[entries.len() × dim]` row-major delta rows (dead rows keep
+    /// their slot; rerank only visits alive ones).
+    vectors: Vec<f32>,
+    /// Per table: `(bucket key, delta row)` sorted ascending — the
+    /// mutable twin of the frozen CSR, probed by binary search with the
+    /// same `SchemeHasher` codes.
+    runs: Vec<Vec<(u64, u32)>>,
+    /// External id → live delta row.
+    ext_to_row: HashMap<u32, u32>,
+    /// Tombstone bitset over base rows.
+    base_dead: Vec<u64>,
+    n_base_dead: usize,
+    n_alive: usize,
+}
+
+impl DeltaState {
+    fn empty(n_tables: usize) -> Self {
+        Self { runs: vec![Vec::new(); n_tables], ..Self::default() }
+    }
+
+    fn base_is_dead(&self, id: u32) -> bool {
+        self.base_dead
+            .get(id as usize / 64)
+            .is_some_and(|w| w & (1u64 << (id % 64)) != 0)
+    }
+
+    fn kill_base(&mut self, id: u32, n_base: usize) {
+        if self.base_dead.is_empty() {
+            self.base_dead = vec![0; n_base.div_ceil(64)];
+        }
+        let w = &mut self.base_dead[id as usize / 64];
+        let bit = 1u64 << (id % 64);
+        if *w & bit == 0 {
+            *w |= bit;
+            self.n_base_dead += 1;
+        }
+    }
+
+    /// Push every alive row in table `t`'s run under `key` into the
+    /// dedup sink as a global id (`n_base + row`), skipping rows whose
+    /// band is outside the budgeted band set.
+    fn probe_run(
+        &self,
+        t: usize,
+        key: u64,
+        band_min: u32,
+        n_base: usize,
+        sink: &mut super::scratch::DedupSink<'_>,
+    ) {
+        let run = &self.runs[t];
+        let lo = run.partition_point(|&(k, _)| k < key);
+        for &(k, row) in &run[lo..] {
+            if k != key {
+                break;
+            }
+            let e = &self.entries[row as usize];
+            if e.alive && e.band >= band_min {
+                sink.extend(&[(n_base + row as usize) as u32]);
+            }
+        }
+    }
+}
+
+/// One frozen base generation as served: the index, its external ids
+/// (ascending, one per base row), and the generation number.
+struct BaseGen<S: Storage> {
+    index: AnyIndex<S>,
+    ids: Vec<u32>,
+    gen: u64,
+}
+
+/// An immutable point-in-time view of the live index: a frozen base
+/// generation plus the delta accumulated over it. Published wholesale
+/// through the epoch cell; queries run entirely against one snapshot.
+pub struct LiveSnapshot<S: Storage> {
+    base: Arc<BaseGen<S>>,
+    delta: DeltaState,
+}
+
+impl<S: Storage> LiveSnapshot<S> {
+    fn n_base(&self) -> usize {
+        self.base.index.n_items()
+    }
+
+    fn n_items(&self) -> usize {
+        self.n_base() - self.delta.n_base_dead + self.delta.n_alive
+    }
+}
+
+/// Epoch-swapped snapshot cell: an atomic generation plus a mutex'd
+/// `Arc` slot. Writers bump the generation under the lock; readers with
+/// a current cached generation never touch the lock (see module docs).
+struct EpochCell<T> {
+    /// Process-unique cell id, so a scratch's cached snapshot can never
+    /// be mistaken for another index's at an equal generation.
+    id: u64,
+    generation: AtomicU64,
+    slot: Mutex<Arc<T>>,
+}
+
+static CELL_IDS: AtomicU64 = AtomicU64::new(1);
+
+impl<T> EpochCell<T> {
+    fn new(value: Arc<T>) -> Self {
+        Self {
+            id: CELL_IDS.fetch_add(1, Ordering::Relaxed),
+            generation: AtomicU64::new(1),
+            slot: Mutex::new(value),
+        }
+    }
+
+    fn publish(&self, value: Arc<T>) {
+        let mut slot = lock(&self.slot);
+        *slot = value;
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    /// Clone the current snapshot with the generation it was read at
+    /// (consistent: read under the same lock publish holds).
+    fn read(&self) -> (u64, Arc<T>) {
+        let slot = lock(&self.slot);
+        (self.generation.load(Ordering::Acquire), slot.clone())
+    }
+}
+
+/// Lock that survives a poisoned-by-panic mutex: the injected compactor
+/// poison panics before any in-memory mutation, so the guarded state is
+/// intact and serving must continue (the poisoned-compactor drill).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Writer-side state: the WAL and generation under one lock, so
+/// mutations and compactions serialize while readers stay lock-free.
+struct WriterState {
+    wal: Wal,
+    gen: u64,
+    /// Set by an injected crash: the instance is defunct (as after a
+    /// real crash) and every further mutation is refused until the
+    /// directory is re-opened.
+    crashed: bool,
+}
+
+struct LiveInner<S: Storage> {
+    dir: PathBuf,
+    params: AlshParams,
+    n_bands: usize,
+    seed: u64,
+    dim: usize,
+    /// Families/fused hasher are seed-determined, hence identical across
+    /// generations — cached once for writer-side delta hashing.
+    families: SchemeFamilies,
+    fused: SchemeHasher,
+    cell: EpochCell<LiveSnapshot<S>>,
+    writer: Mutex<WriterState>,
+    faults: Mutex<CompactorFaultPlan>,
+    compactions: AtomicU64,
+    /// Mirror of the writer's WAL length, so [`LiveIndex::stats`] never
+    /// blocks on the writer lock (a compaction can hold it for a while).
+    wal_bytes: AtomicU64,
+    last_compaction_ms: AtomicU64,
+    stop: AtomicBool,
+    compactor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// The live mutable index (see module docs). Cheap to clone — a handle
+/// over one shared state — which is how the background compactor and
+/// the serving side share it.
+pub struct LiveIndex<S: Storage = Owned> {
+    inner: Arc<LiveInner<S>>,
+}
+
+impl<S: Storage> Clone for LiveIndex<S> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+fn gen_index_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("gen-{generation}.alsh"))
+}
+
+fn gen_ids_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("gen-{generation}.ids"))
+}
+
+fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation}.log"))
+}
+
+fn write_manifest(dir: &Path, generation: u64, seed: u64) -> Result<()> {
+    let mut b = Vec::with_capacity(36);
+    b.extend_from_slice(MANIFEST_MAGIC);
+    b.extend_from_slice(&1u32.to_le_bytes());
+    b.extend_from_slice(&generation.to_le_bytes());
+    b.extend_from_slice(&seed.to_le_bytes());
+    let sum = xxh64(&b, MANIFEST_SEED);
+    b.extend_from_slice(&sum.to_le_bytes());
+    persist::atomic_write(&dir.join("MANIFEST"), |tmp| Ok(std::fs::write(tmp, &b)?))
+}
+
+fn read_manifest(dir: &Path) -> Result<(u64, u64)> {
+    let path = dir.join("MANIFEST");
+    let b = std::fs::read(&path)
+        .with_context(|| format!("live index: read {}", path.display()))?;
+    ensure!(
+        b.len() == 36 && &b[..8] == MANIFEST_MAGIC,
+        "live index: bad MANIFEST in {}",
+        dir.display()
+    );
+    let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+    ensure!(version == 1, "live index: unknown MANIFEST version {version}");
+    let sum = u64::from_le_bytes(b[28..36].try_into().unwrap());
+    ensure!(
+        xxh64(&b[..28], MANIFEST_SEED) == sum,
+        "live index: MANIFEST checksum mismatch in {}",
+        dir.display()
+    );
+    let generation = u64::from_le_bytes(b[12..20].try_into().unwrap());
+    let seed = u64::from_le_bytes(b[20..28].try_into().unwrap());
+    Ok((generation, seed))
+}
+
+fn write_ids(path: &Path, ids: &[u32]) -> Result<()> {
+    let mut b = Vec::with_capacity(16 + 4 * ids.len() + 8);
+    b.extend_from_slice(IDS_MAGIC);
+    b.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+    for id in ids {
+        b.extend_from_slice(&id.to_le_bytes());
+    }
+    let sum = xxh64(&b, IDS_SEED);
+    b.extend_from_slice(&sum.to_le_bytes());
+    persist::atomic_write(path, |tmp| Ok(std::fs::write(tmp, &b)?))
+}
+
+fn read_ids(path: &Path) -> Result<Vec<u32>> {
+    let b = std::fs::read(path)
+        .with_context(|| format!("live index: read {}", path.display()))?;
+    ensure!(
+        b.len() >= 24 && &b[..8] == IDS_MAGIC,
+        "live index: bad ids sidecar {}",
+        path.display()
+    );
+    let n = u64::from_le_bytes(b[8..16].try_into().unwrap()) as usize;
+    ensure!(
+        b.len() == 16 + 4 * n + 8,
+        "live index: ids sidecar length mismatch in {}",
+        path.display()
+    );
+    let sum = u64::from_le_bytes(b[16 + 4 * n..].try_into().unwrap());
+    ensure!(
+        xxh64(&b[..16 + 4 * n], IDS_SEED) == sum,
+        "live index: ids sidecar checksum mismatch in {}",
+        path.display()
+    );
+    let ids: Vec<u32> = b[16..16 + 4 * n]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    ensure!(
+        ids.windows(2).all(|w| w[0] < w[1]),
+        "live index: ids sidecar not strictly ascending in {}",
+        path.display()
+    );
+    Ok(ids)
+}
+
+/// Build a frozen index over `items` with the live config — the same
+/// call a from-scratch build would make, which is what makes every
+/// compacted generation byte-identical to a fresh build.
+fn build_base(items: &[Vec<f32>], params: AlshParams, n_bands: usize, seed: u64) -> AnyIndex {
+    if n_bands <= 1 {
+        AnyIndex::Flat(AlshIndex::build(items, params, seed))
+    } else {
+        AnyIndex::Banded(NormRangeIndex::build(
+            items,
+            params,
+            BandedParams { n_bands },
+            seed,
+        ))
+    }
+}
+
+/// Remove files belonging to generations other than `keep` plus stale
+/// atomic-save temporaries. Best-effort: failures leave garbage, never
+/// break recovery (the MANIFEST alone names the live generation).
+fn sweep_other_generations(dir: &Path, keep: u64) {
+    persist::sweep_stale_temps(dir).ok();
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stale = ["gen-", "wal-"].iter().any(|&prefix| {
+            name.strip_prefix(prefix)
+                .and_then(|rest| rest.split('.').next())
+                .and_then(|g| g.parse::<u64>().ok())
+                .is_some_and(|g| g != keep)
+        });
+        if stale {
+            std::fs::remove_file(entry.path()).ok();
+        }
+    }
+}
+
+impl<S: LiveStorage> LiveIndex<S> {
+    /// Create a fresh live index at `dir` over `items` (external ids
+    /// `0..n`): build and persist generation 0, create its empty WAL,
+    /// commit the MANIFEST, and serve the base back out of the
+    /// generation file (so created and recovered instances serve the
+    /// exact same bytes).
+    pub fn create(dir: impl AsRef<Path>, items: &[Vec<f32>], cfg: LiveConfig) -> Result<Self> {
+        let dir = dir.as_ref();
+        ensure!(!items.is_empty(), "live index: empty initial item set");
+        let dim = items[0].len();
+        ensure!(
+            items.iter().all(|v| v.len() == dim),
+            "live index: ragged initial item dims"
+        );
+        std::fs::create_dir_all(dir)?;
+        let base = build_base(items, cfg.params, cfg.n_bands, cfg.seed);
+        base.save_as(gen_index_path(dir, 0), PersistFormat::V5)?;
+        let ids: Vec<u32> = (0..items.len() as u32).collect();
+        write_ids(&gen_ids_path(dir, 0), &ids)?;
+        let wal = Wal::create(wal_path(dir, 0))?;
+        write_manifest(dir, 0, cfg.seed)?;
+        Self::assemble(dir, 0, cfg.seed, ids, wal, Vec::new())
+    }
+
+    /// Recover a live index from `dir`: read the MANIFEST, open the
+    /// generation it names, replay the WAL over it (truncating a torn
+    /// tail), and sweep files no committed state references.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let (generation, seed) = read_manifest(dir)?;
+        let ids = read_ids(&gen_ids_path(dir, generation))?;
+        let (wal, records) = Wal::open(wal_path(dir, generation))?;
+        Self::assemble(dir, generation, seed, ids, wal, records)
+    }
+
+    /// Shared tail of `create`/`open`/compaction swap: open the base
+    /// from its generation file, replay `records` into a fresh delta,
+    /// publish, and sweep everything the MANIFEST doesn't reference.
+    fn assemble(
+        dir: &Path,
+        generation: u64,
+        seed: u64,
+        ids: Vec<u32>,
+        wal: Wal,
+        records: Vec<WalRecord>,
+    ) -> Result<Self> {
+        let index = S::open_base(&gen_index_path(dir, generation))?;
+        ensure!(
+            ids.len() == index.n_items(),
+            "live index: ids sidecar holds {} ids for {} base rows",
+            ids.len(),
+            index.n_items()
+        );
+        let params = *index.params();
+        let n_bands = index.n_bands();
+        let dim = index.dim();
+        let families = index.scheme_families().clone();
+        let fused = families.fuse();
+        let base = Arc::new(BaseGen { index, ids, gen: generation });
+        let snapshot = Arc::new(LiveSnapshot {
+            base: Arc::clone(&base),
+            delta: DeltaState::empty(params.n_tables),
+        });
+        let inner = Arc::new(LiveInner {
+            dir: dir.to_path_buf(),
+            params,
+            n_bands,
+            seed,
+            dim,
+            families,
+            fused,
+            cell: EpochCell::new(snapshot),
+            wal_bytes: AtomicU64::new(wal.bytes()),
+            writer: Mutex::new(WriterState { wal, gen: generation, crashed: false }),
+            faults: Mutex::new(CompactorFaultPlan::default()),
+            compactions: AtomicU64::new(0),
+            last_compaction_ms: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            compactor: Mutex::new(None),
+        });
+        let live = Self { inner };
+        // Replay the surviving WAL prefix through the normal apply path
+        // (without re-logging), so a recovered delta is byte-equal to
+        // one built by the original live mutations.
+        if !records.is_empty() {
+            let snap = live.inner.cell.read().1;
+            let mut delta = snap.delta.clone();
+            for rec in &records {
+                match rec {
+                    WalRecord::Upsert { ext_id, vector } => {
+                        ensure!(
+                            vector.len() == live.inner.dim,
+                            "live index: WAL upsert dim {} != index dim {}",
+                            vector.len(),
+                            live.inner.dim
+                        );
+                        live.apply_upsert(&mut delta, &snap, *ext_id, vector);
+                    }
+                    WalRecord::Delete { ext_id } => {
+                        live.apply_delete(&mut delta, &snap, *ext_id);
+                    }
+                }
+            }
+            live.inner
+                .cell
+                .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
+        }
+        sweep_other_generations(dir, generation);
+        Ok(live)
+    }
+}
+
+impl<S: Storage> LiveIndex<S> {
+    // -- accessors ---------------------------------------------------------
+
+    /// Item dimensionality.
+    pub fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    /// ALSH parameters shared by every generation.
+    pub fn params(&self) -> &AlshParams {
+        &self.inner.params
+    }
+
+    /// The hash scheme.
+    pub fn scheme(&self) -> super::scheme::MipsHashScheme {
+        self.inner.params.scheme
+    }
+
+    /// Norm bands per generation (1 = flat layout).
+    pub fn n_bands(&self) -> usize {
+        self.inner.n_bands
+    }
+
+    /// The seed every generation builds with.
+    pub fn seed(&self) -> u64 {
+        self.inner.seed
+    }
+
+    /// The live directory.
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// The hash families (seed-determined, stable across generations).
+    pub fn scheme_families(&self) -> &SchemeFamilies {
+        &self.inner.families
+    }
+
+    /// The fused multi-table hasher (batcher fallback, code-fed paths).
+    pub fn hasher(&self) -> &SchemeHasher {
+        &self.inner.fused
+    }
+
+    /// Current logical item count (base − tombstones + live delta rows).
+    pub fn n_items(&self) -> usize {
+        self.inner.cell.read().1.n_items()
+    }
+
+    /// Current base generation number.
+    pub fn generation(&self) -> u64 {
+        self.inner.cell.read().1.base.gen
+    }
+
+    /// Point-in-time counters (the `coordinator::metrics` feed).
+    pub fn stats(&self) -> LiveStats {
+        let snap = self.inner.cell.read().1;
+        let wal_bytes = self.inner.wal_bytes.load(Ordering::Relaxed);
+        let d = &snap.delta;
+        LiveStats {
+            delta_items: d.n_alive as u64,
+            tombstones: (d.n_base_dead + (d.entries.len() - d.n_alive)) as u64,
+            compactions: self.inner.compactions.load(Ordering::Relaxed),
+            wal_bytes,
+            last_compaction_ms: self.inner.last_compaction_ms.load(Ordering::Relaxed),
+            generation: snap.base.gen,
+            n_items: snap.n_items() as u64,
+        }
+    }
+
+    /// A scratch pre-sized for this index (stamps cover base + a delta
+    /// allowance; buffers grow as the delta does).
+    pub fn scratch(&self) -> QueryScratch {
+        let snap = self.inner.cell.read().1;
+        let mut s = QueryScratch::new();
+        s.reserve(
+            snap.n_base() + snap.delta.entries.len(),
+            self.inner.fused.n_codes(),
+            self.inner.dim + self.inner.params.scheme.append_len(self.inner.params.m),
+        );
+        s
+    }
+
+    /// Install the compactor fault plan (tests only; defaults all-off).
+    pub fn set_compactor_faults(&self, plan: CompactorFaultPlan) {
+        *lock(&self.inner.faults) = plan;
+    }
+
+    // -- snapshot plumbing -------------------------------------------------
+
+    /// The caller-cached snapshot read (see module docs): one atomic
+    /// load while the generation is unchanged, one brief lock to
+    /// re-clone when it moved.
+    fn snapshot(&self, s: &mut QueryScratch) -> Arc<LiveSnapshot<S>> {
+        let current = self.inner.cell.generation.load(Ordering::Acquire);
+        if let Some((cell, generation, cached)) = &s.snap.0 {
+            if *cell == self.inner.cell.id && *generation == current {
+                if let Ok(snap) = Arc::clone(cached).downcast::<LiveSnapshot<S>>() {
+                    return snap;
+                }
+            }
+        }
+        let (generation, snap) = self.inner.cell.read();
+        s.snap.0 = Some((
+            self.inner.cell.id,
+            generation,
+            Arc::clone(&snap) as Arc<dyn std::any::Any + Send + Sync>,
+        ));
+        snap
+    }
+
+    // -- mutation ----------------------------------------------------------
+
+    /// Insert or replace the vector for `ext_id`: WAL-logged (durable
+    /// before applied), then published to readers via snapshot swap.
+    pub fn upsert(&self, ext_id: u32, vector: &[f32]) -> Result<()> {
+        ensure!(
+            vector.len() == self.inner.dim,
+            "live index: upsert dim {} != index dim {}",
+            vector.len(),
+            self.inner.dim
+        );
+        let mut w = lock(&self.inner.writer);
+        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
+        w.wal.append(&WalRecord::Upsert { ext_id, vector: vector.to_vec() })?;
+        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
+        let snap = self.inner.cell.read().1;
+        let mut delta = snap.delta.clone();
+        self.apply_upsert(&mut delta, &snap, ext_id, vector);
+        self.inner
+            .cell
+            .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
+        Ok(())
+    }
+
+    /// Delete `ext_id` (a no-op if absent). WAL-logged like upsert.
+    pub fn delete(&self, ext_id: u32) -> Result<()> {
+        let mut w = lock(&self.inner.writer);
+        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
+        w.wal.append(&WalRecord::Delete { ext_id })?;
+        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
+        let snap = self.inner.cell.read().1;
+        let mut delta = snap.delta.clone();
+        self.apply_delete(&mut delta, &snap, ext_id);
+        self.inner
+            .cell
+            .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
+        Ok(())
+    }
+
+    /// Write the first `keep` bytes of an upsert record and mark the
+    /// instance crashed — the fault-injection twin of [`Self::upsert`]
+    /// for mid-WAL torn-write tests (the mutation is *not* applied;
+    /// recovery decides whether the record survived).
+    pub fn inject_torn_upsert(&self, ext_id: u32, vector: &[f32], keep: usize) -> Result<()> {
+        let mut w = lock(&self.inner.writer);
+        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
+        w.wal
+            .append_torn(&WalRecord::Upsert { ext_id, vector: vector.to_vec() }, keep)?;
+        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
+        w.crashed = true;
+        Ok(())
+    }
+
+    /// Band a vector lands in over the snapshot's frozen banding, plus
+    /// the scale factor to hash it with (see module docs on norm-band
+    /// migration).
+    fn assign_band(&self, snap: &LiveSnapshot<S>, vector: &[f32]) -> (u32, f32) {
+        match &snap.base.index {
+            AnyIndex::Flat(i) => (0, i.scale().factor),
+            AnyIndex::Banded(i) => {
+                let norm = vector.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let bands = i.bands();
+                let last = bands.len() - 1;
+                let b = bands
+                    .iter()
+                    .position(|band| norm <= band.norm_range().1)
+                    .unwrap_or(last);
+                (b as u32, bands[b].scale().factor)
+            }
+        }
+    }
+
+    fn apply_upsert(
+        &self,
+        delta: &mut DeltaState,
+        snap: &LiveSnapshot<S>,
+        ext_id: u32,
+        vector: &[f32],
+    ) {
+        // Supersede any earlier version of this id.
+        if let Some(&row) = delta.ext_to_row.get(&ext_id) {
+            delta.entries[row as usize].alive = false;
+            delta.n_alive -= 1;
+        } else if snap.base.ids.binary_search(&ext_id).is_ok() {
+            let internal = snap.base.ids.binary_search(&ext_id).unwrap() as u32;
+            delta.kill_base(internal, snap.n_base());
+        }
+        // Hash the new row exactly as the frozen build would: scheme
+        // data transform at the assigned band's scale, fused codes, one
+        // bucket key per table.
+        let (band, factor) = self.assign_band(snap, vector);
+        let p = &self.inner.params;
+        let dp = self.inner.dim + p.scheme.append_len(p.m);
+        let mut data_row = vec![0.0f32; dp];
+        p.scheme.data_row_into(vector, factor, p.m, &mut data_row);
+        let mut codes = vec![0i32; self.inner.fused.n_codes()];
+        self.inner.fused.hash_into(&data_row, &mut codes);
+        let row = delta.entries.len() as u32;
+        for t in 0..p.n_tables {
+            let key = p.scheme.table_key(&codes[t * p.k_per_table..(t + 1) * p.k_per_table]);
+            let run = &mut delta.runs[t];
+            let at = run.partition_point(|&(k, r)| (k, r) < (key, row));
+            run.insert(at, (key, row));
+        }
+        delta.entries.push(DeltaEntry { ext_id, band, alive: true });
+        delta.vectors.extend_from_slice(vector);
+        delta.ext_to_row.insert(ext_id, row);
+        delta.n_alive += 1;
+    }
+
+    fn apply_delete(&self, delta: &mut DeltaState, snap: &LiveSnapshot<S>, ext_id: u32) {
+        if let Some(row) = delta.ext_to_row.remove(&ext_id) {
+            delta.entries[row as usize].alive = false;
+            delta.n_alive -= 1;
+        }
+        if let Ok(internal) = snap.base.ids.binary_search(&ext_id) {
+            delta.kill_base(internal as u32, snap.n_base());
+        }
+    }
+
+}
+
+// -- compaction ------------------------------------------------------------
+
+impl<S: LiveStorage> LiveIndex<S> {
+    /// Drain the delta into a fresh frozen generation and swap it in
+    /// (see module docs for the protocol and crash windows). Returns
+    /// the new generation number. Errors if the live set is empty —
+    /// the frozen layouts don't represent an empty index.
+    pub fn compact_once(&self) -> Result<u64> {
+        let start = std::time::Instant::now();
+        let mut w = lock(&self.inner.writer);
+        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
+        let faults = *lock(&self.inner.faults);
+        if faults.poison {
+            panic!("injected compactor poison");
+        }
+        let snap = self.inner.cell.read().1;
+        // Collect the live rows sorted by external id — identical input
+        // to a from-scratch build over the logical item set.
+        let n_base = snap.n_base();
+        let dim = self.inner.dim;
+        let mut live: Vec<(u32, Vec<f32>)> =
+            Vec::with_capacity(n_base - snap.delta.n_base_dead + snap.delta.n_alive);
+        let base_flat = match &snap.base.index {
+            AnyIndex::Flat(i) => i.items_flat(),
+            AnyIndex::Banded(i) => i.items_flat(),
+        };
+        for internal in 0..n_base as u32 {
+            if !snap.delta.base_is_dead(internal) {
+                let row = &base_flat[internal as usize * dim..(internal as usize + 1) * dim];
+                live.push((snap.base.ids[internal as usize], row.to_vec()));
+            }
+        }
+        for (row, e) in snap.delta.entries.iter().enumerate() {
+            if e.alive {
+                live.push((e.ext_id, snap.delta.vectors[row * dim..(row + 1) * dim].to_vec()));
+            }
+        }
+        ensure!(!live.is_empty(), "live index: refusing to compact to an empty index");
+        live.sort_unstable_by_key(|(ext, _)| *ext);
+        let (ids, items): (Vec<u32>, Vec<Vec<f32>>) = live.into_iter().unzip();
+
+        let next = w.gen + 1;
+        let built = build_base(&items, self.inner.params, self.inner.n_bands, self.inner.seed);
+        built.save_as(gen_index_path(&self.inner.dir, next), PersistFormat::V5)?;
+        write_ids(&gen_ids_path(&self.inner.dir, next), &ids)?;
+        if faults.crash_before_manifest {
+            w.crashed = true;
+            bail!("injected compactor crash before MANIFEST publish");
+        }
+        let wal = Wal::create(wal_path(&self.inner.dir, next))?;
+        write_manifest(&self.inner.dir, next, self.inner.seed)?; // commit point
+        if faults.crash_after_manifest {
+            w.crashed = true;
+            bail!("injected compactor crash after MANIFEST publish");
+        }
+        let index = S::open_base(&gen_index_path(&self.inner.dir, next))?;
+        let base = Arc::new(BaseGen { index, ids, gen: next });
+        self.inner.cell.publish(Arc::new(LiveSnapshot {
+            base,
+            delta: DeltaState::empty(self.inner.params.n_tables),
+        }));
+        self.inner.wal_bytes.store(wal.bytes(), Ordering::Relaxed);
+        w.wal = wal;
+        w.gen = next;
+        drop(w);
+        sweep_other_generations(&self.inner.dir, next);
+        self.inner.compactions.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .last_compaction_ms
+            .store(start.elapsed().as_millis() as u64, Ordering::Relaxed);
+        Ok(next)
+    }
+
+    /// Spawn the background compactor: polls every `poll` and compacts
+    /// whenever the delta (live + dead rows) reaches `threshold`. The
+    /// thread holds only a weak handle, so dropping the last
+    /// [`LiveIndex`] clone ends it; [`Self::stop_compactor`] ends it
+    /// deterministically. Panics inside a compaction (e.g. the injected
+    /// poison) are contained to the thread — serving continues.
+    pub fn spawn_compactor(&self, threshold: usize, poll: std::time::Duration) {
+        let weak: Weak<LiveInner<S>> = Arc::downgrade(&self.inner);
+        let handle = std::thread::spawn(move || loop {
+            let Some(inner) = weak.upgrade() else { return };
+            if inner.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let snap = inner.cell.read().1;
+            let pending = snap.delta.entries.len() + snap.delta.n_base_dead;
+            drop(snap);
+            if pending >= threshold {
+                let live = LiveIndex { inner: Arc::clone(&inner) };
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    live.compact_once().ok();
+                }));
+            }
+            drop(inner);
+            std::thread::sleep(poll);
+        });
+        *lock(&self.inner.compactor) = Some(handle);
+    }
+}
+
+impl<S: Storage> LiveIndex<S> {
+    /// Stop and join the background compactor, if one is running.
+    pub fn stop_compactor(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = lock(&self.inner.compactor).take() {
+            handle.join().ok();
+        }
+    }
+
+    // -- queries -----------------------------------------------------------
+
+    /// Full allocation-free query: base + delta probe, tombstone
+    /// filter, dual-source exact rerank, external-id translation.
+    pub fn query_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.query_budgeted_into(query, top_k, ProbeBudget::full(), s)
+    }
+
+    /// Budgeted query (bit-identical to [`Self::query_into`] at
+    /// [`ProbeBudget::full`], like the frozen paths).
+    pub fn query_budgeted_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let snap = self.snapshot(s);
+        snap.base.index.candidates_budgeted_into(query, budget, s);
+        self.overlay(&snap, budget, None, s);
+        self.finish(&snap, query, top_k, s)
+    }
+
+    /// Multi-probe query (`n_probes` buckets per table in both layers).
+    pub fn query_multiprobe_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        n_probes: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.query_budgeted_into(query, top_k, ProbeBudget::with_probes(n_probes), s)
+    }
+
+    /// Code-fed query (the batcher/PJRT re-entry): externally computed
+    /// `[L·K]` codes probe both layers; `query` is still needed for the
+    /// exact rerank.
+    pub fn query_from_codes_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        query: &[f32],
+        top_k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        self.query_from_codes_budgeted_into(codes_flat, query, top_k, ProbeBudget::full(), s)
+    }
+
+    /// Budgeted code-fed query (single probe per table, like the frozen
+    /// code-fed paths — external codes carry no perturbation info).
+    pub fn query_from_codes_budgeted_into<'s>(
+        &self,
+        codes_flat: &[i32],
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let snap = self.snapshot(s);
+        snap.base.index.candidates_from_codes_budgeted_into(codes_flat, budget, s);
+        self.overlay(&snap, budget, Some(codes_flat), s);
+        self.finish(&snap, query, top_k, s)
+    }
+
+    /// Batch query: the per-query path in a loop (per-query results are
+    /// bit-identical to [`Self::query_into`], mirroring the frozen
+    /// batch contract).
+    pub fn query_batch_into(
+        &self,
+        queries: &[Vec<f32>],
+        top_k: usize,
+        s: &mut QueryScratch,
+        out: &mut Vec<Vec<ScoredItem>>,
+    ) {
+        out.clear();
+        for q in queries {
+            out.push(self.query_into(q, top_k, s).to_vec());
+        }
+    }
+
+    /// Allocating convenience query.
+    pub fn query(&self, query: &[f32], top_k: usize) -> Vec<ScoredItem> {
+        super::scratch::with_thread_scratch(|s| self.query_into(query, top_k, s).to_vec())
+    }
+
+    /// Replay the scratch (or external) codes against the delta runs,
+    /// continuing the base probe's dedup epoch, after filtering
+    /// tombstoned base candidates. Base candidates keep priority under
+    /// a partial rerank cap, matching the frozen budget semantics.
+    fn overlay(
+        &self,
+        snap: &LiveSnapshot<S>,
+        budget: ProbeBudget,
+        ext_codes: Option<&[i32]>,
+        s: &mut QueryScratch,
+    ) {
+        let delta = &snap.delta;
+        if delta.n_base_dead > 0 {
+            s.cands.retain(|&id| !delta.base_is_dead(id));
+        }
+        if delta.entries.is_empty() {
+            return;
+        }
+        let n_base = snap.n_base();
+        let p = &self.inner.params;
+        let k = p.k_per_table;
+        let nt = budget.tables(p.n_tables);
+        let cap = budget.max_rerank;
+        let nb = self.inner.n_bands.max(1);
+        let b_used = budget.bands(nb);
+        // Budgeted banded probes keep the largest-norm bands; delta rows
+        // in skipped bands are skipped too.
+        let band_min = (nb - b_used) as u32;
+        {
+            let (mut sink, codes, fracs, perturbs) = s.resume_dedup(n_base + delta.entries.len());
+            for t in 0..nt {
+                if sink.len() >= cap {
+                    break;
+                }
+                let lo = t * k;
+                match ext_codes {
+                    Some(c) => {
+                        delta.probe_run(t, p.scheme.table_key(&c[lo..lo + k]), band_min, n_base, &mut sink);
+                    }
+                    None if budget.n_probes == 1 => {
+                        delta.probe_run(t, p.scheme.table_key(&codes[lo..lo + k]), band_min, n_base, &mut sink);
+                    }
+                    None => {
+                        for_each_probe_key(
+                            p.scheme,
+                            &mut codes[lo..lo + k],
+                            &fracs[lo..lo + k],
+                            perturbs,
+                            budget.n_probes,
+                            |key| delta.probe_run(t, key, band_min, n_base, &mut sink),
+                        );
+                    }
+                }
+            }
+        }
+        s.truncate_candidates(cap);
+    }
+
+    /// Dual-source exact rerank of `s.cands`, then translate internal
+    /// ids back to external ids in place.
+    fn finish<'s>(
+        &self,
+        snap: &LiveSnapshot<S>,
+        query: &[f32],
+        top_k: usize,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let n_base = snap.n_base();
+        let base_flat = match &snap.base.index {
+            AnyIndex::Flat(i) => i.items_flat(),
+            AnyIndex::Banded(i) => i.items_flat(),
+        };
+        rerank_dual_into(base_flat, n_base, &snap.delta.vectors, self.inner.dim, query, top_k, s);
+        for item in &mut s.top {
+            item.id = if (item.id as usize) < n_base {
+                snap.base.ids[item.id as usize]
+            } else {
+                snap.delta.entries[item.id as usize - n_base].ext_id
+            };
+        }
+        &s.top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::MipsHashScheme;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "alsh_delta_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn items(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32() * 1.5).collect())
+            .collect()
+    }
+
+    fn cfg(n_bands: usize) -> LiveConfig {
+        LiveConfig {
+            params: AlshParams {
+                n_tables: 8,
+                k_per_table: 4,
+                scheme: MipsHashScheme::SignAlsh,
+                ..AlshParams::default()
+            },
+            n_bands,
+            seed: 42,
+        }
+    }
+
+    /// Empty delta ⇒ byte-identical to the frozen base across paths.
+    #[test]
+    fn fresh_live_matches_frozen_base() {
+        for n_bands in [1usize, 3] {
+            let dir = tmp_dir("fresh");
+            let data = items(200, 12, 7);
+            let c = cfg(n_bands);
+            let live: LiveIndex = LiveIndex::create(&dir, &data, c).unwrap();
+            let frozen = build_base(&data, c.params, c.n_bands, c.seed);
+            let mut s1 = live.scratch();
+            let mut s2 = frozen.scratch();
+            let queries = items(20, 12, 99);
+            for q in &queries {
+                let a = live.query_into(q, 10, &mut s1).to_vec();
+                let b = frozen.query_into(q, 10, &mut s2).to_vec();
+                assert_eq!(a, b, "n_bands={n_bands}");
+                let a = live.query_multiprobe_into(q, 10, 4, &mut s1).to_vec();
+                let b = frozen.query_multiprobe_into(q, 10, 4, &mut s2).to_vec();
+                assert_eq!(a, b, "multiprobe n_bands={n_bands}");
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    /// Data-side codes of `vector` under the live flat base's scale —
+    /// feeding these to the code-fed path probes exactly the buckets the
+    /// vector occupies, making retrieval deterministic (no LSH luck).
+    fn data_codes(live: &LiveIndex, vector: &[f32]) -> Vec<i32> {
+        let snap = live.inner.cell.read().1;
+        let factor = match &snap.base.index {
+            AnyIndex::Flat(i) => i.scale().factor,
+            AnyIndex::Banded(_) => unreachable!("flat-only helper"),
+        };
+        let p = live.params();
+        let mut row = vec![0.0f32; live.dim() + p.scheme.append_len(p.m)];
+        p.scheme.data_row_into(vector, factor, p.m, &mut row);
+        let mut codes = vec![0i32; live.hasher().n_codes()];
+        live.hasher().hash_into(&row, &mut codes);
+        codes
+    }
+
+    /// Upserts and deletes surface/retire items, deterministically:
+    /// probing with an item's own data-side codes guarantees its buckets
+    /// are hit, so presence/absence is exact, not probabilistic.
+    #[test]
+    fn mutations_visible_and_exact() {
+        let dir = tmp_dir("mut");
+        let data = items(100, 8, 3);
+        let live: LiveIndex = LiveIndex::create(&dir, &data, cfg(1)).unwrap();
+        let mut s = live.scratch();
+        let q = &data[7];
+        let codes7 = data_codes(&live, &data[7]);
+        let has = |r: &[ScoredItem], id: u32| r.iter().find(|it| it.id == id).map(|it| it.score);
+        // Base item 7 always answers a probe of its own buckets.
+        let r = live.query_from_codes_into(&codes7, q, 100, &mut s).to_vec();
+        let base_score = has(&r, 7).expect("own-bucket probe must find item 7");
+        // A delta twin (same vector, same flat scale) lands in the same
+        // buckets with the same score.
+        live.upsert(500, &data[7]).unwrap();
+        let r = live.query_from_codes_into(&codes7, q, 100, &mut s).to_vec();
+        assert_eq!(has(&r, 7), Some(base_score));
+        assert_eq!(has(&r, 500), Some(base_score));
+        // Tombstoning the base twin leaves only the delta twin.
+        live.delete(7).unwrap();
+        let r = live.query_from_codes_into(&codes7, q, 100, &mut s).to_vec();
+        assert_eq!(has(&r, 7), None);
+        assert_eq!(has(&r, 500), Some(base_score));
+        // Re-upserting 500 supersedes the old row: probing the *new*
+        // vector's buckets yields the new score, and only one delta row
+        // is alive.
+        let double: Vec<f32> = data[7].iter().map(|x| x * 2.0).collect();
+        live.upsert(500, &double).unwrap();
+        let codes_new = data_codes(&live, &double);
+        let r = live.query_from_codes_into(&codes_new, q, 100, &mut s).to_vec();
+        assert_eq!(has(&r, 500), Some(base_score * 2.0));
+        assert_eq!(live.stats().delta_items, 1);
+        // Deleting the delta row removes it from its buckets.
+        live.delete(500).unwrap();
+        let r = live.query_from_codes_into(&codes_new, q, 100, &mut s).to_vec();
+        assert_eq!(has(&r, 500), None);
+        assert_eq!(live.n_items(), data.len() - 1);
+        assert_eq!(live.stats().delta_items, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Compaction swaps in a generation byte-identical to a fresh build
+    /// over the surviving logical set.
+    #[test]
+    fn compaction_matches_fresh_build() {
+        let dir = tmp_dir("compact");
+        let data = items(150, 10, 11);
+        let c = cfg(3);
+        let live: LiveIndex = LiveIndex::create(&dir, &data, c).unwrap();
+        let extra = items(30, 10, 77);
+        for (i, v) in extra.iter().enumerate() {
+            live.upsert(1000 + i as u32, v).unwrap();
+        }
+        for id in [3u32, 60, 149] {
+            live.delete(id).unwrap();
+        }
+        let generation = live.compact_once().unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(live.stats().delta_items, 0);
+        // The logical set, ext-id ascending.
+        let mut logical: Vec<(u32, Vec<f32>)> = (0..data.len() as u32)
+            .filter(|id| ![3u32, 60, 149].contains(id))
+            .map(|id| (id, data[id as usize].clone()))
+            .collect();
+        logical.extend(extra.iter().enumerate().map(|(i, v)| (1000 + i as u32, v.clone())));
+        let (ids, vecs): (Vec<u32>, Vec<Vec<f32>>) = logical.into_iter().unzip();
+        let fresh = build_base(&vecs, c.params, c.n_bands, c.seed);
+        let mut s1 = live.scratch();
+        let mut s2 = fresh.scratch();
+        for q in &items(15, 10, 5) {
+            let a = live.query_into(q, 12, &mut s1).to_vec();
+            let b: Vec<ScoredItem> = fresh
+                .query_into(q, 12, &mut s2)
+                .iter()
+                .map(|it| ScoredItem { id: ids[it.id as usize], score: it.score })
+                .collect();
+            assert_eq!(a, b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Recovery replays the WAL to a state byte-equal to a live twin.
+    #[test]
+    fn reopen_replays_wal() {
+        let dir = tmp_dir("reopen");
+        let data = items(80, 6, 2);
+        let live: LiveIndex = LiveIndex::create(&dir, &data, cfg(1)).unwrap();
+        let extra = items(10, 6, 8);
+        for (i, v) in extra.iter().enumerate() {
+            live.upsert(200 + i as u32, v).unwrap();
+        }
+        live.delete(5).unwrap();
+        let mut s = live.scratch();
+        let q = &items(1, 6, 55)[0];
+        let before = live.query_into(q, 10, &mut s).to_vec();
+        drop(live);
+        let reopened: LiveIndex = LiveIndex::open(&dir).unwrap();
+        let mut s2 = reopened.scratch();
+        assert_eq!(reopened.query_into(q, 10, &mut s2).to_vec(), before);
+        assert_eq!(reopened.stats().delta_items, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Mapped storage serves the same bytes as owned.
+    #[test]
+    fn mapped_live_matches_owned() {
+        let dir_a = tmp_dir("mapped_a");
+        let dir_b = tmp_dir("mapped_b");
+        let data = items(90, 7, 13);
+        let owned: LiveIndex = LiveIndex::create(&dir_a, &data, cfg(2)).unwrap();
+        let mapped: LiveIndex<Mapped> = LiveIndex::create(&dir_b, &data, cfg(2)).unwrap();
+        let extra = items(5, 7, 21)[0].clone();
+        owned.upsert(300, &extra).unwrap();
+        mapped.upsert(300, &extra).unwrap();
+        let mut s1 = owned.scratch();
+        let mut s2 = mapped.scratch();
+        for q in &items(10, 7, 31) {
+            assert_eq!(
+                owned.query_into(q, 8, &mut s1).to_vec(),
+                mapped.query_into(q, 8, &mut s2).to_vec()
+            );
+        }
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    /// The same scratch serves two live indexes without snapshot-cache
+    /// confusion (the cell-id check).
+    #[test]
+    fn one_scratch_two_indexes() {
+        let dir_a = tmp_dir("two_a");
+        let dir_b = tmp_dir("two_b");
+        let data_a = items(60, 5, 1);
+        let data_b = items(60, 5, 2);
+        let a: LiveIndex = LiveIndex::create(&dir_a, &data_a, cfg(1)).unwrap();
+        let b: LiveIndex = LiveIndex::create(&dir_b, &data_b, cfg(1)).unwrap();
+        let mut s = a.scratch();
+        let q = &items(1, 5, 3)[0];
+        let ra1 = a.query_into(q, 5, &mut s).to_vec();
+        let rb1 = b.query_into(q, 5, &mut s).to_vec();
+        assert_eq!(a.query_into(q, 5, &mut s).to_vec(), ra1);
+        assert_eq!(b.query_into(q, 5, &mut s).to_vec(), rb1);
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+}

@@ -20,6 +20,15 @@
 //! symmetric SRP, Neyshabur & Srebro 2015) — selected by
 //! [`AlshParams::scheme`] and carried end to end through build, serve,
 //! multi-probe, and persistence.
+//!
+//! On top of the frozen layouts, [`delta`] layers a **live mutable
+//! tier** ([`LiveIndex`]): crash-consistent upserts/deletes logged to an
+//! append-only WAL ([`wal`]) before application, served to readers
+//! through lock-free epoch-swapped snapshots, and drained back into a
+//! fresh frozen generation by a verified background compactor. See the
+//! [`delta`] module docs for the WAL record format, the
+//! snapshot-plus-replay recovery contract, the reader guarantee, and the
+//! norm-band migration semantics.
 
 pub mod any;
 pub mod banded;
@@ -27,6 +36,7 @@ pub mod budget;
 pub mod build;
 pub mod collision;
 pub mod core;
+pub mod delta;
 pub mod frozen;
 pub mod hash_table;
 pub mod multiprobe;
@@ -36,6 +46,7 @@ pub mod scheme;
 pub mod scratch;
 mod simd;
 pub mod storage;
+pub mod wal;
 
 pub use any::{AnyIndex, MappedIndex};
 pub use banded::{Band, BandedBuildStats, BandedParams, NormRangeIndex};
@@ -43,8 +54,12 @@ pub use budget::ProbeBudget;
 pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
+pub use delta::{CompactorFaultPlan, LiveConfig, LiveIndex, LiveStats, LiveStorage};
 pub use frozen::{FrozenTable, TableStats};
-pub use persist::{open_mmap, open_mmap_scheme, PersistFormat};
+pub use persist::{
+    open_mmap, open_mmap_scheme, open_mmap_verified, sweep_stale_temps, PersistFormat,
+};
 pub use scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 pub use scratch::QueryScratch;
 pub use storage::{MapSlice, Mapped, MmapFile, Owned, Storage};
+pub use wal::{Wal, WalRecord};

@@ -114,6 +114,35 @@ pub enum PersistFormat {
     /// v5: 64-byte-aligned sections, zero-copy `open_mmap` (O(header)
     /// open, page-cache-shared across processes).
     V5,
+    /// v5 with an XXH64 checksum per section in the section table
+    /// (24-byte entries instead of 16). The default `open_mmap` stays
+    /// O(header) and ignores the checksums; [`open_mmap_verified`]
+    /// hashes every section against them before serving. Older readers
+    /// reject these files cleanly (the flag rides in the kind word, so
+    /// they see an unknown kind).
+    V5Checked,
+}
+
+/// Kind-word flag marking a v5 file whose section table carries per-
+/// section checksums. Rides in the kind field's upper bits: pre-flag
+/// readers `parse_kind` the whole word and reject the file with an
+/// "unknown kind" error instead of misparsing the 24-byte entries.
+const FLAG_SECTION_CHECKSUMS: u32 = 0x100;
+
+/// Seed for the v5 per-section XXH64 checksums.
+const V5_SECTION_SEED: u64 = 0xA15B_5EC7;
+
+/// How [`parse_v5`] treats per-section checksums.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SectionVerify {
+    /// Ignore checksums even when present (the O(header) mapped open).
+    No,
+    /// Verify when the file carries them, accept unflagged files (the
+    /// heap loader — it reads every byte anyway).
+    IfPresent,
+    /// Verify, and reject files written without checksums
+    /// ([`open_mmap_verified`]).
+    Require,
 }
 
 struct Writer<W: Write> {
@@ -519,7 +548,14 @@ fn load_file(
         VERSION_MMAP => {
             drop(r);
             let map = MmapFile::map(path)?;
-            return mapped_to_owned(parse_v5(&map, want_kind, want_scheme)?);
+            // The heap loader touches every byte anyway, so checksums —
+            // when the file carries them — are verified for free.
+            return mapped_to_owned(parse_v5(
+                &map,
+                want_kind,
+                want_scheme,
+                SectionVerify::IfPresent,
+            )?);
         }
         other => anyhow::bail!(
             "unsupported index version {other} (this build reads v{VERSION_FLAT_ONLY}, \
@@ -620,7 +656,7 @@ fn align64(x: usize) -> usize {
 /// re-saving a path that a live process has `open_mmap`'ed swaps the
 /// directory entry instead of truncating the mapped inode out from
 /// under the reader (which would SIGBUS its next probe).
-fn atomic_write(
+pub(crate) fn atomic_write(
     path: &Path,
     write: impl FnOnce(&Path) -> crate::Result<()>,
 ) -> crate::Result<()> {
@@ -654,6 +690,29 @@ fn atomic_write(
             Err(e)
         }
     }
+}
+
+/// Remove stale `<name>.tmp.<pid>.<seq>` files a crashed [`atomic_write`]
+/// left behind in `dir`, returning how many were deleted. Safe only when
+/// no save into `dir` is concurrently in flight (the live tier calls it
+/// during quiesced recovery, before any writer exists).
+pub fn sweep_stale_temps(dir: &Path) -> crate::Result<usize> {
+    let mut removed = 0;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        // `<base>.tmp.<pid>.<seq>` — both trailing segments numeric.
+        let Some(rest) = name.split_once(".tmp.").map(|(_, r)| r) else { continue };
+        let mut parts = rest.split('.');
+        let numeric = parts.next().is_some_and(|p| p.parse::<u64>().is_ok())
+            && parts.next().is_some_and(|p| p.parse::<u64>().is_ok())
+            && parts.next().is_none();
+        if numeric && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    Ok(removed)
 }
 
 /// One v5 section awaiting serialization (borrowed from the index).
@@ -695,6 +754,25 @@ impl Section<'_> {
                     std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
                 }
             }
+        }
+    }
+
+    /// XXH64 over the section's on-disk (little-endian) bytes — the
+    /// value stored in a checksummed section-table entry.
+    fn checksum(&self) -> u64 {
+        #[cfg(target_endian = "little")]
+        {
+            crate::util::xxh64(self.as_bytes(), V5_SECTION_SEED)
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut le = Vec::with_capacity(self.byte_len());
+            match self {
+                Section::U64(s) => s.iter().for_each(|v| le.extend_from_slice(&v.to_le_bytes())),
+                Section::U32(s) => s.iter().for_each(|v| le.extend_from_slice(&v.to_le_bytes())),
+                Section::F32(s) => s.iter().for_each(|v| le.extend_from_slice(&v.to_le_bytes())),
+            }
+            crate::util::xxh64(&le, V5_SECTION_SEED)
         }
     }
 }
@@ -749,9 +827,11 @@ fn write_v5_file(
     scheme: MipsHashScheme,
     meta: &[u8],
     sections: &[Section<'_>],
+    checksums: bool,
 ) -> crate::Result<()> {
     let n = sections.len();
-    let meta_end = V5_PRELUDE + 16 * n + meta.len();
+    let entry_size = if checksums { 24 } else { 16 };
+    let meta_end = V5_PRELUDE + entry_size * n + meta.len();
     let mut entries: Vec<(u64, u64)> = Vec::with_capacity(n);
     let mut cur = align64(meta_end);
     for s in sections {
@@ -763,13 +843,16 @@ fn write_v5_file(
     let mut w = Writer { w: BufWriter::new(file) };
     w.w.write_all(MAGIC)?;
     w.u32(VERSION_MMAP)?;
-    w.u32(kind)?;
+    w.u32(if checksums { kind | FLAG_SECTION_CHECKSUMS } else { kind })?;
     w.u32(scheme.id())?;
     w.u64(meta.len() as u64)?;
     w.u64(n as u64)?;
-    for &(off, len) in &entries {
+    for (s, &(off, len)) in sections.iter().zip(&entries) {
         w.u64(off)?;
         w.u64(len)?;
+        if checksums {
+            w.u64(s.checksum())?;
+        }
     }
     w.w.write_all(meta)?;
     let mut written = meta_end;
@@ -811,14 +894,24 @@ struct SectionCursor<'a> {
     map: &'a Arc<MmapFile>,
     next: usize,
     n: usize,
+    /// Bytes per section-table entry: 16, or 24 with checksums.
+    entry_size: usize,
+    /// Hash each section against its table checksum as it is taken.
+    verify: bool,
     /// End of the last consumed region (starts at the end of the meta
     /// block, so no section can alias the header).
     prev_end: usize,
 }
 
 impl<'a> SectionCursor<'a> {
-    fn new(map: &'a Arc<MmapFile>, n: usize, meta_end: usize) -> Self {
-        Self { map, next: 0, n, prev_end: meta_end }
+    fn new(
+        map: &'a Arc<MmapFile>,
+        n: usize,
+        meta_end: usize,
+        entry_size: usize,
+        verify: bool,
+    ) -> Self {
+        Self { map, next: 0, n, entry_size, verify, prev_end: meta_end }
     }
 
     fn take<T>(&mut self, what: &str) -> anyhow::Result<MapSlice<T>> {
@@ -827,7 +920,7 @@ impl<'a> SectionCursor<'a> {
             "corrupt index file: section table exhausted reading {what}"
         );
         let bytes = self.map.bytes();
-        let entry = V5_PRELUDE + 16 * self.next;
+        let entry = V5_PRELUDE + self.entry_size * self.next;
         let off = usize::try_from(u64_at(bytes, entry))
             .map_err(|_| anyhow::anyhow!("corrupt index file: {what} section offset overflows"))?;
         let len = usize::try_from(u64_at(bytes, entry + 8))
@@ -842,6 +935,15 @@ impl<'a> SectionCursor<'a> {
             self.prev_end
         );
         let s = map_slice::<T>(self.map, off, len, what)?;
+        if self.verify {
+            let want = u64_at(bytes, entry + 16);
+            let got = crate::util::xxh64(&bytes[off..off + len], V5_SECTION_SEED);
+            anyhow::ensure!(
+                got == want,
+                "corrupt index file: {what} section checksum mismatch \
+                 (stored {want:#018x}, computed {got:#018x})"
+            );
+        }
         self.prev_end = off + len;
         self.next += 1;
         Ok(s)
@@ -882,6 +984,7 @@ fn parse_v5(
     map: &Arc<MmapFile>,
     want_kind: Option<u32>,
     want_scheme: Option<MipsHashScheme>,
+    verify: SectionVerify,
 ) -> anyhow::Result<MappedIndex> {
     let bytes = map.bytes();
     anyhow::ensure!(bytes.len() >= V5_PRELUDE, "not an ALSH index file: too short");
@@ -897,15 +1000,24 @@ fn parse_v5(
         }
         anyhow::bail!("unsupported index version {version} (open_mmap reads v{VERSION_MMAP})");
     }
-    let kind = parse_kind(u32_at(bytes, 8))?;
+    let kind_word = u32_at(bytes, 8);
+    let checked = kind_word & FLAG_SECTION_CHECKSUMS != 0;
+    let kind = parse_kind(kind_word & !FLAG_SECTION_CHECKSUMS)?;
     let scheme = parse_scheme(u32_at(bytes, 12))?;
     check_kind_scheme(kind, scheme, want_kind, want_scheme)?;
+    anyhow::ensure!(
+        checked || verify != SectionVerify::Require,
+        "index file carries no section checksums; re-save with \
+         PersistFormat::V5Checked to use the verified open"
+    );
+    let verify_sections = checked && verify != SectionVerify::No;
+    let entry_size = if checked { 24 } else { 16 };
     let meta_len = usize::try_from(u64_at(bytes, 16))
         .map_err(|_| anyhow::anyhow!("corrupt index file: meta length overflows"))?;
     let n_sections = usize::try_from(u64_at(bytes, 24))
         .map_err(|_| anyhow::anyhow!("corrupt index file: section count overflows"))?;
     let table_end = V5_PRELUDE
-        .checked_add(n_sections.checked_mul(16).ok_or_else(|| {
+        .checked_add(n_sections.checked_mul(entry_size).ok_or_else(|| {
             anyhow::anyhow!("corrupt index file: section table size overflows")
         })?)
         .ok_or_else(|| anyhow::anyhow!("corrupt index file: section table size overflows"))?;
@@ -933,7 +1045,7 @@ fn parse_v5(
              index with {} tables",
             params.n_tables
         );
-        let mut sec = SectionCursor::new(map, n_sections, meta_end);
+        let mut sec = SectionCursor::new(map, n_sections, meta_end, entry_size, verify_sections);
         let items = sec.take_exact::<f32>(n_items * dim, "items")?;
         let mut tables: Vec<FrozenTable<Mapped>> = Vec::with_capacity(params.n_tables);
         for _ in 0..params.n_tables {
@@ -983,7 +1095,7 @@ fn parse_v5(
          index with {n_bands} bands of {} tables",
         params.n_tables
     );
-    let mut sec = SectionCursor::new(map, n_sections, meta_end);
+    let mut sec = SectionCursor::new(map, n_sections, meta_end, entry_size, verify_sections);
     let items = sec.take_exact::<f32>(n_items * dim, "items")?;
     let mut bands: Vec<Band<Mapped>> = Vec::with_capacity(n_bands);
     for bm in band_meta {
@@ -1048,7 +1160,7 @@ pub fn load_any_scheme(
 /// the batcher, and the router exactly like a heap index.
 pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<MappedIndex> {
     let map = MmapFile::map(path.as_ref())?;
-    parse_v5(&map, None, None)
+    parse_v5(&map, None, None, SectionVerify::No)
 }
 
 /// [`open_mmap`] that additionally pins the hash scheme (rejected from
@@ -1058,7 +1170,18 @@ pub fn open_mmap_scheme(
     scheme: MipsHashScheme,
 ) -> crate::Result<MappedIndex> {
     let map = MmapFile::map(path.as_ref())?;
-    parse_v5(&map, None, Some(scheme))
+    parse_v5(&map, None, Some(scheme), SectionVerify::No)
+}
+
+/// [`open_mmap`] that additionally verifies every section against the
+/// per-section XXH64 checksums written by [`PersistFormat::V5Checked`].
+/// O(file) — every section byte is hashed before the index is served —
+/// so this trades the O(header) lazy open for an up-front integrity
+/// check against bit rot and partial writes. Files saved without
+/// checksums are rejected with a re-save hint.
+pub fn open_mmap_verified(path: impl AsRef<Path>) -> crate::Result<MappedIndex> {
+    let map = MmapFile::map(path.as_ref())?;
+    parse_v5(&map, None, None, SectionVerify::Require)
 }
 
 /// The one kind-pinned unwrap both typed load surfaces share (the
@@ -1102,13 +1225,20 @@ impl<S: Storage> AlshIndex<S> {
                 w.w.flush()?;
                 Ok(())
             }
-            PersistFormat::V5 => {
+            PersistFormat::V5 | PersistFormat::V5Checked => {
                 let meta = flat_meta(self)?;
                 let mut sections = vec![Section::F32(self.items_flat())];
                 for t in self.tables() {
                     push_table_sections(t, &mut sections);
                 }
-                write_v5_file(tmp, KIND_FLAT, self.params().scheme, &meta, &sections)
+                write_v5_file(
+                    tmp,
+                    KIND_FLAT,
+                    self.params().scheme,
+                    &meta,
+                    &sections,
+                    format == PersistFormat::V5Checked,
+                )
             }
         })
     }
@@ -1141,7 +1271,7 @@ impl AlshIndex<Mapped> {
     /// banded file is rejected from the header.
     pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), None)?))
+        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), None, SectionVerify::No)?))
     }
 
     /// [`AlshIndex::open_mmap`] that additionally pins the hash scheme.
@@ -1150,7 +1280,7 @@ impl AlshIndex<Mapped> {
         scheme: MipsHashScheme,
     ) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), Some(scheme))?))
+        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), Some(scheme), SectionVerify::No)?))
     }
 }
 
@@ -1178,7 +1308,7 @@ impl<S: Storage> NormRangeIndex<S> {
                 w.w.flush()?;
                 Ok(())
             }
-            PersistFormat::V5 => {
+            PersistFormat::V5 | PersistFormat::V5Checked => {
                 let meta = banded_meta(self)?;
                 let mut sections = vec![Section::F32(self.items_flat())];
                 for band in self.bands() {
@@ -1187,7 +1317,14 @@ impl<S: Storage> NormRangeIndex<S> {
                         push_table_sections(t, &mut sections);
                     }
                 }
-                write_v5_file(tmp, KIND_BANDED, self.params().scheme, &meta, &sections)
+                write_v5_file(
+                    tmp,
+                    KIND_BANDED,
+                    self.params().scheme,
+                    &meta,
+                    &sections,
+                    format == PersistFormat::V5Checked,
+                )
             }
         })
     }
@@ -1219,7 +1356,7 @@ impl NormRangeIndex<Mapped> {
     /// flat file is rejected from the header.
     pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), None)?))
+        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), None, SectionVerify::No)?))
     }
 
     /// [`NormRangeIndex::open_mmap`] that additionally pins the scheme.
@@ -1228,7 +1365,7 @@ impl NormRangeIndex<Mapped> {
         scheme: MipsHashScheme,
     ) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), Some(scheme))?))
+        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), Some(scheme), SectionVerify::No)?))
     }
 }
 

@@ -101,6 +101,66 @@ fn score_candidates_scalar(
     }
 }
 
+/// Exact scoring over **two** row sources: candidate ids below `n_base`
+/// index the frozen base's item matrix, ids at or above it index the
+/// live delta's flat matrix at `id - n_base` (the live mutable tier's
+/// rerank). Per-candidate scores are bit-identical to
+/// [`score_candidates`] over a single merged matrix: the scalar path
+/// accumulates each item's dot product in the same sequential order as
+/// [`dot`], and the `simd` path uses the same 8-lane kernel per item.
+pub(crate) fn score_candidates_dual(
+    base_flat: &[f32],
+    n_base: usize,
+    delta_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    cands: &[u32],
+    out: &mut Vec<ScoredItem>,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if super::simd::x86::available() {
+            for &id in cands {
+                let r = if (id as usize) < n_base {
+                    row(base_flat, dim, id)
+                } else {
+                    row(delta_flat, dim, id - n_base as u32)
+                };
+                // Safety: AVX2+FMA availability checked at runtime above.
+                let score = unsafe { super::simd::x86::dot_f32x8(query, r) };
+                out.push(ScoredItem { id, score });
+            }
+            return;
+        }
+    }
+    for &id in cands {
+        let r = if (id as usize) < n_base {
+            row(base_flat, dim, id)
+        } else {
+            row(delta_flat, dim, id - n_base as u32)
+        };
+        out.push(ScoredItem { id, score: dot(query, r) });
+    }
+}
+
+/// Allocation-free dual-source rerank of `s.cands` (see
+/// [`score_candidates_dual`]); top `k` lands in `s.top` borrowed out.
+pub(crate) fn rerank_dual_into<'s>(
+    base_flat: &[f32],
+    n_base: usize,
+    delta_flat: &[f32],
+    dim: usize,
+    query: &[f32],
+    k: usize,
+    s: &'s mut QueryScratch,
+) -> &'s [ScoredItem] {
+    let QueryScratch { cands, scored, top, .. } = s;
+    scored.clear();
+    score_candidates_dual(base_flat, n_base, delta_flat, dim, query, cands, scored);
+    select_top_k(scored, top, k);
+    top
+}
+
 /// Sort `scored`'s top `k` (by descending score) into `top`:
 /// select-then-sort, O(C + k log k). Both buffers live in the caller's
 /// scratch; `top` is cleared first.

@@ -52,6 +52,29 @@ pub struct QueryScratch {
     pub(crate) qx_batch: Vec<f32>,
     /// Batch-query fused code block, `[batch × L·K]` row-major.
     pub(crate) codes_batch: Vec<i32>,
+    /// Cached live-tier snapshot (see [`super::delta`]): the epoch-cell
+    /// id + generation it was read at, plus the type-erased
+    /// `Arc<LiveSnapshot>`. Repeat queries against an unchanged live
+    /// index skip the publish lock entirely — one atomic load.
+    pub(crate) snap: SnapCache,
+}
+
+/// Type-erased live-snapshot cache slot: `(cell id, generation, snapshot)`.
+/// Erased so `QueryScratch` stays non-generic over the index storage.
+#[derive(Clone, Default)]
+pub(crate) struct SnapCache(
+    pub(crate) Option<(u64, u64, std::sync::Arc<dyn std::any::Any + Send + Sync>)>,
+);
+
+impl std::fmt::Debug for SnapCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            Some((cell, generation, _)) => {
+                write!(f, "SnapCache(cell {cell}, gen {generation})")
+            }
+            None => write!(f, "SnapCache(empty)"),
+        }
+    }
 }
 
 impl QueryScratch {
@@ -106,6 +129,30 @@ impl QueryScratch {
             self.epoch = 1;
         }
         self.cands.clear();
+        (
+            DedupSink { stamps: &mut self.stamps, epoch: self.epoch, out: &mut self.cands },
+            &mut self.codes,
+            &mut self.fracs,
+            &mut self.perturbs,
+        )
+    }
+
+    /// Re-borrow the *current* dedup epoch — no epoch bump, no candidate
+    /// clear — growing the stamp array to `n_total` ids. The live mutable
+    /// tier uses this to continue one dedup pass after the base index
+    /// probe: base candidates stay stamped, and delta entries occupy the
+    /// id range `[n_base, n_total)`. Fresh stamp slots hold 0, which can
+    /// never equal the live epoch (the epoch is always >= 1 after
+    /// [`QueryScratch::dedup`]), so grown slots start unvisited.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn resume_dedup(
+        &mut self,
+        n_total: usize,
+    ) -> (DedupSink<'_>, &mut Vec<i32>, &mut Vec<f32>, &mut Vec<(f32, usize, i32)>) {
+        if self.stamps.len() < n_total {
+            self.stamps.resize(n_total, 0);
+        }
+        debug_assert!(self.epoch >= 1, "resume_dedup before any dedup epoch");
         (
             DedupSink { stamps: &mut self.stamps, epoch: self.epoch, out: &mut self.cands },
             &mut self.codes,
@@ -339,6 +386,22 @@ mod tests {
         sink.extend(&[3, 9, 5]);
         sink.extend_mapped(&[2, 1], &map);
         assert_eq!(s.candidates(), &[7, 3, 9, 5]);
+    }
+
+    #[test]
+    fn resume_dedup_continues_the_epoch_over_a_grown_id_space() {
+        let mut s = QueryScratch::new();
+        let (mut sink, _, _, _) = s.dedup(4);
+        sink.extend(&[1, 3]);
+        // Resume: ids 1 and 3 stay deduped, new ids (incl. grown range)
+        // are fresh, and the candidate list is extended, not cleared.
+        let (mut sink, _, _, _) = s.resume_dedup(8);
+        sink.extend(&[3, 6, 1, 7, 6]);
+        assert_eq!(s.candidates(), &[1, 3, 6, 7]);
+        // The next plain dedup starts over.
+        let (mut sink, _, _, _) = s.dedup(8);
+        sink.extend(&[6]);
+        assert_eq!(s.candidates(), &[6]);
     }
 
     #[test]

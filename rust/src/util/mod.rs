@@ -13,6 +13,8 @@
 //! * [`log`]   — leveled stderr logging (replaces `tracing`).
 //! * [`check`] — a seeded property-testing loop (replaces `proptest` /
 //!   `hypothesis` on the Rust side).
+//! * [`xxh64`] — the XXH64 checksum (replaces `twox-hash`) used by the
+//!   WAL and the v5 per-section checksums.
 
 pub mod bench;
 pub mod check;
@@ -20,5 +22,7 @@ pub mod cli;
 pub mod json;
 pub mod log;
 pub mod rng;
+pub mod xxh64;
 
 pub use rng::Rng;
+pub use xxh64::xxh64;

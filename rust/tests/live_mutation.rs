@@ -1,0 +1,313 @@
+//! Equivalence under mutation: after a compaction swap, every query
+//! path of the live index must be byte-equal to a from-scratch build
+//! over the same logical item set — flat and banded, across schemes —
+//! and readers must stay live (lock-free) through repeated background
+//! compactions.
+//!
+//! The comparisons are exact, not statistical: the compactor rebuilds
+//! through the same pipeline with the generation-stable seed, so a
+//! fresh [`LiveIndex::create`] over the ext-sorted survivor set builds
+//! the identical structure. Result lists are compared after normalizing
+//! order by `(score desc, ext id)` so the assertions are insensitive to
+//! heap tie-breaking between the two instances' internal id spaces.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use alsh::index::{
+    AlshParams, LiveConfig, LiveIndex, MipsHashScheme, ProbeBudget, QueryScratch, ScoredItem,
+};
+use alsh::util::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "alsh_livemut_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+fn queries(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect()
+}
+
+/// Order-normalize a result list: descending score, ascending id on
+/// exact ties.
+fn canon(mut hits: Vec<ScoredItem>) -> Vec<ScoredItem> {
+    hits.sort_by(|a, b| {
+        b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id))
+    });
+    hits
+}
+
+/// Translate a reference instance's positional ids (0..n over the
+/// ext-sorted survivor set) back to external ids.
+fn map_ids(hits: &[ScoredItem], ext_of_pos: &[u32]) -> Vec<ScoredItem> {
+    hits.iter()
+        .map(|h| ScoredItem { id: ext_of_pos[h.id as usize], score: h.score })
+        .collect()
+}
+
+/// Query codes for the code-fed path, computed exactly the way the
+/// batcher's fused fallback does.
+fn query_codes(live: &LiveIndex, q: &[f32]) -> Vec<i32> {
+    let mut qx = Vec::new();
+    live.scheme().query_into(q, live.params().m, &mut qx);
+    let mut codes = vec![0i32; live.hasher().n_codes()];
+    live.hasher().hash_into(&qx, &mut codes);
+    codes
+}
+
+/// Drive one configuration end-to-end: mutate, compact, then check all
+/// four query paths against a from-scratch reference build.
+fn run_equivalence(scheme: MipsHashScheme, n_bands: usize) {
+    let tag = format!("{}_{}b", scheme.id(), n_bands);
+    let dir = tmp_dir(&tag);
+    let ref_dir = tmp_dir(&format!("{tag}_ref"));
+    let dim = 10;
+    let params = AlshParams { n_tables: 12, k_per_table: 4, scheme, ..AlshParams::default() };
+    let cfg = LiveConfig { params, n_bands, seed: 77 };
+
+    let initial = norm_spread_items(150, dim, 700);
+    let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
+
+    // Model of the logical item set, mutated in lockstep.
+    let mut model: BTreeMap<u32, Vec<f32>> =
+        (0..initial.len() as u32).map(|i| (i, initial[i as usize].clone())).collect();
+
+    // 40 inserts of fresh ids, 20 deletes, 10 overwrites.
+    let fresh = norm_spread_items(40, dim, 701);
+    for (i, v) in fresh.iter().enumerate() {
+        let ext = 500 + i as u32;
+        live.upsert(ext, v).unwrap();
+        model.insert(ext, v.clone());
+    }
+    for i in 0..20u32 {
+        let ext = (i * 7) % 150;
+        live.delete(ext).unwrap();
+        model.remove(&ext);
+    }
+    let over = norm_spread_items(10, dim, 702);
+    for (i, v) in over.iter().enumerate() {
+        let ext = 100 + i as u32; // survives the delete pattern? overwrite regardless
+        live.upsert(ext, v).unwrap();
+        model.insert(ext, v.clone());
+    }
+    assert_eq!(live.n_items(), model.len());
+
+    // Compact: the delta drains into generation 1 through the build
+    // pipeline, at the generation-stable seed.
+    assert_eq!(live.compact_once().unwrap(), 1);
+    assert_eq!(live.stats().delta_items, 0);
+    assert_eq!(live.n_items(), model.len());
+
+    // From-scratch reference over the ext-sorted survivor set.
+    let ext_of_pos: Vec<u32> = model.keys().copied().collect();
+    let survivors: Vec<Vec<f32>> = model.values().cloned().collect();
+    let reference = LiveIndex::<alsh::index::Owned>::create(&ref_dir, &survivors, cfg).unwrap();
+
+    let mut s_live = live.scratch();
+    let mut s_ref = reference.scratch();
+    let budget = ProbeBudget { n_probes: 1, max_tables: 7, max_bands: n_bands.max(1), max_rerank: 64 };
+    for q in queries(25, dim, 703) {
+        // Path 1: plain.
+        let a = canon(live.query_into(&q, 10, &mut s_live).to_vec());
+        let b = canon(map_ids(reference.query_into(&q, 10, &mut s_ref), &ext_of_pos));
+        assert_eq!(a, b, "plain path diverged ({tag})");
+
+        // Path 2: multi-probe.
+        let a = canon(live.query_multiprobe_into(&q, 10, 4, &mut s_live).to_vec());
+        let b =
+            canon(map_ids(reference.query_multiprobe_into(&q, 10, 4, &mut s_ref), &ext_of_pos));
+        assert_eq!(a, b, "multiprobe path diverged ({tag})");
+
+        // Path 3: code-fed (the batcher re-entry) — the hasher is
+        // generation-stable, so both instances consume identical codes.
+        let codes = query_codes(&live, &q);
+        let a = canon(live.query_from_codes_into(&codes, &q, 10, &mut s_live).to_vec());
+        let b = canon(map_ids(
+            reference.query_from_codes_into(&codes, &q, 10, &mut s_ref),
+            &ext_of_pos,
+        ));
+        assert_eq!(a, b, "code-fed path diverged ({tag})");
+
+        // Path 4: budgeted (degraded serving).
+        let a = canon(live.query_budgeted_into(&q, 10, budget, &mut s_live).to_vec());
+        let b = canon(map_ids(
+            reference.query_budgeted_into(&q, 10, budget, &mut s_ref),
+            &ext_of_pos,
+        ));
+        assert_eq!(a, b, "budgeted path diverged ({tag})");
+    }
+
+    // Batch path rides on the plain path; spot-check it end to end.
+    let qs = queries(5, dim, 704);
+    let (mut out_live, mut out_ref) = (Vec::new(), Vec::new());
+    live.query_batch_into(&qs, 5, &mut s_live, &mut out_live);
+    reference.query_batch_into(&qs, 5, &mut s_ref, &mut out_ref);
+    for (a, b) in out_live.into_iter().zip(out_ref) {
+        assert_eq!(canon(a), canon(map_ids(&b, &ext_of_pos)));
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+#[test]
+fn compaction_equivalence_l2_flat() {
+    run_equivalence(MipsHashScheme::L2Alsh, 1);
+}
+
+#[test]
+fn compaction_equivalence_l2_banded() {
+    run_equivalence(MipsHashScheme::L2Alsh, 3);
+}
+
+#[test]
+fn compaction_equivalence_sign_flat() {
+    run_equivalence(MipsHashScheme::SignAlsh, 1);
+}
+
+#[test]
+fn compaction_equivalence_sign_banded() {
+    run_equivalence(MipsHashScheme::SignAlsh, 3);
+}
+
+#[test]
+fn compaction_equivalence_simple_banded() {
+    run_equivalence(MipsHashScheme::SimpleLsh, 3);
+}
+
+/// Readers never block: a pool of query threads runs lock-free on
+/// epoch-swapped snapshots while the writer pushes mutations through 4+
+/// compaction swaps. Every reader keeps making progress the whole time
+/// and every result it sees is internally consistent (an item is never
+/// returned after its delete was applied *and* its snapshot was
+/// republished — here checked as: scores are finite and ids come from
+/// the set ever inserted).
+#[test]
+fn readers_stay_live_through_repeated_compactions() {
+    let dir = tmp_dir("liveness");
+    let dim = 8;
+    let cfg = LiveConfig {
+        params: AlshParams { n_tables: 8, k_per_table: 4, ..AlshParams::default() },
+        n_bands: 2,
+        seed: 99,
+    };
+    let initial = norm_spread_items(200, dim, 800);
+    let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let readers: Vec<_> = (0..4)
+        .map(|r| {
+            let live = live.clone();
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            std::thread::spawn(move || {
+                let mut s = live.scratch();
+                let qs = queries(16, dim, 900 + r);
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let q = &qs[i % qs.len()];
+                    i += 1;
+                    for hit in live.query_into(q, 5, &mut s) {
+                        assert!(hit.score.is_finite());
+                        assert!((hit.id as usize) < 200 || hit.id >= 1000);
+                    }
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+
+    // Writer: interleave upserts/deletes with explicit compactions.
+    let extra = norm_spread_items(80, dim, 801);
+    let mut next_ext = 1000u32;
+    for round in 0..4 {
+        for i in 0..20 {
+            live.upsert(next_ext, &extra[(round * 20 + i) as usize]).unwrap();
+            next_ext += 1;
+        }
+        live.delete(round * 3).unwrap();
+        let before = served.load(Ordering::Relaxed);
+        let generation = live.compact_once().unwrap();
+        assert_eq!(generation, round as u64 + 1);
+        // Readers progressed while (or right after) the swap happened;
+        // give them a moment if the compaction was instant.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while served.load(Ordering::Relaxed) == before {
+            assert!(std::time::Instant::now() < deadline, "readers wedged during compaction");
+            std::thread::yield_now();
+        }
+    }
+    assert_eq!(live.generation(), 4);
+    stop.store(true, Ordering::Relaxed);
+    for t in readers {
+        t.join().expect("reader panicked");
+    }
+    assert!(served.load(Ordering::Relaxed) > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The background compactor thread does the same swaps on its own
+/// schedule: serving continues, generations advance, and stopping the
+/// compactor is deterministic.
+#[test]
+fn background_compactor_drains_while_serving() {
+    let dir = tmp_dir("bg");
+    let dim = 8;
+    let cfg = LiveConfig {
+        params: AlshParams { n_tables: 8, k_per_table: 4, ..AlshParams::default() },
+        n_bands: 1,
+        seed: 5,
+    };
+    let initial = norm_spread_items(120, dim, 810);
+    let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
+    live.spawn_compactor(10, std::time::Duration::from_millis(1));
+
+    let extra = norm_spread_items(60, dim, 811);
+    let mut s = live.scratch();
+    let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.29).sin()).collect();
+    for (i, v) in extra.iter().enumerate() {
+        live.upsert(2000 + i as u32, v).unwrap();
+        // Serving interleaves with the compactor's swaps.
+        for hit in live.query_into(&q, 5, &mut s) {
+            assert!(hit.score.is_finite());
+        }
+    }
+    // 60 upserts over a threshold of 10: the compactor must have drained
+    // at least once (poll every 1ms; wait for it deterministically).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while live.generation() == 0 {
+        assert!(std::time::Instant::now() < deadline, "background compactor never ran");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    live.stop_compactor();
+    let generation = live.generation();
+    assert!(generation >= 1);
+    assert_eq!(live.n_items(), 180);
+    // After stop, no further compactions happen.
+    live.upsert(5000, &extra[0]).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    assert_eq!(live.generation(), generation);
+    std::fs::remove_dir_all(&dir).ok();
+}

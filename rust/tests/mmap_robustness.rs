@@ -212,6 +212,97 @@ fn wrong_element_count_sections_rejected() {
     assert_open_fails(&path, &bytes, "257", "radix length");
 }
 
+// -- section checksums (PersistFormat::V5Checked) ------------------------
+
+use alsh::index::{open_mmap_verified, persist::load_any};
+
+/// A fresh valid checksummed v5 flat file plus its bytes. Entries are
+/// 24 bytes (offset, len, xxh64), so entry `i` starts at `32 + 24*i`.
+fn v5_checked_flat(name: &str) -> (std::path::PathBuf, Vec<u8>) {
+    let idx = AlshIndex::build(&items(150, 8, 1), AlshParams::default(), 2);
+    let path = tmp(name);
+    idx.save_as(&path, PersistFormat::V5Checked).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+#[test]
+fn checked_roundtrip_opens_on_every_surface() {
+    let (path, _) = v5_checked_flat("checked_ok.v5");
+    // Verified, lazy, and heap loads all accept an intact file.
+    assert!(open_mmap_verified(&path).is_ok());
+    assert!(open_mmap(&path).is_ok());
+    assert!(load_any(&path).is_ok());
+}
+
+#[test]
+fn flipped_payload_byte_fails_verified_open_and_load() {
+    let (path, bytes) = v5_checked_flat("checked_flip.v5");
+    // Flip one byte inside section 0's payload (the items block).
+    let off = u64::from_le_bytes(bytes[32..40].try_into().unwrap()) as usize;
+    let mut bad = bytes.clone();
+    bad[off + 5] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    let err = open_mmap_verified(&path).err().expect("bit rot verified-opened");
+    assert!(
+        format!("{err:#}").contains("checksum mismatch"),
+        "unhelpful: {err:#}"
+    );
+    // The heap loader verifies checksums whenever the file carries them.
+    assert!(load_any(&path).is_err(), "bit rot survived load_any");
+    // The lazy open declares O(header) trust and must still map it.
+    assert!(open_mmap(&path).is_ok(), "unverified open must stay O(header)");
+}
+
+#[test]
+fn flipped_stored_checksum_fails_verified_open() {
+    let (path, bytes) = v5_checked_flat("checked_sum.v5");
+    // Corrupt the stored checksum itself (entry 0 bytes 48..56): the
+    // payload is fine but the verifier can no longer prove it.
+    let mut bad = bytes.clone();
+    bad[48] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(open_mmap_verified(&path).is_err());
+    assert!(load_any(&path).is_err());
+    assert!(open_mmap(&path).is_ok());
+}
+
+#[test]
+fn verified_open_rejects_unchecked_file_with_resave_hint() {
+    let (path, _) = v5_flat("checked_missing.v5");
+    let err = open_mmap_verified(&path).err().expect("plain v5 verified-opened");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("no section checksums") && msg.contains("V5Checked"),
+        "unhelpful: {msg}"
+    );
+}
+
+#[test]
+fn checked_banded_flip_in_last_section_rejected() {
+    let idx = NormRangeIndex::build(
+        &items(200, 8, 52),
+        AlshParams::default(),
+        BandedParams { n_bands: 3 },
+        53,
+    );
+    let path = tmp("checked_banded.v5");
+    idx.save_as(&path, PersistFormat::V5Checked).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(open_mmap_verified(&path).is_ok());
+    // Flip a byte in the LAST section's payload: proves verification
+    // covers the whole table, not just the front.
+    let n = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    let e = 32 + 24 * (n - 1);
+    let off = u64::from_le_bytes(bytes[e..e + 8].try_into().unwrap()) as usize;
+    let len = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap()) as usize;
+    let mut bad = bytes.clone();
+    bad[off + len - 1] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(open_mmap_verified(&path).is_err(), "tail-section rot verified-opened");
+    assert!(open_mmap(&path).is_ok());
+}
+
 /// Banded-specific header corruption: a band-length lie is caught by
 /// the ids-section element count, and a clipped band table set by the
 /// section count.

@@ -246,6 +246,186 @@ fn concurrent_mixed_traffic_never_wedges_the_server() {
     assert_eq!(err.code(), "internal");
 }
 
+// -- live mutation commands ----------------------------------------------
+
+use alsh::index::LiveConfig;
+
+fn live_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "alsh_serve_live_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `boot` over a live (mutable) engine instead of a frozen one.
+fn boot_live(dim: usize, dir: &std::path::Path) -> (Arc<MipsEngine>, PjrtBatcher) {
+    let items = norm_spread_items(300, dim, 2);
+    let engine = Arc::new(
+        MipsEngine::create_live(
+            dir,
+            &items,
+            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 2 },
+        )
+        .expect("live engine"),
+    );
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "definitely-not-an-artifacts-dir",
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+    )
+    .expect("batcher");
+    (engine, batcher)
+}
+
+#[test]
+fn upsert_and_delete_commands_mutate_live_engine() {
+    let dir = live_dir("mutate");
+    let (engine, batcher) = boot_live(8, &dir);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    let resp = h(&format!(r#"{{"cmd": "upsert", "id": 900, "vector": {q}}}"#));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("n_items").and_then(Json::as_f64), Some(301.0));
+
+    // The live gauges reflect the mutation (delta row + durable WAL).
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    let m = resp.get("metrics").expect("metrics object");
+    assert_eq!(m.get("delta_items").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(m.get("tombstones").and_then(Json::as_f64), Some(0.0));
+    assert!(m.get("wal_bytes").and_then(Json::as_f64).unwrap() > 8.0);
+
+    // Delete a base row, then the delta row just inserted.
+    let resp = h(r#"{"cmd": "delete", "id": 5}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("n_items").and_then(Json::as_f64), Some(300.0));
+    let resp = h(r#"{"cmd": "delete", "id": 900}"#);
+    assert_eq!(resp.get("n_items").and_then(Json::as_f64), Some(299.0));
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    let m = resp.get("metrics").expect("metrics object");
+    assert!(m.get("tombstones").and_then(Json::as_f64).unwrap() >= 2.0);
+
+    // Queries keep serving on the mutated engine.
+    let resp = h(&format!(r#"{{"vector": {q}, "top_k": 3, "deadline_ms": 60000}}"#));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    batcher.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mutation_commands_validate_like_queries() {
+    let dir = live_dir("validate");
+    let (engine, batcher) = boot_live(8, &dir);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    // Missing / non-integer / out-of-u32-range ids.
+    for req in [
+        format!(r#"{{"cmd": "upsert", "vector": {q}}}"#),
+        format!(r#"{{"cmd": "upsert", "id": -1, "vector": {q}}}"#),
+        format!(r#"{{"cmd": "upsert", "id": 1.5, "vector": {q}}}"#),
+        format!(r#"{{"cmd": "upsert", "id": 4294967296, "vector": {q}}}"#),
+        r#"{"cmd": "delete"}"#.to_string(),
+        r#"{"cmd": "delete", "id": "seven"}"#.to_string(),
+    ] {
+        let resp = h(&req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("id"),
+            "{req} → {resp:?}"
+        );
+    }
+
+    // Vector validation mirrors the query path.
+    let resp = h(r#"{"cmd": "upsert", "id": 7}"#);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("vector"));
+    let resp = h(r#"{"cmd": "upsert", "id": 7, "vector": [1.0, 2.0]}"#);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("dim"));
+    let resp = h(r#"{"cmd": "upsert", "id": 7, "vector": [1e39, 0, 0, 0, 0, 0, 0, 0]}"#);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("finite"));
+
+    // Nothing above mutated the engine.
+    assert_eq!(engine.n_items(), 300);
+    batcher.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn frozen_engine_rejects_mutation_commands() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    for req in [
+        format!(r#"{{"cmd": "upsert", "id": 1, "vector": {q}}}"#),
+        r#"{"cmd": "delete", "id": 1}"#.to_string(),
+    ] {
+        let resp = h(&req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("frozen"),
+            "{req} → {resp:?}"
+        );
+    }
+    // And its live gauges read zero.
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    let m = resp.get("metrics").expect("metrics object");
+    for key in ["delta_items", "tombstones", "compactions", "wal_bytes", "last_compaction_ms"] {
+        assert_eq!(m.get(key).and_then(Json::as_f64), Some(0.0), "{key}");
+    }
+    batcher.shutdown();
+}
+
+/// Mutations and queries over a live socket: upserts/deletes from one
+/// connection are durable and visible while another keeps querying.
+#[test]
+fn socket_mutations_serve_alongside_queries() {
+    let dir = live_dir("socket");
+    let (engine, batcher) = boot_live(8, &dir);
+    let handle = batcher.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let (h, e) = (handle.clone(), Arc::clone(&engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, h, e, ServeConfig::default());
+        });
+    }
+    let mut writer_client = Client::connect(addr);
+    let mut reader_client = Client::connect(addr);
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    for i in 0..10u32 {
+        let resp = writer_client
+            .roundtrip(&format!(r#"{{"cmd": "upsert", "id": {}, "vector": {q}}}"#, 500 + i));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(
+            resp.get("n_items").and_then(Json::as_f64),
+            Some((301 + i) as f64)
+        );
+        let resp = reader_client
+            .roundtrip(&format!(r#"{{"vector": {q}, "top_k": 3, "deadline_ms": 60000}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    }
+    let resp = writer_client.roundtrip(r#"{"cmd": "delete", "id": 503}"#);
+    assert_eq!(resp.get("n_items").and_then(Json::as_f64), Some(309.0));
+    batcher.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// An oversized request line gets a structured error and the rest of the
 /// line is discarded — the same connection then keeps serving.
 #[test]
