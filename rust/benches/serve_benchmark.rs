@@ -18,10 +18,18 @@
 //! query tail *while compacting* lands in section `live` — plus the
 //! measured WAL replay time of a crash-recovery open.
 //!
+//! Phase 5 builds a replicated router (3 shards × 2 replicas, verified
+//! on-disk members) and measures the serving cost of one slow replica
+//! three ways: unhedged (hedge parked beyond the stall — the control),
+//! hedged with the p99-derived delay, and with a whole group crashed
+//! (partial-reply rate + coverage). It also times one scrub
+//! detect→quarantine→repair cycle over an injected corruption. Lands in
+//! section `replica`.
+//!
 //! Env knobs (CI sizes down): `ALSH_SERVE_N` items, `ALSH_SERVE_CLIENTS`
 //! × `ALSH_SERVE_QPC` healthy queries, `ALSH_SERVE_OVER_CLIENTS` ×
 //! `ALSH_SERVE_OVER_QPC` overload queries, `ALSH_SERVE_MUT` mutations in
-//! the live phase.
+//! the live phase, `ALSH_SERVE_REP_Q` queries per replica measurement.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -30,10 +38,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use alsh::coordinator::{
-    serve_on, AdmissionConfig, BatcherConfig, FaultPlan, MipsEngine, PjrtBatcher, ServeConfig,
+    serve_on, AdmissionConfig, BatcherConfig, FaultPlan, MipsEngine, PjrtBatcher, ReplicaConfig,
+    ServeConfig, ShardFaultPlan, ShardedRouter,
 };
 use alsh::eval::gold_top_t;
-use alsh::index::{AlshParams, LiveConfig, ProbeBudget};
+use alsh::index::{AlshParams, LiveConfig, Mapped, ProbeBudget};
 use alsh::util::bench::merge_bench_json_file;
 use alsh::util::json::Json;
 use alsh::util::Rng;
@@ -435,6 +444,128 @@ fn main() {
     drop(reopened);
     std::fs::remove_dir_all(&live_dir).ok();
 
+    // ── Phase 5: replicated router — hedging, partials, scrub ────────
+    let rep_q = env_usize("ALSH_SERVE_REP_Q", 80);
+    let (n_shards, n_replicas) = (3usize, 2usize);
+    let stall = Duration::from_millis(20);
+    let rep_dir = std::env::temp_dir().join(format!(
+        "alsh_serve_bench_rep_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let mut rng = Rng::seed_from_u64(5000);
+    let rep_queries: Vec<Vec<f32>> = (0..rep_q)
+        .map(|_| (0..dim).map(|_| rng.normal_f32() * 0.5).collect())
+        .collect();
+    println!(
+        "phase 5: {n_shards}×{n_replicas} replicated router, one replica stalling {stall:?}"
+    );
+    let stall_plan =
+        ShardFaultPlan { stall_from: 0, stall_until: usize::MAX, stall, ..Default::default() };
+
+    // Unhedged control: the hedge delay is parked far beyond the stall,
+    // so every query waits out the slow replica.
+    let unhedged: ShardedRouter<Mapped> = ShardedRouter::create_replicated(
+        &rep_dir.join("unhedged"),
+        &items,
+        n_shards,
+        n_replicas,
+        params,
+        None,
+        ReplicaConfig {
+            shard_timeout: Duration::from_secs(10),
+            hedge_delay: Some(Duration::from_secs(5)),
+            ..Default::default()
+        },
+        15,
+    )
+    .expect("replicated router");
+    unhedged.set_shard_faults(0, 0, stall_plan);
+    let mut unhedged_lats: Vec<u64> = Vec::with_capacity(rep_q);
+    for q in &rep_queries {
+        let t = Instant::now();
+        let reply = unhedged.query_replicated(q, top_k, ProbeBudget::full());
+        assert!(!reply.degraded, "stall degraded the unhedged control");
+        unhedged_lats.push(t.elapsed().as_micros() as u64);
+    }
+    unhedged_lats.sort_unstable();
+    drop(unhedged);
+
+    // Hedged: p99-derived hedge delay, histograms warmed on healthy
+    // traffic before the fault lands.
+    let hedged: ShardedRouter<Mapped> = ShardedRouter::create_replicated(
+        &rep_dir.join("hedged"),
+        &items,
+        n_shards,
+        n_replicas,
+        params,
+        None,
+        ReplicaConfig { shard_timeout: Duration::from_secs(10), ..Default::default() },
+        15,
+    )
+    .expect("replicated router");
+    let mut rep_healthy_lats: Vec<u64> = Vec::with_capacity(rep_q);
+    for q in &rep_queries {
+        let t = Instant::now();
+        hedged.query_replicated(q, top_k, ProbeBudget::full());
+        rep_healthy_lats.push(t.elapsed().as_micros() as u64);
+    }
+    rep_healthy_lats.sort_unstable();
+    hedged.set_shard_faults(0, 0, stall_plan);
+    let mut hedged_lats: Vec<u64> = Vec::with_capacity(rep_q);
+    for q in &rep_queries {
+        let t = Instant::now();
+        let reply = hedged.query_replicated(q, top_k, ProbeBudget::full());
+        assert_eq!(reply.shards_answered, n_shards, "hedge failed to cover the stall");
+        hedged_lats.push(t.elapsed().as_micros() as u64);
+    }
+    hedged_lats.sort_unstable();
+    let hedge_fires = hedged.metrics().snapshot().hedge_fires;
+    let (unhedged_p99, hedged_p99) = (pct(&unhedged_lats, 0.99), pct(&hedged_lats, 0.99));
+    assert!(
+        hedged_p99 <= unhedged_p99,
+        "hedging made the stalled tail worse: {hedged_p99}µs vs {unhedged_p99}µs"
+    );
+
+    // Partial replies: crash both members of shard 2; every reply must
+    // disclose 2/3 coverage while still answering.
+    for m in 0..n_replicas {
+        hedged.set_shard_faults(2, m, ShardFaultPlan { crash_at: Some(0), ..Default::default() });
+    }
+    let n_partial_q = rep_q.min(25);
+    let mut partials = 0usize;
+    let mut coverage_sum = 0.0f64;
+    for q in rep_queries.iter().take(n_partial_q) {
+        let reply = hedged.query_replicated(q, top_k, ProbeBudget::full());
+        assert!(!reply.hits.is_empty(), "surviving shards returned nothing");
+        coverage_sum += reply.coverage_fraction();
+        if reply.degraded {
+            partials += 1;
+        }
+    }
+    let partial_rate = partials as f64 / n_partial_q as f64;
+    let mean_coverage = coverage_sum / n_partial_q as f64;
+
+    // Scrub: one injected corruption — detection must be 1/1, repair
+    // must restore a verifying file, timed end to end.
+    let t4 = Instant::now();
+    hedged.corrupt_replica(1, 1).expect("inject corruption");
+    let report = hedged.scrub_now();
+    let scrub_ms = t4.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(report.corrupted, vec![(1, 1)], "scrub missed the corruption: {report:?}");
+    assert_eq!(report.repaired, vec![(1, 1)], "scrub failed to repair: {report:?}");
+    println!(
+        "  stalled-shard p99: unhedged {unhedged_p99}µs vs hedged {hedged_p99}µs \
+         (healthy {}µs, {hedge_fires} hedges); group-down partial rate {partial_rate:.2} \
+         coverage {mean_coverage:.3}; scrub detect+repair {scrub_ms:.2}ms",
+        pct(&rep_healthy_lats, 0.99),
+    );
+    drop(hedged);
+    std::fs::remove_dir_all(&rep_dir).ok();
+
     merge_bench_json_file(
         "BENCH_serve.json",
         "serve",
@@ -480,6 +611,25 @@ fn main() {
             ("compactions".into(), num(stats.compactions as f64)),
             ("wal_replay_rows".into(), num(replayed as f64)),
             ("wal_replay_ms".into(), num(wal_replay_ms)),
+        ],
+    );
+    merge_bench_json_file(
+        "BENCH_serve.json",
+        "replica",
+        vec![
+            ("shards".into(), num(n_shards as f64)),
+            ("replicas".into(), num(n_replicas as f64)),
+            ("stall_ms".into(), num(stall.as_secs_f64() * 1e3)),
+            ("queries".into(), num(rep_q as f64)),
+            ("healthy_p99_us".into(), num(pct(&rep_healthy_lats, 0.99) as f64)),
+            ("unhedged_p99_us".into(), num(unhedged_p99 as f64)),
+            ("hedged_p99_us".into(), num(hedged_p99 as f64)),
+            ("hedge_fires".into(), num(hedge_fires as f64)),
+            ("partial_rate_group_down".into(), num(partial_rate)),
+            ("coverage_group_down".into(), num(mean_coverage)),
+            ("scrub_detected".into(), num(report.corrupted.len() as f64)),
+            ("scrub_repaired".into(), num(report.repaired.len() as f64)),
+            ("scrub_ms".into(), num(scrub_ms)),
         ],
     );
     std::process::exit(0); // acceptor threads are still parked in accept()

@@ -84,6 +84,31 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Clients may stretch their deadline only so far: anything above an
+/// hour is clamped (also keeps `Duration::from_secs_f64` panic-free).
+pub const MAX_DEADLINE_MS: f64 = 3_600_000.0;
+
+/// Triage one client-supplied `deadline_ms` value into an absolute
+/// deadline: positive finite milliseconds, clamped to
+/// [`MAX_DEADLINE_MS`]; anything else is an `invalid_argument`. Shared
+/// by the single-engine and routed server paths so both enforce
+/// identical deadline semantics.
+pub fn triage_deadline_ms(ms: f64) -> Result<Instant, ServeError> {
+    if ms.is_finite() && ms > 0.0 {
+        Ok(Instant::now() + Duration::from_secs_f64(ms.min(MAX_DEADLINE_MS) / 1000.0))
+    } else {
+        Err(ServeError::InvalidArgument(
+            "deadline_ms must be a positive finite number of milliseconds".into(),
+        ))
+    }
+}
+
+/// Whether an optional absolute deadline has already passed — the
+/// pre-dispatch and post-merge staleness checks of both serve paths.
+pub fn deadline_expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
 /// Overload/admission configuration. The defaults are deliberately
 /// generous (2 s deadline, 500 ms p99 target) so that lightly loaded
 /// deployments — and the existing test suites — never degrade or shed;
@@ -321,6 +346,23 @@ mod tests {
         let e = ServeError::Overloaded("queue full".into());
         assert_eq!(e.to_string(), "overloaded: queue full");
         assert_eq!(e.message(), "queue full");
+    }
+
+    #[test]
+    fn deadline_triage_accepts_positive_and_rejects_junk() {
+        assert!(triage_deadline_ms(250.0).is_ok());
+        assert!(triage_deadline_ms(0.0).is_err());
+        assert!(triage_deadline_ms(-5.0).is_err());
+        assert!(triage_deadline_ms(f64::INFINITY).is_err());
+        assert!(triage_deadline_ms(f64::NAN).is_err());
+        // Absurd values clamp instead of panicking Duration::from_secs_f64.
+        let far = triage_deadline_ms(1e300).unwrap();
+        assert!(far <= Instant::now() + Duration::from_secs(3601));
+        assert!(!deadline_expired(None));
+        assert!(!deadline_expired(Some(Instant::now() + Duration::from_secs(60))));
+        let past = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(deadline_expired(Some(past)));
     }
 
     #[test]

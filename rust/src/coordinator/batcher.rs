@@ -130,11 +130,20 @@ pub enum BreakerState {
 }
 
 impl BreakerState {
-    fn from_u8(v: u8) -> Self {
+    pub(crate) fn from_u8(v: u8) -> Self {
         match v {
             0 => BreakerState::Closed,
             1 => BreakerState::Open,
             _ => BreakerState::HalfOpen,
+        }
+    }
+
+    /// Wire name used by the server `metrics` command.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
         }
     }
 }

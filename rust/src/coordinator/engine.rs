@@ -262,6 +262,24 @@ impl<S: Storage> MipsEngine<S> {
         }
     }
 
+    /// Group-commit bulk upsert: one WAL write + one fsync for the
+    /// whole batch, one snapshot swap (see
+    /// [`LiveIndex::upsert_batch`](crate::index::LiveIndex::upsert_batch)).
+    /// Errors on a frozen engine; the batch is durable before this
+    /// returns.
+    pub fn upsert_batch(&self, entries: &[(u32, Vec<f32>)]) -> crate::Result<()> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                live.upsert_batch(entries)?;
+                self.sync_live_metrics();
+                Ok(())
+            }
+            EngineCore::Frozen(_) => {
+                bail!("upsert_batch: engine serves a frozen index (open a live directory to mutate)")
+            }
+        }
+    }
+
     /// Delete an item by external id (idempotent). Errors on a frozen
     /// engine; the WAL append is durable before this returns.
     pub fn delete(&self, ext_id: u32) -> crate::Result<()> {

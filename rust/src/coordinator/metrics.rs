@@ -40,6 +40,17 @@ pub struct Metrics {
     /// Batches served by the fused CPU path because the PJRT backend
     /// failed (breaker open or in-flight failure).
     pub pjrt_fallbacks: AtomicU64,
+    /// Hedged backup dispatches fired by the replicated router (primary
+    /// replica exceeded the hedge delay or died on dispatch).
+    pub hedge_fires: AtomicU64,
+    /// Merged replies returned with less than full shard coverage.
+    pub partial_replies: AtomicU64,
+    /// Replicas quarantined by the integrity scrubber (section checksum
+    /// failure).
+    pub replica_quarantines: AtomicU64,
+    /// Quarantined replicas repaired (rebuilt + re-verified) and
+    /// re-admitted through their breaker.
+    pub replica_repairs: AtomicU64,
     /// Live admission-queue depth (gauge, not a counter).
     queue_depth: AtomicU64,
     /// Live-tier gauges (all zero on a frozen engine): rows in the
@@ -105,6 +116,26 @@ impl Metrics {
         self.pjrt_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The replicated router fired a hedged backup dispatch.
+    pub fn record_hedge_fire(&self) {
+        self.hedge_fires.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A merged reply went out with partial shard coverage.
+    pub fn record_partial_reply(&self) {
+        self.partial_replies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The scrubber quarantined a replica on checksum failure.
+    pub fn record_replica_quarantine(&self) {
+        self.replica_quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A quarantined replica was repaired and re-admitted.
+    pub fn record_replica_repair(&self) {
+        self.replica_repairs.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A query entered the admission queue.
     pub fn record_queue_push(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -147,6 +178,10 @@ impl Metrics {
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
             degraded_queries: self.degraded_queries.load(Ordering::Relaxed),
             pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
+            hedge_fires: self.hedge_fires.load(Ordering::Relaxed),
+            partial_replies: self.partial_replies.load(Ordering::Relaxed),
+            replica_quarantines: self.replica_quarantines.load(Ordering::Relaxed),
+            replica_repairs: self.replica_repairs.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             delta_items: self.delta_items.load(Ordering::Relaxed),
             tombstones: self.tombstones.load(Ordering::Relaxed),
@@ -161,6 +196,44 @@ impl Metrics {
             p50_latency_us: percentile(&hist, 0.50),
             p99_latency_us: percentile(&hist, 0.99),
         }
+    }
+}
+
+/// A standalone lock-free log2 latency histogram with [`Metrics`]'
+/// exact bucketing, for components that track their own tail
+/// distribution — e.g. the replicated router keeps one per shard so the
+/// hedge delay can be derived from that shard's measured p99 rather
+/// than a process-wide mixture.
+#[derive(Debug, Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, latency_us: u64) {
+        let bucket = if latency_us < 2 {
+            0
+        } else {
+            (63 - latency_us.leading_zeros() as usize).min(N_BUCKETS - 1)
+        };
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Lower bound (µs) of the bucket holding the `p`-quantile; 0 when
+    /// nothing has been recorded.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let hist: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        percentile(&hist, p)
     }
 }
 
@@ -193,6 +266,10 @@ pub struct MetricsSnapshot {
     pub deadline_exceeded: u64,
     pub degraded_queries: u64,
     pub pjrt_fallbacks: u64,
+    pub hedge_fires: u64,
+    pub partial_replies: u64,
+    pub replica_quarantines: u64,
+    pub replica_repairs: u64,
     pub queue_depth: u64,
     pub delta_items: u64,
     pub tombstones: u64,
@@ -298,6 +375,38 @@ mod tests {
         m.record_queue_pop();
         m.record_queue_pop();
         assert_eq!(m.queue_depth(), 0);
+    }
+
+    #[test]
+    fn replica_counters() {
+        let m = Metrics::new();
+        m.record_hedge_fire();
+        m.record_partial_reply();
+        m.record_partial_reply();
+        m.record_replica_quarantine();
+        m.record_replica_repair();
+        let s = m.snapshot();
+        assert_eq!(s.hedge_fires, 1);
+        assert_eq!(s.partial_replies, 2);
+        assert_eq!(s.replica_quarantines, 1);
+        assert_eq!(s.replica_repairs, 1);
+    }
+
+    #[test]
+    fn latency_hist_matches_metrics_bucketing() {
+        let h = LatencyHist::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        for i in 0..1000u64 {
+            h.record(i + 1);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.percentile_us(0.50) <= h.percentile_us(0.99));
+        assert!(h.percentile_us(0.99) >= 512);
+        let m = Metrics::new();
+        for i in 0..1000u64 {
+            m.record_query(i + 1, 0);
+        }
+        assert_eq!(h.percentile_us(0.99), m.snapshot().p99_latency_us);
     }
 
     #[test]

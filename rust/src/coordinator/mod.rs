@@ -50,16 +50,65 @@
 //! instead of a frozen index: the server's `upsert`/`delete` commands
 //! WAL-log and apply mutations while readers keep running lock-free on
 //! epoch-swapped snapshots, and a background compactor drains the delta
-//! back into a fresh frozen generation. The whole serving stack —
-//! batcher fan-out (its fused hasher is generation-stable), budgeted
-//! degradation, router sharding — works unchanged on top, and the
-//! live-tier gauges flow through [`Metrics`] into the `metrics`
-//! command.
+//! back into a fresh frozen generation. Bulk loads go through
+//! `upsert_batch` — one WAL batch, one fsync for the whole group
+//! ([`crate::index::LiveIndex::upsert_batch`]) — with all-or-prefix
+//! durability. The whole serving stack — batcher fan-out (its fused
+//! hasher is generation-stable), budgeted degradation, router sharding —
+//! works unchanged on top, and the live-tier gauges flow through
+//! [`Metrics`] into the `metrics` command.
+//!
+//! # Replication, hedging, and partial results
+//!
+//! **Replica groups.** Each shard of a [`ShardedRouter`] is a replica
+//! group ([`crate::coordinator::replica`]): R engines over the same
+//! contiguous item range, built with **distinct hash seeds** (member
+//! (s, r) seeds with `seed + s·R + r`, derived in exactly one place).
+//! Distinct seeds make replicas recall-diverse by construction — a
+//! hedged retry probes independent hash tables, not a copy of the
+//! randomness that was already slow or unlucky.
+//!
+//! **Hedged scatter/gather.** [`ShardedRouter::query_replicated`]
+//! scatters every shard's primary dispatch before any collect blocks,
+//! then waits per shard: if the primary exceeds the hedge delay (fixed
+//! [`ReplicaConfig::hedge_delay`], or derived per shard as
+//! `clamp(hedge_multiplier × shard p99, hedge_min, hedge_max)`), one
+//! backup replica is dispatched and whichever answers first wins. The
+//! wait is bounded by [`ReplicaConfig::shard_timeout`]; workers that
+//! answer after the dispatcher walked away reply into a dropped channel.
+//!
+//! **Partial results.** A shard whose whole group is down does not hang
+//! or fail the query: the merge returns whatever shards answered, with
+//! coverage disclosed on the reply ([`RouterReply`]:
+//! `shards_answered`/`shards_total`, `coverage_fraction()`,
+//! `degraded: true`) and counted in [`Metrics`] (`partial_replies`,
+//! `hedge_fires`, per-shard answer-p99 gauges). The routed server path
+//! carries the same fields on every response.
+//!
+//! **Per-replica breakers.** Each member has a PR 6-style circuit
+//! breaker: consecutive dispatch failures (timeouts, crashed workers)
+//! trip it Open, a cooldown later the next dispatch is the half-open
+//! probe, success re-closes. Tripped members are skipped by
+//! primary/backup picks, so a flapping replica sheds its own traffic
+//! without dragging the shard down.
+//!
+//! **Scrubbing.** A background scrubber
+//! ([`ShardedRouter::spawn_scrubber`], or [`ShardedRouter::scrub_now`]
+//! synchronously) checksum-walks every file-backed member's `V5Checked`
+//! sections via [`crate::index::open_mmap_verified`] on a budgeted
+//! cadence. A member whose file fails is quarantined (a breaker state
+//! only repair clears), repaired — re-opened from the surviving on-disk
+//! generation if it verifies, else rebuilt from a healthy peer's items
+//! under the member's own seed and re-verified — then re-admitted
+//! through its breaker. Faults for all of this are injectable per
+//! member with [`ShardFaultPlan`] (stall windows, crash-on-query,
+//! on-disk corruption bursts).
 
 pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod replica;
 pub mod router;
 pub mod server;
 
@@ -68,6 +117,9 @@ pub use batcher::{
     BatcherConfig, BatcherHandle, BreakerState, FaultPlan, PjrtBatcher, QueryReply,
 };
 pub use engine::MipsEngine;
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::ShardedRouter;
-pub use server::{handle_request, serve, serve_on, ServeConfig};
+pub use metrics::{LatencyHist, Metrics, MetricsSnapshot};
+pub use replica::{corrupt_index_file, ReplicaConfig, ReplicaStorage, ShardFaultPlan};
+pub use router::{RouterReply, ScrubReport, ShardedRouter};
+pub use server::{
+    handle_request, handle_router_request, serve, serve_on, serve_router_on, ServeConfig,
+};

@@ -1,0 +1,576 @@
+//! Replica groups for the sharded router: the fault-tolerance layer
+//! that turns a demo fan-out into a serving tier that degrades instead
+//! of failing.
+//!
+//! Each shard of a [`super::ShardedRouter`] is a **replica group**: R
+//! engines over the same contiguous item range, built with distinct
+//! hash seeds. Distinct seeds make the members recall-diverse by
+//! construction — an item the primary's tables happen to miss is
+//! usually found by the backup's independent projections — so hedging
+//! to a replica is never a wasted retry of the same randomness.
+//!
+//! Every member runs a dedicated **worker thread** serving dispatched
+//! query jobs over an mpsc channel. The dispatcher therefore never
+//! blocks on a stalled member: it waits on the reply channel with a
+//! timeout, hedges to a backup when the primary exceeds the hedge
+//! delay, and walks away (leaving the worker to finish into a dropped
+//! channel) when the shard timeout expires.
+//!
+//! Per-member health is a PR 6-style **circuit breaker**
+//! ([`ReplicaBreaker`]): consecutive failures (timeouts, crashed
+//! workers) trip it Open, a cooldown later the next dispatch is the
+//! half-open probe, success re-closes. The scrubber's quarantine is a
+//! stronger Open that only an explicit repair clears.
+//!
+//! The **scrubber** ([`super::ShardedRouter::scrub_now`]) walks each
+//! file-backed member's `V5Checked` sections via
+//! [`crate::index::open_mmap_verified`], quarantines a member whose
+//! file fails the checksum walk, rebuilds its index from a healthy
+//! peer's items (with the member's own seed, preserving recall
+//! diversity), re-verifies the rewritten file, hot-swaps the engine
+//! slot, and re-admits the member through its breaker.
+//!
+//! Faults are injected per member with a [`ShardFaultPlan`] (stall
+//! windows, crash-on-query, on-disk bit flips), mirroring the batcher's
+//! [`super::FaultPlan`] idiom: plans are keyed by the member's job
+//! sequence number so tests can stage exact scenarios.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::index::storage::{Mapped, Owned, Storage};
+use crate::index::{open_mmap_verified, AnyIndex, ProbeBudget, ScoredItem};
+
+use super::batcher::BreakerState;
+use super::engine::MipsEngine;
+use super::metrics::LatencyHist;
+
+/// Survive a poisoned mutex: none of the guarded state here can be left
+/// inconsistent by a panicking holder (plans and instants are written
+/// atomically in one statement).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn read_slot<S: Storage>(slot: &RwLock<Arc<MipsEngine<S>>>) -> Arc<MipsEngine<S>> {
+    Arc::clone(&slot.read().unwrap_or_else(|e| e.into_inner()))
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Tuning for the replicated scatter/gather path.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaConfig {
+    /// Hard per-shard wait: past it the shard goes unanswered and the
+    /// merged reply turns partial ([`super::router::RouterReply`]).
+    pub shard_timeout: Duration,
+    /// Fixed hedge delay override. `None` (the default) derives it per
+    /// shard from that shard's measured answer p99:
+    /// `clamp(hedge_multiplier × p99, hedge_min, hedge_max)`.
+    pub hedge_delay: Option<Duration>,
+    /// Multiplier over the shard p99 for the derived hedge delay.
+    pub hedge_multiplier: f64,
+    /// Lower clamp for the derived hedge delay (keeps a cold histogram
+    /// from hedging every query).
+    pub hedge_min: Duration,
+    /// Upper clamp for the derived hedge delay.
+    pub hedge_max: Duration,
+    /// Consecutive member failures (timeout / crashed worker) that trip
+    /// its breaker Open.
+    pub breaker_failures: u32,
+    /// How long a tripped breaker stays Open before the half-open
+    /// re-probe dispatch.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        Self {
+            shard_timeout: Duration::from_millis(250),
+            hedge_delay: None,
+            hedge_multiplier: 2.0,
+            hedge_min: Duration::from_micros(500),
+            hedge_max: Duration::from_millis(50),
+            breaker_failures: 3,
+            breaker_cooldown: Duration::from_millis(100),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Per-member fault plan (tests and benches only; defaults all-off).
+/// Windows are keyed by the member's **job sequence number** — the
+/// 0-based count of jobs its worker has received — mirroring the
+/// batch-sequence windows of the batcher's [`super::FaultPlan`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardFaultPlan {
+    /// First job seq stalled…
+    pub stall_from: usize,
+    /// …up to (exclusive) this one.
+    pub stall_until: usize,
+    /// Injected stall per affected job.
+    pub stall: Duration,
+    /// Job seq at which the worker exits without replying — a crashed
+    /// replica process: the in-flight query times out and every later
+    /// dispatch to this member fails immediately.
+    pub crash_at: Option<usize>,
+    /// Job seq at which a burst of bytes is flipped in the member's
+    /// backing file before it answers — silent media corruption. The
+    /// already-opened engine keeps serving its mapped/loaded state;
+    /// only the scrubber's checksum walk catches the rot.
+    pub corrupt_file_at: Option<usize>,
+}
+
+impl ShardFaultPlan {
+    fn stall_for(&self, seq: usize) -> Option<Duration> {
+        (seq >= self.stall_from && seq < self.stall_until && !self.stall.is_zero())
+            .then_some(self.stall)
+    }
+
+    fn crashes_at(&self, seq: usize) -> bool {
+        self.crash_at == Some(seq)
+    }
+
+    fn corrupts_at(&self, seq: usize) -> bool {
+        self.corrupt_file_at == Some(seq)
+    }
+}
+
+/// Flip a burst of bytes in the middle of `path` — the corruption
+/// injector behind [`ShardFaultPlan::corrupt_file_at`] and the failover
+/// tests. The burst is 65 bytes: v5 sections are 64-byte aligned with
+/// sub-64-byte padding gaps between them, so a 65-byte run in the body
+/// is guaranteed to dirty at least one checksummed section byte (a
+/// single flipped byte could land entirely in uncovered padding and
+/// make "the scrubber detects 100% of injected corruptions" flaky).
+pub fn corrupt_index_file(path: &Path) -> crate::Result<()> {
+    let mut bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() >= 512, "file too small to corrupt meaningfully");
+    let start = bytes.len() / 2;
+    let end = (start + 65).min(bytes.len());
+    for b in &mut bytes[start..end] {
+        *b ^= 0x5A;
+    }
+    std::fs::write(path, &bytes)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Breaker
+// ---------------------------------------------------------------------------
+
+/// Circuit breaker over one replica member (see module docs): 0 =
+/// Closed, 1 = Open, 2 = HalfOpen, same numbering as the batcher's
+/// backend breaker so [`BreakerState::from_u8`] is shared.
+pub(crate) struct ReplicaBreaker {
+    state: AtomicU8,
+    consecutive_failures: AtomicU32,
+    trip_after: u32,
+    cooldown: Duration,
+    /// When an Open breaker may half-open. Behind a mutex (not the hot
+    /// path): written on trip, read on admit while Open.
+    reopen_at: Mutex<Instant>,
+    /// Scrubber quarantine: out of rotation regardless of cooldown
+    /// until a successful repair re-admits the member.
+    quarantined: AtomicBool,
+}
+
+impl ReplicaBreaker {
+    fn new(trip_after: u32, cooldown: Duration) -> Self {
+        Self {
+            state: AtomicU8::new(0),
+            consecutive_failures: AtomicU32::new(0),
+            trip_after: trip_after.max(1),
+            cooldown,
+            reopen_at: Mutex::new(Instant::now()),
+            quarantined: AtomicBool::new(false),
+        }
+    }
+
+    pub(crate) fn state(&self) -> BreakerState {
+        BreakerState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    pub(crate) fn is_quarantined(&self) -> bool {
+        self.quarantined.load(Ordering::Acquire)
+    }
+
+    /// Whether the dispatcher may route a query here right now. Flips
+    /// Open → HalfOpen once the cooldown has elapsed; that dispatch is
+    /// the probe (its outcome re-closes or re-opens the breaker).
+    pub(crate) fn admit(&self) -> bool {
+        if self.is_quarantined() {
+            return false;
+        }
+        match self.state.load(Ordering::Acquire) {
+            1 => {
+                if Instant::now() >= *lock(&self.reopen_at) {
+                    self.state.store(2, Ordering::Release);
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => true, // Closed, or HalfOpen probe already granted
+        }
+    }
+
+    pub(crate) fn on_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.state.store(0, Ordering::Release);
+    }
+
+    pub(crate) fn on_failure(&self) {
+        let n = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        // A failed half-open probe re-opens immediately; otherwise the
+        // consecutive-failure threshold decides.
+        if self.state.load(Ordering::Acquire) == 2 || n >= self.trip_after {
+            *lock(&self.reopen_at) = Instant::now() + self.cooldown;
+            self.state.store(1, Ordering::Release);
+        }
+    }
+
+    pub(crate) fn quarantine(&self) {
+        self.quarantined.store(true, Ordering::Release);
+        *lock(&self.reopen_at) = Instant::now() + self.cooldown;
+        self.state.store(1, Ordering::Release);
+    }
+
+    pub(crate) fn readmit(&self) {
+        self.quarantined.store(false, Ordering::Release);
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.state.store(0, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Verified opens, generic over storage
+// ---------------------------------------------------------------------------
+
+/// Storage-generic **verified** open for replica engines: both flavors
+/// serve the same `V5Checked` file — [`Mapped`] zero-copy, [`Owned`]
+/// deep-copied to the heap — and both walk every section checksum
+/// before the engine is admitted, so a scrub-repaired file is proven
+/// intact before it swaps into the serving slot.
+pub trait ReplicaStorage: Storage + Sized {
+    fn open_verified(path: &Path) -> crate::Result<MipsEngine<Self>>;
+}
+
+impl ReplicaStorage for Mapped {
+    fn open_verified(path: &Path) -> crate::Result<MipsEngine<Self>> {
+        Ok(MipsEngine::from_any(open_mmap_verified(path)?))
+    }
+}
+
+impl ReplicaStorage for Owned {
+    fn open_verified(path: &Path) -> crate::Result<MipsEngine<Self>> {
+        // The heap loader verifies checksums when the file carries them
+        // (`SectionVerify::IfPresent`), but "carries them" is exactly
+        // what a corrupted header could lie about — walk the sections
+        // through the same Require path as the mapped open first.
+        open_mmap_verified(path)?;
+        Ok(MipsEngine::from_any(AnyIndex::load(path)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replica member + worker
+// ---------------------------------------------------------------------------
+
+/// State shared between a member's dispatcher-facing handle and its
+/// worker thread.
+pub(crate) struct ReplicaShared<S: Storage> {
+    /// The serving engine, hot-swappable by the scrubber's repair.
+    slot: RwLock<Arc<MipsEngine<S>>>,
+    /// Backing `V5Checked` file for file-backed members (`None` for
+    /// in-memory members, which the scrubber skips).
+    pub(crate) path: Option<PathBuf>,
+    /// The member's own hash seed — a repair rebuilds with it so the
+    /// group stays recall-diverse.
+    pub(crate) seed: u64,
+    pub(crate) breaker: ReplicaBreaker,
+    faults: Mutex<ShardFaultPlan>,
+    /// Jobs received by the worker (the fault plans' clock).
+    seq: AtomicUsize,
+}
+
+struct ReplicaJob {
+    /// This member's index within its group, echoed in the reply so the
+    /// dispatcher knows who won a hedged race.
+    member: usize,
+    query: Arc<[f32]>,
+    top_k: usize,
+    budget: ProbeBudget,
+    reply: Sender<(usize, Vec<ScoredItem>)>,
+}
+
+/// One member of a replica group: shared state plus the dispatch sender
+/// and worker join handle.
+pub(crate) struct Replica<S: Storage> {
+    pub(crate) shared: Arc<ReplicaShared<S>>,
+    /// `None` only during teardown (Drop takes it to unblock the
+    /// worker's `recv` before joining).
+    tx: Option<Sender<ReplicaJob>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+fn worker_loop<S: Storage>(shared: Arc<ReplicaShared<S>>, rx: Receiver<ReplicaJob>) {
+    // One scratch reused across jobs *and* across repair swaps — its
+    // buffers grow to whatever engine currently occupies the slot (the
+    // same reuse contract the router's merge scratch relies on).
+    let mut scratch = None;
+    while let Ok(job) = rx.recv() {
+        let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+        let plan = *lock(&shared.faults);
+        if plan.crashes_at(seq) {
+            // Exit without replying: the in-flight dispatcher times
+            // out, and every later dispatch fails fast on the dropped
+            // receiver.
+            return;
+        }
+        if let Some(stall) = plan.stall_for(seq) {
+            std::thread::sleep(stall);
+        }
+        if plan.corrupts_at(seq) {
+            if let Some(path) = &shared.path {
+                let _ = corrupt_index_file(path);
+            }
+        }
+        let engine = read_slot(&shared.slot);
+        let s = scratch.get_or_insert_with(|| engine.scratch());
+        let hits = engine.query_budgeted_into(&job.query, job.top_k, job.budget, s).to_vec();
+        // A dispatcher that already gave up dropped the receiver; a
+        // late answer is discarded, not an error.
+        let _ = job.reply.send((job.member, hits));
+    }
+}
+
+impl<S: Storage> Replica<S> {
+    fn spawn(engine: MipsEngine<S>, path: Option<PathBuf>, seed: u64, cfg: &ReplicaConfig) -> Self {
+        let shared = Arc::new(ReplicaShared {
+            slot: RwLock::new(Arc::new(engine)),
+            path,
+            seed,
+            breaker: ReplicaBreaker::new(cfg.breaker_failures, cfg.breaker_cooldown),
+            faults: Mutex::new(ShardFaultPlan::default()),
+            seq: AtomicUsize::new(0),
+        });
+        let (tx, rx) = mpsc::channel();
+        let handle = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("alsh-replica".into())
+                .spawn(move || worker_loop(shared, rx))
+                .expect("spawn replica worker")
+        };
+        Self { shared, tx: Some(tx), worker: Mutex::new(Some(handle)) }
+    }
+
+    /// Hand a job to the worker. `false` means the worker is gone (a
+    /// crashed member) — an immediate dispatch failure.
+    pub(crate) fn dispatch(
+        &self,
+        member: usize,
+        query: &Arc<[f32]>,
+        top_k: usize,
+        budget: ProbeBudget,
+        reply: Sender<(usize, Vec<ScoredItem>)>,
+    ) -> bool {
+        match &self.tx {
+            Some(tx) => tx
+                .send(ReplicaJob {
+                    member,
+                    query: Arc::clone(query),
+                    top_k,
+                    budget,
+                    reply,
+                })
+                .is_ok(),
+            None => false,
+        }
+    }
+
+    /// The engine currently serving this member's slot.
+    pub(crate) fn engine(&self) -> Arc<MipsEngine<S>> {
+        read_slot(&self.shared.slot)
+    }
+
+    /// Swap a freshly repaired engine into the serving slot.
+    pub(crate) fn install(&self, engine: MipsEngine<S>) {
+        *self.shared.slot.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(engine);
+    }
+
+    pub(crate) fn set_faults(&self, plan: ShardFaultPlan) {
+        *lock(&self.shared.faults) = plan;
+    }
+}
+
+impl<S: Storage> Drop for Replica<S> {
+    fn drop(&mut self) {
+        // Drop the sender first so the worker's recv unblocks, then
+        // join (a worker mid-stall finishes that stall first).
+        self.tx = None;
+        if let Some(handle) = lock(&self.worker).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replica group
+// ---------------------------------------------------------------------------
+
+/// One shard's replica set: R members over the same item range, plus
+/// the shard's answer-latency histogram (dispatch → winning reply) that
+/// drives the p99-derived hedge delay.
+pub(crate) struct ReplicaGroup<S: Storage> {
+    pub(crate) members: Vec<Replica<S>>,
+    pub(crate) latency: LatencyHist,
+}
+
+impl<S: Storage> ReplicaGroup<S> {
+    /// Assemble a group from `(engine, backing file, seed)` triples.
+    /// Members must agree on dimension and item count — they serve the
+    /// same range, only their hash randomness differs.
+    pub(crate) fn new(
+        members: Vec<(MipsEngine<S>, Option<PathBuf>, u64)>,
+        cfg: &ReplicaConfig,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!members.is_empty(), "replica group needs at least one member");
+        let dim = members[0].0.dim();
+        let n_items = members[0].0.n_items();
+        for (e, _, _) in &members {
+            anyhow::ensure!(
+                e.dim() == dim && e.n_items() == n_items,
+                "replica group members disagree: {}×{} vs {dim}×{n_items} items×dim",
+                e.n_items(),
+                e.dim()
+            );
+        }
+        Ok(Self {
+            members: members
+                .into_iter()
+                .map(|(engine, path, seed)| Replica::spawn(engine, path, seed, cfg))
+                .collect(),
+            latency: LatencyHist::new(),
+        })
+    }
+
+    /// First member whose breaker admits traffic (primary pick).
+    pub(crate) fn pick_primary(&self) -> Option<usize> {
+        (0..self.members.len()).find(|&i| self.members[i].shared.breaker.admit())
+    }
+
+    /// First admitted member other than `primary` (hedge pick).
+    pub(crate) fn pick_backup(&self, primary: usize) -> Option<usize> {
+        (0..self.members.len())
+            .find(|&i| i != primary && self.members[i].shared.breaker.admit())
+    }
+
+    /// First non-quarantined member (the sync fan-out path's pick);
+    /// falls back to member 0 so a fully quarantined group still
+    /// answers best-effort rather than panicking.
+    pub(crate) fn pick_serving(&self) -> usize {
+        (0..self.members.len())
+            .find(|&i| !self.members[i].shared.breaker.is_quarantined())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_half_opens() {
+        let b = ReplicaBreaker::new(3, Duration::from_millis(20));
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(), "open breaker admitted before cooldown");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit(), "cooldown elapsed but probe refused");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // A failed probe re-opens immediately, without needing the
+        // consecutive threshold again.
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit());
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn success_resets_consecutive_failures() {
+        let b = ReplicaBreaker::new(2, Duration::from_millis(10));
+        b.on_failure();
+        b.on_success();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "non-consecutive failures tripped");
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn quarantine_overrides_cooldown_until_readmit() {
+        let b = ReplicaBreaker::new(1, Duration::from_millis(1));
+        b.quarantine();
+        assert!(b.is_quarantined());
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(!b.admit(), "quarantined member admitted after cooldown");
+        b.readmit();
+        assert!(!b.is_quarantined());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+    }
+
+    #[test]
+    fn fault_plan_windows() {
+        let plan = ShardFaultPlan {
+            stall_from: 2,
+            stall_until: 4,
+            stall: Duration::from_millis(5),
+            crash_at: Some(7),
+            corrupt_file_at: Some(9),
+        };
+        assert!(plan.stall_for(1).is_none());
+        assert!(plan.stall_for(2).is_some());
+        assert!(plan.stall_for(3).is_some());
+        assert!(plan.stall_for(4).is_none());
+        assert!(!plan.crashes_at(6) && plan.crashes_at(7));
+        assert!(!plan.corrupts_at(7) && plan.corrupts_at(9));
+        assert!(ShardFaultPlan::default().stall_for(0).is_none());
+    }
+
+    #[test]
+    fn corruptor_flips_body_bytes() {
+        let dir = std::env::temp_dir().join("alsh-replica-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("corrupt_{}.bin", std::process::id()));
+        let clean: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &clean).unwrap();
+        corrupt_index_file(&path).unwrap();
+        let dirty = std::fs::read(&path).unwrap();
+        assert_eq!(dirty.len(), clean.len());
+        let flipped = clean.iter().zip(&dirty).filter(|(a, b)| a != b).count();
+        assert_eq!(flipped, 65, "expected a 65-byte corruption burst");
+        // Too-small files are refused rather than half-corrupted.
+        let tiny = dir.join("tiny.bin");
+        std::fs::write(&tiny, [0u8; 16]).unwrap();
+        assert!(corrupt_index_file(&tiny).is_err());
+    }
+}

@@ -1,21 +1,102 @@
 //! Sharded scatter/gather router — §3.7 ("Parallelization") of the paper:
 //! each node keeps its own hash tables over an item shard; a query fans
 //! out, each shard answers locally, and the final top-k is a cheap merge.
+//!
+//! Since PR 8 each shard is a **replica group** (see
+//! [`super::replica`]): R engines over the same item range with
+//! distinct hash seeds. The replicated query path
+//! ([`ShardedRouter::query_replicated`]) scatters to each group's
+//! primary through per-member worker threads, **tail-hedges** to a
+//! backup replica when the primary exceeds a p99-derived hedge delay,
+//! enforces a per-shard timeout, and tracks per-member health with
+//! circuit breakers. A shard whose whole group is down does not hang
+//! the query: the merge returns a **partial result** with explicit
+//! coverage accounting ([`RouterReply`]). The synchronous paths
+//! ([`ShardedRouter::query_into`] & co.) keep their allocation-free
+//! contract by querying each group's first healthy member directly on
+//! the caller's scratch — at R = 1 they behave exactly as before.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::index::scratch::with_thread_scratch;
 use crate::index::storage::{Mapped, Owned, Storage};
-use crate::index::{AlshParams, BandedParams, ProbeBudget, QueryScratch, ScoredItem};
+use crate::index::{
+    open_mmap_verified, AlshIndex, AlshParams, AnyIndex, BandedParams, NormRangeIndex,
+    PersistFormat, ProbeBudget, QueryScratch, ScoredItem,
+};
 
+use super::batcher::BreakerState;
 use super::engine::MipsEngine;
+use super::metrics::Metrics;
+use super::replica::{
+    corrupt_index_file, lock, ReplicaConfig, ReplicaGroup, ReplicaStorage, ShardFaultPlan,
+};
 
-/// A collection of shard engines with global-id translation — heap-built
-/// shards (the default) or zero-copy mapped shards
-/// ([`ShardedRouter::open_mmap_shards`]).
+/// A collection of shard replica groups with global-id translation —
+/// heap-built shards (the default), zero-copy mapped shards
+/// ([`ShardedRouter::open_mmap_shards`]), or file-backed replicated
+/// deployments ([`ShardedRouter::create_replicated`]).
 pub struct ShardedRouter<S: Storage = Owned> {
-    shards: Vec<MipsEngine<S>>,
+    groups: Vec<ReplicaGroup<S>>,
     /// Global id of shard s's local item 0.
     offsets: Vec<u32>,
     dim: usize,
+    cfg: ReplicaConfig,
+    /// Router-level serving metrics (hedges, partial replies, scrub
+    /// events, replicated-query latency). Per-engine metrics stay on
+    /// the member engines.
+    metrics: Arc<Metrics>,
+    scrub_stop: Arc<AtomicBool>,
+    scrubber: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// A replicated scatter/gather answer with coverage accounting: when
+/// every member of some shard's group is down or timed out, the reply
+/// still goes out — `degraded`, with the missing range disclosed via
+/// `shards_answered`/`shards_total` — instead of hanging or silently
+/// pretending full coverage.
+#[derive(Clone, Debug)]
+pub struct RouterReply {
+    /// Merged global top-k over the shards that answered.
+    pub hits: Vec<ScoredItem>,
+    pub shards_answered: usize,
+    pub shards_total: usize,
+    /// At least one shard answered through a hedged backup dispatch.
+    pub hedge_fired: bool,
+    /// `shards_answered < shards_total`: some item range is missing.
+    pub degraded: bool,
+}
+
+impl RouterReply {
+    /// Fraction of shards that contributed to `hits` (1.0 = full
+    /// coverage).
+    pub fn coverage_fraction(&self) -> f64 {
+        if self.shards_total == 0 {
+            0.0
+        } else {
+            self.shards_answered as f64 / self.shards_total as f64
+        }
+    }
+}
+
+/// What one scrub pass ([`ShardedRouter::scrub_now`]) saw and did.
+/// Entries are `(shard, member)` coordinates.
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    /// File-backed members whose sections were checksum-walked.
+    pub checked: usize,
+    /// Members whose file failed verification (quarantined).
+    pub corrupted: Vec<(usize, usize)>,
+    /// Subset of `corrupted` rebuilt, re-verified, and re-admitted.
+    pub repaired: Vec<(usize, usize)>,
+    /// Repairs that could not complete (with the error); the member
+    /// stays quarantined for the next pass.
+    pub failed: Vec<(usize, usize, String)>,
 }
 
 impl ShardedRouter {
@@ -23,8 +104,8 @@ impl ShardedRouter {
     /// flat engine per shard (distinct hash seeds per shard, as each
     /// "node" maintains its own hash functions).
     pub fn build(items: &[Vec<f32>], n_shards: usize, params: AlshParams, seed: u64) -> Self {
-        Self::build_impl(items, n_shards, |chunk, shard| {
-            MipsEngine::new(chunk, params, seed.wrapping_add(shard))
+        Self::build_impl(items, n_shards, 1, ReplicaConfig::default(), seed, |chunk, s| {
+            MipsEngine::new(chunk, params, s)
         })
     }
 
@@ -39,26 +120,77 @@ impl ShardedRouter {
         banded: BandedParams,
         seed: u64,
     ) -> Self {
-        Self::build_impl(items, n_shards, |chunk, shard| {
-            MipsEngine::new_banded(chunk, params, banded, seed.wrapping_add(shard))
+        Self::build_impl(items, n_shards, 1, ReplicaConfig::default(), seed, |chunk, s| {
+            MipsEngine::new_banded(chunk, params, banded, s)
         })
     }
 
+    /// [`ShardedRouter::build`] with `n_replicas` members per shard
+    /// group, all in-memory (no backing files, so the scrubber has
+    /// nothing to walk — use [`ShardedRouter::create_replicated`] for
+    /// the scrubbed deployment shape).
+    pub fn build_replicated(
+        items: &[Vec<f32>],
+        n_shards: usize,
+        n_replicas: usize,
+        params: AlshParams,
+        cfg: ReplicaConfig,
+        seed: u64,
+    ) -> Self {
+        Self::build_impl(items, n_shards, n_replicas, cfg, seed, |chunk, s| {
+            MipsEngine::new(chunk, params, s)
+        })
+    }
+
+    /// [`ShardedRouter::build_replicated`] with banded member engines.
+    pub fn build_replicated_banded(
+        items: &[Vec<f32>],
+        n_shards: usize,
+        n_replicas: usize,
+        params: AlshParams,
+        banded: BandedParams,
+        cfg: ReplicaConfig,
+        seed: u64,
+    ) -> Self {
+        Self::build_impl(items, n_shards, n_replicas, cfg, seed, |chunk, s| {
+            MipsEngine::new_banded(chunk, params, banded, s)
+        })
+    }
+
+    /// Member seeds derive in exactly one place: member (s, r) hashes
+    /// with `seed + s·R + r`, so every member of every group gets its
+    /// own hash family (recall diversity across replicas, §3.7
+    /// independence across shards). At R = 1 this is the historical
+    /// `seed + s`, so single-replica builds reproduce pre-replication
+    /// indexes bit for bit — and `make_engine` receives the final seed
+    /// rather than deriving its own, which is what the audit in PR 8
+    /// pinned down (the old closure-side `seed.wrapping_add(shard)`
+    /// was correct but duplicated per call site; the property tests
+    /// below now hold it in place).
     fn build_impl(
         items: &[Vec<f32>],
         n_shards: usize,
+        n_replicas: usize,
+        cfg: ReplicaConfig,
+        seed: u64,
         make_engine: impl Fn(&[Vec<f32>], u64) -> MipsEngine,
     ) -> Self {
-        assert!(n_shards >= 1 && !items.is_empty());
+        assert!(n_shards >= 1 && n_replicas >= 1 && !items.is_empty());
         let dim = items[0].len();
         let per = items.len().div_ceil(n_shards);
-        let mut shards = Vec::new();
+        let mut groups = Vec::new();
         let mut offsets = Vec::new();
         for (s, chunk) in items.chunks(per).enumerate() {
             offsets.push((s * per) as u32);
-            shards.push(make_engine(chunk, s as u64));
+            let members = (0..n_replicas)
+                .map(|r| {
+                    let member_seed = seed.wrapping_add((s * n_replicas + r) as u64);
+                    (make_engine(chunk, member_seed), None, member_seed)
+                })
+                .collect();
+            groups.push(ReplicaGroup::new(members, &cfg).expect("uniform member chunks"));
         }
-        Self { shards, offsets, dim }
+        Self::from_groups(groups, offsets, dim, cfg)
     }
 }
 
@@ -70,7 +202,7 @@ impl ShardedRouter<Mapped> {
     /// hold shard `s`'s items in the same contiguous-chunk order the
     /// build produced (global ids are reconstructed cumulatively, as in
     /// [`ShardedRouter::build`]).
-    pub fn open_mmap_shards<P: AsRef<std::path::Path>>(paths: &[P]) -> crate::Result<Self> {
+    pub fn open_mmap_shards<P: AsRef<Path>>(paths: &[P]) -> crate::Result<Self> {
         anyhow::ensure!(!paths.is_empty(), "no shard files given");
         let mut engines = Vec::with_capacity(paths.len());
         for p in paths {
@@ -80,32 +212,284 @@ impl ShardedRouter<Mapped> {
     }
 }
 
+impl<S: ReplicaStorage> ShardedRouter<S> {
+    /// Build every (shard, replica) index from `items`, persist each as
+    /// a `V5Checked` file under `dir` (`shard{s}-rep{r}.alsh`), and
+    /// serve the **verified** opens — the deployment shape the scrubber
+    /// can watch and repair. Flat members, or banded when `banded` is
+    /// set; storage (zero-copy mapped vs heap) chosen by `S`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_replicated(
+        dir: &Path,
+        items: &[Vec<f32>],
+        n_shards: usize,
+        n_replicas: usize,
+        params: AlshParams,
+        banded: Option<BandedParams>,
+        cfg: ReplicaConfig,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            n_shards >= 1 && n_replicas >= 1 && !items.is_empty(),
+            "create_replicated: need at least one shard, one replica, and one item"
+        );
+        std::fs::create_dir_all(dir)?;
+        let dim = items[0].len();
+        let per = items.len().div_ceil(n_shards);
+        let mut groups = Vec::new();
+        let mut offsets = Vec::new();
+        for (s, chunk) in items.chunks(per).enumerate() {
+            offsets.push(u32::try_from(s * per).map_err(|_| {
+                anyhow::anyhow!("total items across shards overflow u32 global ids")
+            })?);
+            let mut members = Vec::with_capacity(n_replicas);
+            for r in 0..n_replicas {
+                // Same member-seed derivation as `build_impl`.
+                let member_seed = seed.wrapping_add((s * n_replicas + r) as u64);
+                let path = dir.join(format!("shard{s}-rep{r}.alsh"));
+                let index = match banded {
+                    None => AnyIndex::Flat(AlshIndex::build(chunk, params, member_seed)),
+                    Some(b) => {
+                        AnyIndex::Banded(NormRangeIndex::build(chunk, params, b, member_seed))
+                    }
+                };
+                index.save_as(&path, PersistFormat::V5Checked)?;
+                members.push((S::open_verified(&path)?, Some(path), member_seed));
+            }
+            groups.push(ReplicaGroup::new(members, &cfg)?);
+        }
+        Ok(Self::from_groups(groups, offsets, dim, cfg))
+    }
+
+    /// One synchronous scrub pass: checksum-walk every file-backed
+    /// member's sections (`open_mmap_verified`, O(file) per member — no
+    /// section escapes the walk). A member whose file fails is
+    /// **quarantined** (its breaker refuses traffic), **repaired** —
+    /// re-opened if the on-disk bytes verify after all (an atomic
+    /// re-save may have raced the failing read), else rebuilt from a
+    /// healthy peer's items under the member's own seed, saved
+    /// `V5Checked`, and re-verified — then **re-admitted** through its
+    /// breaker. Members without a backing file are skipped. The
+    /// background scrubber ([`ShardedRouter::spawn_scrubber`]) calls
+    /// this on its cadence; tests and benches call it directly for
+    /// determinism.
+    pub fn scrub_now(&self) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        for (s, g) in self.groups.iter().enumerate() {
+            for (r, member) in g.members.iter().enumerate() {
+                let Some(path) = &member.shared.path else { continue };
+                report.checked += 1;
+                if open_mmap_verified(path).is_ok() {
+                    continue;
+                }
+                report.corrupted.push((s, r));
+                member.shared.breaker.quarantine();
+                self.metrics.record_replica_quarantine();
+                match self.repair(g, r) {
+                    Ok(()) => {
+                        member.shared.breaker.readmit();
+                        self.metrics.record_replica_repair();
+                        report.repaired.push((s, r));
+                    }
+                    Err(e) => report.failed.push((s, r, format!("{e:#}"))),
+                }
+            }
+        }
+        report
+    }
+
+    /// Restore group member `r` from rot: prefer the surviving on-disk
+    /// generation (re-verify — `save_as` is atomic, so a concurrent
+    /// rewrite may have already replaced the rotten bytes), else
+    /// rebuild from the first healthy, verifying peer's items with the
+    /// member's own seed, save `V5Checked`, re-verify, and hot-swap the
+    /// serving slot.
+    fn repair(&self, g: &ReplicaGroup<S>, r: usize) -> crate::Result<()> {
+        let member = &g.members[r];
+        let path = member.shared.path.clone().expect("repair: file-backed member");
+        if let Ok(engine) = S::open_verified(&path) {
+            member.install(engine);
+            return Ok(());
+        }
+        let donor = g.members.iter().enumerate().find(|(i, p)| {
+            *i != r
+                && !p.shared.breaker.is_quarantined()
+                && p.shared.path.as_deref().is_none_or(|pp| open_mmap_verified(pp).is_ok())
+        });
+        let Some((_, donor)) = donor else {
+            anyhow::bail!("replica repair: no healthy peer to rebuild from");
+        };
+        let donor_engine = donor.engine();
+        let src = donor_engine.index();
+        let mut items = Vec::with_capacity(src.n_items());
+        for id in 0..src.n_items() as u32 {
+            items.push(src.item(id).to_vec());
+        }
+        let params = *donor_engine.params();
+        let rebuilt = match src.as_banded() {
+            None => AnyIndex::Flat(AlshIndex::build(&items, params, member.shared.seed)),
+            Some(b) => AnyIndex::Banded(NormRangeIndex::build(
+                &items,
+                params,
+                BandedParams { n_bands: b.n_bands() },
+                member.shared.seed,
+            )),
+        };
+        rebuilt.save_as(&path, PersistFormat::V5Checked)?;
+        member.install(S::open_verified(&path)?);
+        Ok(())
+    }
+
+    /// Start the background scrubber: one full [`ShardedRouter::scrub_now`]
+    /// pass every `interval` (the budget knob — a longer interval
+    /// spreads the checksum I/O thinner). The thread holds only a
+    /// `Weak` reference, so dropping the router ends it on its next
+    /// wake-up; call [`ShardedRouter::stop_scrubber`] for a
+    /// deterministic join. (An associated fn — `&Arc<Self>` is not a
+    /// valid method receiver.)
+    pub fn spawn_scrubber(router: &Arc<Self>, interval: Duration) {
+        let weak = Arc::downgrade(router);
+        let stop = Arc::clone(&router.scrub_stop);
+        let handle = std::thread::Builder::new()
+            .name("alsh-scrub".into())
+            .spawn(move || loop {
+                std::thread::sleep(interval);
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let Some(router) = weak.upgrade() else { return };
+                let _ = router.scrub_now();
+            })
+            .expect("spawn scrubber");
+        *lock(&router.scrubber) = Some(handle);
+    }
+
+    /// Stop and join the background scrubber (blocks at most one
+    /// interval). Idempotent; a no-op if none was spawned.
+    pub fn stop_scrubber(&self) {
+        self.scrub_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = lock(&self.scrubber).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Per-shard in-flight dispatch state for the replicated scatter.
+struct Pending {
+    tx: Sender<(usize, Vec<ScoredItem>)>,
+    rx: Receiver<(usize, Vec<ScoredItem>)>,
+    primary: Option<usize>,
+    dispatched: Vec<usize>,
+}
+
 impl<S: Storage> ShardedRouter<S> {
     /// Assemble a router from pre-built (or pre-opened) shard engines,
     /// reconstructing the cumulative global-id offsets from the shard
-    /// sizes. All shards must serve the same item dimension.
+    /// sizes. All shards must serve the same item dimension. Each
+    /// engine becomes a single-member replica group with no backing
+    /// file (so the scrubber skips it).
     pub fn from_engines(shards: Vec<MipsEngine<S>>) -> crate::Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "no shard engines given");
+        let cfg = ReplicaConfig::default();
         let dim = shards[0].dim();
         let mut offsets = Vec::with_capacity(shards.len());
+        let mut groups = Vec::with_capacity(shards.len());
         let mut next = 0u64;
-        for e in &shards {
+        for e in shards {
             anyhow::ensure!(e.dim() == dim, "shard dim {} != {dim}", e.dim());
             offsets.push(u32::try_from(next).map_err(|_| {
                 anyhow::anyhow!("total items across shards overflow u32 global ids")
             })?);
             next += e.n_items() as u64;
+            groups.push(ReplicaGroup::new(vec![(e, None, 0)], &cfg)?);
         }
         anyhow::ensure!(next <= u32::MAX as u64 + 1, "total items overflow u32 global ids");
-        Ok(Self { shards, offsets, dim })
+        Ok(Self::from_groups(groups, offsets, dim, cfg))
+    }
+
+    fn from_groups(
+        groups: Vec<ReplicaGroup<S>>,
+        offsets: Vec<u32>,
+        dim: usize,
+        cfg: ReplicaConfig,
+    ) -> Self {
+        Self {
+            groups,
+            offsets,
+            dim,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+            scrub_stop: Arc::new(AtomicBool::new(false)),
+            scrubber: Mutex::new(None),
+        }
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.groups.len()
     }
 
-    pub fn shard(&self, s: usize) -> &MipsEngine<S> {
-        &self.shards[s]
+    /// Item dimension served by every shard.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Replicas in shard `s`'s group.
+    pub fn n_replicas(&self, s: usize) -> usize {
+        self.groups[s].members.len()
+    }
+
+    /// Shard `s`'s first-healthy member engine (member 0 when every
+    /// member is quarantined). Returns a clone of the serving `Arc` —
+    /// the slot behind it is hot-swappable by the scrubber's repair.
+    pub fn shard(&self, s: usize) -> Arc<MipsEngine<S>> {
+        let g = &self.groups[s];
+        g.members[g.pick_serving()].engine()
+    }
+
+    /// Router-level metrics (hedges, partial replies, scrub events,
+    /// replicated-query latency).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The replica configuration this router dispatches under.
+    pub fn replica_config(&self) -> &ReplicaConfig {
+        &self.cfg
+    }
+
+    /// Per-member breaker states, indexed `[shard][member]`.
+    pub fn breaker_states(&self) -> Vec<Vec<BreakerState>> {
+        self.groups
+            .iter()
+            .map(|g| g.members.iter().map(|m| m.shared.breaker.state()).collect())
+            .collect()
+    }
+
+    /// Per-shard answer-latency p99 gauges (µs; 0 until a shard has
+    /// answered a replicated query).
+    pub fn shard_p99_us(&self) -> Vec<u64> {
+        self.groups.iter().map(|g| g.latency.percentile_us(0.99)).collect()
+    }
+
+    /// Install a fault plan on group `shard`'s member `member` (tests
+    /// and benches only; defaults all-off).
+    pub fn set_shard_faults(&self, shard: usize, member: usize, plan: ShardFaultPlan) {
+        self.groups[shard].members[member].set_faults(plan);
+    }
+
+    /// The backing file of group `shard`'s member `member`, if any.
+    pub fn replica_path(&self, shard: usize, member: usize) -> Option<PathBuf> {
+        self.groups[shard].members[member].shared.path.clone()
+    }
+
+    /// Flip a corruption burst into the member's backing file (tests
+    /// and benches; see `replica::corrupt_index_file`). Errors when the
+    /// member has no backing file.
+    pub fn corrupt_replica(&self, shard: usize, member: usize) -> crate::Result<()> {
+        match self.replica_path(shard, member) {
+            Some(path) => corrupt_index_file(&path),
+            None => anyhow::bail!("replica ({shard}, {member}) has no backing file"),
+        }
     }
 
     /// Scatter the query to all shards, gather local top-k lists, merge to
@@ -113,7 +497,10 @@ impl<S: Storage> ShardedRouter<S> {
     /// shard — the "one single number per node" economics of §3.7.
     ///
     /// Allocation-free: one caller-owned scratch serves every shard (its
-    /// buffers grow to the largest shard once, then are reused).
+    /// buffers grow to the largest shard once, then are reused). This
+    /// path queries each group's first healthy member in-thread — no
+    /// hedging or timeouts; use [`ShardedRouter::query_replicated`] for
+    /// the fault-tolerant scatter.
     pub fn query_into<'s>(
         &self,
         query: &[f32],
@@ -136,7 +523,8 @@ impl<S: Storage> ShardedRouter<S> {
     ) -> &'s [ScoredItem] {
         assert_eq!(query.len(), self.dim);
         s.merged.clear();
-        for (engine, &off) in self.shards.iter().zip(&self.offsets) {
+        for (g, &off) in self.groups.iter().zip(&self.offsets) {
+            let engine = g.members[g.pick_serving()].engine();
             let n = engine.query_budgeted_into(query, top_k, budget, s).len();
             for i in 0..n {
                 let hit = s.top[i];
@@ -164,9 +552,150 @@ impl<S: Storage> ShardedRouter<S> {
         with_thread_scratch(|s| self.query_budgeted_into(query, top_k, budget, s).to_vec())
     }
 
-    /// Total queries served across shards.
+    /// The fault-tolerant scatter/gather: dispatch every shard's
+    /// primary replica concurrently (each member serves on its own
+    /// worker thread), then collect per shard — hedging to a backup
+    /// member when the primary exceeds the hedge delay
+    /// ([`ReplicaConfig::hedge_delay`], or derived from the shard's
+    /// measured p99), walking away at [`ReplicaConfig::shard_timeout`].
+    /// Member successes/failures feed the per-member breakers; a shard
+    /// whose group never answers makes the reply partial rather than
+    /// hanging it (see [`RouterReply`]).
+    pub fn query_replicated(&self, query: &[f32], top_k: usize, budget: ProbeBudget) -> RouterReply {
+        assert_eq!(query.len(), self.dim);
+        let start = Instant::now();
+        let q: Arc<[f32]> = Arc::from(query.to_vec());
+        let shards_total = self.groups.len();
+
+        // Scatter: every group's primary goes out before any collect
+        // blocks, so one slow shard never delays another's dispatch.
+        let mut pending = Vec::with_capacity(shards_total);
+        for g in &self.groups {
+            let (tx, rx) = mpsc::channel();
+            let mut dispatched = Vec::new();
+            let primary = g.pick_primary();
+            if let Some(p) = primary {
+                if g.members[p].dispatch(p, &q, top_k, budget, tx.clone()) {
+                    dispatched.push(p);
+                } else {
+                    // Dead worker (crashed member): an instant failure.
+                    g.members[p].shared.breaker.on_failure();
+                }
+            }
+            pending.push(Pending { tx, rx, primary, dispatched });
+        }
+
+        // Gather, hedging stragglers.
+        let mut hits: Vec<ScoredItem> = Vec::new();
+        let mut shards_answered = 0usize;
+        let mut hedge_fired = false;
+        for ((g, &off), p) in self.groups.iter().zip(&self.offsets).zip(pending) {
+            if let Some((shard_hits, fired)) = self.collect_shard(g, &q, top_k, budget, start, p) {
+                g.latency.record(start.elapsed().as_micros() as u64);
+                hedge_fired |= fired;
+                shards_answered += 1;
+                hits.extend(
+                    shard_hits.iter().map(|h| ScoredItem { id: h.id + off, score: h.score }),
+                );
+            }
+        }
+        hits.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        hits.truncate(top_k);
+
+        let degraded = shards_answered < shards_total;
+        if degraded {
+            self.metrics.record_partial_reply();
+        }
+        self.metrics.record_query(start.elapsed().as_micros() as u64, 0);
+        RouterReply { hits, shards_answered, shards_total, hedge_fired, degraded }
+    }
+
+    /// Collect one shard's answer: wait for the primary up to the hedge
+    /// delay, dispatch one backup if it hasn't answered, then wait out
+    /// the shard timeout for whoever replies first. Returns the winning
+    /// hit list and whether a true hedge fired (backup dispatched while
+    /// the primary was still in flight).
+    fn collect_shard(
+        &self,
+        g: &ReplicaGroup<S>,
+        q: &Arc<[f32]>,
+        top_k: usize,
+        budget: ProbeBudget,
+        start: Instant,
+        mut p: Pending,
+    ) -> Option<(Vec<ScoredItem>, bool)> {
+        let deadline = start + self.cfg.shard_timeout;
+        let hedge_at = start + self.hedge_delay_for(g).min(self.cfg.shard_timeout);
+        let mut hedge_fired = false;
+
+        let mut winner: Option<(usize, Vec<ScoredItem>)> = None;
+        if !p.dispatched.is_empty() {
+            winner = p.rx.recv_timeout(hedge_at.saturating_duration_since(Instant::now())).ok();
+        }
+        if winner.is_none() {
+            // Hedge (or fail over a dead/denied primary): the next
+            // admitted member. `pick_backup(len)` when there was no
+            // primary at all degenerates to "first admitted member".
+            let avoid = p.primary.unwrap_or(g.members.len());
+            if let Some(b) = g.pick_backup(avoid) {
+                if g.members[b].dispatch(b, q, top_k, budget, p.tx.clone()) {
+                    if !p.dispatched.is_empty() {
+                        hedge_fired = true;
+                        self.metrics.record_hedge_fire();
+                    }
+                    p.dispatched.push(b);
+                } else {
+                    g.members[b].shared.breaker.on_failure();
+                }
+            }
+        }
+        // From here only in-flight jobs hold senders: a disconnect
+        // means every dispatched worker died without replying.
+        drop(p.tx);
+        if winner.is_none() && !p.dispatched.is_empty() {
+            winner = p.rx.recv_timeout(deadline.saturating_duration_since(Instant::now())).ok();
+        }
+
+        // Health accounting: the winner and any already-arrived loser
+        // answered; members still outstanding when we walk away count a
+        // failure (their late replies land in a dropped channel).
+        let mut answered = vec![false; g.members.len()];
+        if let Some((who, _)) = &winner {
+            answered[*who] = true;
+        }
+        while let Ok((who, _)) = p.rx.try_recv() {
+            answered[who] = true;
+        }
+        for &i in &p.dispatched {
+            if answered[i] {
+                g.members[i].shared.breaker.on_success();
+            } else {
+                g.members[i].shared.breaker.on_failure();
+            }
+        }
+        winner.map(|(_, shard_hits)| (shard_hits, hedge_fired))
+    }
+
+    /// The hedge delay for one shard: the configured override, or
+    /// `hedge_multiplier ×` the shard's measured answer p99 clamped to
+    /// `[hedge_min, hedge_max]` (the lower clamp keeps a cold histogram
+    /// from hedging every query).
+    fn hedge_delay_for(&self, g: &ReplicaGroup<S>) -> Duration {
+        if let Some(d) = self.cfg.hedge_delay {
+            return d;
+        }
+        let p99 = g.latency.percentile_us(0.99);
+        let scaled = (p99 as f64 * self.cfg.hedge_multiplier).round() as u64;
+        Duration::from_micros(scaled).clamp(self.cfg.hedge_min, self.cfg.hedge_max)
+    }
+
+    /// Total queries served across all member engines.
     pub fn total_queries(&self) -> u64 {
-        self.shards.iter().map(|s| s.metrics().snapshot().queries).sum()
+        self.groups
+            .iter()
+            .flat_map(|g| g.members.iter())
+            .map(|m| m.engine().metrics().snapshot().queries)
+            .sum()
     }
 }
 
@@ -318,5 +847,112 @@ mod tests {
         let out = router.query(&vec![0.2; 4], 101);
         // Every returned id must be in range.
         assert!(out.iter().all(|h| (h.id as usize) < 101));
+    }
+
+    // -- PR 8: seed-derivation audit (satellite) ---------------------------
+
+    /// Every shard must hash with its own family: `build_impl` derives
+    /// member (s, r)'s seed as `seed + s·R + r` in exactly one place.
+    /// This pins the derivation: shard families differ pairwise (their
+    /// L2 offsets are fresh uniform draws per seed).
+    #[test]
+    fn per_shard_families_are_distinct() {
+        let its = items(300, 6, 70);
+        let router = ShardedRouter::build(&its, 3, AlshParams::default(), 71);
+        for a in 0..3 {
+            for b in (a + 1)..3 {
+                assert_ne!(
+                    router.shard(a).families()[0].b_vector(),
+                    router.shard(b).families()[0].b_vector(),
+                    "shards {a} and {b} share a hash family"
+                );
+            }
+        }
+        // Replicas within one group are families of their own too.
+        let rep = ShardedRouter::build_replicated(
+            &its,
+            2,
+            2,
+            AlshParams::default(),
+            ReplicaConfig::default(),
+            71,
+        );
+        for s in 0..2 {
+            let g0 = rep.shard(s).families()[0].b_vector().to_vec();
+            // Member 1 = the backup: reach it via breaker_states shape
+            // plus the internal accessor used by repair.
+            assert_eq!(rep.n_replicas(s), 2);
+            let g1 = rep.groups[s].members[1].engine().families()[0].b_vector().to_vec();
+            assert_ne!(g0, g1, "replicas of shard {s} share a hash family");
+        }
+    }
+
+    /// Identical inputs rebuild identical routers (merge determinism),
+    /// and at R = 1 the replicated builder is bit-compatible with the
+    /// historical per-shard seeding, so shard-count changes reshuffle
+    /// ranges but never scores.
+    #[test]
+    fn build_is_deterministic_and_r1_matches_legacy_seeding() {
+        let its = items(240, 6, 72);
+        let q: Vec<f32> = (0..6).map(|i| (i as f32 * 0.7).sin()).collect();
+        let a = ShardedRouter::build(&its, 3, AlshParams::default(), 73);
+        let b = ShardedRouter::build(&its, 3, AlshParams::default(), 73);
+        assert_eq!(a.query(&q, 20), b.query(&q, 20), "rebuild changed results");
+        let r1 = ShardedRouter::build_replicated(
+            &its,
+            3,
+            1,
+            AlshParams::default(),
+            ReplicaConfig::default(),
+            73,
+        );
+        assert_eq!(a.query(&q, 20), r1.query(&q, 20), "R=1 diverged from legacy seeding");
+        // Exact scores survive any shard count (merge is score-exact:
+        // every hit's score equals the true dot product).
+        for n_shards in [1, 2, 5] {
+            let r = ShardedRouter::build(&its, n_shards, AlshParams::default(), 73);
+            for hit in r.query(&q, 15) {
+                let want = dot(&q, &its[hit.id as usize]);
+                assert!(
+                    (hit.score - want).abs() < 1e-6,
+                    "{n_shards} shards: score drifted for id {}",
+                    hit.id
+                );
+            }
+        }
+    }
+
+    // -- PR 8: replicated dispatch basics ----------------------------------
+
+    #[test]
+    fn replicated_path_matches_sync_path_when_healthy() {
+        let its = items(300, 8, 80);
+        // Generous waits: a hedge or timeout under CI-load jitter would
+        // let a differently-seeded backup win and break the equality.
+        let cfg = ReplicaConfig {
+            shard_timeout: Duration::from_secs(10),
+            hedge_delay: Some(Duration::from_secs(5)),
+            ..Default::default()
+        };
+        let router =
+            ShardedRouter::build_replicated(&its, 3, 2, AlshParams::default(), cfg, 81);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).cos()).collect();
+        let reply = router.query_replicated(&q, 10, ProbeBudget::full());
+        assert_eq!(reply.shards_answered, 3);
+        assert_eq!(reply.shards_total, 3);
+        assert!(!reply.degraded);
+        assert!((reply.coverage_fraction() - 1.0).abs() < 1e-12);
+        // The primary member of every group is the sync path's pick, so
+        // a healthy replicated scatter returns the same merged top-k.
+        assert_eq!(reply.hits, router.query(&q, 10));
+    }
+
+    #[test]
+    fn replica_groups_validate_uniform_members() {
+        let its = items(100, 4, 90);
+        let a = MipsEngine::new(&its[..50], AlshParams::default(), 91);
+        let b = MipsEngine::new(&its[..40], AlshParams::default(), 92);
+        let err = ReplicaGroup::new(vec![(a, None, 0), (b, None, 1)], &ReplicaConfig::default());
+        assert!(err.is_err(), "mismatched member sizes accepted");
     }
 }

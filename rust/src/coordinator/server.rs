@@ -11,14 +11,20 @@
 //! ← {"ok": true}
 //! → {"cmd": "upsert", "id": 42, "vector": [0.1, ...]}
 //! ← {"ok": true, "n_items": 1001}
+//! → {"cmd": "upsert_batch", "ids": [7, 8], "vectors": [[...], [...]]}
+//! ← {"ok": true, "n_items": 1003, "count": 2}
 //! → {"cmd": "delete", "id": 42}
 //! ← {"ok": true, "n_items": 1000}
 //! ```
 //!
 //! `upsert`/`delete` mutate a live engine ([`MipsEngine::open_live`]):
 //! the WAL append is durable before the `ok` line is written, and the
-//! new state is visible to every query admitted afterwards. Against a
-//! frozen engine both commands answer `invalid_argument`. The `metrics`
+//! new state is visible to every query admitted afterwards.
+//! `upsert_batch` group-commits the whole batch — one WAL record batch,
+//! one fsync ([`crate::index::LiveIndex::upsert_batch`]) — and is
+//! validated in full before any byte is logged, so a rejected batch
+//! mutates nothing. Against a frozen engine the mutation commands
+//! answer `invalid_argument`. The `metrics`
 //! command additionally reports the live-tier gauges (`delta_items`,
 //! `tombstones`, `compactions`, `wal_bytes`, `last_compaction_ms` — all
 //! zero on a frozen engine).
@@ -31,16 +37,28 @@
 //! connection keeps serving. `ping` and `metrics` are answered inline on
 //! the connection thread, never through the batcher queue, so health
 //! checks stay responsive while queries are being shed.
+//!
+//! The **routed** front end ([`serve_router_on`] /
+//! [`handle_router_request`]) serves a replicated [`ShardedRouter`]
+//! instead of a single engine: queries run through the hedged
+//! scatter/gather and every response discloses coverage
+//! (`shards_answered`, `shards_total`, `coverage_fraction`, `degraded`,
+//! `hedge_fired`); its `metrics` command reports hedge/partial/scrub
+//! counters, per-shard p99 gauges, and per-member breaker states.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
+use crate::index::storage::Storage;
+use crate::index::ProbeBudget;
 use crate::util::json::{num_arr, obj, Json};
 
+use super::admission::{deadline_expired, triage_deadline_ms};
 use super::batcher::{BatcherHandle, BreakerState};
 use super::engine::MipsEngine;
+use super::router::ShardedRouter;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -59,10 +77,6 @@ impl Default for ServeConfig {
         Self { addr: "127.0.0.1:7878".into(), max_line_len: 1 << 20, max_top_k: 1024 }
     }
 }
-
-/// Clients may stretch their deadline only so far: anything above an
-/// hour is clamped (also keeps `Duration::from_secs_f64` panic-free).
-const MAX_DEADLINE_MS: f64 = 3_600_000.0;
 
 fn err_response(code: &str, msg: impl Into<String>) -> Json {
     obj(vec![
@@ -177,60 +191,77 @@ pub fn handle_request(
                 Err(e) => err_response("internal", format!("delete failed: {e:#}")),
             }
         }
+        Some("upsert_batch") => {
+            let Some(ids) = req.get("ids").and_then(Json::as_arr) else {
+                return err_response("invalid_argument", "missing or malformed ids array");
+            };
+            let Some(vectors) = req.get("vectors").and_then(Json::as_arr) else {
+                return err_response("invalid_argument", "missing or malformed vectors array");
+            };
+            if ids.is_empty() || ids.len() != vectors.len() {
+                return err_response(
+                    "invalid_argument",
+                    format!(
+                        "ids ({}) and vectors ({}) must be equal-length and non-empty",
+                        ids.len(),
+                        vectors.len()
+                    ),
+                );
+            }
+            if !engine.is_live() {
+                return err_response(
+                    "invalid_argument",
+                    "engine serves a frozen index; upsert_batch requires a live index",
+                );
+            }
+            // Validate the whole batch before touching the WAL, so a
+            // rejected batch leaves no partial mutation behind.
+            let mut entries = Vec::with_capacity(ids.len());
+            for (i, (id, vec)) in ids.iter().zip(vectors).enumerate() {
+                let Some(id) = id.as_usize().and_then(|v| u32::try_from(v).ok()) else {
+                    return err_response(
+                        "invalid_argument",
+                        format!("ids[{i}] must be an integer in u32 range"),
+                    );
+                };
+                let Some(vector) = vec.as_f32_vec() else {
+                    return err_response(
+                        "invalid_argument",
+                        format!("vectors[{i}] is missing or malformed"),
+                    );
+                };
+                if vector.iter().any(|v| !v.is_finite()) {
+                    return err_response(
+                        "invalid_argument",
+                        format!("vectors[{i}] contains non-finite components"),
+                    );
+                }
+                if vector.len() != engine.dim() {
+                    return err_response(
+                        "invalid_argument",
+                        format!(
+                            "vectors[{i}] dim {} != index dim {}",
+                            vector.len(),
+                            engine.dim()
+                        ),
+                    );
+                }
+                entries.push((id, vector));
+            }
+            match engine.upsert_batch(&entries) {
+                Ok(()) => obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("n_items", Json::Num(engine.n_items() as f64)),
+                    ("count", Json::Num(entries.len() as f64)),
+                ]),
+                Err(e) => err_response("internal", format!("upsert_batch failed: {e:#}")),
+            }
+        }
         Some(other) => err_response("invalid_argument", format!("unknown cmd {other:?}")),
         None => {
-            let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
-                return err_response("invalid_argument", "missing or malformed vector");
-            };
-            // JSON numbers can't spell NaN, but overflow (1e39 → f32 Inf,
-            // 1e999 → f64 inf) can still smuggle non-finite components in.
-            if vector.iter().any(|v| !v.is_finite()) {
-                return err_response(
-                    "invalid_argument",
-                    "vector contains non-finite components",
-                );
-            }
-            if vector.len() != engine.dim() {
-                return err_response(
-                    "invalid_argument",
-                    format!("vector dim {} != index dim {}", vector.len(), engine.dim()),
-                );
-            }
-            let top_k = match req.get("top_k") {
-                None => 10,
-                Some(v) => match v.as_usize() {
-                    Some(k) if (1..=cfg.max_top_k).contains(&k) => k,
-                    Some(0) => {
-                        return err_response("invalid_argument", "top_k must be >= 1")
-                    }
-                    Some(k) => {
-                        return err_response(
-                            "invalid_argument",
-                            format!("top_k {k} exceeds max {}", cfg.max_top_k),
-                        )
-                    }
-                    None => {
-                        return err_response(
-                            "invalid_argument",
-                            "top_k must be a positive integer",
-                        )
-                    }
-                },
-            };
-            let deadline = match req.get("deadline_ms") {
-                None => None,
-                Some(v) => match v.as_f64() {
-                    Some(ms) if ms.is_finite() && ms > 0.0 => {
-                        let ms = ms.min(MAX_DEADLINE_MS);
-                        Some(Instant::now() + Duration::from_secs_f64(ms / 1000.0))
-                    }
-                    _ => {
-                        return err_response(
-                            "invalid_argument",
-                            "deadline_ms must be a positive finite number of milliseconds",
-                        )
-                    }
-                },
+            let (vector, top_k, deadline) = match parse_query(&req, engine.dim(), cfg) {
+                Ok(parts) => parts,
+                Err(resp) => return resp,
             };
             let t0 = Instant::now();
             match handle.query_deadline(vector, top_k, deadline) {
@@ -253,6 +284,161 @@ pub fn handle_request(
             }
         }
     }
+}
+
+/// Handle one JSON-lines request against a replicated router — the
+/// routed analogue of [`handle_request`]. Queries run through
+/// [`ShardedRouter::query_replicated`] (hedged scatter/gather, per-shard
+/// timeouts), and every query response carries the coverage fields
+/// (`shards_answered`, `shards_total`, `coverage_fraction`, `degraded`,
+/// `hedge_fired`) so a client can always tell a full answer from a
+/// partial one. Mutations are rejected — replica groups serve frozen
+/// index files. The `metrics` command reports the router counters:
+/// hedge fires, partial replies, scrub quarantines/repairs, per-shard
+/// answer-p99 gauges, and per-member breaker states.
+pub fn handle_router_request<S: Storage>(
+    line: &str,
+    router: &ShardedRouter<S>,
+    cfg: &ServeConfig,
+) -> Json {
+    if line.len() > cfg.max_line_len {
+        return err_response(
+            "invalid_argument",
+            format!("request line exceeds {} bytes", cfg.max_line_len),
+        );
+    }
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => return err_response("invalid_argument", format!("bad request: {e}")),
+    };
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("ping") => obj(vec![("ok", Json::Bool(true))]),
+        Some("metrics") => {
+            let s = router.metrics().snapshot();
+            let shard_p99: Vec<f64> =
+                router.shard_p99_us().iter().map(|&v| v as f64).collect();
+            let breakers: Vec<Json> = router
+                .breaker_states()
+                .into_iter()
+                .map(|g| {
+                    Json::Arr(g.into_iter().map(|b| Json::Str(b.as_str().into())).collect())
+                })
+                .collect();
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "metrics",
+                    obj(vec![
+                        ("queries", Json::Num(s.queries as f64)),
+                        ("hedge_fires", Json::Num(s.hedge_fires as f64)),
+                        ("partial_replies", Json::Num(s.partial_replies as f64)),
+                        ("replica_quarantines", Json::Num(s.replica_quarantines as f64)),
+                        ("replica_repairs", Json::Num(s.replica_repairs as f64)),
+                        ("p50_latency_us", Json::Num(s.p50_latency_us as f64)),
+                        ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
+                        ("shard_p99_us", num_arr(&shard_p99)),
+                        ("breakers", Json::Arr(breakers)),
+                    ]),
+                ),
+            ])
+        }
+        Some(other) => err_response(
+            "invalid_argument",
+            format!("unknown cmd {other:?} (mutations are not served on the routed path)"),
+        ),
+        None => {
+            let (vector, top_k, deadline) = match parse_query(&req, router.dim(), cfg) {
+                Ok(parts) => parts,
+                Err(resp) => return resp,
+            };
+            if deadline_expired(deadline) {
+                return err_response("deadline_exceeded", "deadline expired before dispatch");
+            }
+            let t0 = Instant::now();
+            let reply = router.query_replicated(&vector, top_k, ProbeBudget::full());
+            if deadline_expired(deadline) {
+                return err_response(
+                    "deadline_exceeded",
+                    "deadline expired during scatter/gather",
+                );
+            }
+            let ids: Vec<f64> = reply.hits.iter().map(|h| h.id as f64).collect();
+            let scores: Vec<f64> = reply.hits.iter().map(|h| h.score as f64).collect();
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("items", num_arr(&ids)),
+                ("scores", num_arr(&scores)),
+                ("degraded", Json::Bool(reply.degraded)),
+                ("shards_answered", Json::Num(reply.shards_answered as f64)),
+                ("shards_total", Json::Num(reply.shards_total as f64)),
+                ("coverage_fraction", Json::Num(reply.coverage_fraction())),
+                ("hedge_fired", Json::Bool(reply.hedge_fired)),
+                ("latency_us", Json::Num(t0.elapsed().as_micros() as f64)),
+            ])
+        }
+    }
+}
+
+/// Validate a query request's `vector`, `top_k`, and `deadline_ms`
+/// against the index dimension and the server limits — shared by the
+/// batched single-engine path and the routed replica path so both
+/// enforce identical request semantics. `Err` is the ready-to-send
+/// error response.
+fn parse_query(
+    req: &Json,
+    dim: usize,
+    cfg: &ServeConfig,
+) -> Result<(Vec<f32>, usize, Option<Instant>), Json> {
+    let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
+        return Err(err_response("invalid_argument", "missing or malformed vector"));
+    };
+    // JSON numbers can't spell NaN, but overflow (1e39 → f32 Inf,
+    // 1e999 → f64 inf) can still smuggle non-finite components in.
+    if vector.iter().any(|v| !v.is_finite()) {
+        return Err(err_response(
+            "invalid_argument",
+            "vector contains non-finite components",
+        ));
+    }
+    if vector.len() != dim {
+        return Err(err_response(
+            "invalid_argument",
+            format!("vector dim {} != index dim {dim}", vector.len()),
+        ));
+    }
+    let top_k = match req.get("top_k") {
+        None => 10,
+        Some(v) => match v.as_usize() {
+            Some(k) if (1..=cfg.max_top_k).contains(&k) => k,
+            Some(0) => return Err(err_response("invalid_argument", "top_k must be >= 1")),
+            Some(k) => {
+                return Err(err_response(
+                    "invalid_argument",
+                    format!("top_k {k} exceeds max {}", cfg.max_top_k),
+                ))
+            }
+            None => {
+                return Err(err_response(
+                    "invalid_argument",
+                    "top_k must be a positive integer",
+                ))
+            }
+        },
+    };
+    let deadline = match req.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_f64().map(triage_deadline_ms) {
+            Some(Ok(d)) => Some(d),
+            Some(Err(e)) => return Err(err_response(e.code(), e.message())),
+            None => {
+                return Err(err_response(
+                    "invalid_argument",
+                    "deadline_ms must be a positive finite number of milliseconds",
+                ))
+            }
+        },
+    };
+    Ok((vector, top_k, deadline))
 }
 
 /// The `id` field of a mutation command, if it is an integer that fits
@@ -289,11 +475,13 @@ fn write_json_line(writer: &mut TcpStream, resp: &Json) -> std::io::Result<()> {
     writer.write_all(out.as_bytes())
 }
 
-fn handle_conn(
+/// One connection's read-dispatch-write loop, generic over the request
+/// handler — the single-engine path and the routed replica path differ
+/// only in what answers a line.
+fn conn_loop(
     stream: TcpStream,
-    handle: BatcherHandle,
-    engine: Arc<MipsEngine>,
-    cfg: Arc<ServeConfig>,
+    cfg: &ServeConfig,
+    mut handle_line: impl FnMut(&str) -> Json,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -323,7 +511,7 @@ fn handle_conn(
         if line.is_empty() {
             continue;
         }
-        let resp = handle_request(line, &handle, &engine, &cfg);
+        let resp = handle_line(line);
         write_json_line(&mut writer, &resp)?;
     }
 }
@@ -350,7 +538,32 @@ pub fn serve_on(
         let e = Arc::clone(&engine);
         let c = Arc::clone(&cfg);
         std::thread::spawn(move || {
-            if let Err(err) = handle_conn(stream, h, e, c) {
+            let r = conn_loop(stream, &c, |line| handle_request(line, &h, &e, &c));
+            if let Err(err) = r {
+                crate::log_warn!("connection error: {err}");
+            }
+        });
+    }
+}
+
+/// Accept loop serving a replicated router — the routed analogue of
+/// [`serve_on`]: every line is answered by [`handle_router_request`],
+/// so queries get hedged scatter/gather and coverage-disclosed partial
+/// results.
+pub fn serve_router_on<S: Storage>(
+    listener: TcpListener,
+    router: Arc<ShardedRouter<S>>,
+    cfg: ServeConfig,
+) -> crate::Result<()> {
+    let cfg = Arc::new(cfg);
+    loop {
+        let (stream, peer) = listener.accept()?;
+        crate::log_debug!("connection from {peer}");
+        let r = Arc::clone(&router);
+        let c = Arc::clone(&cfg);
+        std::thread::spawn(move || {
+            let res = conn_loop(stream, &c, |line| handle_router_request(line, &r, &c));
+            if let Err(err) = res {
                 crate::log_warn!("connection error: {err}");
             }
         });

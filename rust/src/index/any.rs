@@ -91,6 +91,16 @@ impl<S: Storage> AnyIndex<S> {
         }
     }
 
+    /// The stored vector for internal id `id` (its row of the item
+    /// matrix). This is what a replica repair reads from a healthy peer
+    /// to rebuild a corrupted member's index.
+    pub fn item(&self, id: u32) -> &[f32] {
+        match self {
+            AnyIndex::Flat(i) => i.item(id),
+            AnyIndex::Banded(i) => i.item(id),
+        }
+    }
+
     /// Norm bands served (1 for the flat index).
     pub fn n_bands(&self) -> usize {
         match self {

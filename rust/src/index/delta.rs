@@ -752,6 +752,46 @@ impl<S: Storage> LiveIndex<S> {
         Ok(())
     }
 
+    /// Group-commit bulk upsert: every record in `entries` is appended
+    /// to the WAL as one contiguous write with a **single** fsync
+    /// ([`Wal::append_batch`]), then all mutations are applied to one
+    /// delta clone and published as one snapshot swap. Readers see the
+    /// batch atomically; durability is all-or-prefix (a crash mid-batch
+    /// replays the intact record prefix, like the same upserts issued
+    /// one at a time). Later entries supersede earlier ones for a
+    /// duplicated id, matching sequential-upsert semantics. Nothing is
+    /// logged or applied if any entry's dimension is wrong.
+    pub fn upsert_batch(&self, entries: &[(u32, Vec<f32>)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        for (ext_id, vector) in entries {
+            ensure!(
+                vector.len() == self.inner.dim,
+                "live index: upsert dim {} != index dim {} (ext id {ext_id})",
+                vector.len(),
+                self.inner.dim
+            );
+        }
+        let mut w = lock(&self.inner.writer);
+        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
+        let records: Vec<WalRecord> = entries
+            .iter()
+            .map(|(ext_id, vector)| WalRecord::Upsert { ext_id: *ext_id, vector: vector.clone() })
+            .collect();
+        w.wal.append_batch(&records)?;
+        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
+        let snap = self.inner.cell.read().1;
+        let mut delta = snap.delta.clone();
+        for (ext_id, vector) in entries {
+            self.apply_upsert(&mut delta, &snap, *ext_id, vector);
+        }
+        self.inner
+            .cell
+            .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
+        Ok(())
+    }
+
     /// Delete `ext_id` (a no-op if absent). WAL-logged like upsert.
     pub fn delete(&self, ext_id: u32) -> Result<()> {
         let mut w = lock(&self.inner.writer);

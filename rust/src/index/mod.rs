@@ -61,5 +61,5 @@ pub use persist::{
 };
 pub use scheme::{MipsHashScheme, SchemeFamilies, SchemeHasher};
 pub use scratch::QueryScratch;
-pub use storage::{MapSlice, Mapped, MmapFile, Owned, Storage};
+pub use storage::{MapAdvice, MapSlice, Mapped, MmapFile, Owned, Storage};
 pub use wal::{Wal, WalRecord};

@@ -82,7 +82,7 @@ use super::banded::{Band, BandedParams, NormRangeIndex};
 use super::core::{AlshIndex, AlshParams};
 use super::frozen::FrozenTable;
 use super::scheme::{MipsHashScheme, SchemeFamilies};
-use super::storage::{map_slice, MapSlice, Mapped, MmapFile, Storage, SECTION_ALIGN};
+use super::storage::{map_slice, MapAdvice, MapSlice, Mapped, MmapFile, Storage, SECTION_ALIGN};
 use crate::lsh::{L2LshFamily, SrpFamily};
 use crate::transform::UScale;
 
@@ -555,6 +555,7 @@ fn load_file(
                 want_kind,
                 want_scheme,
                 SectionVerify::IfPresent,
+                false,
             )?);
         }
         other => anyhow::bail!(
@@ -977,14 +978,30 @@ impl<'a> SectionCursor<'a> {
     }
 }
 
+/// Attach a paging hint to a section when the caller asked for hints
+/// (the zero-copy serving opens do; the heap loader, which copies every
+/// section sequentially right after parsing, must not disable
+/// readahead on itself).
+fn advise_if<T>(on: bool, s: &MapSlice<T>, advice: MapAdvice) {
+    if on {
+        s.advise(advice);
+    }
+}
+
 /// Parse a v5 image into a mapped index. Shared by [`open_mmap`] and the
 /// heap loader (which stages through the same lazily-faulted mapping,
 /// then deep-copies) — one header-dispatch path for the whole format.
+/// With `advise` set, sections get `madvise` paging hints for the
+/// serving access pattern: probe metadata (bucket keys, radix starts,
+/// CSR offsets, band ids) is prefetched (`MADV_WILLNEED`), while
+/// point-accessed payloads (items, postings) disable readahead
+/// (`MADV_RANDOM`).
 fn parse_v5(
     map: &Arc<MmapFile>,
     want_kind: Option<u32>,
     want_scheme: Option<MipsHashScheme>,
     verify: SectionVerify,
+    advise: bool,
 ) -> anyhow::Result<MappedIndex> {
     let bytes = map.bytes();
     anyhow::ensure!(bytes.len() >= V5_PRELUDE, "not an ALSH index file: too short");
@@ -1047,12 +1064,17 @@ fn parse_v5(
         );
         let mut sec = SectionCursor::new(map, n_sections, meta_end, entry_size, verify_sections);
         let items = sec.take_exact::<f32>(n_items * dim, "items")?;
+        advise_if(advise, &items, MapAdvice::Random);
         let mut tables: Vec<FrozenTable<Mapped>> = Vec::with_capacity(params.n_tables);
         for _ in 0..params.n_tables {
             let keys = sec.take::<u64>("keys")?;
             let starts = sec.take_exact::<u32>(257, "starts")?;
             let offsets = sec.take_exact::<u32>(keys.len() + 1, "offsets")?;
             let postings = sec.take::<u32>("postings")?;
+            advise_if(advise, &keys, MapAdvice::WillNeed);
+            advise_if(advise, &starts, MapAdvice::WillNeed);
+            advise_if(advise, &offsets, MapAdvice::WillNeed);
+            advise_if(advise, &postings, MapAdvice::Random);
             tables.push(FrozenTable::<Mapped>::from_storage_parts(
                 keys, starts, offsets, postings,
             )?);
@@ -1097,15 +1119,21 @@ fn parse_v5(
     );
     let mut sec = SectionCursor::new(map, n_sections, meta_end, entry_size, verify_sections);
     let items = sec.take_exact::<f32>(n_items * dim, "items")?;
+    advise_if(advise, &items, MapAdvice::Random);
     let mut bands: Vec<Band<Mapped>> = Vec::with_capacity(n_bands);
     for bm in band_meta {
         let ids = sec.take_exact::<u32>(bm.band_len, "band ids")?;
+        advise_if(advise, &ids, MapAdvice::WillNeed);
         let mut tables: Vec<FrozenTable<Mapped>> = Vec::with_capacity(params.n_tables);
         for _ in 0..params.n_tables {
             let keys = sec.take::<u64>("keys")?;
             let starts = sec.take_exact::<u32>(257, "starts")?;
             let offsets = sec.take_exact::<u32>(keys.len() + 1, "offsets")?;
             let postings = sec.take::<u32>("postings")?;
+            advise_if(advise, &keys, MapAdvice::WillNeed);
+            advise_if(advise, &starts, MapAdvice::WillNeed);
+            advise_if(advise, &offsets, MapAdvice::WillNeed);
+            advise_if(advise, &postings, MapAdvice::Random);
             tables.push(FrozenTable::<Mapped>::from_storage_parts(
                 keys, starts, offsets, postings,
             )?);
@@ -1160,7 +1188,7 @@ pub fn load_any_scheme(
 /// the batcher, and the router exactly like a heap index.
 pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<MappedIndex> {
     let map = MmapFile::map(path.as_ref())?;
-    parse_v5(&map, None, None, SectionVerify::No)
+    parse_v5(&map, None, None, SectionVerify::No, true)
 }
 
 /// [`open_mmap`] that additionally pins the hash scheme (rejected from
@@ -1170,7 +1198,7 @@ pub fn open_mmap_scheme(
     scheme: MipsHashScheme,
 ) -> crate::Result<MappedIndex> {
     let map = MmapFile::map(path.as_ref())?;
-    parse_v5(&map, None, Some(scheme), SectionVerify::No)
+    parse_v5(&map, None, Some(scheme), SectionVerify::No, true)
 }
 
 /// [`open_mmap`] that additionally verifies every section against the
@@ -1181,7 +1209,7 @@ pub fn open_mmap_scheme(
 /// checksums are rejected with a re-save hint.
 pub fn open_mmap_verified(path: impl AsRef<Path>) -> crate::Result<MappedIndex> {
     let map = MmapFile::map(path.as_ref())?;
-    parse_v5(&map, None, None, SectionVerify::Require)
+    parse_v5(&map, None, None, SectionVerify::Require, true)
 }
 
 /// The one kind-pinned unwrap both typed load surfaces share (the
@@ -1271,7 +1299,7 @@ impl AlshIndex<Mapped> {
     /// banded file is rejected from the header.
     pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), None, SectionVerify::No)?))
+        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), None, SectionVerify::No, true)?))
     }
 
     /// [`AlshIndex::open_mmap`] that additionally pins the hash scheme.
@@ -1280,7 +1308,7 @@ impl AlshIndex<Mapped> {
         scheme: MipsHashScheme,
     ) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), Some(scheme), SectionVerify::No)?))
+        Ok(unwrap_flat(parse_v5(&map, Some(KIND_FLAT), Some(scheme), SectionVerify::No, true)?))
     }
 }
 
@@ -1356,7 +1384,7 @@ impl NormRangeIndex<Mapped> {
     /// flat file is rejected from the header.
     pub fn open_mmap(path: impl AsRef<Path>) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), None, SectionVerify::No)?))
+        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), None, SectionVerify::No, true)?))
     }
 
     /// [`NormRangeIndex::open_mmap`] that additionally pins the scheme.
@@ -1365,7 +1393,7 @@ impl NormRangeIndex<Mapped> {
         scheme: MipsHashScheme,
     ) -> crate::Result<Self> {
         let map = MmapFile::map(path.as_ref())?;
-        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), Some(scheme), SectionVerify::No)?))
+        Ok(unwrap_banded(parse_v5(&map, Some(KIND_BANDED), Some(scheme), SectionVerify::No, true)?))
     }
 }
 

@@ -84,8 +84,8 @@ impl Storage for Mapped {
 mod sys {
     use std::ffi::c_void;
 
-    // Raw prototypes for the two calls we need; libc is linked by std on
-    // every unix target, so no crate is required.
+    // Raw prototypes for the three calls we need; libc is linked by std
+    // on every unix target, so no crate is required.
     extern "C" {
         pub fn mmap(
             addr: *mut c_void,
@@ -96,11 +96,31 @@ mod sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
     }
 
     // Identical values on Linux and macOS.
     pub const PROT_READ: i32 = 1;
     pub const MAP_SHARED: i32 = 1;
+    pub const MADV_RANDOM: i32 = 1;
+    pub const MADV_WILLNEED: i32 = 3;
+}
+
+/// Access-pattern hints a caller can attach to a mapped section
+/// ([`MapSlice::advise`] / [`MmapFile::advise`]). Forwarded to the
+/// kernel via `madvise(2)` on 64-bit unix; a no-op for heap-backed
+/// buffers and on every other target. Purely advisory — failure (or the
+/// no-op path) changes nothing functional, only paging behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapAdvice {
+    /// Expect random point accesses (postings probes, item rows hit by
+    /// rerank): disables readahead so each probe faults only the pages
+    /// it actually touches.
+    Random,
+    /// Expect imminent dense use (bucket keys, radix starts, CSR
+    /// offsets — the per-query probe metadata): ask the kernel to
+    /// prefetch the range so first queries don't pay a fault per page.
+    WillNeed,
 }
 
 enum Backing {
@@ -206,6 +226,38 @@ impl MmapFile {
         self.len == 0
     }
 
+    /// Forward an access-pattern hint for `byte_len` bytes at `byte_off`
+    /// to the kernel. Only a live mapping takes advice — the heap
+    /// fallback has no pages to advise — and the result is deliberately
+    /// ignored: `madvise` is a hint, and a refused hint must never fail
+    /// an open that would otherwise serve correctly.
+    pub fn advise(&self, byte_off: usize, byte_len: usize, advice: MapAdvice) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            if !matches!(self.backing, Backing::Mmap) || byte_len == 0 || byte_off >= self.len {
+                return;
+            }
+            // madvise needs a page-aligned start. The mapping base is
+            // page-aligned, so round the offset down to a power-of-two
+            // multiple generous enough for every page size in the wild
+            // (4K–64K) and widen the range to compensate — advice
+            // spilling onto a few neighboring pages is harmless.
+            const PAGE_ALIGN: usize = 64 * 1024;
+            let start = byte_off & !(PAGE_ALIGN - 1);
+            let len = (byte_off + byte_len).min(self.len) - start;
+            let flag = match advice {
+                MapAdvice::Random => sys::MADV_RANDOM,
+                MapAdvice::WillNeed => sys::MADV_WILLNEED,
+            };
+            unsafe {
+                let _ = sys::madvise(self.ptr.add(start) as *mut std::ffi::c_void, len, flag);
+            }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            let _ = (byte_off, byte_len, advice);
+        }
+    }
 }
 
 /// A typed view of `byte_len` bytes of `owner` at `byte_off`, validating
@@ -275,6 +327,17 @@ pub struct MapSlice<T> {
 // the Arc; T is a plain-old-data type.
 unsafe impl<T: Send + Sync> Send for MapSlice<T> {}
 unsafe impl<T: Send + Sync> Sync for MapSlice<T> {}
+
+impl<T> MapSlice<T> {
+    /// Forward an access-pattern hint for exactly this view's bytes
+    /// (see [`MmapFile::advise`] for the no-op and alignment rules).
+    pub fn advise(&self, advice: MapAdvice) {
+        // `ptr` was constructed as `owner.ptr.add(byte_off)`, so the
+        // subtraction recovers the section offset.
+        let byte_off = self.ptr as usize - self._owner.ptr as usize;
+        self._owner.advise(byte_off, self.len * std::mem::size_of::<T>(), advice);
+    }
+}
 
 impl<T> Deref for MapSlice<T> {
     type Target = [T];
@@ -346,6 +409,22 @@ mod tests {
         assert!(map_slice::<u64>(&map, 4, 8, "x").is_err());
         // Empty view at the end is fine.
         assert_eq!(map_slice::<u32>(&map, 64, 0, "x").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn advise_never_fails_on_either_backing() {
+        let path = tmp("advise.bin");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        for open in [MmapFile::map(&path).unwrap(), MmapFile::read_aligned(&path).unwrap()] {
+            open.advise(0, 4096, MapAdvice::WillNeed);
+            open.advise(100, 8, MapAdvice::Random);
+            // Past the end: silently ignored, it's only a hint.
+            open.advise(4096, 1, MapAdvice::Random);
+            let s: MapSlice<u32> = map_slice(&open, 64, 128, "x").unwrap();
+            s.advise(MapAdvice::Random);
+            s.advise(MapAdvice::WillNeed);
+            assert_eq!(s[0], 0x0707_0707);
+        }
     }
 
     #[test]

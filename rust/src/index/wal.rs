@@ -199,7 +199,25 @@ impl Wal {
     /// Append one record and `sync_data` it. Returns only once the
     /// record is durable; the caller applies the mutation after.
     pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
-        let buf = encode(rec);
+        self.append_batch(std::slice::from_ref(rec))
+    }
+
+    /// Group commit: append every record in `recs` as one contiguous
+    /// write followed by a **single** `sync_data`. Durability is
+    /// all-or-prefix — a crash mid-write leaves a torn tail that
+    /// [`Wal::open`] truncates back to the last intact record, exactly
+    /// as for single appends — and the per-record format is unchanged,
+    /// so replay cannot tell a batch from the same records appended one
+    /// at a time. This is the bulk-upsert fast path: one fsync amortized
+    /// over the whole batch instead of one per record.
+    pub fn append_batch(&mut self, recs: &[WalRecord]) -> Result<()> {
+        if recs.is_empty() {
+            return Ok(());
+        }
+        let mut buf = Vec::new();
+        for rec in recs {
+            buf.extend_from_slice(&encode(rec));
+        }
         self.file
             .write_all(&buf)
             .with_context(|| format!("wal: append to {}", self.path.display()))?;

@@ -311,3 +311,89 @@ fn background_compactor_drains_while_serving() {
     assert_eq!(live.generation(), generation);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// -- PR 8: group-commit bulk upserts ----------------------------------------
+
+/// `upsert_batch` must be indistinguishable from the same sequence of
+/// single upserts — same logical state, same query results — while
+/// paying one WAL write and one fsync for the whole group.
+#[test]
+fn upsert_batch_matches_sequential_upserts() {
+    let dir_a = tmp_dir("batch_a");
+    let dir_b = tmp_dir("batch_b");
+    let dim = 10;
+    let cfg = LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 9 };
+    let initial = norm_spread_items(100, dim, 800);
+    let a = LiveIndex::<alsh::index::Owned>::create(&dir_a, &initial, cfg).unwrap();
+    let b = LiveIndex::<alsh::index::Owned>::create(&dir_b, &initial, cfg).unwrap();
+
+    // Fresh ids, overwrites of base rows, and an in-batch duplicate
+    // (the later entry must supersede the earlier one).
+    let fresh = norm_spread_items(32, dim, 801);
+    let mut entries: Vec<(u32, Vec<f32>)> =
+        fresh[..30].iter().enumerate().map(|(i, v)| (300 + i as u32, v.clone())).collect();
+    entries.push((7, fresh[30].clone()));
+    entries.push((300, fresh[31].clone())); // duplicate of the first entry
+    a.upsert_batch(&entries).unwrap();
+    for (ext, v) in &entries {
+        b.upsert(*ext, v).unwrap();
+    }
+
+    assert_eq!(a.n_items(), b.n_items());
+    for q in queries(20, dim, 802) {
+        assert_eq!(canon(a.query(&q, 10)), canon(b.query(&q, 10)));
+    }
+
+    // Empty batches are a no-op, not an fsync.
+    let wal_before = a.stats().wal_bytes;
+    a.upsert_batch(&[]).unwrap();
+    assert_eq!(a.stats().wal_bytes, wal_before);
+
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+/// The whole batch is validated before the WAL write and applied
+/// atomically: a rejected batch leaves no trace, an accepted one is
+/// durable across reopen.
+#[test]
+fn upsert_batch_is_all_or_nothing_and_durable() {
+    let dir = tmp_dir("batch_dur");
+    let dim = 8;
+    let cfg = LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 11 };
+    let initial = norm_spread_items(50, dim, 820);
+    let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
+
+    // One bad dim in the middle rejects the batch without mutating.
+    let good = norm_spread_items(3, dim, 821);
+    let bad = vec![
+        (200u32, good[0].clone()),
+        (201u32, vec![0.5; dim + 1]),
+        (202u32, good[1].clone()),
+    ];
+    let wal_before = live.stats().wal_bytes;
+    assert!(live.upsert_batch(&bad).is_err());
+    assert_eq!(live.n_items(), 50, "rejected batch mutated the index");
+    assert_eq!(live.stats().wal_bytes, wal_before, "rejected batch touched the WAL");
+
+    // An accepted batch survives a reopen (WAL replay): the reopened
+    // index must answer exactly like a same-seed reference that applied
+    // the same mutations sequentially and never closed.
+    let entries: Vec<(u32, Vec<f32>)> =
+        good.iter().enumerate().map(|(i, v)| (200 + i as u32, v.clone())).collect();
+    live.upsert_batch(&entries).unwrap();
+    assert_eq!(live.n_items(), 53);
+    drop(live);
+    let reopened = LiveIndex::<alsh::index::Owned>::open(&dir).unwrap();
+    assert_eq!(reopened.n_items(), 53);
+    let ref_dir = tmp_dir("batch_dur_ref");
+    let reference = LiveIndex::<alsh::index::Owned>::create(&ref_dir, &initial, cfg).unwrap();
+    for (ext, v) in &entries {
+        reference.upsert(*ext, v).unwrap();
+    }
+    for q in queries(15, dim, 822) {
+        assert_eq!(canon(reopened.query(&q, 10)), canon(reference.query(&q, 10)));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}

@@ -457,3 +457,83 @@ fn oversized_line_is_rejected_and_connection_survives() {
     assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
     batcher.shutdown();
 }
+
+// -- PR 8: group-commit bulk upserts over the server command ----------------
+
+/// `upsert_batch` validates the whole batch up front and group-commits
+/// it: one command, `count` rows, visible to queries immediately after
+/// the `ok` line.
+#[test]
+fn upsert_batch_command_group_commits() {
+    let dir = live_dir("batch");
+    let (engine, batcher) = boot_live(8, &dir);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    let resp = h(concat!(
+        r#"{"cmd": "upsert_batch", "ids": [700, 701, 702], "vectors": ["#,
+        r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8], "#,
+        r#"[0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9], "#,
+        r#"[0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]]}"#
+    ));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("n_items").and_then(Json::as_f64), Some(303.0));
+    assert_eq!(resp.get("count").and_then(Json::as_f64), Some(3.0));
+
+    // One batch = one group of delta rows, durable in the WAL.
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    let m = resp.get("metrics").expect("metrics object");
+    assert_eq!(m.get("delta_items").and_then(Json::as_f64), Some(3.0));
+    assert!(m.get("wal_bytes").and_then(Json::as_f64).unwrap() > 0.0);
+
+    batcher.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Any bad row rejects the whole batch with `invalid_argument` before a
+/// single byte hits the WAL; frozen engines reject the command outright.
+#[test]
+fn upsert_batch_command_validates_whole_batch() {
+    let dir = live_dir("batch_val");
+    let (engine, batcher) = boot_live(8, &dir);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    for req in [
+        // Missing / mismatched / empty arrays.
+        format!(r#"{{"cmd": "upsert_batch", "vectors": [{q}]}}"#),
+        format!(r#"{{"cmd": "upsert_batch", "ids": [1]}}"#),
+        format!(r#"{{"cmd": "upsert_batch", "ids": [1, 2], "vectors": [{q}]}}"#),
+        r#"{"cmd": "upsert_batch", "ids": [], "vectors": []}"#.to_string(),
+        // Bad id / bad vector in the middle of an otherwise-fine batch.
+        format!(r#"{{"cmd": "upsert_batch", "ids": [1, -2], "vectors": [{q}, {q}]}}"#),
+        format!(r#"{{"cmd": "upsert_batch", "ids": [1, 4294967296], "vectors": [{q}, {q}]}}"#),
+        format!(r#"{{"cmd": "upsert_batch", "ids": [1, 2], "vectors": [{q}, [0.1, 0.2]]}}"#),
+        format!(
+            r#"{{"cmd": "upsert_batch", "ids": [1, 2], "vectors": [{q}, [1e39, 0, 0, 0, 0, 0, 0, 0]]}}"#
+        ),
+        format!(r#"{{"cmd": "upsert_batch", "ids": [1, 2], "vectors": [{q}, "nope"]}}"#),
+    ] {
+        let resp = h(&req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+    }
+    // Nothing above mutated the engine.
+    assert_eq!(engine.n_items(), 300);
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    let m = resp.get("metrics").expect("metrics object");
+    assert_eq!(m.get("delta_items").and_then(Json::as_f64), Some(0.0));
+    batcher.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Frozen engines reject the command with the same code.
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+    let resp = h(&format!(r#"{{"cmd": "upsert_batch", "ids": [1], "vectors": [{q}]}}"#));
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("frozen"));
+    batcher.shutdown();
+}
