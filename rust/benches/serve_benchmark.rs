@@ -1,8 +1,9 @@
 //! Closed-loop serving benchmark over the robust coordinator stack,
-//! emitting `BENCH_serve.json` (sections `serve` and `overload`) so the
-//! serving trajectory — throughput, tail latency, shed rate, degraded
-//! fraction, recall-at-degraded — is ratcheted across PRs like the query
-//! and build benches.
+//! emitting `BENCH_serve.json` (sections `serve`, `overload`, `live`,
+//! `replica`, `observability`) so the serving trajectory — throughput,
+//! tail latency, shed rate, degraded fraction, recall-at-degraded,
+//! tracing overhead — is ratcheted across PRs like the query and build
+//! benches.
 //!
 //! Phase 1 drives a healthy server with closed-loop TCP clients and
 //! records throughput and p50/p99/p999. Phase 2 measures recall@10 of
@@ -26,6 +27,12 @@
 //! detect→quarantine→repair cycle over an injected corruption. Lands in
 //! section `replica`.
 //!
+//! Phase 6 measures what the tracing machinery itself costs: p99 on a
+//! healthy server with the recorder off, at 1-in-100 sampling (the
+//! ratcheted configuration — must stay within 5% of off), and at 100%
+//! sampling with the slow log armed; plus the per-stage latency
+//! breakdown. Lands in section `observability`.
+//!
 //! Env knobs (CI sizes down): `ALSH_SERVE_N` items, `ALSH_SERVE_CLIENTS`
 //! × `ALSH_SERVE_QPC` healthy queries, `ALSH_SERVE_OVER_CLIENTS` ×
 //! `ALSH_SERVE_OVER_QPC` overload queries, `ALSH_SERVE_MUT` mutations in
@@ -39,7 +46,7 @@ use std::time::{Duration, Instant};
 
 use alsh::coordinator::{
     serve_on, AdmissionConfig, BatcherConfig, FaultPlan, MipsEngine, PjrtBatcher, ReplicaConfig,
-    ServeConfig, ShardFaultPlan, ShardedRouter,
+    ServeConfig, ShardFaultPlan, ShardedRouter, Stage,
 };
 use alsh::eval::gold_top_t;
 use alsh::index::{AlshParams, LiveConfig, Mapped, ProbeBudget};
@@ -137,6 +144,7 @@ fn main() {
         });
     }
     println!("phase 1: {n_clients} clients × {qpc} queries, {n_items} items dim {dim}");
+    let boot_snap = engine.metrics().snapshot();
     let t0 = Instant::now();
     let threads: Vec<_> = (0..n_clients)
         .map(|c| {
@@ -174,6 +182,16 @@ fn main() {
         "  {total} queries in {wall:?} → {qps:.0} q/s; p50 {p50}µs p99 {p99}µs p999 {p999}µs; degraded {degraded_healthy}"
     );
     let healthy_snap = engine.metrics().snapshot();
+    // Server-side interval view of the same run: the delta against the
+    // boot snapshot isolates phase 1's own counters (phase 2 reuses this
+    // engine, so absolute counters would smear).
+    let healthy_delta = healthy_snap.delta(&boot_snap);
+    println!(
+        "  server interval: {} queries at {:.0} q/s (shed rate {:.3})",
+        healthy_delta.queries,
+        healthy_delta.qps(wall),
+        healthy_delta.shed_rate()
+    );
 
     // ── Phase 2: recall@10, healthy vs degraded budget ───────────────
     let degraded_budget = handle.degraded_budget();
@@ -233,6 +251,7 @@ fn main() {
         });
     }
     println!("phase 3: {over_clients} clients × {over_qpc} queries against an undersized server");
+    let over_boot = over_engine.metrics().snapshot();
     let stop = Arc::new(AtomicBool::new(false));
     let ping_thread = {
         let stop = Arc::clone(&stop);
@@ -297,10 +316,18 @@ fn main() {
     let deadline_rate = deadline as f64 / sent as f64;
     let degraded_fraction = if ok > 0 { degraded as f64 / ok as f64 } else { 0.0 };
     let ping_p99 = pct(&ping_lats, 0.99);
+    // Cross-check the client-observed shed rate against the server's own
+    // interval counters (delta over the overload window).
+    let over_delta = over_engine.metrics().snapshot().delta(&over_boot);
+    let server_shed_rate = over_delta.shed_rate();
     println!(
         "  {sent} sent in {over_wall:?}: ok {ok} (degraded {degraded}), shed {shed} ({:.1}%), deadline {deadline} ({:.1}%), ping p99 {ping_p99}µs",
         shed_rate * 100.0,
         deadline_rate * 100.0
+    );
+    println!(
+        "  server interval: {} served, shed rate {server_shed_rate:.3}",
+        over_delta.queries
     );
     over_batcher.shutdown();
 
@@ -566,6 +593,128 @@ fn main() {
     drop(hedged);
     std::fs::remove_dir_all(&rep_dir).ok();
 
+    // ── Phase 6: observability — tracing overhead + stage breakdown ──
+    // Three measured closed-loop rounds against a fresh healthy server:
+    // recorder off, 1-in-100 sampling, and 100% sampling with the slow
+    // log armed. The 1% round is the ratcheted configuration: its p99
+    // must stay within 5% (plus a small absolute floor for timer noise)
+    // of the recorder-off p99.
+    let obs_engine = Arc::new(MipsEngine::new(&items, params, 16));
+    let obs_batcher = PjrtBatcher::spawn(
+        Arc::clone(&obs_engine),
+        "artifacts",
+        BatcherConfig { max_wait: Duration::from_micros(300), ..Default::default() },
+    )
+    .expect("batcher");
+    let obs_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let obs_addr = obs_listener.local_addr().unwrap();
+    {
+        let (h, e) = (obs_batcher.handle(), Arc::clone(&obs_engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(obs_listener, h, e, ServeConfig::default());
+        });
+    }
+    let obs_metrics = obs_engine.metrics();
+    println!(
+        "phase 6: tracing overhead, {n_clients} clients × {qpc} queries per round (off / 1% / 100%)"
+    );
+    // One round at the given recorder settings → (client p50, client p99,
+    // seen/sampled/slow deltas from the recorder's own counters).
+    let run_round = |sample_every: u64, slow_threshold_us: u64, salt: u64| {
+        obs_metrics.tracer.set_sample_every(sample_every);
+        obs_metrics.tracer.set_slow_threshold_us(slow_threshold_us);
+        let before = obs_metrics.tracer.stats();
+        let threads: Vec<_> = (0..n_clients)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seed_from_u64(7000 + salt * 100 + c as u64);
+                    let mut client = Client::connect(obs_addr);
+                    let mut lats = Vec::with_capacity(qpc);
+                    for _ in 0..qpc {
+                        let q: Vec<f32> =
+                            (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+                        let (resp, lat) = client.roundtrip(&query_line(&q, top_k, None));
+                        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                        assert!(
+                            resp.get("trace_id").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0,
+                            "reply missing a server-assigned trace_id: {resp:?}"
+                        );
+                        lats.push(lat);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        let mut lats: Vec<u64> = Vec::new();
+        for th in threads {
+            lats.extend(th.join().unwrap());
+        }
+        lats.sort_unstable();
+        let after = obs_metrics.tracer.stats();
+        (
+            pct(&lats, 0.50),
+            pct(&lats, 0.99),
+            after.seen - before.seen,
+            after.sampled - before.sampled,
+            after.slow_captured - before.slow_captured,
+        )
+    };
+    // Warm-up round (buffers, batcher cadence, connection reuse), then
+    // the measured rounds.
+    let (warm_p50, _, _, _, _) = run_round(0, 0, 0);
+    let (_, off_p99, off_seen, _, _) = run_round(0, 0, 1);
+    let (_, pct1_p99, _, pct1_sampled, _) = run_round(100, 0, 2);
+    // Slow threshold at half the warm-up median: slow enough that the
+    // log is selective, low enough that it demonstrably captures.
+    let slow_threshold_us = (warm_p50 / 2).max(1);
+    let (_, full_p99, full_seen, full_sampled, full_slow) = run_round(1, slow_threshold_us, 3);
+    let overhead_1pct = pct1_p99 as f64 / off_p99.max(1) as f64;
+    let overhead_100pct = full_p99 as f64 / off_p99.max(1) as f64;
+    let slowlog_capture_rate = full_slow as f64 / full_seen.max(1) as f64;
+    assert!(
+        pct1_p99 as f64 <= off_p99 as f64 * 1.05 + 500.0,
+        "1-in-100 sampling overhead breached the ratchet: p99 {pct1_p99}µs vs {off_p99}µs off"
+    );
+    assert!(pct1_sampled >= 1, "1-in-100 round sampled nothing over {off_seen} queries");
+    assert_eq!(full_sampled, full_seen, "100% round must sample every query");
+    assert!(
+        full_slow >= 1,
+        "slow log captured nothing at threshold {slow_threshold_us}µs over {full_seen} queries"
+    );
+    let obs_snap = obs_engine.metrics_snapshot();
+    println!(
+        "  p99: off {off_p99}µs, 1% sampling {pct1_p99}µs (×{overhead_1pct:.3}), \
+         100% {full_p99}µs (×{overhead_100pct:.3}); slowlog {full_slow}/{full_seen} \
+         at ≥{slow_threshold_us}µs; stage p99s: hash {}µs probe {}µs rerank {}µs reply_write {}µs",
+        obs_snap.stage_percentile_us(Stage::Hash, 0.99),
+        obs_snap.stage_percentile_us(Stage::Probe, 0.99),
+        obs_snap.stage_percentile_us(Stage::Rerank, 0.99),
+        obs_snap.stage_percentile_us(Stage::ReplyWrite, 0.99),
+    );
+    obs_batcher.shutdown();
+
+    let mut obs_entries: Vec<(String, Json)> = vec![
+        ("queries_per_round".into(), num(off_seen as f64)),
+        ("p99_off_us".into(), num(off_p99 as f64)),
+        ("p99_sampled_1pct_us".into(), num(pct1_p99 as f64)),
+        ("p99_sampled_100pct_us".into(), num(full_p99 as f64)),
+        ("overhead_1pct_ratio".into(), num(overhead_1pct)),
+        ("overhead_100pct_ratio".into(), num(overhead_100pct)),
+        ("slow_threshold_us".into(), num(slow_threshold_us as f64)),
+        ("slowlog_capture_rate".into(), num(slowlog_capture_rate)),
+    ];
+    for st in Stage::ALL {
+        obs_entries.push((
+            format!("stage_{}_p50_us", st.name()),
+            num(obs_snap.stage_percentile_us(st, 0.5) as f64),
+        ));
+        obs_entries.push((
+            format!("stage_{}_p99_us", st.name()),
+            num(obs_snap.stage_percentile_us(st, 0.99) as f64),
+        ));
+    }
+    merge_bench_json_file("BENCH_serve.json", "observability", obs_entries);
+
     merge_bench_json_file(
         "BENCH_serve.json",
         "serve",
@@ -592,6 +741,7 @@ fn main() {
             ("sent".into(), num(sent as f64)),
             ("ok".into(), num(ok as f64)),
             ("shed_rate".into(), num(shed_rate)),
+            ("server_shed_rate".into(), num(server_shed_rate)),
             ("deadline_rate".into(), num(deadline_rate)),
             ("degraded_fraction".into(), num(degraded_fraction)),
             ("query_p999_us".into(), num(pct(&over_lats, 0.999) as f64)),

@@ -44,6 +44,7 @@ use crate::runtime::{ArtifactMeta, Runtime};
 use super::admission::{AdmissionConfig, LoadController, ServeError};
 use super::engine::MipsEngine;
 use super::metrics::Metrics;
+use super::trace::{QuerySpans, Stage, FLAG_DEGRADED, FLAG_PJRT_HASH};
 
 /// Dynamic-batching + robustness policy.
 #[derive(Clone, Copy, Debug)]
@@ -164,15 +165,23 @@ struct QueryRequest {
     /// Probe budget assigned at admission (full or the degraded budget).
     budget: ProbeBudget,
     degraded: bool,
+    /// Per-stage trace record, threaded through the pipeline and
+    /// returned on the reply.
+    spans: QuerySpans,
     resp: Sender<Result<QueryReply, ServeError>>,
 }
 
 /// A served query: the top-k hits plus whether the query ran under the
-/// degraded budget (surfaced to clients as `degraded: true`).
+/// degraded budget (surfaced to clients as `degraded: true`), the echoed
+/// trace id, and the per-stage span record.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QueryReply {
     pub hits: Vec<ScoredItem>,
     pub degraded: bool,
+    /// Client-supplied or generated trace id, echoed in every reply.
+    pub trace_id: u64,
+    /// Per-stage latency attribution for this query.
+    pub spans: QuerySpans,
 }
 
 enum Msg {
@@ -223,6 +232,20 @@ impl BatcherHandle {
         top_k: usize,
         deadline: Option<Instant>,
     ) -> Result<QueryReply, ServeError> {
+        self.query_traced(vector, top_k, deadline, None)
+    }
+
+    /// [`BatcherHandle::query_deadline`] with an explicit trace id
+    /// (client-supplied; `None` generates one). The reply carries the
+    /// trace id and the per-stage span record with admission wait, queue
+    /// wait, batch assembly, hash, probe, and rerank attributed.
+    pub fn query_traced(
+        &self,
+        vector: Vec<f32>,
+        top_k: usize,
+        deadline: Option<Instant>,
+        trace_id: Option<u64>,
+    ) -> Result<QueryReply, ServeError> {
         let now = Instant::now();
         let deadline = deadline.unwrap_or(now + self.default_deadline);
         if deadline <= now {
@@ -241,9 +264,27 @@ impl BatcherHandle {
         } else {
             (ProbeBudget::full(), false)
         };
+        let trace_id = trace_id.unwrap_or_else(|| self.metrics.tracer.next_trace_id());
+        let mut spans = QuerySpans::with_id(trace_id);
+        if degraded {
+            spans.set_flag(FLAG_DEGRADED);
+        }
+        // Admission wait: ladder evaluation + budget assignment. The
+        // queue push itself is the head of the queue-wait stage.
+        let admission_us = now.elapsed().as_micros() as u64;
+        spans.set_stage(Stage::AdmissionWait, admission_us);
+        self.metrics.record_stage(Stage::AdmissionWait, admission_us);
         let (resp, rx) = mpsc::channel();
-        let req =
-            QueryRequest { vector, top_k, deadline, enqueued: now, budget, degraded, resp };
+        let req = QueryRequest {
+            vector,
+            top_k,
+            deadline,
+            enqueued: now,
+            budget,
+            degraded,
+            spans,
+            resp,
+        };
         match self.tx.try_send(Msg::Query(req)) {
             Ok(()) => self.controller.on_enqueue(),
             Err(TrySendError::Full(_)) => {
@@ -255,6 +296,11 @@ impl BatcherHandle {
             }
         }
         rx.recv().map_err(|_| ServeError::Internal("batcher dropped the request".into()))?
+    }
+
+    /// The shared metrics (tracer, stage histograms, counters).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 
     /// The shared ladder state (level, recent p99).
@@ -405,6 +451,7 @@ impl PjrtBatcher {
             HashBackend::Pjrt { meta, .. } => cfg.max_batch.min(meta.batch).max(1),
             HashBackend::Fused => cfg.max_batch.max(1),
         };
+        let pjrt_primary = matches!(&backend, HashBackend::Pjrt { .. });
 
         let metrics = engine.metrics();
         let controller = Arc::new(LoadController::new(
@@ -564,6 +611,7 @@ impl PjrtBatcher {
                     max_batch,
                     cfg.max_wait,
                     lk,
+                    pjrt_primary,
                 )
             })
             .expect("spawn batcher");
@@ -593,6 +641,7 @@ impl PjrtBatcher {
         max_batch: usize,
         max_wait: Duration,
         lk: usize,
+        pjrt_primary: bool,
     ) {
         // One scratch for the whole loop: probes + reranks are
         // allocation-free at steady state. The f-prefixed buffers back
@@ -601,12 +650,16 @@ impl PjrtBatcher {
         let dim = engine.dim();
         let (mut fqx, mut fxs, mut fcodes) = (Vec::new(), Vec::new(), Vec::new());
         'outer: while let Ok(first) = rx.recv() {
-            let Msg::Query(first) = first else { break };
+            let Msg::Query(mut first) = first else { break };
             controller.on_dequeue();
+            let assembly_start = Instant::now();
+            let qw = first.enqueued.elapsed().as_micros() as u64;
+            first.spans.set_stage(Stage::QueueWait, qw);
+            metrics.record_stage(Stage::QueueWait, qw);
             let mut reqs = vec![first];
             // Close the batch at max_wait, or earlier if the first
             // query's deadline would otherwise expire while waiting.
-            let close = (Instant::now() + max_wait).min(reqs[0].deadline);
+            let close = (assembly_start + max_wait).min(reqs[0].deadline);
             let mut stop_after = false;
             while reqs.len() < max_batch {
                 let now = Instant::now();
@@ -614,8 +667,11 @@ impl PjrtBatcher {
                     break;
                 }
                 match rx.recv_timeout(close - now) {
-                    Ok(Msg::Query(r)) => {
+                    Ok(Msg::Query(mut r)) => {
                         controller.on_dequeue();
+                        let qw = r.enqueued.elapsed().as_micros() as u64;
+                        r.spans.set_stage(Stage::QueueWait, qw);
+                        metrics.record_stage(Stage::QueueWait, qw);
                         reqs.push(r);
                     }
                     Ok(Msg::Shutdown) => {
@@ -655,13 +711,22 @@ impl PjrtBatcher {
                 continue;
             }
             metrics.record_batch(live.len());
+            // Batch assembly: first pop → hash dispatch, shared by every
+            // query in the batch.
+            let assembly_us = assembly_start.elapsed().as_micros() as u64;
+            for req in live.iter_mut() {
+                req.spans.set_stage(Stage::BatchAssembly, assembly_us);
+                metrics.record_stage(Stage::BatchAssembly, assembly_us);
+            }
             let rows: Vec<Vec<f32>> = live.iter().map(|r| r.vector.clone()).collect();
+            let hash_start = Instant::now();
             let (resp, hash_rx) = mpsc::channel();
             let worker_result = if job_tx.send(HashJob { rows: rows.clone(), resp }).is_err() {
                 None
             } else {
                 hash_rx.recv().ok()
             };
+            let from_worker = worker_result.is_some();
             let hashed = match worker_result {
                 Some(res) => res,
                 None => {
@@ -677,9 +742,16 @@ impl PjrtBatcher {
                     fused_hash_batch(&engine, &rows, &mut fqx, &mut fxs, &mut fcodes)
                 }
             };
+            let hash_us = hash_start.elapsed().as_micros() as u64;
+            // The hash ran on PJRT iff that backend is the primary, the
+            // worker answered, and the breaker did not trip on this batch.
+            let pjrt_served = pjrt_primary
+                && from_worker
+                && BreakerState::from_u8(breaker.load(Ordering::Relaxed))
+                    == BreakerState::Closed;
             match hashed {
                 Ok(code_rows) => {
-                    for (req, codes) in live.into_iter().zip(code_rows) {
+                    for (mut req, codes) in live.into_iter().zip(code_rows) {
                         if Instant::now() >= req.deadline {
                             metrics.record_deadline_exceeded();
                             let _ = req.resp.send(Err(ServeError::DeadlineExceeded(
@@ -687,20 +759,33 @@ impl PjrtBatcher {
                             )));
                             continue;
                         }
+                        req.spans.set_stage(Stage::Hash, hash_us);
+                        metrics.record_stage(Stage::Hash, hash_us);
+                        if pjrt_served {
+                            req.spans.set_flag(FLAG_PJRT_HASH);
+                        }
                         let hits = engine
-                            .query_with_codes_budgeted_into(
+                            .query_with_codes_traced_into(
                                 &req.vector,
                                 &codes[..lk],
                                 req.top_k,
                                 req.budget,
+                                &mut req.spans,
                                 &mut scratch,
                             )
                             .to_vec();
                         if req.degraded {
                             metrics.record_degraded();
                         }
-                        controller.record_latency(req.enqueued.elapsed().as_micros() as u64);
-                        let _ = req.resp.send(Ok(QueryReply { hits, degraded: req.degraded }));
+                        let total_us = req.enqueued.elapsed().as_micros() as u64;
+                        req.spans.total_us = total_us;
+                        controller.record_latency(total_us);
+                        let _ = req.resp.send(Ok(QueryReply {
+                            hits,
+                            degraded: req.degraded,
+                            trace_id: req.spans.trace_id,
+                            spans: req.spans,
+                        }));
                     }
                 }
                 Err(e) => {

@@ -15,6 +15,7 @@ use crate::index::{
 use crate::lsh::L2LshFamily;
 
 use super::metrics::Metrics;
+use super::trace::{QuerySpans, Stage, FLAG_LIVE};
 
 /// What the engine serves: a frozen index (heap or mmap) or the live
 /// mutable tier layered over one.
@@ -353,22 +354,10 @@ impl<S: Storage> MipsEngine<S> {
         budget: ProbeBudget,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
-        let t0 = Instant::now();
-        match &self.core {
-            EngineCore::Frozen(index) => {
-                index.candidates_budgeted_into(query, budget, s);
-                let n_cands = s.candidates().len();
-                let out = index.rerank_into(query, top_k, s);
-                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
-                out
-            }
-            EngineCore::Live(live) => {
-                let n_top = live.query_budgeted_into(query, top_k, budget, s).len();
-                let n_cands = s.candidates().len();
-                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
-                &s.top[..n_top]
-            }
-        }
+        let mut spans = QuerySpans::default();
+        let out = self.query_traced_into(query, top_k, budget, &mut spans, s);
+        self.metrics.tracer.offer(&spans);
+        out
     }
 
     /// Budgeted code-fed re-entry (the degraded batcher path): the hash
@@ -381,22 +370,142 @@ impl<S: Storage> MipsEngine<S> {
         budget: ProbeBudget,
         s: &'s mut QueryScratch,
     ) -> &'s [ScoredItem] {
+        let mut spans = QuerySpans::default();
+        let out = self.query_with_codes_traced_into(query, codes, top_k, budget, &mut spans, s);
+        self.metrics.tracer.offer(&spans);
+        out
+    }
+
+    /// [`MipsEngine::query_budgeted_into`] with per-stage attribution:
+    /// probe and rerank timings, candidate counts, and scheme/kind
+    /// context land in `spans` (and in the per-stage [`Metrics`]
+    /// histograms). On a live engine the whole query is attributed to
+    /// the probe stage — the live tier's base+delta+rerank pipeline is
+    /// opaque here — and the span carries `FLAG_LIVE`. Allocation-free:
+    /// the span is written in place and only monotonic clock reads are
+    /// added over the untraced path.
+    pub fn query_traced_into<'s>(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+        spans: &mut QuerySpans,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
         let t0 = Instant::now();
+        self.fill_span_context(spans, top_k, budget);
         match &self.core {
             EngineCore::Frozen(index) => {
-                index.candidates_from_codes_budgeted_into(codes, budget, s);
+                index.candidates_budgeted_into(query, budget, s);
+                let probe_us = t0.elapsed().as_micros() as u64;
                 let n_cands = s.candidates().len();
+                let t1 = Instant::now();
                 let out = index.rerank_into(query, top_k, s);
+                let rerank_us = t1.elapsed().as_micros() as u64;
+                self.finish_frozen_span(spans, probe_us, rerank_us, n_cands, out.len());
                 self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
                 out
             }
             EngineCore::Live(live) => {
-                let n_top = live.query_from_codes_budgeted_into(codes, query, top_k, budget, s).len();
+                let n_top = live.query_budgeted_into(query, top_k, budget, s).len();
                 let n_cands = s.candidates().len();
+                self.finish_live_span(spans, t0.elapsed().as_micros() as u64, n_cands, n_top);
                 self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
                 &s.top[..n_top]
             }
         }
+    }
+
+    /// [`MipsEngine::query_with_codes_budgeted_into`] with per-stage
+    /// attribution (see [`MipsEngine::query_traced_into`]); the hash
+    /// stage is not timed here because it already happened batch-wide
+    /// in the batcher.
+    pub fn query_with_codes_traced_into<'s>(
+        &self,
+        query: &[f32],
+        codes: &[i32],
+        top_k: usize,
+        budget: ProbeBudget,
+        spans: &mut QuerySpans,
+        s: &'s mut QueryScratch,
+    ) -> &'s [ScoredItem] {
+        let t0 = Instant::now();
+        self.fill_span_context(spans, top_k, budget);
+        match &self.core {
+            EngineCore::Frozen(index) => {
+                index.candidates_from_codes_budgeted_into(codes, budget, s);
+                let probe_us = t0.elapsed().as_micros() as u64;
+                let n_cands = s.candidates().len();
+                let t1 = Instant::now();
+                let out = index.rerank_into(query, top_k, s);
+                let rerank_us = t1.elapsed().as_micros() as u64;
+                self.finish_frozen_span(spans, probe_us, rerank_us, n_cands, out.len());
+                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+                out
+            }
+            EngineCore::Live(live) => {
+                let n_top =
+                    live.query_from_codes_budgeted_into(codes, query, top_k, budget, s).len();
+                let n_cands = s.candidates().len();
+                self.finish_live_span(spans, t0.elapsed().as_micros() as u64, n_cands, n_top);
+                self.metrics.record_query(t0.elapsed().as_micros() as u64, n_cands);
+                &s.top[..n_top]
+            }
+        }
+    }
+
+    /// Stamp scheme/kind/top-k/budget context onto a span.
+    fn fill_span_context(&self, spans: &mut QuerySpans, top_k: usize, budget: ProbeBudget) {
+        spans.scheme = match self.scheme() {
+            MipsHashScheme::L2Alsh => 0,
+            MipsHashScheme::SignAlsh => 1,
+            MipsHashScheme::SimpleLsh => 2,
+        };
+        spans.kind = match &self.core {
+            EngineCore::Frozen(index) => u8::from(index.as_banded().is_some()),
+            EngineCore::Live(live) => u8::from(live.n_bands() > 1),
+        };
+        spans.top_k = top_k.min(u16::MAX as usize) as u16;
+        spans.budget_tables = budget.max_tables.min(u16::MAX as usize) as u16;
+    }
+
+    /// Record the frozen path's probe/rerank split into the span and the
+    /// per-stage histograms.
+    fn finish_frozen_span(
+        &self,
+        spans: &mut QuerySpans,
+        probe_us: u64,
+        rerank_us: u64,
+        n_cands: usize,
+        n_hits: usize,
+    ) {
+        spans.set_stage(Stage::Probe, probe_us);
+        spans.set_stage(Stage::Rerank, rerank_us);
+        spans.candidates_probed += n_cands as u64;
+        spans.candidates_reranked += n_cands as u64;
+        spans.hits = n_hits.min(u16::MAX as usize) as u16;
+        spans.total_us = spans.total_us.max(probe_us + rerank_us);
+        self.metrics.record_stage(Stage::Probe, probe_us);
+        self.metrics.record_stage(Stage::Rerank, rerank_us);
+        self.metrics.record_candidate_flow(n_cands as u64, n_cands as u64);
+    }
+
+    /// Record the live path's single opaque probe span.
+    fn finish_live_span(
+        &self,
+        spans: &mut QuerySpans,
+        probe_us: u64,
+        n_cands: usize,
+        n_hits: usize,
+    ) {
+        spans.set_stage(Stage::Probe, probe_us);
+        spans.set_flag(FLAG_LIVE);
+        spans.candidates_probed += n_cands as u64;
+        spans.candidates_reranked += n_cands as u64;
+        spans.hits = n_hits.min(u16::MAX as usize) as u16;
+        spans.total_us = spans.total_us.max(probe_us);
+        self.metrics.record_stage(Stage::Probe, probe_us);
+        self.metrics.record_candidate_flow(n_cands as u64, n_cands as u64);
     }
 
     /// Allocating convenience wrapper over [`MipsEngine::query_into`]

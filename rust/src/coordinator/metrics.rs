@@ -1,4 +1,4 @@
-//! Serving metrics: counters + a log-bucketed latency histogram, all
+//! Serving metrics: counters + log-bucketed latency histograms, all
 //! lock-free atomics so the hot path never blocks on observability.
 //!
 //! Besides the query/batch/error counters the serving tier records its
@@ -8,20 +8,31 @@
 //! the fused CPU path), and a live `queue_depth` gauge the
 //! [`super::admission::LoadController`] reads as its fill signal.
 //!
+//! Since PR 9 the end-to-end histogram is decomposed per pipeline stage:
+//! one [`LatencyHist`] per [`Stage`] plus candidate-flow counters, fed by
+//! the tracing layer ([`super::trace`]) at the point each stage is
+//! measured, and a [`TraceRecorder`] holding the sampled-span ring and
+//! slow-query log. Percentile estimates interpolate linearly within the
+//! winning log2 bucket, so a 1900µs p99 reports ≈1900 rather than
+//! snapping to the bucket lower bound of 1024.
+//!
 //! A mutable engine additionally publishes the live-tier gauges
 //! (`delta_items`, `tombstones`, `compactions`, `wal_bytes`,
 //! `last_compaction_ms`) via [`Metrics::record_live_stats`] — refreshed
 //! by [`super::MipsEngine::metrics_snapshot`] so background-compactor
 //! progress is visible without an intervening mutation.
 
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
+use super::trace::{Stage, TraceRecorder, N_STAGES};
 use crate::index::LiveStats;
 
 /// Number of log2 latency buckets. Bucket 0 covers `[0, 2)` µs (the
 /// sub-microsecond samples — explicitly, not via clamping); bucket
 /// `i ≥ 1` covers `[2^i, 2^(i+1))` µs.
-const N_BUCKETS: usize = 24;
+pub const N_BUCKETS: usize = 24;
 
 /// Process-wide serving metrics.
 #[derive(Debug, Default)]
@@ -51,6 +62,10 @@ pub struct Metrics {
     /// Quarantined replicas repaired (rebuilt + re-verified) and
     /// re-admitted through their breaker.
     pub replica_repairs: AtomicU64,
+    /// Candidates produced by the probe stage (candidate-flow counter).
+    pub candidates_probed: AtomicU64,
+    /// Candidates scored by the exact rerank (candidate-flow counter).
+    pub candidates_reranked: AtomicU64,
     /// Live admission-queue depth (gauge, not a counter).
     queue_depth: AtomicU64,
     /// Live-tier gauges (all zero on a frozen engine): rows in the
@@ -63,6 +78,10 @@ pub struct Metrics {
     pub last_compaction_ms: AtomicU64,
     latency_us: [AtomicU64; N_BUCKETS],
     latency_sum_us: AtomicU64,
+    /// Per-stage latency histograms, indexed by `Stage as usize`.
+    stages: [LatencyHist; N_STAGES],
+    /// Sampled span ring + slow-query log for this front end.
+    pub tracer: TraceRecorder,
 }
 
 impl Metrics {
@@ -76,14 +95,7 @@ impl Metrics {
         self.queries.fetch_add(1, Ordering::Relaxed);
         self.candidates.fetch_add(n_candidates as u64, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
-        // `latency_us < 2` (including 0) lands in bucket 0 explicitly;
-        // everything else in its log2 bucket, clamped to the last one.
-        let bucket = if latency_us < 2 {
-            0
-        } else {
-            (63 - latency_us.leading_zeros() as usize).min(N_BUCKETS - 1)
-        };
-        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_us[bucket_of(latency_us)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one dispatched batch of `n` queries.
@@ -154,6 +166,24 @@ impl Metrics {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Record one stage timing into that stage's aggregate histogram.
+    /// Called by whichever component *measures* the stage, at measure
+    /// time, so each stage is counted exactly once per query.
+    pub fn record_stage(&self, stage: Stage, us: u64) {
+        self.stages[stage as usize].record(us);
+    }
+
+    /// Aggregate histogram for one pipeline stage.
+    pub fn stage_hist(&self, stage: Stage) -> &LatencyHist {
+        &self.stages[stage as usize]
+    }
+
+    /// Record the candidate flow of one query (probed → reranked).
+    pub fn record_candidate_flow(&self, probed: u64, reranked: u64) {
+        self.candidates_probed.fetch_add(probed, Ordering::Relaxed);
+        self.candidates_reranked.fetch_add(reranked, Ordering::Relaxed);
+    }
+
     /// Publish the live tier's point-in-time counters as gauges.
     pub fn record_live_stats(&self, s: &LiveStats) {
         self.delta_items.store(s.delta_items, Ordering::Relaxed);
@@ -166,8 +196,15 @@ impl Metrics {
     /// Consistent-enough snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
-        let hist: Vec<u64> =
-            self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let mut latency_buckets = [0u64; N_BUCKETS];
+        for (dst, b) in latency_buckets.iter_mut().zip(self.latency_us.iter()) {
+            *dst = b.load(Ordering::Relaxed);
+        }
+        let mut stage_buckets = [[0u64; N_BUCKETS]; N_STAGES];
+        for (dst, h) in stage_buckets.iter_mut().zip(self.stages.iter()) {
+            *dst = h.buckets_snapshot();
+        }
+        let latency_sum_us = self.latency_sum_us.load(Ordering::Relaxed);
         MetricsSnapshot {
             queries,
             batches: self.batches.load(Ordering::Relaxed),
@@ -182,6 +219,8 @@ impl Metrics {
             partial_replies: self.partial_replies.load(Ordering::Relaxed),
             replica_quarantines: self.replica_quarantines.load(Ordering::Relaxed),
             replica_repairs: self.replica_repairs.load(Ordering::Relaxed),
+            candidates_probed: self.candidates_probed.load(Ordering::Relaxed),
+            candidates_reranked: self.candidates_reranked.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             delta_items: self.delta_items.load(Ordering::Relaxed),
             tombstones: self.tombstones.load(Ordering::Relaxed),
@@ -189,12 +228,15 @@ impl Metrics {
             wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
             last_compaction_ms: self.last_compaction_ms.load(Ordering::Relaxed),
             mean_latency_us: if queries > 0 {
-                self.latency_sum_us.load(Ordering::Relaxed) as f64 / queries as f64
+                latency_sum_us as f64 / queries as f64
             } else {
                 0.0
             },
-            p50_latency_us: percentile(&hist, 0.50),
-            p99_latency_us: percentile(&hist, 0.99),
+            p50_latency_us: percentile(&latency_buckets, 0.50),
+            p99_latency_us: percentile(&latency_buckets, 0.99),
+            latency_sum_us,
+            latency_buckets,
+            stage_buckets,
         }
     }
 }
@@ -216,12 +258,7 @@ impl LatencyHist {
     }
 
     pub fn record(&self, latency_us: u64) {
-        let bucket = if latency_us < 2 {
-            0
-        } else {
-            (63 - latency_us.leading_zeros() as usize).min(N_BUCKETS - 1)
-        };
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_of(latency_us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -229,27 +266,56 @@ impl LatencyHist {
         self.count.load(Ordering::Relaxed)
     }
 
-    /// Lower bound (µs) of the bucket holding the `p`-quantile; 0 when
-    /// nothing has been recorded.
+    /// Estimate of the `p`-quantile in µs (linear interpolation within
+    /// the winning log2 bucket); 0 when nothing has been recorded.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let hist: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        percentile(&hist, p)
+        percentile(&self.buckets_snapshot(), p)
+    }
+
+    /// Point-in-time copy of the bucket counts.
+    pub fn buckets_snapshot(&self) -> [u64; N_BUCKETS] {
+        let mut out = [0u64; N_BUCKETS];
+        for (dst, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *dst = b.load(Ordering::Relaxed);
+        }
+        out
     }
 }
 
+/// Log2 bucket index shared by every histogram in this module.
+fn bucket_of(latency_us: u64) -> usize {
+    // `latency_us < 2` (including 0) lands in bucket 0 explicitly;
+    // everything else in its log2 bucket, clamped to the last one.
+    if latency_us < 2 {
+        0
+    } else {
+        (63 - latency_us.leading_zeros() as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Quantile estimate over log2 buckets with linear interpolation inside
+/// the winning bucket (midpoint-rank convention). Bucket 0 is `[0, 2)`
+/// and reports its true lower bound of 0; every other bucket `[2^i,
+/// 2^(i+1))` distributes its count uniformly, so the estimate never
+/// snaps to a power of two.
 fn percentile(hist: &[u64], p: f64) -> u64 {
     let total: u64 = hist.iter().sum();
     if total == 0 {
         return 0;
     }
-    let target = ((total as f64) * p).ceil() as u64;
-    let mut seen = 0;
+    let target = (((total as f64) * p).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
     for (i, &c) in hist.iter().enumerate() {
-        seen += c;
-        if seen >= target {
-            // Lower bound of the bucket; bucket 0 is [0, 2) µs.
-            return if i == 0 { 0 } else { 1u64 << i };
+        if c > 0 && seen + c >= target {
+            if i == 0 {
+                return 0;
+            }
+            let lower = 1u64 << i;
+            let rank = (target - seen) as f64 - 0.5;
+            let est = lower as f64 + lower as f64 * (rank / c as f64);
+            return (est as u64).clamp(lower, (lower << 1) - 1);
         }
+        seen += c;
     }
     1u64 << (hist.len() - 1)
 }
@@ -270,6 +336,8 @@ pub struct MetricsSnapshot {
     pub partial_replies: u64,
     pub replica_quarantines: u64,
     pub replica_repairs: u64,
+    pub candidates_probed: u64,
+    pub candidates_reranked: u64,
     pub queue_depth: u64,
     pub delta_items: u64,
     pub tombstones: u64,
@@ -279,6 +347,12 @@ pub struct MetricsSnapshot {
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
+    /// Sum of all recorded end-to-end latencies (µs).
+    pub latency_sum_us: u64,
+    /// Raw end-to-end histogram buckets (log2, see [`N_BUCKETS`]).
+    pub latency_buckets: [u64; N_BUCKETS],
+    /// Raw per-stage histogram buckets, indexed by `Stage as usize`.
+    pub stage_buckets: [[u64; N_BUCKETS]; N_STAGES],
 }
 
 impl MetricsSnapshot {
@@ -289,6 +363,207 @@ impl MetricsSnapshot {
         } else {
             self.batched_queries as f64 / self.batches as f64
         }
+    }
+
+    /// Observations recorded for one pipeline stage.
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        self.stage_buckets[stage as usize].iter().sum()
+    }
+
+    /// Interpolated `p`-quantile (µs) for one pipeline stage.
+    pub fn stage_percentile_us(&self, stage: Stage, p: f64) -> u64 {
+        percentile(&self.stage_buckets[stage as usize], p)
+    }
+
+    /// Interval view: everything that happened after `earlier` was taken.
+    /// Counters (including histogram buckets) subtract saturating, so a
+    /// restarted or wrapped counter yields 0 rather than a huge bogus
+    /// delta; gauges (`queue_depth` and the live-tier gauges) keep this
+    /// snapshot's latest value since "the queue depth that happened in
+    /// the interval" is not a meaningful quantity. Latency statistics
+    /// (mean/p50/p99) are recomputed from the diffed buckets, so they
+    /// describe only the interval's queries.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let queries = self.queries.saturating_sub(earlier.queries);
+        let latency_sum_us = self.latency_sum_us.saturating_sub(earlier.latency_sum_us);
+        let mut latency_buckets = [0u64; N_BUCKETS];
+        for (i, dst) in latency_buckets.iter_mut().enumerate() {
+            *dst = self.latency_buckets[i].saturating_sub(earlier.latency_buckets[i]);
+        }
+        let mut stage_buckets = [[0u64; N_BUCKETS]; N_STAGES];
+        for (s, dst) in stage_buckets.iter_mut().enumerate() {
+            for (i, b) in dst.iter_mut().enumerate() {
+                *b = self.stage_buckets[s][i].saturating_sub(earlier.stage_buckets[s][i]);
+            }
+        }
+        MetricsSnapshot {
+            queries,
+            batches: self.batches.saturating_sub(earlier.batches),
+            batched_queries: self.batched_queries.saturating_sub(earlier.batched_queries),
+            candidates: self.candidates.saturating_sub(earlier.candidates),
+            errors: self.errors.saturating_sub(earlier.errors),
+            shed: self.shed.saturating_sub(earlier.shed),
+            deadline_exceeded: self.deadline_exceeded.saturating_sub(earlier.deadline_exceeded),
+            degraded_queries: self.degraded_queries.saturating_sub(earlier.degraded_queries),
+            pjrt_fallbacks: self.pjrt_fallbacks.saturating_sub(earlier.pjrt_fallbacks),
+            hedge_fires: self.hedge_fires.saturating_sub(earlier.hedge_fires),
+            partial_replies: self.partial_replies.saturating_sub(earlier.partial_replies),
+            replica_quarantines: self
+                .replica_quarantines
+                .saturating_sub(earlier.replica_quarantines),
+            replica_repairs: self.replica_repairs.saturating_sub(earlier.replica_repairs),
+            candidates_probed: self.candidates_probed.saturating_sub(earlier.candidates_probed),
+            candidates_reranked: self
+                .candidates_reranked
+                .saturating_sub(earlier.candidates_reranked),
+            // Gauges: keep the latest observed value.
+            queue_depth: self.queue_depth,
+            delta_items: self.delta_items,
+            tombstones: self.tombstones,
+            wal_bytes: self.wal_bytes,
+            last_compaction_ms: self.last_compaction_ms,
+            // `compactions` counts compactions run, so it diffs like a
+            // counter even though the live tier publishes it as a gauge.
+            compactions: self.compactions.saturating_sub(earlier.compactions),
+            mean_latency_us: if queries > 0 {
+                latency_sum_us as f64 / queries as f64
+            } else {
+                0.0
+            },
+            p50_latency_us: percentile(&latency_buckets, 0.50),
+            p99_latency_us: percentile(&latency_buckets, 0.99),
+            latency_sum_us,
+            latency_buckets,
+            stage_buckets,
+        }
+    }
+
+    /// Queries per second over a measured wall-clock interval (pair with
+    /// [`MetricsSnapshot::delta`]).
+    pub fn qps(&self, wall: Duration) -> f64 {
+        let secs = wall.as_secs_f64();
+        if secs > 0.0 {
+            self.queries as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of offered queries rejected at admission, where offered =
+    /// served + shed + deadline-exceeded + errored.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.queries + self.shed + self.deadline_exceeded + self.errors;
+        if offered > 0 {
+            self.shed as f64 / offered as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// The full snapshot in Prometheus text exposition format
+    /// (version 0.0.4): counters as `_total`, gauges bare, the
+    /// end-to-end histogram with cumulative `le` buckets, and per-stage
+    /// quantile summaries.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counters: [(&str, u64, &str); 16] = [
+            ("alsh_queries_total", self.queries, "Queries served."),
+            ("alsh_batches_total", self.batches, "Hash batches dispatched."),
+            ("alsh_batched_queries_total", self.batched_queries, "Queries carried by batches."),
+            ("alsh_candidates_total", self.candidates, "Candidates produced (legacy counter)."),
+            (
+                "alsh_candidates_probed_total",
+                self.candidates_probed,
+                "Candidates produced by the probe stage.",
+            ),
+            (
+                "alsh_candidates_reranked_total",
+                self.candidates_reranked,
+                "Candidates scored by the exact rerank.",
+            ),
+            ("alsh_errors_total", self.errors, "Queries that failed."),
+            ("alsh_shed_total", self.shed, "Queries rejected at admission."),
+            (
+                "alsh_deadline_exceeded_total",
+                self.deadline_exceeded,
+                "Queries expired before a result.",
+            ),
+            (
+                "alsh_degraded_queries_total",
+                self.degraded_queries,
+                "Queries served under a reduced probe budget.",
+            ),
+            (
+                "alsh_pjrt_fallbacks_total",
+                self.pjrt_fallbacks,
+                "Batches served by the fused CPU fallback.",
+            ),
+            ("alsh_hedge_fires_total", self.hedge_fires, "Hedged backup dispatches."),
+            (
+                "alsh_partial_replies_total",
+                self.partial_replies,
+                "Replies with partial shard coverage.",
+            ),
+            (
+                "alsh_replica_quarantines_total",
+                self.replica_quarantines,
+                "Replicas quarantined on checksum failure.",
+            ),
+            (
+                "alsh_replica_repairs_total",
+                self.replica_repairs,
+                "Quarantined replicas repaired and re-admitted.",
+            ),
+            ("alsh_compactions_total", self.compactions, "Live-tier compactions run."),
+        ];
+        for (name, value, help) in counters {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        let gauges: [(&str, u64, &str); 5] = [
+            ("alsh_queue_depth", self.queue_depth, "Live admission-queue depth."),
+            ("alsh_delta_items", self.delta_items, "Rows in the mutable delta."),
+            ("alsh_tombstones", self.tombstones, "Dead rows awaiting compaction."),
+            ("alsh_wal_bytes", self.wal_bytes, "Current WAL length in bytes."),
+            (
+                "alsh_last_compaction_ms",
+                self.last_compaction_ms,
+                "Wall time of the last compaction.",
+            ),
+        ];
+        for (name, value, help) in gauges {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        let _ = writeln!(out, "# HELP alsh_latency_us End-to-end query latency.");
+        let _ = writeln!(out, "# TYPE alsh_latency_us histogram");
+        let mut cumulative = 0u64;
+        for (i, &c) in self.latency_buckets.iter().enumerate() {
+            cumulative += c;
+            if i == N_BUCKETS - 1 {
+                let _ = writeln!(out, "alsh_latency_us_bucket{{le=\"+Inf\"}} {cumulative}");
+            } else {
+                let le = 1u64 << (i + 1);
+                let _ = writeln!(out, "alsh_latency_us_bucket{{le=\"{le}\"}} {cumulative}");
+            }
+        }
+        let _ = writeln!(out, "alsh_latency_us_sum {}", self.latency_sum_us);
+        let _ = writeln!(out, "alsh_latency_us_count {cumulative}");
+        let _ = writeln!(out, "# HELP alsh_stage_latency_us Per-stage latency attribution.");
+        let _ = writeln!(out, "# TYPE alsh_stage_latency_us summary");
+        for stage in Stage::ALL {
+            let name = stage.name();
+            let p50 = self.stage_percentile_us(stage, 0.50);
+            let p99 = self.stage_percentile_us(stage, 0.99);
+            let n = self.stage_count(stage);
+            let _ = writeln!(out, "alsh_stage_latency_us{{stage=\"{name}\",quantile=\"0.5\"}} {p50}");
+            let _ =
+                writeln!(out, "alsh_stage_latency_us{{stage=\"{name}\",quantile=\"0.99\"}} {p99}");
+            let _ = writeln!(out, "alsh_stage_latency_us_count{{stage=\"{name}\"}} {n}");
+        }
+        out
     }
 }
 
@@ -320,6 +595,35 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_interpolate_within_bucket() {
+        // Uniform 1..=1000µs: the true p50 is 500, deep inside bucket 8
+        // ([256, 512)). The interpolated estimate should land near it
+        // instead of snapping to the bucket lower bound.
+        let m = Metrics::new();
+        for i in 0..1000u64 {
+            m.record_query(i + 1, 0);
+        }
+        let s = m.snapshot();
+        assert!(
+            (495..=505).contains(&s.p50_latency_us),
+            "interpolated p50 {} should be ≈500",
+            s.p50_latency_us
+        );
+        // A point mass at 1900µs (bucket 10, [1024, 2048)): the p99 must
+        // stay inside the bucket, not report the lower bound 1024.
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_query(1900, 0);
+        }
+        let s = m.snapshot();
+        assert!(
+            s.p99_latency_us > 1024 && s.p99_latency_us < 2048,
+            "p99 {} should interpolate within [1024, 2048)",
+            s.p99_latency_us
+        );
+    }
+
+    #[test]
     fn batch_occupancy() {
         let m = Metrics::new();
         m.record_batch(10);
@@ -347,11 +651,13 @@ mod tests {
         assert_eq!(s.queries, 2);
         assert_eq!(s.p50_latency_us, 0);
         assert_eq!(s.p99_latency_us, 0);
-        // 2µs is the first sample outside bucket 0.
+        // 2µs is the first sample outside bucket 0: the p99 moves into
+        // bucket 1 ([2, 4)µs) and interpolates within it.
         m.record_query(2, 0);
         m.record_query(2, 0);
         m.record_query(2, 0);
-        assert_eq!(m.snapshot().p99_latency_us, 2);
+        let p99 = m.snapshot().p99_latency_us;
+        assert!((2..4).contains(&p99), "p99 {p99} should sit in bucket 1 [2, 4)");
     }
 
     #[test]
@@ -436,5 +742,136 @@ mod tests {
         assert_eq!(s.compactions, 2);
         assert_eq!(s.wal_bytes, 0);
         assert_eq!(s.last_compaction_ms, 9);
+    }
+
+    #[test]
+    fn stage_hists_record_and_report() {
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_stage(Stage::Hash, 800);
+            m.record_stage(Stage::Probe, 100);
+            m.record_stage(Stage::Rerank, 0);
+        }
+        m.record_candidate_flow(5000, 1200);
+        let s = m.snapshot();
+        assert_eq!(s.stage_count(Stage::Hash), 100);
+        assert_eq!(s.stage_count(Stage::Merge), 0, "unfed stage stays empty");
+        let hash_p99 = s.stage_percentile_us(Stage::Hash, 0.99);
+        assert!((512..1024).contains(&hash_p99), "hash p99 {hash_p99} in bucket 9");
+        assert_eq!(s.stage_percentile_us(Stage::Rerank, 0.99), 0);
+        assert!(hash_p99 > s.stage_percentile_us(Stage::Probe, 0.99));
+        assert_eq!(s.candidates_probed, 5000);
+        assert_eq!(s.candidates_reranked, 1200);
+        // The standalone accessor matches the snapshot view.
+        assert_eq!(m.stage_hist(Stage::Hash).count(), 100);
+    }
+
+    #[test]
+    fn delta_subtracts_counters_and_recomputes_latency() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_query(100, 3);
+        }
+        m.record_shed();
+        let earlier = m.snapshot();
+        for _ in 0..10 {
+            m.record_query(6400, 7);
+        }
+        m.record_shed();
+        m.record_shed();
+        m.record_stage(Stage::Hash, 6000);
+        let d = m.snapshot().delta(&earlier);
+        assert_eq!(d.queries, 10);
+        assert_eq!(d.candidates, 70);
+        assert_eq!(d.shed, 2);
+        assert_eq!(d.stage_count(Stage::Hash), 1);
+        // Interval latency reflects only the 6400µs queries — the earlier
+        // 100µs population is subtracted out of the buckets.
+        assert!(
+            d.p50_latency_us >= 4096,
+            "interval p50 {} must ignore pre-interval queries",
+            d.p50_latency_us
+        );
+        assert!((d.mean_latency_us - 6400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_is_wrap_safe_and_keeps_gauges() {
+        let m = Metrics::new();
+        m.record_query(50, 0);
+        m.record_queue_push();
+        m.record_live_stats(&LiveStats {
+            delta_items: 7,
+            tombstones: 1,
+            compactions: 4,
+            wal_bytes: 512,
+            last_compaction_ms: 3,
+            generation: 1,
+            n_items: 10,
+        });
+        let earlier = m.snapshot();
+        // A "later" snapshot from a fresh process (counter reset): every
+        // diffed counter saturates to 0 instead of wrapping to ~u64::MAX.
+        let fresh = Metrics::new();
+        fresh.record_queue_push();
+        fresh.record_queue_push();
+        let d = fresh.snapshot().delta(&earlier);
+        assert_eq!(d.queries, 0);
+        assert_eq!(d.latency_sum_us, 0);
+        assert_eq!(d.p99_latency_us, 0);
+        assert!(d.latency_buckets.iter().all(|&b| b == 0));
+        // Gauges keep the latest snapshot's value, not a difference.
+        assert_eq!(d.queue_depth, 2);
+        assert_eq!(d.delta_items, 0, "fresh process reports its own gauge");
+        // And on the same process, gauges still read latest.
+        let d2 = m.snapshot().delta(&earlier);
+        assert_eq!(d2.queue_depth, 1);
+        assert_eq!(d2.delta_items, 7);
+        assert_eq!(d2.compactions, 0, "compactions diffs like a counter");
+    }
+
+    #[test]
+    fn qps_and_shed_rate() {
+        let m = Metrics::new();
+        for _ in 0..80 {
+            m.record_query(10, 0);
+        }
+        for _ in 0..20 {
+            m.record_shed();
+        }
+        let s = m.snapshot();
+        assert!((s.qps(Duration::from_secs(2)) - 40.0).abs() < 1e-9);
+        assert!((s.shed_rate() - 0.2).abs() < 1e-9);
+        assert_eq!(Metrics::new().snapshot().shed_rate(), 0.0);
+        assert_eq!(s.qps(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn prometheus_text_exposition() {
+        let m = Metrics::new();
+        m.record_query(100, 5);
+        m.record_query(3000, 5);
+        m.record_shed();
+        m.record_stage(Stage::Hash, 900);
+        m.record_candidate_flow(10, 4);
+        let text = m.snapshot().prometheus_text();
+        assert!(text.contains("# TYPE alsh_queries_total counter"));
+        assert!(text.contains("alsh_queries_total 2"));
+        assert!(text.contains("alsh_shed_total 1"));
+        assert!(text.contains("# TYPE alsh_queue_depth gauge"));
+        assert!(text.contains("# TYPE alsh_latency_us histogram"));
+        assert!(text.contains("alsh_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("alsh_latency_us_sum 3100"));
+        assert!(text.contains("alsh_latency_us_count 2"));
+        assert!(text.contains("alsh_stage_latency_us{stage=\"hash\",quantile=\"0.99\"}"));
+        assert!(text.contains("alsh_stage_latency_us_count{stage=\"hash\"} 1"));
+        assert!(text.contains("alsh_candidates_probed_total 10"));
+        // Cumulative le buckets are monotone non-decreasing.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("alsh_latency_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone cumulative bucket: {line}");
+            last = v;
+        }
     }
 }

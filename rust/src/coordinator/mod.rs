@@ -103,6 +103,48 @@
 //! through its breaker. Faults for all of this are injectable per
 //! member with [`ShardFaultPlan`] (stall windows, crash-on-query,
 //! on-disk corruption bursts).
+//!
+//! # Observability: end-to-end query tracing
+//!
+//! Answering "*why was this query slow?*" takes more than a total-latency
+//! histogram. Every query now carries a [`QuerySpans`] — a fixed-size,
+//! heap-free record of per-stage wall time — through its whole server-side
+//! life, attributed at these stages ([`Stage`]):
+//!
+//! ```text
+//! admission_wait → queue_wait → batch_assembly → hash → probe → rerank
+//!                  shard_wait → merge                      (routed path)
+//!                  reply_write                              (socket path)
+//! ```
+//!
+//! Each stage is timed exactly once, by the component that measures it:
+//! the batcher stamps admission/queue/assembly/hash, the engine stamps
+//! probe/rerank (plus candidate-flow counts), the router stamps
+//! shard_wait/merge and absorbs the winning replica's probe/rerank, and
+//! the connection loop stamps reply_write after the bytes hit the
+//! socket. The same values feed per-stage [`LatencyHist`]s in
+//! [`Metrics`], so the `metrics` command reports stage p50/p99 without
+//! any sampling enabled.
+//!
+//! **Span capture.** [`TraceRecorder`] (one per [`Metrics`]) holds two
+//! lock-free seqlock rings: a *sampled* ring fed 1-in-N
+//! (`sample_every`), and a *slow-query log* that captures **every**
+//! query whose total exceeds `slow_threshold_us` (marked
+//! `FLAG_SLOW`, with `dominant_stage` naming the guilty stage). Both
+//! default **off**; the `trace` command flips them at runtime and
+//! drains the sampled ring, `slowlog` drains the slow ring. Writers
+//! never block and never allocate — with both knobs off an offer is
+//! three relaxed atomic ops, so the hot path keeps its zero-allocation
+//! contract (enforced by the `zero_alloc` test and the serve
+//! benchmark's overhead ratchet: ≤5% p99 at 1-in-100 sampling).
+//!
+//! **Exposition.** `metrics` (JSON, now with a `stages` breakdown and
+//! candidate-flow counters), `metrics_prom` (Prometheus text format
+//! 0.0.4: counters, gauges, the full latency histogram with cumulative
+//! buckets, and per-stage quantile summaries), `trace`, and `slowlog`
+//! are served inline on both front ends. Every query reply echoes its
+//! `trace_id` (client-supplied or server-assigned) so client logs join
+//! against captured spans; see [`server`] docs for the wire contract.
 
 pub mod admission;
 pub mod batcher;
@@ -111,6 +153,7 @@ pub mod metrics;
 pub mod replica;
 pub mod router;
 pub mod server;
+pub mod trace;
 
 pub use admission::{AdmissionConfig, LoadController, ServeError};
 pub use batcher::{
@@ -123,3 +166,4 @@ pub use router::{RouterReply, ScrubReport, ShardedRouter};
 pub use server::{
     handle_request, handle_router_request, serve, serve_on, serve_router_on, ServeConfig,
 };
+pub use trace::{QuerySpans, Stage, TraceRecorder, TraceStats};

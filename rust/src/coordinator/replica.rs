@@ -48,6 +48,7 @@ use crate::index::{open_mmap_verified, AnyIndex, ProbeBudget, ScoredItem};
 use super::batcher::BreakerState;
 use super::engine::MipsEngine;
 use super::metrics::LatencyHist;
+use super::trace::QuerySpans;
 
 /// Survive a poisoned mutex: none of the guarded state here can be left
 /// inconsistent by a panicking holder (plans and instants are written
@@ -310,7 +311,7 @@ struct ReplicaJob {
     query: Arc<[f32]>,
     top_k: usize,
     budget: ProbeBudget,
-    reply: Sender<(usize, Vec<ScoredItem>)>,
+    reply: Sender<(usize, Vec<ScoredItem>, QuerySpans)>,
 }
 
 /// One member of a replica group: shared state plus the dispatch sender
@@ -347,10 +348,13 @@ fn worker_loop<S: Storage>(shared: Arc<ReplicaShared<S>>, rx: Receiver<ReplicaJo
         }
         let engine = read_slot(&shared.slot);
         let s = scratch.get_or_insert_with(|| engine.scratch());
-        let hits = engine.query_budgeted_into(&job.query, job.top_k, job.budget, s).to_vec();
+        let mut spans = QuerySpans::default();
+        let hits = engine
+            .query_traced_into(&job.query, job.top_k, job.budget, &mut spans, s)
+            .to_vec();
         // A dispatcher that already gave up dropped the receiver; a
         // late answer is discarded, not an error.
-        let _ = job.reply.send((job.member, hits));
+        let _ = job.reply.send((job.member, hits, spans));
     }
 }
 
@@ -383,7 +387,7 @@ impl<S: Storage> Replica<S> {
         query: &Arc<[f32]>,
         top_k: usize,
         budget: ProbeBudget,
-        reply: Sender<(usize, Vec<ScoredItem>)>,
+        reply: Sender<(usize, Vec<ScoredItem>, QuerySpans)>,
     ) -> bool {
         match &self.tx {
             Some(tx) => tx

@@ -36,6 +36,7 @@ use super::metrics::Metrics;
 use super::replica::{
     corrupt_index_file, lock, ReplicaConfig, ReplicaGroup, ReplicaStorage, ShardFaultPlan,
 };
+use super::trace::{QuerySpans, Stage, FLAG_DEGRADED, FLAG_HEDGED, FLAG_PARTIAL};
 
 /// A collection of shard replica groups with global-id translation —
 /// heap-built shards (the default), zero-copy mapped shards
@@ -375,9 +376,11 @@ impl<S: ReplicaStorage> ShardedRouter<S> {
 }
 
 /// Per-shard in-flight dispatch state for the replicated scatter.
+/// Replies carry the answering member's [`QuerySpans`] so the gather
+/// can attribute probe/rerank time to the winning replica.
 struct Pending {
-    tx: Sender<(usize, Vec<ScoredItem>)>,
-    rx: Receiver<(usize, Vec<ScoredItem>)>,
+    tx: Sender<(usize, Vec<ScoredItem>, QuerySpans)>,
+    rx: Receiver<(usize, Vec<ScoredItem>, QuerySpans)>,
     primary: Option<usize>,
     dispatched: Vec<usize>,
 }
@@ -562,6 +565,26 @@ impl<S: Storage> ShardedRouter<S> {
     /// whose group never answers makes the reply partial rather than
     /// hanging it (see [`RouterReply`]).
     pub fn query_replicated(&self, query: &[f32], top_k: usize, budget: ProbeBudget) -> RouterReply {
+        let mut spans = QuerySpans::default();
+        let reply = self.query_replicated_traced(query, top_k, budget, &mut spans);
+        self.metrics.tracer.offer(&spans);
+        reply
+    }
+
+    /// [`ShardedRouter::query_replicated`] with caller-owned span
+    /// attribution: per-member probe/rerank timings are absorbed from
+    /// whichever replica answered each shard, the gather wait lands in
+    /// [`Stage::ShardWait`], the sort/truncate in [`Stage::Merge`], and
+    /// hedge/partial/degraded outcomes become span flags. The caller
+    /// owns offering `spans` to a [`super::trace::TraceRecorder`] —
+    /// this method only fills it in and feeds the stage aggregates.
+    pub fn query_replicated_traced(
+        &self,
+        query: &[f32],
+        top_k: usize,
+        budget: ProbeBudget,
+        spans: &mut QuerySpans,
+    ) -> RouterReply {
         assert_eq!(query.len(), self.dim);
         let start = Instant::now();
         let q: Arc<[f32]> = Arc::from(query.to_vec());
@@ -590,22 +613,55 @@ impl<S: Storage> ShardedRouter<S> {
         let mut shards_answered = 0usize;
         let mut hedge_fired = false;
         for ((g, &off), p) in self.groups.iter().zip(&self.offsets).zip(pending) {
-            if let Some((shard_hits, fired)) = self.collect_shard(g, &q, top_k, budget, start, p) {
+            if let Some((shard_hits, fired, who, member_spans)) =
+                self.collect_shard(g, &q, top_k, budget, start, p)
+            {
                 g.latency.record(start.elapsed().as_micros() as u64);
                 hedge_fired |= fired;
                 shards_answered += 1;
+                spans.absorb_member(&member_spans);
+                spans.winning_replica = who.min(u8::MAX as usize) as u8;
                 hits.extend(
                     shard_hits.iter().map(|h| ScoredItem { id: h.id + off, score: h.score }),
                 );
             }
         }
+        let shard_wait_us = start.elapsed().as_micros() as u64;
+        spans.set_stage(Stage::ShardWait, shard_wait_us);
+
+        let merge_start = Instant::now();
         hits.sort_unstable_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
         hits.truncate(top_k);
+        let merge_us = merge_start.elapsed().as_micros() as u64;
+        spans.set_stage(Stage::Merge, merge_us);
 
         let degraded = shards_answered < shards_total;
         if degraded {
             self.metrics.record_partial_reply();
+            spans.set_flag(FLAG_PARTIAL);
+            spans.set_flag(FLAG_DEGRADED);
         }
+        if hedge_fired {
+            spans.set_flag(FLAG_HEDGED);
+        }
+        spans.shards_answered = shards_answered.min(u8::MAX as usize) as u8;
+        spans.shards_total = shards_total.min(u8::MAX as usize) as u8;
+        spans.hits = hits.len().min(u16::MAX as usize) as u16;
+        spans.top_k = top_k.min(u16::MAX as usize) as u16;
+        spans.total_us = start.elapsed().as_micros() as u64;
+
+        // Stage aggregates: the members' engines recorded probe/rerank
+        // into their *own* metrics; re-record the absorbed values here
+        // so the router's front-end histograms see them too.
+        if let Some(us) = spans.stage(Stage::Probe) {
+            self.metrics.record_stage(Stage::Probe, us);
+        }
+        if let Some(us) = spans.stage(Stage::Rerank) {
+            self.metrics.record_stage(Stage::Rerank, us);
+        }
+        self.metrics.record_stage(Stage::ShardWait, shard_wait_us);
+        self.metrics.record_stage(Stage::Merge, merge_us);
+        self.metrics.record_candidate_flow(spans.candidates_probed, spans.candidates_reranked);
         self.metrics.record_query(start.elapsed().as_micros() as u64, 0);
         RouterReply { hits, shards_answered, shards_total, hedge_fired, degraded }
     }
@@ -613,8 +669,9 @@ impl<S: Storage> ShardedRouter<S> {
     /// Collect one shard's answer: wait for the primary up to the hedge
     /// delay, dispatch one backup if it hasn't answered, then wait out
     /// the shard timeout for whoever replies first. Returns the winning
-    /// hit list and whether a true hedge fired (backup dispatched while
-    /// the primary was still in flight).
+    /// hit list, whether a true hedge fired (backup dispatched while
+    /// the primary was still in flight), the winning member index, and
+    /// the winner's per-stage spans.
     fn collect_shard(
         &self,
         g: &ReplicaGroup<S>,
@@ -623,12 +680,12 @@ impl<S: Storage> ShardedRouter<S> {
         budget: ProbeBudget,
         start: Instant,
         mut p: Pending,
-    ) -> Option<(Vec<ScoredItem>, bool)> {
+    ) -> Option<(Vec<ScoredItem>, bool, usize, QuerySpans)> {
         let deadline = start + self.cfg.shard_timeout;
         let hedge_at = start + self.hedge_delay_for(g).min(self.cfg.shard_timeout);
         let mut hedge_fired = false;
 
-        let mut winner: Option<(usize, Vec<ScoredItem>)> = None;
+        let mut winner: Option<(usize, Vec<ScoredItem>, QuerySpans)> = None;
         if !p.dispatched.is_empty() {
             winner = p.rx.recv_timeout(hedge_at.saturating_duration_since(Instant::now())).ok();
         }
@@ -660,10 +717,10 @@ impl<S: Storage> ShardedRouter<S> {
         // answered; members still outstanding when we walk away count a
         // failure (their late replies land in a dropped channel).
         let mut answered = vec![false; g.members.len()];
-        if let Some((who, _)) = &winner {
+        if let Some((who, _, _)) = &winner {
             answered[*who] = true;
         }
-        while let Ok((who, _)) = p.rx.try_recv() {
+        while let Ok((who, _, _)) = p.rx.try_recv() {
             answered[who] = true;
         }
         for &i in &p.dispatched {
@@ -673,7 +730,7 @@ impl<S: Storage> ShardedRouter<S> {
                 g.members[i].shared.breaker.on_failure();
             }
         }
-        winner.map(|(_, shard_hits)| (shard_hits, hedge_fired))
+        winner.map(|(who, shard_hits, spans)| (shard_hits, hedge_fired, who, spans))
     }
 
     /// The hedge delay for one shard: the configured override, or

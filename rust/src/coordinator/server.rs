@@ -3,10 +3,17 @@
 //! Protocol (one JSON object per line):
 //!
 //! ```text
-//! → {"vector": [0.1, ...], "top_k": 10, "deadline_ms": 250}
-//! ← {"ok": true, "items": [5, 2], "scores": [1.9, 1.2], "degraded": false, "latency_us": 830}
+//! → {"vector": [0.1, ...], "top_k": 10, "deadline_ms": 250, "trace_id": 7}
+//! ← {"ok": true, "items": [5, 2], "scores": [1.9, 1.2], "degraded": false,
+//!    "trace_id": 7, "latency_us": 830}
 //! → {"cmd": "metrics"}
-//! ← {"ok": true, "metrics": {...}}
+//! ← {"ok": true, "metrics": {..., "stages": {"hash": {"count": ..., "p50_us": ..., "p99_us": ...}, ...}}}
+//! → {"cmd": "metrics_prom"}
+//! ← {"ok": true, "content_type": "text/plain; version=0.0.4", "body": "# HELP ..."}
+//! → {"cmd": "trace", "sample_every": 100, "slow_threshold_us": 20000}
+//! ← {"ok": true, "sample_every": 100, ..., "spans": [{...}, ...]}
+//! → {"cmd": "slowlog"}
+//! ← {"ok": true, "slow_threshold_us": 20000, "spans": [{...}, ...]}
 //! → {"cmd": "ping"}
 //! ← {"ok": true}
 //! → {"cmd": "upsert", "id": 42, "vector": [0.1, ...]}
@@ -34,9 +41,18 @@
 //! bad `deadline_ms`, oversized line), `deadline_exceeded`, `overloaded`,
 //! or `internal` — and never kills the connection: the offending line is
 //! consumed (oversized lines are discarded to the next newline) and the
-//! connection keeps serving. `ping` and `metrics` are answered inline on
-//! the connection thread, never through the batcher queue, so health
-//! checks stay responsive while queries are being shed.
+//! connection keeps serving. `ping`, `metrics`, `metrics_prom`, `trace`,
+//! and `slowlog` are answered inline on the connection thread, never
+//! through the batcher queue, so health checks and trace drains stay
+//! responsive while queries are being shed.
+//!
+//! **Tracing.** A query may carry a client `trace_id` (non-negative
+//! integer ≤ 2^53); the server assigns one otherwise. The id is echoed
+//! byte-for-byte on the reply — success *and* every error past request
+//! parsing — so a client log line can always be joined against the
+//! server's sampled spans and slow-query log (see
+//! [`super::trace::TraceRecorder`]). Both knobs default off; the `trace`
+//! command turns them on at runtime.
 //!
 //! The **routed** front end ([`serve_router_on`] /
 //! [`handle_router_request`]) serves a replicated [`ShardedRouter`]
@@ -58,7 +74,9 @@ use crate::util::json::{num_arr, obj, Json};
 use super::admission::{deadline_expired, triage_deadline_ms};
 use super::batcher::{BatcherHandle, BreakerState};
 use super::engine::MipsEngine;
+use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::ShardedRouter;
+use super::trace::{QuerySpans, Stage};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -86,27 +104,187 @@ fn err_response(code: &str, msg: impl Into<String>) -> Json {
     ])
 }
 
+/// A handler's answer plus deferred span finalisation: when a query
+/// produced a [`QuerySpans`], the connection loop times the reply write
+/// ([`Stage::ReplyWrite`]) before offering the span to the recorder, so
+/// captured traces account for the full server-side lifetime. The
+/// socketless wrappers ([`handle_request`], [`handle_router_request`])
+/// offer inline instead — no write to measure.
+struct TracedResponse {
+    resp: Json,
+    finish: Option<(Arc<Metrics>, QuerySpans)>,
+}
+
+impl TracedResponse {
+    fn plain(resp: Json) -> Self {
+        Self { resp, finish: None }
+    }
+
+    fn finish_inline(self) -> Json {
+        if let Some((metrics, spans)) = self.finish {
+            metrics.tracer.offer(&spans);
+        }
+        self.resp
+    }
+}
+
+/// Echo the client's (or server-assigned) trace id on a response.
+fn with_trace_id(mut resp: Json, trace_id: u64) -> Json {
+    if let Json::Obj(map) = &mut resp {
+        map.insert("trace_id".to_string(), Json::Num(trace_id as f64));
+    }
+    resp
+}
+
+/// The optional `trace_id` request field. Absent is fine — the server
+/// assigns one. Present, it must be a non-negative integer no larger
+/// than 2^53, the range a JSON double echoes byte-for-byte. `Err` is
+/// the ready-to-send error response.
+fn parse_trace_id(req: &Json) -> Result<Option<u64>, Json> {
+    const MAX_TRACE_ID: f64 = 9_007_199_254_740_992.0; // 2^53
+    match req.get("trace_id") {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(t) if t.is_finite() && t >= 0.0 && t.fract() == 0.0 && t <= MAX_TRACE_ID => {
+                Ok(Some(t as u64))
+            }
+            _ => Err(err_response(
+                "invalid_argument",
+                "trace_id must be a non-negative integer no larger than 2^53",
+            )),
+        },
+    }
+}
+
+/// Length/parse validation shared by both front ends. `Err` is the
+/// ready-to-send error response.
+fn parse_line(line: &str, cfg: &ServeConfig) -> Result<Json, Json> {
+    if line.len() > cfg.max_line_len {
+        return Err(err_response(
+            "invalid_argument",
+            format!("request line exceeds {} bytes", cfg.max_line_len),
+        ));
+    }
+    Json::parse(line).map_err(|e| err_response("invalid_argument", format!("bad request: {e}")))
+}
+
+/// The `trace` command, shared by both front ends: optionally
+/// reconfigure the recorder (`sample_every` — 0 disables sampling;
+/// `slow_threshold_us` — 0 disables the slow log), then report recorder
+/// stats and drain the sampled ring.
+fn handle_trace_cmd(req: &Json, metrics: &Metrics) -> Json {
+    if let Some(v) = req.get("sample_every") {
+        let Some(n) = v.as_usize() else {
+            return err_response(
+                "invalid_argument",
+                "sample_every must be a non-negative integer (0 disables sampling)",
+            );
+        };
+        metrics.tracer.set_sample_every(n as u64);
+    }
+    if let Some(v) = req.get("slow_threshold_us") {
+        let Some(n) = v.as_usize() else {
+            return err_response(
+                "invalid_argument",
+                "slow_threshold_us must be a non-negative integer (0 disables the slow log)",
+            );
+        };
+        metrics.tracer.set_slow_threshold_us(n as u64);
+    }
+    let stats = metrics.tracer.stats();
+    let spans: Vec<Json> =
+        metrics.tracer.drain_sampled().iter().map(QuerySpans::to_json).collect();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("sample_every", Json::Num(metrics.tracer.sample_every() as f64)),
+        ("slow_threshold_us", Json::Num(metrics.tracer.slow_threshold_us() as f64)),
+        ("seen", Json::Num(stats.seen as f64)),
+        ("sampled", Json::Num(stats.sampled as f64)),
+        ("slow_captured", Json::Num(stats.slow_captured as f64)),
+        ("spans", Json::Arr(spans)),
+    ])
+}
+
+/// The `slowlog` command: drain every span the always-on slow-query
+/// ring captured since the last drain.
+fn handle_slowlog_cmd(metrics: &Metrics) -> Json {
+    let spans: Vec<Json> = metrics.tracer.drain_slow().iter().map(QuerySpans::to_json).collect();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("slow_threshold_us", Json::Num(metrics.tracer.slow_threshold_us() as f64)),
+        ("spans", Json::Arr(spans)),
+    ])
+}
+
+/// The `metrics_prom` command: the full snapshot in Prometheus text
+/// exposition format 0.0.4, carried in the JSON-lines envelope.
+fn metrics_prom_response(s: &MetricsSnapshot) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("content_type", Json::Str("text/plain; version=0.0.4".into())),
+        ("body", Json::Str(s.prometheus_text())),
+    ])
+}
+
+/// Per-stage `{count, p50_us, p99_us}` breakdown for the `metrics`
+/// command. Stages a deployment never exercises report zero counts.
+fn stages_json(s: &MetricsSnapshot) -> Json {
+    obj(Stage::ALL
+        .iter()
+        .map(|&st| {
+            (
+                st.name(),
+                obj(vec![
+                    ("count", Json::Num(s.stage_count(st) as f64)),
+                    ("p50_us", Json::Num(s.stage_percentile_us(st, 0.5) as f64)),
+                    ("p99_us", Json::Num(s.stage_percentile_us(st, 0.99) as f64)),
+                ]),
+            )
+        })
+        .collect())
+}
+
 /// Handle one JSON-lines request string. Pure function over the request
-/// text — directly unit/integration testable without sockets.
+/// text — directly unit/integration testable without sockets. Spans
+/// produced by query lines are offered to the trace recorder inline
+/// (the socket path defers them past the reply write instead).
 pub fn handle_request(
     line: &str,
     handle: &BatcherHandle,
     engine: &Arc<MipsEngine>,
     cfg: &ServeConfig,
 ) -> Json {
-    if line.len() > cfg.max_line_len {
-        return err_response(
-            "invalid_argument",
-            format!("request line exceeds {} bytes", cfg.max_line_len),
-        );
-    }
-    let req = match Json::parse(line) {
+    handle_request_full(line, handle, engine, cfg).finish_inline()
+}
+
+fn handle_request_full(
+    line: &str,
+    handle: &BatcherHandle,
+    engine: &Arc<MipsEngine>,
+    cfg: &ServeConfig,
+) -> TracedResponse {
+    let req = match parse_line(line, cfg) {
         Ok(r) => r,
-        Err(e) => return err_response("invalid_argument", format!("bad request: {e}")),
+        Err(resp) => return TracedResponse::plain(resp),
     };
     match req.get("cmd").and_then(Json::as_str) {
-        Some("ping") => obj(vec![("ok", Json::Bool(true))]),
-        Some("metrics") => {
+        Some(cmd) => TracedResponse::plain(handle_engine_cmd(cmd, &req, handle, engine)),
+        None => handle_engine_query(&req, handle, engine, cfg),
+    }
+}
+
+fn handle_engine_cmd(
+    cmd: &str,
+    req: &Json,
+    handle: &BatcherHandle,
+    engine: &Arc<MipsEngine>,
+) -> Json {
+    match cmd {
+        "ping" => obj(vec![("ok", Json::Bool(true))]),
+        "trace" => handle_trace_cmd(req, handle.metrics()),
+        "slowlog" => handle_slowlog_cmd(handle.metrics()),
+        "metrics_prom" => metrics_prom_response(&engine.metrics_snapshot()),
+        "metrics" => {
             let s = engine.metrics_snapshot();
             let breaker = match handle.breaker_state() {
                 BreakerState::Closed => "closed",
@@ -139,12 +317,15 @@ pub fn handle_request(
                         ("p50_latency_us", Json::Num(s.p50_latency_us as f64)),
                         ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
                         ("mean_batch_size", Json::Num(s.mean_batch_size())),
+                        ("candidates_probed", Json::Num(s.candidates_probed as f64)),
+                        ("candidates_reranked", Json::Num(s.candidates_reranked as f64)),
+                        ("stages", stages_json(&s)),
                     ]),
                 ),
             ])
         }
-        Some("upsert") => {
-            let Some(id) = parse_ext_id(&req) else {
+        "upsert" => {
+            let Some(id) = parse_ext_id(req) else {
                 return err_response("invalid_argument", "id must be an integer in u32 range");
             };
             let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
@@ -173,8 +354,8 @@ pub fn handle_request(
                 Err(e) => err_response("internal", format!("upsert failed: {e:#}")),
             }
         }
-        Some("delete") => {
-            let Some(id) = parse_ext_id(&req) else {
+        "delete" => {
+            let Some(id) = parse_ext_id(req) else {
                 return err_response("invalid_argument", "id must be an integer in u32 range");
             };
             if !engine.is_live() {
@@ -191,7 +372,7 @@ pub fn handle_request(
                 Err(e) => err_response("internal", format!("delete failed: {e:#}")),
             }
         }
-        Some("upsert_batch") => {
+        "upsert_batch" => {
             let Some(ids) = req.get("ids").and_then(Json::as_arr) else {
                 return err_response("invalid_argument", "missing or malformed ids array");
             };
@@ -257,32 +438,44 @@ pub fn handle_request(
                 Err(e) => err_response("internal", format!("upsert_batch failed: {e:#}")),
             }
         }
-        Some(other) => err_response("invalid_argument", format!("unknown cmd {other:?}")),
-        None => {
-            let (vector, top_k, deadline) = match parse_query(&req, engine.dim(), cfg) {
-                Ok(parts) => parts,
-                Err(resp) => return resp,
-            };
-            let t0 = Instant::now();
-            match handle.query_deadline(vector, top_k, deadline) {
-                Ok(reply) => {
-                    let ids: Vec<f64> = reply.hits.iter().map(|h| h.id as f64).collect();
-                    let scores: Vec<f64> =
-                        reply.hits.iter().map(|h| h.score as f64).collect();
-                    obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("items", num_arr(&ids)),
-                        ("scores", num_arr(&scores)),
-                        ("degraded", Json::Bool(reply.degraded)),
-                        (
-                            "latency_us",
-                            Json::Num(t0.elapsed().as_micros() as f64),
-                        ),
-                    ])
-                }
-                Err(e) => err_response(e.code(), e.message()),
-            }
+        other => err_response("invalid_argument", format!("unknown cmd {other:?}")),
+    }
+}
+
+/// The engine-server query line: parse the trace id first so every
+/// later rejection can echo it, run through the batcher's traced path,
+/// and hand the filled spans back for reply-write timing.
+fn handle_engine_query(
+    req: &Json,
+    handle: &BatcherHandle,
+    engine: &Arc<MipsEngine>,
+    cfg: &ServeConfig,
+) -> TracedResponse {
+    let trace_id = match parse_trace_id(req) {
+        Ok(t) => t,
+        Err(resp) => return TracedResponse::plain(resp),
+    };
+    let tid = trace_id.unwrap_or_else(|| handle.metrics().tracer.next_trace_id());
+    let (vector, top_k, deadline) = match parse_query(req, engine.dim(), cfg) {
+        Ok(parts) => parts,
+        Err(resp) => return TracedResponse::plain(with_trace_id(resp, tid)),
+    };
+    let t0 = Instant::now();
+    match handle.query_traced(vector, top_k, deadline, Some(tid)) {
+        Ok(reply) => {
+            let ids: Vec<f64> = reply.hits.iter().map(|h| h.id as f64).collect();
+            let scores: Vec<f64> = reply.hits.iter().map(|h| h.score as f64).collect();
+            let resp = obj(vec![
+                ("ok", Json::Bool(true)),
+                ("items", num_arr(&ids)),
+                ("scores", num_arr(&scores)),
+                ("degraded", Json::Bool(reply.degraded)),
+                ("trace_id", Json::Num(reply.trace_id as f64)),
+                ("latency_us", Json::Num(t0.elapsed().as_micros() as f64)),
+            ]);
+            TracedResponse { resp, finish: Some((Arc::clone(handle.metrics()), reply.spans)) }
         }
+        Err(e) => TracedResponse::plain(with_trace_id(err_response(e.code(), e.message()), tid)),
     }
 }
 
@@ -301,19 +494,31 @@ pub fn handle_router_request<S: Storage>(
     router: &ShardedRouter<S>,
     cfg: &ServeConfig,
 ) -> Json {
-    if line.len() > cfg.max_line_len {
-        return err_response(
-            "invalid_argument",
-            format!("request line exceeds {} bytes", cfg.max_line_len),
-        );
-    }
-    let req = match Json::parse(line) {
+    handle_router_request_full(line, router, cfg).finish_inline()
+}
+
+fn handle_router_request_full<S: Storage>(
+    line: &str,
+    router: &ShardedRouter<S>,
+    cfg: &ServeConfig,
+) -> TracedResponse {
+    let req = match parse_line(line, cfg) {
         Ok(r) => r,
-        Err(e) => return err_response("invalid_argument", format!("bad request: {e}")),
+        Err(resp) => return TracedResponse::plain(resp),
     };
     match req.get("cmd").and_then(Json::as_str) {
-        Some("ping") => obj(vec![("ok", Json::Bool(true))]),
-        Some("metrics") => {
+        Some(cmd) => TracedResponse::plain(handle_router_cmd(cmd, &req, router)),
+        None => handle_router_query(&req, router, cfg),
+    }
+}
+
+fn handle_router_cmd<S: Storage>(cmd: &str, req: &Json, router: &ShardedRouter<S>) -> Json {
+    match cmd {
+        "ping" => obj(vec![("ok", Json::Bool(true))]),
+        "trace" => handle_trace_cmd(req, &router.metrics()),
+        "slowlog" => handle_slowlog_cmd(&router.metrics()),
+        "metrics_prom" => metrics_prom_response(&router.metrics().snapshot()),
+        "metrics" => {
             let s = router.metrics().snapshot();
             let shard_p99: Vec<f64> =
                 router.shard_p99_us().iter().map(|&v| v as f64).collect();
@@ -338,45 +543,71 @@ pub fn handle_router_request<S: Storage>(
                         ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
                         ("shard_p99_us", num_arr(&shard_p99)),
                         ("breakers", Json::Arr(breakers)),
+                        ("candidates_probed", Json::Num(s.candidates_probed as f64)),
+                        ("candidates_reranked", Json::Num(s.candidates_reranked as f64)),
+                        ("stages", stages_json(&s)),
                     ]),
                 ),
             ])
         }
-        Some(other) => err_response(
+        other => err_response(
             "invalid_argument",
             format!("unknown cmd {other:?} (mutations are not served on the routed path)"),
         ),
-        None => {
-            let (vector, top_k, deadline) = match parse_query(&req, router.dim(), cfg) {
-                Ok(parts) => parts,
-                Err(resp) => return resp,
-            };
-            if deadline_expired(deadline) {
-                return err_response("deadline_exceeded", "deadline expired before dispatch");
-            }
-            let t0 = Instant::now();
-            let reply = router.query_replicated(&vector, top_k, ProbeBudget::full());
-            if deadline_expired(deadline) {
-                return err_response(
-                    "deadline_exceeded",
-                    "deadline expired during scatter/gather",
-                );
-            }
-            let ids: Vec<f64> = reply.hits.iter().map(|h| h.id as f64).collect();
-            let scores: Vec<f64> = reply.hits.iter().map(|h| h.score as f64).collect();
-            obj(vec![
-                ("ok", Json::Bool(true)),
-                ("items", num_arr(&ids)),
-                ("scores", num_arr(&scores)),
-                ("degraded", Json::Bool(reply.degraded)),
-                ("shards_answered", Json::Num(reply.shards_answered as f64)),
-                ("shards_total", Json::Num(reply.shards_total as f64)),
-                ("coverage_fraction", Json::Num(reply.coverage_fraction())),
-                ("hedge_fired", Json::Bool(reply.hedge_fired)),
-                ("latency_us", Json::Num(t0.elapsed().as_micros() as f64)),
-            ])
-        }
     }
+}
+
+/// The routed query line: same trace-id contract as the engine path,
+/// with spans filled by the hedged scatter/gather
+/// ([`ShardedRouter::query_replicated_traced`]). A query that blew its
+/// deadline mid-gather still hands its spans back — exactly the slow
+/// query the slow log exists to explain.
+fn handle_router_query<S: Storage>(
+    req: &Json,
+    router: &ShardedRouter<S>,
+    cfg: &ServeConfig,
+) -> TracedResponse {
+    let trace_id = match parse_trace_id(req) {
+        Ok(t) => t,
+        Err(resp) => return TracedResponse::plain(resp),
+    };
+    let metrics = router.metrics();
+    let tid = trace_id.unwrap_or_else(|| metrics.tracer.next_trace_id());
+    let (vector, top_k, deadline) = match parse_query(req, router.dim(), cfg) {
+        Ok(parts) => parts,
+        Err(resp) => return TracedResponse::plain(with_trace_id(resp, tid)),
+    };
+    if deadline_expired(deadline) {
+        return TracedResponse::plain(with_trace_id(
+            err_response("deadline_exceeded", "deadline expired before dispatch"),
+            tid,
+        ));
+    }
+    let t0 = Instant::now();
+    let mut spans = QuerySpans::with_id(tid);
+    let reply = router.query_replicated_traced(&vector, top_k, ProbeBudget::full(), &mut spans);
+    if deadline_expired(deadline) {
+        let resp = with_trace_id(
+            err_response("deadline_exceeded", "deadline expired during scatter/gather"),
+            tid,
+        );
+        return TracedResponse { resp, finish: Some((metrics, spans)) };
+    }
+    let ids: Vec<f64> = reply.hits.iter().map(|h| h.id as f64).collect();
+    let scores: Vec<f64> = reply.hits.iter().map(|h| h.score as f64).collect();
+    let resp = obj(vec![
+        ("ok", Json::Bool(true)),
+        ("items", num_arr(&ids)),
+        ("scores", num_arr(&scores)),
+        ("degraded", Json::Bool(reply.degraded)),
+        ("shards_answered", Json::Num(reply.shards_answered as f64)),
+        ("shards_total", Json::Num(reply.shards_total as f64)),
+        ("coverage_fraction", Json::Num(reply.coverage_fraction())),
+        ("hedge_fired", Json::Bool(reply.hedge_fired)),
+        ("trace_id", Json::Num(tid as f64)),
+        ("latency_us", Json::Num(t0.elapsed().as_micros() as f64)),
+    ]);
+    TracedResponse { resp, finish: Some((metrics, spans)) }
 }
 
 /// Validate a query request's `vector`, `top_k`, and `deadline_ms`
@@ -477,11 +708,15 @@ fn write_json_line(writer: &mut TcpStream, resp: &Json) -> std::io::Result<()> {
 
 /// One connection's read-dispatch-write loop, generic over the request
 /// handler — the single-engine path and the routed replica path differ
-/// only in what answers a line.
+/// only in what answers a line. Query spans are finalised here, after
+/// the reply hits the socket: the write is timed into
+/// [`Stage::ReplyWrite`], added to the span's total, and only then is
+/// the span offered to the recorder — so sampled traces and slow-log
+/// entries cover the query's full server-side lifetime.
 fn conn_loop(
     stream: TcpStream,
     cfg: &ServeConfig,
-    mut handle_line: impl FnMut(&str) -> Json,
+    mut handle_line: impl FnMut(&str) -> TracedResponse,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -511,8 +746,16 @@ fn conn_loop(
         if line.is_empty() {
             continue;
         }
-        let resp = handle_line(line);
-        write_json_line(&mut writer, &resp)?;
+        let traced = handle_line(line);
+        let write_start = Instant::now();
+        write_json_line(&mut writer, &traced.resp)?;
+        if let Some((metrics, mut spans)) = traced.finish {
+            let write_us = write_start.elapsed().as_micros() as u64;
+            spans.set_stage(Stage::ReplyWrite, write_us);
+            spans.total_us += write_us;
+            metrics.record_stage(Stage::ReplyWrite, write_us);
+            metrics.tracer.offer(&spans);
+        }
     }
 }
 
@@ -538,7 +781,7 @@ pub fn serve_on(
         let e = Arc::clone(&engine);
         let c = Arc::clone(&cfg);
         std::thread::spawn(move || {
-            let r = conn_loop(stream, &c, |line| handle_request(line, &h, &e, &c));
+            let r = conn_loop(stream, &c, |line| handle_request_full(line, &h, &e, &c));
             if let Err(err) = r {
                 crate::log_warn!("connection error: {err}");
             }
@@ -562,7 +805,7 @@ pub fn serve_router_on<S: Storage>(
         let r = Arc::clone(&router);
         let c = Arc::clone(&cfg);
         std::thread::spawn(move || {
-            let res = conn_loop(stream, &c, |line| handle_router_request(line, &r, &c));
+            let res = conn_loop(stream, &c, |line| handle_router_request_full(line, &r, &c));
             if let Err(err) = res {
                 crate::log_warn!("connection error: {err}");
             }

@@ -1,0 +1,724 @@
+//! Per-query tracing: stage-level latency attribution, a lock-free sampled
+//! span recorder, and an always-capture slow-query log.
+//!
+//! The paper's argument is a cost decomposition — hashing effort (K·L
+//! projections) buys a smaller candidate set so exact rerank stays cheap —
+//! and this module makes that decomposition observable per query. A
+//! [`QuerySpans`] record rides alongside each request through
+//! batcher → engine → router → replica, collecting one timing per pipeline
+//! [`Stage`] plus context (trace id, scheme/kind, probe budget, candidate
+//! counts, degraded/hedged/partial flags, winning replica).
+//!
+//! # Hot-path contract
+//!
+//! With sampling and the slow-query threshold disabled (both default to 0),
+//! [`TraceRecorder::offer`] performs three relaxed atomic operations and no
+//! allocation; stage timing in the pipeline costs only monotonic clock
+//! reads. `tests/zero_alloc.rs` pins this, and the serve benchmark's
+//! `observability` phase ratchets the measured overhead at 0%/1%/100%
+//! sampling.
+//!
+//! # Ring semantics
+//!
+//! Spans are recorded into fixed-capacity seqlock rings (one for sampled
+//! spans, one for slow queries). Writers never block or allocate: each
+//! claims a monotonically increasing ticket, marks the slot odd, stores the
+//! encoded span as plain `u64` words, then marks the slot complete. Readers
+//! ([`TraceRecorder::drain_sampled`] / [`TraceRecorder::drain_slow`])
+//! validate the sequence word before and after copying, so a span that was
+//! overwritten mid-read is simply dropped rather than returned torn. Under
+//! extreme wrap (a writer lapping the ring by exactly `2^63` tickets between
+//! a reader's two sequence checks) a torn read is theoretically possible;
+//! at one query per nanosecond that takes ~292 years, which we accept.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Number of pipeline stages a query can pass through.
+pub const N_STAGES: usize = 9;
+
+/// One stage of the query pipeline. Discriminants index fixed-size arrays
+/// in [`QuerySpans`] and `Metrics::stages`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Admission control: load-ladder evaluation + bounded-queue enqueue.
+    AdmissionWait = 0,
+    /// Time spent in the admission queue before the batch loop popped it.
+    QueueWait = 1,
+    /// From first pop of the batch to dispatching the hash job.
+    BatchAssembly = 2,
+    /// Batched hashing round-trip (pjrt worker or fused fallback).
+    Hash = 3,
+    /// Bucket probing / candidate gathering (whole query on live indexes).
+    Probe = 4,
+    /// Exact inner-product rerank over the candidate set.
+    Rerank = 5,
+    /// Routed path: scatter + hedged gather wait across shards.
+    ShardWait = 6,
+    /// Routed path: merge-sort + truncate of per-shard hit lists.
+    Merge = 7,
+    /// Serializing and writing the reply line to the socket.
+    ReplyWrite = 8,
+}
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::AdmissionWait,
+        Stage::QueueWait,
+        Stage::BatchAssembly,
+        Stage::Hash,
+        Stage::Probe,
+        Stage::Rerank,
+        Stage::ShardWait,
+        Stage::Merge,
+        Stage::ReplyWrite,
+    ];
+
+    /// Stable wire name used in `metrics`, `metrics_prom`, and span JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::AdmissionWait => "admission_wait",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::Hash => "hash",
+            Stage::Probe => "probe",
+            Stage::Rerank => "rerank",
+            Stage::ShardWait => "shard_wait",
+            Stage::Merge => "merge",
+            Stage::ReplyWrite => "reply_write",
+        }
+    }
+}
+
+/// Query was served with a degraded probe budget (load ladder level 1+).
+pub const FLAG_DEGRADED: u8 = 1 << 0;
+/// At least one shard fired a hedge to a backup replica.
+pub const FLAG_HEDGED: u8 = 1 << 1;
+/// Reply covers fewer shards than the index holds.
+pub const FLAG_PARTIAL: u8 = 1 << 2;
+/// The hash stage was served by the pjrt backend (else fused CPU).
+pub const FLAG_PJRT_HASH: u8 = 1 << 3;
+/// Served by a live (mutable) index; probe covers the whole query.
+pub const FLAG_LIVE: u8 = 1 << 4;
+/// Captured because total latency crossed the slow-query threshold.
+pub const FLAG_SLOW: u8 = 1 << 5;
+
+/// Words in the fixed-size encoding of a [`QuerySpans`].
+pub const SPAN_WORDS: usize = 15;
+
+/// Per-query trace record: one timing slot per [`Stage`] plus context.
+///
+/// `Copy` and fixed-size by design — it is threaded through request structs
+/// and written into ring slots without allocating. A stage's timing is only
+/// meaningful if its bit is set in the internal mask, distinguishing "ran
+/// in 0µs" from "never ran on this path".
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuerySpans {
+    /// Client-supplied or generated trace id (echoed in every reply).
+    pub trace_id: u64,
+    /// End-to-end latency in µs (widened by each enclosing layer).
+    pub total_us: u64,
+    stage_us: [u64; N_STAGES],
+    mask: u16,
+    /// Candidates produced by the probe stage (summed across shards).
+    pub candidates_probed: u64,
+    /// Candidates scored by the exact rerank (summed across shards).
+    pub candidates_reranked: u64,
+    /// Hits returned to the client.
+    pub hits: u16,
+    /// Requested top-k.
+    pub top_k: u16,
+    /// `FLAG_*` bits.
+    pub flags: u8,
+    /// Member index that answered the (last-gathered) shard on the routed
+    /// path; 0 on the single-engine path.
+    pub winning_replica: u8,
+    /// Shards that answered before the deadline (routed path).
+    pub shards_answered: u8,
+    /// Total shards scattered to (routed path).
+    pub shards_total: u8,
+    /// Hash scheme: 0 = L2-ALSH, 1 = Sign-ALSH, 2 = Simple-LSH.
+    pub scheme: u8,
+    /// Index kind: 0 = flat, 1 = norm-range banded.
+    pub kind: u8,
+    /// Probe budget's table cap, clamped to u16 (`u16::MAX` = unlimited).
+    pub budget_tables: u16,
+}
+
+impl QuerySpans {
+    /// A fresh record carrying `trace_id` and nothing else.
+    pub fn with_id(trace_id: u64) -> Self {
+        QuerySpans { trace_id, ..QuerySpans::default() }
+    }
+
+    /// Record a stage timing (overwrites any previous value for the stage).
+    pub fn set_stage(&mut self, stage: Stage, us: u64) {
+        self.stage_us[stage as usize] = us;
+        self.mask |= 1 << (stage as usize);
+    }
+
+    /// Add to a stage timing (used when a stage runs more than once, e.g.
+    /// probe across several shards attributed by critical path).
+    pub fn max_stage(&mut self, stage: Stage, us: u64) {
+        let i = stage as usize;
+        if self.mask & (1 << i) == 0 || us > self.stage_us[i] {
+            self.stage_us[i] = us;
+        }
+        self.mask |= 1 << i;
+    }
+
+    /// The stage's timing, or `None` if the stage never ran on this path.
+    pub fn stage(&self, stage: Stage) -> Option<u64> {
+        if self.mask & (1 << (stage as usize)) != 0 {
+            Some(self.stage_us[stage as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Set a `FLAG_*` bit.
+    pub fn set_flag(&mut self, flag: u8) {
+        self.flags |= flag;
+    }
+
+    /// Test a `FLAG_*` bit.
+    pub fn has_flag(&self, flag: u8) -> bool {
+        self.flags & flag != 0
+    }
+
+    /// The stage with the largest recorded timing, if any stage ran.
+    pub fn dominant_stage(&self) -> Option<Stage> {
+        Stage::ALL
+            .iter()
+            .copied()
+            .filter(|&s| self.mask & (1 << (s as usize)) != 0)
+            .max_by_key(|&s| self.stage_us[s as usize])
+    }
+
+    /// Fold a replica member's span record into this routed-query record:
+    /// probe/rerank take the critical-path maximum, candidate counts sum,
+    /// and context flags union.
+    pub fn absorb_member(&mut self, member: &QuerySpans) {
+        if let Some(us) = member.stage(Stage::Probe) {
+            self.max_stage(Stage::Probe, us);
+        }
+        if let Some(us) = member.stage(Stage::Rerank) {
+            self.max_stage(Stage::Rerank, us);
+        }
+        self.candidates_probed += member.candidates_probed;
+        self.candidates_reranked += member.candidates_reranked;
+        self.flags |= member.flags & (FLAG_LIVE | FLAG_PJRT_HASH);
+        self.scheme = member.scheme;
+        self.kind = member.kind;
+    }
+
+    /// Pack into a fixed word array for lock-free ring storage.
+    pub fn encode(&self) -> [u64; SPAN_WORDS] {
+        let mut w = [0u64; SPAN_WORDS];
+        w[0] = self.trace_id;
+        w[1] = self.total_us;
+        w[2..2 + N_STAGES].copy_from_slice(&self.stage_us);
+        w[11] = self.candidates_probed;
+        w[12] = self.candidates_reranked;
+        w[13] = (self.hits as u64) << 48
+            | (self.top_k as u64) << 32
+            | (self.flags as u64) << 24
+            | (self.winning_replica as u64) << 16
+            | (self.shards_answered as u64) << 8
+            | self.shards_total as u64;
+        w[14] = (self.mask as u64) << 32
+            | (self.scheme as u64) << 24
+            | (self.kind as u64) << 16
+            | self.budget_tables as u64;
+        w
+    }
+
+    /// Inverse of [`QuerySpans::encode`].
+    pub fn decode(w: &[u64; SPAN_WORDS]) -> Self {
+        let mut stage_us = [0u64; N_STAGES];
+        stage_us.copy_from_slice(&w[2..2 + N_STAGES]);
+        QuerySpans {
+            trace_id: w[0],
+            total_us: w[1],
+            stage_us,
+            mask: (w[14] >> 32) as u16,
+            candidates_probed: w[11],
+            candidates_reranked: w[12],
+            hits: (w[13] >> 48) as u16,
+            top_k: (w[13] >> 32) as u16,
+            flags: (w[13] >> 24) as u8,
+            winning_replica: (w[13] >> 16) as u8,
+            shards_answered: (w[13] >> 8) as u8,
+            shards_total: w[13] as u8,
+            scheme: (w[14] >> 24) as u8,
+            kind: (w[14] >> 16) as u8,
+            budget_tables: w[14] as u16,
+        }
+    }
+
+    /// JSON form used by the `trace` / `slowlog` drain commands.
+    /// Allocates — drain path only, never on the hot path.
+    pub fn to_json(&self) -> Json {
+        let mut stages: Vec<(&str, Json)> = Vec::new();
+        for st in Stage::ALL {
+            if let Some(us) = self.stage(st) {
+                stages.push((st.name(), Json::Num(us as f64)));
+            }
+        }
+        crate::util::json::obj([
+            ("trace_id", Json::Num(self.trace_id as f64)),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("stages", crate::util::json::obj(stages)),
+            (
+                "dominant_stage",
+                match self.dominant_stage() {
+                    Some(s) => Json::Str(s.name().to_string()),
+                    None => Json::Null,
+                },
+            ),
+            ("candidates_probed", Json::Num(self.candidates_probed as f64)),
+            ("candidates_reranked", Json::Num(self.candidates_reranked as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("top_k", Json::Num(self.top_k as f64)),
+            ("degraded", Json::Bool(self.has_flag(FLAG_DEGRADED))),
+            ("hedged", Json::Bool(self.has_flag(FLAG_HEDGED))),
+            ("partial", Json::Bool(self.has_flag(FLAG_PARTIAL))),
+            ("pjrt_hash", Json::Bool(self.has_flag(FLAG_PJRT_HASH))),
+            ("live", Json::Bool(self.has_flag(FLAG_LIVE))),
+            ("slow", Json::Bool(self.has_flag(FLAG_SLOW))),
+            ("winning_replica", Json::Num(self.winning_replica as f64)),
+            ("shards_answered", Json::Num(self.shards_answered as f64)),
+            ("shards_total", Json::Num(self.shards_total as f64)),
+            ("scheme", Json::Num(self.scheme as f64)),
+            ("kind", Json::Num(self.kind as f64)),
+            ("budget_tables", Json::Num(self.budget_tables as f64)),
+        ])
+    }
+}
+
+/// One seqlock slot: sequence word + the encoded span.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; SPAN_WORDS],
+}
+
+/// Fixed-capacity multi-writer ring. Writers claim tickets and never block;
+/// torn slots are detected and skipped by readers.
+struct Ring {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    /// Drain watermark: tickets below this were already returned.
+    tail: AtomicU64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Ring {
+            slots: (0..cap).map(|_| Slot::default()).collect(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+        }
+    }
+
+    /// Zero-allocation publish of an encoded span.
+    fn push(&self, words: &[u64; SPAN_WORDS]) {
+        let t = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(t % self.slots.len() as u64) as usize];
+        slot.seq.store(t * 2 + 1, Ordering::Release);
+        for (a, &w) in slot.words.iter().zip(words.iter()) {
+            a.store(w, Ordering::Relaxed);
+        }
+        slot.seq.store(t * 2 + 2, Ordering::Release);
+    }
+
+    /// Pop every undrained, fully-written span. Concurrent drains get
+    /// disjoint ticket ranges; spans overwritten by a lapping writer are
+    /// dropped (newest data wins).
+    fn drain(&self) -> Vec<QuerySpans> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let from = self.tail.swap(head, Ordering::AcqRel).max(head.saturating_sub(cap));
+        let mut out = Vec::with_capacity((head - from) as usize);
+        for t in from..head {
+            let slot = &self.slots[(t % cap) as usize];
+            if slot.seq.load(Ordering::Acquire) != t * 2 + 2 {
+                continue;
+            }
+            let mut w = [0u64; SPAN_WORDS];
+            for (dst, a) in w.iter_mut().zip(slot.words.iter()) {
+                *dst = a.load(Ordering::Relaxed);
+            }
+            if slot.seq.load(Ordering::Acquire) != t * 2 + 2 {
+                continue;
+            }
+            out.push(QuerySpans::decode(&w));
+        }
+        out
+    }
+}
+
+/// Recorder counters, as returned by [`TraceRecorder::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Spans offered (every completed traced query).
+    pub seen: u64,
+    /// Spans captured by 1-in-N sampling.
+    pub sampled: u64,
+    /// Spans captured by the slow-query threshold.
+    pub slow_captured: u64,
+}
+
+/// Lock-free span recorder: a sampled ring plus an always-capture slow ring.
+///
+/// Both knobs default to 0 (off) so a freshly built serving stack pays only
+/// three relaxed atomic operations per query until an operator turns
+/// sampling on via the `trace` server command.
+pub struct TraceRecorder {
+    sampled: Ring,
+    slow: Ring,
+    /// Capture 1 in N offered spans; 0 disables sampling.
+    sample_every: AtomicU64,
+    sample_tick: AtomicU64,
+    /// Always capture spans with `total_us >= threshold`; 0 disables.
+    slow_threshold_us: AtomicU64,
+    seen: AtomicU64,
+    n_sampled: AtomicU64,
+    n_slow: AtomicU64,
+    next_id: AtomicU64,
+}
+
+/// Default capacity of the sampled-span ring.
+pub const DEFAULT_SAMPLED_CAP: usize = 256;
+/// Default capacity of the slow-query ring.
+pub const DEFAULT_SLOW_CAP: usize = 64;
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new(DEFAULT_SAMPLED_CAP, DEFAULT_SLOW_CAP)
+    }
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("sample_every", &self.sample_every())
+            .field("slow_threshold_us", &self.slow_threshold_us())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    /// A recorder with explicit ring capacities (each at least 1).
+    pub fn new(sampled_cap: usize, slow_cap: usize) -> Self {
+        TraceRecorder {
+            sampled: Ring::new(sampled_cap),
+            slow: Ring::new(slow_cap),
+            sample_every: AtomicU64::new(0),
+            sample_tick: AtomicU64::new(0),
+            slow_threshold_us: AtomicU64::new(0),
+            seen: AtomicU64::new(0),
+            n_sampled: AtomicU64::new(0),
+            n_slow: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// A fresh server-generated trace id (never 0, never collides with
+    /// another generated id from this recorder).
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Capture 1 in `n` spans into the sampled ring; 0 turns sampling off.
+    pub fn set_sample_every(&self, n: u64) {
+        self.sample_every.store(n, Ordering::Relaxed);
+    }
+
+    /// Current sampling cadence (0 = off).
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every.load(Ordering::Relaxed)
+    }
+
+    /// Always capture spans at least this slow (µs); 0 turns the slow log off.
+    pub fn set_slow_threshold_us(&self, us: u64) {
+        self.slow_threshold_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Current slow-query threshold in µs (0 = off).
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us.load(Ordering::Relaxed)
+    }
+
+    /// Offer a completed span. Never blocks and never allocates; with both
+    /// knobs off this is three relaxed atomic operations.
+    pub fn offer(&self, spans: &QuerySpans) {
+        self.seen.fetch_add(1, Ordering::Relaxed);
+        let every = self.sample_every.load(Ordering::Relaxed);
+        let threshold = self.slow_threshold_us.load(Ordering::Relaxed);
+        let sampled =
+            every > 0 && self.sample_tick.fetch_add(1, Ordering::Relaxed) % every == 0;
+        let slow = threshold > 0 && spans.total_us >= threshold;
+        if !sampled && !slow {
+            return;
+        }
+        let mut copy = *spans;
+        if slow {
+            copy.set_flag(FLAG_SLOW);
+        }
+        let words = copy.encode();
+        if sampled {
+            self.n_sampled.fetch_add(1, Ordering::Relaxed);
+            self.sampled.push(&words);
+        }
+        if slow {
+            self.n_slow.fetch_add(1, Ordering::Relaxed);
+            self.slow.push(&words);
+        }
+    }
+
+    /// Pop all undrained sampled spans (oldest first, up to ring capacity).
+    pub fn drain_sampled(&self) -> Vec<QuerySpans> {
+        self.sampled.drain()
+    }
+
+    /// Pop all undrained slow-query spans (oldest first, up to ring capacity).
+    pub fn drain_slow(&self) -> Vec<QuerySpans> {
+        self.slow.drain()
+    }
+
+    /// Offered / captured counters since construction.
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            seen: self.seen.load(Ordering::Relaxed),
+            sampled: self.n_sampled.load(Ordering::Relaxed),
+            slow_captured: self.n_slow.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_span(id: u64) -> QuerySpans {
+        let mut s = QuerySpans::with_id(id);
+        s.total_us = 1234;
+        s.set_stage(Stage::QueueWait, 10);
+        s.set_stage(Stage::Hash, 900);
+        s.set_stage(Stage::Probe, 200);
+        s.set_stage(Stage::Rerank, 0); // ran, took <1µs
+        s.candidates_probed = 4242;
+        s.candidates_reranked = 1000;
+        s.hits = 10;
+        s.top_k = 10;
+        s.set_flag(FLAG_DEGRADED);
+        s.set_flag(FLAG_LIVE);
+        s.winning_replica = 2;
+        s.shards_answered = 3;
+        s.shards_total = 4;
+        s.scheme = 1;
+        s.kind = 1;
+        s.budget_tables = 16;
+        s
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = sample_span(987654321);
+        assert_eq!(QuerySpans::decode(&s.encode()), s);
+        // Default (all-unset) record also roundtrips.
+        let d = QuerySpans::default();
+        assert_eq!(QuerySpans::decode(&d.encode()), d);
+    }
+
+    #[test]
+    fn mask_distinguishes_zero_from_unset() {
+        let s = sample_span(1);
+        assert_eq!(s.stage(Stage::Rerank), Some(0)); // ran in 0µs
+        assert_eq!(s.stage(Stage::Merge), None); // never ran
+        let rt = QuerySpans::decode(&s.encode());
+        assert_eq!(rt.stage(Stage::Rerank), Some(0));
+        assert_eq!(rt.stage(Stage::Merge), None);
+    }
+
+    #[test]
+    fn dominant_stage_picks_largest_recorded() {
+        let s = sample_span(1);
+        assert_eq!(s.dominant_stage(), Some(Stage::Hash));
+        assert_eq!(QuerySpans::default().dominant_stage(), None);
+    }
+
+    #[test]
+    fn absorb_member_takes_critical_path() {
+        let mut router = QuerySpans::with_id(7);
+        let mut a = QuerySpans::default();
+        a.set_stage(Stage::Probe, 100);
+        a.set_stage(Stage::Rerank, 50);
+        a.candidates_probed = 10;
+        a.candidates_reranked = 10;
+        let mut b = QuerySpans::default();
+        b.set_stage(Stage::Probe, 300);
+        b.set_stage(Stage::Rerank, 20);
+        b.candidates_probed = 30;
+        b.candidates_reranked = 25;
+        b.set_flag(FLAG_LIVE);
+        router.absorb_member(&a);
+        router.absorb_member(&b);
+        assert_eq!(router.stage(Stage::Probe), Some(300));
+        assert_eq!(router.stage(Stage::Rerank), Some(50));
+        assert_eq!(router.candidates_probed, 40);
+        assert_eq!(router.candidates_reranked, 35);
+        assert!(router.has_flag(FLAG_LIVE));
+    }
+
+    #[test]
+    fn off_by_default_captures_nothing() {
+        let r = TraceRecorder::default();
+        for i in 0..100 {
+            let mut s = sample_span(i);
+            s.total_us = 1_000_000; // would trip any plausible threshold
+            r.offer(&s);
+        }
+        assert!(r.drain_sampled().is_empty());
+        assert!(r.drain_slow().is_empty());
+        let st = r.stats();
+        assert_eq!(st.seen, 100);
+        assert_eq!(st.sampled, 0);
+        assert_eq!(st.slow_captured, 0);
+    }
+
+    #[test]
+    fn one_in_n_sampling_cadence() {
+        let r = TraceRecorder::new(1024, 64);
+        r.set_sample_every(10);
+        for i in 0..100 {
+            r.offer(&sample_span(i));
+        }
+        let got = r.drain_sampled();
+        assert_eq!(got.len(), 10, "exactly 1 in 10 of 100 offers");
+        // Ticket cadence: ids 0, 10, 20, ...
+        let ids: Vec<u64> = got.iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, (0..100).step_by(10).collect::<Vec<u64>>());
+        assert_eq!(r.stats().sampled, 10);
+        // A second drain returns nothing new.
+        assert!(r.drain_sampled().is_empty());
+    }
+
+    #[test]
+    fn slow_threshold_always_captures_and_flags() {
+        let r = TraceRecorder::default();
+        r.set_slow_threshold_us(500);
+        let mut fast = sample_span(1);
+        fast.total_us = 499;
+        let mut slow = sample_span(2);
+        slow.total_us = 500;
+        r.offer(&fast);
+        r.offer(&slow);
+        let got = r.drain_slow();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].trace_id, 2);
+        assert!(got[0].has_flag(FLAG_SLOW));
+        assert_eq!(r.stats().slow_captured, 1);
+        // Sampled ring untouched: sampling is still off.
+        assert!(r.drain_sampled().is_empty());
+    }
+
+    #[test]
+    fn ring_wrap_keeps_newest() {
+        let r = TraceRecorder::new(8, 8);
+        r.set_sample_every(1);
+        for i in 0..20 {
+            r.offer(&sample_span(i));
+        }
+        let got = r.drain_sampled();
+        assert_eq!(got.len(), 8, "ring keeps only the newest capacity spans");
+        let ids: Vec<u64> = got.iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn drain_watermark_resumes_where_it_left_off() {
+        let r = TraceRecorder::new(64, 8);
+        r.set_sample_every(1);
+        for i in 0..5 {
+            r.offer(&sample_span(i));
+        }
+        assert_eq!(r.drain_sampled().len(), 5);
+        for i in 5..9 {
+            r.offer(&sample_span(i));
+        }
+        let got = r.drain_sampled();
+        let ids: Vec<u64> = got.iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear() {
+        use std::sync::Arc;
+        let r = Arc::new(TraceRecorder::new(32, 8));
+        r.set_sample_every(1);
+        let mut threads = Vec::new();
+        for t in 0..4u64 {
+            let r = Arc::clone(&r);
+            threads.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let mut s = sample_span(t * 1000 + i);
+                    // Correlated payload lets the reader detect tearing.
+                    s.total_us = s.trace_id * 3;
+                    s.candidates_probed = s.trace_id * 7;
+                    r.offer(&s);
+                }
+            }));
+        }
+        // Drain concurrently with the writers.
+        let mut seen = 0usize;
+        for _ in 0..50 {
+            for s in r.drain_sampled() {
+                assert_eq!(s.total_us, s.trace_id * 3, "torn span");
+                assert_eq!(s.candidates_probed, s.trace_id * 7, "torn span");
+                seen += 1;
+            }
+        }
+        for th in threads {
+            th.join().unwrap();
+        }
+        for s in r.drain_sampled() {
+            assert_eq!(s.total_us, s.trace_id * 3);
+            assert_eq!(s.candidates_probed, s.trace_id * 7);
+            seen += 1;
+        }
+        assert!(seen > 0);
+        assert_eq!(r.stats().seen, 2000);
+    }
+
+    #[test]
+    fn generated_ids_are_unique_and_nonzero() {
+        let r = TraceRecorder::default();
+        let a = r.next_trace_id();
+        let b = r.next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn span_json_has_wire_fields() {
+        let s = sample_span(42);
+        let j = s.to_json();
+        assert_eq!(j.get("trace_id").and_then(|v| v.as_f64()), Some(42.0));
+        assert_eq!(
+            j.get("dominant_stage").and_then(|v| v.as_str()).map(str::to_string),
+            Some("hash".to_string())
+        );
+        let stages = j.get("stages").expect("stages object");
+        assert_eq!(stages.get("hash").and_then(|v| v.as_f64()), Some(900.0));
+        assert_eq!(stages.get("rerank").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(stages.get("merge").is_none(), "unset stage omitted");
+        assert_eq!(j.get("degraded"), Some(&Json::Bool(true)));
+    }
+}

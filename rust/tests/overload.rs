@@ -101,6 +101,11 @@ fn overload_sheds_structurally_keeps_pings_fast_and_recovers() {
         });
     }
 
+    // Baseline snapshot: the assertions below use the interval delta so
+    // they describe exactly the overload window, not whatever the
+    // engine counted before it.
+    let baseline = engine.metrics().snapshot();
+
     // Health-check thread: pings ride the connection thread, never the
     // batcher queue, so they must stay fast while queries are drowning.
     let stop = Arc::new(AtomicBool::new(false));
@@ -177,9 +182,18 @@ fn overload_sheds_structurally_keeps_pings_fast_and_recovers() {
     assert!(ok > 0, "the server must keep serving under overload");
     assert!(shed > 0, "16 clients against a queue of 8 must shed");
     assert!(degraded > 0, "sustained >target p99 must degrade admitted queries");
-    let snap = engine.metrics().snapshot();
+    let snap = engine.metrics().snapshot().delta(&baseline);
     assert!(snap.shed >= shed as u64);
     assert_eq!(snap.degraded_queries, degraded as u64);
+    assert!(
+        snap.shed_rate() > 0.0,
+        "interval shed rate must be positive when clients saw {shed} sheds"
+    );
+    assert!(
+        snap.queries >= ok as u64,
+        "interval served {} queries but clients saw {ok} ok replies",
+        snap.queries
+    );
 
     // Health checks stayed bounded while queries queued behind 20 ms
     // batches: inline handling, not the admission queue.

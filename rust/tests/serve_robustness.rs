@@ -537,3 +537,169 @@ fn upsert_batch_command_validates_whole_batch() {
     assert!(resp.get("error").and_then(Json::as_str).unwrap().contains("frozen"));
     batcher.shutdown();
 }
+
+// -- PR 9: tracing / observability surface ----------------------------------
+
+use alsh::coordinator::{handle_router_request, ReplicaConfig, ShardedRouter};
+
+/// `trace`, `slowlog`, and `metrics_prom` are answered inline on the
+/// connection thread, exactly like `ping` — never through the batcher
+/// queue — so the observability surface stays responsive under load.
+#[test]
+fn trace_slowlog_and_metrics_prom_answer_inline_like_ping() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let (h, e) = (handle.clone(), Arc::clone(&engine));
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, h, e, ServeConfig::default());
+        });
+    }
+    let mut client = Client::connect(addr);
+    for cmd in ["ping", "trace", "slowlog", "metrics_prom"] {
+        let resp = client.roundtrip(&format!(r#"{{"cmd": "{cmd}"}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{cmd}: {resp:?}");
+    }
+    // The Prometheus exposition carries the expected families.
+    let resp = client.roundtrip(r#"{"cmd": "metrics_prom"}"#);
+    assert_eq!(
+        resp.get("content_type").and_then(Json::as_str),
+        Some("text/plain; version=0.0.4")
+    );
+    let body = resp.get("body").and_then(Json::as_str).expect("exposition body");
+    assert!(body.contains("# HELP alsh_queries_total"), "{body}");
+    assert!(body.contains("# TYPE alsh_latency_us histogram"), "{body}");
+    assert!(body.contains("alsh_stage_latency_us"), "{body}");
+    assert!(body.contains(r#"le="+Inf""#), "{body}");
+    batcher.shutdown();
+}
+
+/// Bad sampling knobs on the `trace` command are structured rejections;
+/// valid knobs reconfigure the recorder and are echoed back.
+#[test]
+fn trace_command_validates_sampling_config() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+    for req in [
+        r#"{"cmd": "trace", "sample_every": -1}"#,
+        r#"{"cmd": "trace", "sample_every": 0.5}"#,
+        r#"{"cmd": "trace", "sample_every": "often"}"#,
+        r#"{"cmd": "trace", "slow_threshold_us": -5}"#,
+        r#"{"cmd": "trace", "slow_threshold_us": "slow"}"#,
+    ] {
+        let resp = h(req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+    }
+    // Rejections did not half-apply any config.
+    let resp = h(r#"{"cmd": "trace"}"#);
+    assert_eq!(resp.get("sample_every").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(resp.get("slow_threshold_us").and_then(Json::as_f64), Some(0.0));
+    // Valid knobs round-trip.
+    let resp = h(r#"{"cmd": "trace", "sample_every": 1, "slow_threshold_us": 1000}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("sample_every").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(resp.get("slow_threshold_us").and_then(Json::as_f64), Some(1000.0));
+    batcher.shutdown();
+}
+
+/// A client-supplied trace id comes back byte-for-byte on success and on
+/// every error past request parsing; absent, the server assigns one; a
+/// malformed one is a structured `invalid_argument`.
+#[test]
+fn trace_id_echoes_on_success_and_error_replies() {
+    let (engine, batcher) = boot(8);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+
+    // Success: the id survives the round trip as the same integer token.
+    let resp = h(&format!(
+        r#"{{"vector": {q}, "top_k": 3, "deadline_ms": 60000, "trace_id": 12345678901}}"#
+    ));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("trace_id").and_then(Json::as_f64), Some(12345678901.0));
+    let wire = resp.to_string();
+    assert!(wire.contains("12345678901"), "{wire}");
+    assert!(!wire.contains("12345678901."), "integer id grew a decimal point: {wire}");
+
+    // Absent: the server assigns a nonzero id.
+    let resp = h(&format!(r#"{{"vector": {q}, "top_k": 3, "deadline_ms": 60000}}"#));
+    assert!(resp.get("trace_id").and_then(Json::as_f64).unwrap() >= 1.0, "{resp:?}");
+
+    // Errors past parsing echo it too: bad dim, bad top_k, expired deadline.
+    let resp = h(r#"{"vector": [1.0, 2.0], "trace_id": 77}"#);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert_eq!(resp.get("trace_id").and_then(Json::as_f64), Some(77.0));
+    let resp = h(&format!(r#"{{"vector": {q}, "top_k": 0, "trace_id": 78}}"#));
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert_eq!(resp.get("trace_id").and_then(Json::as_f64), Some(78.0));
+    let resp = h(&format!(r#"{{"vector": {q}, "deadline_ms": 0.001, "trace_id": 79}}"#));
+    assert_eq!(code_of(&resp), "deadline_exceeded");
+    assert_eq!(resp.get("trace_id").and_then(Json::as_f64), Some(79.0));
+
+    // A malformed trace_id is itself a structured rejection.
+    for req in [
+        format!(r#"{{"vector": {q}, "trace_id": "abc"}}"#),
+        format!(r#"{{"vector": {q}, "trace_id": -1}}"#),
+        format!(r#"{{"vector": {q}, "trace_id": 1.5}}"#),
+    ] {
+        let resp = h(&req);
+        assert_eq!(code_of(&resp), "invalid_argument", "{req}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("trace_id"),
+            "{req} → {resp:?}"
+        );
+    }
+    batcher.shutdown();
+}
+
+/// The routed front end serves the same observability surface: inline
+/// trace/slowlog/metrics_prom, stage breakdown under `metrics`, and the
+/// same trace-id echo contract on success and error replies.
+#[test]
+fn routed_server_serves_trace_surface_and_echoes_trace_id() {
+    let items = norm_spread_items(200, 8, 9);
+    let router = ShardedRouter::build_replicated(
+        &items,
+        2,
+        2,
+        AlshParams::default(),
+        ReplicaConfig::default(),
+        10,
+    );
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_router_request(line, &router, &cfg);
+
+    for cmd in ["ping", "trace", "slowlog", "metrics_prom"] {
+        let resp = h(&format!(r#"{{"cmd": "{cmd}"}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{cmd}: {resp:?}");
+    }
+    let q = r#"[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]"#;
+    let resp = h(&format!(r#"{{"vector": {q}, "top_k": 3, "trace_id": 4242}}"#));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("trace_id").and_then(Json::as_f64), Some(4242.0));
+
+    let resp = h(r#"{"vector": [1.0], "trace_id": 4343}"#);
+    assert_eq!(code_of(&resp), "invalid_argument");
+    assert_eq!(resp.get("trace_id").and_then(Json::as_f64), Some(4343.0));
+    let resp = h(&format!(r#"{{"vector": {q}, "trace_id": "nope"}}"#));
+    assert_eq!(code_of(&resp), "invalid_argument");
+
+    // Routed metrics carry the per-stage breakdown, and the routed
+    // stages actually saw the query above.
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    let m = resp.get("metrics").expect("metrics object");
+    let stages = m.get("stages").expect("stage breakdown");
+    let sw = stages.get("shard_wait").expect("shard_wait stage");
+    assert!(sw.get("count").and_then(Json::as_f64).unwrap() >= 1.0, "{resp:?}");
+    // And the Prometheus body exposes the router counters.
+    let resp = h(r#"{"cmd": "metrics_prom"}"#);
+    let body = resp.get("body").and_then(Json::as_str).unwrap();
+    assert!(body.contains("alsh_hedge_fires_total"), "{body}");
+    assert!(body.contains(r#"alsh_stage_latency_us{stage="shard_wait",quantile="0.99"}"#), "{body}");
+}

@@ -1,0 +1,373 @@
+//! End-to-end tracing: guilty-stage attribution under injected faults.
+//!
+//! The observability claim is that a slow query's span *names the stage
+//! that made it slow*. This suite proves it with the existing fault
+//! hooks, across the whole serving matrix:
+//!
+//! - engine front end, flat/banded × frozen/live: a [`FaultPlan`] delay
+//!   inside the hash worker's roundtrip must surface in the slow-query
+//!   log with `dominant_stage == "hash"`;
+//! - routed front end, flat/banded: a [`ShardFaultPlan`] stall in every
+//!   member of one shard must surface with
+//!   `dominant_stage == "shard_wait"`.
+//!
+//! Plus the aggregate surfaces: after traffic, stage percentiles are
+//! visible through both `metrics` (JSON) and `metrics_prom`
+//! (Prometheus text) without any sampling enabled.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use alsh::coordinator::{
+    handle_request, handle_router_request, BatcherConfig, FaultPlan, MipsEngine, PjrtBatcher,
+    ReplicaConfig, ServeConfig, ShardFaultPlan, ShardedRouter,
+};
+use alsh::index::{AlshParams, BandedParams, LiveConfig};
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+fn norm_spread_items(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..d).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+fn live_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "alsh_trace_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A batcher whose hash worker sleeps 30ms on every batch — the
+/// injected latency lands inside the worker roundtrip, which the
+/// batcher stamps as the `hash` stage.
+fn spawn_slow_hash_batcher(engine: &Arc<MipsEngine>) -> PjrtBatcher {
+    PjrtBatcher::spawn(
+        Arc::clone(engine),
+        "definitely-not-an-artifacts-dir",
+        BatcherConfig {
+            max_wait: Duration::from_micros(200),
+            fault_plan: Some(FaultPlan {
+                delay_from: 0,
+                delay_until: usize::MAX,
+                delay: Duration::from_millis(30),
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    )
+    .expect("batcher")
+}
+
+fn query_line(dim: usize, trace_id: u64) -> String {
+    let comps: Vec<String> = (0..dim).map(|i| format!("{:.3}", 0.05 * (i as f64 + 1.0))).collect();
+    format!(
+        r#"{{"vector": [{}], "top_k": 5, "deadline_ms": 60000, "trace_id": {trace_id}}}"#,
+        comps.join(", ")
+    )
+}
+
+/// Find the captured span for `trace_id` in a `slowlog` reply.
+fn slow_span(resp: &Json, trace_id: u64, tag: &str) -> Json {
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{tag}: {resp:?}");
+    let spans = resp.get("spans").and_then(Json::as_arr).expect("slowlog spans array");
+    spans
+        .iter()
+        .find(|s| s.get("trace_id").and_then(Json::as_f64) == Some(trace_id as f64))
+        .unwrap_or_else(|| panic!("{tag}: slow query {trace_id} not in slowlog: {spans:?}"))
+        .clone()
+}
+
+/// Engine-side matrix leg: arm the recorder, run one slow query, and
+/// assert the slow log blames the hash stage.
+fn assert_hash_stage_guilty(engine: Arc<MipsEngine>, dim: usize, tag: &str) {
+    let batcher = spawn_slow_hash_batcher(&engine);
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    // Arm: capture everything over 10ms — a third of the injected delay.
+    let resp = h(r#"{"cmd": "trace", "sample_every": 1, "slow_threshold_us": 10000}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{tag}: {resp:?}");
+
+    let trace_id = 990_042;
+    let resp = h(&query_line(dim, trace_id));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{tag}: {resp:?}");
+    assert_eq!(
+        resp.get("trace_id").and_then(Json::as_f64),
+        Some(trace_id as f64),
+        "{tag}: reply must echo the client trace_id"
+    );
+
+    let span = slow_span(&h(r#"{"cmd": "slowlog"}"#), trace_id, tag);
+    assert_eq!(span.get("slow"), Some(&Json::Bool(true)), "{tag}: {span:?}");
+    assert_eq!(
+        span.get("dominant_stage").and_then(Json::as_str),
+        Some("hash"),
+        "{tag}: injected worker delay must be attributed to the hash stage: {span:?}"
+    );
+    let hash_us = span
+        .get("stages")
+        .and_then(|s| s.get("hash"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    assert!(
+        hash_us >= 10_000.0,
+        "{tag}: 30ms injected but hash stage shows only {hash_us}µs"
+    );
+    let total = span.get("total_us").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(total >= hash_us, "{tag}: total {total}µs < hash {hash_us}µs");
+    batcher.shutdown();
+}
+
+#[test]
+fn slowlog_blames_hash_stage_flat_frozen() {
+    let items = norm_spread_items(300, 8, 11);
+    let engine = Arc::new(MipsEngine::new(&items, AlshParams::default(), 2));
+    assert_hash_stage_guilty(engine, 8, "flat/frozen");
+}
+
+#[test]
+fn slowlog_blames_hash_stage_banded_frozen() {
+    let items = norm_spread_items(300, 8, 12);
+    let engine = Arc::new(MipsEngine::new_banded(
+        &items,
+        AlshParams::default(),
+        BandedParams { n_bands: 3 },
+        3,
+    ));
+    assert_hash_stage_guilty(engine, 8, "banded/frozen");
+}
+
+#[test]
+fn slowlog_blames_hash_stage_flat_live() {
+    let dir = live_dir("flat");
+    let items = norm_spread_items(300, 8, 13);
+    let engine = Arc::new(
+        MipsEngine::create_live(
+            &dir,
+            &items,
+            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 4 },
+        )
+        .expect("live engine"),
+    );
+    assert_hash_stage_guilty(engine, 8, "flat/live");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slowlog_blames_hash_stage_banded_live() {
+    let dir = live_dir("banded");
+    let items = norm_spread_items(300, 8, 14);
+    let engine = Arc::new(
+        MipsEngine::create_live(
+            &dir,
+            &items,
+            LiveConfig { params: AlshParams::default(), n_bands: 3, seed: 5 },
+        )
+        .expect("live engine"),
+    );
+    assert_hash_stage_guilty(engine, 8, "banded/live");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Routed matrix leg: stall *every* member of shard 0 (so the hedged
+/// backup cannot dodge the stall) and assert the slow log blames
+/// shard_wait.
+fn assert_shard_wait_guilty(router: &ShardedRouter, dim: usize, tag: &str) {
+    for member in 0..2 {
+        router.set_shard_faults(
+            0,
+            member,
+            ShardFaultPlan {
+                stall_from: 0,
+                stall_until: usize::MAX,
+                stall: Duration::from_millis(30),
+                ..Default::default()
+            },
+        );
+    }
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_router_request(line, router, &cfg);
+
+    let resp = h(r#"{"cmd": "trace", "sample_every": 1, "slow_threshold_us": 10000}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{tag}: {resp:?}");
+
+    let trace_id = 770_011;
+    let resp = h(&query_line(dim, trace_id));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{tag}: {resp:?}");
+    assert_eq!(
+        resp.get("trace_id").and_then(Json::as_f64),
+        Some(trace_id as f64),
+        "{tag}: routed reply must echo the client trace_id"
+    );
+
+    let span = slow_span(&h(r#"{"cmd": "slowlog"}"#), trace_id, tag);
+    assert_eq!(span.get("slow"), Some(&Json::Bool(true)), "{tag}: {span:?}");
+    assert_eq!(
+        span.get("dominant_stage").and_then(Json::as_str),
+        Some("shard_wait"),
+        "{tag}: stalled shard must be attributed to shard_wait: {span:?}"
+    );
+    let wait_us = span
+        .get("stages")
+        .and_then(|s| s.get("shard_wait"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    assert!(
+        wait_us >= 10_000.0,
+        "{tag}: 30ms stall injected but shard_wait shows only {wait_us}µs"
+    );
+}
+
+#[test]
+fn slowlog_blames_shard_wait_flat_routed() {
+    let items = norm_spread_items(400, 8, 21);
+    let router = ShardedRouter::build_replicated(
+        &items,
+        2,
+        2,
+        AlshParams::default(),
+        ReplicaConfig::default(),
+        31,
+    );
+    assert_shard_wait_guilty(&router, 8, "flat/routed");
+}
+
+#[test]
+fn slowlog_blames_shard_wait_banded_routed() {
+    let items = norm_spread_items(400, 8, 22);
+    let router = ShardedRouter::build_replicated_banded(
+        &items,
+        2,
+        2,
+        AlshParams::default(),
+        BandedParams { n_bands: 3 },
+        ReplicaConfig::default(),
+        32,
+    );
+    assert_shard_wait_guilty(&router, 8, "banded/routed");
+}
+
+/// Stage aggregates are visible with *no sampling at all*: the per-stage
+/// histograms feed `metrics` and `metrics_prom` directly, so latency
+/// attribution works even when the span recorder is off.
+#[test]
+fn stage_percentiles_visible_without_sampling() {
+    let items = norm_spread_items(300, 8, 41);
+    let engine = Arc::new(MipsEngine::new(&items, AlshParams::default(), 6));
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "definitely-not-an-artifacts-dir",
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+    )
+    .expect("batcher");
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    for i in 0..20 {
+        let resp = h(&query_line(8, 1000 + i));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    }
+
+    // Recorder untouched: nothing sampled, nothing slow-captured.
+    let resp = h(r#"{"cmd": "trace"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(resp.get("sampled").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(resp.get("slow_captured").and_then(Json::as_f64), Some(0.0));
+
+    // …but the JSON metrics carry full stage percentiles and flow counts.
+    let resp = h(r#"{"cmd": "metrics"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let m = resp.get("metrics").expect("metrics object");
+    assert!(m.get("candidates_probed").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    assert!(m.get("candidates_reranked").and_then(Json::as_f64).is_some());
+    let stages = m.get("stages").expect("stages breakdown");
+    for name in ["queue_wait", "hash", "probe", "rerank"] {
+        let st = stages.get(name).unwrap_or_else(|| panic!("stages missing {name}: {m:?}"));
+        assert!(
+            st.get("count").and_then(Json::as_f64).unwrap_or(0.0) >= 20.0,
+            "stage {name} undercounted: {st:?}"
+        );
+        assert!(st.get("p50_us").and_then(Json::as_f64).is_some(), "{name} missing p50");
+        assert!(st.get("p99_us").and_then(Json::as_f64).is_some(), "{name} missing p99");
+    }
+
+    // …and the Prometheus exposition names every stage.
+    let resp = h(r#"{"cmd": "metrics_prom"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let body = resp.get("body").and_then(Json::as_str).expect("prom body");
+    for name in ["queue_wait", "hash", "probe", "rerank"] {
+        assert!(
+            body.contains(&format!(r#"alsh_stage_latency_us{{stage="{name}",quantile="0.99"}}"#)),
+            "prom body missing p99 for {name}"
+        );
+        assert!(
+            body.contains(&format!(r#"alsh_stage_latency_us_count{{stage="{name}"}}"#)),
+            "prom body missing count for {name}"
+        );
+    }
+    batcher.shutdown();
+}
+
+/// The sampled ring captures ordinary (fast) traffic at 1-in-N, drains
+/// once, and drained spans do not reappear.
+#[test]
+fn sampled_ring_captures_one_in_n_and_drains_once() {
+    let items = norm_spread_items(300, 8, 51);
+    let engine = Arc::new(MipsEngine::new(&items, AlshParams::default(), 7));
+    let batcher = PjrtBatcher::spawn(
+        Arc::clone(&engine),
+        "definitely-not-an-artifacts-dir",
+        BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+    )
+    .expect("batcher");
+    let handle = batcher.handle();
+    let cfg = ServeConfig::default();
+    let h = |line: &str| handle_request(line, &handle, &engine, &cfg);
+
+    let resp = h(r#"{"cmd": "trace", "sample_every": 4}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+
+    for i in 0..40 {
+        let resp = h(&query_line(8, 2000 + i));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    }
+
+    let resp = h(r#"{"cmd": "trace"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let sampled = resp.get("sampled").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(
+        (8.0..=14.0).contains(&sampled),
+        "1-in-4 sampling over 40 queries captured {sampled} spans"
+    );
+    let spans = resp.get("spans").and_then(Json::as_arr).expect("spans");
+    assert!(!spans.is_empty(), "drain returned no spans despite sampled={sampled}");
+    for s in spans {
+        let tid = s.get("trace_id").and_then(Json::as_f64).unwrap_or(0.0);
+        assert!(
+            (2000.0..2040.0).contains(&tid),
+            "sampled span has foreign trace_id {tid}"
+        );
+        // A fast query must not be marked slow.
+        assert_eq!(s.get("slow"), Some(&Json::Bool(false)), "{s:?}");
+    }
+
+    // Second drain: ring is empty (stats persist, spans don't repeat).
+    let resp = h(r#"{"cmd": "trace"}"#);
+    let again = resp.get("spans").and_then(Json::as_arr).expect("spans");
+    assert!(again.is_empty(), "drained spans reappeared: {again:?}");
+    batcher.shutdown();
+}

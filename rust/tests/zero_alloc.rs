@@ -186,3 +186,82 @@ fn banded_steady_state_queries_allocate_nothing() {
         after - before
     );
 }
+
+/// PR 9: the traced engine path keeps the contract. Filling a
+/// [`alsh::coordinator::QuerySpans`], recording per-stage histograms,
+/// and offering the span to the trace recorder allocate nothing — with
+/// sampling disabled (the default: an offer is three relaxed atomics)
+/// *and* at 100% sampling plus a slow-log threshold (ring slots are
+/// preallocated; the seqlock writer never allocates).
+#[test]
+fn traced_queries_with_recorder_allocate_nothing() {
+    use alsh::coordinator::{MipsEngine, QuerySpans};
+    use alsh::index::ProbeBudget;
+
+    let mut rng = Rng::seed_from_u64(27);
+    let items: Vec<Vec<f32>> = (0..2000)
+        .map(|_| {
+            let s = 0.2 + 1.8 * rng.f32();
+            (0..24).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect();
+    let engine = MipsEngine::new(&items, AlshParams::default(), 28);
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..24).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let metrics = engine.metrics();
+    let mut scratch = engine.scratch();
+
+    // Warm-up.
+    let mut sink = 0usize;
+    for q in &queries {
+        let mut spans = QuerySpans::default();
+        sink += engine
+            .query_traced_into(q, 10, ProbeBudget::full(), &mut spans, &mut scratch)
+            .len();
+        metrics.tracer.offer(&spans);
+    }
+
+    // Sampling off (the default).
+    let before = allocs_on_this_thread();
+    for _ in 0..3 {
+        for q in &queries {
+            let mut spans = QuerySpans::default();
+            sink += engine
+                .query_traced_into(q, 10, ProbeBudget::full(), &mut spans, &mut scratch)
+                .len();
+            metrics.tracer.offer(&spans);
+        }
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "traced path with sampling off performed {} heap allocations",
+        after - before
+    );
+
+    // 100% sampling and an always-on slow threshold: every offer encodes
+    // into the preallocated rings.
+    metrics.tracer.set_sample_every(1);
+    metrics.tracer.set_slow_threshold_us(1);
+    let before = allocs_on_this_thread();
+    for _ in 0..3 {
+        for q in &queries {
+            let mut spans = QuerySpans::default();
+            sink += engine
+                .query_traced_into(q, 10, ProbeBudget::full(), &mut spans, &mut scratch)
+                .len();
+            metrics.tracer.offer(&spans);
+        }
+    }
+    let after = allocs_on_this_thread();
+    assert!(sink > 0, "queries must return results");
+    assert_eq!(
+        after - before,
+        0,
+        "traced path at 100% sampling performed {} heap allocations",
+        after - before
+    );
+    assert!(metrics.tracer.stats().sampled > 0, "sampling on but nothing sampled");
+}
