@@ -1,9 +1,9 @@
 //! Closed-loop serving benchmark over the robust coordinator stack,
 //! emitting `BENCH_serve.json` (sections `serve`, `overload`, `live`,
-//! `replica`, `observability`) so the serving trajectory — throughput,
-//! tail latency, shed rate, degraded fraction, recall-at-degraded,
-//! tracing overhead — is ratcheted across PRs like the query and build
-//! benches.
+//! `replica`, `observability`, `writes`) so the serving trajectory —
+//! throughput, tail latency, shed rate, degraded fraction,
+//! recall-at-degraded, tracing overhead, replicated-write tails — is
+//! ratcheted across PRs like the query and build benches.
 //!
 //! Phase 1 drives a healthy server with closed-loop TCP clients and
 //! records throughput and p50/p99/p999. Phase 2 measures recall@10 of
@@ -33,10 +33,20 @@
 //! sampling with the slow log armed; plus the per-stage latency
 //! breakdown. Lands in section `observability`.
 //!
+//! Phase 7 drives the replicated write path: a live replicated router
+//! takes a closed-loop upsert stream while every member's background
+//! compactor churns and the divergence scrubber sweeps — the write p99
+//! under that churn is the ratcheted number. One member is killed
+//! mid-stream (`write_crash_at`); every quorum-acked write must survive
+//! to the final converged state and be served. A second small-cap group
+//! measures the stall rate structured `write_stalled` backpressure
+//! produces under sustained batch load. Lands in section `writes`.
+//!
 //! Env knobs (CI sizes down): `ALSH_SERVE_N` items, `ALSH_SERVE_CLIENTS`
 //! × `ALSH_SERVE_QPC` healthy queries, `ALSH_SERVE_OVER_CLIENTS` ×
 //! `ALSH_SERVE_OVER_QPC` overload queries, `ALSH_SERVE_MUT` mutations in
-//! the live phase, `ALSH_SERVE_REP_Q` queries per replica measurement.
+//! the live phase, `ALSH_SERVE_REP_Q` queries per replica measurement,
+//! `ALSH_SERVE_WRITES` replicated writes in phase 7.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -49,7 +59,7 @@ use alsh::coordinator::{
     ServeConfig, ShardFaultPlan, ShardedRouter, Stage,
 };
 use alsh::eval::gold_top_t;
-use alsh::index::{AlshParams, LiveConfig, Mapped, ProbeBudget};
+use alsh::index::{AlshParams, LiveConfig, Mapped, ProbeBudget, WriteStalled};
 use alsh::util::bench::merge_bench_json_file;
 use alsh::util::json::Json;
 use alsh::util::Rng;
@@ -345,7 +355,7 @@ fn main() {
         MipsEngine::create_live(
             &live_dir,
             &items,
-            LiveConfig { params, n_bands: 1, seed: 14 },
+            LiveConfig { params, n_bands: 1, seed: 14, ..LiveConfig::default() },
         )
         .expect("live engine"),
     );
@@ -693,6 +703,190 @@ fn main() {
     );
     obs_batcher.shutdown();
 
+    // ── Phase 7: replicated writes under compaction + scrub churn ────
+    let n_writes = env_usize("ALSH_SERVE_WRITES", 400);
+    let (wr_shards, wr_replicas) = (2usize, 3usize);
+    let wr_dir = std::env::temp_dir().join(format!(
+        "alsh_serve_bench_wr_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let wr_router: Arc<ShardedRouter> = Arc::new(
+        ShardedRouter::create_live_replicated(
+            &wr_dir,
+            &items,
+            wr_shards,
+            wr_replicas,
+            LiveConfig { params, n_bands: 1, seed: 17, ..LiveConfig::default() },
+            ReplicaConfig::default(),
+        )
+        .expect("live replicated router"),
+    );
+    println!(
+        "phase 7: {wr_shards}×{wr_replicas} live replicated router, {n_writes} replicated writes \
+         under compaction + scrub churn"
+    );
+    // Churn: every member compacts on a low threshold while the
+    // divergence scrubber sweeps continuously — the write tail is
+    // measured against both running.
+    for s in 0..wr_shards {
+        for r in 0..wr_replicas {
+            wr_router
+                .member_engine(s, r)
+                .live()
+                .expect("live member")
+                .spawn_compactor(n_writes / 8 + 1, Duration::from_millis(1));
+        }
+    }
+    ShardedRouter::spawn_scrubber(&wr_router, Duration::from_millis(10));
+    // Kill one member a third of the way into its shard's stream: writes
+    // must keep acking at quorum and the scrubber drags it back in
+    // (suffix replay, or rebuild when its donors have compacted past the
+    // suffix).
+    wr_router.set_shard_faults(
+        1,
+        2,
+        ShardFaultPlan {
+            write_crash_at: Some(n_writes / (3 * wr_shards)),
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::seed_from_u64(6000);
+    let mut wr_lats: Vec<u64> = Vec::with_capacity(n_writes);
+    let mut degraded_writes = 0usize;
+    let mut acked_ids: Vec<(u32, Vec<f32>)> = Vec::with_capacity(n_writes);
+    let t5 = Instant::now();
+    for i in 0..n_writes {
+        let id = (300_000 + i) as u32;
+        let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+        let t = Instant::now();
+        let r = wr_router.upsert(id, &v).expect("replicated upsert");
+        wr_lats.push(t.elapsed().as_micros() as u64);
+        assert!(
+            r.acked * 2 > wr_replicas,
+            "write to shard {} under quorum: {} of {}",
+            r.shard,
+            r.acked,
+            r.replicas
+        );
+        if r.degraded {
+            degraded_writes += 1;
+        }
+        acked_ids.push((id, v));
+    }
+    let wr_wall = t5.elapsed();
+    wr_lats.sort_unstable();
+    let wr_wps = n_writes as f64 / wr_wall.as_secs_f64();
+    wr_router.stop_scrubber();
+    for s in 0..wr_shards {
+        for r in 0..wr_replicas {
+            wr_router.member_engine(s, r).live().expect("live member").stop_compactor();
+        }
+    }
+    // Final convergence pass, then verify durability of every acked
+    // write and byte-level agreement across each group.
+    let wr_report = wr_router.scrub_now();
+    assert!(wr_report.failed.is_empty(), "scrub repairs failed: {:?}", wr_report.failed);
+    for s in 0..wr_shards {
+        let sums: Vec<u64> = (0..wr_replicas)
+            .map(|r| {
+                wr_router.member_engine(s, r).state_checksum().expect("live member checksum")
+            })
+            .collect();
+        assert!(
+            sums.windows(2).all(|w| w[0] == w[1]),
+            "shard {s} members diverged after the churn run: {sums:?}"
+        );
+    }
+    let surviving: Vec<std::collections::HashSet<u32>> = (0..wr_shards)
+        .map(|s| {
+            let e = wr_router.member_engine(s, 0);
+            e.live().expect("live member").live_items().iter().map(|(id, _)| *id).collect()
+        })
+        .collect();
+    for (id, _) in &acked_ids {
+        let s = wr_router.shard_of(*id);
+        assert!(surviving[s].contains(id), "acked write {id} lost across the member crash");
+    }
+    // Sampled serve check: with top_k covering the corpus, an id missing
+    // from the answer is missing from the index, not outranked.
+    let serve_k = n_items + n_writes;
+    for (id, v) in acked_ids.iter().step_by((n_writes / 20).max(1)) {
+        let hits = wr_router.query(v, serve_k);
+        assert!(hits.iter().any(|h| h.id == *id), "acked write {id} not served");
+    }
+    let wr_snap = wr_router.metrics().snapshot();
+    println!(
+        "  {n_writes} writes in {wr_wall:?} → {wr_wps:.0} w/s; p50 {}µs p99 {}µs; \
+         {degraded_writes} degraded acks; {} suffix replays, {} rebuilds",
+        pct(&wr_lats, 0.50),
+        pct(&wr_lats, 0.99),
+        wr_snap.catch_up_replays,
+        wr_snap.replica_repairs,
+    );
+    drop(wr_router);
+    std::fs::remove_dir_all(&wr_dir).ok();
+
+    // Stall rate at the delta cap: a small-cap group under sustained
+    // batch load answers structured write_stalled while reads keep
+    // answering.
+    let stall_dir = std::env::temp_dir().join(format!(
+        "alsh_serve_bench_stall_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let stall_cap = 256usize;
+    let stall_router: ShardedRouter = ShardedRouter::create_live_replicated(
+        &stall_dir,
+        &items[..n_items.min(1000)],
+        1,
+        2,
+        LiveConfig { params, n_bands: 1, seed: 18, delta_cap: stall_cap, ..LiveConfig::default() },
+        ReplicaConfig::default(),
+    )
+    .expect("stall router");
+    let batch_rows = 32usize;
+    let stall_attempts = 24usize;
+    let mut rng = Rng::seed_from_u64(6500);
+    let mut stalls = 0usize;
+    let mut retry_hint_ms = 0u64;
+    for a in 0..stall_attempts {
+        let batch: Vec<(u32, Vec<f32>)> = (0..batch_rows)
+            .map(|j| {
+                let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * 0.5).collect();
+                ((400_000 + a * batch_rows + j) as u32, v)
+            })
+            .collect();
+        match stall_router.upsert_batch(&batch) {
+            Ok(_) => {}
+            Err(e) => {
+                let stalled = e.downcast_ref::<WriteStalled>().unwrap_or_else(|| {
+                    panic!("write failed with a non-stall error: {e:#}")
+                });
+                retry_hint_ms = stalled.retry_after_ms;
+                stalls += 1;
+            }
+        }
+        // Reads must keep answering while the write path is stalled.
+        let reply =
+            stall_router.query_replicated(&items[a % n_items.min(1000)], top_k, ProbeBudget::full());
+        assert!(!reply.degraded, "a write stall degraded the read path");
+    }
+    let stall_rate = stalls as f64 / stall_attempts as f64;
+    assert!(stalls >= 1, "delta cap {stall_cap} never produced backpressure");
+    println!(
+        "  stall leg: {stalls}/{stall_attempts} batches stalled at cap {stall_cap} \
+         (rate {stall_rate:.2}, retry hint {retry_hint_ms}ms), reads unaffected"
+    );
+    drop(stall_router);
+    std::fs::remove_dir_all(&stall_dir).ok();
+
     let mut obs_entries: Vec<(String, Json)> = vec![
         ("queries_per_round".into(), num(off_seen as f64)),
         ("p99_off_us".into(), num(off_p99 as f64)),
@@ -780,6 +974,24 @@ fn main() {
             ("scrub_detected".into(), num(report.corrupted.len() as f64)),
             ("scrub_repaired".into(), num(report.repaired.len() as f64)),
             ("scrub_ms".into(), num(scrub_ms)),
+        ],
+    );
+    merge_bench_json_file(
+        "BENCH_serve.json",
+        "writes",
+        vec![
+            ("shards".into(), num(wr_shards as f64)),
+            ("replicas".into(), num(wr_replicas as f64)),
+            ("writes".into(), num(n_writes as f64)),
+            ("throughput_wps".into(), num(wr_wps)),
+            ("write_p50_us".into(), num(pct(&wr_lats, 0.50) as f64)),
+            ("write_p99_us".into(), num(pct(&wr_lats, 0.99) as f64)),
+            ("degraded_acks".into(), num(degraded_writes as f64)),
+            ("catch_up_replays".into(), num(wr_snap.catch_up_replays as f64)),
+            ("rebuild_repairs".into(), num(wr_snap.replica_repairs as f64)),
+            ("stall_cap".into(), num(stall_cap as f64)),
+            ("stall_rate".into(), num(stall_rate)),
+            ("stall_retry_hint_ms".into(), num(retry_hint_ms as f64)),
         ],
     );
     std::process::exit(0); // acceptor threads are still parked in accept()

@@ -50,6 +50,14 @@ pub enum ServeError {
     DeadlineExceeded(String),
     /// The admission queue is full or the ladder is at the shed level.
     Overloaded(String),
+    /// Write backpressure: the live delta hit its cap and the mutation
+    /// was refused before any replica logged it. Retryable — the reply
+    /// carries the compactor's `retry_after_ms` hint.
+    WriteStalled(String),
+    /// A replicated write reached fewer member acknowledgements than the
+    /// configured write quorum, so it is not durable and was not
+    /// acknowledged.
+    QuorumFailed(String),
     /// Serving-stack failure (worker gone, channel closed, hash error).
     Internal(String),
 }
@@ -61,6 +69,8 @@ impl ServeError {
             ServeError::InvalidArgument(_) => "invalid_argument",
             ServeError::DeadlineExceeded(_) => "deadline_exceeded",
             ServeError::Overloaded(_) => "overloaded",
+            ServeError::WriteStalled(_) => "write_stalled",
+            ServeError::QuorumFailed(_) => "quorum_failed",
             ServeError::Internal(_) => "internal",
         }
     }
@@ -71,6 +81,8 @@ impl ServeError {
             ServeError::InvalidArgument(m)
             | ServeError::DeadlineExceeded(m)
             | ServeError::Overloaded(m)
+            | ServeError::WriteStalled(m)
+            | ServeError::QuorumFailed(m)
             | ServeError::Internal(m) => m,
         }
     }
@@ -342,6 +354,8 @@ mod tests {
         assert_eq!(ServeError::InvalidArgument("x".into()).code(), "invalid_argument");
         assert_eq!(ServeError::DeadlineExceeded("x".into()).code(), "deadline_exceeded");
         assert_eq!(ServeError::Overloaded("x".into()).code(), "overloaded");
+        assert_eq!(ServeError::WriteStalled("x".into()).code(), "write_stalled");
+        assert_eq!(ServeError::QuorumFailed("x".into()).code(), "quorum_failed");
         assert_eq!(ServeError::Internal("x".into()).code(), "internal");
         let e = ServeError::Overloaded("queue full".into());
         assert_eq!(e.to_string(), "overloaded: queue full");

@@ -910,7 +910,7 @@ mod tests {
             MipsEngine::create_live(
                 &dir,
                 &its,
-                LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 51 },
+                LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 51, ..LiveConfig::default() },
             )
             .unwrap(),
         );

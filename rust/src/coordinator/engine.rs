@@ -10,12 +10,50 @@ use crate::index::storage::{Mapped, Owned, Storage};
 use crate::index::{
     AlshIndex, AlshParams, AnyIndex, BandedBuildStats, BandedParams, BuildOpts, BuildStats,
     LiveConfig, LiveIndex, LiveStats, MipsHashScheme, NormRangeIndex, ProbeBudget, QueryScratch,
-    SchemeHasher, ScoredItem,
+    SchemeHasher, ScoredItem, WriteStalled,
 };
 use crate::lsh::L2LshFamily;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, N_BUCKETS};
 use super::trace::{QuerySpans, Stage, FLAG_LIVE};
+
+/// Size-tiered compaction triggers for a live engine's background
+/// compactor, rate-limited against reader tail latency: compaction is
+/// discretionary while the probe-stage p99 (measured over the interval
+/// since the last poll, from the [`super::trace`] stage histograms) is
+/// above `p99_ceiling_us`, until the backlog reaches the `max_pending`
+/// relief valve — at the delta cap, deferring compaction would stall
+/// writes, which costs more than a slow reader tail.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveCompactionConfig {
+    /// Size-tiered trigger: compact when pending delta rows (live +
+    /// dead) reach this fraction of the current logical item count.
+    pub tier_fraction: f64,
+    /// Floor under the tiered trigger, so tiny indexes don't churn a
+    /// generation per handful of writes.
+    pub min_pending: usize,
+    /// Relief valve: at or above this many pending rows compaction runs
+    /// regardless of reader latency. Set it at (or just below) the
+    /// delta cap so backpressure stalls stay transient.
+    pub max_pending: usize,
+    /// Reader probe-stage interval p99 (µs) above which discretionary
+    /// compaction is deferred.
+    pub p99_ceiling_us: u64,
+    /// Compactor poll interval.
+    pub poll: std::time::Duration,
+}
+
+impl Default for AdaptiveCompactionConfig {
+    fn default() -> Self {
+        Self {
+            tier_fraction: 0.25,
+            min_pending: 512,
+            max_pending: LiveConfig::default().delta_cap,
+            p99_ceiling_us: 5_000,
+            poll: std::time::Duration::from_millis(20),
+        }
+    }
+}
 
 /// What the engine serves: a frozen index (heap or mmap) or the live
 /// mutable tier layered over one.
@@ -133,6 +171,46 @@ impl<S: LiveStorage> MipsEngine<S> {
                 Ok(generation)
             }
             EngineCore::Frozen(_) => bail!("compact: engine serves a frozen index"),
+        }
+    }
+
+    /// Spawn the background compactor with size-tiered triggers
+    /// rate-limited against this engine's reader probe-stage p99 (see
+    /// [`AdaptiveCompactionConfig`]). Errors on a frozen engine.
+    pub fn spawn_adaptive_compactor(&self, cfg: AdaptiveCompactionConfig) -> crate::Result<()> {
+        let EngineCore::Live(live) = &self.core else {
+            bail!("spawn_adaptive_compactor: engine serves a frozen index");
+        };
+        let metrics = Arc::clone(&self.metrics);
+        let probe_prev = std::sync::Mutex::new([0u64; N_BUCKETS]);
+        live.spawn_compactor_when(cfg.poll, move |s: &LiveStats| {
+            let pending = (s.delta_items + s.tombstones) as usize;
+            if pending >= cfg.max_pending.max(1) {
+                return true; // relief valve: beat the write stall
+            }
+            let tier = (s.n_items as f64 * cfg.tier_fraction) as usize;
+            if pending < tier.max(cfg.min_pending) {
+                return false;
+            }
+            // Rate limit: defer while readers are already slow. An idle
+            // interval (no probe samples) reads as "free to compact".
+            let mut prev = probe_prev.lock().unwrap_or_else(|e| e.into_inner());
+            match metrics
+                .stage_hist(Stage::Probe)
+                .interval_percentile_us(&mut prev, 0.99)
+            {
+                Some(p99) => p99 <= cfg.p99_ceiling_us,
+                None => true,
+            }
+        });
+        Ok(())
+    }
+
+    /// Stop and join the background compactor, if one is running (no-op
+    /// on a frozen engine).
+    pub fn stop_compactor(&self) {
+        if let EngineCore::Live(live) = &self.core {
+            live.stop_compactor();
         }
     }
 }
@@ -294,6 +372,70 @@ impl<S: Storage> MipsEngine<S> {
                 bail!("delete: engine serves a frozen index (open a live directory to mutate)")
             }
         }
+    }
+
+    /// Replicated-fan-out twin of [`MipsEngine::upsert`]: the record
+    /// must land at exactly group sequence `seq` (see
+    /// [`crate::index::SeqGap`]). Returns the assigned sequence.
+    pub fn upsert_at(&self, seq: u64, ext_id: u32, vector: &[f32]) -> crate::Result<u64> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                let assigned = live.upsert_at(seq, ext_id, vector)?;
+                self.sync_live_metrics();
+                Ok(assigned)
+            }
+            EngineCore::Frozen(_) => {
+                bail!("upsert_at: engine serves a frozen index (open a live directory to mutate)")
+            }
+        }
+    }
+
+    /// Replicated-fan-out twin of [`MipsEngine::upsert_batch`] (the
+    /// whole batch is one WAL record at `seq`).
+    pub fn upsert_batch_at(&self, seq: u64, entries: &[(u32, Vec<f32>)]) -> crate::Result<u64> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                let assigned = live.upsert_batch_at(seq, entries)?;
+                self.sync_live_metrics();
+                Ok(assigned)
+            }
+            EngineCore::Frozen(_) => {
+                bail!(
+                    "upsert_batch_at: engine serves a frozen index (open a live directory to mutate)"
+                )
+            }
+        }
+    }
+
+    /// Replicated-fan-out twin of [`MipsEngine::delete`].
+    pub fn delete_at(&self, seq: u64, ext_id: u32) -> crate::Result<u64> {
+        match &self.core {
+            EngineCore::Live(live) => {
+                let assigned = live.delete_at(seq, ext_id)?;
+                self.sync_live_metrics();
+                Ok(assigned)
+            }
+            EngineCore::Frozen(_) => {
+                bail!("delete_at: engine serves a frozen index (open a live directory to mutate)")
+            }
+        }
+    }
+
+    /// Highest durable WAL sequence number (`None` on a frozen engine).
+    pub fn high_water(&self) -> Option<u64> {
+        self.live().map(|live| live.high_water())
+    }
+
+    /// Seed-independent checksum of the live logical item set (`None`
+    /// on a frozen engine) — the scrub exchange's divergence detector.
+    pub fn state_checksum(&self) -> Option<u64> {
+        self.live().map(|live| live.state_checksum())
+    }
+
+    /// The structured stall a mutation would currently fail with, if
+    /// any (`None` on a frozen engine or below the delta cap).
+    pub fn would_stall(&self) -> Option<WriteStalled> {
+        self.live().and_then(|live| live.would_stall())
     }
 
     /// Push the live tier's current counters into the metrics gauges.
@@ -721,6 +863,64 @@ mod tests {
         let snap = eng.metrics_snapshot();
         assert_eq!(snap.delta_items, 0);
         assert_eq!(snap.compactions, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn seq_variant_mutations_and_replication_accessors() {
+        let dir = tmp_dir("live_seq");
+        let its = items(60, 8, 50);
+        let eng = MipsEngine::create_live(&dir, &its, LiveConfig::default()).unwrap();
+        assert_eq!(eng.high_water(), Some(0));
+        let base_sum = eng.state_checksum().unwrap();
+        assert_eq!(eng.upsert_at(1, 900, &its[0]).unwrap(), 1);
+        assert_eq!(eng.delete_at(2, 3).unwrap(), 2);
+        let batch = [(901u32, its[1].clone()), (902u32, its[2].clone())];
+        assert_eq!(eng.upsert_batch_at(3, &batch).unwrap(), 3);
+        assert_eq!(eng.high_water(), Some(3));
+        assert!(eng.upsert_at(7, 903, &its[0]).is_err(), "sequence gap must be refused");
+        assert_eq!(eng.high_water(), Some(3), "refused write must not advance the log");
+        assert_ne!(eng.state_checksum().unwrap(), base_sum);
+        assert!(eng.would_stall().is_none());
+        // Frozen engines expose no replication state and refuse the
+        // seq-variant mutations.
+        let frozen = MipsEngine::new(&its, AlshParams::default(), 51);
+        assert_eq!(frozen.high_water(), None);
+        assert_eq!(frozen.state_checksum(), None);
+        assert!(frozen.would_stall().is_none());
+        assert!(frozen.upsert_at(1, 0, &its[0]).is_err());
+        assert!(frozen.delete_at(1, 0).is_err());
+        assert!(frozen.upsert_batch_at(1, &batch).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adaptive_compactor_tiered_trigger_fires() {
+        let dir = tmp_dir("adaptive");
+        let its = items(80, 8, 60);
+        let eng = MipsEngine::create_live(&dir, &its, LiveConfig::default()).unwrap();
+        eng.spawn_adaptive_compactor(AdaptiveCompactionConfig {
+            tier_fraction: 0.05,
+            min_pending: 4,
+            max_pending: 1 << 20,
+            p99_ceiling_us: u64::MAX,
+            poll: std::time::Duration::from_millis(2),
+        })
+        .unwrap();
+        for i in 0..8u32 {
+            eng.upsert(1000 + i, &its[i as usize]).unwrap();
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while eng.live_stats().unwrap().compactions == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        eng.stop_compactor();
+        assert!(eng.live_stats().unwrap().compactions >= 1, "tiered trigger never fired");
+        // A frozen engine refuses the compactor outright (and the stop
+        // is a harmless no-op).
+        let frozen = MipsEngine::new(&its, AlshParams::default(), 61);
+        assert!(frozen.spawn_adaptive_compactor(AdaptiveCompactionConfig::default()).is_err());
+        frozen.stop_compactor();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -62,6 +62,18 @@ pub struct Metrics {
     /// Quarantined replicas repaired (rebuilt + re-verified) and
     /// re-admitted through their breaker.
     pub replica_repairs: AtomicU64,
+    /// Replicated mutations acknowledged at (or above) their shard's
+    /// write quorum.
+    pub writes_replicated: AtomicU64,
+    /// Mutations refused with a structured `write_stalled` (delta cap
+    /// reached — backpressure, not failure).
+    pub write_stalled: AtomicU64,
+    /// Replicated mutations that reached fewer member acks than the
+    /// write quorum (not acknowledged to the client).
+    pub quorum_failures: AtomicU64,
+    /// Lagging members caught up by WAL-suffix replay from a peer (full
+    /// rebuild fallbacks count as `replica_repairs` instead).
+    pub catch_up_replays: AtomicU64,
     /// Candidates produced by the probe stage (candidate-flow counter).
     pub candidates_probed: AtomicU64,
     /// Candidates scored by the exact rerank (candidate-flow counter).
@@ -148,6 +160,26 @@ impl Metrics {
         self.replica_repairs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A replicated mutation was acknowledged at quorum.
+    pub fn record_write_replicated(&self) {
+        self.writes_replicated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A mutation was refused with structured backpressure.
+    pub fn record_write_stalled(&self) {
+        self.write_stalled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A replicated mutation missed its write quorum.
+    pub fn record_quorum_failure(&self) {
+        self.quorum_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A lagging member was caught up by WAL-suffix replay.
+    pub fn record_catch_up_replay(&self) {
+        self.catch_up_replays.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A query entered the admission queue.
     pub fn record_queue_push(&self) {
         self.queue_depth.fetch_add(1, Ordering::Relaxed);
@@ -219,6 +251,10 @@ impl Metrics {
             partial_replies: self.partial_replies.load(Ordering::Relaxed),
             replica_quarantines: self.replica_quarantines.load(Ordering::Relaxed),
             replica_repairs: self.replica_repairs.load(Ordering::Relaxed),
+            writes_replicated: self.writes_replicated.load(Ordering::Relaxed),
+            write_stalled: self.write_stalled.load(Ordering::Relaxed),
+            quorum_failures: self.quorum_failures.load(Ordering::Relaxed),
+            catch_up_replays: self.catch_up_replays.load(Ordering::Relaxed),
             candidates_probed: self.candidates_probed.load(Ordering::Relaxed),
             candidates_reranked: self.candidates_reranked.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
@@ -280,6 +316,23 @@ impl LatencyHist {
         }
         out
     }
+
+    /// Interval quantile: the `p`-quantile of only the samples recorded
+    /// since `prev` was last captured, updating `prev` to the current
+    /// buckets. `None` when the interval holds no samples. This is what
+    /// a rate limiter should read — the cumulative
+    /// [`LatencyHist::percentile_us`] never recovers from one slow
+    /// phase, so gating on it would defer forever.
+    pub fn interval_percentile_us(&self, prev: &mut [u64; N_BUCKETS], p: f64) -> Option<u64> {
+        let now = self.buckets_snapshot();
+        let mut diff = [0u64; N_BUCKETS];
+        for (d, (n, pv)) in diff.iter_mut().zip(now.iter().zip(prev.iter())) {
+            *d = n.saturating_sub(*pv);
+        }
+        *prev = now;
+        let total: u64 = diff.iter().sum();
+        (total > 0).then(|| percentile(&diff, p))
+    }
 }
 
 /// Log2 bucket index shared by every histogram in this module.
@@ -336,6 +389,10 @@ pub struct MetricsSnapshot {
     pub partial_replies: u64,
     pub replica_quarantines: u64,
     pub replica_repairs: u64,
+    pub writes_replicated: u64,
+    pub write_stalled: u64,
+    pub quorum_failures: u64,
+    pub catch_up_replays: u64,
     pub candidates_probed: u64,
     pub candidates_reranked: u64,
     pub queue_depth: u64,
@@ -412,6 +469,10 @@ impl MetricsSnapshot {
                 .replica_quarantines
                 .saturating_sub(earlier.replica_quarantines),
             replica_repairs: self.replica_repairs.saturating_sub(earlier.replica_repairs),
+            writes_replicated: self.writes_replicated.saturating_sub(earlier.writes_replicated),
+            write_stalled: self.write_stalled.saturating_sub(earlier.write_stalled),
+            quorum_failures: self.quorum_failures.saturating_sub(earlier.quorum_failures),
+            catch_up_replays: self.catch_up_replays.saturating_sub(earlier.catch_up_replays),
             candidates_probed: self.candidates_probed.saturating_sub(earlier.candidates_probed),
             candidates_reranked: self
                 .candidates_reranked
@@ -466,7 +527,7 @@ impl MetricsSnapshot {
     /// quantile summaries.
     pub fn prometheus_text(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let counters: [(&str, u64, &str); 16] = [
+        let counters: [(&str, u64, &str); 20] = [
             ("alsh_queries_total", self.queries, "Queries served."),
             ("alsh_batches_total", self.batches, "Hash batches dispatched."),
             ("alsh_batched_queries_total", self.batched_queries, "Queries carried by batches."),
@@ -513,6 +574,26 @@ impl MetricsSnapshot {
                 "alsh_replica_repairs_total",
                 self.replica_repairs,
                 "Quarantined replicas repaired and re-admitted.",
+            ),
+            (
+                "alsh_writes_replicated_total",
+                self.writes_replicated,
+                "Replicated mutations acknowledged at quorum.",
+            ),
+            (
+                "alsh_write_stalled_total",
+                self.write_stalled,
+                "Mutations refused with structured backpressure.",
+            ),
+            (
+                "alsh_quorum_failures_total",
+                self.quorum_failures,
+                "Replicated mutations that missed their write quorum.",
+            ),
+            (
+                "alsh_catch_up_replays_total",
+                self.catch_up_replays,
+                "Lagging members caught up by WAL-suffix replay.",
             ),
             ("alsh_compactions_total", self.compactions, "Live-tier compactions run."),
         ];
@@ -699,6 +780,51 @@ mod tests {
     }
 
     #[test]
+    fn interval_percentile_diffs_and_resets() {
+        let h = LatencyHist::new();
+        let mut prev = [0u64; N_BUCKETS];
+        assert_eq!(h.interval_percentile_us(&mut prev, 0.99), None);
+        for _ in 0..100 {
+            h.record(6000);
+        }
+        let p = h.interval_percentile_us(&mut prev, 0.99).unwrap();
+        assert!((4096..8192).contains(&p), "interval p99 {p} in bucket 12");
+        // The slow phase is consumed: a fast follow-up interval reports
+        // fast, where the cumulative view would stay slow.
+        for _ in 0..100 {
+            h.record(100);
+        }
+        let p = h.interval_percentile_us(&mut prev, 0.99).unwrap();
+        assert!(p < 256, "interval p99 {p} should forget the slow phase");
+        assert!(h.percentile_us(0.99) >= 4096, "cumulative view stays slow");
+        assert_eq!(h.interval_percentile_us(&mut prev, 0.99), None, "empty interval");
+    }
+
+    #[test]
+    fn write_path_counters() {
+        let m = Metrics::new();
+        m.record_write_replicated();
+        m.record_write_replicated();
+        m.record_write_stalled();
+        m.record_quorum_failure();
+        m.record_catch_up_replay();
+        let earlier = m.snapshot();
+        assert_eq!(earlier.writes_replicated, 2);
+        assert_eq!(earlier.write_stalled, 1);
+        assert_eq!(earlier.quorum_failures, 1);
+        assert_eq!(earlier.catch_up_replays, 1);
+        m.record_write_replicated();
+        let d = m.snapshot().delta(&earlier);
+        assert_eq!(d.writes_replicated, 1, "write counters diff like counters");
+        assert_eq!(d.write_stalled, 0);
+        let text = m.snapshot().prometheus_text();
+        assert!(text.contains("alsh_writes_replicated_total 3"));
+        assert!(text.contains("alsh_write_stalled_total 1"));
+        assert!(text.contains("alsh_quorum_failures_total 1"));
+        assert!(text.contains("alsh_catch_up_replays_total 1"));
+    }
+
+    #[test]
     fn latency_hist_matches_metrics_bucketing() {
         let h = LatencyHist::new();
         assert_eq!(h.percentile_us(0.99), 0);
@@ -726,6 +852,7 @@ mod tests {
             last_compaction_ms: 12,
             generation: 1,
             n_items: 100,
+            high_water: 5,
         });
         m.record_live_stats(&LiveStats {
             delta_items: 0,
@@ -735,6 +862,7 @@ mod tests {
             last_compaction_ms: 9,
             generation: 2,
             n_items: 100,
+            high_water: 8,
         });
         let s = m.snapshot();
         assert_eq!(s.delta_items, 0);
@@ -808,6 +936,7 @@ mod tests {
             last_compaction_ms: 3,
             generation: 1,
             n_items: 10,
+            high_water: 2,
         });
         let earlier = m.snapshot();
         // A "later" snapshot from a fresh process (counter reset): every

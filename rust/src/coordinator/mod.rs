@@ -102,7 +102,63 @@
 //! under the member's own seed and re-verified — then re-admitted
 //! through its breaker. Faults for all of this are injectable per
 //! member with [`ShardFaultPlan`] (stall windows, crash-on-query,
-//! on-disk corruption bursts).
+//! crash-on-write, on-disk corruption bursts).
+//!
+//! # Replicated durable writes
+//!
+//! **Write fan-out and quorum.** Live replica groups
+//! ([`ShardedRouter::create_live_replicated`]: every member a
+//! [`crate::index::LiveIndex`] over the shard's rows, modulo-sharded by
+//! external id) accept mutations through the router:
+//! [`ShardedRouter::upsert`] / [`ShardedRouter::delete`] /
+//! [`ShardedRouter::upsert_batch`] route by `id % n_shards` to the
+//! owning shard and replicate the mutation to **every** group member as
+//! a WAL record. Each group maintains one logical mutation log:
+//! under the shard's write lock the router assigns the record the next
+//! **group sequence number** (the most advanced healthy member's
+//! high-water + 1), and each member appends it to its own WAL at
+//! exactly that sequence — a member that cannot (it missed a write and
+//! has a sequence gap) refuses the record instead of silently forking
+//! history. The write acknowledges once
+//! [`ReplicaConfig::write_quorum`] members (default: majority,
+//! `R/2 + 1`) have durably logged **and** applied it; fewer acks fail
+//! the write with a typed [`QuorumFailed`]. A quorum-satisfying write
+//! that still missed some member reports `degraded` on its
+//! [`WriteReply`] (`write_degraded` on the wire) so clients know a
+//! catch-up is owed. Batches replicate as **one** WAL record per owning
+//! shard: atomic per shard, all-or-nothing across replicas.
+//!
+//! **Divergence detection and catch-up.** Replicas compare two cheap
+//! facts: the WAL high-water mark (equal marks ⇒ equal applied
+//! history, because sequence assignment is gap-free) and a
+//! seed-independent state checksum
+//! ([`crate::index::LiveIndex::state_checksum`], XXH64 over the sorted
+//! live `(id, vector)` set — comparable across members even though
+//! their hash seeds differ). The scrubber's live pass
+//! ([`ShardedRouter::scrub_now`]) exchanges both under the shard's
+//! write lock, quarantines any lagging or disagreeing member, and then
+//! repairs it with [`ShardedRouter::catch_up`]: re-open from disk
+//! (replays the member's own WAL, truncates torn tails, sweeps orphan
+//! temp/generation files), then **replay the missing WAL suffix** from
+//! the most advanced healthy peer ([`crate::index::Wal::read_suffix`]).
+//! When the donor has compacted past the suffix — its WAL restarts at a
+//! base sequence beyond the gap — the member instead does a **full
+//! rebuild** from the donor's live item set under its own seed
+//! ([`CatchUpMode::Rebuilt`], counted as a repair; replays count as
+//! `catch_up_replays`). Either way convergence is verified (high-water
+//! equality + state checksum) before the engine swaps into the serving
+//! slot and the member re-admits through its breaker.
+//!
+//! **Write backpressure.** A mutation is refused *before* sequence
+//! assignment when any serving member's delta is at its cap
+//! ([`crate::index::LiveConfig::delta_cap`]), with a typed
+//! [`crate::index::WriteStalled`] carrying a `retry_after_ms` hint
+//! derived from recent compaction time — `code: "write_stalled"` on the
+//! wire; stalls therefore never diverge replicas. Compaction is paced
+//! by [`MipsEngine::spawn_adaptive_compactor`]: size-tiered triggers
+//! (pending work ≥ a fraction of the base) gated on the recent reader
+//! probe p99 from the stage histograms, with a relief valve that
+//! compacts unconditionally as the delta nears the cap.
 //!
 //! # Observability: end-to-end query tracing
 //!
@@ -159,10 +215,14 @@ pub use admission::{AdmissionConfig, LoadController, ServeError};
 pub use batcher::{
     BatcherConfig, BatcherHandle, BreakerState, FaultPlan, PjrtBatcher, QueryReply,
 };
-pub use engine::MipsEngine;
+pub use engine::{AdaptiveCompactionConfig, MipsEngine};
 pub use metrics::{LatencyHist, Metrics, MetricsSnapshot};
-pub use replica::{corrupt_index_file, ReplicaConfig, ReplicaStorage, ShardFaultPlan};
-pub use router::{RouterReply, ScrubReport, ShardedRouter};
+pub use replica::{
+    corrupt_index_file, QuorumFailed, ReplicaConfig, ReplicaStorage, ShardFaultPlan,
+};
+pub use router::{
+    CatchUpMode, CatchUpReport, RouterReply, ScrubReport, ShardedRouter, WriteReply,
+};
 pub use server::{
     handle_request, handle_router_request, serve, serve_on, serve_router_on, ServeConfig,
 };

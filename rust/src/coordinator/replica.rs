@@ -88,6 +88,10 @@ pub struct ReplicaConfig {
     /// How long a tripped breaker stays Open before the half-open
     /// re-probe dispatch.
     pub breaker_cooldown: Duration,
+    /// Member acks required before a replicated write is acknowledged
+    /// to the client. `None` (the default) means majority: `R/2 + 1`
+    /// for a group of R members. Clamped to `1..=R` at use.
+    pub write_quorum: Option<usize>,
 }
 
 impl Default for ReplicaConfig {
@@ -100,6 +104,19 @@ impl Default for ReplicaConfig {
             hedge_max: Duration::from_millis(50),
             breaker_failures: 3,
             breaker_cooldown: Duration::from_millis(100),
+            write_quorum: None,
+        }
+    }
+}
+
+impl ReplicaConfig {
+    /// Resolve the effective write quorum for a group of `replicas`
+    /// members: the configured value clamped to `1..=replicas`, or
+    /// majority (`R/2 + 1`) when unset.
+    pub fn effective_write_quorum(&self, replicas: usize) -> usize {
+        match self.write_quorum {
+            Some(q) => q.clamp(1, replicas.max(1)),
+            None => replicas / 2 + 1,
         }
     }
 }
@@ -129,6 +146,12 @@ pub struct ShardFaultPlan {
     /// already-opened engine keeps serving its mapped/loaded state;
     /// only the scrubber's checksum walk catches the rot.
     pub corrupt_file_at: Option<usize>,
+    /// **Write-op** seq (the 0-based count of replicated mutations fanned
+    /// out to this member — a separate clock from the query-job seq) at
+    /// which the member "crashes" mid-write-stream: the mutation is NOT
+    /// applied, the member is quarantined, and every later write skips
+    /// it until catch-up re-admits it.
+    pub write_crash_at: Option<usize>,
 }
 
 impl ShardFaultPlan {
@@ -143,6 +166,10 @@ impl ShardFaultPlan {
 
     fn corrupts_at(&self, seq: usize) -> bool {
         self.corrupt_file_at == Some(seq)
+    }
+
+    fn write_crashes_at(&self, seq: usize) -> bool {
+        self.write_crash_at == Some(seq)
     }
 }
 
@@ -164,6 +191,37 @@ pub fn corrupt_index_file(path: &Path) -> crate::Result<()> {
     std::fs::write(path, &bytes)?;
     Ok(())
 }
+
+// ---------------------------------------------------------------------------
+// Write-path errors
+// ---------------------------------------------------------------------------
+
+/// A replicated mutation reached fewer member acks than the shard's
+/// write quorum. The write is **not** acknowledged: surviving applies
+/// are repaired by the scrub/catch-up cycle, and the client must retry.
+#[derive(Clone, Copy, Debug)]
+pub struct QuorumFailed {
+    /// Owning shard of the mutated id.
+    pub shard: usize,
+    /// Members that durably applied the mutation.
+    pub acked: usize,
+    /// The quorum the group required.
+    pub needed: usize,
+    /// Group size.
+    pub replicas: usize,
+}
+
+impl std::fmt::Display for QuorumFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "write quorum failed on shard {}: {}/{} member acks (quorum {})",
+            self.shard, self.acked, self.replicas, self.needed
+        )
+    }
+}
+
+impl std::error::Error for QuorumFailed {}
 
 // ---------------------------------------------------------------------------
 // Breaker
@@ -302,6 +360,9 @@ pub(crate) struct ReplicaShared<S: Storage> {
     faults: Mutex<ShardFaultPlan>,
     /// Jobs received by the worker (the fault plans' clock).
     seq: AtomicUsize,
+    /// Replicated mutations fanned out to this member (the write fault
+    /// plan's clock — see [`ShardFaultPlan::write_crash_at`]).
+    writes: AtomicUsize,
 }
 
 struct ReplicaJob {
@@ -367,6 +428,7 @@ impl<S: Storage> Replica<S> {
             breaker: ReplicaBreaker::new(cfg.breaker_failures, cfg.breaker_cooldown),
             faults: Mutex::new(ShardFaultPlan::default()),
             seq: AtomicUsize::new(0),
+            writes: AtomicUsize::new(0),
         });
         let (tx, rx) = mpsc::channel();
         let handle = {
@@ -415,6 +477,13 @@ impl<S: Storage> Replica<S> {
 
     pub(crate) fn set_faults(&self, plan: ShardFaultPlan) {
         *lock(&self.shared.faults) = plan;
+    }
+
+    /// Advance this member's write clock and report whether the fault
+    /// plan crashes it at this write op (router fan-out path).
+    pub(crate) fn write_crashes_now(&self) -> bool {
+        let seq = self.shared.writes.fetch_add(1, Ordering::Relaxed);
+        lock(&self.shared.faults).write_crashes_at(seq)
     }
 }
 
@@ -550,6 +619,7 @@ mod tests {
             stall: Duration::from_millis(5),
             crash_at: Some(7),
             corrupt_file_at: Some(9),
+            write_crash_at: Some(3),
         };
         assert!(plan.stall_for(1).is_none());
         assert!(plan.stall_for(2).is_some());
@@ -557,7 +627,22 @@ mod tests {
         assert!(plan.stall_for(4).is_none());
         assert!(!plan.crashes_at(6) && plan.crashes_at(7));
         assert!(!plan.corrupts_at(7) && plan.corrupts_at(9));
+        assert!(!plan.write_crashes_at(2) && plan.write_crashes_at(3));
         assert!(ShardFaultPlan::default().stall_for(0).is_none());
+        assert!(!ShardFaultPlan::default().write_crashes_at(0));
+    }
+
+    #[test]
+    fn write_quorum_defaults_to_majority_and_clamps() {
+        let cfg = ReplicaConfig::default();
+        assert_eq!(cfg.effective_write_quorum(1), 1);
+        assert_eq!(cfg.effective_write_quorum(2), 2);
+        assert_eq!(cfg.effective_write_quorum(3), 2);
+        assert_eq!(cfg.effective_write_quorum(5), 3);
+        let all = ReplicaConfig { write_quorum: Some(99), ..Default::default() };
+        assert_eq!(all.effective_write_quorum(3), 3);
+        let one = ReplicaConfig { write_quorum: Some(0), ..Default::default() };
+        assert_eq!(one.effective_write_quorum(3), 1);
     }
 
     #[test]

@@ -23,18 +23,21 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::index::delta::LiveStorage;
 use crate::index::scratch::with_thread_scratch;
 use crate::index::storage::{Mapped, Owned, Storage};
 use crate::index::{
-    open_mmap_verified, AlshIndex, AlshParams, AnyIndex, BandedParams, NormRangeIndex,
-    PersistFormat, ProbeBudget, QueryScratch, ScoredItem,
+    open_mmap_verified, AlshIndex, AlshParams, AnyIndex, BandedParams, LiveConfig, LiveIndex,
+    LiveStats, NormRangeIndex, PersistFormat, ProbeBudget, QueryScratch, ScoredItem, Wal,
+    WalRecord,
 };
 
 use super::batcher::BreakerState;
 use super::engine::MipsEngine;
 use super::metrics::Metrics;
 use super::replica::{
-    corrupt_index_file, lock, ReplicaConfig, ReplicaGroup, ReplicaStorage, ShardFaultPlan,
+    corrupt_index_file, lock, QuorumFailed, ReplicaConfig, ReplicaGroup, ReplicaStorage,
+    ShardFaultPlan,
 };
 use super::trace::{QuerySpans, Stage, FLAG_DEGRADED, FLAG_HEDGED, FLAG_PARTIAL};
 
@@ -44,10 +47,19 @@ use super::trace::{QuerySpans, Stage, FLAG_DEGRADED, FLAG_HEDGED, FLAG_PARTIAL};
 /// deployments ([`ShardedRouter::create_replicated`]).
 pub struct ShardedRouter<S: Storage = Owned> {
     groups: Vec<ReplicaGroup<S>>,
-    /// Global id of shard s's local item 0.
+    /// Global id of shard s's local item 0. Live replicated deployments
+    /// ([`ShardedRouter::create_live_replicated`]) shard by external-id
+    /// modulo and store all-zero offsets: their members answer with
+    /// external ids directly, so no translation applies.
     offsets: Vec<u32>,
     dim: usize,
     cfg: ReplicaConfig,
+    /// Per-shard write serialization: the replicated mutation fan-out
+    /// ([`ShardedRouter::upsert`] & co.) and a member catch-up
+    /// ([`ShardedRouter::catch_up`]) each hold the owning shard's lock,
+    /// so group sequence numbers are assigned uniquely and a converging
+    /// member never races new writes.
+    write_locks: Vec<Mutex<()>>,
     /// Router-level serving metrics (hedges, partial replies, scrub
     /// events, replicated-query latency). Per-engine metrics stay on
     /// the member engines.
@@ -98,6 +110,56 @@ pub struct ScrubReport {
     /// Repairs that could not complete (with the error); the member
     /// stays quarantined for the next pass.
     pub failed: Vec<(usize, usize, String)>,
+    /// Live members the divergence exchange flagged (WAL high-water
+    /// behind the group's most advanced member, or a state-checksum
+    /// mismatch at equal high-water) and quarantined.
+    pub diverged: Vec<(usize, usize)>,
+    /// Live members brought back in sync (WAL-suffix replay or full
+    /// rebuild-from-peer — see [`ShardedRouter::catch_up`]) and
+    /// re-admitted.
+    pub caught_up: Vec<(usize, usize)>,
+}
+
+/// Outcome of one acknowledged replicated write.
+#[derive(Clone, Copy, Debug)]
+pub struct WriteReply {
+    /// The group sequence number the mutation landed at (identical in
+    /// every member's WAL).
+    pub seq: u64,
+    /// Owning shard of the mutated id(s).
+    pub shard: usize,
+    /// Members that durably applied the mutation.
+    pub acked: usize,
+    /// Group size.
+    pub replicas: usize,
+    /// `acked < replicas`: the write is quorum-durable but at least one
+    /// member missed it (down or quarantined) — the structured
+    /// `write_degraded` signal.
+    pub degraded: bool,
+}
+
+/// How [`ShardedRouter::catch_up`] brought a member back in sync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CatchUpMode {
+    /// The missing WAL suffix was replayed from a peer (`n` records
+    /// applied; 0 when the member was already current after recovery).
+    Replayed(usize),
+    /// The suffix was compacted away on every donor — the member was
+    /// rebuilt from the donor's live item set (PR 8's rebuild-from-peer
+    /// fallback, with WAL numbering continued at the donor's
+    /// high-water).
+    Rebuilt,
+}
+
+/// What one [`ShardedRouter::catch_up`] call did.
+#[derive(Clone, Copy, Debug)]
+pub struct CatchUpReport {
+    pub shard: usize,
+    pub member: usize,
+    pub mode: CatchUpMode,
+    /// The member's WAL high-water after convergence (equals the
+    /// donor's at the time of the call).
+    pub high_water: u64,
 }
 
 impl ShardedRouter {
@@ -213,7 +275,7 @@ impl ShardedRouter<Mapped> {
     }
 }
 
-impl<S: ReplicaStorage> ShardedRouter<S> {
+impl<S: ReplicaStorage + LiveStorage> ShardedRouter<S> {
     /// Build every (shard, replica) index from `items`, persist each as
     /// a `V5Checked` file under `dir` (`shard{s}-rep{r}.alsh`), and
     /// serve the **verified** opens — the deployment shape the scrubber
@@ -262,6 +324,348 @@ impl<S: ReplicaStorage> ShardedRouter<S> {
         Ok(Self::from_groups(groups, offsets, dim, cfg))
     }
 
+    /// The **writable** replicated deployment: every member of every
+    /// shard group is a [`LiveIndex`] directory
+    /// (`dir/shard{s}-rep{r}/`), so the router-level mutations
+    /// ([`ShardedRouter::upsert`] & co.) fan out WAL-sequence-numbered
+    /// records and the scrubber's divergence exchange can catch up a
+    /// lagging member from a peer's log.
+    ///
+    /// Sharding is by **external-id modulo** — item `i` (external id
+    /// `i`) is owned by shard `i % n_shards` — rather than contiguous
+    /// ranges: under live churn ids arrive in any order, and modulo
+    /// keeps ownership derivable from the id alone. Members answer
+    /// queries with external ids directly (offsets are all zero).
+    /// Member (s, r) builds with seed `live_cfg.seed + s·R + r`, the
+    /// same derivation as every other builder here, so replica answers
+    /// stay recall-diverse.
+    pub fn create_live_replicated(
+        dir: &Path,
+        items: &[Vec<f32>],
+        n_shards: usize,
+        n_replicas: usize,
+        live_cfg: LiveConfig,
+        cfg: ReplicaConfig,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            n_shards >= 1 && n_replicas >= 1,
+            "create_live_replicated: need at least one shard and one replica"
+        );
+        anyhow::ensure!(
+            items.len() >= n_shards,
+            "create_live_replicated: every shard needs at least one initial item \
+             ({} items over {n_shards} shards)",
+            items.len()
+        );
+        std::fs::create_dir_all(dir)?;
+        let dim = items[0].len();
+        let mut groups = Vec::with_capacity(n_shards);
+        let mut offsets = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let entries: Vec<(u32, Vec<f32>)> = items
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % n_shards == s)
+                .map(|(i, v)| (i as u32, v.clone()))
+                .collect();
+            offsets.push(0);
+            let mut members = Vec::with_capacity(n_replicas);
+            for r in 0..n_replicas {
+                let member_seed = live_cfg.seed.wrapping_add((s * n_replicas + r) as u64);
+                let mdir = dir.join(format!("shard{s}-rep{r}"));
+                let live = LiveIndex::<S>::create_with_state(
+                    &mdir,
+                    &entries,
+                    LiveConfig { seed: member_seed, ..live_cfg },
+                    1,
+                )?;
+                members.push((MipsEngine::from_live(live), Some(mdir), member_seed));
+            }
+            groups.push(ReplicaGroup::new(members, &cfg)?);
+        }
+        Ok(Self::from_groups(groups, offsets, dim, cfg))
+    }
+
+    // -- replicated writes --------------------------------------------------
+
+    /// Owning shard of an external id (modulo placement — see
+    /// [`ShardedRouter::create_live_replicated`]).
+    pub fn shard_of(&self, ext_id: u32) -> usize {
+        (ext_id as usize) % self.groups.len()
+    }
+
+    /// Replicated upsert: route to the owning shard, fan the record out
+    /// to every group member at one group sequence number, acknowledge
+    /// at the write quorum ([`ReplicaConfig::write_quorum`]). Errors
+    /// carry structure: a [`crate::index::WriteStalled`] when the
+    /// group's delta backlog is at its cap (retry after compaction
+    /// drains it), a [`QuorumFailed`] when too few members applied the
+    /// record.
+    pub fn upsert(&self, ext_id: u32, vector: &[f32]) -> crate::Result<WriteReply> {
+        anyhow::ensure!(
+            vector.len() == self.dim,
+            "upsert: vector dim {} != index dim {}",
+            vector.len(),
+            self.dim
+        );
+        self.replicate(
+            self.shard_of(ext_id),
+            &WalRecord::Upsert { ext_id, vector: vector.to_vec() },
+        )
+    }
+
+    /// Replicated delete (idempotent), routed and fanned out like
+    /// [`ShardedRouter::upsert`].
+    pub fn delete(&self, ext_id: u32) -> crate::Result<WriteReply> {
+        self.replicate(self.shard_of(ext_id), &WalRecord::Delete { ext_id })
+    }
+
+    /// Replicated bulk upsert: entries are split by owning shard and
+    /// each shard's slice commits as **one** group-commit batch record
+    /// (all-or-nothing per shard, like the engine-level batch). Returns
+    /// one reply per shard that received entries. Atomicity is
+    /// per-shard, not cross-shard: an error from a later shard leaves
+    /// earlier shards' batches durably applied (the returned error
+    /// names the failing shard; completed shards are acknowledged
+    /// writes and are never rolled back).
+    pub fn upsert_batch(&self, entries: &[(u32, Vec<f32>)]) -> crate::Result<Vec<WriteReply>> {
+        let n_shards = self.groups.len();
+        let mut by_shard: Vec<Vec<(u32, Vec<f32>)>> = (0..n_shards).map(|_| Vec::new()).collect();
+        for (ext_id, vector) in entries {
+            anyhow::ensure!(
+                vector.len() == self.dim,
+                "upsert_batch: vector dim {} != index dim {} (id {ext_id})",
+                vector.len(),
+                self.dim
+            );
+            by_shard[self.shard_of(*ext_id)].push((*ext_id, vector.clone()));
+        }
+        let mut replies = Vec::new();
+        for (s, items) in by_shard.into_iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let reply = self
+                .replicate(s, &WalRecord::Batch { items })
+                .map_err(|e| e.context(format!("upsert_batch: shard {s}")))?;
+            replies.push(reply);
+        }
+        Ok(replies)
+    }
+
+    /// The fan-out core shared by the three mutations. Under the
+    /// shard's write lock: backpressure-check every serving member
+    /// *before* a sequence is assigned (a stalled group refuses the
+    /// write uniformly — members never diverge on which writes they
+    /// accepted), derive the group sequence as max member high-water +
+    /// 1, apply on every non-quarantined member, count acks against the
+    /// quorum.
+    fn replicate(&self, shard: usize, rec: &WalRecord) -> crate::Result<WriteReply> {
+        let g = &self.groups[shard];
+        let _wl = lock(&self.write_locks[shard]);
+        let mut serving = 0usize;
+        for m in &g.members {
+            if m.shared.breaker.is_quarantined() {
+                continue;
+            }
+            serving += 1;
+            if let Some(stall) = m.engine().would_stall() {
+                self.metrics.record_write_stalled();
+                return Err(stall.into());
+            }
+        }
+        anyhow::ensure!(serving > 0, "shard {shard}: every member is quarantined");
+        let seq = g
+            .members
+            .iter()
+            .filter(|m| !m.shared.breaker.is_quarantined())
+            .filter_map(|m| m.engine().high_water())
+            .max()
+            .ok_or_else(|| {
+                anyhow::anyhow!("shard {shard}: no live member to replicate to (frozen group?)")
+            })?
+            + 1;
+        let replicas = g.members.len();
+        let mut acked = 0usize;
+        for m in &g.members {
+            if m.shared.breaker.is_quarantined() {
+                continue;
+            }
+            if m.write_crashes_now() {
+                // Injected mid-write-stream member crash: the record is
+                // not applied here; the member leaves rotation until a
+                // catch-up re-admits it.
+                m.shared.breaker.quarantine();
+                self.metrics.record_replica_quarantine();
+                continue;
+            }
+            let engine = m.engine();
+            let applied = match rec {
+                WalRecord::Upsert { ext_id, vector } => {
+                    engine.upsert_at(seq, *ext_id, vector).map(|_| ())
+                }
+                WalRecord::Delete { ext_id } => engine.delete_at(seq, *ext_id).map(|_| ()),
+                WalRecord::Batch { items } => engine.upsert_batch_at(seq, items).map(|_| ()),
+            };
+            match applied {
+                Ok(()) => acked += 1,
+                // A member that refuses the record (sequence gap after a
+                // missed write, crashed instance, I/O error) is a write
+                // failure for its breaker; the scrubber's divergence
+                // pass will catch it up.
+                Err(_) => m.shared.breaker.on_failure(),
+            }
+        }
+        let needed = self.cfg.effective_write_quorum(replicas);
+        if acked < needed {
+            self.metrics.record_quorum_failure();
+            return Err(QuorumFailed { shard, acked, needed, replicas }.into());
+        }
+        self.metrics.record_write_replicated();
+        self.sync_live_gauges();
+        Ok(WriteReply { seq, shard, acked, replicas, degraded: acked < replicas })
+    }
+
+    /// Publish aggregate live-tier gauges onto the router metrics, so
+    /// the routed `metrics`/`metrics_prom` commands report the same
+    /// gauge families as the single-engine front end. Each shard
+    /// contributes its most advanced healthy member (replicas hold
+    /// copies of the same rows — summing every member would
+    /// double-count); sums across shards, except `last_compaction_ms`
+    /// which reports the slowest shard's latest compaction.
+    pub fn sync_live_gauges(&self) {
+        let mut agg = LiveStats {
+            delta_items: 0,
+            tombstones: 0,
+            compactions: 0,
+            wal_bytes: 0,
+            last_compaction_ms: 0,
+            generation: 0,
+            n_items: 0,
+            high_water: 0,
+        };
+        let mut any = false;
+        for g in &self.groups {
+            let reference = g
+                .members
+                .iter()
+                .filter(|m| !m.shared.breaker.is_quarantined())
+                .max_by_key(|m| m.engine().high_water())
+                .or_else(|| g.members.first());
+            let Some(s) = reference.and_then(|m| m.engine().live_stats()) else { continue };
+            any = true;
+            agg.delta_items += s.delta_items;
+            agg.tombstones += s.tombstones;
+            agg.compactions += s.compactions;
+            agg.wal_bytes += s.wal_bytes;
+            agg.last_compaction_ms = agg.last_compaction_ms.max(s.last_compaction_ms);
+            agg.n_items += s.n_items;
+        }
+        if any {
+            self.metrics.record_live_stats(&agg);
+        }
+    }
+
+    /// Bring group `shard`'s member `member` back in sync with its most
+    /// advanced live peer, then re-admit it through its breaker. Holds
+    /// the shard's write lock, so the group's log is frozen while the
+    /// member converges.
+    ///
+    /// The member is first re-opened from disk — recovery replays its
+    /// surviving WAL, truncates a torn tail, and sweeps orphan
+    /// temp/generation files left by a crashed compaction or rebuild.
+    /// Then, if it still lags the donor: replay the missing WAL suffix
+    /// from the donor's log ([`Wal::read_suffix`]); when the suffix is
+    /// gone (compacted away) or replay fails to converge, fall back to
+    /// a full rebuild from the donor's live item set with the member's
+    /// own seed, WAL numbering continued at the donor's high-water.
+    /// Convergence is verified (high-water equality + seed-independent
+    /// state checksum) before the rebuilt engine swaps into the serving
+    /// slot.
+    pub fn catch_up(&self, shard: usize, member: usize) -> crate::Result<CatchUpReport> {
+        let g = &self.groups[shard];
+        let _wl = lock(&self.write_locks[shard]);
+        let m = &g.members[member];
+        let mdir = m
+            .shared
+            .path
+            .clone()
+            .filter(|p| p.is_dir())
+            .ok_or_else(|| anyhow::anyhow!("catch_up: ({shard}, {member}) is not a live member"))?;
+        // The outgoing engine may still be running a background
+        // compactor against this directory; stop it before a second
+        // instance opens (or rebuilds into) the same files.
+        let outgoing = m.engine();
+        if let Some(live) = outgoing.live() {
+            live.stop_compactor();
+        }
+        let reopened = MipsEngine::<S>::open_live(&mdir)?;
+        let donor_idx = (0..g.members.len())
+            .filter(|&i| i != member && !g.members[i].shared.breaker.is_quarantined())
+            .max_by_key(|&i| g.members[i].engine().high_water().unwrap_or(0))
+            .ok_or_else(|| anyhow::anyhow!("catch_up: shard {shard} has no healthy peer"))?;
+        let donor = g.members[donor_idx].engine();
+        let donor_live = donor
+            .live()
+            .ok_or_else(|| anyhow::anyhow!("catch_up: donor ({shard}, {donor_idx}) is frozen"))?;
+        let donor_hw = donor_live.high_water();
+        let donor_sum = donor_live.state_checksum();
+
+        let rebuild = || -> crate::Result<MipsEngine<S>> {
+            let entries = donor_live.live_items();
+            let live = LiveIndex::<S>::create_with_state(
+                &mdir,
+                &entries,
+                LiveConfig {
+                    params: *donor.params(),
+                    n_bands: donor.n_bands(),
+                    seed: m.shared.seed,
+                    delta_cap: donor_live.delta_cap(),
+                },
+                donor_hw + 1,
+            )?;
+            Ok(MipsEngine::from_live(live))
+        };
+
+        let my_hw = reopened.high_water().unwrap_or(0);
+        let (mut engine, mut mode) = if my_hw >= donor_hw {
+            (reopened, CatchUpMode::Replayed(0))
+        } else {
+            match Wal::read_suffix(&donor_live.current_wal_path(), my_hw + 1)? {
+                Some(suffix) => {
+                    let live = reopened
+                        .live()
+                        .ok_or_else(|| anyhow::anyhow!("catch_up: reopened member is frozen"))?;
+                    let n = live.apply_suffix(&suffix)?;
+                    self.metrics.record_catch_up_replay();
+                    (reopened, CatchUpMode::Replayed(n))
+                }
+                None => (rebuild()?, CatchUpMode::Rebuilt),
+            }
+        };
+        let converged = |e: &MipsEngine<S>| {
+            e.high_water() == Some(donor_hw) && e.state_checksum() == Some(donor_sum)
+        };
+        if !converged(&engine) && mode != CatchUpMode::Rebuilt {
+            // Replay landed on a diverged history (same high-water,
+            // different state) — the rebuild fallback is authoritative.
+            engine = rebuild()?;
+            mode = CatchUpMode::Rebuilt;
+        }
+        anyhow::ensure!(
+            converged(&engine),
+            "catch_up: ({shard}, {member}) failed to converge with donor {donor_idx} \
+             (hw {:?} vs {donor_hw})",
+            engine.high_water()
+        );
+        if mode == CatchUpMode::Rebuilt {
+            self.metrics.record_replica_repair();
+        }
+        m.install(engine);
+        m.shared.breaker.readmit();
+        Ok(CatchUpReport { shard, member, mode, high_water: donor_hw })
+    }
+
     /// One synchronous scrub pass: checksum-walk every file-backed
     /// member's sections (`open_mmap_verified`, O(file) per member — no
     /// section escapes the walk). A member whose file fails is
@@ -277,8 +681,15 @@ impl<S: ReplicaStorage> ShardedRouter<S> {
     pub fn scrub_now(&self) -> ScrubReport {
         let mut report = ScrubReport::default();
         for (s, g) in self.groups.iter().enumerate() {
+            self.scrub_live_group(s, g, &mut report);
             for (r, member) in g.members.iter().enumerate() {
                 let Some(path) = &member.shared.path else { continue };
+                if path.is_dir() {
+                    // Live member: handled by the divergence exchange
+                    // above — its generation files carry no section
+                    // checksums to walk.
+                    continue;
+                }
                 report.checked += 1;
                 if open_mmap_verified(path).is_ok() {
                     continue;
@@ -297,6 +708,66 @@ impl<S: ReplicaStorage> ShardedRouter<S> {
             }
         }
         report
+    }
+
+    /// The live-tier divergence exchange of one scrub pass: under the
+    /// shard's write lock (so nothing moves mid-comparison), every live
+    /// member's WAL high-water and state checksum are compared against
+    /// the group's most advanced serving member. A member that lags, or
+    /// disagrees at equal high-water, is quarantined; quarantined live
+    /// members (including ones a write-path crash parked earlier) are
+    /// then caught up and re-admitted — outside the detection lock,
+    /// because [`ShardedRouter::catch_up`] takes it itself.
+    fn scrub_live_group(&self, s: usize, g: &ReplicaGroup<S>, report: &mut ScrubReport) {
+        let live_members: Vec<usize> = g
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.shared.path.as_deref().is_some_and(|p| p.is_dir()))
+            .map(|(i, _)| i)
+            .collect();
+        if live_members.is_empty() {
+            return;
+        }
+        let mut to_catch_up = Vec::new();
+        {
+            let _wl = lock(&self.write_locks[s]);
+            let reference = live_members
+                .iter()
+                .copied()
+                .filter(|&i| !g.members[i].shared.breaker.is_quarantined())
+                .max_by_key(|&i| g.members[i].engine().high_water().unwrap_or(0));
+            let Some(ref_i) = reference else { return };
+            let ref_engine = g.members[ref_i].engine();
+            let ref_hw = ref_engine.high_water().unwrap_or(0);
+            let ref_sum = ref_engine.state_checksum();
+            for &r in &live_members {
+                report.checked += 1;
+                if r == ref_i {
+                    continue;
+                }
+                let m = &g.members[r];
+                if !m.shared.breaker.is_quarantined() {
+                    let e = m.engine();
+                    let lagging = e.high_water().unwrap_or(0) < ref_hw;
+                    let disagrees = !lagging && e.state_checksum() != ref_sum;
+                    if lagging || disagrees {
+                        m.shared.breaker.quarantine();
+                        self.metrics.record_replica_quarantine();
+                        report.diverged.push((s, r));
+                    }
+                }
+                if m.shared.breaker.is_quarantined() {
+                    to_catch_up.push(r);
+                }
+            }
+        }
+        for r in to_catch_up {
+            match self.catch_up(s, r) {
+                Ok(_) => report.caught_up.push((s, r)),
+                Err(e) => report.failed.push((s, r, format!("{e:#}"))),
+            }
+        }
     }
 
     /// Restore group member `r` from rot: prefer the surviving on-disk
@@ -416,11 +887,13 @@ impl<S: Storage> ShardedRouter<S> {
         dim: usize,
         cfg: ReplicaConfig,
     ) -> Self {
+        let write_locks = groups.iter().map(|_| Mutex::new(())).collect();
         Self {
             groups,
             offsets,
             dim,
             cfg,
+            write_locks,
             metrics: Arc::new(Metrics::new()),
             scrub_stop: Arc::new(AtomicBool::new(false)),
             scrubber: Mutex::new(None),
@@ -447,6 +920,15 @@ impl<S: Storage> ShardedRouter<S> {
     pub fn shard(&self, s: usize) -> Arc<MipsEngine<S>> {
         let g = &self.groups[s];
         g.members[g.pick_serving()].engine()
+    }
+
+    /// Group `shard`'s member `member`'s serving engine, healthy or not
+    /// — divergence inspection, fault injection, and per-member
+    /// verification in tests. A clone of the serving `Arc`: a
+    /// concurrent repair swaps the slot, not the engine behind a held
+    /// clone.
+    pub fn member_engine(&self, shard: usize, member: usize) -> Arc<MipsEngine<S>> {
+        self.groups[shard].members[member].engine()
     }
 
     /// Router-level metrics (hedges, partial replies, scrub events,
@@ -871,7 +1353,7 @@ mod tests {
         let live = MipsEngine::create_live(
             &dir,
             &its[100..],
-            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 61 },
+            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 61, ..LiveConfig::default() },
         )
         .unwrap();
         let router = ShardedRouter::from_engines(vec![frozen, live]).unwrap();
@@ -1002,6 +1484,178 @@ mod tests {
         // The primary member of every group is the sync path's pick, so
         // a healthy replicated scatter returns the same merged top-k.
         assert_eq!(reply.hits, router.query(&q, 10));
+    }
+
+    // -- PR 10: replicated writes ------------------------------------------
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "alsh_router_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn live_cfg(seed: u64) -> LiveConfig {
+        LiveConfig { params: AlshParams::default(), n_bands: 1, seed, ..LiveConfig::default() }
+    }
+
+    fn group_checksums(router: &ShardedRouter, s: usize) -> Vec<u64> {
+        router.groups[s]
+            .members
+            .iter()
+            .map(|m| m.engine().state_checksum().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn live_replicated_write_fanout_and_divergence_scrub() {
+        let dir = tmp_dir("wfan");
+        let its = items(60, 6, 100);
+        let router = ShardedRouter::<Owned>::create_live_replicated(
+            &dir,
+            &its,
+            2,
+            3,
+            live_cfg(101),
+            ReplicaConfig::default(),
+        )
+        .unwrap();
+        // Upsert routes by id modulo and fans out to all three members.
+        let r = router.upsert(60, &its[0]).unwrap();
+        assert_eq!((r.shard, r.seq, r.acked, r.replicas), (0, 1, 3, 3));
+        assert!(!r.degraded);
+        let r = router.delete(3).unwrap();
+        assert_eq!(r.shard, 1);
+        let replies =
+            router.upsert_batch(&[(61, its[1].clone()), (62, its[2].clone())]).unwrap();
+        assert_eq!(replies.len(), 2, "batch split across both owning shards");
+        assert_eq!((replies[0].shard, replies[1].shard), (0, 1));
+        // Every member of a group applied the same history.
+        for s in 0..2 {
+            let sums = group_checksums(&router, s);
+            assert!(sums.windows(2).all(|w| w[0] == w[1]), "shard {s} members diverged");
+        }
+        // The new item serves under its external id; the deleted one is
+        // gone.
+        let hits = router.query(&its[0], 70);
+        assert!(hits.iter().any(|h| h.id == 60), "upserted id 60 not served");
+        assert!(hits.iter().all(|h| h.id != 3), "deleted id 3 resurfaced");
+        // Shard-0 members have seen 2 write ops (seq counter at 2):
+        // crash member (0,1) on its next write. The write still
+        // quorum-acks 2/3 and reports degraded.
+        router.set_shard_faults(
+            0,
+            1,
+            ShardFaultPlan { write_crash_at: Some(2), ..Default::default() },
+        );
+        let r = router.upsert(64, &its[4]).unwrap();
+        assert_eq!((r.shard, r.acked, r.replicas), (0, 2, 3));
+        assert!(r.degraded, "missing member ack must surface as write_degraded");
+        assert!(router.groups[0].members[1].shared.breaker.is_quarantined());
+        // The divergence scrub catches the member up from a peer's WAL
+        // suffix and re-admits it.
+        let report = router.scrub_now();
+        assert!(report.caught_up.contains(&(0, 1)), "report: {report:?}");
+        assert!(!router.groups[0].members[1].shared.breaker.is_quarantined());
+        let sums = group_checksums(&router, 0);
+        assert!(sums.windows(2).all(|w| w[0] == w[1]), "caught-up member still diverged");
+        let snap = router.metrics().snapshot();
+        assert_eq!(snap.writes_replicated, 5);
+        assert_eq!(snap.catch_up_replays, 1);
+        assert_eq!(snap.replica_quarantines, 1);
+        // Fully healed: the next write acks all three again.
+        let r = router.upsert(66, &its[6]).unwrap();
+        assert_eq!(r.acked, 3);
+        assert!(!r.degraded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn catch_up_rebuilds_when_suffix_compacted_away() {
+        let dir = tmp_dir("wrebuild");
+        let its = items(40, 6, 110);
+        let router = ShardedRouter::<Owned>::create_live_replicated(
+            &dir,
+            &its,
+            1,
+            3,
+            live_cfg(111),
+            ReplicaConfig::default(),
+        )
+        .unwrap();
+        for i in 0..3u32 {
+            router.upsert(40 + i, &its[i as usize]).unwrap();
+        }
+        // Crash member 2 on the next write, then land it (2/3 quorum).
+        router.set_shard_faults(
+            0,
+            2,
+            ShardFaultPlan { write_crash_at: Some(3), ..Default::default() },
+        );
+        router.upsert(43, &its[3]).unwrap();
+        assert!(router.groups[0].members[2].shared.breaker.is_quarantined());
+        // Compact both healthy peers: every donor's WAL restarts past
+        // the suffix the lagging member needs.
+        router.groups[0].members[0].engine().compact().unwrap();
+        router.groups[0].members[1].engine().compact().unwrap();
+        let report = router.catch_up(0, 2).unwrap();
+        assert_eq!(report.mode, CatchUpMode::Rebuilt, "expected the rebuild fallback");
+        assert_eq!(report.high_water, 4);
+        let sums = group_checksums(&router, 0);
+        assert!(sums.windows(2).all(|w| w[0] == w[1]), "rebuilt member diverged");
+        assert!(!router.groups[0].members[2].shared.breaker.is_quarantined());
+        assert_eq!(router.metrics().snapshot().replica_repairs, 1);
+        // The rebuilt member accepts the next fan-out at the group seq.
+        let r = router.upsert(44, &its[4]).unwrap();
+        assert_eq!((r.seq, r.acked), (5, 3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_backpressure_is_structured_and_uniform() {
+        use crate::index::WriteStalled;
+        let dir = tmp_dir("wstall");
+        let its = items(30, 6, 120);
+        let router = ShardedRouter::<Owned>::create_live_replicated(
+            &dir,
+            &its,
+            1,
+            2,
+            LiveConfig { delta_cap: 4, ..live_cfg(121) },
+            ReplicaConfig::default(),
+        )
+        .unwrap();
+        for i in 0..4u32 {
+            router.upsert(100 + i, &its[i as usize]).unwrap();
+        }
+        let err = router.upsert(104, &its[4]).unwrap_err();
+        let stall = err
+            .downcast_ref::<WriteStalled>()
+            .expect("stall must be structured, not a string");
+        assert_eq!((stall.pending, stall.cap), (4, 4));
+        assert!(stall.retry_after_ms >= 10);
+        assert_eq!(router.metrics().snapshot().write_stalled, 1);
+        // No member accepted a sequence for the refused write.
+        let hws: Vec<_> = router.groups[0]
+            .members
+            .iter()
+            .map(|m| m.engine().high_water().unwrap())
+            .collect();
+        assert_eq!(hws, vec![4, 4], "stall diverged member logs");
+        // Reads keep answering at the cap.
+        assert!(!router.query(&its[0], 10).is_empty());
+        // Compaction drains the backlog; the write then lands.
+        router.groups[0].members[0].engine().compact().unwrap();
+        router.groups[0].members[1].engine().compact().unwrap();
+        let r = router.upsert(104, &its[4]).unwrap();
+        assert_eq!((r.seq, r.acked), (5, 2));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -24,6 +24,17 @@
 //! ← {"ok": true, "n_items": 1000}
 //! ```
 //!
+//! On the routed front end the same three mutation commands replicate
+//! instead (see below) and answer acknowledgement accounting:
+//!
+//! ```text
+//! → {"cmd": "upsert", "id": 42, "vector": [0.1, ...]}
+//! ← {"ok": true, "seq": 17, "shard": 0, "acked": 3, "replicas": 3,
+//!    "write_degraded": false}
+//! ← {"ok": false, "code": "write_stalled", "error": "...", "pending": 1048576,
+//!    "cap": 1048576, "retry_after_ms": 40}
+//! ```
+//!
 //! `upsert`/`delete` mutate a live engine ([`MipsEngine::open_live`]):
 //! the WAL append is durable before the `ok` line is written, and the
 //! new state is visible to every query admitted afterwards.
@@ -60,22 +71,29 @@
 //! scatter/gather and every response discloses coverage
 //! (`shards_answered`, `shards_total`, `coverage_fraction`, `degraded`,
 //! `hedge_fired`); its `metrics` command reports hedge/partial/scrub
-//! counters, per-shard p99 gauges, and per-member breaker states.
+//! counters, write-replication counters, per-shard p99 gauges, and
+//! per-member breaker states. Routed `upsert`/`delete`/`upsert_batch`
+//! fan the mutation out to every member of the owning shard's replica
+//! group and acknowledge at write quorum
+//! ([`ShardedRouter::upsert`]); success replies carry `{seq, shard,
+//! acked, replicas, write_degraded}`, backpressure answers
+//! `code: "write_stalled"` with a `retry_after_ms` hint, and a fan-out
+//! that misses quorum answers `code: "quorum_failed"`.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::index::storage::Storage;
-use crate::index::ProbeBudget;
+use crate::index::{LiveStorage, ProbeBudget, WriteStalled};
 use crate::util::json::{num_arr, obj, Json};
 
 use super::admission::{deadline_expired, triage_deadline_ms};
 use super::batcher::{BatcherHandle, BreakerState};
 use super::engine::MipsEngine;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::ShardedRouter;
+use super::replica::QuorumFailed;
+use super::router::{ShardedRouter, WriteReply};
 use super::trace::{QuerySpans, Stage};
 
 /// Server configuration.
@@ -218,12 +236,43 @@ fn handle_slowlog_cmd(metrics: &Metrics) -> Json {
 
 /// The `metrics_prom` command: the full snapshot in Prometheus text
 /// exposition format 0.0.4, carried in the JSON-lines envelope.
-fn metrics_prom_response(s: &MetricsSnapshot) -> Json {
+fn metrics_prom_response(body: String) -> Json {
     obj(vec![
         ("ok", Json::Bool(true)),
         ("content_type", Json::Str("text/plain; version=0.0.4".into())),
-        ("body", Json::Str(s.prometheus_text())),
+        ("body", Json::Str(body)),
     ])
+}
+
+/// Router-only gauges appended to the routed Prometheus body, so every
+/// family the routed `metrics` command reports has an exposition
+/// counterpart (asserted in `tests/replicated_writes.rs`).
+fn router_prom_extras<S: LiveStorage>(router: &ShardedRouter<S>, body: &mut String) {
+    use std::fmt::Write as _;
+    let _ = writeln!(body, "# HELP alsh_shard_answer_p99_us Per-shard answer latency p99.");
+    let _ = writeln!(body, "# TYPE alsh_shard_answer_p99_us gauge");
+    for (s, v) in router.shard_p99_us().iter().enumerate() {
+        let _ = writeln!(body, "alsh_shard_answer_p99_us{{shard=\"{s}\"}} {v}");
+    }
+    let _ = writeln!(
+        body,
+        "# HELP alsh_replica_breaker_state Member breaker state (0 closed, 1 half-open, 2 open, 3 quarantined)."
+    );
+    let _ = writeln!(body, "# TYPE alsh_replica_breaker_state gauge");
+    for (s, g) in router.breaker_states().into_iter().enumerate() {
+        for (r, b) in g.into_iter().enumerate() {
+            let code = match b.as_str() {
+                "closed" => 0,
+                "half_open" => 1,
+                "open" => 2,
+                _ => 3,
+            };
+            let _ = writeln!(
+                body,
+                "alsh_replica_breaker_state{{shard=\"{s}\",member=\"{r}\"}} {code}"
+            );
+        }
+    }
 }
 
 /// Per-stage `{count, p50_us, p99_us}` breakdown for the `metrics`
@@ -283,7 +332,7 @@ fn handle_engine_cmd(
         "ping" => obj(vec![("ok", Json::Bool(true))]),
         "trace" => handle_trace_cmd(req, handle.metrics()),
         "slowlog" => handle_slowlog_cmd(handle.metrics()),
-        "metrics_prom" => metrics_prom_response(&engine.metrics_snapshot()),
+        "metrics_prom" => metrics_prom_response(engine.metrics_snapshot().prometheus_text()),
         "metrics" => {
             let s = engine.metrics_snapshot();
             let breaker = match handle.breaker_state() {
@@ -485,11 +534,14 @@ fn handle_engine_query(
 /// timeouts), and every query response carries the coverage fields
 /// (`shards_answered`, `shards_total`, `coverage_fraction`, `degraded`,
 /// `hedge_fired`) so a client can always tell a full answer from a
-/// partial one. Mutations are rejected — replica groups serve frozen
-/// index files. The `metrics` command reports the router counters:
-/// hedge fires, partial replies, scrub quarantines/repairs, per-shard
-/// answer-p99 gauges, and per-member breaker states.
-pub fn handle_router_request<S: Storage>(
+/// partial one. Mutations route by id to the owning shard and replicate
+/// to every group member with quorum acknowledgement
+/// ([`ShardedRouter::upsert`]); against frozen replica groups they
+/// answer `internal` (no live member to replicate to). The `metrics`
+/// command reports the router counters: hedge fires, partial replies,
+/// scrub quarantines/repairs, write-replication counters, live-tier
+/// gauges, per-shard answer-p99 gauges, and per-member breaker states.
+pub fn handle_router_request<S: LiveStorage>(
     line: &str,
     router: &ShardedRouter<S>,
     cfg: &ServeConfig,
@@ -497,7 +549,7 @@ pub fn handle_router_request<S: Storage>(
     handle_router_request_full(line, router, cfg).finish_inline()
 }
 
-fn handle_router_request_full<S: Storage>(
+fn handle_router_request_full<S: LiveStorage>(
     line: &str,
     router: &ShardedRouter<S>,
     cfg: &ServeConfig,
@@ -512,13 +564,19 @@ fn handle_router_request_full<S: Storage>(
     }
 }
 
-fn handle_router_cmd<S: Storage>(cmd: &str, req: &Json, router: &ShardedRouter<S>) -> Json {
+fn handle_router_cmd<S: LiveStorage>(cmd: &str, req: &Json, router: &ShardedRouter<S>) -> Json {
     match cmd {
         "ping" => obj(vec![("ok", Json::Bool(true))]),
         "trace" => handle_trace_cmd(req, &router.metrics()),
         "slowlog" => handle_slowlog_cmd(&router.metrics()),
-        "metrics_prom" => metrics_prom_response(&router.metrics().snapshot()),
+        "metrics_prom" => {
+            router.sync_live_gauges();
+            let mut body = router.metrics().snapshot().prometheus_text();
+            router_prom_extras(router, &mut body);
+            metrics_prom_response(body)
+        }
         "metrics" => {
+            router.sync_live_gauges();
             let s = router.metrics().snapshot();
             let shard_p99: Vec<f64> =
                 router.shard_p99_us().iter().map(|&v| v as f64).collect();
@@ -539,6 +597,15 @@ fn handle_router_cmd<S: Storage>(cmd: &str, req: &Json, router: &ShardedRouter<S
                         ("partial_replies", Json::Num(s.partial_replies as f64)),
                         ("replica_quarantines", Json::Num(s.replica_quarantines as f64)),
                         ("replica_repairs", Json::Num(s.replica_repairs as f64)),
+                        ("writes_replicated", Json::Num(s.writes_replicated as f64)),
+                        ("write_stalled", Json::Num(s.write_stalled as f64)),
+                        ("quorum_failures", Json::Num(s.quorum_failures as f64)),
+                        ("catch_up_replays", Json::Num(s.catch_up_replays as f64)),
+                        ("delta_items", Json::Num(s.delta_items as f64)),
+                        ("tombstones", Json::Num(s.tombstones as f64)),
+                        ("compactions", Json::Num(s.compactions as f64)),
+                        ("wal_bytes", Json::Num(s.wal_bytes as f64)),
+                        ("last_compaction_ms", Json::Num(s.last_compaction_ms as f64)),
                         ("p50_latency_us", Json::Num(s.p50_latency_us as f64)),
                         ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
                         ("shard_p99_us", num_arr(&shard_p99)),
@@ -550,11 +617,149 @@ fn handle_router_cmd<S: Storage>(cmd: &str, req: &Json, router: &ShardedRouter<S
                 ),
             ])
         }
-        other => err_response(
-            "invalid_argument",
-            format!("unknown cmd {other:?} (mutations are not served on the routed path)"),
-        ),
+        "upsert" => {
+            let Some(id) = parse_ext_id(req) else {
+                return err_response("invalid_argument", "id must be an integer in u32 range");
+            };
+            let vector = match parse_mutation_vector(req.get("vector"), router.dim()) {
+                Ok(v) => v,
+                Err(resp) => return resp,
+            };
+            match router.upsert(id, &vector) {
+                Ok(r) => write_ok_response(&r),
+                Err(e) => write_err_response(&e, "upsert"),
+            }
+        }
+        "delete" => {
+            let Some(id) = parse_ext_id(req) else {
+                return err_response("invalid_argument", "id must be an integer in u32 range");
+            };
+            match router.delete(id) {
+                Ok(r) => write_ok_response(&r),
+                Err(e) => write_err_response(&e, "delete"),
+            }
+        }
+        "upsert_batch" => {
+            let Some(ids) = req.get("ids").and_then(Json::as_arr) else {
+                return err_response("invalid_argument", "missing or malformed ids array");
+            };
+            let Some(vectors) = req.get("vectors").and_then(Json::as_arr) else {
+                return err_response("invalid_argument", "missing or malformed vectors array");
+            };
+            if ids.is_empty() || ids.len() != vectors.len() {
+                return err_response(
+                    "invalid_argument",
+                    format!(
+                        "ids ({}) and vectors ({}) must be equal-length and non-empty",
+                        ids.len(),
+                        vectors.len()
+                    ),
+                );
+            }
+            // Validate the whole batch before any shard logs a byte, so
+            // a rejected batch mutates nothing anywhere.
+            let mut entries = Vec::with_capacity(ids.len());
+            for (i, (id, vec)) in ids.iter().zip(vectors).enumerate() {
+                let Some(id) = id.as_usize().and_then(|v| u32::try_from(v).ok()) else {
+                    return err_response(
+                        "invalid_argument",
+                        format!("ids[{i}] must be an integer in u32 range"),
+                    );
+                };
+                let vector = match parse_mutation_vector(Some(vec), router.dim()) {
+                    Ok(v) => v,
+                    Err(_) => {
+                        return err_response(
+                            "invalid_argument",
+                            format!("vectors[{i}] is missing, malformed, or mis-dimensioned"),
+                        )
+                    }
+                };
+                entries.push((id, vector));
+            }
+            match router.upsert_batch(&entries) {
+                Ok(replies) => obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("count", Json::Num(entries.len() as f64)),
+                    ("write_degraded", Json::Bool(replies.iter().any(|r| r.degraded))),
+                    ("writes", Json::Arr(replies.iter().map(write_reply_json).collect())),
+                ]),
+                Err(e) => write_err_response(&e, "upsert_batch"),
+            }
+        }
+        other => err_response("invalid_argument", format!("unknown cmd {other:?}")),
     }
+}
+
+/// A mutation command's `vector` field, validated like a query vector
+/// (present, all-finite, right dimension). `Err` is the ready-to-send
+/// error response.
+fn parse_mutation_vector(v: Option<&Json>, dim: usize) -> Result<Vec<f32>, Json> {
+    let Some(vector) = v.and_then(Json::as_f32_vec) else {
+        return Err(err_response("invalid_argument", "missing or malformed vector"));
+    };
+    if vector.iter().any(|c| !c.is_finite()) {
+        return Err(err_response("invalid_argument", "vector contains non-finite components"));
+    }
+    if vector.len() != dim {
+        return Err(err_response(
+            "invalid_argument",
+            format!("vector dim {} != index dim {dim}", vector.len()),
+        ));
+    }
+    Ok(vector)
+}
+
+/// The per-shard acknowledgement fields of one replicated write.
+fn write_reply_json(r: &WriteReply) -> Json {
+    obj(vec![
+        ("seq", Json::Num(r.seq as f64)),
+        ("shard", Json::Num(r.shard as f64)),
+        ("acked", Json::Num(r.acked as f64)),
+        ("replicas", Json::Num(r.replicas as f64)),
+        ("write_degraded", Json::Bool(r.degraded)),
+    ])
+}
+
+fn write_ok_response(r: &WriteReply) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("seq", Json::Num(r.seq as f64)),
+        ("shard", Json::Num(r.shard as f64)),
+        ("acked", Json::Num(r.acked as f64)),
+        ("replicas", Json::Num(r.replicas as f64)),
+        ("write_degraded", Json::Bool(r.degraded)),
+    ])
+}
+
+/// Map a routed write failure onto the wire. Typed stalls answer
+/// `write_stalled` and carry the backpressure fields — `retry_after_ms`
+/// tells the client when the compactor expects to have drained room —
+/// and quorum misses answer `quorum_failed` with the ack arithmetic, so
+/// clients can tell "slow down" from "shard unhealthy" without string
+/// matching. Everything else is `internal`.
+fn write_err_response(e: &anyhow::Error, op: &str) -> Json {
+    if let Some(stall) = e.downcast_ref::<WriteStalled>() {
+        return obj(vec![
+            ("ok", Json::Bool(false)),
+            ("code", Json::Str("write_stalled".into())),
+            ("error", Json::Str(stall.to_string())),
+            ("pending", Json::Num(stall.pending as f64)),
+            ("cap", Json::Num(stall.cap as f64)),
+            ("retry_after_ms", Json::Num(stall.retry_after_ms as f64)),
+        ]);
+    }
+    if let Some(q) = e.downcast_ref::<QuorumFailed>() {
+        return obj(vec![
+            ("ok", Json::Bool(false)),
+            ("code", Json::Str("quorum_failed".into())),
+            ("error", Json::Str(q.to_string())),
+            ("acked", Json::Num(q.acked as f64)),
+            ("needed", Json::Num(q.needed as f64)),
+            ("replicas", Json::Num(q.replicas as f64)),
+        ]);
+    }
+    err_response("internal", format!("{op} failed: {e:#}"))
 }
 
 /// The routed query line: same trace-id contract as the engine path,
@@ -562,7 +767,7 @@ fn handle_router_cmd<S: Storage>(cmd: &str, req: &Json, router: &ShardedRouter<S
 /// ([`ShardedRouter::query_replicated_traced`]). A query that blew its
 /// deadline mid-gather still hands its spans back — exactly the slow
 /// query the slow log exists to explain.
-fn handle_router_query<S: Storage>(
+fn handle_router_query<S: LiveStorage>(
     req: &Json,
     router: &ShardedRouter<S>,
     cfg: &ServeConfig,
@@ -793,7 +998,7 @@ pub fn serve_on(
 /// [`serve_on`]: every line is answered by [`handle_router_request`],
 /// so queries get hedged scatter/gather and coverage-disclosed partial
 /// results.
-pub fn serve_router_on<S: Storage>(
+pub fn serve_router_on<S: LiveStorage>(
     listener: TcpListener,
     router: Arc<ShardedRouter<S>>,
     cfg: ServeConfig,

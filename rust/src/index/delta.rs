@@ -141,13 +141,73 @@ pub struct LiveConfig {
     /// with it, so the hash families — and therefore the delta's bucket
     /// keys — are stable across generations.
     pub seed: u64,
+    /// Write backpressure: once the pending delta (live rows + dead
+    /// delta rows + base tombstones) reaches this bound, mutations are
+    /// refused with a structured [`WriteStalled`] until compaction
+    /// drains the delta. This caps both memory growth and the
+    /// per-mutation copy-on-write clone cost.
+    pub delta_cap: usize,
 }
 
 impl Default for LiveConfig {
     fn default() -> Self {
-        Self { params: AlshParams::default(), n_bands: 1, seed: 0x5EED }
+        Self {
+            params: AlshParams::default(),
+            n_bands: 1,
+            seed: 0x5EED,
+            delta_cap: 1 << 20,
+        }
     }
 }
+
+/// Structured backpressure error: the delta hit [`LiveConfig::delta_cap`]
+/// and the mutation was refused **before** any WAL append or sequence
+/// assignment (so a stalled write never diverges replicas). The caller
+/// should retry after `retry_after_ms` — derived from the most recent
+/// compaction's duration, the best local estimate of how long the drain
+/// will take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteStalled {
+    /// Pending delta work (live + dead delta rows + base tombstones).
+    pub pending: usize,
+    /// The configured cap that was hit.
+    pub cap: usize,
+    /// Suggested client retry delay.
+    pub retry_after_ms: u64,
+}
+
+impl std::fmt::Display for WriteStalled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "write stalled: delta backlog {} at cap {} (retry after {} ms)",
+            self.pending, self.cap, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for WriteStalled {}
+
+/// Structured sequencing error on the replicated fan-out path: a member
+/// was asked to apply a record whose group sequence number is not the
+/// next one its WAL expects. `got > expected` means the member missed
+/// writes and must catch up; `got < expected` means it already has the
+/// record (an idempotent no-op for the caller).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqGap {
+    /// The sequence number this member's WAL expects next.
+    pub expected: u64,
+    /// The sequence number the record carried.
+    pub got: u64,
+}
+
+impl std::fmt::Display for SeqGap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sequence gap: record carries seq {}, member expects {}", self.got, self.expected)
+    }
+}
+
+impl std::error::Error for SeqGap {}
 
 /// Fault-injection plan for the compactor (the crash-consistency test
 /// harness; all-off in production). An injected crash abandons the
@@ -184,6 +244,10 @@ pub struct LiveStats {
     pub generation: u64,
     /// Logical item count (base − tombstones + live delta rows).
     pub n_items: u64,
+    /// Highest durable WAL sequence number (0 before the first write).
+    /// Comparable across replica-group members: equal high-waters mean
+    /// equal applied mutation histories.
+    pub high_water: u64,
 }
 
 /// One delta row's bookkeeping; the vector lives at the same row index
@@ -362,6 +426,12 @@ struct LiveInner<S: Storage> {
     /// Mirror of the writer's WAL length, so [`LiveIndex::stats`] never
     /// blocks on the writer lock (a compaction can hold it for a while).
     wal_bytes: AtomicU64,
+    /// Mirror of the writer's WAL high-water sequence (same rationale).
+    high_water: AtomicU64,
+    /// Runtime-adjustable write-backpressure bound (see
+    /// [`LiveConfig::delta_cap`]). Not persisted: reopen paths re-apply
+    /// their configured cap via [`LiveIndex::set_delta_cap`].
+    delta_cap: std::sync::atomic::AtomicUsize,
     last_compaction_ms: AtomicU64,
     stop: AtomicBool,
     compactor: Mutex<Option<std::thread::JoinHandle<()>>>,
@@ -513,21 +583,52 @@ impl<S: LiveStorage> LiveIndex<S> {
     /// generation file (so created and recovered instances serve the
     /// exact same bytes).
     pub fn create(dir: impl AsRef<Path>, items: &[Vec<f32>], cfg: LiveConfig) -> Result<Self> {
+        let entries: Vec<(u32, Vec<f32>)> = items
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i as u32, v.clone()))
+            .collect();
+        Self::create_with_state(dir, &entries, cfg, 1)
+    }
+
+    /// Create a live index over an explicit `(external id, vector)` set,
+    /// with the WAL numbered from `base_seq`. This is the
+    /// rebuild-from-peer path of the replicated write tier: the peer's
+    /// live item set plus `peer high-water + 1` produce a member whose
+    /// state and sequence numbering both agree with the group. Any
+    /// previous contents of `dir` are superseded (the new generation 0
+    /// MANIFEST is the commit point; old generations are swept).
+    pub fn create_with_state(
+        dir: impl AsRef<Path>,
+        entries: &[(u32, Vec<f32>)],
+        cfg: LiveConfig,
+        base_seq: u64,
+    ) -> Result<Self> {
         let dir = dir.as_ref();
-        ensure!(!items.is_empty(), "live index: empty initial item set");
-        let dim = items[0].len();
+        ensure!(!entries.is_empty(), "live index: empty initial item set");
+        ensure!(base_seq >= 1, "live index: sequence numbers start at 1");
+        let dim = entries[0].1.len();
         ensure!(
-            items.iter().all(|v| v.len() == dim),
+            entries.iter().all(|(_, v)| v.len() == dim),
             "live index: ragged initial item dims"
         );
+        let mut sorted: Vec<&(u32, Vec<f32>)> = entries.iter().collect();
+        sorted.sort_unstable_by_key(|(ext, _)| *ext);
+        ensure!(
+            sorted.windows(2).all(|w| w[0].0 < w[1].0),
+            "live index: duplicate external ids in initial item set"
+        );
+        let ids: Vec<u32> = sorted.iter().map(|(ext, _)| *ext).collect();
+        let items: Vec<Vec<f32>> = sorted.iter().map(|(_, v)| v.clone()).collect();
         std::fs::create_dir_all(dir)?;
-        let base = build_base(items, cfg.params, cfg.n_bands, cfg.seed);
+        let base = build_base(&items, cfg.params, cfg.n_bands, cfg.seed);
         base.save_as(gen_index_path(dir, 0), PersistFormat::V5)?;
-        let ids: Vec<u32> = (0..items.len() as u32).collect();
         write_ids(&gen_ids_path(dir, 0), &ids)?;
-        let wal = Wal::create(wal_path(dir, 0))?;
+        let wal = Wal::create(wal_path(dir, 0), base_seq)?;
         write_manifest(dir, 0, cfg.seed)?;
-        Self::assemble(dir, 0, cfg.seed, ids, wal, Vec::new())
+        let live = Self::assemble(dir, 0, cfg.seed, ids, wal, Vec::new())?;
+        live.set_delta_cap(cfg.delta_cap);
+        Ok(live)
     }
 
     /// Recover a live index from `dir`: read the MANIFEST, open the
@@ -579,6 +680,8 @@ impl<S: LiveStorage> LiveIndex<S> {
             fused,
             cell: EpochCell::new(snapshot),
             wal_bytes: AtomicU64::new(wal.bytes()),
+            high_water: AtomicU64::new(wal.high_water()),
+            delta_cap: std::sync::atomic::AtomicUsize::new(LiveConfig::default().delta_cap),
             writer: Mutex::new(WriterState { wal, gen: generation, crashed: false }),
             faults: Mutex::new(CompactorFaultPlan::default()),
             compactions: AtomicU64::new(0),
@@ -594,20 +697,8 @@ impl<S: LiveStorage> LiveIndex<S> {
             let snap = live.inner.cell.read().1;
             let mut delta = snap.delta.clone();
             for rec in &records {
-                match rec {
-                    WalRecord::Upsert { ext_id, vector } => {
-                        ensure!(
-                            vector.len() == live.inner.dim,
-                            "live index: WAL upsert dim {} != index dim {}",
-                            vector.len(),
-                            live.inner.dim
-                        );
-                        live.apply_upsert(&mut delta, &snap, *ext_id, vector);
-                    }
-                    WalRecord::Delete { ext_id } => {
-                        live.apply_delete(&mut delta, &snap, *ext_id);
-                    }
-                }
+                live.check_record_dims(rec)?;
+                live.apply_record(&mut delta, &snap, rec);
             }
             live.inner
                 .cell
@@ -684,7 +775,106 @@ impl<S: Storage> LiveIndex<S> {
             last_compaction_ms: self.inner.last_compaction_ms.load(Ordering::Relaxed),
             generation: snap.base.gen,
             n_items: snap.n_items() as u64,
+            high_water: self.inner.high_water.load(Ordering::Relaxed),
         }
+    }
+
+    /// Highest durable WAL sequence number (0 before the first write).
+    pub fn high_water(&self) -> u64 {
+        self.inner.high_water.load(Ordering::Relaxed)
+    }
+
+    /// The current generation's WAL file path — what a lagging peer
+    /// reads its catch-up suffix from ([`Wal::read_suffix`]).
+    pub fn current_wal_path(&self) -> PathBuf {
+        wal_path(&self.inner.dir, self.generation())
+    }
+
+    /// Adjust the write-backpressure bound at runtime (reopen paths
+    /// re-apply their configured cap; the value is not persisted).
+    pub fn set_delta_cap(&self, cap: usize) {
+        self.inner.delta_cap.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    /// The current write-backpressure bound.
+    pub fn delta_cap(&self) -> usize {
+        self.inner.delta_cap.load(Ordering::Relaxed)
+    }
+
+    /// Would a mutation be refused right now? Returns the structured
+    /// stall the mutation would fail with. The replicated fan-out
+    /// checks this on every member **before** assigning a sequence
+    /// number, so group-level backpressure never diverges members.
+    pub fn would_stall(&self) -> Option<WriteStalled> {
+        let snap = self.inner.cell.read().1;
+        self.stall_of(&snap.delta)
+    }
+
+    fn stall_of(&self, delta: &DeltaState) -> Option<WriteStalled> {
+        let pending = delta.entries.len() + delta.n_base_dead;
+        let cap = self.inner.delta_cap.load(Ordering::Relaxed);
+        if pending < cap {
+            return None;
+        }
+        // Best local estimate of the drain time: the last compaction's
+        // wall clock, clamped to a sane client retry window.
+        let retry_after_ms = self
+            .inner
+            .last_compaction_ms
+            .load(Ordering::Relaxed)
+            .clamp(10, 1000);
+        Some(WriteStalled { pending, cap, retry_after_ms })
+    }
+
+    /// The live logical item set `(external id, vector)`, ascending by
+    /// external id — the input a from-scratch rebuild (compaction, or a
+    /// peer rebuilding a diverged member) would consume.
+    pub fn live_items(&self) -> Vec<(u32, Vec<f32>)> {
+        let snap = self.inner.cell.read().1;
+        Self::collect_live(&snap, self.inner.dim)
+    }
+
+    fn collect_live(snap: &LiveSnapshot<S>, dim: usize) -> Vec<(u32, Vec<f32>)> {
+        let n_base = snap.n_base();
+        let mut live: Vec<(u32, Vec<f32>)> =
+            Vec::with_capacity(n_base - snap.delta.n_base_dead + snap.delta.n_alive);
+        let base_flat = match &snap.base.index {
+            AnyIndex::Flat(i) => i.items_flat(),
+            AnyIndex::Banded(i) => i.items_flat(),
+        };
+        for internal in 0..n_base as u32 {
+            if !snap.delta.base_is_dead(internal) {
+                let row = &base_flat[internal as usize * dim..(internal as usize + 1) * dim];
+                live.push((snap.base.ids[internal as usize], row.to_vec()));
+            }
+        }
+        for (row, e) in snap.delta.entries.iter().enumerate() {
+            if e.alive {
+                live.push((e.ext_id, snap.delta.vectors[row * dim..(row + 1) * dim].to_vec()));
+            }
+        }
+        live.sort_unstable_by_key(|(ext, _)| *ext);
+        live
+    }
+
+    /// Order- and layout-independent checksum of the live logical item
+    /// set: XXH64 chained over `(external id, vector bytes)` ascending
+    /// by id. Deliberately independent of the hash seed, so replica
+    /// members built with **different** seeds agree exactly when they
+    /// applied the same mutation history — the divergence detector the
+    /// scrub exchange compares.
+    pub fn state_checksum(&self) -> u64 {
+        let mut sum = 0xA15B_57A7u64;
+        let mut buf = Vec::new();
+        for (ext_id, vector) in self.live_items() {
+            buf.clear();
+            buf.extend_from_slice(&ext_id.to_le_bytes());
+            for v in &vector {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            sum = xxh64(&buf, sum);
+        }
+        sum
     }
 
     /// A scratch pre-sized for this index (stamps cover base + a delta
@@ -730,81 +920,141 @@ impl<S: Storage> LiveIndex<S> {
 
     // -- mutation ----------------------------------------------------------
 
-    /// Insert or replace the vector for `ext_id`: WAL-logged (durable
-    /// before applied), then published to readers via snapshot swap.
-    pub fn upsert(&self, ext_id: u32, vector: &[f32]) -> Result<()> {
-        ensure!(
-            vector.len() == self.inner.dim,
-            "live index: upsert dim {} != index dim {}",
-            vector.len(),
-            self.inner.dim
-        );
-        let mut w = lock(&self.inner.writer);
-        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
-        w.wal.append(&WalRecord::Upsert { ext_id, vector: vector.to_vec() })?;
-        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
-        let snap = self.inner.cell.read().1;
-        let mut delta = snap.delta.clone();
-        self.apply_upsert(&mut delta, &snap, ext_id, vector);
-        self.inner
-            .cell
-            .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
+    /// Validate a record's vector dimensions against this index (before
+    /// anything is logged or applied).
+    fn check_record_dims(&self, rec: &WalRecord) -> Result<()> {
+        let dim = self.inner.dim;
+        match rec {
+            WalRecord::Upsert { ext_id, vector } => ensure!(
+                vector.len() == dim,
+                "live index: upsert dim {} != index dim {dim} (ext id {ext_id})",
+                vector.len()
+            ),
+            WalRecord::Delete { .. } => {}
+            WalRecord::Batch { items } => {
+                for (ext_id, vector) in items {
+                    ensure!(
+                        vector.len() == dim,
+                        "live index: upsert dim {} != index dim {dim} (ext id {ext_id})",
+                        vector.len()
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Group-commit bulk upsert: every record in `entries` is appended
-    /// to the WAL as one contiguous write with a **single** fsync
-    /// ([`Wal::append_batch`]), then all mutations are applied to one
-    /// delta clone and published as one snapshot swap. Readers see the
-    /// batch atomically; durability is all-or-prefix (a crash mid-batch
-    /// replays the intact record prefix, like the same upserts issued
-    /// one at a time). Later entries supersede earlier ones for a
-    /// duplicated id, matching sequential-upsert semantics. Nothing is
-    /// logged or applied if any entry's dimension is wrong.
-    pub fn upsert_batch(&self, entries: &[(u32, Vec<f32>)]) -> Result<()> {
-        if entries.is_empty() {
-            return Ok(());
+    /// Apply one (already validated, already durable) record to a delta
+    /// clone. A batch applies in order, later entries superseding
+    /// earlier ones for a duplicated id — matching sequential-upsert
+    /// semantics.
+    fn apply_record(&self, delta: &mut DeltaState, snap: &LiveSnapshot<S>, rec: &WalRecord) {
+        match rec {
+            WalRecord::Upsert { ext_id, vector } => self.apply_upsert(delta, snap, *ext_id, vector),
+            WalRecord::Delete { ext_id } => self.apply_delete(delta, snap, *ext_id),
+            WalRecord::Batch { items } => {
+                for (ext_id, vector) in items {
+                    self.apply_upsert(delta, snap, *ext_id, vector);
+                }
+            }
         }
-        for (ext_id, vector) in entries {
-            ensure!(
-                vector.len() == self.inner.dim,
-                "live index: upsert dim {} != index dim {} (ext id {ext_id})",
-                vector.len(),
-                self.inner.dim
-            );
-        }
+    }
+
+    /// The one mutation path: validate, (optionally) enforce the delta
+    /// cap, WAL-append — at an explicit group sequence number when
+    /// `at_seq` is given (the replicated fan-out), at the next local
+    /// one otherwise — then apply to a delta clone and publish one
+    /// snapshot swap. Returns the durable record's sequence number.
+    fn log_and_apply(&self, at_seq: Option<u64>, rec: &WalRecord, enforce_cap: bool) -> Result<u64> {
+        self.check_record_dims(rec)?;
         let mut w = lock(&self.inner.writer);
         ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
-        let records: Vec<WalRecord> = entries
-            .iter()
-            .map(|(ext_id, vector)| WalRecord::Upsert { ext_id: *ext_id, vector: vector.clone() })
-            .collect();
-        w.wal.append_batch(&records)?;
-        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
         let snap = self.inner.cell.read().1;
-        let mut delta = snap.delta.clone();
-        for (ext_id, vector) in entries {
-            self.apply_upsert(&mut delta, &snap, *ext_id, vector);
+        if enforce_cap {
+            if let Some(stall) = self.stall_of(&snap.delta) {
+                return Err(anyhow::Error::new(stall));
+            }
         }
+        if let Some(seq) = at_seq {
+            let expected = w.wal.next_seq();
+            if seq != expected {
+                return Err(anyhow::Error::new(SeqGap { expected, got: seq }));
+            }
+        }
+        let assigned = w.wal.append(rec)?;
+        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
+        self.inner.high_water.store(w.wal.high_water(), Ordering::Relaxed);
+        let mut delta = snap.delta.clone();
+        self.apply_record(&mut delta, &snap, rec);
         self.inner
             .cell
             .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
-        Ok(())
+        Ok(assigned)
+    }
+
+    /// Insert or replace the vector for `ext_id`: WAL-logged (durable
+    /// before applied), then published to readers via snapshot swap.
+    /// Returns the record's sequence number.
+    pub fn upsert(&self, ext_id: u32, vector: &[f32]) -> Result<u64> {
+        self.log_and_apply(None, &WalRecord::Upsert { ext_id, vector: vector.to_vec() }, true)
+    }
+
+    /// Group-commit bulk upsert: the whole batch is **one** WAL record
+    /// with one checksum and one fsync ([`WalRecord::Batch`]), applied
+    /// to one delta clone and published as one snapshot swap. Readers
+    /// see the batch atomically, and so does recovery: a crash
+    /// mid-append fails the single record checksum, so replay surfaces
+    /// the whole batch or none of it — never a partial batch. Later
+    /// entries supersede earlier ones for a duplicated id, matching
+    /// sequential-upsert semantics. Nothing is logged or applied if any
+    /// entry's dimension is wrong. Returns the batch record's sequence
+    /// number (the batch consumes exactly one).
+    pub fn upsert_batch(&self, entries: &[(u32, Vec<f32>)]) -> Result<u64> {
+        if entries.is_empty() {
+            return Ok(self.high_water());
+        }
+        self.log_and_apply(None, &WalRecord::Batch { items: entries.to_vec() }, true)
     }
 
     /// Delete `ext_id` (a no-op if absent). WAL-logged like upsert.
-    pub fn delete(&self, ext_id: u32) -> Result<()> {
-        let mut w = lock(&self.inner.writer);
-        ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
-        w.wal.append(&WalRecord::Delete { ext_id })?;
-        self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
-        let snap = self.inner.cell.read().1;
-        let mut delta = snap.delta.clone();
-        self.apply_delete(&mut delta, &snap, ext_id);
-        self.inner
-            .cell
-            .publish(Arc::new(LiveSnapshot { base: Arc::clone(&snap.base), delta }));
-        Ok(())
+    /// Returns the record's sequence number.
+    pub fn delete(&self, ext_id: u32) -> Result<u64> {
+        self.log_and_apply(None, &WalRecord::Delete { ext_id }, true)
+    }
+
+    /// Replicated-fan-out twin of [`Self::upsert`]: the record must
+    /// land at exactly group sequence `seq` (see [`SeqGap`]).
+    pub fn upsert_at(&self, seq: u64, ext_id: u32, vector: &[f32]) -> Result<u64> {
+        self.log_and_apply(Some(seq), &WalRecord::Upsert { ext_id, vector: vector.to_vec() }, true)
+    }
+
+    /// Replicated-fan-out twin of [`Self::upsert_batch`].
+    pub fn upsert_batch_at(&self, seq: u64, entries: &[(u32, Vec<f32>)]) -> Result<u64> {
+        self.log_and_apply(Some(seq), &WalRecord::Batch { items: entries.to_vec() }, true)
+    }
+
+    /// Replicated-fan-out twin of [`Self::delete`].
+    pub fn delete_at(&self, seq: u64, ext_id: u32) -> Result<u64> {
+        self.log_and_apply(Some(seq), &WalRecord::Delete { ext_id }, true)
+    }
+
+    /// Catch-up replay: apply a peer's WAL suffix (from
+    /// [`Wal::read_suffix`]). Records at or below this member's
+    /// high-water are skipped (idempotent); the rest must be contiguous
+    /// from `high_water + 1`. The delta cap is **not** enforced —
+    /// refusing catch-up work would leave the member permanently
+    /// lagging; compaction drains the backlog afterwards. Returns how
+    /// many records were applied.
+    pub fn apply_suffix(&self, records: &[(u64, WalRecord)]) -> Result<usize> {
+        let mut applied = 0;
+        for (seq, rec) in records {
+            if *seq <= self.high_water() {
+                continue;
+            }
+            self.log_and_apply(Some(*seq), rec, false)?;
+            applied += 1;
+        }
+        Ok(applied)
     }
 
     /// Write the first `keep` bytes of an upsert record and mark the
@@ -812,10 +1062,21 @@ impl<S: Storage> LiveIndex<S> {
     /// for mid-WAL torn-write tests (the mutation is *not* applied;
     /// recovery decides whether the record survived).
     pub fn inject_torn_upsert(&self, ext_id: u32, vector: &[f32], keep: usize) -> Result<()> {
+        self.inject_torn(&WalRecord::Upsert { ext_id, vector: vector.to_vec() }, keep)
+    }
+
+    /// Torn-write injection for a whole batch record — the crash
+    /// harness for the all-or-nothing batch contract: any `keep`
+    /// strictly inside the record must recover to a state with **none**
+    /// of the batch visible.
+    pub fn inject_torn_batch(&self, entries: &[(u32, Vec<f32>)], keep: usize) -> Result<()> {
+        self.inject_torn(&WalRecord::Batch { items: entries.to_vec() }, keep)
+    }
+
+    fn inject_torn(&self, rec: &WalRecord, keep: usize) -> Result<()> {
         let mut w = lock(&self.inner.writer);
         ensure!(!w.crashed, "live index: instance crashed (injected); re-open the directory");
-        w.wal
-            .append_torn(&WalRecord::Upsert { ext_id, vector: vector.to_vec() }, keep)?;
+        w.wal.append_torn(rec, keep)?;
         self.inner.wal_bytes.store(w.wal.bytes(), Ordering::Relaxed);
         w.crashed = true;
         Ok(())
@@ -908,27 +1169,8 @@ impl<S: LiveStorage> LiveIndex<S> {
         let snap = self.inner.cell.read().1;
         // Collect the live rows sorted by external id — identical input
         // to a from-scratch build over the logical item set.
-        let n_base = snap.n_base();
-        let dim = self.inner.dim;
-        let mut live: Vec<(u32, Vec<f32>)> =
-            Vec::with_capacity(n_base - snap.delta.n_base_dead + snap.delta.n_alive);
-        let base_flat = match &snap.base.index {
-            AnyIndex::Flat(i) => i.items_flat(),
-            AnyIndex::Banded(i) => i.items_flat(),
-        };
-        for internal in 0..n_base as u32 {
-            if !snap.delta.base_is_dead(internal) {
-                let row = &base_flat[internal as usize * dim..(internal as usize + 1) * dim];
-                live.push((snap.base.ids[internal as usize], row.to_vec()));
-            }
-        }
-        for (row, e) in snap.delta.entries.iter().enumerate() {
-            if e.alive {
-                live.push((e.ext_id, snap.delta.vectors[row * dim..(row + 1) * dim].to_vec()));
-            }
-        }
+        let live = Self::collect_live(&snap, self.inner.dim);
         ensure!(!live.is_empty(), "live index: refusing to compact to an empty index");
-        live.sort_unstable_by_key(|(ext, _)| *ext);
         let (ids, items): (Vec<u32>, Vec<Vec<f32>>) = live.into_iter().unzip();
 
         let next = w.gen + 1;
@@ -939,7 +1181,10 @@ impl<S: LiveStorage> LiveIndex<S> {
             w.crashed = true;
             bail!("injected compactor crash before MANIFEST publish");
         }
-        let wal = Wal::create(wal_path(&self.inner.dir, next))?;
+        // The fresh WAL continues the drained log's numbering, so
+        // sequence numbers — and replica high-water comparisons — are
+        // stable across compactions.
+        let wal = Wal::create(wal_path(&self.inner.dir, next), w.wal.next_seq())?;
         write_manifest(&self.inner.dir, next, self.inner.seed)?; // commit point
         if faults.crash_after_manifest {
             w.crashed = true;
@@ -970,21 +1215,35 @@ impl<S: LiveStorage> LiveIndex<S> {
     /// deterministically. Panics inside a compaction (e.g. the injected
     /// poison) are contained to the thread — serving continues.
     pub fn spawn_compactor(&self, threshold: usize, poll: std::time::Duration) {
+        self.spawn_compactor_when(poll, move |s: &LiveStats| {
+            (s.delta_items + s.tombstones) as usize >= threshold
+        });
+    }
+
+    /// Spawn the background compactor with a caller-supplied trigger
+    /// policy: every `poll`, `decide` sees the current [`LiveStats`]
+    /// and returns whether to compact now. This is the hook the
+    /// coordinator uses for size-tiered scheduling rate-limited against
+    /// reader tail latency — the index layer deliberately knows nothing
+    /// about serving metrics. Thread lifetime and panic containment
+    /// match [`Self::spawn_compactor`].
+    pub fn spawn_compactor_when<F>(&self, poll: std::time::Duration, decide: F)
+    where
+        F: Fn(&LiveStats) -> bool + Send + 'static,
+    {
         let weak: Weak<LiveInner<S>> = Arc::downgrade(&self.inner);
         let handle = std::thread::spawn(move || loop {
             let Some(inner) = weak.upgrade() else { return };
             if inner.stop.load(Ordering::Relaxed) {
                 return;
             }
-            let snap = inner.cell.read().1;
-            let pending = snap.delta.entries.len() + snap.delta.n_base_dead;
-            drop(snap);
-            if pending >= threshold {
-                let live = LiveIndex { inner: Arc::clone(&inner) };
+            let live = LiveIndex { inner: Arc::clone(&inner) };
+            if decide(&live.stats()) {
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     live.compact_once().ok();
                 }));
             }
+            drop(live);
             drop(inner);
             std::thread::sleep(poll);
         });
@@ -1210,6 +1469,7 @@ mod tests {
             },
             n_bands,
             seed: 42,
+            ..LiveConfig::default()
         }
     }
 
@@ -1381,6 +1641,96 @@ mod tests {
         }
         std::fs::remove_dir_all(&dir_a).ok();
         std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    /// The delta cap refuses mutations with a structured stall before
+    /// any WAL append or sequence assignment; compaction clears it.
+    #[test]
+    fn delta_cap_stalls_and_compaction_clears() {
+        let dir = tmp_dir("cap");
+        let data = items(50, 6, 9);
+        let c = LiveConfig { delta_cap: 3, ..cfg(1) };
+        let live: LiveIndex = LiveIndex::create(&dir, &data, c).unwrap();
+        let extra = items(4, 6, 17);
+        for (i, v) in extra.iter().take(3).enumerate() {
+            live.upsert(100 + i as u32, v).unwrap();
+        }
+        let hw = live.high_water();
+        let err = live.upsert(103, &extra[3]).unwrap_err();
+        let stall = err.downcast_ref::<WriteStalled>().expect("typed stall");
+        assert_eq!(stall.pending, 3);
+        assert_eq!(stall.cap, 3);
+        assert!(stall.retry_after_ms >= 10);
+        assert_eq!(live.high_water(), hw, "stalled write consumed a seq");
+        assert!(live.would_stall().is_some());
+        live.compact_once().unwrap();
+        assert!(live.would_stall().is_none());
+        live.upsert(103, &extra[3]).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Explicit-sequence mutations enforce contiguity with a typed gap
+    /// error, and high-water numbering survives compaction.
+    #[test]
+    fn explicit_seq_contiguity_and_compaction_numbering() {
+        let dir = tmp_dir("seq");
+        let data = items(40, 5, 4);
+        let live: LiveIndex = LiveIndex::create(&dir, &data, cfg(1)).unwrap();
+        assert_eq!(live.high_water(), 0);
+        let v = &items(1, 5, 6)[0];
+        assert_eq!(live.upsert_at(1, 200, v).unwrap(), 1);
+        let err = live.upsert_at(3, 201, v).unwrap_err();
+        let gap = err.downcast_ref::<SeqGap>().expect("typed gap");
+        assert_eq!((gap.expected, gap.got), (2, 3));
+        assert_eq!(live.delete_at(2, 200).unwrap(), 2);
+        live.compact_once().unwrap();
+        assert_eq!(live.high_water(), 2, "numbering reset by compaction");
+        assert_eq!(live.upsert_at(3, 202, v).unwrap(), 3);
+        drop(live);
+        let reopened: LiveIndex = LiveIndex::open(&dir).unwrap();
+        assert_eq!(reopened.high_water(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The state checksum is seed-independent: members with different
+    /// hash seeds that applied the same history agree; a divergent one
+    /// does not. Catch-up via a WAL suffix restores agreement.
+    #[test]
+    fn state_checksum_and_suffix_catch_up() {
+        let dir_a = tmp_dir("ck_a");
+        let dir_b = tmp_dir("ck_b");
+        let data = items(60, 6, 12);
+        let ca = cfg(1);
+        let cb = LiveConfig { seed: 777, ..cfg(1) };
+        let a: LiveIndex = LiveIndex::create(&dir_a, &data, ca).unwrap();
+        let b: LiveIndex = LiveIndex::create(&dir_b, &data, cb).unwrap();
+        assert_eq!(a.state_checksum(), b.state_checksum());
+        let extra = items(3, 6, 44);
+        for (i, v) in extra.iter().enumerate() {
+            a.upsert(300 + i as u32, v).unwrap();
+        }
+        a.delete(5).unwrap();
+        assert_ne!(a.state_checksum(), b.state_checksum());
+        // b catches up from a's on-disk WAL suffix.
+        let suffix = Wal::read_suffix(a.current_wal_path(), b.high_water() + 1)
+            .unwrap()
+            .expect("suffix available");
+        assert_eq!(b.apply_suffix(&suffix).unwrap(), 4);
+        assert_eq!(a.state_checksum(), b.state_checksum());
+        assert_eq!(a.high_water(), b.high_water());
+        // Compact a past the suffix: now b' (a fresh laggard) must rebuild.
+        a.upsert(999, &extra[0]).unwrap();
+        a.compact_once().unwrap();
+        assert!(Wal::read_suffix(a.current_wal_path(), 1).unwrap().is_none());
+        // Rebuild-from-peer: explicit state + continued numbering.
+        let dir_c = tmp_dir("ck_c");
+        let c: LiveIndex =
+            LiveIndex::create_with_state(&dir_c, &a.live_items(), cb, a.high_water() + 1).unwrap();
+        assert_eq!(c.state_checksum(), a.state_checksum());
+        assert_eq!(c.high_water(), a.high_water());
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+        std::fs::remove_dir_all(&dir_c).ok();
     }
 
     /// The same scratch serves two live indexes without snapshot-cache

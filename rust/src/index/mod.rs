@@ -54,7 +54,9 @@ pub use budget::ProbeBudget;
 pub use build::{BuildOpts, BuildStats};
 pub use collision::{CollisionRanker, Scheme};
 pub use core::{AlshIndex, AlshParams, ScoredItem};
-pub use delta::{CompactorFaultPlan, LiveConfig, LiveIndex, LiveStats, LiveStorage};
+pub use delta::{
+    CompactorFaultPlan, LiveConfig, LiveIndex, LiveStats, LiveStorage, SeqGap, WriteStalled,
+};
 pub use frozen::{FrozenTable, TableStats};
 pub use persist::{
     open_mmap, open_mmap_scheme, open_mmap_verified, sweep_stale_temps, PersistFormat,

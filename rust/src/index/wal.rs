@@ -1,20 +1,40 @@
 //! Append-only write-ahead log for the live mutable index tier
 //! (`index::delta`).
 //!
-//! # Record format
+//! # File format (v2)
 //!
-//! The file starts with the 8-byte magic `b"ALSHWAL1"`. Each record is:
+//! The file starts with a 16-byte header: the 8-byte magic `b"ALSHWAL2"`
+//! followed by `base_seq` (u64 LE) — the sequence number the **first**
+//! record in this file carries. Records are sequence-numbered implicitly
+//! by position: record `i` (0-based) has `seq = base_seq + i`. A fresh
+//! index's WAL starts at `base_seq = 1`; compaction rolls to a new WAL
+//! whose `base_seq` continues where the drained one ended, so sequence
+//! numbers are stable across the whole life of the index and comparable
+//! between replicas that applied the same mutation history.
+//!
+//! Each record is:
 //!
 //! ```text
 //! len      u32 LE   payload length in bytes
 //! checksum u64 LE   XXH64(payload, seed = WAL_SEED)
-//! payload  [u8]     kind u8 | ext_id u32 LE | (upsert only:) dim u32 LE | dim * f32 LE
+//! payload  [u8]     kind u8 | body
 //! ```
 //!
-//! `kind` is 1 for upsert, 2 for delete. Every append is `write_all` +
-//! `sync_data` **before** the mutation is applied to the in-memory
-//! tier, so a record's presence in the file is a durable promise that
-//! the mutation survives a crash.
+//! Bodies by `kind`:
+//!
+//! * `1` upsert: `ext_id u32 LE | dim u32 LE | dim * f32 LE`
+//! * `2` delete: `ext_id u32 LE`
+//! * `3` batch:  `count u32 LE | count * (ext_id u32 LE | dim u32 LE | dim * f32 LE)`
+//!
+//! A batch is **one record with one checksum** covering every entry, and
+//! it consumes **one sequence number**. That makes group commit
+//! all-or-nothing, not all-or-prefix: a crash anywhere inside the batch
+//! write leaves a record that fails its checksum, so recovery sees
+//! either the whole batch or none of it — never a partial batch.
+//!
+//! Every append is `write_all` + `sync_data` **before** the mutation is
+//! applied to the in-memory tier, so a record's presence in the file is
+//! a durable promise that the mutation survives a crash.
 //!
 //! # Torn-tail recovery
 //!
@@ -31,6 +51,15 @@
 //! (replacing any earlier value) and a delete tombstones it, so
 //! replaying a prefix twice reaches the same state as replaying it
 //! once.
+//!
+//! # Peer catch-up
+//!
+//! [`Wal::read_suffix`] is a read-only scan used by a lagging replica to
+//! pull the records it missed from an up-to-date peer's WAL: it returns
+//! every intact record with `seq >= from_seq`, or `None` when the peer
+//! has already compacted past `from_seq` (its `base_seq` is too high),
+//! in which case the only way back is a full rebuild from the peer's
+//! live item set. It never truncates or mutates the peer's file.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
@@ -41,9 +70,11 @@ use crate::Result;
 use anyhow::{bail, Context};
 
 /// 8-byte file magic (includes the format version).
-pub const WAL_MAGIC: &[u8; 8] = b"ALSHWAL1";
+pub const WAL_MAGIC: &[u8; 8] = b"ALSHWAL2";
 /// Seed for the per-record XXH64 checksum.
 pub const WAL_SEED: u64 = 0xA15B_0007;
+/// File header: magic + base_seq u64.
+pub const WAL_FILE_HEADER: usize = 16;
 /// Per-record header: len u32 + checksum u64.
 pub const WAL_HEADER: usize = 12;
 /// Sanity cap on a single record's payload (a corrupt length field must
@@ -52,14 +83,26 @@ const MAX_PAYLOAD: usize = 1 << 30;
 
 const KIND_UPSERT: u8 = 1;
 const KIND_DELETE: u8 = 2;
+const KIND_BATCH: u8 = 3;
 
-/// One logged mutation.
+/// One logged mutation. Each variant — including a whole batch —
+/// occupies exactly one WAL record and one sequence number.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WalRecord {
     /// Insert or replace the vector for `ext_id`.
     Upsert { ext_id: u32, vector: Vec<f32> },
     /// Tombstone `ext_id` (a no-op if absent — replay stays idempotent).
     Delete { ext_id: u32 },
+    /// A group-committed batch of upserts, durable all-or-nothing.
+    Batch { items: Vec<(u32, Vec<f32>)> },
+}
+
+fn push_upsert_body(payload: &mut Vec<u8>, ext_id: u32, vector: &[f32]) {
+    payload.extend_from_slice(&ext_id.to_le_bytes());
+    payload.extend_from_slice(&(vector.len() as u32).to_le_bytes());
+    for v in vector {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
 }
 
 /// Encode a record to its on-disk bytes (header + payload). Public so
@@ -69,15 +112,18 @@ pub fn encode(rec: &WalRecord) -> Vec<u8> {
     match rec {
         WalRecord::Upsert { ext_id, vector } => {
             payload.push(KIND_UPSERT);
-            payload.extend_from_slice(&ext_id.to_le_bytes());
-            payload.extend_from_slice(&(vector.len() as u32).to_le_bytes());
-            for v in vector {
-                payload.extend_from_slice(&v.to_le_bytes());
-            }
+            push_upsert_body(&mut payload, *ext_id, vector);
         }
         WalRecord::Delete { ext_id } => {
             payload.push(KIND_DELETE);
             payload.extend_from_slice(&ext_id.to_le_bytes());
+        }
+        WalRecord::Batch { items } => {
+            payload.push(KIND_BATCH);
+            payload.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for (ext_id, vector) in items {
+                push_upsert_body(&mut payload, *ext_id, vector);
+            }
         }
     }
     let mut out = Vec::with_capacity(WAL_HEADER + payload.len());
@@ -87,34 +133,57 @@ pub fn encode(rec: &WalRecord) -> Vec<u8> {
     out
 }
 
+fn read_upsert_body(body: &[u8]) -> Result<((u32, Vec<f32>), usize)> {
+    if body.len() < 8 {
+        bail!("wal: upsert body too short ({} bytes)", body.len());
+    }
+    let ext_id = u32::from_le_bytes(body[..4].try_into().unwrap());
+    let dim = u32::from_le_bytes(body[4..8].try_into().unwrap()) as usize;
+    let need = 8 + dim * 4;
+    if body.len() < need {
+        bail!("wal: upsert body length {} < dim {} needs", body.len(), dim);
+    }
+    let vector = body[8..need]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(((ext_id, vector), need))
+}
+
 fn decode_payload(payload: &[u8]) -> Result<WalRecord> {
     let kind = *payload.first().context("wal: empty payload")?;
+    let body = &payload[1..];
     match kind {
         KIND_UPSERT => {
-            if payload.len() < 9 {
-                bail!("wal: upsert payload too short ({} bytes)", payload.len());
+            let ((ext_id, vector), used) = read_upsert_body(body)?;
+            if body.len() != used {
+                bail!("wal: upsert payload has {} trailing bytes", body.len() - used);
             }
-            let ext_id = u32::from_le_bytes(payload[1..5].try_into().unwrap());
-            let dim = u32::from_le_bytes(payload[5..9].try_into().unwrap()) as usize;
-            if payload.len() != 9 + dim * 4 {
-                bail!(
-                    "wal: upsert payload length {} does not match dim {}",
-                    payload.len(),
-                    dim
-                );
-            }
-            let vector = payload[9..]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
             Ok(WalRecord::Upsert { ext_id, vector })
         }
         KIND_DELETE => {
-            if payload.len() != 5 {
+            if body.len() != 4 {
                 bail!("wal: delete payload length {} != 5", payload.len());
             }
-            let ext_id = u32::from_le_bytes(payload[1..5].try_into().unwrap());
+            let ext_id = u32::from_le_bytes(body[..4].try_into().unwrap());
             Ok(WalRecord::Delete { ext_id })
+        }
+        KIND_BATCH => {
+            if body.len() < 4 {
+                bail!("wal: batch payload too short ({} bytes)", payload.len());
+            }
+            let count = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+            let mut rest = &body[4..];
+            let mut items = Vec::with_capacity(count.min(1 << 20));
+            for _ in 0..count {
+                let (item, used) = read_upsert_body(rest)?;
+                items.push(item);
+                rest = &rest[used..];
+            }
+            if !rest.is_empty() {
+                bail!("wal: batch payload has {} trailing bytes", rest.len());
+            }
+            Ok(WalRecord::Batch { items })
         }
         k => bail!("wal: unknown record kind {k}"),
     }
@@ -125,12 +194,17 @@ pub struct Wal {
     file: File,
     path: PathBuf,
     bytes: u64,
+    base_seq: u64,
+    count: u64,
 }
 
 impl Wal {
     /// Create a fresh, empty WAL at `path` (truncating any existing
-    /// file) and fsync it so the empty log itself is durable.
-    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+    /// file) whose first record will carry `base_seq`, and fsync it so
+    /// the empty log itself is durable. A brand-new index starts at
+    /// `base_seq = 1`; a post-compaction WAL continues the drained
+    /// log's numbering.
+    pub fn create(path: impl AsRef<Path>, base_seq: u64) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         let mut file = OpenOptions::new()
             .read(true)
@@ -140,32 +214,30 @@ impl Wal {
             .open(&path)
             .with_context(|| format!("wal: create {}", path.display()))?;
         file.write_all(WAL_MAGIC)?;
+        file.write_all(&base_seq.to_le_bytes())?;
         file.sync_all()?;
         if let Some(parent) = path.parent() {
             if let Ok(dir) = File::open(parent) {
                 dir.sync_all().ok();
             }
         }
-        Ok(Wal { file, path, bytes: WAL_MAGIC.len() as u64 })
+        Ok(Wal { file, path, bytes: WAL_FILE_HEADER as u64, base_seq, count: 0 })
     }
 
-    /// Open an existing WAL, replay every intact record, truncate any
-    /// torn tail, and return the log positioned for appends together
-    /// with the replayed records.
-    pub fn open(path: impl AsRef<Path>) -> Result<(Self, Vec<WalRecord>)> {
-        let path = path.as_ref().to_path_buf();
-        let mut file = OpenOptions::new()
-            .read(true)
-            .write(true)
-            .open(&path)
-            .with_context(|| format!("wal: open {}", path.display()))?;
-        let mut bytes = Vec::new();
-        file.read_to_end(&mut bytes)?;
-        if bytes.len() < WAL_MAGIC.len() || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
-            bail!("wal: bad magic in {}", path.display());
+    fn parse_header(bytes: &[u8], path: &Path) -> Result<u64> {
+        if bytes.len() < WAL_FILE_HEADER || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+            bail!("wal: bad magic/header in {}", path.display());
         }
+        Ok(u64::from_le_bytes(bytes[8..16].try_into().unwrap()))
+    }
+
+    /// Scan intact records starting at `WAL_FILE_HEADER`, stopping at
+    /// the first torn/incomplete record. Returns the records and the
+    /// byte offset of the end of the last good record. A record whose
+    /// checksum verifies but whose payload is malformed is a hard error.
+    fn scan(bytes: &[u8]) -> Result<(Vec<WalRecord>, usize)> {
         let mut records = Vec::new();
-        let mut good = WAL_MAGIC.len();
+        let mut good = WAL_FILE_HEADER;
         let mut pos = good;
         loop {
             let rest = &bytes[pos..];
@@ -187,43 +259,89 @@ impl Wal {
             pos += WAL_HEADER + len;
             good = pos;
         }
+        Ok((records, good))
+    }
+
+    /// Open an existing WAL, replay every intact record, truncate any
+    /// torn tail, and return the log positioned for appends together
+    /// with the replayed records. The first replayed record carries
+    /// [`Wal::base_seq`]; record `i` carries `base_seq + i`.
+    pub fn open(path: impl AsRef<Path>) -> Result<(Self, Vec<WalRecord>)> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("wal: open {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let base_seq = Self::parse_header(&bytes, &path)?;
+        let (records, good) = Self::scan(&bytes)?;
         if good < bytes.len() {
             file.set_len(good as u64)?;
             file.sync_all()?;
         }
         use std::io::Seek;
         file.seek(std::io::SeekFrom::Start(good as u64))?;
-        Ok((Wal { file, path, bytes: good as u64 }, records))
+        let count = records.len() as u64;
+        Ok((Wal { file, path, bytes: good as u64, base_seq, count }, records))
     }
 
-    /// Append one record and `sync_data` it. Returns only once the
-    /// record is durable; the caller applies the mutation after.
-    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
-        self.append_batch(std::slice::from_ref(rec))
+    /// Read-only catch-up scan: every intact record with
+    /// `seq >= from_seq`, paired with its sequence number. Returns
+    /// `None` when this WAL starts **after** `from_seq` (the suffix was
+    /// compacted away — the caller must fall back to a full rebuild).
+    /// Never truncates or otherwise mutates the file, so it is safe to
+    /// point at a live peer's WAL.
+    pub fn read_suffix(
+        path: impl AsRef<Path>,
+        from_seq: u64,
+    ) -> Result<Option<Vec<(u64, WalRecord)>>> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("wal: read {}", path.display()))?;
+        let base_seq = Self::parse_header(&bytes, path)?;
+        if from_seq < base_seq {
+            return Ok(None); // compacted past the requested point
+        }
+        let (records, _) = Self::scan(&bytes)?;
+        Ok(Some(
+            records
+                .into_iter()
+                .enumerate()
+                .map(|(i, rec)| (base_seq + i as u64, rec))
+                .filter(|(seq, _)| *seq >= from_seq)
+                .collect(),
+        ))
     }
 
-    /// Group commit: append every record in `recs` as one contiguous
-    /// write followed by a **single** `sync_data`. Durability is
-    /// all-or-prefix — a crash mid-write leaves a torn tail that
-    /// [`Wal::open`] truncates back to the last intact record, exactly
-    /// as for single appends — and the per-record format is unchanged,
-    /// so replay cannot tell a batch from the same records appended one
-    /// at a time. This is the bulk-upsert fast path: one fsync amortized
-    /// over the whole batch instead of one per record.
-    pub fn append_batch(&mut self, recs: &[WalRecord]) -> Result<()> {
-        if recs.is_empty() {
-            return Ok(());
-        }
-        let mut buf = Vec::new();
-        for rec in recs {
-            buf.extend_from_slice(&encode(rec));
-        }
+    /// Append one record at the next sequence number and `sync_data`
+    /// it. Returns the assigned sequence number only once the record is
+    /// durable; the caller applies the mutation after.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<u64> {
+        let seq = self.next_seq();
+        let buf = encode(rec);
         self.file
             .write_all(&buf)
             .with_context(|| format!("wal: append to {}", self.path.display()))?;
         self.file.sync_data()?;
         self.bytes += buf.len() as u64;
-        Ok(())
+        self.count += 1;
+        Ok(seq)
+    }
+
+    /// Append a record that must land at exactly `seq` — the replicated
+    /// fan-out path, where the router assigns group-level sequence
+    /// numbers and every member's WAL must stay a contiguous prefix of
+    /// the group history. A gap (this member missed a write) or a
+    /// replay (it already has the record) is an error; the caller
+    /// routes the member to catch-up instead.
+    pub fn append_at(&mut self, seq: u64, rec: &WalRecord) -> Result<u64> {
+        let expect = self.next_seq();
+        if seq != expect {
+            bail!("wal: sequence gap: record carries seq {seq}, log expects {expect}");
+        }
+        self.append(rec)
     }
 
     /// Append only the first `keep` bytes of the record's encoding and
@@ -238,9 +356,26 @@ impl Wal {
         Ok(())
     }
 
-    /// Total file length in bytes (magic + durable records).
+    /// Total file length in bytes (header + durable records).
     pub fn bytes(&self) -> u64 {
         self.bytes
+    }
+
+    /// Sequence number of the first record this file holds (or would
+    /// hold, if empty).
+    pub fn base_seq(&self) -> u64 {
+        self.base_seq
+    }
+
+    /// Sequence number the next appended record will carry.
+    pub fn next_seq(&self) -> u64 {
+        self.base_seq + self.count
+    }
+
+    /// Highest durable sequence number, or `base_seq - 1` when the file
+    /// is empty (0 for a brand-new index).
+    pub fn high_water(&self) -> u64 {
+        self.base_seq + self.count - 1
     }
 
     /// The file path.
@@ -278,17 +413,20 @@ mod tests {
     fn roundtrip_and_reopen() {
         let dir = tmp_dir("roundtrip");
         let path = dir.join("wal.log");
-        let mut wal = Wal::create(&path).unwrap();
-        for r in recs() {
-            wal.append(&r).unwrap();
+        let mut wal = Wal::create(&path, 1).unwrap();
+        for (i, r) in recs().iter().enumerate() {
+            assert_eq!(wal.append(r).unwrap(), 1 + i as u64);
         }
+        assert_eq!(wal.high_water(), 3);
         let n = wal.bytes();
         drop(wal);
         let (mut wal, replayed) = Wal::open(&path).unwrap();
         assert_eq!(replayed, recs());
         assert_eq!(wal.bytes(), n);
+        assert_eq!(wal.base_seq(), 1);
+        assert_eq!(wal.next_seq(), 4);
         // Appends after reopen extend the log.
-        wal.append(&WalRecord::Delete { ext_id: 1 }).unwrap();
+        assert_eq!(wal.append(&WalRecord::Delete { ext_id: 1 }).unwrap(), 4);
         let (_, replayed) = Wal::open(&path).unwrap();
         assert_eq!(replayed.len(), 4);
         std::fs::remove_dir_all(&dir).ok();
@@ -301,7 +439,7 @@ mod tests {
         for keep in 0..full {
             let dir = tmp_dir("torn");
             let path = dir.join("wal.log");
-            let mut wal = Wal::create(&path).unwrap();
+            let mut wal = Wal::create(&path, 1).unwrap();
             for r in recs() {
                 wal.append(&r).unwrap();
             }
@@ -311,6 +449,7 @@ mod tests {
             let (wal2, replayed) = Wal::open(&path).unwrap();
             assert_eq!(replayed, recs(), "keep={keep}");
             assert_eq!(wal2.bytes(), clean, "keep={keep}: tail not truncated");
+            assert_eq!(wal2.high_water(), 3, "keep={keep}: torn record counted");
             assert_eq!(
                 std::fs::metadata(&path).unwrap().len(),
                 clean,
@@ -321,10 +460,83 @@ mod tests {
     }
 
     #[test]
+    fn batch_record_is_atomic_at_every_cut() {
+        let batch = WalRecord::Batch {
+            items: vec![
+                (10, vec![1.0, 2.0, 3.0]),
+                (11, vec![-1.0, 0.5, 0.0]),
+                (12, vec![4.0, 4.0, 4.0]),
+            ],
+        };
+        let full = encode(&batch).len();
+        // Every cut strictly inside the batch record loses the WHOLE
+        // batch — replay never surfaces a partial one.
+        for keep in 0..full {
+            let dir = tmp_dir("batchcut");
+            let path = dir.join("wal.log");
+            let mut wal = Wal::create(&path, 1).unwrap();
+            wal.append(&recs()[0]).unwrap();
+            wal.append_torn(&batch, keep).unwrap();
+            drop(wal);
+            let (wal2, replayed) = Wal::open(&path).unwrap();
+            assert_eq!(replayed, recs()[..1].to_vec(), "keep={keep}");
+            assert_eq!(wal2.high_water(), 1, "keep={keep}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        // And the full record replays the whole batch as one sequence.
+        let dir = tmp_dir("batchfull");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::create(&path, 5).unwrap();
+        assert_eq!(wal.append(&batch).unwrap(), 5);
+        drop(wal);
+        let (wal2, replayed) = Wal::open(&path).unwrap();
+        assert_eq!(replayed, vec![batch]);
+        assert_eq!(wal2.high_water(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_at_enforces_contiguity() {
+        let dir = tmp_dir("seqgap");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::create(&path, 3).unwrap();
+        assert_eq!(wal.append_at(3, &recs()[0]).unwrap(), 3);
+        assert!(wal.append_at(5, &recs()[1]).is_err(), "gap accepted");
+        assert!(wal.append_at(3, &recs()[1]).is_err(), "replay accepted");
+        assert_eq!(wal.append_at(4, &recs()[1]).unwrap(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_suffix_returns_tail_or_signals_compaction() {
+        let dir = tmp_dir("suffix");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::create(&path, 4).unwrap();
+        for r in recs() {
+            wal.append(&r).unwrap(); // seqs 4, 5, 6
+        }
+        drop(wal);
+        let tail = Wal::read_suffix(&path, 5).unwrap().unwrap();
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[0], (5, recs()[1].clone()));
+        assert_eq!(tail[1], (6, recs()[2].clone()));
+        // from_seq at exactly base_seq: the whole file.
+        assert_eq!(Wal::read_suffix(&path, 4).unwrap().unwrap().len(), 3);
+        // from_seq past the end: nothing to give, but not a rebuild.
+        assert_eq!(Wal::read_suffix(&path, 9).unwrap().unwrap().len(), 0);
+        // from_seq before base_seq: compacted away — rebuild required.
+        assert!(Wal::read_suffix(&path, 3).unwrap().is_none());
+        // The scan never truncated anything.
+        let (_, replayed) = Wal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn corrupt_payload_with_valid_checksum_is_an_error() {
         let dir = tmp_dir("corrupt");
         let path = dir.join("wal.log");
-        let mut wal = Wal::create(&path).unwrap();
+        let mut wal = Wal::create(&path, 1).unwrap();
         wal.append(&recs()[0]).unwrap();
         drop(wal);
         // Hand-craft a record with a checksum that matches a garbage
@@ -347,7 +559,7 @@ mod tests {
     fn flipped_bit_in_middle_record_stops_replay_there() {
         let dir = tmp_dir("flip");
         let path = dir.join("wal.log");
-        let mut wal = Wal::create(&path).unwrap();
+        let mut wal = Wal::create(&path, 1).unwrap();
         for r in recs() {
             wal.append(&r).unwrap();
         }
@@ -355,12 +567,13 @@ mod tests {
         // Flip a bit inside the second record's payload.
         let first_len = encode(&recs()[0]).len();
         let mut bytes = std::fs::read(&path).unwrap();
-        let off = WAL_MAGIC.len() + first_len + WAL_HEADER + 1;
+        let off = WAL_FILE_HEADER + first_len + WAL_HEADER + 1;
         bytes[off] ^= 0x40;
         std::fs::write(&path, &bytes).unwrap();
         let (wal2, replayed) = Wal::open(&path).unwrap();
         assert_eq!(replayed, recs()[..1].to_vec());
-        assert_eq!(wal2.bytes(), (WAL_MAGIC.len() + first_len) as u64);
+        assert_eq!(wal2.bytes(), (WAL_FILE_HEADER + first_len) as u64);
+        assert_eq!(wal2.high_water(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -368,9 +581,12 @@ mod tests {
     fn bad_magic_rejected() {
         let dir = tmp_dir("magic");
         let path = dir.join("wal.log");
-        std::fs::write(&path, b"NOTAWAL!").unwrap();
+        std::fs::write(&path, b"NOTAWAL!\0\0\0\0\0\0\0\0").unwrap();
         assert!(Wal::open(&path).is_err());
         std::fs::write(&path, b"AL").unwrap();
+        assert!(Wal::open(&path).is_err());
+        // v1 files (no base_seq header) are not silently misread.
+        std::fs::write(&path, b"ALSHWAL1").unwrap();
         assert!(Wal::open(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -56,6 +56,7 @@ fn cfg(scheme: MipsHashScheme, n_bands: usize) -> LiveConfig {
         params: AlshParams { n_tables: 8, k_per_table: 4, scheme, ..AlshParams::default() },
         n_bands,
         seed: 1234,
+        ..LiveConfig::default()
     }
 }
 
@@ -173,6 +174,120 @@ fn torn_wal_tail_recovers_prefix_l2_banded() {
     run_torn_tail(MipsHashScheme::L2Alsh, 3);
 }
 
+/// Torn WAL tail mid-batch: `upsert_batch` occupies **one** WAL record,
+/// so a crash at any byte inside the record must recover with none of
+/// the batch visible — all-or-nothing, never a surviving prefix.
+fn run_torn_batch(scheme: MipsHashScheme, n_bands: usize) {
+    let initial = norm_spread_items(60, DIM, 70);
+    let stream = mutation_stream(6);
+    let batch: Vec<(u32, Vec<f32>)> = norm_spread_items(3, DIM, 71)
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (2100 + i as u32, v))
+        .collect();
+    // A 3-entry dim-8 batch record is 137 bytes (12-byte record header
+    // + 125-byte payload); every cut below that leaves a torn tail. The
+    // larger cuts land mid-entry — exactly the window where a prefix
+    // of the batch would be decodable if batches were logged per entry.
+    for keep in [0usize, 5, 12, 70, 130] {
+        let dir = tmp_dir(&format!("tornb{keep}"));
+        let ref_dir = tmp_dir(&format!("tornb{keep}_ref"));
+        {
+            let live = LiveIndex::<Owned>::create(&dir, &initial, cfg(scheme, n_bands)).unwrap();
+            for m in &stream {
+                apply(&live, m);
+            }
+            live.inject_torn_batch(&batch, keep).unwrap();
+            assert!(live.upsert(1000, &batch[0].1).is_err());
+        }
+        let recovered = LiveIndex::<Owned>::open(&dir).unwrap();
+        let reference =
+            reference_for_prefix(&ref_dir, &initial, cfg(scheme, n_bands), &stream);
+        // All-or-nothing: the reopened state equals the pre-batch
+        // reference exactly — no entry of the torn batch survived.
+        assert_same_answers(&recovered, &reference, 72);
+        // The truncated WAL accepts the same batch again, whole.
+        recovered.upsert_batch(&batch).unwrap();
+        reference.upsert_batch(&batch).unwrap();
+        assert_same_answers(&recovered, &reference, 73);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&ref_dir).ok();
+    }
+}
+
+#[test]
+fn torn_batch_recovers_all_or_nothing_sign_flat() {
+    run_torn_batch(MipsHashScheme::SignAlsh, 1);
+}
+
+#[test]
+fn torn_batch_recovers_all_or_nothing_l2_banded() {
+    run_torn_batch(MipsHashScheme::L2Alsh, 3);
+}
+
+/// The replicated analogue: a router batch fans out as one WAL record
+/// per member. A member that tears mid-append recovers all-or-nothing
+/// on reopen and converges with its peers through catch-up — the torn
+/// record truncates away whole, never as a batch prefix.
+#[test]
+fn torn_batch_replicated_member_catches_up_all_or_nothing() {
+    use alsh::coordinator::{CatchUpMode, ReplicaConfig, ShardedRouter};
+    let dir = tmp_dir("tornb_repl");
+    let items = norm_spread_items(40, DIM, 75);
+    let router = ShardedRouter::create_live_replicated(
+        &dir,
+        &items,
+        1,
+        3,
+        cfg(MipsHashScheme::SignAlsh, 1),
+        ReplicaConfig::default(),
+    )
+    .unwrap();
+    // One fully replicated batch: all three members log it durably.
+    let good: Vec<(u32, Vec<f32>)> = norm_spread_items(3, DIM, 76)
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (500 + i as u32, v))
+        .collect();
+    router.upsert_batch(&good).unwrap();
+    // Tear a second batch into member 1's WAL only — that member
+    // "crashes" mid-append; the group never assigned the sequence.
+    let torn: Vec<(u32, Vec<f32>)> = norm_spread_items(3, DIM, 77)
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (600 + i as u32, v))
+        .collect();
+    let victim = router.member_engine(0, 1);
+    victim.live().expect("live member").inject_torn_batch(&torn, 60).unwrap();
+    // Catch-up reopens the member from disk: recovery truncates the
+    // torn record, leaving the member already at the group high-water.
+    let report = router.catch_up(0, 1).unwrap();
+    assert_eq!(report.mode, CatchUpMode::Replayed(0), "no suffix was missing");
+    // Byte-equal logical state across all members: same (id, vector)
+    // set, and the replicated batch is wholly present while no torn id
+    // leaked anywhere.
+    let sets: Vec<Vec<(u32, Vec<f32>)>> = (0..3)
+        .map(|r| {
+            let e = router.member_engine(0, r);
+            let mut v = e.live().expect("live member").live_items();
+            v.sort_by_key(|(id, _)| *id);
+            v
+        })
+        .collect();
+    assert!(sets.windows(2).all(|w| w[0] == w[1]), "members diverged after catch-up");
+    let ids: Vec<u32> = sets[0].iter().map(|(id, _)| *id).collect();
+    for (id, _) in &good {
+        assert!(ids.contains(id), "replicated batch id {id} missing");
+    }
+    for (id, _) in &torn {
+        assert!(!ids.contains(id), "torn batch id {id} resurfaced");
+    }
+    let sums: Vec<Option<u64>> =
+        (0..3).map(|r| router.member_engine(0, r).state_checksum()).collect();
+    assert!(sums.windows(2).all(|w| w[0] == w[1]), "state checksums diverged: {sums:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Crash before the MANIFEST rename: the new generation's files exist
 /// but nothing references them. Reopen serves the old generation with
 /// the full WAL replayed, and sweeps the orphans.
@@ -237,7 +352,10 @@ fn compactor_crash_after_manifest_serves_new_generation() {
     let recovered = LiveIndex::<Owned>::open(&dir).unwrap();
     assert_eq!(recovered.generation(), 1, "committed compaction must survive the crash");
     assert_eq!(recovered.stats().delta_items, 0);
-    assert_eq!(recovered.stats().wal_bytes, 8, "fresh WAL holds only its magic");
+    assert_eq!(
+        recovered.stats().wal_bytes, 16,
+        "fresh WAL holds only its header (magic + base sequence)"
+    );
     // Reference: same mutations, compacted without a crash.
     let reference =
         reference_for_prefix(&ref_dir, &initial, cfg(MipsHashScheme::SignAlsh, 2), &stream);

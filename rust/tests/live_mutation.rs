@@ -84,7 +84,7 @@ fn run_equivalence(scheme: MipsHashScheme, n_bands: usize) {
     let ref_dir = tmp_dir(&format!("{tag}_ref"));
     let dim = 10;
     let params = AlshParams { n_tables: 12, k_per_table: 4, scheme, ..AlshParams::default() };
-    let cfg = LiveConfig { params, n_bands, seed: 77 };
+    let cfg = LiveConfig { params, n_bands, seed: 77, ..LiveConfig::default() };
 
     let initial = norm_spread_items(150, dim, 700);
     let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
@@ -211,6 +211,7 @@ fn readers_stay_live_through_repeated_compactions() {
         params: AlshParams { n_tables: 8, k_per_table: 4, ..AlshParams::default() },
         n_bands: 2,
         seed: 99,
+        ..LiveConfig::default()
     };
     let initial = norm_spread_items(200, dim, 800);
     let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
@@ -279,6 +280,7 @@ fn background_compactor_drains_while_serving() {
         params: AlshParams { n_tables: 8, k_per_table: 4, ..AlshParams::default() },
         n_bands: 1,
         seed: 5,
+        ..LiveConfig::default()
     };
     let initial = norm_spread_items(120, dim, 810);
     let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
@@ -322,7 +324,7 @@ fn upsert_batch_matches_sequential_upserts() {
     let dir_a = tmp_dir("batch_a");
     let dir_b = tmp_dir("batch_b");
     let dim = 10;
-    let cfg = LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 9 };
+    let cfg = LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 9, ..LiveConfig::default() };
     let initial = norm_spread_items(100, dim, 800);
     let a = LiveIndex::<alsh::index::Owned>::create(&dir_a, &initial, cfg).unwrap();
     let b = LiveIndex::<alsh::index::Owned>::create(&dir_b, &initial, cfg).unwrap();
@@ -360,7 +362,7 @@ fn upsert_batch_matches_sequential_upserts() {
 fn upsert_batch_is_all_or_nothing_and_durable() {
     let dir = tmp_dir("batch_dur");
     let dim = 8;
-    let cfg = LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 11 };
+    let cfg = LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 11, ..LiveConfig::default() };
     let initial = norm_spread_items(50, dim, 820);
     let live = LiveIndex::<alsh::index::Owned>::create(&dir, &initial, cfg).unwrap();
 

@@ -1,0 +1,383 @@
+//! Replicated durable writes: fault-injected acceptance for the
+//! write-path tentpole.
+//!
+//! * Kill one replica-group member mid-write-stream
+//!   ([`ShardFaultPlan::write_crash_at`]): every quorum-acked write must
+//!   survive on the shard's serving members and be served by queries,
+//!   and the killed member must converge afterwards via WAL-suffix
+//!   replay ([`CatchUpMode::Replayed`]) to a byte-equal item set.
+//! * Compact every healthy peer past the suffix a lagging member needs:
+//!   catch-up must fall back to a full rebuild-from-peer
+//!   ([`CatchUpMode::Rebuilt`]) and still converge.
+//! * Sustained `upsert_batch` load against a small delta cap must
+//!   answer a structured `write_stalled` (with `retry_after_ms`) on the
+//!   wire while reads keep answering with full coverage disclosure.
+//! * A member whose compactor crashed pre-commit must sweep its
+//!   orphaned next-generation files when catch-up reopens it.
+//! * Every family the routed `metrics` command reports must have a
+//!   Prometheus counterpart in the routed `metrics_prom` body.
+//!
+//! Convergence assertions are exact: members hash with distinct seeds,
+//! so equality is asserted on the logical state — the sorted
+//! `(id, vector)` item set compared byte-for-byte, plus the
+//! seed-independent state checksum — never on statistics.
+
+use std::path::PathBuf;
+
+use alsh::coordinator::{
+    handle_router_request, CatchUpMode, ReplicaConfig, ServeConfig, ShardFaultPlan,
+    ShardedRouter,
+};
+use alsh::index::{AlshParams, CompactorFaultPlan, LiveConfig, WriteStalled};
+use alsh::util::json::Json;
+use alsh::util::Rng;
+
+const DIM: usize = 8;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "alsh_repl_writes_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spread_items(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let s = 0.1 + 2.0 * rng.f32();
+            (0..DIM).map(|_| rng.normal_f32() * s).collect()
+        })
+        .collect()
+}
+
+fn live_cfg(seed: u64) -> LiveConfig {
+    LiveConfig {
+        params: AlshParams { n_tables: 8, k_per_table: 4, ..AlshParams::default() },
+        n_bands: 1,
+        seed,
+        ..LiveConfig::default()
+    }
+}
+
+/// A member's logical state: its live `(id, vector)` set, id-sorted so
+/// two members over the same history compare byte-equal.
+fn member_items(router: &ShardedRouter, shard: usize, member: usize) -> Vec<(u32, Vec<f32>)> {
+    let e = router.member_engine(shard, member);
+    let mut v = e.live().expect("live member").live_items();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+fn assert_group_converged(router: &ShardedRouter, shard: usize) {
+    let n = router.n_replicas(shard);
+    let sets: Vec<_> = (0..n).map(|r| member_items(router, shard, r)).collect();
+    assert!(sets.windows(2).all(|w| w[0] == w[1]), "shard {shard} members diverged");
+    let sums: Vec<_> =
+        (0..n).map(|r| router.member_engine(shard, r).state_checksum()).collect();
+    assert!(
+        sums.windows(2).all(|w| w[0] == w[1]),
+        "shard {shard} state checksums diverged: {sums:?}"
+    );
+}
+
+fn json_vec(v: &[f32]) -> String {
+    let parts: Vec<String> = v.iter().map(|x| format!("{x}")).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+/// Acceptance leg 1: kill one member mid-write-stream. Every write still
+/// reaches majority quorum, acked writes are durable and served, the
+/// shard discloses `write_degraded`, and the divergence scrub brings the
+/// killed member back via WAL-suffix replay.
+#[test]
+fn acked_writes_survive_member_kill_and_replay_catch_up() {
+    let dir = tmp_dir("kill");
+    let items = spread_items(60, 1);
+    let router = ShardedRouter::create_live_replicated(
+        &dir,
+        &items,
+        2,
+        3,
+        live_cfg(10),
+        ReplicaConfig::default(),
+    )
+    .unwrap();
+    // Kill shard 0's member 1 on its fifth write op (op clock index 4).
+    router.set_shard_faults(
+        0,
+        1,
+        ShardFaultPlan { write_crash_at: Some(4), ..Default::default() },
+    );
+    let fresh = spread_items(30, 2);
+    let mut acked: Vec<(u32, Vec<f32>)> = Vec::new();
+    let mut degraded_seen = false;
+    for (i, v) in fresh.iter().enumerate() {
+        let id = 1000 + i as u32;
+        let r = router.upsert(id, v).unwrap();
+        assert!(r.acked >= 2, "write to shard {} under-acked: {} of {}", r.shard, r.acked, r.replicas);
+        degraded_seen |= r.degraded;
+        acked.push((id, v.clone()));
+    }
+    assert!(degraded_seen, "the killed member's shard never reported write_degraded");
+    // Every quorum-acked write survives on the owning shard and serves.
+    // k exceeds the corpus, so an id missing from the answer means it is
+    // missing from the index, not merely outranked.
+    for (id, v) in &acked {
+        let shard = router.shard_of(*id);
+        let durable = (0..3).any(|r| {
+            member_items(&router, shard, r).iter().any(|(i2, v2)| i2 == id && v2 == v)
+        });
+        assert!(durable, "acked id {id} not durable on any member of shard {shard}");
+        let hits = router.query(v, 200);
+        assert!(hits.iter().any(|h| h.id == *id), "acked id {id} not served");
+    }
+    // The divergence scrub detects the lagging member, replays the
+    // missing WAL suffix from a peer, and re-admits it.
+    let report = router.scrub_now();
+    assert!(
+        report.caught_up.contains(&(0, 1)),
+        "scrub must catch up the killed member: caught_up {:?}, failed {:?}",
+        report.caught_up,
+        report.failed
+    );
+    assert!(report.failed.is_empty(), "scrub repairs failed: {:?}", report.failed);
+    assert_group_converged(&router, 0);
+    assert_group_converged(&router, 1);
+    let snap = router.metrics().snapshot();
+    assert!(snap.catch_up_replays >= 1, "expected a suffix replay, got {}", snap.catch_up_replays);
+    // Fully healed: the next write to the shard acks all three members.
+    let r = router.upsert(2000, &fresh[0]).unwrap();
+    assert_eq!((r.shard, r.acked, r.replicas), (0, 3, 3));
+    assert!(!r.degraded);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance leg 2: when every healthy peer has compacted past the WAL
+/// suffix a lagging member needs, catch-up falls back to a full rebuild
+/// from the donor's live item set — and still converges byte-equal.
+#[test]
+fn catch_up_falls_back_to_rebuild_when_donors_compacted() {
+    let dir = tmp_dir("rebuild");
+    let items = spread_items(40, 3);
+    let router = ShardedRouter::create_live_replicated(
+        &dir,
+        &items,
+        1,
+        3,
+        live_cfg(20),
+        ReplicaConfig::default(),
+    )
+    .unwrap();
+    let fresh = spread_items(10, 4);
+    for (i, v) in fresh.iter().take(4).enumerate() {
+        router.upsert(3000 + i as u32, v).unwrap();
+    }
+    // Kill member 2 on its next write, then land more writes without it.
+    router.set_shard_faults(
+        0,
+        2,
+        ShardFaultPlan { write_crash_at: Some(4), ..Default::default() },
+    );
+    for (i, v) in fresh.iter().skip(4).enumerate() {
+        let r = router.upsert(3100 + i as u32, v).unwrap();
+        assert_eq!(r.acked, 2, "healthy members must keep acking");
+    }
+    // Compact every healthy peer: each donor's WAL restarts at a base
+    // sequence beyond the suffix member 2 is missing.
+    router.member_engine(0, 0).compact().unwrap();
+    router.member_engine(0, 1).compact().unwrap();
+    let report = router.catch_up(0, 2).unwrap();
+    assert_eq!(report.mode, CatchUpMode::Rebuilt, "expected the rebuild fallback");
+    assert_group_converged(&router, 0);
+    let snap = router.metrics().snapshot();
+    assert!(snap.replica_repairs >= 1, "a rebuild must count as a repair");
+    // The rebuilt member accepts the next fan-out at the group sequence.
+    let r = router.upsert(3200, &fresh[0]).unwrap();
+    assert_eq!((r.acked, r.replicas), (3, 3));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance leg 3: sustained `upsert_batch` load against a small
+/// delta cap answers structured `write_stalled` backpressure on the
+/// wire — with a `retry_after_ms` hint — while reads keep answering
+/// with full coverage disclosure, and no member's log diverges.
+#[test]
+fn delta_cap_stalls_writes_structurally_while_reads_answer() {
+    let dir = tmp_dir("stall");
+    let items = spread_items(30, 5);
+    let router = ShardedRouter::create_live_replicated(
+        &dir,
+        &items,
+        1,
+        2,
+        LiveConfig { delta_cap: 32, ..live_cfg(30) },
+        ReplicaConfig::default(),
+    )
+    .unwrap();
+    let serve_cfg = ServeConfig::default();
+    let batch_vecs = spread_items(8, 6);
+    let vectors_json: Vec<String> = batch_vecs.iter().map(|v| json_vec(v)).collect();
+    let vectors_json = vectors_json.join(", ");
+    let mut next_id = 5000u32;
+    let mut stalled = None;
+    for _ in 0..64 {
+        let ids: Vec<String> = (0..8).map(|i| (next_id + i).to_string()).collect();
+        let line = format!(
+            r#"{{"cmd": "upsert_batch", "ids": [{}], "vectors": [{vectors_json}]}}"#,
+            ids.join(", ")
+        );
+        let resp = handle_router_request(&line, &router, &serve_cfg);
+        if resp.get("ok") == Some(&Json::Bool(true)) {
+            next_id += 8;
+            continue;
+        }
+        stalled = Some(resp);
+        break;
+    }
+    let resp = stalled.expect("sustained batch load never hit the delta cap");
+    assert_eq!(resp.get("code").and_then(Json::as_str), Some("write_stalled"), "{resp:?}");
+    let retry = resp.get("retry_after_ms").and_then(Json::as_f64).expect("retry_after_ms");
+    assert!(retry >= 10.0, "retry_after_ms {retry} below the clamp floor");
+    assert!(resp.get("pending").and_then(Json::as_f64).is_some());
+    assert!(resp.get("cap").and_then(Json::as_f64).is_some());
+    // The typed error surfaces on the programmatic path too.
+    let err = router.upsert(9999, &items[0]).unwrap_err();
+    assert!(err.downcast_ref::<WriteStalled>().is_some(), "stall must stay typed: {err:#}");
+    // A stall refuses the write before sequence assignment, so member
+    // logs never diverge.
+    let hws: Vec<_> = (0..2).map(|r| router.member_engine(0, r).high_water()).collect();
+    assert_eq!(hws[0], hws[1], "stall diverged member logs: {hws:?}");
+    // Reads keep answering through the wire with coverage disclosed.
+    let q = json_vec(&items[0]);
+    let resp =
+        handle_router_request(&format!(r#"{{"vector": {q}, "top_k": 5}}"#), &router, &serve_cfg);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("shards_total").and_then(Json::as_f64), Some(1.0));
+    assert!(resp.get("coverage_fraction").and_then(Json::as_f64).is_some());
+    assert!(router.metrics().snapshot().write_stalled >= 1);
+    // Compaction drains the backlog; the refused write then lands.
+    router.member_engine(0, 0).compact().unwrap();
+    router.member_engine(0, 1).compact().unwrap();
+    let r = router.upsert(9999, &items[0]).unwrap();
+    assert_eq!((r.acked, r.replicas), (2, 2));
+    assert_group_converged(&router, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: a member whose compactor crashed before the MANIFEST
+/// rename leaves uncommitted next-generation files behind. Catch-up
+/// reopens the member from disk, which must sweep the orphans and
+/// converge with the healthy peer.
+#[test]
+fn member_reopen_sweeps_orphans_after_compactor_crash() {
+    let dir = tmp_dir("orphan");
+    let items = spread_items(30, 7);
+    let router = ShardedRouter::create_live_replicated(
+        &dir,
+        &items,
+        1,
+        2,
+        live_cfg(40),
+        ReplicaConfig::default(),
+    )
+    .unwrap();
+    for (i, v) in spread_items(6, 8).iter().enumerate() {
+        router.upsert(7000 + i as u32, v).unwrap();
+    }
+    let victim = router.member_engine(0, 1);
+    victim.live().expect("live member").set_compactor_faults(CompactorFaultPlan {
+        crash_before_manifest: true,
+        ..Default::default()
+    });
+    assert!(victim.compact().is_err(), "fault must abort the compaction");
+    let mdir = router.replica_path(0, 1).expect("dir-backed member");
+    let list = |pred: &dyn Fn(&str) -> bool| -> Vec<String> {
+        std::fs::read_dir(&mdir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| pred(n))
+            .collect()
+    };
+    let orphans = list(&|n| n.contains("gen-1") || n.contains("wal-1"));
+    assert!(!orphans.is_empty(), "fault did not leave orphan files to sweep");
+    let report = router.catch_up(0, 1).unwrap();
+    assert_eq!(report.mode, CatchUpMode::Replayed(0), "no suffix was missing");
+    let orphans = list(&|n| n.contains("gen-1") || n.contains("wal-1"));
+    assert!(orphans.is_empty(), "orphans survived the member reopen: {orphans:?}");
+    let temps = list(&|n| n.contains(".tmp."));
+    assert!(temps.is_empty(), "stale temp files survived the member reopen: {temps:?}");
+    assert_group_converged(&router, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: metrics parity. Every family the routed `metrics` command
+/// reports — including the PR 7 live-tier gauges and the new write-path
+/// counters — must have a counterpart in the routed `metrics_prom`
+/// Prometheus body.
+#[test]
+fn every_routed_metrics_family_has_a_prometheus_counterpart() {
+    let dir = tmp_dir("parity");
+    let items = spread_items(30, 9);
+    let router = ShardedRouter::create_live_replicated(
+        &dir,
+        &items,
+        1,
+        2,
+        live_cfg(50),
+        ReplicaConfig::default(),
+    )
+    .unwrap();
+    router.upsert(8000, &items[0]).unwrap();
+    let _ = router.query(&items[0], 5);
+    let serve_cfg = ServeConfig::default();
+    let m = handle_router_request(r#"{"cmd": "metrics"}"#, &router, &serve_cfg);
+    let p = handle_router_request(r#"{"cmd": "metrics_prom"}"#, &router, &serve_cfg);
+    let body = p.get("body").and_then(Json::as_str).expect("prometheus body").to_string();
+    let Some(Json::Obj(map)) = m.get("metrics") else {
+        panic!("metrics must answer an object: {m:?}");
+    };
+    for key in map.keys() {
+        let family = match key.as_str() {
+            // The latency percentiles are views of the histogram.
+            "p50_latency_us" | "p99_latency_us" => "alsh_latency_us".to_string(),
+            "stages" => "alsh_stage_latency_us".to_string(),
+            "shard_p99_us" => "alsh_shard_answer_p99_us".to_string(),
+            "breakers" => "alsh_replica_breaker_state".to_string(),
+            k => format!("alsh_{k}"),
+        };
+        assert!(
+            body.contains(&family),
+            "metrics key {key:?} has no Prometheus counterpart {family}"
+        );
+    }
+    // The write counters and live gauges are present under their exact
+    // exposition names, and the JSON side reports the pending write.
+    for name in [
+        "alsh_writes_replicated_total",
+        "alsh_write_stalled_total",
+        "alsh_quorum_failures_total",
+        "alsh_catch_up_replays_total",
+        "alsh_delta_items",
+        "alsh_tombstones",
+        "alsh_wal_bytes",
+        "alsh_last_compaction_ms",
+    ] {
+        assert!(body.contains(name), "missing exposition family {name}");
+    }
+    assert!(
+        map.get("delta_items").and_then(Json::as_f64).expect("delta_items") >= 1.0,
+        "routed metrics must report the live delta gauge"
+    );
+    assert!(
+        map.get("writes_replicated").and_then(Json::as_f64).expect("writes_replicated") >= 1.0
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -270,7 +270,7 @@ fn boot_live(dim: usize, dir: &std::path::Path) -> (Arc<MipsEngine>, PjrtBatcher
         MipsEngine::create_live(
             dir,
             &items,
-            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 2 },
+            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 2, ..LiveConfig::default() },
         )
         .expect("live engine"),
     );

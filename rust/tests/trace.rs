@@ -158,7 +158,7 @@ fn slowlog_blames_hash_stage_flat_live() {
         MipsEngine::create_live(
             &dir,
             &items,
-            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 4 },
+            LiveConfig { params: AlshParams::default(), n_bands: 1, seed: 4, ..LiveConfig::default() },
         )
         .expect("live engine"),
     );
@@ -174,7 +174,7 @@ fn slowlog_blames_hash_stage_banded_live() {
         MipsEngine::create_live(
             &dir,
             &items,
-            LiveConfig { params: AlshParams::default(), n_bands: 3, seed: 5 },
+            LiveConfig { params: AlshParams::default(), n_bands: 3, seed: 5, ..LiveConfig::default() },
         )
         .expect("live engine"),
     );
